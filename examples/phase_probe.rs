@@ -1,0 +1,33 @@
+//! §Perf probe: per-phase wall breakdown of multiply() (not part of the
+//! public API surface; used by the EXPERIMENTS.md §Perf log).
+use opsparse::gen::suite::{suite_entry, SuiteScale};
+use opsparse::sparse::stats::nprod_per_row;
+use opsparse::spgemm::binning::bin_rows;
+use opsparse::spgemm::kernel_tables::{NumericRanges, SymbolicRanges};
+use opsparse::spgemm::numeric::numeric_step;
+use opsparse::spgemm::symbolic::symbolic_step;
+use opsparse::spgemm::HashVariant;
+use opsparse::util::exclusive_sum;
+use std::time::Instant;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "webbase-1M".into());
+    let a = suite_entry(&name).unwrap().generate(SuiteScale::Small);
+    let t0 = Instant::now();
+    let nprod = nprod_per_row(&a, &a);
+    let t_nprod = t0.elapsed();
+    let t0 = Instant::now();
+    let sb = bin_rows(&nprod, &SymbolicRanges::Sym12x.ranges());
+    let t_sbin = t0.elapsed();
+    let t0 = Instant::now();
+    let sym = symbolic_step(&a, &a, &sb, HashVariant::SingleAccess, "symbolic", 4);
+    let t_sym = t0.elapsed();
+    let t0 = Instant::now();
+    let c_rpt = exclusive_sum(&sym.row_nnz);
+    let nb = bin_rows(&sym.row_nnz, &NumericRanges::Num2x.ranges());
+    let t_nbin = t0.elapsed();
+    let t0 = Instant::now();
+    let num = numeric_step(&a, &a, &c_rpt, &nb, HashVariant::SingleAccess, "numeric", 4);
+    let t_num = t0.elapsed();
+    println!("{name}: nprod {t_nprod:?} symbin {t_sbin:?} symbolic {t_sym:?} numbin {t_nbin:?} numeric {t_num:?} (nnzC {})", num.c.nnz());
+}

@@ -1,0 +1,57 @@
+//! Quickstart: generate a matrix, compute A² with OpSparse, verify it
+//! against the sort-merge reference, and inspect the simulated V100
+//! timeline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use opsparse::baselines::Library;
+use opsparse::gen::suite::{suite_entry, SuiteScale};
+use opsparse::gpusim::{simulate, V100};
+use opsparse::spgemm::reference::spgemm_reference;
+use opsparse::util::fmt;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a matrix from the paper's suite (synthetic stand-in, Table 3 id 12)
+    let entry = suite_entry("poisson3Da").expect("suite matrix");
+    let a = entry.generate(SuiteScale::Small);
+    println!(
+        "A: {} ({}) — {}x{}, nnz {}",
+        entry.name,
+        entry.class,
+        a.rows,
+        a.cols,
+        fmt::count(a.nnz())
+    );
+
+    // 2. C = A * A through the full OpSparse pipeline
+    let out = Library::OpSparse.run(&a, &a)?;
+    println!(
+        "C: {}x{}, nnz {}, n_prod {} (CR {:.2})",
+        out.c.rows,
+        out.c.cols,
+        fmt::count(out.c.nnz()),
+        fmt::count(out.nprod),
+        out.nprod as f64 / out.c.nnz() as f64
+    );
+
+    // 3. verify element-exact against the gold reference
+    let gold = spgemm_reference(&a, &a);
+    match out.c.diff(&gold, 1e-9) {
+        None => println!("verify: OK"),
+        Some(d) => anyhow::bail!("verify failed: {d}"),
+    }
+
+    // 4. simulate the device trace on the V100 model
+    let tl = simulate(&out.trace, &V100);
+    println!("simulated V100 time: {}", fmt::ns(tl.total_ns));
+    println!("  => {:.2} GFLOPS (paper metric: 2*n_prod/time)", tl.gflops(out.flops()));
+    for step in ["setup", "sym_binning", "symbolic", "alloc_c", "num_binning", "numeric"] {
+        println!("  {:<12} {}", step, fmt::ns(tl.step_ns(step)));
+    }
+    println!(
+        "hash stats: sym collisions/insert {:.3}, num {:.3}",
+        out.sym_stats.collision_rate(),
+        out.num_stats.collision_rate()
+    );
+    Ok(())
+}

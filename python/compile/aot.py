@@ -1,0 +1,101 @@
+"""AOT bridge: lower the L2 models to HLO **text** for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from the ``python/`` directory)::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one ``.hlo.txt`` per (model, shape) variant plus ``manifest.json``
+describing the shapes so the Rust runtime can size its buffers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+# Default compiled variants. The block engine pads its pair batches to P;
+# the row-window engine pads row batches to R with window W and fanout K —
+# the AOT analog of the paper's fixed per-kernel hash-table sizes.
+# Batch-size note (§Perf): under interpret=True each Pallas grid step
+# lowers to a dynamic-update-slice over the whole (P,T,T) output, so CPU
+# batch cost grows ~P^2 — small P wins on the CPU PJRT path (measured
+# optimum P=16). On a real TPU (Mosaic lowering) larger P amortizes launch
+# overhead instead; keep both compiled.
+BLOCK_VARIANTS = [
+    {"p": 16, "t": 16},
+    {"p": 64, "t": 16},
+    {"p": 256, "t": 16},
+    {"p": 64, "t": 32},
+]
+ROW_WINDOW_VARIANTS = [
+    {"r": 64, "k": 32, "w": 256},
+]
+DTYPE = "f64"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block_engine(p: int, t: int) -> str:
+    specs = model.block_engine_specs(p, t)
+    return to_hlo_text(jax.jit(model.block_engine_model).lower(*specs))
+
+
+def lower_row_window(r: int, k: int, w: int) -> str:
+    specs = model.row_window_specs(r, k, w)
+    return to_hlo_text(jax.jit(model.row_window_model).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"dtype": DTYPE, "block_engine": [], "row_window": []}
+
+    for v in BLOCK_VARIANTS:
+        name = f"block_matmul_p{v['p']}_t{v['t']}_{DTYPE}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_block_engine(v["p"], v["t"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["block_engine"].append({**v, "file": name})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for v in ROW_WINDOW_VARIANTS:
+        name = f"row_window_r{v['r']}_k{v['k']}_w{v['w']}_{DTYPE}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_row_window(v["r"], v["k"], v["w"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["row_window"].append({**v, "file": name})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""L1 Pallas kernels: the TPU adaptation of OpSparse's numeric-phase
+accumulator (DESIGN.md §Hardware-Adaptation).
+
+The paper's CUDA hot kernel scatters intermediate products into a
+per-thread-block *shared-memory hash table* with atomicCAS. A TPU has no
+per-core scatter memory with atomics; the analog of "keep the accumulator
+in the fastest on-chip memory" is a **dense accumulator tile in VMEM**, fed
+to the MXU as block matmuls. Two kernels express the two routing targets of
+the Rust coordinator:
+
+* ``block_pair_matmul`` — BSR numeric phase: for P block pairs,
+  ``C[p] = A[p] @ B[p]`` over ``T x T`` dense blocks. The symbolic phase
+  (which pairs meet) stays in Rust using the paper's binning + hashing on
+  block column indices; this kernel is the per-pair MXU product. One grid
+  step per pair; the pair's three tiles live in VMEM (BlockSpec moves them
+  HBM -> VMEM exactly where CUDA used shared memory staging).
+
+* ``row_window_accumulate`` — dense-accumulator analog of the hash table
+  for a *row window*: for R rows, given the row's K nonzero values
+  ``a_vals[r, :]`` and the K gathered B-rows restricted to a W-wide column
+  window ``b_rows[r, :, :]``, compute ``c[r, :] = a_vals[r] @ b_rows[r]``.
+  The W-wide accumulator tile is the VMEM stand-in for the t_size-slot
+  shared hash table; the Rust router picks W from the same binning ranges
+  that picked t_size on the GPU.
+
+Both kernels are lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md). On a
+real TPU the same code lowers to Mosaic with T=128 tiles feeding the
+128x128 MXU.
+
+VMEM budgeting (for the DESIGN.md §Perf estimate, T=128 f32 on TPU):
+3 tiles x 128*128*4B = 192 KiB per grid step, double-buffered by the
+Pallas pipeline = 384 KiB of ~16 MiB VMEM; MXU does T^3 MACs per 128-cycle
+tile pass -> structurally MXU-bound, not HBM-bound, for T >= 128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------------------
+# block_pair_matmul
+# ---------------------------------------------------------------------------
+
+def _block_pair_kernel(a_ref, b_ref, o_ref):
+    """One grid step: multiply one T x T block pair in VMEM."""
+    # a_ref/o_ref carry a leading singleton batch axis from the BlockSpec.
+    a = a_ref[0]
+    b = b_ref[0]
+    # accumulate in f32/f64 (preferred_element_type pins the MXU accumulator)
+    o_ref[0] = jnp.dot(a, b, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_pair_matmul(a: jax.Array, b: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Batched block matmul ``C[p] = A[p] @ B[p]``.
+
+    Args:
+      a: ``(P, T, T)`` array.
+      b: ``(P, T, T)`` array, same dtype.
+      interpret: must stay True on CPU PJRT (Mosaic is TPU-only).
+
+    Returns:
+      ``(P, T, T)`` array of products.
+    """
+    p, t, t2 = a.shape
+    assert t == t2 and b.shape == a.shape, (a.shape, b.shape)
+    spec = pl.BlockSpec((1, t, t), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _block_pair_kernel,
+        grid=(p,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((p, t, t), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# row_window_accumulate
+# ---------------------------------------------------------------------------
+
+def _row_window_kernel(a_ref, b_ref, o_ref):
+    """One grid step: one row's dense-window accumulation in VMEM.
+
+    ``a_ref``: (1, K) row values; ``b_ref``: (1, K, W) gathered B rows;
+    ``o_ref``: (1, W) accumulator tile — the VMEM analog of the GPU
+    shared-memory hash table (already zero-initialized by pallas_call).
+    """
+    a = a_ref[0]          # (K,)
+    b = b_ref[0]          # (K, W)
+    o_ref[0] = jnp.dot(a, b, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def row_window_accumulate(
+    a_vals: jax.Array, b_rows: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """Dense-accumulator numeric phase for a padded row window.
+
+    Args:
+      a_vals: ``(R, K)`` — each row's (zero-padded) nonzero values.
+      b_rows: ``(R, K, W)`` — for each row, the K gathered rows of B
+        restricted to the row's W-wide column window (zero-padded).
+
+    Returns:
+      ``(R, W)`` dense output rows; the Rust side compacts them to CSR.
+    """
+    r, k = a_vals.shape
+    r2, k2, w = b_rows.shape
+    assert r == r2 and k == k2, (a_vals.shape, b_rows.shape)
+    return pl.pallas_call(
+        _row_window_kernel,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k, w), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, w), a_vals.dtype),
+        interpret=interpret,
+    )(a_vals, b_rows)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the L1 Pallas kernels — the correctness reference
+pytest checks against (the CORE correctness signal of the build path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def block_pair_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``C[p] = A[p] @ B[p]`` via einsum (no pallas)."""
+    return jnp.einsum("pij,pjk->pik", a, b)
+
+
+def row_window_accumulate_ref(a_vals: jax.Array, b_rows: jax.Array) -> jax.Array:
+    """``c[r] = a_vals[r] @ b_rows[r]`` via einsum (no pallas)."""
+    return jnp.einsum("rk,rkw->rw", a_vals, b_rows)

@@ -1,0 +1,49 @@
+"""L2 JAX model: the numeric-phase compute graphs the Rust runtime
+executes, built on the L1 Pallas kernels.
+
+Python runs only at build time (``make artifacts``); the Rust coordinator
+loads the lowered HLO through PJRT and never imports Python.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.block_matmul import block_pair_matmul, row_window_accumulate
+
+jax.config.update("jax_enable_x64", True)
+
+
+def block_engine_model(a_blocks: jax.Array, b_blocks: jax.Array) -> tuple[jax.Array]:
+    """BSR numeric phase for one batch of block pairs.
+
+    ``(P, T, T) x (P, T, T) -> (P, T, T)`` products; the Rust block engine
+    scatters them into the output BSR blocks (segment accumulation happens
+    on the Rust side where the segment ids live).
+
+    Returned as a 1-tuple: the AOT bridge lowers with ``return_tuple=True``
+    and the Rust side unwraps with ``to_tuple1`` (see aot_recipe).
+    """
+    return (block_pair_matmul(a_blocks, b_blocks, interpret=True),)
+
+
+def row_window_model(a_vals: jax.Array, b_rows: jax.Array) -> tuple[jax.Array]:
+    """Dense-accumulator numeric phase for one padded row window batch.
+
+    ``(R, K) x (R, K, W) -> (R, W)`` dense output rows.
+    """
+    return (row_window_accumulate(a_vals, b_rows, interpret=True),)
+
+
+def block_engine_specs(p: int, t: int, dtype=jnp.float64):
+    """ShapeDtypeStructs for lowering ``block_engine_model``."""
+    s = jax.ShapeDtypeStruct((p, t, t), dtype)
+    return (s, s)
+
+def row_window_specs(r: int, k: int, w: int, dtype=jnp.float64):
+    """ShapeDtypeStructs for lowering ``row_window_model``."""
+    return (
+        jax.ShapeDtypeStruct((r, k), dtype),
+        jax.ShapeDtypeStruct((r, k, w), dtype),
+    )

@@ -1,0 +1,14 @@
+//! `cargo bench --bench ablations` — per-optimization ablation: each of
+//! the paper's optimizations is disabled individually and the slowdown
+//! reported on representative matrices (DESIGN.md §1 mapping).
+
+use opsparse::bench::figures;
+use opsparse::gen::suite::SuiteScale;
+
+fn main() {
+    let scale = std::env::var("OPSPARSE_SCALE")
+        .ok()
+        .and_then(|s| SuiteScale::parse(&s))
+        .unwrap_or(SuiteScale::Small);
+    figures::ablations(scale).expect("ablations");
+}

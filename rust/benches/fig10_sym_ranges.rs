@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig10_sym_ranges` — regenerates paper Figure 10:
+//! symbolic-step performance across the sym_1x / 1.2x / 1.5x binning
+//! ranges, normalized to sym_1x.
+
+use opsparse::bench::figures;
+use opsparse::gen::suite::SuiteScale;
+
+fn main() {
+    let scale = std::env::var("OPSPARSE_SCALE")
+        .ok()
+        .and_then(|s| SuiteScale::parse(&s))
+        .unwrap_or(SuiteScale::Small);
+    figures::fig10(scale).expect("fig10");
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig11_num_ranges` — regenerates paper Figure 11:
+//! numeric-step performance across the num_1x / 1.5x / 2x / 3x binning
+//! ranges, normalized to num_1x.
+
+use opsparse::bench::figures;
+use opsparse::gen::suite::SuiteScale;
+
+fn main() {
+    let scale = std::env::var("OPSPARSE_SCALE")
+        .ok()
+        .and_then(|s| SuiteScale::parse(&s))
+        .unwrap_or(SuiteScale::Small);
+    figures::fig11(scale).expect("fig11");
+}

@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig5_normal` — regenerates paper Figure 5:
+//! SpGEMM GFLOPS of cuSPARSE/nsparse/spECK/OpSparse on the 19 normal
+//! matrices (simulated V100; outputs verified against the reference).
+
+use opsparse::bench::figures;
+use opsparse::gen::suite::SuiteScale;
+
+fn main() {
+    let scale = scale_from_env();
+    figures::fig5(scale, true).expect("fig5");
+}
+
+fn scale_from_env() -> SuiteScale {
+    std::env::var("OPSPARSE_SCALE")
+        .ok()
+        .and_then(|s| SuiteScale::parse(&s))
+        .unwrap_or(SuiteScale::Small)
+}

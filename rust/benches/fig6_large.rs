@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig6_large` — regenerates paper Figure 6:
+//! SpGEMM GFLOPS of nsparse/spECK/OpSparse on the 7 large matrices
+//! (cuSPARSE omitted: out-of-memory on the originals, §6.1).
+
+use opsparse::bench::figures;
+use opsparse::gen::suite::SuiteScale;
+
+fn main() {
+    let scale = std::env::var("OPSPARSE_SCALE")
+        .ok()
+        .and_then(|s| SuiteScale::parse(&s))
+        .unwrap_or(SuiteScale::Small);
+    figures::fig6(scale, true).expect("fig6");
+}

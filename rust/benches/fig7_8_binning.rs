@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig7_8_binning` — regenerates paper Figures 7+8:
+//! binning-step time (absolute and % of total) for nsparse/spECK/OpSparse
+//! across the 26-matrix suite.
+
+use opsparse::bench::figures;
+use opsparse::gen::suite::SuiteScale;
+
+fn main() {
+    let scale = std::env::var("OPSPARSE_SCALE")
+        .ok()
+        .and_then(|s| SuiteScale::parse(&s))
+        .unwrap_or(SuiteScale::Small);
+    figures::fig7_8(scale).expect("fig7_8");
+}

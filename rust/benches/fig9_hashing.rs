@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig9_hashing` — regenerates paper Figure 9:
+//! symbolic/numeric step time under single- vs multi-access hashing.
+
+use opsparse::bench::figures;
+use opsparse::gen::suite::SuiteScale;
+
+fn main() {
+    let scale = std::env::var("OPSPARSE_SCALE")
+        .ok()
+        .and_then(|s| SuiteScale::parse(&s))
+        .unwrap_or(SuiteScale::Small);
+    figures::fig9(scale).expect("fig9");
+}

@@ -1,0 +1,18 @@
+//! `cargo bench --bench tables` — regenerates paper Tables 1, 2, 4, 5
+//! (kernel configurations, occupancy, binning ranges) and Table 3 (suite
+//! statistics: paper columns next to the synthetic stand-ins' measured
+//! columns).
+
+use opsparse::bench::tables;
+use opsparse::gen::suite::SuiteScale;
+
+fn main() {
+    let scale = std::env::var("OPSPARSE_SCALE")
+        .ok()
+        .and_then(|s| SuiteScale::parse(&s))
+        .unwrap_or(SuiteScale::Small);
+    tables::table1();
+    tables::table2();
+    tables::table4_5();
+    tables::table3(scale).expect("table3");
+}

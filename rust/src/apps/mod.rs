@@ -1,0 +1,13 @@
+//! Application workloads from the paper's introduction (§1): the reason
+//! SpGEMM performance matters. Each app drives the OpSparse pipeline (or
+//! a semiring variant) as its compute primitive:
+//!
+//! * [`amg`] — algebraic multigrid: the Galerkin triple product
+//!   `A_coarse = R·A·P` is two SpGEMMs per level [1, 2].
+//! * [`mcl`] — Markov clustering: the expansion step is `M²` [3].
+//! * [`msbfs`] — multi-source BFS: frontier expansion is a boolean
+//!   SpGEMM `F ⊗ A` [4].
+
+pub mod amg;
+pub mod mcl;
+pub mod msbfs;

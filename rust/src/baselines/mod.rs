@@ -1,0 +1,86 @@
+//! Behavioral baselines of the three libraries the paper compares against
+//! (§3, §6.2): cuSPARSE, nsparse, spECK. The nsparse/spECK baselines are
+//! expressed as [`OpSparseConfig`] flag sets (they share the binned
+//! two-phase structure); cuSPARSE has its own unbinned pipeline.
+//!
+//! Every baseline computes bit-validated results — they differ from
+//! OpSparse only in the *architectural inefficiencies* the paper
+//! identifies (§4), which show up in their device traces.
+
+pub mod cusparse_like;
+
+use crate::sparse::Csr;
+use crate::spgemm::pipeline::{multiply, OpSparseConfig, SpgemmOutput};
+use anyhow::Result;
+
+/// The four libraries of the paper's evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Library {
+    OpSparse,
+    Nsparse,
+    Speck,
+    Cusparse,
+}
+
+impl Library {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Library::OpSparse => "OpSparse",
+            Library::Nsparse => "nsparse",
+            Library::Speck => "spECK",
+            Library::Cusparse => "cuSPARSE",
+        }
+    }
+
+    /// All four, in the paper's plotting order.
+    pub fn all() -> [Library; 4] {
+        [Library::Cusparse, Library::Nsparse, Library::Speck, Library::OpSparse]
+    }
+
+    /// The three that can compute the large matrices (Fig 6; cuSPARSE
+    /// runs out of device memory on those, §6.1).
+    pub fn large_capable() -> [Library; 3] {
+        [Library::Nsparse, Library::Speck, Library::OpSparse]
+    }
+
+    /// Run this library's SpGEMM on `A * B`.
+    pub fn run(&self, a: &Csr, b: &Csr) -> Result<SpgemmOutput> {
+        match self {
+            Library::OpSparse => multiply(a, b, &OpSparseConfig::default()),
+            Library::Nsparse => multiply(a, b, &OpSparseConfig::nsparse_like()),
+            Library::Speck => multiply(a, b, &OpSparseConfig::speck_like()),
+            Library::Cusparse => cusparse_like::multiply_cusparse(a, b),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::uniform::Uniform;
+    use crate::spgemm::reference::spgemm_reference;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_libraries_agree_with_reference() {
+        let mut rng = Rng::new(55);
+        let a = Uniform { n: 220, per_row: 9, jitter: 4 }.generate(&mut rng);
+        let gold = spgemm_reference(&a, &a);
+        for lib in Library::all() {
+            let out = lib.run(&a, &a).unwrap();
+            assert!(
+                out.c.approx_eq(&gold, 1e-12),
+                "{} diverges: {:?}",
+                lib.name(),
+                out.c.diff(&gold, 1e-12)
+            );
+        }
+    }
+
+    #[test]
+    fn names_and_groups() {
+        assert_eq!(Library::all().len(), 4);
+        assert_eq!(Library::large_capable().len(), 3);
+        assert!(!Library::large_capable().contains(&Library::Cusparse));
+    }
+}

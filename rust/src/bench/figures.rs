@@ -1,0 +1,329 @@
+//! Figure regenerators: one function per figure of the paper's §6,
+//! printing the same rows/series the paper plots.
+
+use super::{gflops, run_and_simulate};
+use crate::baselines::Library;
+use crate::gen::suite::{entries, large_entries, normal_entries, SuiteScale};
+use crate::gpusim::{simulate, V100};
+use crate::spgemm::pipeline::{multiply, OpSparseConfig};
+use crate::spgemm::{HashVariant, NumericRanges, SymbolicRanges};
+use anyhow::Result;
+
+fn print_header(cols: &[&str]) {
+    println!("{:<18} {}", "matrix", cols.iter().map(|c| format!("{c:>12}")).collect::<Vec<_>>().join(" "));
+}
+
+/// Fig 5: GFLOPS of the 4 libraries on the 19 normal matrices.
+pub fn fig5(scale: SuiteScale, verify: bool) -> Result<Vec<(String, Vec<f64>)>> {
+    println!("\n=== Figure 5: SpGEMM GFLOPS, normal matrices (scale {scale:?}) ===");
+    let libs = Library::all();
+    print_header(&libs.map(|l| l.name()));
+    let mut rows = Vec::new();
+    for e in normal_entries() {
+        let a = e.generate(scale);
+        let mut vals = Vec::new();
+        for lib in libs {
+            let (out, tl) = run_and_simulate(lib, &a, verify)?;
+            vals.push(gflops(&out, &tl));
+        }
+        println!(
+            "{:<18} {}",
+            e.name,
+            vals.iter().map(|v| format!("{v:>12.2}")).collect::<Vec<_>>().join(" ")
+        );
+        rows.push((e.name.to_string(), vals));
+    }
+    summarize_speedups(&rows, &libs.map(|l| l.name()));
+    Ok(rows)
+}
+
+/// Fig 6: GFLOPS of the 3 large-capable libraries on the 7 large matrices.
+pub fn fig6(scale: SuiteScale, verify: bool) -> Result<Vec<(String, Vec<f64>)>> {
+    println!("\n=== Figure 6: SpGEMM GFLOPS, large matrices (scale {scale:?}) ===");
+    println!("(cuSPARSE omitted: out of device memory on these inputs, §6.1)");
+    let libs = Library::large_capable();
+    print_header(&libs.map(|l| l.name()));
+    let mut rows = Vec::new();
+    for e in large_entries() {
+        let a = e.generate(scale);
+        let mut vals = Vec::new();
+        for lib in libs {
+            let (out, tl) = run_and_simulate(lib, &a, verify)?;
+            vals.push(gflops(&out, &tl));
+        }
+        println!(
+            "{:<18} {}",
+            e.name,
+            vals.iter().map(|v| format!("{v:>12.2}")).collect::<Vec<_>>().join(" ")
+        );
+        rows.push((e.name.to_string(), vals));
+    }
+    summarize_speedups(&rows, &libs.map(|l| l.name()));
+    Ok(rows)
+}
+
+fn summarize_speedups(rows: &[(String, Vec<f64>)], names: &[&str]) {
+    if rows.is_empty() {
+        return;
+    }
+    let n = names.len();
+    let last = n - 1; // OpSparse is last
+    println!("-- OpSparse speedup (geomean / max) --");
+    for j in 0..last {
+        let mut log_sum = 0.0;
+        let mut max = 0.0f64;
+        for (_, vals) in rows {
+            let s = vals[last] / vals[j].max(1e-12);
+            log_sum += s.ln();
+            max = max.max(s);
+        }
+        let geo = (log_sum / rows.len() as f64).exp();
+        println!("  vs {:<10} geomean {geo:.2}x   max {max:.2}x", names[j]);
+    }
+}
+
+/// Figs 7+8: binning-step execution time, absolute and as % of total, for
+/// nsparse / spECK / OpSparse.
+pub fn fig7_8(scale: SuiteScale) -> Result<Vec<(String, Vec<(f64, f64)>)>> {
+    println!("\n=== Figures 7+8: binning time (abs us / % of total) (scale {scale:?}) ===");
+    let libs = [Library::Nsparse, Library::Speck, Library::OpSparse];
+    print_header(&libs.map(|l| l.name()));
+    let mut rows = Vec::new();
+    for e in entries() {
+        let a = e.generate(scale);
+        let mut vals = Vec::new();
+        for lib in libs {
+            let (out, tl) = run_and_simulate(lib, &a, false)?;
+            let _ = out;
+            let bin_ns = tl.step_ns("sym_binning") + tl.step_ns("num_binning");
+            let pct = 100.0 * bin_ns / tl.total_ns;
+            vals.push((bin_ns / 1e3, pct));
+        }
+        println!(
+            "{:<18} {}",
+            e.name,
+            vals.iter()
+                .map(|(us, pct)| format!("{us:>7.1}us {pct:>4.1}%"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        rows.push((e.name.to_string(), vals));
+    }
+    // paper headline: avg % for each library + speedup of OpSparse binning
+    for (j, lib) in libs.iter().enumerate() {
+        let avg: f64 = rows.iter().map(|(_, v)| v[j].1).sum::<f64>() / rows.len() as f64;
+        let worst = rows.iter().map(|(_, v)| v[j].1).fold(0.0f64, f64::max);
+        println!("  {:<10} binning avg {avg:.1}% of total, worst {worst:.1}%", lib.name());
+    }
+    let speedup = |j: usize| {
+        let mut log_sum = 0.0;
+        for (_, v) in &rows {
+            log_sum += (v[j].0 / v[2].0.max(1e-12)).ln();
+        }
+        (log_sum / rows.len() as f64).exp()
+    };
+    println!("  OpSparse binning speedup: {:.1}x vs nsparse, {:.1}x vs spECK", speedup(0), speedup(1));
+    Ok(rows)
+}
+
+/// Fig 9: symbolic/numeric step time with single- vs multi-access hashing.
+pub fn fig9(scale: SuiteScale) -> Result<Vec<(String, [f64; 4])>> {
+    println!("\n=== Figure 9: single- vs multi-access hashing (step times, us) (scale {scale:?}) ===");
+    println!("{:<18} {:>12} {:>12} {:>12} {:>12}", "matrix", "sym_single", "sym_multi", "num_single", "num_multi");
+    let mut rows = Vec::new();
+    for e in entries() {
+        let a = e.generate(scale);
+        let mut cfg = OpSparseConfig::default();
+        cfg.hash_variant = HashVariant::SingleAccess;
+        let single = multiply(&a, &a, &cfg)?;
+        cfg.hash_variant = HashVariant::MultiAccess;
+        let multi = multiply(&a, &a, &cfg)?;
+        let tl_s = simulate(&single.trace, &V100);
+        let tl_m = simulate(&multi.trace, &V100);
+        let vals = [
+            tl_s.step_ns("symbolic") / 1e3,
+            tl_m.step_ns("symbolic") / 1e3,
+            tl_s.step_ns("numeric") / 1e3,
+            tl_m.step_ns("numeric") / 1e3,
+        ];
+        println!(
+            "{:<18} {:>12.1} {:>12.1} {:>12.1} {:>12.1}",
+            e.name, vals[0], vals[1], vals[2], vals[3]
+        );
+        rows.push((e.name.to_string(), vals));
+    }
+    let geo = |num: usize, den: usize| {
+        let s: f64 = rows.iter().map(|(_, v)| (v[num] / v[den].max(1e-12)).ln()).sum();
+        (s / rows.len() as f64).exp()
+    };
+    println!("  single-access speedup: sym {:.3}x, num {:.3}x", geo(1, 0), geo(3, 2));
+    Ok(rows)
+}
+
+/// Fig 10: symbolic-step performance across the sym_1x/1.2x/1.5x ranges,
+/// normalized to sym_1x (higher = faster).
+pub fn fig10(scale: SuiteScale) -> Result<Vec<(String, [f64; 3])>> {
+    println!("\n=== Figure 10: symbolic step vs binning ranges (normalized to sym_1x) (scale {scale:?}) ===");
+    println!("{:<18} {:>10} {:>10} {:>10}", "matrix", "sym_1x", "sym_1.2x", "sym_1.5x");
+    let mut rows = Vec::new();
+    for e in entries() {
+        let a = e.generate(scale);
+        let mut times = [0f64; 3];
+        for (i, r) in SymbolicRanges::all().iter().enumerate() {
+            let mut cfg = OpSparseConfig::default();
+            cfg.sym_ranges = *r;
+            let out = multiply(&a, &a, &cfg)?;
+            let tl = simulate(&out.trace, &V100);
+            times[i] = tl.step_ns("symbolic");
+        }
+        let norm = [1.0, times[0] / times[1], times[0] / times[2]];
+        println!("{:<18} {:>10.3} {:>10.3} {:>10.3}", e.name, norm[0], norm[1], norm[2]);
+        rows.push((e.name.to_string(), norm));
+    }
+    for (i, name) in ["sym_1x", "sym_1.2x", "sym_1.5x"].iter().enumerate() {
+        let s: f64 = rows.iter().map(|(_, v)| v[i].ln()).sum();
+        println!("  {name} geomean speedup vs 1x: {:.3}x", (s / rows.len() as f64).exp());
+    }
+    Ok(rows)
+}
+
+/// Fig 11: numeric-step performance across num_1x/1.5x/2x/3x ranges,
+/// normalized to num_1x.
+pub fn fig11(scale: SuiteScale) -> Result<Vec<(String, [f64; 4])>> {
+    println!("\n=== Figure 11: numeric step vs binning ranges (normalized to num_1x) (scale {scale:?}) ===");
+    println!("{:<18} {:>10} {:>10} {:>10} {:>10}", "matrix", "num_1x", "num_1.5x", "num_2x", "num_3x");
+    let mut rows = Vec::new();
+    for e in entries() {
+        let a = e.generate(scale);
+        let mut times = [0f64; 4];
+        for (i, r) in NumericRanges::all().iter().enumerate() {
+            let mut cfg = OpSparseConfig::default();
+            cfg.num_ranges = *r;
+            let out = multiply(&a, &a, &cfg)?;
+            let tl = simulate(&out.trace, &V100);
+            times[i] = tl.step_ns("numeric");
+        }
+        let norm = [1.0, times[0] / times[1], times[0] / times[2], times[0] / times[3]];
+        println!(
+            "{:<18} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
+            e.name, norm[0], norm[1], norm[2], norm[3]
+        );
+        rows.push((e.name.to_string(), norm));
+    }
+    for (i, name) in ["num_1x", "num_1.5x", "num_2x", "num_3x"].iter().enumerate() {
+        let s: f64 = rows.iter().map(|(_, v)| v[i].ln()).sum();
+        println!("  {name} geomean speedup vs 1x: {:.3}x", (s / rows.len() as f64).exp());
+    }
+    Ok(rows)
+}
+
+/// Ablation bench (DESIGN.md): flip each OpSparse optimization off
+/// individually and report the slowdown on a representative matrix set.
+pub fn ablations(scale: SuiteScale) -> Result<()> {
+    println!("\n=== Ablations: one optimization off at a time (scale {scale:?}) ===");
+    let names = ["webbase-1M", "cant", "mono_500Hz", "pdb1HYS"];
+    println!(
+        "{:<28} {}",
+        "config",
+        names.iter().map(|n| format!("{n:>14}")).collect::<Vec<_>>().join(" ")
+    );
+    let mats: Vec<_> = names
+        .iter()
+        .map(|n| crate::gen::suite::suite_entry(n).unwrap().generate(scale))
+        .collect();
+    let run = |label: &str, cfg: &OpSparseConfig, mats: &[crate::sparse::Csr]| -> Result<Vec<f64>> {
+        let mut out = Vec::new();
+        for a in mats {
+            let o = multiply(a, a, cfg)?;
+            let tl = simulate(&o.trace, &V100);
+            out.push(tl.total_ns);
+        }
+        println!(
+            "{:<28} {}",
+            label,
+            out.iter().map(|v| format!("{:>12.2}us", v / 1e3)).collect::<Vec<_>>().join(" ")
+        );
+        Ok(out)
+    };
+    let base = run("opsparse (all on)", &OpSparseConfig::default(), &mats)?;
+    let mut variants: Vec<(&str, OpSparseConfig)> = Vec::new();
+    let mut c = OpSparseConfig::default();
+    c.binning_variant = crate::spgemm::BinningVariant::GlobalAtomic;
+    variants.push(("- shared-mem binning", c));
+    let mut c = OpSparseConfig::default();
+    c.hash_variant = HashVariant::MultiAccess;
+    variants.push(("- single-access hashing", c));
+    let mut c = OpSparseConfig::default();
+    c.sym_ranges = SymbolicRanges::Sym1x;
+    c.num_ranges = NumericRanges::Num1x;
+    variants.push(("- tuned binning ranges", c));
+    let mut c = OpSparseConfig::default();
+    c.combined_metadata_malloc = false;
+    c.reuse_crpt = false;
+    variants.push(("- combined metadata malloc", c));
+    let mut c = OpSparseConfig::default();
+    c.overlap_malloc = false;
+    variants.push(("- malloc/kernel overlap", c));
+    let mut c = OpSparseConfig::default();
+    c.deferred_free = false;
+    variants.push(("- deferred cudaFree", c));
+    for (label, cfg) in &variants {
+        let t = run(label, cfg, &mats)?;
+        let slow: Vec<String> =
+            t.iter().zip(&base).map(|(x, b)| format!("{:.3}x", x / b)).collect();
+        println!("{:<28} {}", "   slowdown", slow.iter().map(|s| format!("{s:>14}")).collect::<Vec<_>>().join(" "));
+    }
+    // §2.2: the one-phase method with upper-bound allocation
+    let mut one = Vec::new();
+    for a in &mats {
+        let o = crate::spgemm::one_phase::multiply_one_phase(a, a)?;
+        let tl = simulate(&o.trace, &V100);
+        one.push(tl.total_ns);
+    }
+    println!(
+        "{:<28} {}",
+        "one-phase (§2.2 baseline)",
+        one.iter().map(|v| format!("{:>12.2}us", v / 1e3)).collect::<Vec<_>>().join(" ")
+    );
+    let slow: Vec<String> =
+        one.iter().zip(&base).map(|(x, b)| format!("{:.3}x", x / b)).collect();
+    println!("{:<28} {}", "   slowdown", slow.iter().map(|s| format!("{s:>14}")).collect::<Vec<_>>().join(" "));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Smoke tests at Tiny scale on a subset — the full figures run in
+    // `cargo bench` / the CLI.
+
+    #[test]
+    fn fig9_mechanism_holds_on_one_matrix() {
+        let e = crate::gen::suite::suite_entry("cant").unwrap();
+        let a = e.generate(SuiteScale::Tiny);
+        let mut cfg = OpSparseConfig::default();
+        cfg.hash_variant = HashVariant::SingleAccess;
+        let s = multiply(&a, &a, &cfg).unwrap();
+        cfg.hash_variant = HashVariant::MultiAccess;
+        let m = multiply(&a, &a, &cfg).unwrap();
+        let tl_s = simulate(&s.trace, &V100);
+        let tl_m = simulate(&m.trace, &V100);
+        assert!(
+            tl_s.step_ns("numeric") < tl_m.step_ns("numeric"),
+            "single access should be faster: {} vs {}",
+            tl_s.step_ns("numeric"),
+            tl_m.step_ns("numeric")
+        );
+    }
+
+    #[test]
+    fn binning_fraction_is_small_for_opsparse() {
+        let e = crate::gen::suite::suite_entry("offshore").unwrap();
+        let a = e.generate(SuiteScale::Tiny);
+        let (_, tl) = run_and_simulate(Library::OpSparse, &a, false).unwrap();
+        let bin = tl.step_ns("sym_binning") + tl.step_ns("num_binning");
+        let frac = bin / tl.total_ns;
+        assert!(frac < 0.15, "OpSparse binning should be cheap, got {:.1}%", frac * 100.0);
+    }
+}

@@ -1,0 +1,61 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (§6) on the synthetic suite. Shared by the CLI
+//! (`opsparse bench <target>`) and the `cargo bench` targets.
+
+pub mod figures;
+pub mod tables;
+
+use crate::gpusim::{simulate, Timeline, V100};
+use crate::sparse::Csr;
+use crate::spgemm::pipeline::SpgemmOutput;
+use anyhow::Result;
+
+/// Run one library on `A*A`, validate against the reference, and simulate
+/// the device trace. Returns (output, timeline).
+pub fn run_and_simulate(
+    lib: crate::baselines::Library,
+    a: &Csr,
+    verify: bool,
+) -> Result<(SpgemmOutput, Timeline)> {
+    let out = lib.run(a, a)?;
+    if verify {
+        let gold = crate::spgemm::reference::spgemm_reference(a, a);
+        if let Some(d) = out.c.diff(&gold, 1e-9) {
+            anyhow::bail!("{} result mismatch: {d}", lib.name());
+        }
+    }
+    let tl = simulate(&out.trace, &V100);
+    Ok((out, tl))
+}
+
+/// GFLOPS under the simulated timeline (the paper's metric: 2·n_prod/t).
+pub fn gflops(out: &SpgemmOutput, tl: &Timeline) -> f64 {
+    tl.gflops(out.flops())
+}
+
+/// §Perf harness: median wall time of `multiply()` on a named suite
+/// matrix (used by `opsparse bench perf` and the EXPERIMENTS.md log).
+pub fn perf_l3(matrix: &str, scale: crate::gen::suite::SuiteScale, reps: usize) -> Result<f64> {
+    let e = crate::gen::suite::suite_entry(matrix)
+        .ok_or_else(|| anyhow::anyhow!("unknown matrix {matrix}"))?;
+    let a = e.generate(scale);
+    let cfg = crate::spgemm::pipeline::OpSparseConfig::default();
+    // warmup
+    let out = crate::spgemm::pipeline::multiply(&a, &a, &cfg)?;
+    let mut times: Vec<f64> = Vec::new();
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        let o = crate::spgemm::pipeline::multiply(&a, &a, &cfg)?;
+        times.push(t0.elapsed().as_secs_f64() * 1e9);
+        std::hint::black_box(o.c.nnz());
+    }
+    times.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let med = times[times.len() / 2];
+    println!(
+        "perf_l3 {matrix}@{scale:?}: median {} over {reps} reps ({} products, {:.1} Mprod/s)",
+        crate::util::fmt::ns(med),
+        crate::util::fmt::count(out.nprod),
+        out.nprod as f64 * 1e3 / med
+    );
+    Ok(med)
+}

@@ -1,0 +1,110 @@
+//! Service metrics: counters plus latency percentiles computed from a
+//! bounded reservoir of observed job latencies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Thread-safe metrics registry for the coordinator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub hash_routed: AtomicU64,
+    pub block_routed: AtomicU64,
+    /// Total intermediate products processed (throughput numerator).
+    pub nprod_total: AtomicU64,
+    /// Latency samples in ns (bounded reservoir).
+    latencies: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe_latency(&self, ns: u64) {
+        let mut l = self.latencies.lock().unwrap();
+        if l.len() < 65_536 {
+            l.push(ns);
+        }
+    }
+
+    /// Latency percentile (0.0..=1.0) over the recorded samples.
+    pub fn latency_percentile(&self, q: f64) -> Option<u64> {
+        let mut l = self.latencies.lock().unwrap().clone();
+        if l.is_empty() {
+            return None;
+        }
+        l.sort_unstable();
+        let idx = ((l.len() as f64 - 1.0) * q).round() as usize;
+        Some(l[idx.min(l.len() - 1)])
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            hash_routed: self.hash_routed.load(Ordering::Relaxed),
+            block_routed: self.block_routed.load(Ordering::Relaxed),
+            nprod_total: self.nprod_total.load(Ordering::Relaxed),
+            p50_ns: self.latency_percentile(0.50),
+            p99_ns: self.latency_percentile(0.99),
+        }
+    }
+}
+
+/// Point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub hash_routed: u64,
+    pub block_routed: u64,
+    pub nprod_total: u64,
+    pub p50_ns: Option<u64>,
+    pub p99_ns: Option<u64>,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "jobs: submitted={} completed={} failed={}", self.jobs_submitted, self.jobs_completed, self.jobs_failed)?;
+        writeln!(f, "routes: hash={} block={}", self.hash_routed, self.block_routed)?;
+        writeln!(f, "nprod total: {}", self.nprod_total)?;
+        match (self.p50_ns, self.p99_ns) {
+            (Some(p50), Some(p99)) => writeln!(
+                f,
+                "latency: p50={} p99={}",
+                crate::util::fmt::ns(p50 as f64),
+                crate::util::fmt::ns(p99 as f64)
+            ),
+            _ => writeln!(f, "latency: no samples"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = Metrics::new();
+        m.jobs_submitted.fetch_add(3, Ordering::Relaxed);
+        for ns in [100u64, 200, 300, 400, 1000] {
+            m.observe_latency(ns);
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.jobs_submitted, 3);
+        assert_eq!(snap.p50_ns, Some(300));
+        assert_eq!(snap.p99_ns, Some(1000));
+    }
+
+    #[test]
+    fn empty_latency_is_none() {
+        let m = Metrics::new();
+        assert!(m.latency_percentile(0.5).is_none());
+    }
+}

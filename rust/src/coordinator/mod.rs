@@ -1,0 +1,20 @@
+//! L3 coordinator: the multi-tenant SpGEMM service layer.
+//!
+//! The paper's contribution is a *library*; a production deployment wraps
+//! it in a service that accepts multiply jobs, routes each to the right
+//! execution path, and reports metrics. This module provides that layer:
+//!
+//! * [`router`] — picks the execution path per job: the hash pipeline
+//!   (CPU + device-trace simulation) or the PJRT BSR block engine (dense
+//!   blocky matrices, DESIGN.md §Hardware-Adaptation).
+//! * [`service`] — a worker-pool job queue (std threads + channels; the
+//!   build is offline so no tokio) with latency metrics.
+//! * [`metrics`] — counters and latency percentiles.
+
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use router::{Route, Router, RouterConfig};
+pub use service::{Coordinator, Job, JobResult};

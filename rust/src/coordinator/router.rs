@@ -1,0 +1,122 @@
+//! Job routing: decide per matrix pair whether to run the hash pipeline
+//! or the PJRT block engine.
+//!
+//! The block engine wins when the matrices are *blocky* — their nonzeros
+//! cluster into dense `T×T` tiles (FEM matrices with contiguous runs, the
+//! high-CR half of Table 3). For scattered matrices the padding overhead
+//! of dense blocks dominates and the hash path wins. The router estimates
+//! block fill on a row sample, mirroring spECK's lightweight pre-analysis
+//! (§3) — cheap, structure-only, value-free.
+
+use crate::sparse::Csr;
+
+/// Execution path for a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Two-phase hash pipeline (the paper's OpSparse).
+    Hash,
+    /// PJRT BSR block engine.
+    Block,
+}
+
+/// Router configuration.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Block size of the compiled engine.
+    pub t: usize,
+    /// Minimum estimated tile fill ratio to route to the block engine.
+    pub min_fill: f64,
+    /// Rows sampled for the estimate.
+    pub sample_rows: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { t: 16, min_fill: 0.25, sample_rows: 256 }
+    }
+}
+
+/// Structure-only router.
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    pub cfg: RouterConfig,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Self {
+        Router { cfg }
+    }
+
+    /// Estimate the dense-tile fill ratio of `m` on a row sample: for each
+    /// sampled row, count (tile, elements-in-tile) and return
+    /// elements / (tiles × T) — the column-direction fill a BSR
+    /// conversion would see.
+    pub fn estimate_fill(&self, m: &Csr) -> f64 {
+        if m.rows == 0 || m.nnz() == 0 {
+            return 0.0;
+        }
+        let t = self.cfg.t;
+        let step = (m.rows / self.cfg.sample_rows.max(1)).max(1);
+        let mut elems = 0usize;
+        let mut tiles = 0usize;
+        for r in (0..m.rows).step_by(step) {
+            let mut last_tile = u32::MAX;
+            for &c in m.row_cols(r) {
+                let tile = c / t as u32;
+                if tile != last_tile {
+                    tiles += 1;
+                    last_tile = tile;
+                }
+                elems += 1;
+            }
+        }
+        if tiles == 0 {
+            0.0
+        } else {
+            elems as f64 / (tiles * t) as f64
+        }
+    }
+
+    /// Route a job by the joint fill of both operands.
+    pub fn route(&self, a: &Csr, b: &Csr) -> Route {
+        let fill = self.estimate_fill(a).min(self.estimate_fill(b));
+        if fill >= self.cfg.min_fill {
+            Route::Block
+        } else {
+            Route::Hash
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::banded::Banded;
+    use crate::gen::uniform::Uniform;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fem_contiguous_matrix_routes_to_block() {
+        let mut rng = Rng::new(41);
+        let a = Banded { n: 1000, per_row: 48, band: 40, contiguous_frac: 1.0 }.generate(&mut rng);
+        let r = Router::default();
+        assert!(r.estimate_fill(&a) > 0.4, "fill={}", r.estimate_fill(&a));
+        assert_eq!(r.route(&a, &a), Route::Block);
+    }
+
+    #[test]
+    fn scattered_matrix_routes_to_hash() {
+        let mut rng = Rng::new(42);
+        let a = Uniform { n: 2000, per_row: 6, jitter: 3 }.generate(&mut rng);
+        let r = Router::default();
+        assert!(r.estimate_fill(&a) < 0.25, "fill={}", r.estimate_fill(&a));
+        assert_eq!(r.route(&a, &a), Route::Hash);
+    }
+
+    #[test]
+    fn empty_matrix_fill_zero() {
+        let z = Csr::zero(10, 10);
+        assert_eq!(Router::default().estimate_fill(&z), 0.0);
+        assert_eq!(Router::default().route(&z, &z), Route::Hash);
+    }
+}

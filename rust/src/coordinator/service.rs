@@ -1,0 +1,256 @@
+//! Worker-pool SpGEMM service: jobs in, validated results out.
+//!
+//! A leader owns the job queues; hash jobs fan out to a worker pool, and
+//! block jobs serialize through one dedicated PJRT thread. The PJRT
+//! client is not `Send` (it wraps `Rc` + raw pointers), so the block
+//! engine is **constructed inside** its thread from a factory closure and
+//! never crosses threads — the same single-owner pattern a CUDA context
+//! imposes.
+
+use super::metrics::Metrics;
+use super::router::{Route, Router};
+use crate::runtime::BlockEngine;
+use crate::sparse::Csr;
+use crate::spgemm::pipeline::{multiply, OpSparseConfig};
+use anyhow::Result;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A multiply job. `force_route` overrides the router (tests/benches).
+pub struct Job {
+    pub id: u64,
+    pub a: Csr,
+    pub b: Csr,
+    pub force_route: Option<Route>,
+}
+
+/// A completed job.
+pub struct JobResult {
+    pub id: u64,
+    pub route: Route,
+    pub c: Result<Csr>,
+    pub wall_ns: u64,
+    /// Total intermediate products (0 if the job failed early).
+    pub nprod: usize,
+}
+
+enum WorkerMsg {
+    Run(Job),
+    Stop,
+}
+
+/// Factory that builds the block engine inside its worker thread.
+pub type EngineFactory = Box<dyn FnOnce() -> Result<BlockEngine> + Send>;
+
+fn finish(
+    metrics: &Metrics,
+    tx: &mpsc::Sender<JobResult>,
+    id: u64,
+    route: Route,
+    c: Result<Csr>,
+    nprod: usize,
+    t0: Instant,
+) {
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    if c.is_ok() {
+        metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        metrics.nprod_total.fetch_add(nprod as u64, Ordering::Relaxed);
+    } else {
+        metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    }
+    metrics.observe_latency(wall_ns);
+    let _ = tx.send(JobResult { id, route, c, wall_ns, nprod });
+}
+
+/// The coordinator: spawn, submit, drain, join.
+pub struct Coordinator {
+    tx_hash: mpsc::Sender<WorkerMsg>,
+    tx_block: Option<mpsc::Sender<WorkerMsg>>,
+    rx_results: mpsc::Receiver<JobResult>,
+    tx_results: mpsc::Sender<JobResult>,
+    workers: Vec<JoinHandle<()>>,
+    router: Router,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start `n_workers` hash workers plus (optionally) one block worker
+    /// built from `engine_factory`.
+    pub fn start(n_workers: usize, router: Router, engine_factory: Option<EngineFactory>) -> Self {
+        let (tx_hash, rx_hash) = mpsc::channel::<WorkerMsg>();
+        let (tx_results, rx_results) = mpsc::channel::<JobResult>();
+        let rx_hash = Arc::new(Mutex::new(rx_hash));
+        let metrics = Arc::new(Metrics::new());
+
+        let mut workers = Vec::new();
+        for _ in 0..n_workers.max(1) {
+            let rx = Arc::clone(&rx_hash);
+            let tx_res = tx_results.clone();
+            let metrics = Arc::clone(&metrics);
+            workers.push(std::thread::spawn(move || loop {
+                let msg = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match msg {
+                    Ok(WorkerMsg::Run(job)) => {
+                        let t0 = Instant::now();
+                        let (c, nprod) =
+                            match multiply(&job.a, &job.b, &OpSparseConfig::default()) {
+                                Ok(out) => {
+                                    let np = out.nprod;
+                                    (Ok(out.c), np)
+                                }
+                                Err(e) => (Err(e), 0),
+                            };
+                        finish(&metrics, &tx_res, job.id, Route::Hash, c, nprod, t0);
+                    }
+                    Ok(WorkerMsg::Stop) | Err(_) => break,
+                }
+            }));
+        }
+
+        let tx_block = engine_factory.map(|factory| {
+            let (tx_block, rx_block) = mpsc::channel::<WorkerMsg>();
+            let tx_res = tx_results.clone();
+            let metrics = Arc::clone(&metrics);
+            workers.push(std::thread::spawn(move || {
+                // the engine (non-Send PJRT state) lives and dies here
+                let mut engine = match factory() {
+                    Ok(e) => Some(e),
+                    Err(e) => {
+                        eprintln!("block engine init failed: {e:#}");
+                        None
+                    }
+                };
+                loop {
+                    match rx_block.recv() {
+                        Ok(WorkerMsg::Run(job)) => {
+                            let t0 = Instant::now();
+                            let nprod = crate::sparse::stats::total_nprod(&job.a, &job.b);
+                            let c = match engine.as_mut() {
+                                Some(e) => e.spgemm_csr(&job.a, &job.b),
+                                None => Err(anyhow::anyhow!("block engine unavailable")),
+                            };
+                            finish(&metrics, &tx_res, job.id, Route::Block, c, nprod, t0);
+                        }
+                        Ok(WorkerMsg::Stop) | Err(_) => break,
+                    }
+                }
+            }));
+            tx_block
+        });
+
+        Coordinator { tx_hash, tx_block, rx_results, tx_results, workers, router, metrics }
+    }
+
+    /// Submit a job: routed here (structure-only, cheap), then queued.
+    pub fn submit(&self, job: Job) {
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let route = job.force_route.unwrap_or_else(|| self.router.route(&job.a, &job.b));
+        let route = match (route, &self.tx_block) {
+            (Route::Block, Some(_)) => Route::Block,
+            (Route::Block, None) if job.force_route.is_some() => Route::Block, // honored, will fail
+            _ => Route::Hash,
+        };
+        match route {
+            Route::Hash => {
+                self.metrics.hash_routed.fetch_add(1, Ordering::Relaxed);
+                self.tx_hash.send(WorkerMsg::Run(job)).expect("hash workers alive");
+            }
+            Route::Block => {
+                self.metrics.block_routed.fetch_add(1, Ordering::Relaxed);
+                match &self.tx_block {
+                    Some(tx) => tx.send(WorkerMsg::Run(job)).expect("block worker alive"),
+                    None => {
+                        self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        let _ = self.tx_results.send(JobResult {
+                            id: job.id,
+                            route: Route::Block,
+                            c: Err(anyhow::anyhow!("no block engine loaded")),
+                            wall_ns: 0,
+                            nprod: 0,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Receive the next completed job (blocking).
+    pub fn recv(&self) -> Option<JobResult> {
+        self.rx_results.recv().ok()
+    }
+
+    /// Stop all workers and join.
+    pub fn shutdown(self) {
+        for _ in &self.workers {
+            let _ = self.tx_hash.send(WorkerMsg::Stop);
+        }
+        if let Some(tx) = &self.tx_block {
+            let _ = tx.send(WorkerMsg::Stop);
+        }
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::uniform::Uniform;
+    use crate::spgemm::reference::spgemm_reference;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hash_jobs_roundtrip_through_the_pool() {
+        let coord = Coordinator::start(4, Router::default(), None);
+        let mut rng = Rng::new(71);
+        let mats: Vec<Csr> = (0..8)
+            .map(|_| Uniform { n: 120, per_row: 6, jitter: 3 }.generate(&mut rng))
+            .collect();
+        for (i, m) in mats.iter().enumerate() {
+            coord.submit(Job { id: i as u64, a: m.clone(), b: m.clone(), force_route: None });
+        }
+        let mut results = Vec::new();
+        for _ in 0..8 {
+            results.push(coord.recv().unwrap());
+        }
+        for r in &results {
+            let m = &mats[r.id as usize];
+            let gold = spgemm_reference(m, m);
+            assert!(r.c.as_ref().unwrap().approx_eq(&gold, 1e-12), "job {}", r.id);
+            assert_eq!(r.route, Route::Hash);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 8);
+        assert_eq!(snap.jobs_failed, 0);
+        assert!(snap.p50_ns.is_some());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn bad_job_reports_failure_not_panic() {
+        let coord = Coordinator::start(2, Router::default(), None);
+        // dimension mismatch
+        coord.submit(Job { id: 1, a: Csr::zero(3, 4), b: Csr::zero(5, 5), force_route: None });
+        let r = coord.recv().unwrap();
+        assert!(r.c.is_err());
+        assert_eq!(coord.metrics.snapshot().jobs_failed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn block_route_without_engine_fails_gracefully() {
+        let coord = Coordinator::start(1, Router::default(), None);
+        let m = Csr::identity(32);
+        coord.submit(Job { id: 9, a: m.clone(), b: m, force_route: Some(Route::Block) });
+        let r = coord.recv().unwrap();
+        assert!(r.c.is_err());
+        assert_eq!(r.route, Route::Block);
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,86 @@
+//! Kronecker (RMAT-style) graph generator: recursive quadrant descent with
+//! probability matrix [[a,b],[c,d]]. Produces community-structured graphs
+//! with heavy-tailed degrees; used for graph-analytics-style workloads and
+//! as extra coverage beyond the Table-3 classes.
+
+use crate::sparse::{Coo, Csr};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Kron {
+    /// log2 of the number of vertices.
+    pub scale: u32,
+    /// Average directed edges per vertex.
+    pub edge_factor: usize,
+    /// RMAT quadrant probabilities (a + b + c + d = 1).
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl Default for Kron {
+    fn default() -> Self {
+        // Graph500 parameters
+        Kron { scale: 10, edge_factor: 16, a: 0.57, b: 0.19, c: 0.19 }
+    }
+}
+
+impl Kron {
+    pub fn generate(&self, rng: &mut Rng) -> Csr {
+        let n = 1usize << self.scale;
+        let edges = n * self.edge_factor;
+        let mut coo = Coo::with_capacity(n, n, edges);
+        for _ in 0..edges {
+            let (mut r, mut c) = (0usize, 0usize);
+            for level in (0..self.scale).rev() {
+                let p = rng.f64();
+                let bit = 1usize << level;
+                if p < self.a {
+                    // top-left
+                } else if p < self.a + self.b {
+                    c |= bit;
+                } else if p < self.a + self.b + self.c {
+                    r |= bit;
+                } else {
+                    r |= bit;
+                    c |= bit;
+                }
+            }
+            coo.push(r, c, rng.value());
+        }
+        // duplicates merge in the conversion (edge multiplicity is summed)
+        coo.to_csr().expect("kron generator produced invalid COO")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_validity() {
+        let g = Kron { scale: 8, edge_factor: 8, ..Default::default() };
+        let m = g.generate(&mut Rng::new(9));
+        m.validate().unwrap();
+        assert_eq!(m.rows, 256);
+        assert!(m.nnz() > 0 && m.nnz() <= 256 * 8);
+    }
+
+    #[test]
+    fn heavy_tail() {
+        let g = Kron { scale: 10, edge_factor: 16, ..Default::default() };
+        let m = g.generate(&mut Rng::new(2));
+        let max = m.max_row_nnz();
+        let avg = m.nnz() as f64 / m.rows as f64;
+        assert!(
+            max as f64 > 4.0 * avg,
+            "RMAT should be heavy-tailed: max {max} vs avg {avg:.1}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = Kron { scale: 7, edge_factor: 4, ..Default::default() };
+        assert_eq!(g.generate(&mut Rng::new(5)), g.generate(&mut Rng::new(5)));
+    }
+}

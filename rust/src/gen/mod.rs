@@ -1,0 +1,84 @@
+//! Synthetic sparse-matrix generators.
+//!
+//! The paper evaluates on 26 SuiteSparse matrices (Table 3). This build has
+//! no network access, so each matrix is replaced by a synthetic stand-in of
+//! the same *structural class*, scaled to run on one machine while keeping
+//! the properties that drive SpGEMM behaviour: nnz/row distribution, max
+//! nnz/row, and the compression ratio of A² (see DESIGN.md §2.2).
+//!
+//! Generator families:
+//! * [`banded`] — banded matrices with per-row jitter (FEM-like: cant,
+//!   consph, shipsec1, pdb1HYS, hood, pwtk…). High overlap between
+//!   neighbouring rows ⇒ high compression ratio.
+//! * [`stencil`] — regular k-point stencils on 1D/2D/3D grids (mc2depi,
+//!   mario002, majorbasis, m133-b3…). CR ≈ small and uniform rows.
+//! * [`powerlaw`] — power-law row sizes with skewed column sampling
+//!   (webbase-1M, patents_main, wb-edu, scircuit…), including the
+//!   single-huge-row behaviour that drives the paper's §6.3.4 case study.
+//! * [`kron`] — Kronecker-product (RMAT-like) graphs (cage12/15-like
+//!   diffusion patterns are approximated by stencil+jitter instead).
+//! * [`rand_uniform`] — uniform random rows (poisson3Da, 2cubes_sphere…).
+
+pub mod banded;
+pub mod kron;
+pub mod powerlaw;
+pub mod stencil;
+pub mod suite;
+pub mod uniform;
+
+pub use suite::{suite_entry, suite_names, SuiteEntry, SuiteScale};
+
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+
+/// Common generator entrypoint: every family produces a square CSR matrix
+/// with strictly-sorted rows and values in roughly [-1, 1].
+pub trait Generator {
+    fn generate(&self, rng: &mut Rng) -> Csr;
+}
+
+/// Build a CSR matrix from a closure yielding per-row sorted column lists.
+/// Shared scaffolding for all generator families.
+pub(crate) fn build_rows<F>(n: usize, cols: usize, rng: &mut Rng, mut row_fn: F) -> Csr
+where
+    F: FnMut(usize, &mut Rng, &mut Vec<u32>),
+{
+    let mut rpt = Vec::with_capacity(n + 1);
+    rpt.push(0usize);
+    let mut col: Vec<u32> = Vec::new();
+    let mut val: Vec<f64> = Vec::new();
+    let mut scratch: Vec<u32> = Vec::new();
+    for i in 0..n {
+        scratch.clear();
+        row_fn(i, rng, &mut scratch);
+        scratch.sort_unstable();
+        scratch.dedup();
+        for &c in scratch.iter() {
+            debug_assert!((c as usize) < cols);
+            col.push(c);
+            val.push(rng.value());
+        }
+        rpt.push(col.len());
+    }
+    let m = Csr { rows: n, cols, rpt, col, val };
+    debug_assert!(m.validate().is_ok());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_rows_sorts_and_dedups() {
+        let mut rng = Rng::new(1);
+        let m = build_rows(3, 10, &mut rng, |i, _, out| {
+            out.extend_from_slice(&[5, 2, 5, (i as u32) % 10]);
+        });
+        m.validate().unwrap();
+        for i in 0..3 {
+            let cols = m.row_cols(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

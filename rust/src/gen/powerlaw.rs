@@ -1,0 +1,118 @@
+//! Power-law (web-graph-like) generator: row sizes follow a truncated
+//! power law, and column targets are drawn with preferential skew so hub
+//! columns appear in many rows. Models webbase-1M (max 4700 nnz/row),
+//! patents_main, wb-edu, scircuit from Table 3 — including the
+//! one-enormous-row behaviour behind the paper's §6.3.4 load-balance and
+//! §6.3.5 overlap case studies.
+
+use super::build_rows;
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct PowerLaw {
+    pub n: usize,
+    /// Power-law exponent for row sizes (larger = more head-heavy).
+    pub alpha: f64,
+    /// Maximum row size (Table 3 "Max nnz/row").
+    pub max_row: usize,
+    /// Mean row-size target; row sizes are rescaled to hit this on average.
+    pub mean_row: f64,
+    /// Column skew: probability mass routed to a hub region of the column
+    /// space (hubs make A² rows collide, lowering CR like real web graphs).
+    pub hub_frac: f64,
+    /// Number of rows forced to exactly `max_row` nonzeros (webbase-1M has
+    /// a single giant row that dominates the numeric step).
+    pub forced_giant_rows: usize,
+}
+
+impl PowerLaw {
+    pub fn generate(&self, rng: &mut Rng) -> Csr {
+        let n = self.n;
+        let hub_cols = ((n as f64) * 0.01).max(8.0) as usize;
+        // Pre-draw row sizes so we can rescale to the requested mean.
+        let mut sizes: Vec<usize> = (0..n).map(|_| rng.power_law(self.max_row, self.alpha)).collect();
+        let mean: f64 = sizes.iter().sum::<usize>() as f64 / n as f64;
+        let scale = self.mean_row / mean.max(1e-9);
+        for s in &mut sizes {
+            *s = ((*s as f64 * scale).round() as usize).clamp(1, self.max_row).min(n);
+        }
+        for g in 0..self.forced_giant_rows.min(n) {
+            // spread giants deterministically across the matrix
+            let idx = (g * 2654435761) % n;
+            sizes[idx] = self.max_row.min(n);
+        }
+        let mut tmp: Vec<u32> = Vec::new();
+        let mut seen: std::collections::HashSet<u32> = std::collections::HashSet::new();
+        build_rows(n, n, rng, |i, rng, out| {
+            let k = sizes[i].min(n);
+            if k * 4 >= n {
+                // giant row: distinct uniform sample for speed
+                rng.sample_distinct(n, k, &mut tmp);
+                out.extend_from_slice(&tmp);
+                return;
+            }
+            // draw until k *distinct* columns collected (build_rows dedups,
+            // so duplicates would silently shrink the row)
+            seen.clear();
+            while seen.len() < k {
+                let c = if rng.f64() < self.hub_frac {
+                    rng.below(hub_cols as u64) as u32
+                } else {
+                    rng.below(n as u64) as u32
+                };
+                if seen.insert(c) {
+                    out.push(c);
+                }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats::MatrixStats;
+
+    fn webbase_like(n: usize) -> PowerLaw {
+        PowerLaw {
+            n,
+            alpha: 2.0,
+            max_row: n / 10,
+            mean_row: 3.1,
+            hub_frac: 0.3,
+            forced_giant_rows: 1,
+        }
+    }
+
+    #[test]
+    fn has_giant_row() {
+        let g = webbase_like(5000);
+        let m = g.generate(&mut Rng::new(11));
+        m.validate().unwrap();
+        let s = MatrixStats::of(&m);
+        assert!(
+            s.max_row_nnz >= 400,
+            "expected a giant row ~n/10, got max {}",
+            s.max_row_nnz
+        );
+        assert!(s.avg_row_nnz < 10.0, "mean should stay small, got {}", s.avg_row_nnz);
+    }
+
+    #[test]
+    fn skewed_row_distribution() {
+        let g = PowerLaw { n: 2000, alpha: 2.2, max_row: 200, mean_row: 5.0, hub_frac: 0.2, forced_giant_rows: 0 };
+        let m = g.generate(&mut Rng::new(5));
+        let sizes: Vec<usize> = (0..m.rows).map(|i| m.row_nnz(i)).collect();
+        let small = sizes.iter().filter(|&&s| s <= 5).count();
+        let large = sizes.iter().filter(|&&s| s >= 50).count();
+        assert!(small > m.rows / 2, "most rows should be small");
+        assert!(large > 0, "tail should exist");
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = webbase_like(1000);
+        assert_eq!(g.generate(&mut Rng::new(1)), g.generate(&mut Rng::new(1)));
+    }
+}

@@ -1,0 +1,54 @@
+//! Uniform random generator: each row draws `per_row +- jitter` distinct
+//! columns uniformly. Models the mid-CR matrices of Table 3 (poisson3Da,
+//! 2cubes_sphere, offshore, cage12-like) where products rarely collide.
+
+use super::build_rows;
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Uniform {
+    pub n: usize,
+    pub per_row: usize,
+    /// +- jitter on the row size (uniform in [per_row-jitter, per_row+jitter]).
+    pub jitter: usize,
+}
+
+impl Uniform {
+    pub fn generate(&self, rng: &mut Rng) -> Csr {
+        let n = self.n;
+        let mut tmp = Vec::new();
+        build_rows(n, n, rng, |_, rng, out| {
+            let lo = self.per_row.saturating_sub(self.jitter).max(1);
+            let hi = (self.per_row + self.jitter + 1).min(n + 1);
+            let k = rng.range(lo, hi);
+            rng.sample_distinct(n, k, &mut tmp);
+            out.extend_from_slice(&tmp);
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats::MatrixStats;
+
+    #[test]
+    fn row_sizes_in_band() {
+        let g = Uniform { n: 500, per_row: 20, jitter: 5 };
+        let m = g.generate(&mut Rng::new(4));
+        m.validate().unwrap();
+        for i in 0..m.rows {
+            let k = m.row_nnz(i);
+            assert!((15..=25).contains(&k), "row {i} size {k} outside band");
+        }
+        let s = MatrixStats::of(&m);
+        assert!((s.avg_row_nnz - 20.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = Uniform { n: 200, per_row: 8, jitter: 2 };
+        assert_eq!(g.generate(&mut Rng::new(6)), g.generate(&mut Rng::new(6)));
+    }
+}

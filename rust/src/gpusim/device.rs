@@ -1,0 +1,100 @@
+//! Device parameter sets. The defaults model the paper's evaluation
+//! platform: NVIDIA Tesla V100 PCI-e, 16 GB HBM2, 900 GB/s, 80 SMs
+//! (§6.1), with the paper's own `cudaMalloc` micro-benchmark numbers
+//! (§4.4: allocating 4 MB ≈ 13.7 GB/s vs 124 GB/s access).
+
+/// Static device model parameters (all times in nanoseconds).
+#[derive(Clone, Debug)]
+pub struct DeviceParams {
+    pub name: &'static str,
+    /// Streaming multiprocessors.
+    pub sms: usize,
+    /// Max resident threads per SM.
+    pub max_threads_per_sm: usize,
+    /// Max resident thread blocks per SM.
+    pub max_blocks_per_sm: usize,
+    /// Shared memory per SM in bytes (96 KB on Volta).
+    pub shared_per_sm: usize,
+    /// Peak HBM bandwidth in bytes/ns (== GB/s · 1e-9 · 1e9).
+    pub hbm_bytes_per_ns: f64,
+    /// Per-SM shared-memory throughput in 4-byte words per ns.
+    pub shared_words_per_ns: f64,
+    /// Per-SM FP64 throughput in flops/ns.
+    pub fp64_flops_per_ns: f64,
+    /// Host-side cost of one kernel launch.
+    pub launch_overhead_ns: f64,
+    /// Device-side launch-to-first-block latency.
+    pub launch_latency_ns: f64,
+    /// Fixed `cudaMalloc` overhead + bandwidth (paper §4.4 micro-bench).
+    pub malloc_base_ns: f64,
+    pub malloc_bytes_per_ns: f64,
+    /// `cudaFree` host cost (after the implicit device sync).
+    pub free_base_ns: f64,
+    /// Contended global-memory atomic cost (serialized through L2).
+    pub global_atomic_ns: f64,
+    /// Per-block fixed scheduling overhead.
+    pub block_overhead_ns: f64,
+    /// Small D2H metadata copy: latency + bandwidth.
+    pub memcpy_base_ns: f64,
+    pub memcpy_bytes_per_ns: f64,
+    /// Average slowdown factor applied to shared-memory traffic from bank
+    /// conflicts under the hash table's random access pattern.
+    pub bank_conflict_factor: f64,
+}
+
+/// NVIDIA Tesla V100 PCI-e (the paper's platform).
+pub const V100: DeviceParams = DeviceParams {
+    name: "Tesla V100 PCIe",
+    sms: 80,
+    max_threads_per_sm: 2048,
+    max_blocks_per_sm: 32,
+    shared_per_sm: 96 * 1024,
+    hbm_bytes_per_ns: 900.0,         // 900 GB/s
+    shared_words_per_ns: 44.0,       // 32 banks * 4B * 1.38 GHz per SM
+    fp64_flops_per_ns: 98.0,         // 32 FP64 cores * 2 * 1.53 GHz per SM
+    launch_overhead_ns: 5_000.0,     // ~5 us host-side per launch
+    launch_latency_ns: 2_000.0,
+    malloc_base_ns: 10_000.0,
+    malloc_bytes_per_ns: 13.7,       // paper §4.4: 4MB at 13.7 GB/s
+    free_base_ns: 10_000.0,
+    global_atomic_ns: 30.0,
+    block_overhead_ns: 300.0,
+    memcpy_base_ns: 8_000.0,
+    memcpy_bytes_per_ns: 12.0,
+    bank_conflict_factor: 4.0,
+};
+
+impl DeviceParams {
+    /// Per-SM share of HBM bandwidth in bytes/ns.
+    pub fn hbm_per_sm(&self) -> f64 {
+        self.hbm_bytes_per_ns / self.sms as f64
+    }
+
+    /// `cudaMalloc` duration for `bytes`.
+    pub fn malloc_ns(&self, bytes: usize) -> f64 {
+        self.malloc_base_ns + bytes as f64 / self.malloc_bytes_per_ns
+    }
+
+    /// Small synchronous D2H copy duration.
+    pub fn memcpy_ns(&self, bytes: usize) -> f64 {
+        self.memcpy_base_ns + bytes as f64 / self.memcpy_bytes_per_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn malloc_matches_paper_microbench() {
+        // §4.4: allocating 4MB of global memory ~ 13.7 GB/s
+        let t = V100.malloc_ns(4 * 1024 * 1024);
+        let gbps = 4.0 * 1024.0 * 1024.0 / t; // bytes per ns == GB/s
+        assert!((12.0..14.0).contains(&gbps), "malloc effective bw {gbps:.1} GB/s");
+    }
+
+    #[test]
+    fn hbm_share() {
+        assert!((V100.hbm_per_sm() - 11.25).abs() < 1e-9);
+    }
+}

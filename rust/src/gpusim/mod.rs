@@ -1,0 +1,27 @@
+//! Event-driven V100 cost-model simulator.
+//!
+//! The paper's measurements are architectural: occupancy, shared- vs
+//! global-memory atomics, hash-probe traffic, `cudaMalloc` overheads,
+//! `cudaFree`'s implicit synchronization, kernel launch order, and SM load
+//! balance. None of these depend on actually owning a V100 — they are
+//! properties of (a) the sequence of device operations a library issues
+//! and (b) a device cost model. Every SpGEMM implementation in this repo
+//! therefore emits a [`trace::Trace`] of its device ops with *measured*
+//! per-block work counters (bytes moved, hash probes executed on the real
+//! input data, atomics issued), and this module schedules that trace
+//! against the V100 model to produce a [`timeline::Timeline`].
+//!
+//! See DESIGN.md §2 (substitution rule) for why this preserves exactly the
+//! effects the paper evaluates.
+
+pub mod cost;
+pub mod device;
+pub mod occupancy;
+pub mod scheduler;
+pub mod timeline;
+pub mod trace;
+
+pub use device::{DeviceParams, V100};
+pub use scheduler::simulate;
+pub use timeline::Timeline;
+pub use trace::{BlockWork, Kernel, Trace, TraceOp};

@@ -1,0 +1,76 @@
+//! Theoretical occupancy calculator (paper §4.7, §5.6).
+//!
+//! On Volta, theoretical occupancy is limited by threads/SM (2048),
+//! blocks/SM (32), and shared memory/SM (96 KB). The paper forces register
+//! pressure out of the picture with `__launch_bounds__(1024, 2)`, so we
+//! model the remaining three limits.
+
+use super::device::DeviceParams;
+
+/// Resident blocks per SM for a kernel of `tb_size` threads and
+/// `shared_bytes` shared memory per block.
+pub fn blocks_per_sm(tb_size: usize, shared_bytes: usize, dev: &DeviceParams) -> usize {
+    if tb_size == 0 {
+        return 0;
+    }
+    let by_threads = dev.max_threads_per_sm / tb_size;
+    let by_shared = if shared_bytes == 0 {
+        dev.max_blocks_per_sm
+    } else {
+        dev.shared_per_sm / shared_bytes
+    };
+    by_threads.min(by_shared).min(dev.max_blocks_per_sm)
+}
+
+/// Theoretical occupancy: resident threads / max threads.
+pub fn occupancy(tb_size: usize, shared_bytes: usize, dev: &DeviceParams) -> f64 {
+    let b = blocks_per_sm(tb_size, shared_bytes, dev);
+    (b * tb_size) as f64 / dev.max_threads_per_sm as f64
+}
+
+/// Latency-hiding efficiency as a function of occupancy: SpGEMM is
+/// memory-bound with irregular access (§4.7), so achieved bandwidth rises
+/// with resident warps. Saturation near full occupancy; 50%-occupancy
+/// kernels (symbolic kernel7, numeric kernel6) pay ~35% throughput.
+pub fn latency_hiding(occ: f64) -> f64 {
+    (0.25 + 0.75 * occ).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::V100;
+
+    #[test]
+    fn paper_section_5_6_1_examples() {
+        // kernel1: 64 threads, 512-slot 4B table + 4B counter => 32 blocks/SM
+        assert_eq!(blocks_per_sm(64, 512 * 4 + 4, &V100), 32);
+        assert!(occupancy(64, 512 * 4 + 4, &V100) > 0.99);
+        // kernel6: 1024 threads, 48KB => 2 blocks/SM = full occupancy
+        assert_eq!(blocks_per_sm(1024, 48 * 1024, &V100), 2);
+        assert!(occupancy(1024, 48 * 1024, &V100) > 0.99);
+        // kernel7: 96KB shared => 1 block/SM = 50% occupancy
+        assert_eq!(blocks_per_sm(1024, 96 * 1024 - 4, &V100), 1);
+        assert!((occupancy(1024, 96 * 1024 - 4, &V100) - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn numeric_kernel0_example() {
+        // §5.6.2: 1024 threads, 128 tables of 31*12B + 4B = 48128B => 1..2 blocks
+        let shared = 128 * (31 * 12 + 4);
+        let b = blocks_per_sm(1024, shared, &V100);
+        assert_eq!(b, 2, "numeric kernel0 should fit 2 blocks ({shared}B)");
+    }
+
+    #[test]
+    fn blocks_capped_at_32() {
+        assert_eq!(blocks_per_sm(32, 0, &V100), 32);
+    }
+
+    #[test]
+    fn latency_hiding_monotone() {
+        assert!(latency_hiding(1.0) > latency_hiding(0.5));
+        assert!(latency_hiding(0.5) > latency_hiding(0.25));
+        assert!((latency_hiding(1.0) - 1.0).abs() < 1e-9);
+    }
+}

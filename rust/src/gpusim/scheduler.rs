@@ -1,0 +1,489 @@
+//! Event-driven scheduler: replays a [`Trace`] against a [`DeviceParams`]
+//! model, producing a [`Timeline`].
+//!
+//! Semantics reproduced from CUDA (paper §4.5–§4.6, §5.4–§5.5):
+//! * `cudaMalloc` blocks the **host** only — already-launched kernels keep
+//!   executing (the overlap OpSparse exploits).
+//! * `cudaFree` implicitly synchronizes the whole device before returning
+//!   (the nsparse load-imbalance bug).
+//! * Kernels in one stream serialize; kernels in different streams run
+//!   concurrently, competing for SMs.
+//! * Thread blocks dispatch to SMs in kernel **launch order** ("the thread
+//!   blocks in the earlier launched kernel still execute earlier than or
+//!   concurrently with the thread blocks in the later launched kernels",
+//!   §5.5), subject to per-SM thread/shared-memory/block-slot limits.
+
+use super::cost::KernelCost;
+use super::device::DeviceParams;
+use super::timeline::{HostSpan, KernelSpan, Timeline};
+use super::trace::{Trace, TraceOp};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Ordered float for the event heap.
+#[derive(PartialEq, PartialOrd)]
+struct F(f64);
+impl Eq for F {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for F {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+struct SmState {
+    free_threads: usize,
+    free_shared: usize,
+    free_slots: usize,
+    busy_until: f64,
+    busy_ns: f64,
+}
+
+struct PendingKernel {
+    /// Index into the timeline's kernel span list.
+    span_idx: usize,
+    stream: usize,
+    tb_size: usize,
+    shared_bytes: usize,
+    /// Earliest device time this kernel may start (host launch + latency).
+    ready: f64,
+    /// Per-block durations (ns), precomputed.
+    block_ns: Vec<f64>,
+    next_block: usize,
+    blocks_done: usize,
+    started: bool,
+}
+
+impl PendingKernel {
+    fn finished(&self) -> bool {
+        self.blocks_done == self.block_ns.len()
+    }
+}
+
+/// Device simulator covering the window between two host-device syncs.
+struct DeviceSim<'d> {
+    dev: &'d DeviceParams,
+    sms: Vec<SmState>,
+    kernels: Vec<PendingKernel>,
+    /// (end_time, sm, kernel_idx, threads, shared) for resident blocks.
+    completions: BinaryHeap<Reverse<(F, usize, usize, usize, usize)>>,
+    /// Completion time of the last kernel per stream (for stream ordering).
+    stream_done: Vec<f64>,
+    now: f64,
+}
+
+impl<'d> DeviceSim<'d> {
+    fn new(dev: &'d DeviceParams) -> Self {
+        let sms = (0..dev.sms)
+            .map(|_| SmState {
+                free_threads: dev.max_threads_per_sm,
+                free_shared: dev.shared_per_sm,
+                free_slots: dev.max_blocks_per_sm,
+                busy_until: 0.0,
+                busy_ns: 0.0,
+            })
+            .collect();
+        DeviceSim {
+            dev,
+            sms,
+            kernels: Vec::new(),
+            completions: BinaryHeap::new(),
+            stream_done: Vec::new(),
+            now: 0.0,
+        }
+    }
+
+    fn queue(&mut self, k: PendingKernel) {
+        if k.stream >= self.stream_done.len() {
+            self.stream_done.resize(k.stream + 1, 0.0);
+        }
+        self.kernels.push(k);
+    }
+
+    /// A kernel may dispatch once launched (ready) and all earlier kernels
+    /// on its stream have fully completed.
+    fn kernel_eligible(&self, idx: usize) -> bool {
+        let k = &self.kernels[idx];
+        if k.ready > self.now + 1e-9 || k.finished() || k.next_block >= k.block_ns.len() {
+            return false;
+        }
+        // stream ordering: all earlier kernels in the same stream done
+        for e in &self.kernels[..idx] {
+            if e.stream == k.stream && !e.finished() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Dispatch as many blocks as possible at the current time.
+    fn dispatch(&mut self, spans: &mut [KernelSpan]) {
+        loop {
+            let mut dispatched = false;
+            for ki in 0..self.kernels.len() {
+                if !self.kernel_eligible(ki) {
+                    continue;
+                }
+                let (tb, sh) = (self.kernels[ki].tb_size, self.kernels[ki].shared_bytes);
+                // fill SMs round-robin while blocks remain
+                for si in 0..self.sms.len() {
+                    let k = &mut self.kernels[ki];
+                    if k.next_block >= k.block_ns.len() {
+                        break;
+                    }
+                    let sm = &mut self.sms[si];
+                    if sm.free_threads >= tb && sm.free_shared >= sh && sm.free_slots >= 1 {
+                        let dur = k.block_ns[k.next_block];
+                        k.next_block += 1;
+                        if !k.started {
+                            k.started = true;
+                            spans[k.span_idx].start = self.now;
+                        }
+                        sm.free_threads -= tb;
+                        sm.free_shared -= sh;
+                        sm.free_slots -= 1;
+                        let end = self.now + dur;
+                        sm.busy_ns += dur;
+                        if end > sm.busy_until {
+                            sm.busy_until = end;
+                        }
+                        self.completions.push(Reverse((F(end), si, ki, tb, sh)));
+                        dispatched = true;
+                    }
+                }
+            }
+            if !dispatched {
+                break;
+            }
+        }
+    }
+
+    /// Earliest future ready-time among kernels that still have blocks to
+    /// dispatch.
+    fn next_ready_after_now(&self) -> f64 {
+        self.kernels
+            .iter()
+            .filter(|k| !k.finished() && k.next_block < k.block_ns.len())
+            .map(|k| k.ready)
+            .filter(|&r| r > self.now + 1e-9)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Advance the simulation until all queued kernels complete; returns
+    /// the device-idle time.
+    fn run_to_idle(&mut self, spans: &mut [KernelSpan]) -> f64 {
+        loop {
+            self.dispatch(spans);
+            // a kernel may become ready (launch latency) before the next
+            // block completion — advance to that instant and re-dispatch
+            let next_ready = self.next_ready_after_now();
+            let next_completion = self
+                .completions
+                .peek()
+                .map(|Reverse((F(t), _, _, _, _))| *t)
+                .unwrap_or(f64::INFINITY);
+            if next_ready < next_completion {
+                self.now = next_ready;
+                continue;
+            }
+            match self.completions.pop() {
+                Some(Reverse((F(t), si, ki, tb, sh))) => {
+                    self.now = self.now.max(t);
+                    let sm = &mut self.sms[si];
+                    sm.free_threads += tb;
+                    sm.free_shared += sh;
+                    sm.free_slots += 1;
+                    let k = &mut self.kernels[ki];
+                    k.blocks_done += 1;
+                    if k.finished() {
+                        spans[k.span_idx].end = self.now;
+                        let s = k.stream;
+                        if self.now > self.stream_done[s] {
+                            self.stream_done[s] = self.now;
+                        }
+                    }
+                }
+                None => {
+                    if self.kernels.iter().all(|k| k.finished()) {
+                        break;
+                    }
+                    // no in-flight blocks and nothing dispatchable: if some
+                    // kernel is still pending its ready time, loop advances
+                    // `now`; otherwise we are deadlocked (bug).
+                    let pending: Vec<_> = self
+                        .kernels
+                        .iter()
+                        .filter(|k| !k.finished())
+                        .map(|k| k.ready)
+                        .collect();
+                    let next = pending.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+                    assert!(
+                        next.is_finite() && next > self.now,
+                        "device simulator deadlock: pending kernels cannot start"
+                    );
+                    self.now = next;
+                }
+            }
+        }
+        self.now
+    }
+}
+
+/// Simulate a trace on the device model, returning the full timeline.
+pub fn simulate(trace: &Trace, dev: &DeviceParams) -> Timeline {
+    let mut tl = Timeline::default();
+    let mut host = 0.0f64;
+    let mut sim = DeviceSim::new(dev);
+    // device time of the last completed sync window
+    let mut device_base = 0.0f64;
+
+    let sync_device = |sim: &mut DeviceSim,
+                           tl: &mut Timeline,
+                           host: f64,
+                           device_base: &mut f64| {
+        if sim.kernels.is_empty() {
+            return host.max(*device_base);
+        }
+        // kernels become ready at absolute times; the sim runs in absolute ns
+        sim.now = sim.now.max(*device_base);
+        let idle = sim.run_to_idle(&mut tl.kernels);
+        for (i, sm) in sim.sms.iter().enumerate() {
+            if tl.sm_busy_ns.len() <= i {
+                tl.sm_busy_ns.resize(i + 1, 0.0);
+            }
+            tl.sm_busy_ns[i] += sm.busy_ns;
+        }
+        *device_base = idle;
+        *sim = DeviceSim::new(sim.dev);
+        host.max(idle)
+    };
+
+    for op in &trace.ops {
+        match op {
+            TraceOp::Malloc { bytes, label, step } => {
+                // host busy; device keeps running (no interaction needed:
+                // queued kernels' ready times are already fixed)
+                let d = dev.malloc_ns(*bytes);
+                tl.host.push(HostSpan {
+                    what: format!("cudaMalloc({label}, {bytes}B)"),
+                    step,
+                    start: host,
+                    end: host + d,
+                });
+                host += d;
+            }
+            TraceOp::Launch(k) => {
+                let cost = KernelCost::of(k, dev);
+                let block_ns: Vec<f64> =
+                    k.blocks.iter().map(|w| cost.block_ns(w, dev)).collect();
+                tl.host.push(HostSpan {
+                    what: format!("launch {}", k.name),
+                    step: k.step,
+                    start: host,
+                    end: host + dev.launch_overhead_ns,
+                });
+                host += dev.launch_overhead_ns;
+                let span_idx = tl.kernels.len();
+                tl.kernels.push(KernelSpan {
+                    name: k.name.clone(),
+                    step: k.step,
+                    stream: k.stream,
+                    start: f64::NAN,
+                    end: f64::NAN,
+                    blocks: k.blocks.len(),
+                    occupancy: cost.occupancy,
+                });
+                sim.queue(PendingKernel {
+                    span_idx,
+                    stream: k.stream,
+                    tb_size: k.tb_size,
+                    shared_bytes: k.shared_bytes,
+                    ready: host + dev.launch_latency_ns,
+                    block_ns,
+                    next_block: 0,
+                    blocks_done: 0,
+                    started: false,
+                });
+            }
+            TraceOp::Free { label, step } => {
+                // implicit cudaDeviceSynchronize
+                host = sync_device(&mut sim, &mut tl, host, &mut device_base);
+                tl.host.push(HostSpan {
+                    what: format!("cudaFree({label})"),
+                    step,
+                    start: host,
+                    end: host + dev.free_base_ns,
+                });
+                host += dev.free_base_ns;
+            }
+            TraceOp::DeviceSync { step } => {
+                let t0 = host;
+                host = sync_device(&mut sim, &mut tl, host, &mut device_base);
+                tl.host.push(HostSpan {
+                    what: "cudaDeviceSynchronize".into(),
+                    step,
+                    start: t0,
+                    end: host,
+                });
+            }
+            TraceOp::MemcpyD2H { bytes, step } => {
+                // synchronous copy: waits for the device
+                host = sync_device(&mut sim, &mut tl, host, &mut device_base);
+                let d = dev.memcpy_ns(*bytes);
+                tl.host.push(HostSpan {
+                    what: format!("memcpyD2H({bytes}B)"),
+                    step,
+                    start: host,
+                    end: host + d,
+                });
+                host += d;
+            }
+        }
+    }
+    // final drain
+    host = sync_device(&mut sim, &mut tl, host, &mut device_base);
+    tl.total_ns = host.max(device_base);
+    tl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::V100;
+    use crate::gpusim::trace::{BlockWork, Kernel, Trace};
+
+    fn kernel(name: &str, stream: usize, nblocks: usize, bytes: u64) -> Kernel {
+        Kernel {
+            name: name.into(),
+            step: "symbolic",
+            stream,
+            tb_size: 256,
+            shared_bytes: 8 * 1024,
+            blocks: vec![BlockWork { global_bytes: bytes, ..Default::default() }; nblocks],
+        }
+    }
+
+    #[test]
+    fn single_kernel_runs() {
+        let mut t = Trace::new();
+        t.launch(kernel("k1", 0, 100, 10_000));
+        let tl = simulate(&t, &V100);
+        assert_eq!(tl.kernels.len(), 1);
+        assert!(tl.kernels[0].end > tl.kernels[0].start);
+        assert!(tl.total_ns > 0.0);
+    }
+
+    #[test]
+    fn same_stream_serializes_different_streams_overlap() {
+        // 300 + 300 blocks, residency 8/SM over 80 SMs = 640 slots:
+        // parallel streams fit in one wave, one stream needs two.
+        let mk = |s1, s2| {
+            let mut t = Trace::new();
+            t.launch(kernel("a", s1, 300, 100_000));
+            t.launch(kernel("b", s2, 300, 100_000));
+            simulate(&t, &V100)
+        };
+        let serial = mk(0, 0);
+        let parallel = mk(0, 1);
+        // same stream: b starts after a ends
+        assert!(serial.kernels[1].start >= serial.kernels[0].end - 1.0);
+        // different streams with few blocks each: overlap
+        assert!(
+            parallel.total_ns < serial.total_ns * 0.95,
+            "streams should overlap: {} vs {}",
+            parallel.total_ns,
+            serial.total_ns
+        );
+    }
+
+    #[test]
+    fn malloc_overlaps_running_kernel() {
+        // launch-then-malloc must beat malloc-then-launch (§5.4): the
+        // kernel (several ms) fully hides a 4MB malloc (~0.3ms)
+        let malloc_bytes = 4 * 1024 * 1024;
+        let mut overlap = Trace::new();
+        overlap.launch(kernel("k", 0, 2000, 2_000_000));
+        overlap.malloc(malloc_bytes, "table", "numeric");
+        let mut serial = Trace::new();
+        serial.malloc(malloc_bytes, "table", "numeric");
+        serial.launch(kernel("k", 0, 2000, 2_000_000));
+        let t_overlap = simulate(&overlap, &V100).total_ns;
+        let t_serial = simulate(&serial, &V100).total_ns;
+        assert!(
+            t_overlap < t_serial - V100.malloc_ns(malloc_bytes) * 0.5,
+            "malloc should hide behind the kernel: overlap={t_overlap} serial={t_serial}"
+        );
+    }
+
+    #[test]
+    fn free_synchronizes_device() {
+        // free between two launches forces serialization even on
+        // different streams (the nsparse §4.6 bug)
+        let mut with_free = Trace::new();
+        with_free.launch(kernel("a", 0, 300, 100_000));
+        with_free.free("tmp", "symbolic");
+        with_free.launch(kernel("b", 1, 300, 100_000));
+        let mut without = Trace::new();
+        without.launch(kernel("a", 0, 300, 100_000));
+        without.launch(kernel("b", 1, 300, 100_000));
+        without.free("tmp", "symbolic");
+        let t_with = simulate(&with_free, &V100);
+        let t_without = simulate(&without, &V100);
+        assert!(
+            t_without.total_ns < t_with.total_ns * 0.95,
+            "deferred free should win: {} vs {}",
+            t_without.total_ns,
+            t_with.total_ns
+        );
+        // with the eager free, kernel b cannot overlap kernel a
+        assert!(t_with.kernels[1].start >= t_with.kernels[0].end - 1.0);
+    }
+
+    #[test]
+    fn giant_block_dominates_one_sm_while_others_finish() {
+        // one kernel with 1 huge block + one with many small blocks:
+        // total should be ~max(huge, rest), not the sum (§6.3.4)
+        let mut t = Trace::new();
+        let huge = Kernel {
+            name: "giant".into(),
+            step: "numeric",
+            stream: 0,
+            tb_size: 1024,
+            shared_bytes: 4,
+            blocks: vec![BlockWork { global_bytes: 50_000_000, ..Default::default() }],
+        };
+        t.launch(huge);
+        t.launch(kernel("rest", 1, 5000, 100_000));
+        let tl = simulate(&t, &V100);
+        let giant_span = tl.kernels[0].end - tl.kernels[0].start;
+        assert!(
+            tl.total_ns < giant_span * 1.3,
+            "small blocks should hide behind the giant: total={} giant={giant_span}",
+            tl.total_ns
+        );
+    }
+
+    #[test]
+    fn sm_accounting_no_oversubscription() {
+        let mut t = Trace::new();
+        t.launch(kernel("a", 0, 10_000, 50_000));
+        let tl = simulate(&t, &V100);
+        // per-SM work time cannot exceed total wall time x residency
+        // (8 blocks of this kernel co-reside per SM)
+        for &b in &tl.sm_busy_ns {
+            assert!(b <= tl.total_ns * 8.0 + 1.0, "sm busy {b} vs total {}", tl.total_ns);
+        }
+        let busy: f64 = tl.sm_busy_ns.iter().sum();
+        assert!(busy > 0.0);
+    }
+
+    #[test]
+    fn launch_order_priority() {
+        // two kernels on different streams; first-launched starts first
+        let mut t = Trace::new();
+        t.launch(kernel("first", 0, 50_000, 10_000));
+        t.launch(kernel("second", 1, 10, 10_000));
+        let tl = simulate(&t, &V100);
+        assert!(tl.kernels[0].start <= tl.kernels[1].start + 1.0);
+    }
+}

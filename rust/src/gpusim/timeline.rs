@@ -1,0 +1,218 @@
+//! Simulation output: kernel/host spans, per-step wall-time attribution,
+//! SM load statistics, and a text Gantt renderer for the case-study
+//! example (`examples/sim_timeline.rs`).
+
+use crate::util::fmt;
+
+/// A kernel's device execution span.
+#[derive(Clone, Debug)]
+pub struct KernelSpan {
+    pub name: String,
+    pub step: &'static str,
+    pub stream: usize,
+    pub start: f64,
+    pub end: f64,
+    pub blocks: usize,
+    pub occupancy: f64,
+}
+
+/// A host-side operation span (mallocs, launches, frees, syncs).
+#[derive(Clone, Debug)]
+pub struct HostSpan {
+    pub what: String,
+    pub step: &'static str,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Full simulation result.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub kernels: Vec<KernelSpan>,
+    pub host: Vec<HostSpan>,
+    /// Total busy ns per SM (load-balance metric, §6.3.4).
+    pub sm_busy_ns: Vec<f64>,
+    pub total_ns: f64,
+}
+
+/// Union length of a set of `[start, end)` intervals.
+fn union_ns(mut spans: Vec<(f64, f64)>) -> f64 {
+    spans.retain(|&(s, e)| e > s && s.is_finite() && e.is_finite());
+    spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for (s, e) in spans {
+        match cur {
+            None => cur = Some((s, e)),
+            Some((cs, ce)) => {
+                if s <= ce {
+                    cur = Some((cs, ce.max(e)));
+                } else {
+                    total += ce - cs;
+                    cur = Some((s, e));
+                }
+            }
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+impl Timeline {
+    /// Wall-clock time attributable to a pipeline step: union of the
+    /// step's kernel spans and host spans.
+    pub fn step_ns(&self, step: &str) -> f64 {
+        let mut spans: Vec<(f64, f64)> = self
+            .kernels
+            .iter()
+            .filter(|k| k.step == step)
+            .map(|k| (k.start, k.end))
+            .collect();
+        spans.extend(
+            self.host
+                .iter()
+                .filter(|h| h.step == step)
+                .map(|h| (h.start, h.end)),
+        );
+        union_ns(spans)
+    }
+
+    /// Sum of kernel device durations for a step (ignores overlap; used
+    /// for per-kernel accounting).
+    pub fn step_kernel_sum_ns(&self, step: &str) -> f64 {
+        self.kernels
+            .iter()
+            .filter(|k| k.step == step && k.end.is_finite())
+            .map(|k| k.end - k.start)
+            .sum()
+    }
+
+    /// SM load-balance coefficient: max busy / mean busy (1.0 = perfect).
+    pub fn sm_imbalance(&self) -> f64 {
+        if self.sm_busy_ns.is_empty() {
+            return 1.0;
+        }
+        let max = self.sm_busy_ns.iter().cloned().fold(0.0, f64::max);
+        let mean: f64 =
+            self.sm_busy_ns.iter().sum::<f64>() / self.sm_busy_ns.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// GFLOPS given a FLOP count (the paper's metric: 2·n_prod / time).
+    pub fn gflops(&self, flops: f64) -> f64 {
+        if self.total_ns <= 0.0 {
+            0.0
+        } else {
+            flops / self.total_ns
+        }
+    }
+
+    /// Render a text Gantt chart (width columns), kernels grouped by
+    /// stream, plus host row.
+    pub fn render_gantt(&self, width: usize) -> String {
+        let mut out = String::new();
+        if self.total_ns <= 0.0 {
+            return "empty timeline\n".into();
+        }
+        let scale = width as f64 / self.total_ns;
+        let bar = |s: f64, e: f64, c: char| -> String {
+            let b = (s * scale) as usize;
+            let l = (((e - s) * scale) as usize).max(1);
+            format!("{}{}", " ".repeat(b.min(width)), c.to_string().repeat(l.min(width - b.min(width) + 1)))
+        };
+        out.push_str(&format!(
+            "total {}  (1 col = {})\n",
+            fmt::ns(self.total_ns),
+            fmt::ns(self.total_ns / width as f64)
+        ));
+        out.push_str("HOST  |");
+        let mut host_row = vec![' '; width + 2];
+        for h in &self.host {
+            let b = ((h.start * scale) as usize).min(width);
+            let e = (((h.end) * scale) as usize).min(width + 1);
+            let c = if h.what.starts_with("cudaMalloc") {
+                'M'
+            } else if h.what.starts_with("cudaFree") {
+                'F'
+            } else if h.what.starts_with("launch") {
+                'L'
+            } else {
+                's'
+            };
+            for slot in host_row.iter_mut().take(e.max(b + 1)).skip(b) {
+                *slot = c;
+            }
+        }
+        out.push_str(&host_row.iter().collect::<String>());
+        out.push('\n');
+        for k in &self.kernels {
+            if !k.start.is_finite() {
+                continue;
+            }
+            out.push_str(&format!("s{:02}   |{}  {} [{}] ({} blk, occ {:.0}%)\n",
+                k.stream,
+                bar(k.start, k.end, '█'),
+                k.name,
+                k.step,
+                k.blocks,
+                k.occupancy * 100.0
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_of_overlapping_intervals() {
+        assert_eq!(union_ns(vec![(0.0, 10.0), (5.0, 15.0)]), 15.0);
+        assert_eq!(union_ns(vec![(0.0, 5.0), (10.0, 12.0)]), 7.0);
+        assert_eq!(union_ns(vec![]), 0.0);
+    }
+
+    #[test]
+    fn step_attribution() {
+        let tl = Timeline {
+            kernels: vec![
+                KernelSpan { name: "a".into(), step: "symbolic", stream: 0, start: 0.0, end: 10.0, blocks: 1, occupancy: 1.0 },
+                KernelSpan { name: "b".into(), step: "numeric", stream: 0, start: 10.0, end: 30.0, blocks: 1, occupancy: 1.0 },
+            ],
+            host: vec![],
+            sm_busy_ns: vec![],
+            total_ns: 30.0,
+        };
+        assert_eq!(tl.step_ns("symbolic"), 10.0);
+        assert_eq!(tl.step_ns("numeric"), 20.0);
+        assert_eq!(tl.step_ns("setup"), 0.0);
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let tl = Timeline { sm_busy_ns: vec![10.0, 10.0, 10.0, 10.0], ..Default::default() };
+        assert!((tl.sm_imbalance() - 1.0).abs() < 1e-9);
+        let tl2 = Timeline { sm_busy_ns: vec![40.0, 0.0, 0.0, 0.0], ..Default::default() };
+        assert!((tl2.sm_imbalance() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gantt_renders() {
+        let tl = Timeline {
+            kernels: vec![KernelSpan { name: "k".into(), step: "numeric", stream: 0, start: 0.0, end: 100.0, blocks: 2, occupancy: 0.5 }],
+            host: vec![HostSpan { what: "cudaMalloc(x, 4B)".into(), step: "setup", start: 0.0, end: 50.0 }],
+            sm_busy_ns: vec![],
+            total_ns: 100.0,
+        };
+        let g = tl.render_gantt(40);
+        assert!(g.contains("k [numeric]"));
+        assert!(g.contains('M'));
+    }
+}

@@ -1,0 +1,180 @@
+//! Device-operation traces. A SpGEMM implementation records the exact
+//! sequence of host/device operations it would issue on a CUDA device —
+//! with per-thread-block work counters measured from the real input data —
+//! and the scheduler replays it against the cost model.
+
+/// Per-thread-block work counters, measured (not estimated) while the CPU
+/// executes the same algorithm on the same data.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BlockWork {
+    /// Global-memory bytes read + written by the block.
+    pub global_bytes: u64,
+    /// Shared-memory word accesses (table init + probes + condense).
+    pub shared_accesses: u64,
+    /// Global-memory atomic operations issued by the block.
+    pub global_atomics: u64,
+    /// Integer `%` operations in the probe loop (non-pow2 tables).
+    pub mod_ops: u64,
+    /// Floating-point operations (multiply + add per product).
+    pub flops: u64,
+}
+
+impl BlockWork {
+    pub fn add(&mut self, o: &BlockWork) {
+        self.global_bytes += o.global_bytes;
+        self.shared_accesses += o.shared_accesses;
+        self.global_atomics += o.global_atomics;
+        self.mod_ops += o.mod_ops;
+        self.flops += o.flops;
+    }
+}
+
+/// A kernel launch: configuration + per-block work.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    pub name: String,
+    /// Pipeline step this kernel belongs to (for per-step reporting:
+    /// "setup", "sym_binning", "symbolic", "alloc_c", "num_binning",
+    /// "numeric", "cleanup").
+    pub step: &'static str,
+    /// CUDA stream id; kernels in one stream serialize, different streams
+    /// may run concurrently (§5.5).
+    pub stream: usize,
+    pub tb_size: usize,
+    pub shared_bytes: usize,
+    pub blocks: Vec<BlockWork>,
+}
+
+impl Kernel {
+    pub fn total_work(&self) -> BlockWork {
+        let mut t = BlockWork::default();
+        for b in &self.blocks {
+            t.add(b);
+        }
+        t
+    }
+}
+
+/// One host-issued device operation.
+#[derive(Clone, Debug)]
+pub enum TraceOp {
+    /// `cudaMalloc`: host-blocking, device keeps executing (§4.5).
+    Malloc { bytes: usize, label: String, step: &'static str },
+    /// `cudaFree`: implicit `cudaDeviceSynchronize` then host work (§4.6).
+    Free { label: String, step: &'static str },
+    /// Kernel launch (host overhead, then the kernel queues on its stream).
+    Launch(Kernel),
+    /// Explicit device synchronization.
+    DeviceSync { step: &'static str },
+    /// Small synchronous device-to-host copy (e.g. reading back total nnz).
+    MemcpyD2H { bytes: usize, step: &'static str },
+}
+
+impl TraceOp {
+    pub fn step(&self) -> &'static str {
+        match self {
+            TraceOp::Malloc { step, .. } => step,
+            TraceOp::Free { step, .. } => step,
+            TraceOp::Launch(k) => k.step,
+            TraceOp::DeviceSync { step } => step,
+            TraceOp::MemcpyD2H { step, .. } => step,
+        }
+    }
+}
+
+/// A full device trace for one SpGEMM invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub ops: Vec<TraceOp>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace { ops: Vec::new() }
+    }
+
+    pub fn malloc(&mut self, bytes: usize, label: impl Into<String>, step: &'static str) {
+        self.ops.push(TraceOp::Malloc { bytes, label: label.into(), step });
+    }
+
+    pub fn free(&mut self, label: impl Into<String>, step: &'static str) {
+        self.ops.push(TraceOp::Free { label: label.into(), step });
+    }
+
+    pub fn launch(&mut self, k: Kernel) {
+        self.ops.push(TraceOp::Launch(k));
+    }
+
+    pub fn device_sync(&mut self, step: &'static str) {
+        self.ops.push(TraceOp::DeviceSync { step });
+    }
+
+    pub fn memcpy_d2h(&mut self, bytes: usize, step: &'static str) {
+        self.ops.push(TraceOp::MemcpyD2H { bytes, step });
+    }
+
+    /// Total bytes requested through `cudaMalloc` (metadata accounting,
+    /// §4.4 / §5.3).
+    pub fn malloc_bytes(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                TraceOp::Malloc { bytes, .. } => *bytes,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Number of `cudaMalloc` calls.
+    pub fn malloc_calls(&self) -> usize {
+        self.ops.iter().filter(|op| matches!(op, TraceOp::Malloc { .. })).count()
+    }
+
+    /// Number of kernel launches.
+    pub fn launches(&self) -> usize {
+        self.ops.iter().filter(|op| matches!(op, TraceOp::Launch(_))).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_accounting() {
+        let mut t = Trace::new();
+        t.malloc(1024, "meta", "setup");
+        t.launch(Kernel {
+            name: "k".into(),
+            step: "symbolic",
+            stream: 0,
+            tb_size: 64,
+            shared_bytes: 2052,
+            blocks: vec![BlockWork { global_bytes: 100, ..Default::default() }; 3],
+        });
+        t.malloc(2048, "c_col", "alloc_c");
+        t.free("meta", "cleanup");
+        assert_eq!(t.malloc_bytes(), 3072);
+        assert_eq!(t.malloc_calls(), 2);
+        assert_eq!(t.launches(), 1);
+    }
+
+    #[test]
+    fn kernel_total_work_sums_blocks() {
+        let k = Kernel {
+            name: "k".into(),
+            step: "numeric",
+            stream: 1,
+            tb_size: 128,
+            shared_bytes: 0,
+            blocks: vec![
+                BlockWork { global_bytes: 10, shared_accesses: 5, ..Default::default() },
+                BlockWork { global_bytes: 20, flops: 7, ..Default::default() },
+            ],
+        };
+        let t = k.total_work();
+        assert_eq!(t.global_bytes, 30);
+        assert_eq!(t.shared_accesses, 5);
+        assert_eq!(t.flops, 7);
+    }
+}

@@ -1,0 +1,34 @@
+//! # OpSparse — Sparse General Matrix Multiplication framework
+//!
+//! Reproduction of *"OpSparse: A Highly Optimized Framework for Sparse
+//! General Matrix Multiplication on GPUs"* (Du et al., 2022) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the complete row-wise two-phase SpGEMM pipeline
+//!   with the paper's seven optimizations, three behavioral baselines
+//!   (cuSPARSE/nsparse/spECK-like), a V100 cost-model simulator that
+//!   replays device traces, synthetic generators for the 26-matrix suite,
+//!   a PJRT runtime bridge, and the benchmark harness regenerating every
+//!   table and figure of the paper's evaluation.
+//! * **L2 (python/compile/model.py)** — the numeric-phase dense block
+//!   accumulator as a JAX graph, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/block_matmul.py)** — the Pallas kernel
+//!   behind L2 (TPU adaptation of the shared-memory hash accumulator; see
+//!   DESIGN.md §Hardware-Adaptation).
+
+pub mod apps;
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod gen;
+pub mod gpusim;
+pub mod runtime;
+pub mod sparse;
+pub mod spgemm;
+pub mod util;
+
+/// Convenience alias used by substrate tests that need the gold SpGEMM
+/// without importing the full pipeline machinery.
+pub fn spgemm_reference_for_tests(a: &sparse::Csr, b: &sparse::Csr) -> sparse::Csr {
+    spgemm::reference::spgemm_reference(a, b)
+}

@@ -1,0 +1,352 @@
+//! `opsparse` CLI — the L3 launcher.
+//!
+//! Subcommands:
+//! * `gen --name <matrix> [--scale s] [--out f.mtx]` — emit a suite matrix
+//! * `spgemm --a f.mtx [--b g.mtx] [--lib L] [--verify]` — one multiply
+//! * `suite [--scale s] [--verify]` — all 26 matrices, all libraries
+//! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|all>`
+//! * `serve [--jobs n] [--workers w]` — coordinator demo (job queue)
+//! * `sim-case webbase` — §6.3.4 / §6.3.5 case-study timeline
+//!
+//! Offline build: argument parsing is hand-rolled (no clap in the vendor
+//! set).
+
+use anyhow::{bail, Context, Result};
+use opsparse::baselines::Library;
+use opsparse::bench::{figures, gflops, run_and_simulate, tables};
+use opsparse::coordinator::{Coordinator, Job, Router};
+use opsparse::gen::suite::{entries, suite_entry, SuiteScale};
+use opsparse::gpusim::{simulate, V100};
+use opsparse::sparse::mmio;
+use opsparse::util::fmt;
+use opsparse::util::rng::Rng;
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn scale_of(flags: &HashMap<String, String>) -> SuiteScale {
+    flags
+        .get("scale")
+        .and_then(|s| SuiteScale::parse(s))
+        .unwrap_or(SuiteScale::Small)
+}
+
+fn lib_of(flags: &HashMap<String, String>) -> Result<Library> {
+    match flags.get("lib").map(|s| s.as_str()).unwrap_or("opsparse") {
+        "opsparse" => Ok(Library::OpSparse),
+        "nsparse" => Ok(Library::Nsparse),
+        "speck" => Ok(Library::Speck),
+        "cusparse" => Ok(Library::Cusparse),
+        other => bail!("unknown library {other} (opsparse|nsparse|speck|cusparse)"),
+    }
+}
+
+fn cmd_gen(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags.get("name").context("--name <suite matrix> required")?;
+    let e = suite_entry(name).with_context(|| format!("unknown suite matrix {name}"))?;
+    let a = e.generate(scale_of(flags));
+    let out = flags.get("out").cloned().unwrap_or_else(|| format!("{name}.mtx"));
+    mmio::write_file(&a, &out)?;
+    println!("wrote {out}: {}x{} nnz {}", a.rows, a.cols, fmt::count(a.nnz()));
+    Ok(())
+}
+
+fn cmd_spgemm(flags: &HashMap<String, String>) -> Result<()> {
+    let a = mmio::read_file(flags.get("a").context("--a <file.mtx> required")?)?;
+    let b = match flags.get("b") {
+        Some(p) => mmio::read_file(p)?,
+        None => a.clone(),
+    };
+    let lib = lib_of(flags)?;
+    let t0 = std::time::Instant::now();
+    let out = lib.run(&a, &b)?;
+    let cpu_ns = t0.elapsed().as_nanos() as f64;
+    let tl = simulate(&out.trace, &V100);
+    println!("{}: C = {}x{} nnz {}", lib.name(), out.c.rows, out.c.cols, fmt::count(out.c.nnz()));
+    println!(
+        "  nprod {}  CR {:.2}",
+        fmt::count(out.nprod),
+        out.nprod as f64 / out.c.nnz().max(1) as f64
+    );
+    println!(
+        "  cpu wall {}  simulated V100 {}  => {:.2} GFLOPS (sim)",
+        fmt::ns(cpu_ns),
+        fmt::ns(tl.total_ns),
+        tl.gflops(out.flops())
+    );
+    if flags.contains_key("verify") {
+        let gold = opsparse::spgemm::reference::spgemm_reference(&a, &b);
+        match out.c.diff(&gold, 1e-9) {
+            None => println!("  verify: OK (matches sort-merge reference)"),
+            Some(d) => bail!("verify FAILED: {d}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_suite(flags: &HashMap<String, String>) -> Result<()> {
+    let scale = scale_of(flags);
+    let verify = flags.contains_key("verify");
+    println!("suite at scale {scale:?} (verify={verify})");
+    println!("{:<18} {:>12} {:>12} {:>12} {:>12}", "matrix", "cuSPARSE", "nsparse", "spECK", "OpSparse");
+    for e in entries() {
+        let a = e.generate(scale);
+        let mut row = format!("{:<18}", e.name);
+        for lib in Library::all() {
+            if e.large && lib == Library::Cusparse {
+                row.push_str(&format!("{:>12}", "OOM"));
+                continue;
+            }
+            let (out, tl) = run_and_simulate(lib, &a, verify)?;
+            row.push_str(&format!("{:>12.2}", gflops(&out, &tl)));
+        }
+        println!("{row}");
+    }
+    Ok(())
+}
+
+fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let scale = scale_of(flags);
+    let verify = flags.contains_key("verify");
+    let which = pos.first().map(|s| s.as_str()).unwrap_or("all");
+    match which {
+        "fig5" => {
+            figures::fig5(scale, verify)?;
+        }
+        "fig6" => {
+            figures::fig6(scale, verify)?;
+        }
+        "fig7_8" => {
+            figures::fig7_8(scale)?;
+        }
+        "fig9" => {
+            figures::fig9(scale)?;
+        }
+        "fig10" => {
+            figures::fig10(scale)?;
+        }
+        "fig11" => {
+            figures::fig11(scale)?;
+        }
+        "tables" => {
+            tables::table1();
+            tables::table2();
+            tables::table4_5();
+            tables::table3(scale)?;
+        }
+        "ablations" => figures::ablations(scale)?,
+        "perf" => {
+            let m = flags.get("matrix").map(|s| s.as_str()).unwrap_or("consph");
+            let reps = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(5);
+            opsparse::bench::perf_l3(m, scale, reps)?;
+        }
+        "all" => {
+            tables::table1();
+            tables::table2();
+            tables::table4_5();
+            tables::table3(scale)?;
+            figures::fig5(scale, verify)?;
+            figures::fig6(scale, verify)?;
+            figures::fig7_8(scale)?;
+            figures::fig9(scale)?;
+            figures::fig10(scale)?;
+            figures::fig11(scale)?;
+            figures::ablations(scale)?;
+        }
+        other => bail!("unknown bench target {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let jobs: usize = flags.get("jobs").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let use_engine = !flags.contains_key("no-engine") && opsparse::runtime::artifacts_available();
+    println!("coordinator: {workers} hash workers, block engine: {use_engine}");
+    let factory: Option<opsparse::coordinator::service::EngineFactory> = if use_engine {
+        Some(Box::new(|| {
+            // P=16: optimal batch for the interpret-mode CPU path (§Perf)
+            opsparse::runtime::BlockEngine::load(
+                &opsparse::runtime::default_artifacts_dir(),
+                16,
+                16,
+            )
+        }))
+    } else {
+        None
+    };
+    let coord = Coordinator::start(workers, Router::default(), factory);
+    // mixed workload: alternating blocky (FEM) and scattered matrices
+    let mut rng = Rng::new(2026);
+    let t0 = std::time::Instant::now();
+    for id in 0..jobs as u64 {
+        let a = if id % 2 == 0 {
+            opsparse::gen::banded::Banded { n: 512, per_row: 32, band: 24, contiguous_frac: 1.0 }
+                .generate(&mut rng)
+        } else {
+            opsparse::gen::uniform::Uniform { n: 1024, per_row: 8, jitter: 4 }.generate(&mut rng)
+        };
+        coord.submit(Job { id, a: a.clone(), b: a, force_route: None });
+    }
+    let mut failed = 0usize;
+    for _ in 0..jobs {
+        let r = coord.recv().context("coordinator hung up")?;
+        if let Err(e) = &r.c {
+            eprintln!("job {} failed: {e:#}", r.id);
+            failed += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = coord.metrics.snapshot();
+    println!("{snap}");
+    println!(
+        "throughput: {:.1} jobs/s, {:.2} Gprod/s",
+        jobs as f64 / wall,
+        snap.nprod_total as f64 / wall / 1e9
+    );
+    coord.shutdown();
+    if failed > 0 {
+        bail!("{failed} jobs failed");
+    }
+    Ok(())
+}
+
+fn cmd_sim_case(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let which = pos.first().map(|s| s.as_str()).unwrap_or("webbase");
+    if which != "webbase" {
+        bail!("only the webbase case study is defined (§6.3.4/§6.3.5)");
+    }
+    let scale = scale_of(flags);
+    let e = suite_entry("webbase-1M").unwrap();
+    let a = e.generate(scale);
+    println!(
+        "webbase-1M stand-in at {scale:?}: {}x{} nnz {} max-row {}",
+        a.rows,
+        a.cols,
+        fmt::count(a.nnz()),
+        a.max_row_nnz()
+    );
+    let (out, tl) = run_and_simulate(Library::OpSparse, &a, false)?;
+    let _ = out;
+    println!("\n-- §6.3.4 SM load balance --");
+    let giant = tl
+        .kernels
+        .iter()
+        .find(|k| k.name == "num_kernel7_global")
+        .map(|k| k.end - k.start)
+        .unwrap_or(0.0);
+    println!("  largest-row (global-table) kernel: {}", fmt::ns(giant));
+    println!("  numeric step wall: {}", fmt::ns(tl.step_ns("numeric")));
+    println!(
+        "  total: {}   SM imbalance (max/mean busy): {:.2}",
+        fmt::ns(tl.total_ns),
+        tl.sm_imbalance()
+    );
+    println!("\n-- §6.3.5 malloc/kernel overlap --");
+    for h in &tl.host {
+        if h.what.starts_with("cudaMalloc(num_global_table") {
+            println!(
+                "  global-table malloc: {} at t={}",
+                fmt::ns(h.end - h.start),
+                fmt::ns(h.start)
+            );
+        }
+    }
+    println!("\n{}", tl.render_gantt(100));
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: opsparse <command> [flags]\n\
+         commands:\n\
+           gen      --name <matrix> [--scale tiny|small|medium] [--out f.mtx]\n\
+           spgemm   --a f.mtx [--b g.mtx] [--lib opsparse|nsparse|speck|cusparse] [--verify]\n\
+           suite    [--scale s] [--verify]\n\
+           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|all> [--scale s]\n\
+           serve    [--jobs n] [--workers w] [--no-engine]\n\
+           sim-case webbase [--scale s]\n\
+           list     (suite matrix names)"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let cmd = args[0].clone();
+    let (pos, flags) = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "gen" => cmd_gen(&flags),
+        "spgemm" => cmd_spgemm(&flags),
+        "suite" => cmd_suite(&flags),
+        "bench" => cmd_bench(&pos, &flags),
+        "serve" => cmd_serve(&flags),
+        "sim-case" => cmd_sim_case(&pos, &flags),
+        "apps" => {
+            // the §1 motivating applications (see examples/applications.rs
+            // for the full demo)
+            match pos.first().map(|s| s.as_str()).unwrap_or("amg") {
+                "amg" => {
+                    let side: usize =
+                        flags.get("side").map(|s| s.parse()).transpose()?.unwrap_or(64);
+                    let a = opsparse::apps::amg::poisson2d(side);
+                    let h = opsparse::apps::amg::AmgHierarchy::build(&a, 0.1, 64, 10)?;
+                    let b = vec![1.0; a.rows];
+                    let (_, iters, rel) = h.solve(&b, 1e-10, 60);
+                    println!(
+                        "amg: {} levels, {} setup products, {iters} V-cycles, rel residual {rel:.2e}",
+                        h.levels.len(),
+                        fmt::count(h.setup_spgemm_products)
+                    );
+                }
+                "bfs" => {
+                    let g = opsparse::gen::kron::Kron::default()
+                        .generate(&mut Rng::new(3));
+                    let res = opsparse::apps::msbfs::msbfs(&g, &[0, 1, 2, 3]);
+                    println!(
+                        "msbfs: {} vertices, {} rounds, source0 reaches {}",
+                        g.rows,
+                        res.iterations,
+                        res.levels[0].iter().filter(|&&l| l != u32::MAX).count()
+                    );
+                }
+                other => bail!("unknown app {other} (amg|bfs)"),
+            }
+            Ok(())
+        }
+        "list" => {
+            for e in entries() {
+                println!(
+                    "{:<18} {} ({})",
+                    e.name,
+                    e.class,
+                    if e.large { "large" } else { "normal" }
+                );
+            }
+            Ok(())
+        }
+        _ => usage(),
+    }
+}

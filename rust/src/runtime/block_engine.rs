@@ -1,0 +1,183 @@
+//! BSR block engine: the accelerator numeric path (DESIGN.md
+//! §Hardware-Adaptation).
+//!
+//! The symbolic phase — which block pairs meet, and the output block
+//! structure — runs in Rust using the same hash accumulator the paper's
+//! GPU kernels use (over block column indices). The numeric phase batches
+//! the block pairs through the AOT-compiled Pallas `block_pair_matmul`
+//! kernel (fixed batch `P`, block size `T`, zero-padded tail) and
+//! scatter-accumulates the products into the output BSR blocks — the Rust
+//! analog of the paper's fixed hash-table-size binning.
+
+use super::client::PjrtRuntime;
+use crate::sparse::{Bsr, Csr};
+use crate::spgemm::hash_table::HashAccumulator;
+use crate::spgemm::HashVariant;
+use anyhow::{anyhow, ensure, Result};
+use std::path::PathBuf;
+
+/// One block-pair product task: `C[c_idx] += A[a_idx] @ B[b_idx]`.
+#[derive(Clone, Copy, Debug)]
+struct PairTask {
+    a_idx: usize,
+    b_idx: usize,
+    c_idx: usize,
+}
+
+/// Execution statistics of one BSR multiply.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BlockEngineStats {
+    pub pairs: usize,
+    pub batches: usize,
+    pub padded_pairs: usize,
+    pub c_blocks: usize,
+}
+
+/// PJRT-backed BSR SpGEMM engine for one compiled `(P, T)` variant.
+pub struct BlockEngine {
+    runtime: PjrtRuntime,
+    artifact: PathBuf,
+    /// Compiled batch size.
+    pub p: usize,
+    /// Compiled block size.
+    pub t: usize,
+    pub stats: BlockEngineStats,
+}
+
+impl BlockEngine {
+    /// Load the `block_matmul_p{P}_t{T}_f64` artifact from `dir`.
+    pub fn load(dir: &std::path::Path, p: usize, t: usize) -> Result<Self> {
+        let artifact = dir.join(format!("block_matmul_p{p}_t{t}_f64.hlo.txt"));
+        ensure!(
+            artifact.exists(),
+            "artifact {} not found — run `make artifacts`",
+            artifact.display()
+        );
+        let mut runtime = PjrtRuntime::cpu()?;
+        runtime.load(&artifact)?;
+        Ok(BlockEngine { runtime, artifact, p, t, stats: BlockEngineStats::default() })
+    }
+
+    /// Symbolic phase on the block structure: output block rows + the
+    /// pair task list. Uses the paper's hash accumulator over block
+    /// column indices.
+    fn symbolic(&self, a: &Bsr, b: &Bsr) -> (Vec<usize>, Vec<u32>, Vec<PairTask>) {
+        let mut c_rpt = vec![0usize; a.brows + 1];
+        let mut c_bcol: Vec<u32> = Vec::new();
+        let mut tasks: Vec<PairTask> = Vec::new();
+        // per-block-row map from b block col -> c block index
+        let t_size = (b.bcols.max(16)).next_power_of_two();
+        let mut table = HashAccumulator::new(t_size, HashVariant::SingleAccess);
+        let mut local: Vec<i64> = vec![-1; b.bcols];
+        let mut touched: Vec<u32> = Vec::new();
+        for i in 0..a.brows {
+            table.reset();
+            touched.clear();
+            let row_begin = c_bcol.len();
+            for ai in a.rpt[i]..a.rpt[i + 1] {
+                let k = a.bcol[ai] as usize;
+                for bi in b.rpt[k]..b.rpt[k + 1] {
+                    let j = b.bcol[bi] as usize;
+                    let c_idx = if local[j] < 0 {
+                        // the hash insert mirrors the GPU symbolic probe
+                        let _ = table.insert_symbolic(j as u32);
+                        let idx = c_bcol.len();
+                        local[j] = idx as i64;
+                        c_bcol.push(j as u32);
+                        touched.push(j as u32);
+                        idx
+                    } else {
+                        local[j] as usize
+                    };
+                    tasks.push(PairTask { a_idx: ai, b_idx: bi, c_idx });
+                }
+            }
+            // sort block row by column; remap pending tasks
+            let n_in_row = c_bcol.len() - row_begin;
+            if n_in_row > 1 {
+                let mut order: Vec<usize> = (0..n_in_row).collect();
+                order.sort_unstable_by_key(|&x| c_bcol[row_begin + x]);
+                let old: Vec<u32> = c_bcol[row_begin..].to_vec();
+                let mut remap = vec![0usize; n_in_row];
+                for (new_pos, &old_pos) in order.iter().enumerate() {
+                    c_bcol[row_begin + new_pos] = old[old_pos];
+                    remap[old_pos] = new_pos;
+                }
+                for t in tasks.iter_mut().rev() {
+                    if t.c_idx < row_begin {
+                        break;
+                    }
+                    t.c_idx = row_begin + remap[t.c_idx - row_begin];
+                }
+            }
+            for &j in &touched {
+                local[j as usize] = -1;
+            }
+            c_rpt[i + 1] = c_bcol.len();
+        }
+        (c_rpt, c_bcol, tasks)
+    }
+
+    /// `C = A * B` over BSR operands (must share this engine's block size).
+    pub fn spgemm_bsr(&mut self, a: &Bsr, b: &Bsr) -> Result<Bsr> {
+        ensure!(a.t == self.t && b.t == self.t, "block size mismatch");
+        ensure!(a.cols == b.rows, "dimension mismatch");
+        let tt = self.t * self.t;
+        let (c_rpt, c_bcol, tasks) = self.symbolic(a, b);
+        let mut c_blocks = vec![0f64; c_bcol.len() * tt];
+
+        // numeric phase: batches of P pairs through the PJRT kernel
+        let mut a_batch = vec![0f64; self.p * tt];
+        let mut b_batch = vec![0f64; self.p * tt];
+        self.stats = BlockEngineStats {
+            pairs: tasks.len(),
+            batches: 0,
+            padded_pairs: 0,
+            c_blocks: c_bcol.len(),
+        };
+        for chunk in tasks.chunks(self.p) {
+            a_batch.fill(0.0);
+            b_batch.fill(0.0);
+            for (s, task) in chunk.iter().enumerate() {
+                a_batch[s * tt..(s + 1) * tt].copy_from_slice(a.block(task.a_idx));
+                b_batch[s * tt..(s + 1) * tt].copy_from_slice(b.block(task.b_idx));
+            }
+            let dims = [self.p, self.t, self.t];
+            let out = self
+                .runtime
+                .execute_f64(&self.artifact, &[(&a_batch, &dims), (&b_batch, &dims)])
+                .map_err(|e| anyhow!("block engine batch failed: {e:?}"))?;
+            ensure!(out.len() == self.p * tt, "unexpected output size {}", out.len());
+            for (s, task) in chunk.iter().enumerate() {
+                let dst = &mut c_blocks[task.c_idx * tt..(task.c_idx + 1) * tt];
+                let src = &out[s * tt..(s + 1) * tt];
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d += v;
+                }
+            }
+            self.stats.batches += 1;
+            self.stats.padded_pairs += self.p - chunk.len();
+        }
+
+        Ok(Bsr {
+            t: self.t,
+            brows: a.brows,
+            bcols: b.bcols,
+            rows: a.rows,
+            cols: b.cols,
+            rpt: c_rpt,
+            bcol: c_bcol,
+            blocks: c_blocks,
+        })
+    }
+
+    /// Convenience: CSR in, CSR out (convert, multiply, convert back).
+    pub fn spgemm_csr(&mut self, a: &Csr, b: &Csr) -> Result<Csr> {
+        let ab = Bsr::from_csr(a, self.t)?;
+        let bb = Bsr::from_csr(b, self.t)?;
+        self.spgemm_bsr(&ab, &bb)?.to_csr()
+    }
+}
+
+// NOTE: PJRT integration tests live in rust/tests/integration_runtime.rs —
+// they require `make artifacts` to have run.

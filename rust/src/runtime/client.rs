@@ -1,0 +1,85 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
+//! compile once, cache the executable, execute with f64 buffers.
+//!
+//! Interchange is HLO *text* — the crate's xla_extension 0.5.1 rejects
+//! serialized protos from jax >= 0.5 (64-bit instruction ids); the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! python/compile/aot.py).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A PJRT CPU client plus a cache of compiled executables keyed by
+/// artifact path.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client, exes: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached by path).
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        let key = path.to_string_lossy().to_string();
+        if self.exes.contains_key(&key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        self.exes.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact on f64 inputs.
+    ///
+    /// `inputs`: `(data, dims)` pairs; the computation was lowered with
+    /// `return_tuple=True`, so the single tuple output is unwrapped and
+    /// returned as a flat f64 vector.
+    pub fn execute_f64(
+        &mut self,
+        path: &Path,
+        inputs: &[(&[f64], &[usize])],
+    ) -> Result<Vec<f64>> {
+        self.load(path)?;
+        let key = path.to_string_lossy().to_string();
+        let exe = self.exes.get(&key).expect("just loaded");
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f64>().map_err(|e| anyhow!("to_vec<f64>: {e:?}"))
+    }
+
+    /// Number of compiled executables in the cache.
+    pub fn cached(&self) -> usize {
+        self.exes.len()
+    }
+}

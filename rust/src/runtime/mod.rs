@@ -1,0 +1,29 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Python never runs at request time — the artifacts are self-contained
+//! HLO text, compiled once per process by the PJRT CPU client.
+
+pub mod block_engine;
+pub mod client;
+pub mod row_engine;
+
+pub use block_engine::BlockEngine;
+pub use client::PjrtRuntime;
+pub use row_engine::RowWindowEngine;
+
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory (workspace-relative).
+pub fn default_artifacts_dir() -> PathBuf {
+    // prefer CWD/artifacts; fall back to the crate root
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,146 @@
+//! Row-window engine: the dense-accumulator path backed by the
+//! `row_window_accumulate` Pallas kernel (see
+//! `python/compile/kernels/block_matmul.py`).
+//!
+//! For a row `i` of `C = A·B` whose nonzero fanout fits the compiled `K`
+//! and whose B-row column union fits a `W`-wide window, the numeric phase
+//! is a dense `(1,K)×(K,W)` contraction — the VMEM accumulator tile
+//! standing in for the GPU shared-memory hash table. The engine gathers
+//! the window operands, batches `R` rows per PJRT call (zero-padded), and
+//! compacts the dense outputs back to sparse rows.
+
+use super::client::PjrtRuntime;
+use crate::sparse::Csr;
+use anyhow::{ensure, Result};
+use std::path::PathBuf;
+
+/// One computed row: `(row id, sorted (col, val) nonzeros)`.
+pub type RowResult = (u32, Vec<(u32, f64)>);
+
+/// Engine statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RowEngineStats {
+    pub rows: usize,
+    pub batches: usize,
+    pub skipped: usize,
+}
+
+/// PJRT-backed dense-window row engine for one compiled `(R, K, W)`.
+pub struct RowWindowEngine {
+    runtime: PjrtRuntime,
+    artifact: PathBuf,
+    pub r: usize,
+    pub k: usize,
+    pub w: usize,
+    pub stats: RowEngineStats,
+}
+
+impl RowWindowEngine {
+    /// Load the `row_window_r{R}_k{K}_w{W}_f64` artifact from `dir`.
+    pub fn load(dir: &std::path::Path, r: usize, k: usize, w: usize) -> Result<Self> {
+        let artifact = dir.join(format!("row_window_r{r}_k{k}_w{w}_f64.hlo.txt"));
+        ensure!(
+            artifact.exists(),
+            "artifact {} not found — run `make artifacts`",
+            artifact.display()
+        );
+        let mut runtime = PjrtRuntime::cpu()?;
+        runtime.load(&artifact)?;
+        Ok(RowWindowEngine { runtime, artifact, r, k, w, stats: RowEngineStats::default() })
+    }
+
+    /// True if row `i` of `A·B` fits this engine: `nnz(A_i) <= K` and the
+    /// union of the referenced B rows' columns spans `< W`.
+    pub fn row_fits(&self, a: &Csr, b: &Csr, i: usize) -> bool {
+        let acols = a.row_cols(i);
+        if acols.len() > self.k || acols.is_empty() {
+            return false;
+        }
+        let mut lo = u32::MAX;
+        let mut hi = 0u32;
+        for &kk in acols {
+            let bc = b.row_cols(kk as usize);
+            if let (Some(&first), Some(&last)) = (bc.first(), bc.last()) {
+                lo = lo.min(first);
+                hi = hi.max(last);
+            }
+        }
+        lo == u32::MAX || (hi - lo) < self.w as u32
+    }
+
+    /// Compute the given rows of `C = A·B`. Rows that don't fit the
+    /// compiled shape are returned in the second list for the hash path.
+    pub fn compute_rows(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        rows: &[u32],
+    ) -> Result<(Vec<RowResult>, Vec<u32>)> {
+        ensure!(a.cols == b.rows, "dimension mismatch");
+        let (r_cap, k_cap, w_cap) = (self.r, self.k, self.w);
+        let mut fit: Vec<u32> = Vec::new();
+        let mut overflow: Vec<u32> = Vec::new();
+        for &i in rows {
+            if self.row_fits(a, b, i as usize) {
+                fit.push(i);
+            } else {
+                overflow.push(i);
+            }
+        }
+        self.stats = RowEngineStats { rows: fit.len(), batches: 0, skipped: overflow.len() };
+
+        let mut results: Vec<RowResult> = Vec::with_capacity(fit.len());
+        let mut a_vals = vec![0f64; r_cap * k_cap];
+        let mut b_rows = vec![0f64; r_cap * k_cap * w_cap];
+        let mut bases = vec![0u32; r_cap];
+        for chunk in fit.chunks(r_cap) {
+            a_vals.fill(0.0);
+            b_rows.fill(0.0);
+            for (s, &row) in chunk.iter().enumerate() {
+                let i = row as usize;
+                let (acols, avals) = a.row(i);
+                // window base = min column over the referenced B rows
+                let mut base = u32::MAX;
+                for &kk in acols {
+                    if let Some(&first) = b.row_cols(kk as usize).first() {
+                        base = base.min(first);
+                    }
+                }
+                if base == u32::MAX {
+                    base = 0;
+                }
+                bases[s] = base;
+                for (slot, (&kk, &av)) in acols.iter().zip(avals).enumerate() {
+                    a_vals[s * k_cap + slot] = av;
+                    let (bc, bv) = b.row(kk as usize);
+                    for (&c, &v) in bc.iter().zip(bv) {
+                        let off = (c - base) as usize;
+                        b_rows[(s * k_cap + slot) * w_cap + off] = v;
+                    }
+                }
+            }
+            let out = self.runtime.execute_f64(
+                &self.artifact,
+                &[(&a_vals, &[r_cap, k_cap]), (&b_rows, &[r_cap, k_cap, w_cap])],
+            )?;
+            ensure!(out.len() == r_cap * w_cap, "unexpected output size");
+            for (s, &row) in chunk.iter().enumerate() {
+                let base = bases[s];
+                let dense = &out[s * w_cap..(s + 1) * w_cap];
+                let mut sparse: Vec<(u32, f64)> = dense
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(off, &v)| (base + off as u32, v))
+                    .collect();
+                sparse.sort_unstable_by_key(|&(c, _)| c);
+                results.push((row, sparse));
+            }
+            self.stats.batches += 1;
+        }
+        Ok((results, overflow))
+    }
+}
+
+// Integration tests live in rust/tests/integration_runtime.rs (require
+// `make artifacts`).

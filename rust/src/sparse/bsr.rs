@@ -1,0 +1,192 @@
+//! Block Sparse Row format — the TPU-adaptation substrate (DESIGN.md
+//! §Hardware-Adaptation). Dense `T×T` blocks let the numeric phase run as
+//! batched MXU matmuls through the PJRT-loaded Pallas kernel instead of a
+//! shared-memory hash scatter, which a TPU does not have.
+
+use super::csr::Csr;
+use anyhow::{ensure, Result};
+
+/// BSR sparse matrix: CSR over block rows/columns with dense `t*t` blocks
+/// stored row-major in `blocks` (one contiguous `t*t` chunk per entry).
+#[derive(Clone, Debug)]
+pub struct Bsr {
+    /// Block size (T).
+    pub t: usize,
+    /// Number of block rows / columns.
+    pub brows: usize,
+    pub bcols: usize,
+    /// Original (unpadded) element dimensions.
+    pub rows: usize,
+    pub cols: usize,
+    pub rpt: Vec<usize>,
+    pub bcol: Vec<u32>,
+    /// Dense block storage: `blocks[k*t*t .. (k+1)*t*t]` is block `k`.
+    pub blocks: Vec<f64>,
+}
+
+impl Bsr {
+    /// Number of stored blocks.
+    pub fn nblocks(&self) -> usize {
+        self.bcol.len()
+    }
+
+    /// Block `k` as a slice of `t*t` row-major values.
+    #[inline]
+    pub fn block(&self, k: usize) -> &[f64] {
+        &self.blocks[k * self.t * self.t..(k + 1) * self.t * self.t]
+    }
+
+    /// Convert a CSR matrix to BSR with block size `t` (zero-padded at the
+    /// right/bottom edges).
+    pub fn from_csr(m: &Csr, t: usize) -> Result<Self> {
+        ensure!(t > 0, "block size must be positive");
+        let brows = m.rows.div_ceil(t);
+        let bcols = m.cols.div_ceil(t);
+        let tt = t * t;
+        let mut rpt = vec![0usize; brows + 1];
+        let mut bcol: Vec<u32> = Vec::new();
+        let mut blocks: Vec<f64> = Vec::new();
+        // map from block column -> position in current block row
+        let mut pos: Vec<i64> = vec![-1; bcols];
+        for br in 0..brows {
+            let row_begin = bcol.len();
+            for r in br * t..((br + 1) * t).min(m.rows) {
+                let (cols, vals) = m.row(r);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    let bc = c as usize / t;
+                    let k = if pos[bc] < 0 {
+                        let k = bcol.len();
+                        pos[bc] = k as i64;
+                        bcol.push(bc as u32);
+                        blocks.resize(blocks.len() + tt, 0.0);
+                        k
+                    } else {
+                        pos[bc] as usize
+                    };
+                    let lr = r - br * t;
+                    let lc = c as usize - bc * t;
+                    blocks[k * tt + lr * t + lc] = v;
+                }
+            }
+            // sort the block row by block column (blocks were appended in
+            // first-touch order)
+            let n_in_row = bcol.len() - row_begin;
+            if n_in_row > 1 {
+                let mut order: Vec<usize> = (0..n_in_row).collect();
+                order.sort_unstable_by_key(|&i| bcol[row_begin + i]);
+                let old_cols: Vec<u32> =
+                    bcol[row_begin..].to_vec();
+                let old_blocks: Vec<f64> =
+                    blocks[row_begin * tt..].to_vec();
+                for (dst, &src) in order.iter().enumerate() {
+                    bcol[row_begin + dst] = old_cols[src];
+                    blocks[(row_begin + dst) * tt..(row_begin + dst + 1) * tt]
+                        .copy_from_slice(&old_blocks[src * tt..(src + 1) * tt]);
+                }
+            }
+            for &c in &bcol[row_begin..] {
+                pos[c as usize] = -1;
+            }
+            rpt[br + 1] = bcol.len();
+        }
+        Ok(Bsr { t, brows, bcols, rows: m.rows, cols: m.cols, rpt, bcol, blocks })
+    }
+
+    /// Convert back to CSR, dropping explicit zeros introduced by padding.
+    pub fn to_csr(&self) -> Result<Csr> {
+        let tt = self.t * self.t;
+        let mut rpt = vec![0usize; self.rows + 1];
+        let mut col: Vec<u32> = Vec::new();
+        let mut val: Vec<f64> = Vec::new();
+        for r in 0..self.rows {
+            let br = r / self.t;
+            let lr = r % self.t;
+            for k in self.rpt[br]..self.rpt[br + 1] {
+                let bc = self.bcol[k] as usize;
+                let b = &self.blocks[k * tt + lr * self.t..k * tt + (lr + 1) * self.t];
+                for (lc, &v) in b.iter().enumerate() {
+                    let c = bc * self.t + lc;
+                    if v != 0.0 && c < self.cols {
+                        col.push(c as u32);
+                        val.push(v);
+                    }
+                }
+            }
+            rpt[r + 1] = col.len();
+        }
+        Csr::from_parts(self.rows, self.cols, rpt, col, val)
+    }
+
+    /// Structural fill ratio: stored nonzero elements / dense block capacity.
+    pub fn fill_ratio(&self) -> f64 {
+        let nz = self.blocks.iter().filter(|&&v| v != 0.0).count();
+        if self.blocks.is_empty() {
+            return 0.0;
+        }
+        nz as f64 / self.blocks.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rows: usize, cols: usize, per_row: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut rpt = vec![0usize];
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        let mut scratch = Vec::new();
+        for _ in 0..rows {
+            let k = rng.range(0, per_row + 1);
+            rng.sample_distinct(cols, k, &mut scratch);
+            for &c in &scratch {
+                col.push(c);
+                val.push(rng.value());
+            }
+            rpt.push(col.len());
+        }
+        Csr::from_parts(rows, cols, rpt, col, val).unwrap()
+    }
+
+    #[test]
+    fn csr_bsr_roundtrip() {
+        for seed in 0..5 {
+            let m = random_csr(37, 29, 6, seed);
+            let b = Bsr::from_csr(&m, 8).unwrap();
+            let back = b.to_csr().unwrap();
+            assert_eq!(m, back, "roundtrip failed for seed {seed}");
+        }
+    }
+
+    #[test]
+    fn block_columns_sorted() {
+        let m = random_csr(64, 64, 10, 99);
+        let b = Bsr::from_csr(&m, 16).unwrap();
+        for br in 0..b.brows {
+            let cols = &b.bcol[b.rpt[br]..b.rpt[br + 1]];
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn exact_division_dims() {
+        let m = random_csr(32, 32, 4, 7);
+        let b = Bsr::from_csr(&m, 8).unwrap();
+        assert_eq!(b.brows, 4);
+        assert_eq!(b.bcols, 4);
+        assert_eq!(b.to_csr().unwrap(), m);
+    }
+
+    #[test]
+    fn fill_ratio_bounds() {
+        let m = random_csr(40, 40, 5, 3);
+        let b = Bsr::from_csr(&m, 8).unwrap();
+        let f = b.fill_ratio();
+        assert!((0.0..=1.0).contains(&f));
+        if m.nnz() > 0 {
+            assert!(f > 0.0);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Coordinate (triplet) format — the natural target of MatrixMarket parsing
+//! and of the synthetic generators; converted to CSR for everything else.
+
+use super::csr::Csr;
+use anyhow::{ensure, Result};
+
+/// COO sparse matrix. Entries may be unsorted and contain duplicates;
+/// duplicates are summed during CSR conversion (MatrixMarket semantics).
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub row: Vec<u32>,
+    pub col: Vec<u32>,
+    pub val: Vec<f64>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo { rows, cols, row: Vec::new(), col: Vec::new(), val: Vec::new() }
+    }
+
+    pub fn with_capacity(rows: usize, cols: usize, cap: usize) -> Self {
+        Coo {
+            rows,
+            cols,
+            row: Vec::with_capacity(cap),
+            col: Vec::with_capacity(cap),
+            val: Vec::with_capacity(cap),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.row.push(r as u32);
+        self.col.push(c as u32);
+        self.val.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.row.len()
+    }
+
+    /// Convert to CSR: counting sort by row, in-row sort by column,
+    /// duplicate coordinates summed.
+    pub fn to_csr(&self) -> Result<Csr> {
+        ensure!(
+            self.row.len() == self.col.len() && self.col.len() == self.val.len(),
+            "COO arrays length mismatch"
+        );
+        let mut counts = vec![0usize; self.rows + 1];
+        for &r in &self.row {
+            ensure!((r as usize) < self.rows, "row index {r} out of bounds");
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..self.rows {
+            counts[i + 1] += counts[i];
+        }
+        let rpt_raw = counts.clone();
+        let mut col = vec![0u32; self.nnz()];
+        let mut val = vec![0f64; self.nnz()];
+        let mut cursor = rpt_raw.clone();
+        for k in 0..self.nnz() {
+            let r = self.row[k] as usize;
+            let p = cursor[r];
+            col[p] = self.col[k];
+            val[p] = self.val[k];
+            cursor[r] += 1;
+        }
+        // sort within each row and merge duplicates
+        let mut out_rpt = vec![0usize; self.rows + 1];
+        let mut out_col = Vec::with_capacity(self.nnz());
+        let mut out_val = Vec::with_capacity(self.nnz());
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for i in 0..self.rows {
+            let (s, e) = (rpt_raw[i], rpt_raw[i + 1]);
+            scratch.clear();
+            scratch.extend(col[s..e].iter().copied().zip(val[s..e].iter().copied()));
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut last: Option<u32> = None;
+            for &(c, v) in scratch.iter() {
+                ensure!((c as usize) < self.cols, "col index {c} out of bounds");
+                if last == Some(c) {
+                    *out_val.last_mut().unwrap() += v;
+                } else {
+                    out_col.push(c);
+                    out_val.push(v);
+                    last = Some(c);
+                }
+            }
+            out_rpt[i + 1] = out_col.len();
+        }
+        Csr::from_parts(self.rows, self.cols, out_rpt, out_col, out_val)
+    }
+}
+
+impl From<&Csr> for Coo {
+    fn from(m: &Csr) -> Self {
+        let mut out = Coo::with_capacity(m.rows, m.cols, m.nnz());
+        for i in 0..m.rows {
+            let (cols, vals) = m.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                out.push(i, c as usize, v);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coo_to_csr_sorts_rows_and_cols() {
+        let mut c = Coo::new(3, 3);
+        c.push(2, 1, 4.0);
+        c.push(0, 2, 2.0);
+        c.push(2, 0, 3.0);
+        c.push(0, 0, 1.0);
+        let m = c.to_csr().unwrap();
+        assert_eq!(m.rpt, vec![0, 2, 2, 4]);
+        assert_eq!(m.col, vec![0, 2, 0, 1]);
+        assert_eq!(m.val, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut c = Coo::new(1, 2);
+        c.push(0, 1, 1.5);
+        c.push(0, 1, 2.5);
+        c.push(0, 0, 1.0);
+        let m = c.to_csr().unwrap();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.val, vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn roundtrip_csr_coo_csr() {
+        let m = Csr::from_parts(2, 4, vec![0, 3, 4], vec![0, 1, 3, 2], vec![1.0, 2.0, 3.0, 4.0])
+            .unwrap();
+        let back = Coo::from(&m).to_csr().unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let c = Coo { rows: 1, cols: 1, row: vec![0], col: vec![3], val: vec![1.0] };
+        assert!(c.to_csr().is_err());
+    }
+}

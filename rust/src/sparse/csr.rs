@@ -1,0 +1,266 @@
+//! Compressed Sparse Row storage (paper §2.1.1, Fig. 1).
+
+use anyhow::{bail, ensure, Result};
+
+/// CSR sparse matrix in double precision.
+///
+/// Invariants (checked by [`Csr::validate`]):
+/// * `rpt.len() == rows + 1`, `rpt[0] == 0`, `rpt` non-decreasing,
+///   `rpt[rows] == col.len() == val.len()`
+/// * within each row, column indices are strictly increasing and `< cols`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointer array (`rpt` in the paper), length `rows + 1`.
+    pub rpt: Vec<usize>,
+    /// Column indices, length nnz.
+    pub col: Vec<u32>,
+    /// Nonzero values, length nnz.
+    pub val: Vec<f64>,
+}
+
+impl Csr {
+    /// An empty `rows x cols` matrix (no nonzeros).
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Csr { rows, cols, rpt: vec![0; rows + 1], col: Vec::new(), val: Vec::new() }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn identity(n: usize) -> Self {
+        Csr {
+            rows: n,
+            cols: n,
+            rpt: (0..=n).collect(),
+            col: (0..n as u32).collect(),
+            val: vec![1.0; n],
+        }
+    }
+
+    /// Build from raw parts, validating the invariants.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        rpt: Vec<usize>,
+        col: Vec<u32>,
+        val: Vec<f64>,
+    ) -> Result<Self> {
+        let m = Csr { rows, cols, rpt, col, val };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Number of nonzeros in row `i`.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.rpt[i + 1] - self.rpt[i]
+    }
+
+    /// Column indices of row `i`.
+    #[inline]
+    pub fn row_cols(&self, i: usize) -> &[u32] {
+        &self.col[self.rpt[i]..self.rpt[i + 1]]
+    }
+
+    /// Values of row `i`.
+    #[inline]
+    pub fn row_vals(&self, i: usize) -> &[f64] {
+        &self.val[self.rpt[i]..self.rpt[i + 1]]
+    }
+
+    /// `(cols, vals)` of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.rpt[i], self.rpt[i + 1]);
+        (&self.col[s..e], &self.val[s..e])
+    }
+
+    /// Check every CSR invariant; returns a descriptive error on violation.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.rpt.len() == self.rows + 1, "rpt length {} != rows+1 {}", self.rpt.len(), self.rows + 1);
+        ensure!(self.rpt[0] == 0, "rpt[0] = {} != 0", self.rpt[0]);
+        ensure!(
+            self.col.len() == self.val.len(),
+            "col/val length mismatch: {} vs {}",
+            self.col.len(),
+            self.val.len()
+        );
+        ensure!(
+            *self.rpt.last().unwrap() == self.col.len(),
+            "rpt[rows] = {} != nnz = {}",
+            self.rpt.last().unwrap(),
+            self.col.len()
+        );
+        for i in 0..self.rows {
+            let (s, e) = (self.rpt[i], self.rpt[i + 1]);
+            if s > e {
+                bail!("rpt decreasing at row {i}: {s} > {e}");
+            }
+            let cols = &self.col[s..e];
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    bail!("row {i}: columns not strictly increasing ({} >= {})", w[0], w[1]);
+                }
+            }
+            if let Some(&last) = cols.last() {
+                ensure!((last as usize) < self.cols, "row {i}: column {last} out of bounds (cols={})", self.cols);
+            }
+        }
+        Ok(())
+    }
+
+    /// Value at `(i, j)` via binary search (0.0 if not stored).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let cols = self.row_cols(i);
+        match cols.binary_search(&(j as u32)) {
+            Ok(p) => self.row_vals(i)[self.rpt[i] + p - self.rpt[i]],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Maximum nnz over all rows ("Max nnz/row" column of Table 3).
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.rows).map(|i| self.row_nnz(i)).max().unwrap_or(0)
+    }
+
+    /// Device-memory footprint in bytes under the CSR layout the paper uses
+    /// (4-byte column indices + 8-byte values + 4-byte row pointers, as in
+    /// nsparse's Volta build).
+    pub fn device_bytes(&self) -> usize {
+        4 * (self.rows + 1) + 4 * self.nnz() + 8 * self.nnz()
+    }
+
+    /// Approximate equality: identical structure, values within
+    /// `rel` relative tolerance.
+    pub fn approx_eq(&self, other: &Csr, rel: f64) -> bool {
+        if self.rows != other.rows
+            || self.cols != other.cols
+            || self.rpt != other.rpt
+            || self.col != other.col
+        {
+            return false;
+        }
+        self.val.iter().zip(&other.val).all(|(a, b)| {
+            let scale = a.abs().max(b.abs()).max(1e-300);
+            (a - b).abs() <= rel * scale
+        })
+    }
+
+    /// Describe the first difference to `other`, if any — used by tests and
+    /// the `--verify` path of the bench harness for actionable failures.
+    pub fn diff(&self, other: &Csr, rel: f64) -> Option<String> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Some(format!(
+                "shape mismatch: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            ));
+        }
+        if self.rpt != other.rpt {
+            for i in 0..self.rows {
+                if self.row_nnz(i) != other.row_nnz(i) {
+                    return Some(format!(
+                        "row {i} nnz mismatch: {} vs {}",
+                        self.row_nnz(i),
+                        other.row_nnz(i)
+                    ));
+                }
+            }
+        }
+        if self.col != other.col {
+            for i in 0..self.rows {
+                if self.row_cols(i) != other.row_cols(i) {
+                    return Some(format!("row {i} column indices differ"));
+                }
+            }
+        }
+        for i in 0..self.rows {
+            let (sc, sv) = self.row(i);
+            let (_, ov) = other.row(i);
+            for (k, (a, b)) in sv.iter().zip(ov).enumerate() {
+                let scale = a.abs().max(b.abs()).max(1e-300);
+                if (a - b).abs() > rel * scale {
+                    return Some(format!(
+                        "value mismatch at ({i},{}): {a} vs {b}",
+                        sc[k]
+                    ));
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[1 0 2], [0 0 0], [3 4 0]]
+        Csr::from_parts(3, 3, vec![0, 2, 2, 4], vec![0, 2, 0, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap()
+    }
+
+    #[test]
+    fn construction_and_accessors() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(1), 0);
+        assert_eq!(m.row_cols(2), &[0, 1]);
+        assert_eq!(m.row_vals(2), &[3.0, 4.0]);
+        assert_eq!(m.max_row_nnz(), 2);
+    }
+
+    #[test]
+    fn zero_and_identity() {
+        let z = Csr::zero(4, 5);
+        z.validate().unwrap();
+        assert_eq!(z.nnz(), 0);
+        let i = Csr::identity(3);
+        i.validate().unwrap();
+        assert_eq!(i.nnz(), 3);
+        assert_eq!(i.get(1, 1), 1.0);
+        assert_eq!(i.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_rpt() {
+        let r = Csr::from_parts(2, 2, vec![0, 2], vec![0, 1], vec![1.0, 1.0]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unsorted_columns() {
+        let r = Csr::from_parts(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 1.0]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_columns() {
+        let r = Csr::from_parts(1, 3, vec![0, 2], vec![1, 1], vec![1.0, 1.0]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_bounds_column() {
+        let r = Csr::from_parts(1, 2, vec![0, 1], vec![5], vec![1.0]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn approx_eq_and_diff() {
+        let a = sample();
+        let mut b = sample();
+        assert!(a.approx_eq(&b, 1e-12));
+        assert!(a.diff(&b, 1e-12).is_none());
+        b.val[1] += 1e-3;
+        assert!(!a.approx_eq(&b, 1e-12));
+        let d = a.diff(&b, 1e-12).unwrap();
+        assert!(d.contains("value mismatch"), "{d}");
+    }
+}

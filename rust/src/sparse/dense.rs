@@ -1,0 +1,111 @@
+//! Dense row-major matrix — used as a brute-force oracle in tests and for
+//! tiny examples; never on the hot path.
+
+use super::csr::Csr;
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Dense {
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Dense { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Dense matmul oracle (O(n^3)); for tiny test matrices only.
+    pub fn matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Dense::zero(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.data[i * other.cols + j] += a * other.get(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    /// Convert to CSR, dropping exact zeros.
+    pub fn to_csr(&self) -> Csr {
+        let mut rpt = vec![0usize; self.rows + 1];
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let v = self.get(i, j);
+                if v != 0.0 {
+                    col.push(j as u32);
+                    val.push(v);
+                }
+            }
+            rpt[i + 1] = col.len();
+        }
+        Csr { rows: self.rows, cols: self.cols, rpt, col, val }
+    }
+}
+
+impl From<&Csr> for Dense {
+    fn from(m: &Csr) -> Self {
+        let mut out = Dense::zero(m.rows, m.cols);
+        for i in 0..m.rows {
+            let (cols, vals) = m.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                out.set(i, c as usize, v);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_csr_roundtrip() {
+        let mut d = Dense::zero(3, 4);
+        d.set(0, 1, 2.0);
+        d.set(2, 3, -1.5);
+        let c = d.to_csr();
+        c.validate().unwrap();
+        assert_eq!(Dense::from(&c), d);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let i3 = Dense::from(&Csr::identity(3));
+        let mut a = Dense::zero(3, 3);
+        a.set(0, 2, 5.0);
+        a.set(1, 1, -2.0);
+        assert_eq!(a.matmul(&i3), a);
+        assert_eq!(i3.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] * [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = Dense { rows: 2, cols: 2, data: vec![1.0, 2.0, 3.0, 4.0] };
+        let b = Dense { rows: 2, cols: 2, data: vec![5.0, 6.0, 7.0, 8.0] };
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+}

@@ -1,0 +1,21 @@
+//! Sparse-matrix substrate: storage formats (CSR, COO, BSR, dense),
+//! conversions, MatrixMarket IO, structural ops, and the statistics that
+//! drive the paper's evaluation (nnz/row, n_prod, compression ratio).
+//!
+//! CSR is the interchange format of the whole framework, matching the paper
+//! (§2.1.1): `rpt` (row pointers, len = rows+1), `col` (column indices,
+//! sorted within each row), `val` (f64 values — the paper benchmarks in
+//! double precision).
+
+pub mod bsr;
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod mmio;
+pub mod ops;
+pub mod stats;
+
+pub use bsr::Bsr;
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dense::Dense;

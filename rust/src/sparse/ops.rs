@@ -1,0 +1,241 @@
+//! Structural operations on CSR matrices: transpose, scaling, filtering,
+//! sub-matrix extraction, and equality helpers used across the framework.
+
+use super::csr::Csr;
+use anyhow::Result;
+
+/// Transpose (counting-sort over columns; O(nnz + rows + cols)).
+pub fn transpose(m: &Csr) -> Csr {
+    let mut counts = vec![0usize; m.cols + 1];
+    for &c in &m.col {
+        counts[c as usize + 1] += 1;
+    }
+    for j in 0..m.cols {
+        counts[j + 1] += counts[j];
+    }
+    let rpt = counts.clone();
+    let mut col = vec![0u32; m.nnz()];
+    let mut val = vec![0f64; m.nnz()];
+    let mut cursor = counts;
+    for i in 0..m.rows {
+        let (cols, vals) = m.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            let p = cursor[c as usize];
+            col[p] = i as u32;
+            val[p] = v;
+            cursor[c as usize] += 1;
+        }
+    }
+    Csr { rows: m.cols, cols: m.rows, rpt, col, val }
+}
+
+/// Scale all values by `s`.
+pub fn scale(m: &Csr, s: f64) -> Csr {
+    let mut out = m.clone();
+    for v in &mut out.val {
+        *v *= s;
+    }
+    out
+}
+
+/// Drop entries with `|v| <= threshold` (structural filter).
+pub fn drop_small(m: &Csr, threshold: f64) -> Csr {
+    let mut rpt = vec![0usize; m.rows + 1];
+    let mut col = Vec::with_capacity(m.nnz());
+    let mut val = Vec::with_capacity(m.nnz());
+    for i in 0..m.rows {
+        let (cols, vals) = m.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            if v.abs() > threshold {
+                col.push(c);
+                val.push(v);
+            }
+        }
+        rpt[i + 1] = col.len();
+    }
+    Csr { rows: m.rows, cols: m.cols, rpt, col, val }
+}
+
+/// Extract the sub-matrix of rows `[r0, r1)` (columns unchanged).
+pub fn row_slice(m: &Csr, r0: usize, r1: usize) -> Result<Csr> {
+    anyhow::ensure!(r0 <= r1 && r1 <= m.rows, "bad row slice [{r0},{r1}) of {}", m.rows);
+    let base = m.rpt[r0];
+    let rpt: Vec<usize> = m.rpt[r0..=r1].iter().map(|&p| p - base).collect();
+    let col = m.col[m.rpt[r0]..m.rpt[r1]].to_vec();
+    let val = m.val[m.rpt[r0]..m.rpt[r1]].to_vec();
+    Csr::from_parts(r1 - r0, m.cols, rpt, col, val)
+}
+
+/// Element-wise sum `A + B` (same shape), merging sorted rows.
+pub fn add(a: &Csr, b: &Csr) -> Result<Csr> {
+    anyhow::ensure!(a.rows == b.rows && a.cols == b.cols, "shape mismatch in add");
+    let mut rpt = vec![0usize; a.rows + 1];
+    let mut col = Vec::with_capacity(a.nnz() + b.nnz());
+    let mut val = Vec::with_capacity(a.nnz() + b.nnz());
+    for i in 0..a.rows {
+        let (ac, av) = a.row(i);
+        let (bc, bv) = b.row(i);
+        let (mut p, mut q) = (0usize, 0usize);
+        while p < ac.len() || q < bc.len() {
+            let take_a = q >= bc.len() || (p < ac.len() && ac[p] <= bc[q]);
+            let take_b = p >= ac.len() || (q < bc.len() && bc[q] <= ac[p]);
+            if take_a && take_b && ac[p] == bc[q] {
+                let s = av[p] + bv[q];
+                if s != 0.0 {
+                    col.push(ac[p]);
+                    val.push(s);
+                }
+                p += 1;
+                q += 1;
+            } else if take_a {
+                col.push(ac[p]);
+                val.push(av[p]);
+                p += 1;
+            } else {
+                col.push(bc[q]);
+                val.push(bv[q]);
+                q += 1;
+            }
+        }
+        rpt[i + 1] = col.len();
+    }
+    Csr::from_parts(a.rows, a.cols, rpt, col, val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dense::Dense;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn random_csr(rows: usize, cols: usize, per_row: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut rpt = vec![0usize];
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        let mut scratch = Vec::new();
+        for _ in 0..rows {
+            let k = rng.range(0, per_row + 1);
+            rng.sample_distinct(cols, k, &mut scratch);
+            for &c in &scratch {
+                col.push(c);
+                val.push(rng.value());
+            }
+            rpt.push(col.len());
+        }
+        Csr::from_parts(rows, cols, rpt, col, val).unwrap()
+    }
+
+    #[test]
+    fn transpose_involution() {
+        for seed in 0..4 {
+            let m = random_csr(23, 31, 5, seed);
+            let tt = transpose(&transpose(&m));
+            assert_eq!(m, tt);
+        }
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let m = random_csr(8, 6, 3, 11);
+        let t = transpose(&m);
+        t.validate().unwrap();
+        let dm = Dense::from(&m);
+        let dt = Dense::from(&t);
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                assert_eq!(dm.get(i, j), dt.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn scale_and_drop() {
+        let m = random_csr(10, 10, 4, 5);
+        let s = scale(&m, 2.0);
+        assert!(s.val.iter().zip(&m.val).all(|(a, b)| *a == 2.0 * b));
+        let d = drop_small(&m, 1.0); // all |v| <= 1
+        assert_eq!(d.nnz(), 0);
+        let d0 = drop_small(&m, 0.0);
+        assert_eq!(d0.nnz(), m.nnz());
+    }
+
+    #[test]
+    fn row_slice_valid() {
+        let m = random_csr(12, 9, 4, 8);
+        let s = row_slice(&m, 3, 9).unwrap();
+        assert_eq!(s.rows, 6);
+        for i in 0..6 {
+            assert_eq!(s.row(i), m.row(i + 3));
+        }
+        assert!(row_slice(&m, 5, 20).is_err());
+    }
+
+    #[test]
+    fn add_matches_dense() {
+        let a = random_csr(9, 9, 4, 21);
+        let b = random_csr(9, 9, 4, 22);
+        let c = add(&a, &b).unwrap();
+        c.validate().unwrap();
+        let (da, db, dc) = (Dense::from(&a), Dense::from(&b), Dense::from(&c));
+        for i in 0..9 {
+            for j in 0..9 {
+                assert!((da.get(i, j) + db.get(i, j) - dc.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+}
+
+/// Sparse matrix-vector product `y = A·x` (used by the AMG smoother and
+/// the application examples).
+pub fn spmv(a: &Csr, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols, x.len(), "spmv dimension mismatch");
+    let mut y = vec![0.0; a.rows];
+    for i in 0..a.rows {
+        let (cols, vals) = a.row(i);
+        let mut acc = 0.0;
+        for (&c, &v) in cols.iter().zip(vals) {
+            acc += v * x[c as usize];
+        }
+        y[i] = acc;
+    }
+    y
+}
+
+/// Euclidean norm of a vector.
+pub fn norm2(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// Diagonal of a square CSR matrix (0.0 where unset).
+pub fn diagonal(a: &Csr) -> Vec<f64> {
+    assert_eq!(a.rows, a.cols);
+    (0..a.rows).map(|i| a.get(i, i)).collect()
+}
+
+#[cfg(test)]
+mod spmv_tests {
+    use super::*;
+    use crate::sparse::Dense;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn spmv_matches_dense() {
+        let mut rng = Rng::new(17);
+        let m = super::tests::random_csr(12, 9, 4, 21);
+        let x: Vec<f64> = (0..9).map(|_| rng.value()).collect();
+        let y = spmv(&m, &x);
+        let d = Dense::from(&m);
+        for i in 0..12 {
+            let gold: f64 = (0..9).map(|j| d.get(i, j) * x[j]).sum();
+            assert!((y[i] - gold).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn diagonal_and_norm() {
+        let i3 = Csr::identity(3);
+        assert_eq!(diagonal(&i3), vec![1.0, 1.0, 1.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,133 @@
+//! Matrix statistics driving the paper's evaluation: per-row intermediate
+//! product counts (`n_prod`), total FLOPs, and the compression ratio of
+//! `A·B` (paper §2.1.2, Table 3 columns).
+
+use super::csr::Csr;
+
+/// Per-row intermediate-product counts for `C = A * B`:
+/// `nprod[i] = sum over k in A(i,:) of nnz(B(k,:))`.
+///
+/// This is the *upper bound* row size used by the symbolic binning step
+/// (paper Fig. 2 "setup: compute n_prod"), computed without touching values.
+pub fn nprod_per_row(a: &Csr, b: &Csr) -> Vec<usize> {
+    assert_eq!(a.cols, b.rows, "inner dimension mismatch");
+    let mut out = vec![0usize; a.rows];
+    for i in 0..a.rows {
+        let mut acc = 0usize;
+        for &k in a.row_cols(i) {
+            acc += b.row_nnz(k as usize);
+        }
+        out[i] = acc;
+    }
+    out
+}
+
+/// Total intermediate products (`n_prod` of Table 3).
+pub fn total_nprod(a: &Csr, b: &Csr) -> usize {
+    nprod_per_row(a, b).iter().sum()
+}
+
+/// FLOP count of the multiply: the paper's GFLOPS metric is
+/// `2 * n_prod / time` (§6, "twice the number of the intermediate products").
+pub fn flops(a: &Csr, b: &Csr) -> f64 {
+    2.0 * total_nprod(a, b) as f64
+}
+
+/// Compression ratio (paper Eq. 3): total n_prod / nnz(C).
+pub fn compression_ratio(nprod_total: usize, c_nnz: usize) -> f64 {
+    if c_nnz == 0 {
+        return 0.0;
+    }
+    nprod_total as f64 / c_nnz as f64
+}
+
+/// Summary statistics of one matrix — the columns of Table 3.
+#[derive(Clone, Debug)]
+pub struct MatrixStats {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub avg_row_nnz: f64,
+    pub max_row_nnz: usize,
+}
+
+impl MatrixStats {
+    pub fn of(m: &Csr) -> Self {
+        MatrixStats {
+            rows: m.rows,
+            cols: m.cols,
+            nnz: m.nnz(),
+            avg_row_nnz: if m.rows == 0 { 0.0 } else { m.nnz() as f64 / m.rows as f64 },
+            max_row_nnz: m.max_row_nnz(),
+        }
+    }
+}
+
+/// Row-size histogram over power-of-two buckets — used to sanity-check the
+/// synthetic suite against the paper's binning ranges.
+pub fn row_size_histogram(sizes: &[usize]) -> Vec<(usize, usize)> {
+    let mut hist: Vec<(usize, usize)> = Vec::new();
+    let mut bound = 1usize;
+    loop {
+        let count = sizes.iter().filter(|&&s| s < bound && s * 2 >= bound).count();
+        // bucket [bound/2, bound)
+        if bound == 1 {
+            let zeros = sizes.iter().filter(|&&s| s == 0).count();
+            hist.push((0, zeros));
+        } else {
+            hist.push((bound / 2, count));
+        }
+        if sizes.iter().all(|&s| s < bound) {
+            break;
+        }
+        bound *= 2;
+        if bound > (1 << 40) {
+            break;
+        }
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (Csr, Csr) {
+        // A = [[1,1,0],[0,0,1]], B = [[1,0],[1,1],[0,1]] (3x2, all ones)
+        let a = Csr::from_parts(2, 3, vec![0, 2, 3], vec![0, 1, 2], vec![1.0; 3]).unwrap();
+        let b = Csr::from_parts(3, 2, vec![0, 1, 3, 4], vec![0, 0, 1, 1], vec![1.0; 4]).unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn nprod_counts() {
+        let (a, b) = tiny();
+        // row0: nnz(B0)+nnz(B1) = 1+2 = 3; row1: nnz(B2) = 1
+        assert_eq!(nprod_per_row(&a, &b), vec![3, 1]);
+        assert_eq!(total_nprod(&a, &b), 4);
+        assert_eq!(flops(&a, &b), 8.0);
+    }
+
+    #[test]
+    fn cr_math() {
+        assert!((compression_ratio(100, 50) - 2.0).abs() < 1e-12);
+        assert_eq!(compression_ratio(10, 0), 0.0);
+    }
+
+    #[test]
+    fn stats_of_identity() {
+        let m = Csr::identity(5);
+        let s = MatrixStats::of(&m);
+        assert_eq!(s.nnz, 5);
+        assert_eq!(s.max_row_nnz, 1);
+        assert!((s.avg_row_nnz - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_covers_all_rows() {
+        let sizes = vec![0, 1, 1, 3, 8, 100];
+        let hist = row_size_histogram(&sizes);
+        let total: usize = hist.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, sizes.len());
+    }
+}

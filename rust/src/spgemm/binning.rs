@@ -1,0 +1,349 @@
+//! Binning method (paper §5.1, Algorithms 1–3, Fig. 3–4): classify rows by
+//! size estimate into `NUM_BINS` bins for global load balance.
+//!
+//! The functional result is a grouped row-id array plus per-bin
+//! sizes/offsets, stored in **one** array of length `M` (the minimized
+//! metadata layout of Fig. 3). The module also emits the binning kernels'
+//! trace work in one of three behavioral variants:
+//!
+//! * [`BinningVariant::SharedMemory`] (OpSparse): per-block shared-memory
+//!   counters; only `NUM_BINS` global atomics per thread block, plus the
+//!   Algorithm-3 fast path when every row fits bin 0.
+//! * [`BinningVariant::GlobalAtomic`] (nsparse): one global atomic per row.
+//! * [`BinningVariant::GlobalWide`] (spECK): one global atomic per row and
+//!   an `M × NUM_BINS` metadata layout (the wide malloc is charged by the
+//!   pipeline).
+
+use super::kernel_tables::{BinningRanges, NUM_BINS};
+use super::BinningVariant;
+use crate::gpusim::trace::{BlockWork, Kernel, Trace};
+
+/// Rows processed per binning thread block.
+pub const BINNING_TB: usize = 1024;
+
+/// Result of classifying rows into bins.
+#[derive(Clone, Debug)]
+pub struct BinningResult {
+    /// Row ids grouped by bin: rows of bin `j` occupy
+    /// `bins[bin_offset[j] .. bin_offset[j] + bin_size[j]]`.
+    pub bins: Vec<u32>,
+    pub bin_size: [usize; NUM_BINS],
+    pub bin_offset: [usize; NUM_BINS],
+    /// Maximum row size observed (drives the Algorithm-3 fast path).
+    pub max_row_size: usize,
+    /// True if the fast path applied (all rows in bin 0).
+    pub fast_path: bool,
+}
+
+impl BinningResult {
+    /// Row ids of bin `j`.
+    pub fn bin_rows(&self, j: usize) -> &[u32] {
+        &self.bins[self.bin_offset[j]..self.bin_offset[j] + self.bin_size[j]]
+    }
+}
+
+/// Two-pass binning (Algorithms 1–2), block-structured exactly like the
+/// GPU kernels so the within-bin order matches a deterministic replay:
+/// rows appear in block order, then row order within the block.
+pub fn bin_rows(sizes: &[usize], ranges: &BinningRanges) -> BinningResult {
+    let m = sizes.len();
+    // ---- pass 1: count bin sizes (+ track max) ----
+    let mut bin_size = [0usize; NUM_BINS];
+    let mut max_row_size = 0usize;
+    for &s in sizes {
+        bin_size[ranges.bin_of(s)] += 1;
+        if s > max_row_size {
+            max_row_size = s;
+        }
+    }
+    // exclusive sum -> offsets
+    let mut bin_offset = [0usize; NUM_BINS];
+    let mut acc = 0usize;
+    for j in 0..NUM_BINS {
+        bin_offset[j] = acc;
+        acc += bin_size[j];
+    }
+    // ---- fast path (Algorithm 3): everything in bin 0 ----
+    if bin_size[0] == m {
+        return BinningResult {
+            bins: (0..m as u32).collect(),
+            bin_size,
+            bin_offset,
+            max_row_size,
+            fast_path: true,
+        };
+    }
+    // ---- pass 2: scatter row ids ----
+    let mut cursor = bin_offset;
+    let mut bins = vec![0u32; m];
+    for (i, &s) in sizes.iter().enumerate() {
+        let j = ranges.bin_of(s);
+        bins[cursor[j]] = i as u32;
+        cursor[j] += 1;
+    }
+    BinningResult { bins, bin_size, bin_offset, max_row_size, fast_path: false }
+}
+
+/// Emit the binning kernels for a binning step onto `trace`.
+///
+/// `step` tags the kernels ("sym_binning" / "num_binning"); `result` must
+/// come from [`bin_rows`] on the same sizes.
+pub fn emit_binning_kernels(
+    trace: &mut Trace,
+    step: &'static str,
+    m: usize,
+    result: &BinningResult,
+    variant: BinningVariant,
+    stream: usize,
+) {
+    let nblocks = m.div_ceil(BINNING_TB);
+    let rows_of_block = |b: usize| -> u64 {
+        let start = b * BINNING_TB;
+        (BINNING_TB.min(m - start)) as u64
+    };
+
+    // ---- pass 1 (count) ----
+    let blocks: Vec<BlockWork> = (0..nblocks)
+        .map(|b| {
+            let rows = rows_of_block(b);
+            match variant {
+                BinningVariant::SharedMemory => BlockWork {
+                    // read row sizes; shared atomics for counts + max;
+                    // NUM_BINS + 1 global atomics per block
+                    global_bytes: rows * 4,
+                    shared_accesses: 2 * rows + NUM_BINS as u64,
+                    global_atomics: NUM_BINS as u64 + 1,
+                    ..Default::default()
+                },
+                BinningVariant::GlobalAtomic | BinningVariant::GlobalWide => BlockWork {
+                    // every row atomically increments a global counter
+                    global_bytes: rows * 4,
+                    shared_accesses: 0,
+                    global_atomics: rows,
+                    ..Default::default()
+                },
+            }
+        })
+        .collect();
+    trace.launch(Kernel {
+        name: format!("{step}_pass1"),
+        step,
+        stream,
+        tb_size: BINNING_TB,
+        shared_bytes: match variant {
+            BinningVariant::SharedMemory => (NUM_BINS + 1) * 4,
+            _ => 0,
+        },
+        blocks,
+    });
+
+    // ---- exclusive sum over NUM_BINS (one tiny block) ----
+    trace.launch(Kernel {
+        name: format!("{step}_exscan"),
+        step,
+        stream,
+        tb_size: 32,
+        shared_bytes: NUM_BINS * 4,
+        blocks: vec![BlockWork {
+            global_bytes: (NUM_BINS * 8) as u64,
+            shared_accesses: 2 * NUM_BINS as u64,
+            ..Default::default()
+        }],
+    });
+
+    // ---- pass 2 (scatter) or Algorithm-3 fast path ----
+    if result.fast_path && variant == BinningVariant::SharedMemory {
+        // d_bins[i] = i: pure streaming write, no comparisons
+        let blocks: Vec<BlockWork> = (0..nblocks)
+            .map(|b| BlockWork { global_bytes: rows_of_block(b) * 4, ..Default::default() })
+            .collect();
+        trace.launch(Kernel {
+            name: format!("{step}_fastpath"),
+            step,
+            stream,
+            tb_size: BINNING_TB,
+            shared_bytes: 0,
+            blocks,
+        });
+        return;
+    }
+    let blocks: Vec<BlockWork> = (0..nblocks)
+        .map(|b| {
+            let rows = rows_of_block(b);
+            match variant {
+                BinningVariant::SharedMemory => BlockWork {
+                    global_bytes: rows * 4 * 2, // read sizes, write row ids
+                    shared_accesses: 3 * rows + 2 * NUM_BINS as u64,
+                    global_atomics: NUM_BINS as u64,
+                    ..Default::default()
+                },
+                BinningVariant::GlobalAtomic => BlockWork {
+                    global_bytes: rows * 4 * 2,
+                    shared_accesses: 0,
+                    global_atomics: rows,
+                    ..Default::default()
+                },
+                BinningVariant::GlobalWide => BlockWork {
+                    // spECK writes into the M x NUM_BINS layout: strided
+                    // (uncoalesced) stores cost ~a full transaction per row
+                    global_bytes: rows * 4 + rows * 32,
+                    shared_accesses: 0,
+                    global_atomics: rows,
+                    ..Default::default()
+                },
+            }
+        })
+        .collect();
+    trace.launch(Kernel {
+        name: format!("{step}_pass2"),
+        step,
+        stream,
+        tb_size: BINNING_TB,
+        shared_bytes: match variant {
+            BinningVariant::SharedMemory => (3 * NUM_BINS + 1) * 4,
+            _ => 0,
+        },
+        blocks,
+    });
+}
+
+/// Metadata bytes the binning method needs under each variant (§4.4):
+/// OpSparse/nsparse store row ids in one length-`M` array; spECK uses the
+/// two-dimensional `M × NUM_BINS` layout.
+pub fn metadata_bytes(m: usize, variant: BinningVariant) -> usize {
+    let base = 4 * m // bins array
+        + 4 * NUM_BINS * 2 // bin_size + bin_offset
+        + 4; // max_row
+    match variant {
+        BinningVariant::GlobalWide => 4 * m * NUM_BINS + 4 * NUM_BINS * 2 + 4,
+        _ => base,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spgemm::kernel_tables::SymbolicRanges;
+    use crate::util::prop;
+
+    fn ranges() -> BinningRanges {
+        SymbolicRanges::Sym12x.ranges()
+    }
+
+    #[test]
+    fn partition_is_exact() {
+        let sizes = vec![0, 5, 30, 500, 10_000, 20_000, 26, 27];
+        let r = bin_rows(&sizes, &ranges());
+        // every row appears exactly once
+        let mut seen = vec![false; sizes.len()];
+        for &row in &r.bins {
+            assert!(!seen[row as usize], "row {row} duplicated");
+            seen[row as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // rows are in the bins their sizes dictate
+        for j in 0..NUM_BINS {
+            for &row in r.bin_rows(j) {
+                assert_eq!(ranges().bin_of(sizes[row as usize]), j);
+            }
+        }
+        assert_eq!(r.max_row_size, 20_000);
+        assert!(!r.fast_path);
+    }
+
+    #[test]
+    fn fast_path_when_all_tiny() {
+        let sizes = vec![3usize; 100]; // all <= 26 => bin0
+        let r = bin_rows(&sizes, &ranges());
+        assert!(r.fast_path);
+        assert_eq!(r.bin_size[0], 100);
+        assert_eq!(r.bins, (0..100u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn offsets_are_exclusive_sums() {
+        let sizes: Vec<usize> = (0..1000).map(|i| (i * 37) % 15_000).collect();
+        let r = bin_rows(&sizes, &ranges());
+        let mut acc = 0;
+        for j in 0..NUM_BINS {
+            assert_eq!(r.bin_offset[j], acc);
+            acc += r.bin_size[j];
+        }
+        assert_eq!(acc, sizes.len());
+    }
+
+    #[test]
+    fn prop_binning_partitions_any_input() {
+        prop::check(
+            "binning-partition",
+            32,
+            200,
+            |rng, size| (0..size).map(|_| rng.below(30_000) as usize).collect::<Vec<_>>(),
+            |sizes| {
+                let r = bin_rows(sizes, &ranges());
+                let total: usize = r.bin_size.iter().sum();
+                if total != sizes.len() {
+                    return Err(format!("bin sizes sum {total} != {}", sizes.len()));
+                }
+                let mut sorted: Vec<u32> = r.bins.clone();
+                sorted.sort_unstable();
+                for (i, &v) in sorted.iter().enumerate() {
+                    if v != i as u32 {
+                        return Err(format!("bins not a permutation at {i}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shared_variant_uses_fewer_global_atomics() {
+        let sizes: Vec<usize> = (0..5000).map(|i| (i % 700) + 1).collect();
+        let r = bin_rows(&sizes, &ranges());
+        let mut t_shared = Trace::new();
+        emit_binning_kernels(&mut t_shared, "sym_binning", sizes.len(), &r, BinningVariant::SharedMemory, 0);
+        let mut t_global = Trace::new();
+        emit_binning_kernels(&mut t_global, "sym_binning", sizes.len(), &r, BinningVariant::GlobalAtomic, 0);
+        let atomics = |t: &Trace| -> u64 {
+            t.ops
+                .iter()
+                .filter_map(|op| match op {
+                    crate::gpusim::trace::TraceOp::Launch(k) => Some(k.total_work().global_atomics),
+                    _ => None,
+                })
+                .sum()
+        };
+        assert!(
+            atomics(&t_global) > 50 * atomics(&t_shared),
+            "global-atomic binning must issue far more atomics: {} vs {}",
+            atomics(&t_global),
+            atomics(&t_shared)
+        );
+    }
+
+    #[test]
+    fn speck_metadata_is_num_bins_wider() {
+        let m = 10_000;
+        assert!(
+            metadata_bytes(m, BinningVariant::GlobalWide)
+                > (NUM_BINS - 1) * metadata_bytes(m, BinningVariant::SharedMemory)
+        );
+    }
+
+    #[test]
+    fn fastpath_emits_three_kernels_sharedmem() {
+        let sizes = vec![2usize; 2048];
+        let r = bin_rows(&sizes, &ranges());
+        let mut t = Trace::new();
+        emit_binning_kernels(&mut t, "sym_binning", sizes.len(), &r, BinningVariant::SharedMemory, 0);
+        assert_eq!(t.launches(), 3);
+        // fast path kernel should be last and atomic-free
+        if let crate::gpusim::trace::TraceOp::Launch(k) = &t.ops[2] {
+            assert!(k.name.ends_with("fastpath"));
+            assert_eq!(k.total_work().global_atomics, 0);
+        } else {
+            panic!("expected launch");
+        }
+    }
+}

@@ -1,0 +1,362 @@
+//! Hash-table accumulator (paper §5.2, Algorithms 4–5).
+//!
+//! One table computes one output row. The CPU execution is semantically a
+//! linear-probing open-addressing table; what the paper's optimization
+//! changes is the *number of table accesses per probe iteration*, which we
+//! account explicitly so the simulator can price shared-memory traffic and
+//! bank conflicts:
+//!
+//! * [`HashVariant::SingleAccess`] (OpSparse): one `atomicCAS` per
+//!   iteration; the swapped value is kept in a register → 1 access/iter.
+//! * [`HashVariant::MultiAccess`] (nsparse/spECK): read the slot, branch,
+//!   then CAS on the insert path → ~2 accesses/iter plus a re-read after a
+//!   failed CAS under contention (we charge the deterministic 2).
+//!
+//! Table sizes that are powers of two use the `&`-mask address map
+//! (symbolic step); other sizes use `%` (numeric step) — the simulator
+//! prices the mod at a few extra cycles per probe (§5.2).
+
+use super::HashVariant;
+
+/// Sentinel for an unoccupied slot (column indices are < 2^31).
+pub const EMPTY: u32 = u32::MAX;
+
+/// Probe/traffic statistics accumulated while computing rows; the cost
+/// model converts these into shared-memory time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProbeStats {
+    /// Keys inserted or merged (one per intermediate product).
+    pub inserts: u64,
+    /// Probe-loop iterations (>= inserts; the excess is hash collisions).
+    pub probe_iters: u64,
+    /// Shared/global table word accesses (variant-dependent).
+    pub table_accesses: u64,
+    /// Iterations that used a `%` address map instead of `&`.
+    pub mod_ops: u64,
+}
+
+impl ProbeStats {
+    pub fn add(&mut self, o: &ProbeStats) {
+        self.inserts += o.inserts;
+        self.probe_iters += o.probe_iters;
+        self.table_accesses += o.table_accesses;
+        self.mod_ops += o.mod_ops;
+    }
+
+    /// Collision rate: extra probe iterations per insert.
+    pub fn collision_rate(&self) -> f64 {
+        if self.inserts == 0 {
+            return 0.0;
+        }
+        (self.probe_iters - self.inserts) as f64 / self.inserts as f64
+    }
+}
+
+/// A hash-table accumulator sized for one kernel's `t_size`.
+///
+/// Reused across rows via [`HashAccumulator::reset`] — the real kernels
+/// re-initialize shared memory per row; we charge that as `t_size` accesses
+/// in the stats (the `init_elems` of the block work model).
+pub struct HashAccumulator {
+    t_size: usize,
+    pow2: bool,
+    mask: usize,
+    keys: Vec<u32>,
+    vals: Vec<f64>,
+    /// Epoch stamps: a slot is live iff `stamps[i] == epoch`. This makes
+    /// [`HashAccumulator::reset`] O(1) on the CPU — the *simulated* init
+    /// cost is still charged to the trace (`init_words` in the callers);
+    /// this only removes the host-side memset from our hot loop (§Perf).
+    stamps: Vec<u32>,
+    epoch: u32,
+    /// Lemire fastmod magic for non-pow2 tables: exact `h % t_size`
+    /// without a hardware divide in the CPU hot loop (§Perf). The
+    /// *simulated* cost still counts `mod_ops` — this only speeds up our
+    /// emulation, the GPU algorithm is unchanged.
+    fastmod_m: u64,
+    variant: HashVariant,
+    /// Reusable sort scratch for [`HashAccumulator::condense_sorted`]
+    /// (avoids a per-row allocation in the numeric hot loop, §Perf).
+    scratch: Vec<(u32, f64)>,
+    pub stats: ProbeStats,
+}
+
+impl HashAccumulator {
+    pub fn new(t_size: usize, variant: HashVariant) -> Self {
+        let pow2 = t_size.is_power_of_two();
+        HashAccumulator {
+            t_size,
+            pow2,
+            mask: if pow2 { t_size - 1 } else { 0 },
+            keys: vec![EMPTY; t_size],
+            vals: vec![0.0; t_size],
+            stamps: vec![0; t_size],
+            epoch: 1,
+            fastmod_m: if pow2 { 0 } else { u64::MAX / t_size as u64 + 1 },
+            variant,
+            scratch: Vec::new(),
+            stats: ProbeStats::default(),
+        }
+    }
+
+    #[inline]
+    pub fn t_size(&self) -> usize {
+        self.t_size
+    }
+
+    /// Clear all slots (the per-row shared-memory init): O(1) epoch bump,
+    /// with a full flush on the (rare) u32 wraparound.
+    pub fn reset(&mut self) {
+        if self.epoch == u32::MAX {
+            self.stamps.fill(0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+    }
+
+    /// Live slot check under the epoch scheme.
+    #[inline]
+    fn slot_key(&self, i: usize) -> u32 {
+        if self.stamps[i] == self.epoch {
+            self.keys[i]
+        } else {
+            EMPTY
+        }
+    }
+
+    #[inline]
+    fn first_slot(&mut self, key: u32) -> usize {
+        let h = key.wrapping_mul(super::kernel_tables::HASH_SCALE);
+        if self.pow2 {
+            h as usize & self.mask
+        } else {
+            self.stats.mod_ops += 1;
+            // exact h % t_size via Lemire's fastmod (no hardware divide)
+            let lowbits = self.fastmod_m.wrapping_mul(h as u64);
+            ((lowbits as u128 * self.t_size as u128) >> 64) as usize
+        }
+    }
+
+    #[inline]
+    fn next_slot(&mut self, hash: usize) -> usize {
+        if self.pow2 {
+            (hash + 1) & self.mask
+        } else {
+            // numeric step: `hash + 1 < t_size ? hash + 1 : 0` (Alg. 5 L11)
+            if hash + 1 < self.t_size {
+                hash + 1
+            } else {
+                0
+            }
+        }
+    }
+
+    #[inline]
+    fn accesses_per_iter(&self) -> u64 {
+        match self.variant {
+            HashVariant::SingleAccess => 1,
+            HashVariant::MultiAccess => 2,
+        }
+    }
+
+    /// Symbolic insert (Algorithm 4): returns `true` if the key was new
+    /// (the caller increments its `shared_nnz`), `false` on duplicate.
+    /// Returns `None` if the table is full (kernel-7 overflow → the row is
+    /// recorded for the global-table fallback kernel).
+    #[inline]
+    pub fn insert_symbolic(&mut self, key: u32) -> Option<bool> {
+        debug_assert_ne!(key, EMPTY);
+        let mut hash = self.first_slot(key);
+        let acc = self.accesses_per_iter();
+        // per-iteration counters stay in registers; stats flush once per
+        // call (§Perf: 2 fewer memory RMWs per probe iteration)
+        let mut iters = 0u64;
+        let mut result = None;
+        for _ in 0..self.t_size {
+            iters += 1;
+            let old = self.slot_key(hash); // atomicCAS(old := slot; slot = key if empty)
+            if old == EMPTY {
+                self.keys[hash] = key;
+                self.stamps[hash] = self.epoch;
+                result = Some(true);
+                break;
+            } else if old == key {
+                result = Some(false);
+                break;
+            }
+            hash = self.next_slot(hash);
+        }
+        self.stats.probe_iters += iters;
+        self.stats.table_accesses += iters * acc;
+        if result.is_some() {
+            self.stats.inserts += 1;
+        }
+        result
+    }
+
+    /// Numeric insert (Algorithm 5): accumulate `val` under `key`.
+    /// Returns `false` if the table is full.
+    #[inline]
+    pub fn insert_numeric(&mut self, key: u32, val: f64) -> bool {
+        debug_assert_ne!(key, EMPTY);
+        let mut hash = self.first_slot(key);
+        let acc = self.accesses_per_iter();
+        let mut iters = 0u64;
+        let mut ok = false;
+        for _ in 0..self.t_size {
+            iters += 1;
+            let old = self.slot_key(hash);
+            if old == EMPTY || old == key {
+                if old == EMPTY {
+                    self.keys[hash] = key;
+                    self.stamps[hash] = self.epoch;
+                    self.vals[hash] = val;
+                } else {
+                    self.vals[hash] += val; // atomicAdd(shared_val + hash, a*b)
+                }
+                ok = true;
+                break;
+            }
+            hash = self.next_slot(hash);
+        }
+        self.stats.probe_iters += iters;
+        // + 1: the atomicAdd is a second shared access
+        self.stats.table_accesses += iters * acc + u64::from(ok);
+        self.stats.inserts += u64::from(ok);
+        ok
+    }
+
+    /// Number of occupied slots.
+    pub fn occupied(&self) -> usize {
+        (0..self.t_size).filter(|&i| self.stamps[i] == self.epoch).count()
+    }
+
+    /// Condense + sort phase (numeric kernels, §5.6.2): gather occupied
+    /// slots, sort by column, append to `cols`/`vals`. Uses the internal
+    /// scratch buffer — no allocation after the first row.
+    pub fn condense_sorted(&mut self, cols: &mut Vec<u32>, vals: &mut Vec<f64>) {
+        self.scratch.clear();
+        for i in 0..self.t_size {
+            if self.stamps[i] == self.epoch {
+                self.scratch.push((self.keys[i], self.vals[i]));
+            }
+        }
+        self.scratch.sort_unstable_by_key(|&(c, _)| c);
+        cols.extend(self.scratch.iter().map(|&(c, _)| c));
+        vals.extend(self.scratch.iter().map(|&(_, v)| v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn symbolic_counts_distinct_keys() {
+        let mut t = HashAccumulator::new(64, HashVariant::SingleAccess);
+        let keys = [5u32, 9, 5, 120, 9, 9, 3];
+        let mut nnz = 0;
+        for &k in &keys {
+            if t.insert_symbolic(k).unwrap() {
+                nnz += 1;
+            }
+        }
+        assert_eq!(nnz, 4);
+        assert_eq!(t.occupied(), 4);
+        assert_eq!(t.stats.inserts, keys.len() as u64);
+    }
+
+    #[test]
+    fn numeric_accumulates_duplicates() {
+        let mut t = HashAccumulator::new(31, HashVariant::SingleAccess); // non-pow2 like kernel0
+        assert!(t.insert_numeric(7, 1.5));
+        assert!(t.insert_numeric(7, 2.5));
+        assert!(t.insert_numeric(3, -1.0));
+        let (mut c, mut v) = (Vec::new(), Vec::new());
+        t.condense_sorted(&mut c, &mut v);
+        assert_eq!(c, vec![3, 7]);
+        assert_eq!(v, vec![-1.0, 4.0]);
+        assert!(t.stats.mod_ops > 0, "non-pow2 table must use mod");
+    }
+
+    #[test]
+    fn pow2_table_uses_mask_not_mod() {
+        let mut t = HashAccumulator::new(512, HashVariant::SingleAccess);
+        for k in 0..100u32 {
+            t.insert_symbolic(k).unwrap();
+        }
+        assert_eq!(t.stats.mod_ops, 0);
+    }
+
+    #[test]
+    fn full_table_reports_overflow() {
+        let mut t = HashAccumulator::new(4, HashVariant::SingleAccess);
+        for k in 0..4u32 {
+            assert!(t.insert_symbolic(k * 16 + 1).is_some());
+        }
+        assert_eq!(t.insert_symbolic(999), None);
+        assert!(!t.insert_numeric(999, 1.0));
+    }
+
+    #[test]
+    fn multi_access_counts_double_traffic() {
+        let mut single = HashAccumulator::new(256, HashVariant::SingleAccess);
+        let mut multi = HashAccumulator::new(256, HashVariant::MultiAccess);
+        let mut rng = Rng::new(5);
+        let keys: Vec<u32> = (0..150).map(|_| rng.below(1 << 20) as u32).collect();
+        for &k in &keys {
+            single.insert_symbolic(k).unwrap();
+            multi.insert_symbolic(k).unwrap();
+        }
+        assert_eq!(single.stats.probe_iters, multi.stats.probe_iters, "same semantics");
+        assert_eq!(multi.stats.table_accesses, 2 * single.stats.table_accesses);
+    }
+
+    #[test]
+    fn matches_btreemap_accumulation() {
+        let mut rng = Rng::new(8);
+        for _ in 0..20 {
+            let mut t = HashAccumulator::new(1023, HashVariant::SingleAccess);
+            let mut gold: BTreeMap<u32, f64> = BTreeMap::new();
+            for _ in 0..rng.range(1, 500) {
+                let k = rng.below(4096) as u32;
+                let v = rng.value();
+                assert!(t.insert_numeric(k, v));
+                *gold.entry(k).or_insert(0.0) += v;
+            }
+            let (mut c, mut v) = (Vec::new(), Vec::new());
+            t.condense_sorted(&mut c, &mut v);
+            let gold_c: Vec<u32> = gold.keys().copied().collect();
+            assert_eq!(c, gold_c);
+            for (i, (_, gv)) in gold.iter().enumerate() {
+                assert!((v[i] - gv).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn collision_rate_rises_with_occupancy() {
+        // fill a table to 95% vs 40% and compare collision rates — the
+        // §4.3 trade-off the binning ranges tune.
+        let mut rng = Rng::new(13);
+        let run = |fill: usize, rng: &mut Rng| {
+            let mut t = HashAccumulator::new(1024, HashVariant::SingleAccess);
+            let mut inserted = 0usize;
+            while inserted < fill {
+                let k = rng.below(1 << 24) as u32;
+                if t.insert_symbolic(k) == Some(true) {
+                    inserted += 1;
+                }
+            }
+            t.stats.collision_rate()
+        };
+        let low = run(410, &mut rng);
+        let high = run(973, &mut rng);
+        assert!(
+            high > 3.0 * low.max(0.01),
+            "collision rate should explode near full occupancy: low={low:.3} high={high:.3}"
+        );
+    }
+}

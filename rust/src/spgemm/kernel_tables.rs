@@ -1,0 +1,320 @@
+//! Kernel configuration and binning-range tables (paper §5.6–§5.7,
+//! Tables 1, 2, 4, 5) for the NVIDIA Tesla V100 target.
+//!
+//! Each computation step (symbolic / numeric) classifies rows into 8 bins;
+//! each bin is computed by a kernel with a fixed hash-table size and thread
+//! block size. The *binning range* maps a row's size estimate (`n_prod` for
+//! symbolic, `n_nz` for numeric) to a bin, trading hash-collision rate
+//! against hardware utilization (§4.3): a 1× range fills tables to 100%
+//! occupancy (max collisions), scaled ranges leave headroom.
+
+use crate::gpusim::device::V100;
+
+/// Number of bins in each step (paper: 8 bins).
+pub const NUM_BINS: usize = 8;
+
+/// Hash multiplier used by the probing sequence. nsparse and the paper use
+/// a small odd constant; the exact value only changes which keys collide,
+/// not the statistics.
+pub const HASH_SCALE: u32 = 107;
+
+/// Fraction of kernel7's symbolic table beyond which a row is recorded for
+/// recomputation in the global-memory kernel8 (paper §5.6.1: 0.8×).
+pub const SYMBOLIC_GLOBAL_FALLBACK_FRACTION: f64 = 0.8;
+
+/// One computing kernel's static configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelConfig {
+    /// Kernel index within the step (0..=8 symbolic, 0..=7 numeric).
+    pub index: usize,
+    /// Hash table slots; `None` for global-memory-table kernels.
+    pub table_size: Option<usize>,
+    /// Thread block size.
+    pub tb_size: usize,
+    /// Rows computed per thread block (kernel0 packs several tiny rows into
+    /// one block; all other kernels compute one row per block).
+    pub rows_per_block: usize,
+    /// Threads cooperating on one row.
+    pub threads_per_row: usize,
+    /// Shared memory bytes per thread block (table + the 4-byte counter).
+    pub shared_bytes: usize,
+    /// True for the global-memory hash-table fallback kernel.
+    pub global_table: bool,
+}
+
+impl KernelConfig {
+    /// Theoretical occupancy on the V100 (fraction of 2048 threads/SM).
+    pub fn theoretical_occupancy(&self) -> f64 {
+        crate::gpusim::occupancy::occupancy(self.tb_size, self.shared_bytes, &V100)
+    }
+}
+
+/// Bytes per hash-table slot: symbolic stores a 4-byte column key; numeric
+/// stores a key + 8-byte double value (12 bytes, §5.6.2).
+pub const SYM_SLOT_BYTES: usize = 4;
+pub const NUM_SLOT_BYTES: usize = 12;
+
+/// Symbolic-step kernels (paper Table 1). Shared memory = table + 4-byte
+/// `shared_nnz` (per row for kernel0).
+pub fn symbolic_kernels() -> [KernelConfig; 9] {
+    let k = |index, table_size: Option<usize>, tb_size, rows_per_block, threads_per_row, shared_bytes| KernelConfig {
+        index,
+        table_size,
+        tb_size,
+        rows_per_block,
+        threads_per_row,
+        shared_bytes,
+        global_table: table_size.is_none(),
+    };
+    [
+        // kernel0: 4 threads/row, 256 rows per 1024-thread block,
+        // 256 tables of 32 slots + 256 shared_nnz counters
+        k(0, Some(32), 1024, 256, 4, 256 * (32 * SYM_SLOT_BYTES + 4)),
+        k(1, Some(512), 64, 1, 64, 512 * SYM_SLOT_BYTES + 4),
+        k(2, Some(1024), 128, 1, 128, 1024 * SYM_SLOT_BYTES + 4),
+        k(3, Some(2048), 256, 1, 256, 2048 * SYM_SLOT_BYTES + 4),
+        k(4, Some(4096), 512, 1, 512, 4096 * SYM_SLOT_BYTES + 4),
+        k(5, Some(8192), 1024, 1, 1024, 8192 * SYM_SLOT_BYTES + 4),
+        // kernel6: (48K-4) bytes table + 4 bytes shared_nnz = 48K
+        k(6, Some(12287), 1024, 1, 1024, 12287 * SYM_SLOT_BYTES + 4),
+        // kernel7: max shared memory (96KB), theoretical 50% occupancy
+        k(7, Some(24575), 1024, 1, 1024, 24575 * SYM_SLOT_BYTES + 4),
+        // kernel8: global table, 4 bytes of shared memory (shared_nnz)
+        k(8, None, 1024, 1, 1024, 4),
+    ]
+}
+
+/// Numeric-step kernels (paper Table 2). Slots are 12 bytes (key + f64);
+/// +4 bytes `shared_offset` for the condense phase.
+pub fn numeric_kernels() -> [KernelConfig; 8] {
+    let k = |index, table_size: Option<usize>, tb_size, rows_per_block, threads_per_row, shared_bytes| KernelConfig {
+        index,
+        table_size,
+        tb_size,
+        rows_per_block,
+        threads_per_row,
+        shared_bytes,
+        global_table: table_size.is_none(),
+    };
+    [
+        // kernel0: 8 threads/row, 128 rows per 1024-thread block
+        k(0, Some(31), 1024, 128, 8, 128 * (31 * NUM_SLOT_BYTES + 4)),
+        k(1, Some(255), 64, 1, 64, 255 * NUM_SLOT_BYTES + 4),
+        k(2, Some(511), 128, 1, 128, 511 * NUM_SLOT_BYTES + 4),
+        k(3, Some(1023), 256, 1, 256, 1023 * NUM_SLOT_BYTES + 4),
+        k(4, Some(2047), 512, 1, 512, 2047 * NUM_SLOT_BYTES + 4),
+        k(5, Some(4095), 1024, 1, 1024, 4095 * NUM_SLOT_BYTES + 4),
+        // kernel6: max shared memory, theoretical 50% occupancy
+        k(6, Some(8191), 1024, 1, 1024, 8191 * NUM_SLOT_BYTES + 4),
+        // kernel7: global table
+        k(7, None, 1024, 1, 1024, 4),
+    ]
+}
+
+/// A binning range: per-bin *inclusive* upper bounds on the row-size
+/// estimate; the last bin is unbounded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BinningRanges {
+    pub name: &'static str,
+    /// `upper[j]` = largest row size assigned to bin j (inclusive);
+    /// `upper[NUM_BINS-1]` = usize::MAX.
+    pub upper: [usize; NUM_BINS],
+}
+
+impl BinningRanges {
+    /// Bin index for a row of size `s`.
+    #[inline]
+    pub fn bin_of(&self, s: usize) -> usize {
+        // linear scan mirrors the GPU kernel's register-resident loop
+        for (j, &u) in self.upper.iter().enumerate() {
+            if s <= u {
+                return j;
+            }
+        }
+        NUM_BINS - 1
+    }
+}
+
+/// Symbolic-step range presets (paper Table 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SymbolicRanges {
+    Sym1x,
+    Sym12x,
+    Sym15x,
+}
+
+impl SymbolicRanges {
+    pub fn ranges(self) -> BinningRanges {
+        const MAX: usize = usize::MAX;
+        match self {
+            // table fully occupied (upper == table size)
+            SymbolicRanges::Sym1x => BinningRanges {
+                name: "sym_1x",
+                upper: [32, 512, 1024, 2048, 4096, 8192, 12287, MAX],
+            },
+            // paper's adopted config: table >= 1.2x the largest n_prod
+            SymbolicRanges::Sym12x => BinningRanges {
+                name: "sym_1.2x",
+                upper: [26, 426, 853, 1706, 3413, 6826, 10240, MAX],
+            },
+            SymbolicRanges::Sym15x => BinningRanges {
+                name: "sym_1.5x",
+                upper: [21, 341, 682, 1365, 2730, 5461, 8191, MAX],
+            },
+        }
+    }
+
+    pub fn all() -> [SymbolicRanges; 3] {
+        [SymbolicRanges::Sym1x, SymbolicRanges::Sym12x, SymbolicRanges::Sym15x]
+    }
+}
+
+/// Numeric-step range presets (paper Table 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NumericRanges {
+    Num1x,
+    Num15x,
+    Num2x,
+    Num3x,
+}
+
+impl NumericRanges {
+    pub fn ranges(self) -> BinningRanges {
+        const MAX: usize = usize::MAX;
+        match self {
+            NumericRanges::Num1x => BinningRanges {
+                name: "num_1x",
+                upper: [31, 255, 511, 1023, 2047, 4095, 8191, MAX],
+            },
+            NumericRanges::Num15x => BinningRanges {
+                name: "num_1.5x",
+                upper: [21, 192, 384, 768, 1536, 3072, 5460, MAX],
+            },
+            // paper's adopted config: table >= 2x the largest n_nz
+            NumericRanges::Num2x => BinningRanges {
+                name: "num_2x",
+                upper: [16, 128, 256, 512, 1024, 2048, 4096, MAX],
+            },
+            NumericRanges::Num3x => BinningRanges {
+                name: "num_3x",
+                upper: [10, 85, 170, 341, 682, 1365, 2730, MAX],
+            },
+        }
+    }
+
+    pub fn all() -> [NumericRanges; 4] {
+        [NumericRanges::Num1x, NumericRanges::Num15x, NumericRanges::Num2x, NumericRanges::Num3x]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symbolic_kernel_table_matches_paper() {
+        let ks = symbolic_kernels();
+        assert_eq!(ks[0].table_size, Some(32));
+        assert_eq!(ks[1].table_size, Some(512));
+        assert_eq!(ks[6].table_size, Some(12287));
+        assert_eq!(ks[7].table_size, Some(24575));
+        assert!(ks[8].global_table);
+        assert_eq!(ks[1].tb_size, 64);
+        assert_eq!(ks[5].tb_size, 1024);
+        assert_eq!(ks[0].rows_per_block, 256);
+        assert_eq!(ks[0].threads_per_row, 4);
+    }
+
+    #[test]
+    fn numeric_kernel_table_matches_paper() {
+        let ks = numeric_kernels();
+        assert_eq!(ks[0].table_size, Some(31));
+        assert_eq!(ks[1].table_size, Some(255));
+        assert_eq!(ks[6].table_size, Some(8191));
+        assert!(ks[7].global_table);
+        assert_eq!(ks[0].threads_per_row, 8);
+        assert_eq!(ks[0].rows_per_block, 128);
+    }
+
+    #[test]
+    fn occupancy_targets_match_section_5_6() {
+        // kernel1..kernel5 symbolic: full occupancy; kernel7: 50%.
+        let ks = symbolic_kernels();
+        for k in &ks[1..=5] {
+            let occ = k.theoretical_occupancy();
+            assert!(occ > 0.99, "symbolic kernel{} occupancy {occ}", k.index);
+        }
+        let occ7 = ks[7].theoretical_occupancy();
+        assert!((occ7 - 0.5).abs() < 0.01, "kernel7 occupancy {occ7}");
+        let occ8 = ks[8].theoretical_occupancy();
+        assert!(occ8 > 0.99, "kernel8 occupancy {occ8}");
+        // numeric: kernel6 50%, kernel7 full
+        let nk = numeric_kernels();
+        let nocc6 = nk[6].theoretical_occupancy();
+        assert!((nocc6 - 0.5).abs() < 0.01, "numeric kernel6 occupancy {nocc6}");
+        assert!(nk[7].theoretical_occupancy() > 0.99);
+        for k in &nk[1..=5] {
+            let occ = k.theoretical_occupancy();
+            assert!(occ > 0.99, "numeric kernel{} occupancy {occ}", k.index);
+        }
+    }
+
+    #[test]
+    fn shared_memory_fits_v100() {
+        for k in symbolic_kernels().iter().chain(numeric_kernels().iter()) {
+            assert!(
+                k.shared_bytes <= 96 * 1024,
+                "kernel{} shared {} exceeds 96KB",
+                k.index,
+                k.shared_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn ranges_match_paper_tables_4_and_5() {
+        let s12 = SymbolicRanges::Sym12x.ranges();
+        assert_eq!(s12.upper[0], 26);
+        assert_eq!(s12.upper[1], 426);
+        assert_eq!(s12.upper[6], 10240);
+        let n2 = NumericRanges::Num2x.ranges();
+        assert_eq!(n2.upper[0], 16);
+        assert_eq!(n2.upper[1], 128);
+        assert_eq!(n2.upper[6], 4096);
+    }
+
+    #[test]
+    fn bin_of_is_monotone_and_partitions() {
+        for r in SymbolicRanges::all().map(|r| r.ranges()) {
+            let mut last = 0;
+            for s in 0..20000 {
+                let b = r.bin_of(s);
+                assert!(b >= last || s == 0, "bin_of not monotone at {s}");
+                last = b;
+                // consistency: s <= upper[b] and (b == 0 or s > upper[b-1])
+                assert!(s <= r.upper[b]);
+                if b > 0 {
+                    assert!(s > r.upper[b - 1]);
+                }
+            }
+            assert_eq!(r.bin_of(usize::MAX), NUM_BINS - 1);
+        }
+    }
+
+    #[test]
+    fn range_scaling_relationship() {
+        // tighter ranges (larger multiplier) => smaller upper bounds
+        let s1 = SymbolicRanges::Sym1x.ranges();
+        let s12 = SymbolicRanges::Sym12x.ranges();
+        let s15 = SymbolicRanges::Sym15x.ranges();
+        for j in 0..NUM_BINS - 1 {
+            assert!(s1.upper[j] > s12.upper[j]);
+            assert!(s12.upper[j] > s15.upper[j]);
+        }
+        let n1 = NumericRanges::Num1x.ranges();
+        let n3 = NumericRanges::Num3x.ranges();
+        for j in 0..NUM_BINS - 1 {
+            assert!(n1.upper[j] > n3.upper[j]);
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! The OpSparse SpGEMM core: row-wise, two-phase (symbolic + numeric),
+//! hash-accumulator SpGEMM with binning-based global load balance —
+//! the paper's §5 with all seven optimizations, plus the switchable
+//! inefficient variants used by the baselines and the ablation benches.
+
+pub mod binning;
+pub mod hash_table;
+pub mod kernel_tables;
+pub mod numeric;
+pub mod one_phase;
+pub mod pipeline;
+pub mod reference;
+pub mod semiring;
+pub mod symbolic;
+
+pub use kernel_tables::{BinningRanges, KernelConfig, NumericRanges, SymbolicRanges};
+pub use pipeline::{multiply, OpSparseConfig, SpgemmOutput};
+
+/// Which hash-probe implementation to use (paper §5.2 / Fig 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HashVariant {
+    /// OpSparse: one atomicCAS per probe iteration; the swapped value is
+    /// kept in a register and reused.
+    SingleAccess,
+    /// nsparse/spECK: read the slot, then CAS, re-reading on contention —
+    /// multiple shared-memory accesses per probe iteration.
+    MultiAccess,
+}
+
+/// Which binning implementation to use (paper §5.1 / Figs 7–8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinningVariant {
+    /// OpSparse: per-block shared-memory counters, one global atomic per
+    /// (block, bin); max-row tracking enables the Algorithm-3 fast path.
+    SharedMemory,
+    /// nsparse: every row does an atomic directly on global memory.
+    GlobalAtomic,
+    /// spECK: global atomics plus an M x NUM_BIN metadata layout.
+    GlobalWide,
+}

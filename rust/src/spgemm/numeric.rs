@@ -1,0 +1,323 @@
+//! Numeric step (paper §5.6.2, Algorithm 5): compute each output row's
+//! column indices and values with per-bin hash kernels, then condense and
+//! sort into the allocated CSR arrays.
+//!
+//! Rows are binned by their exact `n_nz` (known from the symbolic step),
+//! so no fallback/recompute is needed: rows beyond kernel6's range go
+//! straight to the global-table kernel7.
+
+use super::binning::BinningResult;
+use super::hash_table::{HashAccumulator, ProbeStats};
+use super::kernel_tables::{numeric_kernels, KernelConfig, NUM_SLOT_BYTES};
+use super::HashVariant;
+use crate::gpusim::trace::{BlockWork, Kernel};
+use crate::sparse::Csr;
+
+/// Result of the numeric step.
+#[derive(Clone, Debug)]
+pub struct NumericOutput {
+    /// The finished result matrix.
+    pub c: Csr,
+    /// Aggregate probe statistics (Fig 9 metric).
+    pub stats: ProbeStats,
+    /// Per-bin kernels (largest bins first; global kernel7 first of all,
+    /// matching the paper's launch-order rule §5.5).
+    pub kernels: Vec<Kernel>,
+}
+
+/// log2-ish sorting cost of the condense+sort phase in shared accesses.
+fn sort_accesses(nnz: u64) -> u64 {
+    if nnz <= 1 {
+        return nnz;
+    }
+    let stages = 64 - (nnz - 1).leading_zeros() as u64; // ceil(log2)
+    2 * nnz * stages
+}
+
+/// Compute the numeric step. `c_rpt` is the exclusive sum of per-row nnz
+/// (the real `C.rpt`); `binning` is over the per-row nnz with the numeric
+/// ranges.
+pub fn numeric_step(
+    a: &Csr,
+    b: &Csr,
+    c_rpt: &[usize],
+    binning: &BinningResult,
+    variant: HashVariant,
+    step: &'static str,
+    num_streams: usize,
+) -> NumericOutput {
+    // L2 reuse discount on B-row traffic (see symbolic_step)
+    let nprod_total: usize = (0..a.rows)
+        .map(|i| a.row_cols(i).iter().map(|&k| b.row_nnz(k as usize)).sum::<usize>())
+        .sum();
+    let b_reuse = (b.nnz() as f64 / nprod_total.max(1) as f64).clamp(0.15, 1.0);
+    let configs = numeric_kernels();
+    let nnz_total = *c_rpt.last().unwrap();
+    let mut c_col = vec![0u32; nnz_total];
+    let mut c_val = vec![0f64; nnz_total];
+    let mut stats = ProbeStats::default();
+    let mut kernels: Vec<Kernel> = Vec::new();
+
+    // launch order: global-table kernel7 first (its single giant rows run
+    // longest), then bin6 .. bin0 (§5.5)
+    let bin_order: Vec<usize> = (0..super::kernel_tables::NUM_BINS).rev().collect();
+    let mut stream = 0usize;
+
+    let mut row_cols: Vec<u32> = Vec::new();
+    let mut row_vals: Vec<f64> = Vec::new();
+
+    for &bin in &bin_order {
+        let rows = binning.bin_rows(bin);
+        if rows.is_empty() {
+            continue;
+        }
+        let cfg: &KernelConfig = &configs[bin.min(7)];
+        let mut blocks: Vec<BlockWork> = Vec::with_capacity(rows.len() / cfg.rows_per_block + 1);
+        let mut group = BlockWork::default();
+        let mut in_group = 0usize;
+
+        // shared-table kernels reuse one accumulator across all their
+        // rows (O(1) epoch reset): allocating one per row dominated the
+        // numeric hot loop on many-row matrices (§Perf)
+        let mut shared_table = cfg.table_size.map(|t| HashAccumulator::new(t, variant));
+        let mut global_table_store: Option<HashAccumulator> = None;
+
+        for &r in rows {
+            let r = r as usize;
+            let row_nnz = c_rpt[r + 1] - c_rpt[r];
+            let (t_size, global_table) = match cfg.table_size {
+                Some(t) => (t, false),
+                // kernel7: global table sized 2x the next pow2 of the nnz
+                None => (row_nnz.next_power_of_two().max(1024) * 2, true),
+            };
+            let table: &mut HashAccumulator = if global_table {
+                // per-row global tables vary in size; keep the one with
+                // carried stats and grow when needed
+                match global_table_store.as_mut() {
+                    Some(t) if t.t_size() >= t_size => {
+                        t.reset();
+                    }
+                    _ => {
+                        let mut fresh = HashAccumulator::new(t_size, variant);
+                        if let Some(old) = global_table_store.take() {
+                            fresh.stats = old.stats;
+                        }
+                        global_table_store = Some(fresh);
+                    }
+                }
+                global_table_store.as_mut().unwrap()
+            } else {
+                let t = shared_table.as_mut().unwrap();
+                t.reset();
+                t
+            };
+            let before = table.stats;
+            let (acols, avals) = a.row(r);
+            for (&k, &av) in acols.iter().zip(avals) {
+                let (bcols, bvals) = b.row(k as usize);
+                for (&c, &bv) in bcols.iter().zip(bvals) {
+                    let ok = table.insert_numeric(c, av * bv);
+                    assert!(ok, "numeric table overflow: row {r} nnz {row_nnz} t_size {t_size}");
+                }
+            }
+            // condense + sort into the output arrays
+            row_cols.clear();
+            row_vals.clear();
+            table.condense_sorted(&mut row_cols, &mut row_vals);
+            debug_assert_eq!(row_cols.len(), row_nnz, "row {r}");
+            c_col[c_rpt[r]..c_rpt[r + 1]].copy_from_slice(&row_cols);
+            c_val[c_rpt[r]..c_rpt[r + 1]].copy_from_slice(&row_vals);
+
+            let delta = ProbeStats {
+                inserts: table.stats.inserts - before.inserts,
+                probe_iters: table.stats.probe_iters - before.probe_iters,
+                table_accesses: table.stats.table_accesses - before.table_accesses,
+                mod_ops: table.stats.mod_ops - before.mod_ops,
+            };
+            stats.add(&delta);
+
+            // per-row device work
+            let a_nnz = a.row_nnz(r) as u64;
+            let b_elems: u64 =
+                a.row_cols(r).iter().map(|&k| b.row_nnz(k as usize) as u64).sum();
+            let nprod = b_elems;
+            let out_bytes = row_nnz as u64 * 12;
+            let w = if global_table {
+                BlockWork {
+                    // every table access is global traffic (12B slots)
+                    global_bytes: a_nnz * 20
+                        + (b_elems as f64 * 12.0 * b_reuse) as u64
+                        + out_bytes
+                        + t_size as u64 * 12 // init
+                        + delta.table_accesses * 12,
+                    shared_accesses: 4 + sort_accesses(row_nnz as u64),
+                    global_atomics: 0,
+                    mod_ops: delta.mod_ops,
+                    flops: 2 * nprod,
+                }
+            } else {
+                // coalesced vectorized memset: 1/8 of a probe access per word
+                let init_words = (t_size * NUM_SLOT_BYTES / 4 / 8) as u64 + 1;
+                // warp-divergence amplification of collision chains (see
+                // symbolic::row_block_work)
+                let collision_excess = delta.probe_iters - delta.inserts;
+                BlockWork {
+                    global_bytes: a_nnz * 20
+                        + (b_elems as f64 * 12.0 * b_reuse) as u64
+                        + out_bytes,
+                    shared_accesses: init_words
+                        + delta.table_accesses
+                        + 3 * collision_excess
+                        + row_nnz as u64 * 3 // condense gather
+                        + sort_accesses(row_nnz as u64),
+                    global_atomics: 0,
+                    mod_ops: delta.mod_ops,
+                    flops: 2 * nprod,
+                }
+            };
+            if cfg.rows_per_block > 1 {
+                group.add(&w);
+                in_group += 1;
+                if in_group == cfg.rows_per_block {
+                    blocks.push(group);
+                    group = BlockWork::default();
+                    in_group = 0;
+                }
+            } else {
+                blocks.push(w);
+            }
+        }
+        if in_group > 0 {
+            blocks.push(group);
+        }
+        kernels.push(Kernel {
+            name: if cfg.global_table {
+                "num_kernel7_global".into()
+            } else {
+                format!("num_kernel{}", cfg.index)
+            },
+            step,
+            stream: {
+                stream = (stream + 1) % num_streams.max(1);
+                stream
+            },
+            tb_size: cfg.tb_size,
+            shared_bytes: cfg.shared_bytes,
+            blocks,
+        });
+    }
+
+    let c = Csr {
+        rows: a.rows,
+        cols: b.cols,
+        rpt: c_rpt.to_vec(),
+        col: c_col,
+        val: c_val,
+    };
+    NumericOutput { c, stats, kernels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::powerlaw::PowerLaw;
+    use crate::gen::uniform::Uniform;
+    use crate::sparse::stats::nprod_per_row;
+    use crate::spgemm::binning::bin_rows;
+    use crate::spgemm::kernel_tables::{NumericRanges, SymbolicRanges};
+    use crate::spgemm::reference::spgemm_reference;
+    use crate::spgemm::symbolic::symbolic_step;
+    use crate::util::exclusive_sum;
+    use crate::util::rng::Rng;
+
+    fn full_two_phase(a: &Csr, variant: HashVariant, nr: NumericRanges) -> NumericOutput {
+        let nprod = nprod_per_row(a, a);
+        let sym_bins = bin_rows(&nprod, &SymbolicRanges::Sym12x.ranges());
+        let sym = symbolic_step(a, a, &sym_bins, variant, "symbolic", 4);
+        let c_rpt = exclusive_sum(&sym.row_nnz);
+        let num_bins = bin_rows(&sym.row_nnz, &nr.ranges());
+        numeric_step(a, a, &c_rpt, &num_bins, variant, "numeric", 4)
+    }
+
+    #[test]
+    fn matches_reference_on_random() {
+        let mut rng = Rng::new(91);
+        let a = Uniform { n: 250, per_row: 10, jitter: 5 }.generate(&mut rng);
+        let out = full_two_phase(&a, HashVariant::SingleAccess, NumericRanges::Num2x);
+        let gold = spgemm_reference(&a, &a);
+        out.c.validate().unwrap();
+        assert!(out.c.approx_eq(&gold, 1e-12), "{:?}", out.c.diff(&gold, 1e-12));
+    }
+
+    #[test]
+    fn all_numeric_ranges_agree() {
+        let mut rng = Rng::new(92);
+        let a = Uniform { n: 180, per_row: 14, jitter: 7 }.generate(&mut rng);
+        let gold = spgemm_reference(&a, &a);
+        for nr in NumericRanges::all() {
+            let out = full_two_phase(&a, HashVariant::SingleAccess, nr);
+            assert!(out.c.approx_eq(&gold, 1e-12), "range {:?}", nr);
+        }
+    }
+
+    #[test]
+    fn giant_row_goes_to_global_kernel_and_is_correct() {
+        let mut rng = Rng::new(93);
+        // the giant row's output nnz must exceed num_2x's last range
+        // boundary (4096) to reach the global kernel7
+        let a = PowerLaw {
+            n: 12_000,
+            alpha: 2.0,
+            max_row: 8_000,
+            mean_row: 4.0,
+            hub_frac: 0.3,
+            forced_giant_rows: 1,
+        }
+        .generate(&mut rng);
+        let out = full_two_phase(&a, HashVariant::SingleAccess, NumericRanges::Num2x);
+        let gold = spgemm_reference(&a, &a);
+        assert!(out.c.approx_eq(&gold, 1e-12), "{:?}", out.c.diff(&gold, 1e-12));
+        assert!(
+            out.kernels.iter().any(|k| k.name == "num_kernel7_global"),
+            "giant row should hit the global kernel"
+        );
+        // §5.5: the global kernel must be launched first
+        assert_eq!(out.kernels[0].name, "num_kernel7_global");
+    }
+
+    #[test]
+    fn multi_access_same_result_more_traffic() {
+        let mut rng = Rng::new(94);
+        let a = Uniform { n: 150, per_row: 12, jitter: 4 }.generate(&mut rng);
+        let s = full_two_phase(&a, HashVariant::SingleAccess, NumericRanges::Num2x);
+        let m = full_two_phase(&a, HashVariant::MultiAccess, NumericRanges::Num2x);
+        assert!(s.c.approx_eq(&m.c, 1e-12));
+        assert!(m.stats.table_accesses > s.stats.table_accesses);
+    }
+
+    #[test]
+    fn tighter_ranges_reduce_collisions() {
+        // num_2x leaves tables at most half full => fewer probe iterations
+        // than num_1x, which fills them completely (the Fig 11 mechanism)
+        let mut rng = Rng::new(95);
+        let a = Uniform { n: 400, per_row: 18, jitter: 9 }.generate(&mut rng);
+        let loose = full_two_phase(&a, HashVariant::SingleAccess, NumericRanges::Num1x);
+        let tight = full_two_phase(&a, HashVariant::SingleAccess, NumericRanges::Num2x);
+        assert!(
+            tight.stats.collision_rate() <= loose.stats.collision_rate(),
+            "num_2x collisions {} should not exceed num_1x {}",
+            tight.stats.collision_rate(),
+            loose.stats.collision_rate()
+        );
+    }
+
+    #[test]
+    fn flops_counted() {
+        let mut rng = Rng::new(96);
+        let a = Uniform { n: 100, per_row: 8, jitter: 3 }.generate(&mut rng);
+        let out = full_two_phase(&a, HashVariant::SingleAccess, NumericRanges::Num2x);
+        let total: u64 = out.kernels.iter().map(|k| k.total_work().flops).sum();
+        let nprod: usize = nprod_per_row(&a, &a).iter().sum();
+        assert_eq!(total, 2 * nprod as u64);
+    }
+}

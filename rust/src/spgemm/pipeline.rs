@@ -1,0 +1,453 @@
+//! The OpSparse pipeline (paper Fig. 2): six-step two-phase SpGEMM with
+//! the paper's optimizations as switchable flags, so the same code path
+//! expresses OpSparse, the nsparse/spECK-like baselines, and the ablation
+//! benches.
+//!
+//! Steps: **setup** (metadata malloc + n_prod kernel, overlapped §5.4) →
+//! **symbolic binning** → **symbolic** (per-bin hash kernels, large bins
+//! first §5.5, global-table fallback malloc overlapped) → **alloc C**
+//! (exclusive-sum of nnz reusing `C.rpt` §5.3, C.col/C.val mallocs
+//! interleaved §5.4) → **numeric binning** → **numeric** → **cleanup**
+//! (all frees deferred here §5.5).
+
+use super::binning::{bin_rows, emit_binning_kernels, metadata_bytes, BinningResult};
+use super::hash_table::ProbeStats;
+use super::kernel_tables::{NumericRanges, SymbolicRanges, NUM_BINS};
+use super::numeric::numeric_step;
+use super::symbolic::symbolic_step;
+use super::{BinningVariant, HashVariant};
+use crate::gpusim::trace::{BlockWork, Kernel, Trace};
+use crate::sparse::stats::nprod_per_row;
+use crate::sparse::Csr;
+use crate::util::exclusive_sum;
+use anyhow::{ensure, Result};
+
+/// Pipeline configuration. `Default` is full OpSparse; the baselines and
+/// ablations flip individual flags.
+#[derive(Clone, Debug)]
+pub struct OpSparseConfig {
+    /// Binning range preset for the symbolic step (§5.7; paper: 1.2×).
+    pub sym_ranges: SymbolicRanges,
+    /// Binning range preset for the numeric step (§5.7; paper: 2×).
+    pub num_ranges: NumericRanges,
+    /// Hash-probe implementation (§5.2; paper: single-access).
+    pub hash_variant: HashVariant,
+    /// Binning implementation (§5.1; paper: shared-memory).
+    pub binning_variant: BinningVariant,
+    /// Allocate all metadata with one `cudaMalloc` (§5.3).
+    pub combined_metadata_malloc: bool,
+    /// Launch kernels before mallocs they don't depend on (§5.4).
+    pub overlap_malloc: bool,
+    /// Defer every `cudaFree` to the cleanup step (§5.5; nsparse frees the
+    /// global hash table eagerly, serializing the device).
+    pub deferred_free: bool,
+    /// Reuse `C.rpt` for the n_prod / nnz arrays instead of separate
+    /// allocations (§5.3; nsparse allocates two extra M-arrays).
+    pub reuse_crpt: bool,
+    /// CUDA streams for concurrent kernels (§5.5).
+    pub num_streams: usize,
+}
+
+impl Default for OpSparseConfig {
+    fn default() -> Self {
+        OpSparseConfig {
+            sym_ranges: SymbolicRanges::Sym12x,
+            num_ranges: NumericRanges::Num2x,
+            hash_variant: HashVariant::SingleAccess,
+            binning_variant: BinningVariant::SharedMemory,
+            combined_metadata_malloc: true,
+            overlap_malloc: true,
+            deferred_free: true,
+            reuse_crpt: true,
+            num_streams: 4,
+        }
+    }
+}
+
+impl OpSparseConfig {
+    /// nsparse-like baseline: global-atomic binning, multi-access hashing,
+    /// fully-occupied (1×) binning ranges, separate metadata mallocs, no
+    /// overlap, eager `cudaFree` after the global-table kernel (§4).
+    pub fn nsparse_like() -> Self {
+        OpSparseConfig {
+            sym_ranges: SymbolicRanges::Sym1x,
+            num_ranges: NumericRanges::Num1x,
+            hash_variant: HashVariant::MultiAccess,
+            binning_variant: BinningVariant::GlobalAtomic,
+            combined_metadata_malloc: false,
+            overlap_malloc: false,
+            deferred_free: false,
+            reuse_crpt: false,
+            num_streams: 4,
+        }
+    }
+
+    /// spECK-like baseline: global-atomic binning over an `M × NUM_BINS`
+    /// metadata layout, multi-access hashing, 1.5× numeric ranges (2/3
+    /// table occupancy, §4.3), deferred free (§4.6), no malloc overlap.
+    pub fn speck_like() -> Self {
+        OpSparseConfig {
+            sym_ranges: SymbolicRanges::Sym1x,
+            num_ranges: NumericRanges::Num15x,
+            hash_variant: HashVariant::MultiAccess,
+            binning_variant: BinningVariant::GlobalWide,
+            combined_metadata_malloc: false,
+            overlap_malloc: false,
+            deferred_free: true,
+            reuse_crpt: false,
+            num_streams: 4,
+        }
+    }
+}
+
+/// Everything a pipeline run produces: the result matrix, the device
+/// trace (for simulation), and measured statistics.
+#[derive(Clone, Debug)]
+pub struct SpgemmOutput {
+    pub c: Csr,
+    pub trace: Trace,
+    /// Total intermediate products (FLOPs = 2 × this).
+    pub nprod: usize,
+    /// Probe statistics: symbolic + numeric.
+    pub sym_stats: ProbeStats,
+    pub num_stats: ProbeStats,
+    /// Rows recomputed by the symbolic global-table kernel.
+    pub sym_fallback_rows: usize,
+}
+
+impl SpgemmOutput {
+    pub fn flops(&self) -> f64 {
+        2.0 * self.nprod as f64
+    }
+}
+
+/// Re-export of the setup-step n_prod kernel for the one-phase baseline.
+pub fn nprod_kernel_for_tests(a: &Csr, stream: usize) -> Kernel {
+    nprod_kernel(a, stream)
+}
+
+/// The n_prod kernel of the setup step: one thread per row of A walking
+/// `B.rpt` lookups.
+pub(crate) fn nprod_kernel(a: &Csr, stream: usize) -> Kernel {
+    const TB: usize = 256;
+    let nblocks = a.rows.div_ceil(TB).max(1);
+    let blocks: Vec<BlockWork> = (0..nblocks)
+        .map(|blk| {
+            let lo = blk * TB;
+            let hi = ((blk + 1) * TB).min(a.rows);
+            let a_nnz: u64 = (lo..hi).map(|r| a.row_nnz(r) as u64).sum();
+            BlockWork {
+                // read a.rpt pairs + a.col, read b.rpt per element, write nprod
+                global_bytes: (hi - lo) as u64 * 8 + a_nnz * 4 + a_nnz * 8 + (hi - lo) as u64 * 4,
+                ..Default::default()
+            }
+        })
+        .collect();
+    Kernel {
+        name: "setup_nprod".into(),
+        step: "setup",
+        stream,
+        tb_size: TB,
+        shared_bytes: 0,
+        blocks,
+    }
+}
+
+/// Emit the setup-step metadata mallocs per the configuration.
+fn emit_metadata_mallocs(trace: &mut Trace, m: usize, cfg: &OpSparseConfig) {
+    let crpt_bytes = 4 * (m + 1);
+    if cfg.combined_metadata_malloc {
+        let meta = metadata_bytes(m, cfg.binning_variant)
+            + if cfg.reuse_crpt { 0 } else { 2 * 4 * m }
+            + 1024; // cub exclusive-sum temp storage (§5.3)
+        trace.malloc(crpt_bytes + meta, "metadata+crpt", "setup");
+    } else {
+        trace.malloc(crpt_bytes, "c_rpt", "setup");
+        trace.malloc(4 * m, "bins", "setup");
+        trace.malloc(4 * NUM_BINS * 2 + 4, "bin_sizes", "setup");
+        if !cfg.reuse_crpt {
+            trace.malloc(4 * m, "d_nprod", "setup");
+            trace.malloc(4 * m, "d_nnz", "setup");
+        }
+        if cfg.binning_variant == BinningVariant::GlobalWide {
+            trace.malloc(4 * m * NUM_BINS, "bins_wide", "setup");
+        }
+        trace.malloc(1024, "cub_temp", "setup");
+    }
+}
+
+/// Run the full two-phase SpGEMM pipeline: computes `C = A * B` on the
+/// CPU while emitting the device trace the equivalent CUDA implementation
+/// would execute.
+pub fn multiply(a: &Csr, b: &Csr, cfg: &OpSparseConfig) -> Result<SpgemmOutput> {
+    ensure!(a.cols == b.rows, "dimension mismatch: {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let m = a.rows;
+    let mut trace = Trace::new();
+
+    // ---------------- step 1: setup ----------------
+    if cfg.overlap_malloc {
+        // launch the n_prod kernel first, then allocate metadata while it
+        // runs (§5.4, Fig. 2)
+        trace.launch(nprod_kernel(a, 0));
+        emit_metadata_mallocs(&mut trace, m, cfg);
+    } else {
+        emit_metadata_mallocs(&mut trace, m, cfg);
+        trace.launch(nprod_kernel(a, 0));
+    }
+    let nprod = nprod_per_row(a, b);
+    let nprod_total: usize = nprod.iter().sum();
+
+    // ---------------- step 2: symbolic binning ----------------
+    let sym_binning: BinningResult = bin_rows(&nprod, &cfg.sym_ranges.ranges());
+    emit_binning_kernels(&mut trace, "sym_binning", m, &sym_binning, cfg.binning_variant, 0);
+
+    // ---------------- step 3: symbolic ----------------
+    let sym = symbolic_step(a, b, &sym_binning, cfg.hash_variant, "symbolic", cfg.num_streams);
+    // global-table malloc for kernel8 rows: sized by their n_prod
+    let sym_global_bytes: usize = sym
+        .fallback_rows
+        .iter()
+        .map(|&r| {
+            let np: usize = a.row_cols(r as usize).iter().map(|&k| b.row_nnz(k as usize)).sum();
+            (np.next_power_of_two().max(1024) * 2) * 4
+        })
+        .sum();
+    let mut sym_kernels = sym.kernels.clone();
+    let has_global_sym = sym_kernels.last().map(|k| k.name.contains("global")).unwrap_or(false);
+    let global_sym_kernel = if has_global_sym { sym_kernels.pop() } else { None };
+    if cfg.overlap_malloc && !sym_kernels.is_empty() && sym_global_bytes > 0 {
+        // launch the first shared-table kernel, then malloc the global
+        // table behind it (§5.4)
+        let first = sym_kernels.remove(0);
+        trace.launch(first);
+        trace.malloc(sym_global_bytes, "sym_global_table", "symbolic");
+        for k in sym_kernels {
+            trace.launch(k);
+        }
+    } else {
+        if sym_global_bytes > 0 {
+            trace.malloc(sym_global_bytes, "sym_global_table", "symbolic");
+        }
+        for k in sym_kernels {
+            trace.launch(k);
+        }
+    }
+    if let Some(k) = global_sym_kernel {
+        trace.launch(k);
+        if !cfg.deferred_free && sym_global_bytes > 0 {
+            // nsparse: cudaFree immediately after the global kernel,
+            // implicitly synchronizing the device (§4.6)
+            trace.free("sym_global_table", "symbolic");
+        }
+    }
+
+    // ---------------- step 4: alloc C ----------------
+    let c_rpt = exclusive_sum(&sym.row_nnz);
+    let c_nnz = *c_rpt.last().unwrap();
+    let num_binning = bin_rows(&sym.row_nnz, &cfg.num_ranges.ranges());
+
+    // readback of the total nnz (tiny D2H copy, synchronizes)
+    trace.memcpy_d2h(8, "alloc_c");
+    // exclusive sum on C.rpt (in-place cub DeviceScan, §5.3): a streaming
+    // multi-block kernel
+    let exscan = Kernel {
+        name: "exscan_crpt".into(),
+        step: "alloc_c",
+        stream: 0,
+        tb_size: 256,
+        shared_bytes: 2048,
+        blocks: (0..m.div_ceil(2048).max(1))
+            .map(|blk| {
+                let lo = blk * 2048;
+                let rows = 2048.min(m + 1 - lo.min(m + 1));
+                BlockWork { global_bytes: rows as u64 * 8, ..Default::default() }
+            })
+            .collect(),
+    };
+    if cfg.overlap_malloc {
+        // §5.4: the binning pass kernels and the C.rpt scan run on the
+        // device while the C.col / C.val mallocs execute on the host
+        emit_binning_kernels(&mut trace, "num_binning", m, &num_binning, cfg.binning_variant, 0);
+        trace.launch(exscan);
+        trace.malloc(4 * c_nnz, "c_col", "alloc_c");
+        trace.malloc(8 * c_nnz, "c_val", "alloc_c");
+    } else {
+        emit_binning_kernels(&mut trace, "num_binning", m, &num_binning, cfg.binning_variant, 0);
+        trace.launch(exscan);
+        trace.device_sync("num_binning");
+        trace.malloc(4 * c_nnz, "c_col", "alloc_c");
+        trace.malloc(8 * c_nnz, "c_val", "alloc_c");
+    }
+
+    // ---------------- step 5: numeric ----------------
+    let num = numeric_step(a, b, &c_rpt, &num_binning, cfg.hash_variant, "numeric", cfg.num_streams);
+    // global tables for kernel7 rows
+    let num_global_bytes: usize = num_binning
+        .bin_rows(NUM_BINS - 1)
+        .iter()
+        .map(|&r| {
+            let nnz = c_rpt[r as usize + 1] - c_rpt[r as usize];
+            (nnz.next_power_of_two().max(1024) * 2) * 12
+        })
+        .sum();
+    let mut num_kernels = num.kernels.clone();
+    let has_global_num = num_kernels.first().map(|k| k.name.contains("global")).unwrap_or(false);
+    if cfg.overlap_malloc && has_global_num && num_kernels.len() > 1 {
+        // §6.3.5: launch one shared-table kernel first, then the global
+        // table malloc hides behind it; the global kernel follows.
+        let global = num_kernels.remove(0); // kernel7 is emitted first
+        // hide the global-table malloc behind the *largest* shared-table
+        // kernel (the paper's kernel runs >1ms at full scale, §6.3.5)
+        let biggest = num_kernels
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, k)| {
+                let w = k.total_work();
+                w.global_bytes + w.shared_accesses
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let first_shared = num_kernels.remove(biggest);
+        trace.launch(first_shared);
+        trace.malloc(num_global_bytes, "num_global_table", "numeric");
+        trace.launch(global);
+        if !cfg.deferred_free {
+            // nsparse behaviour: free right after the global kernel,
+            // implicitly synchronizing before the remaining launches
+            trace.free("num_global_table", "numeric");
+        }
+        for k in num_kernels {
+            trace.launch(k);
+        }
+    } else {
+        if num_global_bytes > 0 {
+            trace.malloc(num_global_bytes, "num_global_table", "numeric");
+        }
+        let eager_free = !cfg.deferred_free && has_global_num;
+        for (i, k) in num_kernels.into_iter().enumerate() {
+            let was_global = i == 0 && has_global_num;
+            trace.launch(k);
+            if was_global && eager_free {
+                trace.free("num_global_table", "numeric");
+            }
+        }
+    }
+
+    // ---------------- step 6: cleanup ----------------
+    trace.device_sync("cleanup");
+    if cfg.deferred_free {
+        if sym_global_bytes > 0 {
+            trace.free("sym_global_table", "cleanup");
+        }
+        if num_global_bytes > 0 {
+            trace.free("num_global_table", "cleanup");
+        }
+    }
+    trace.free("metadata", "cleanup");
+
+    Ok(SpgemmOutput {
+        c: num.c,
+        trace,
+        nprod: nprod_total,
+        sym_stats: sym.stats,
+        num_stats: num.stats,
+        sym_fallback_rows: sym.fallback_rows.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::suite::{suite_entry, SuiteScale};
+    use crate::gen::uniform::Uniform;
+    use crate::gpusim::{simulate, V100};
+    use crate::spgemm::reference::spgemm_reference;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn opsparse_matches_reference() {
+        let mut rng = Rng::new(11);
+        let a = Uniform { n: 300, per_row: 12, jitter: 6 }.generate(&mut rng);
+        let out = multiply(&a, &a, &OpSparseConfig::default()).unwrap();
+        let gold = spgemm_reference(&a, &a);
+        assert!(out.c.approx_eq(&gold, 1e-12), "{:?}", out.c.diff(&gold, 1e-12));
+        out.c.validate().unwrap();
+    }
+
+    #[test]
+    fn baselines_match_reference_too() {
+        let mut rng = Rng::new(12);
+        let a = Uniform { n: 200, per_row: 10, jitter: 5 }.generate(&mut rng);
+        let gold = spgemm_reference(&a, &a);
+        for cfg in [OpSparseConfig::nsparse_like(), OpSparseConfig::speck_like()] {
+            let out = multiply(&a, &a, &cfg).unwrap();
+            assert!(out.c.approx_eq(&gold, 1e-12));
+        }
+    }
+
+    #[test]
+    fn rectangular_multiply() {
+        let mut rng = Rng::new(13);
+        let a = {
+            let m = Uniform { n: 120, per_row: 6, jitter: 3 }.generate(&mut rng);
+            crate::sparse::ops::row_slice(&m, 0, 80).unwrap() // 80 x 120
+        };
+        let b = Uniform { n: 120, per_row: 6, jitter: 3 }.generate(&mut rng);
+        let out = multiply(&a, &b, &OpSparseConfig::default()).unwrap();
+        let gold = spgemm_reference(&a, &b);
+        assert!(out.c.approx_eq(&gold, 1e-12));
+    }
+
+    #[test]
+    fn trace_simulates_and_opsparse_beats_baselines() {
+        let e = suite_entry("cant").unwrap();
+        let a = e.generate(SuiteScale::Tiny);
+        let ops = multiply(&a, &a, &OpSparseConfig::default()).unwrap();
+        let nsp = multiply(&a, &a, &OpSparseConfig::nsparse_like()).unwrap();
+        let spk = multiply(&a, &a, &OpSparseConfig::speck_like()).unwrap();
+        let t_ops = simulate(&ops.trace, &V100).total_ns;
+        let t_nsp = simulate(&nsp.trace, &V100).total_ns;
+        let t_spk = simulate(&spk.trace, &V100).total_ns;
+        assert!(
+            t_ops < t_nsp && t_ops < t_spk,
+            "OpSparse should win: ops={t_ops} nsparse={t_nsp} speck={t_spk}"
+        );
+    }
+
+    #[test]
+    fn opsparse_allocates_less_metadata_than_speck() {
+        let mut rng = Rng::new(14);
+        let a = Uniform { n: 500, per_row: 8, jitter: 4 }.generate(&mut rng);
+        let ops = multiply(&a, &a, &OpSparseConfig::default()).unwrap();
+        let spk = multiply(&a, &a, &OpSparseConfig::speck_like()).unwrap();
+        assert!(ops.trace.malloc_bytes() < spk.trace.malloc_bytes());
+        assert!(ops.trace.malloc_calls() < spk.trace.malloc_calls());
+    }
+
+    #[test]
+    fn empty_and_identity_edge_cases() {
+        let z = Csr::zero(10, 10);
+        let out = multiply(&z, &z, &OpSparseConfig::default()).unwrap();
+        assert_eq!(out.c.nnz(), 0);
+        let i = Csr::identity(50);
+        let out = multiply(&i, &i, &OpSparseConfig::default()).unwrap();
+        assert!(out.c.approx_eq(&Csr::identity(50), 1e-15));
+    }
+
+    #[test]
+    fn dimension_mismatch_is_error() {
+        let a = Csr::zero(3, 4);
+        let b = Csr::zero(5, 3);
+        assert!(multiply(&a, &b, &OpSparseConfig::default()).is_err());
+    }
+
+    #[test]
+    fn flops_equal_twice_nprod() {
+        let mut rng = Rng::new(15);
+        let a = Uniform { n: 100, per_row: 7, jitter: 3 }.generate(&mut rng);
+        let out = multiply(&a, &a, &OpSparseConfig::default()).unwrap();
+        let nprod: usize = crate::sparse::stats::nprod_per_row(&a, &a).iter().sum();
+        assert_eq!(out.nprod, nprod);
+        assert_eq!(out.flops(), 2.0 * nprod as f64);
+    }
+}

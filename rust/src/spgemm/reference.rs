@@ -1,0 +1,159 @@
+//! Gold-standard SpGEMM used to validate every pipeline in the repo:
+//! row-wise sort-merge accumulation with exact duplicate merging. Slow-ish
+//! but simple enough to be obviously correct; also doubles as the
+//! "pure-CPU roofline" reference in EXPERIMENTS.md §Perf.
+
+use crate::sparse::Csr;
+
+/// Reference SpGEMM: `C = A * B` with sorted CSR output.
+///
+/// Per output row: gather all intermediate products `(col, val)`, sort by
+/// column, merge duplicates. O(nprod log nprod) per row.
+pub fn spgemm_reference(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.cols, b.rows, "inner dimension mismatch: {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut rpt = vec![0usize; a.rows + 1];
+    let mut col: Vec<u32> = Vec::new();
+    let mut val: Vec<f64> = Vec::new();
+    let mut scratch: Vec<(u32, f64)> = Vec::new();
+    for i in 0..a.rows {
+        scratch.clear();
+        let (acols, avals) = a.row(i);
+        for (&k, &av) in acols.iter().zip(avals) {
+            let (bcols, bvals) = b.row(k as usize);
+            for (&c, &bv) in bcols.iter().zip(bvals) {
+                scratch.push((c, av * bv));
+            }
+        }
+        scratch.sort_unstable_by_key(|&(c, _)| c);
+        let mut last: Option<u32> = None;
+        for &(c, v) in scratch.iter() {
+            if last == Some(c) {
+                *val.last_mut().unwrap() += v;
+            } else {
+                col.push(c);
+                val.push(v);
+                last = Some(c);
+            }
+        }
+        rpt[i + 1] = col.len();
+    }
+    Csr { rows: a.rows, cols: b.cols, rpt, col, val }
+}
+
+/// Symbolic-only reference: per-row nnz of `C` without computing values.
+pub fn symbolic_reference(a: &Csr, b: &Csr) -> Vec<usize> {
+    assert_eq!(a.cols, b.rows);
+    let mut out = vec![0usize; a.rows];
+    let mut scratch: Vec<u32> = Vec::new();
+    for i in 0..a.rows {
+        scratch.clear();
+        for &k in a.row_cols(i) {
+            scratch.extend_from_slice(b.row_cols(k as usize));
+        }
+        scratch.sort_unstable();
+        scratch.dedup();
+        out[i] = scratch.len();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Dense;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn random_csr(rows: usize, cols: usize, per_row: usize, rng: &mut Rng) -> Csr {
+        let mut rpt = vec![0usize];
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        let mut scratch = Vec::new();
+        for _ in 0..rows {
+            let k = rng.range(0, per_row + 1);
+            rng.sample_distinct(cols, k, &mut scratch);
+            for &c in &scratch {
+                col.push(c);
+                val.push(rng.value());
+            }
+            rpt.push(col.len());
+        }
+        Csr::from_parts(rows, cols, rpt, col, val).unwrap()
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(1);
+        let a = random_csr(20, 20, 5, &mut rng);
+        let i = Csr::identity(20);
+        assert_eq!(spgemm_reference(&a, &i), a);
+        assert_eq!(spgemm_reference(&i, &a), a);
+    }
+
+    #[test]
+    fn matches_dense_oracle() {
+        let mut rng = Rng::new(2);
+        for _ in 0..10 {
+            let a = random_csr(12, 9, 4, &mut rng);
+            let b = random_csr(9, 14, 4, &mut rng);
+            let c = spgemm_reference(&a, &b);
+            c.validate().unwrap();
+            let dc = Dense::from(&a).matmul(&Dense::from(&b));
+            let got = Dense::from(&c);
+            for i in 0..12 {
+                for j in 0..14 {
+                    assert!(
+                        (dc.get(i, j) - got.get(i, j)).abs() < 1e-12,
+                        "mismatch at ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symbolic_matches_numeric_structure() {
+        let mut rng = Rng::new(3);
+        let a = random_csr(30, 25, 6, &mut rng);
+        let b = random_csr(25, 30, 6, &mut rng);
+        let c = spgemm_reference(&a, &b);
+        let sym = symbolic_reference(&a, &b);
+        for i in 0..30 {
+            assert_eq!(sym[i], c.row_nnz(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn prop_output_always_valid_csr() {
+        prop::check(
+            "reference-valid-csr",
+            24,
+            24,
+            |rng, size| {
+                let a = random_csr(size, size, 5, rng);
+                let b = random_csr(size, size, 5, rng);
+                (a, b)
+            },
+            |(a, b)| {
+                let c = spgemm_reference(a, b);
+                c.validate().map_err(|e| e.to_string())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_matrices() {
+        let z = Csr::zero(5, 5);
+        let c = spgemm_reference(&z, &z);
+        assert_eq!(c.nnz(), 0);
+        assert_eq!(c.rows, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimension mismatch")]
+    fn dimension_mismatch_panics() {
+        let a = Csr::zero(2, 3);
+        let b = Csr::zero(4, 2);
+        spgemm_reference(&a, &b);
+    }
+}

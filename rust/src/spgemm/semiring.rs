@@ -1,0 +1,191 @@
+//! Semiring-generalized SpGEMM.
+//!
+//! The paper's motivating applications (§1) multiply over more than the
+//! real `(+, ×)` ring: multi-source BFS uses the boolean `(∨, ∧)`
+//! semiring, shortest-path relaxations use the tropical `(min, +)`
+//! semiring. Values stay `f64`-encoded (bool as 0/1, tropical with
+//! `+inf` as the additive identity) so the CSR substrate is reused.
+//!
+//! This path is sort-merge based (the apps are not the hot path); the
+//! optimized hash pipeline covers the `(+, ×)` case.
+
+use crate::sparse::Csr;
+
+/// A semiring over f64-encoded values.
+pub trait Semiring {
+    /// Additive identity (the "structural zero" — entries equal to it are
+    /// pruned from the output).
+    const ZERO: f64;
+    /// Semiring addition (accumulation).
+    fn add(a: f64, b: f64) -> f64;
+    /// Semiring multiplication.
+    fn mul(a: f64, b: f64) -> f64;
+}
+
+/// The ordinary `(+, ×)` ring.
+pub struct PlusTimes;
+impl Semiring for PlusTimes {
+    const ZERO: f64 = 0.0;
+    fn add(a: f64, b: f64) -> f64 {
+        a + b
+    }
+    fn mul(a: f64, b: f64) -> f64 {
+        a * b
+    }
+}
+
+/// Boolean `(∨, ∧)` on 0/1 values.
+pub struct BoolOrAnd;
+impl Semiring for BoolOrAnd {
+    const ZERO: f64 = 0.0;
+    fn add(a: f64, b: f64) -> f64 {
+        if a != 0.0 || b != 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    }
+    fn mul(a: f64, b: f64) -> f64 {
+        if a != 0.0 && b != 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Tropical `(min, +)`: shortest-path relaxation.
+pub struct MinPlus;
+impl Semiring for MinPlus {
+    const ZERO: f64 = f64::INFINITY;
+    fn add(a: f64, b: f64) -> f64 {
+        a.min(b)
+    }
+    fn mul(a: f64, b: f64) -> f64 {
+        a + b
+    }
+}
+
+/// `C = A ⊗ B` over semiring `S` (row-wise sort-merge accumulation).
+pub fn spgemm_semiring<S: Semiring>(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.cols, b.rows, "inner dimension mismatch");
+    let mut rpt = vec![0usize; a.rows + 1];
+    let mut col: Vec<u32> = Vec::new();
+    let mut val: Vec<f64> = Vec::new();
+    let mut scratch: Vec<(u32, f64)> = Vec::new();
+    for i in 0..a.rows {
+        scratch.clear();
+        let (acols, avals) = a.row(i);
+        for (&k, &av) in acols.iter().zip(avals) {
+            let (bcols, bvals) = b.row(k as usize);
+            for (&c, &bv) in bcols.iter().zip(bvals) {
+                scratch.push((c, S::mul(av, bv)));
+            }
+        }
+        scratch.sort_unstable_by_key(|&(c, _)| c);
+        let mut last: Option<u32> = None;
+        for &(c, v) in scratch.iter() {
+            if last == Some(c) {
+                let acc = val.last_mut().unwrap();
+                *acc = S::add(*acc, v);
+            } else {
+                col.push(c);
+                val.push(v);
+                last = Some(c);
+            }
+        }
+        // prune structural zeros produced by the accumulation
+        let row_start = rpt[i];
+        let mut w = row_start;
+        for r in row_start..col.len() {
+            if val[r] != S::ZERO {
+                col[w] = col[r];
+                val[w] = val[r];
+                w += 1;
+            }
+        }
+        col.truncate(w);
+        val.truncate(w);
+        rpt[i + 1] = col.len();
+    }
+    Csr { rows: a.rows, cols: b.cols, rpt, col, val }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spgemm::reference::spgemm_reference;
+    use crate::util::rng::Rng;
+
+    fn random_csr(n: usize, per_row: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut rpt = vec![0usize];
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        let mut scratch = Vec::new();
+        for _ in 0..n {
+            let k = rng.range(0, per_row + 1);
+            rng.sample_distinct(n, k, &mut scratch);
+            for &c in &scratch {
+                col.push(c);
+                val.push(rng.value());
+            }
+            rpt.push(col.len());
+        }
+        Csr::from_parts(n, n, rpt, col, val).unwrap()
+    }
+
+    #[test]
+    fn plus_times_matches_reference() {
+        let a = random_csr(40, 5, 1);
+        let b = random_csr(40, 5, 2);
+        let s = spgemm_semiring::<PlusTimes>(&a, &b);
+        let gold = spgemm_reference(&a, &b);
+        // the semiring path additionally prunes exact-zero results; on
+        // random values exact cancellation has measure zero
+        assert!(s.approx_eq(&gold, 1e-12), "{:?}", s.diff(&gold, 1e-12));
+    }
+
+    #[test]
+    fn boolean_reachability() {
+        // path graph 0 -> 1 -> 2: A^2 over bool = 2-step reachability
+        let a = Csr::from_parts(3, 3, vec![0, 1, 2, 2], vec![1, 2], vec![1.0, 1.0]).unwrap();
+        let r2 = spgemm_semiring::<BoolOrAnd>(&a, &a);
+        assert_eq!(r2.get(0, 2), 1.0);
+        assert_eq!(r2.nnz(), 1);
+    }
+
+    #[test]
+    fn boolean_is_idempotent_on_values() {
+        let a = random_csr(30, 6, 3);
+        // force all values to 1
+        let ones = Csr { val: vec![1.0; a.nnz()], ..a.clone() };
+        let c = spgemm_semiring::<BoolOrAnd>(&ones, &ones);
+        assert!(c.val.iter().all(|&v| v == 1.0), "boolean output must be 0/1");
+    }
+
+    #[test]
+    fn tropical_two_hop_shortest_paths() {
+        // 0 -(2)-> 1 -(3)-> 2 and 0 -(10)-> 2 directly (as an edge in A);
+        // A ⊗ A over (min,+) holds the best 2-hop distances
+        let a = Csr::from_parts(
+            3,
+            3,
+            vec![0, 2, 3, 3],
+            vec![1, 2, 2],
+            vec![2.0, 10.0, 3.0],
+        )
+        .unwrap();
+        let d2 = spgemm_semiring::<MinPlus>(&a, &a);
+        assert_eq!(d2.get(0, 2), 5.0, "min(2+3) beats nothing else");
+    }
+
+    #[test]
+    fn zero_pruning() {
+        // (min,+): entries that stay +inf must not be stored
+        let a = Csr::from_parts(2, 2, vec![0, 1, 1], vec![0], vec![1.0]).unwrap();
+        let c = spgemm_semiring::<MinPlus>(&a, &a);
+        c.validate().unwrap();
+        assert!(c.val.iter().all(|&v| v.is_finite()));
+    }
+}

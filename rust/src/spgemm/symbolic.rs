@@ -1,0 +1,324 @@
+//! Symbolic step (paper §5.6.1, Algorithm 4): compute each output row's
+//! nnz with per-bin hash kernels. Multiplication is avoided — only the
+//! index structure of A and B is touched.
+//!
+//! Rows binned by `n_prod` are computed by kernel0–kernel7 with
+//! shared-memory hash tables; rows whose *actual* distinct-column count
+//! exceeds `0.8 ×` kernel7's table are recorded and recomputed by kernel8
+//! with a global-memory table.
+
+use super::binning::BinningResult;
+use super::hash_table::{HashAccumulator, ProbeStats};
+use super::kernel_tables::{
+    symbolic_kernels, KernelConfig, SYMBOLIC_GLOBAL_FALLBACK_FRACTION, SYM_SLOT_BYTES,
+};
+use super::HashVariant;
+use crate::gpusim::trace::{BlockWork, Kernel};
+use crate::sparse::Csr;
+
+/// Result of the symbolic step.
+#[derive(Clone, Debug)]
+pub struct SymbolicOutput {
+    /// Per-row nnz of C (the paper stores this in the reused `C.rpt`).
+    pub row_nnz: Vec<usize>,
+    /// Rows recomputed by the global-table kernel8.
+    pub fallback_rows: Vec<u32>,
+    /// Aggregate probe statistics (Fig 9 metric).
+    pub stats: ProbeStats,
+    /// Per-bin kernels ready to append to a trace (kernel8 last).
+    pub kernels: Vec<Kernel>,
+}
+
+/// Per-row work counters for one symbolic row computation. `b_reuse`
+/// discounts B-row traffic for L2 reuse (rows of B are re-read by many
+/// rows of A when the compression ratio is high).
+fn row_block_work(
+    a: &Csr,
+    b: &Csr,
+    row: usize,
+    table_init_words: u64,
+    stats_delta: &ProbeStats,
+    b_reuse: f64,
+) -> BlockWork {
+    // global traffic: A row columns, B row-pointer pairs + B row columns,
+    // one 4-byte nnz write
+    let a_nnz = a.row_nnz(row) as u64;
+    let b_cols: u64 = a.row_cols(row).iter().map(|&k| b.row_nnz(k as usize) as u64).sum();
+    // hash collisions serialize at warp granularity (the whole warp spins
+    // until its slowest lane exits the probe loop): charge the collision
+    // excess at 3x extra on top of the smooth access cost
+    let collision_excess = stats_delta.probe_iters - stats_delta.inserts;
+    BlockWork {
+        global_bytes: a_nnz * 4 + a_nnz * 8 + (b_cols as f64 * 4.0 * b_reuse) as u64 + 4,
+        shared_accesses: table_init_words + stats_delta.table_accesses + 3 * collision_excess,
+        global_atomics: 0,
+        mod_ops: stats_delta.mod_ops,
+        flops: 0,
+    }
+}
+
+/// Compute the symbolic step for all bins.
+///
+/// `binning` must be over `n_prod` with the symbolic ranges. Returns the
+/// per-row nnz plus the kernels (with measured per-block work) in the
+/// paper's launch order: **largest bins first** (§5.5), kernel8 last
+/// after its table malloc.
+pub fn symbolic_step(
+    a: &Csr,
+    b: &Csr,
+    binning: &BinningResult,
+    variant: HashVariant,
+    step: &'static str,
+    num_streams: usize,
+) -> SymbolicOutput {
+    // L2 reuse factor: effective fraction of B-row traffic that misses
+    // cache, estimated from the global reuse ratio nnz(B)/n_prod.
+    let nprod_total: usize = (0..a.rows)
+        .map(|i| a.row_cols(i).iter().map(|&k| b.row_nnz(k as usize)).sum::<usize>())
+        .sum();
+    let b_reuse = (b.nnz() as f64 / nprod_total.max(1) as f64).clamp(0.15, 1.0);
+    let configs = symbolic_kernels();
+    let mut row_nnz = vec![0usize; a.rows];
+    let mut fallback_rows: Vec<u32> = Vec::new();
+    let mut stats = ProbeStats::default();
+    let mut kernels: Vec<Kernel> = Vec::new();
+
+    // launch order: large bins first (bin7 .. bin0), global fallback last
+    let bin_order: Vec<usize> = (0..super::kernel_tables::NUM_BINS).rev().collect();
+    let mut stream = 0usize;
+    let fallback_threshold =
+        (configs[7].table_size.unwrap() as f64 * SYMBOLIC_GLOBAL_FALLBACK_FRACTION) as usize;
+
+    for &bin in &bin_order {
+        let rows = binning.bin_rows(bin);
+        if rows.is_empty() {
+            continue;
+        }
+        let cfg: &KernelConfig = &configs[bin.min(7)];
+        let t_size = cfg.table_size.unwrap();
+        // table init is a coalesced, conflict-free, vectorized memset:
+        // charge it at 1/8 the cost of a random probe access
+        let init_words = (t_size * SYM_SLOT_BYTES / 4 / 8) as u64 + 1;
+        let mut table = HashAccumulator::new(t_size, variant);
+        let mut blocks: Vec<BlockWork> = Vec::with_capacity(rows.len() / cfg.rows_per_block + 1);
+        let mut group = BlockWork::default();
+        let mut in_group = 0usize;
+        for &r in rows {
+            let r = r as usize;
+            table.reset();
+            let before = table.stats;
+            let mut nnz = 0usize;
+            let mut overflow = bin == 7 && a.row_nnz(r) > 0; // candidate only in bin7
+            let mut exceeded = false;
+            'outer: for &k in a.row_cols(r) {
+                for &c in b.row_cols(k as usize) {
+                    match table.insert_symbolic(c) {
+                        Some(true) => {
+                            nnz += 1;
+                            if bin == 7 && nnz > fallback_threshold {
+                                exceeded = true;
+                                break 'outer;
+                            }
+                        }
+                        Some(false) => {}
+                        None => {
+                            exceeded = true;
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            overflow = overflow && exceeded;
+            let delta = ProbeStats {
+                inserts: table.stats.inserts - before.inserts,
+                probe_iters: table.stats.probe_iters - before.probe_iters,
+                table_accesses: table.stats.table_accesses - before.table_accesses,
+                mod_ops: table.stats.mod_ops - before.mod_ops,
+            };
+            let w = row_block_work(a, b, r, init_words, &delta, b_reuse);
+            if overflow {
+                fallback_rows.push(r as u32);
+                // the aborted attempt still cost its probes
+            } else {
+                row_nnz[r] = nnz;
+            }
+            if cfg.rows_per_block > 1 {
+                group.add(&w);
+                in_group += 1;
+                if in_group == cfg.rows_per_block {
+                    blocks.push(group);
+                    group = BlockWork::default();
+                    in_group = 0;
+                }
+            } else {
+                blocks.push(w);
+            }
+        }
+        if in_group > 0 {
+            blocks.push(group);
+        }
+        stats.add(&table.stats);
+        kernels.push(Kernel {
+            name: format!("sym_kernel{}", cfg.index),
+            step,
+            stream: {
+                stream = (stream + 1) % num_streams.max(1);
+                stream
+            },
+            tb_size: cfg.tb_size,
+            shared_bytes: cfg.shared_bytes,
+            blocks,
+        });
+    }
+
+    // kernel8: global-table recompute of overflowed rows
+    if !fallback_rows.is_empty() {
+        let cfg = &configs[8];
+        let mut blocks = Vec::with_capacity(fallback_rows.len());
+        for &r in &fallback_rows {
+            let r = r as usize;
+            // global table sized to next power of two above n_prod
+            let nprod: usize = a.row_cols(r).iter().map(|&k| b.row_nnz(k as usize)).sum();
+            let t_size = nprod.next_power_of_two().max(1024) * 2;
+            let mut table = HashAccumulator::new(t_size, variant);
+            let mut nnz = 0usize;
+            for &k in a.row_cols(r) {
+                for &c in b.row_cols(k as usize) {
+                    if table.insert_symbolic(c).expect("global table overflow") {
+                        nnz += 1;
+                    }
+                }
+            }
+            row_nnz[r] = nnz;
+            // the table lives in *global* memory: every probe is global
+            // traffic (4 bytes/access), plus the init memset
+            let a_nnz = a.row_nnz(r) as u64;
+            let b_cols: u64 = a.row_cols(r).iter().map(|&k| b.row_nnz(k as usize) as u64).sum();
+            blocks.push(BlockWork {
+                global_bytes: a_nnz * 12
+                    + (b_cols as f64 * 4.0 * b_reuse) as u64
+                    + 4
+                    + t_size as u64 * 4 // init
+                    + table.stats.table_accesses * 4,
+                shared_accesses: 1,
+                global_atomics: 0,
+                mod_ops: table.stats.mod_ops,
+                flops: 0,
+            });
+            stats.add(&table.stats);
+        }
+        kernels.push(Kernel {
+            name: "sym_kernel8_global".into(),
+            step,
+            stream: 0,
+            tb_size: cfg.tb_size,
+            shared_bytes: cfg.shared_bytes,
+            blocks,
+        });
+    }
+
+    SymbolicOutput { row_nnz, fallback_rows, stats, kernels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::uniform::Uniform;
+    use crate::sparse::stats::nprod_per_row;
+    use crate::spgemm::binning::bin_rows;
+    use crate::spgemm::kernel_tables::SymbolicRanges;
+    use crate::spgemm::reference::symbolic_reference;
+    use crate::util::rng::Rng;
+
+    fn run(a: &Csr, variant: HashVariant, ranges: SymbolicRanges) -> SymbolicOutput {
+        let nprod = nprod_per_row(a, a);
+        let binning = bin_rows(&nprod, &ranges.ranges());
+        symbolic_step(a, a, &binning, variant, "symbolic", 4)
+    }
+
+    #[test]
+    fn matches_reference_on_random() {
+        let mut rng = Rng::new(77);
+        let a = Uniform { n: 300, per_row: 12, jitter: 6 }.generate(&mut rng);
+        let out = run(&a, HashVariant::SingleAccess, SymbolicRanges::Sym12x);
+        assert_eq!(out.row_nnz, symbolic_reference(&a, &a));
+    }
+
+    #[test]
+    fn variants_agree_semantically() {
+        let mut rng = Rng::new(78);
+        let a = Uniform { n: 200, per_row: 10, jitter: 5 }.generate(&mut rng);
+        let s = run(&a, HashVariant::SingleAccess, SymbolicRanges::Sym12x);
+        let m = run(&a, HashVariant::MultiAccess, SymbolicRanges::Sym12x);
+        assert_eq!(s.row_nnz, m.row_nnz);
+        assert!(m.stats.table_accesses > s.stats.table_accesses);
+    }
+
+    #[test]
+    fn all_range_presets_agree() {
+        let mut rng = Rng::new(79);
+        let a = Uniform { n: 150, per_row: 20, jitter: 10 }.generate(&mut rng);
+        let gold = symbolic_reference(&a, &a);
+        for r in SymbolicRanges::all() {
+            assert_eq!(run(&a, HashVariant::SingleAccess, r).row_nnz, gold, "{:?}", r);
+        }
+    }
+
+    #[test]
+    fn dense_rows_take_global_fallback() {
+        // one row of A references many B rows with wide fanout so its
+        // output exceeds kernel7's 0.8 threshold => kernel8 path
+        let n = 30_000usize;
+        let mut rpt = vec![0usize; n + 1];
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        // row 0: points at 25_000 distinct columns
+        for c in 0..25_000u32 {
+            col.push(c);
+            val.push(1.0);
+        }
+        rpt[1] = col.len();
+        // remaining rows: 1 diagonal entry
+        for r in 1..n {
+            col.push(r as u32);
+            val.push(1.0);
+            rpt[r + 1] = col.len();
+        }
+        let a = Csr::from_parts(n, n, rpt, col, val).unwrap();
+        let out = run(&a, HashVariant::SingleAccess, SymbolicRanges::Sym12x);
+        assert!(
+            out.fallback_rows.contains(&0),
+            "row 0 (nnz 25000 > 0.8*24575) must fall back, got {:?}",
+            &out.fallback_rows
+        );
+        assert_eq!(out.row_nnz, symbolic_reference(&a, &a));
+        assert!(out.kernels.iter().any(|k| k.name == "sym_kernel8_global"));
+    }
+
+    #[test]
+    fn kernels_cover_all_nonempty_bins_large_first() {
+        let mut rng = Rng::new(80);
+        let a = Uniform { n: 400, per_row: 15, jitter: 10 }.generate(&mut rng);
+        let out = run(&a, HashVariant::SingleAccess, SymbolicRanges::Sym12x);
+        assert!(!out.kernels.is_empty());
+        // kernel indices should be non-increasing (large bins first)
+        let idx: Vec<usize> = out
+            .kernels
+            .iter()
+            .filter(|k| k.name.starts_with("sym_kernel") && !k.name.contains("global"))
+            .map(|k| k.name[10..].parse::<usize>().unwrap())
+            .collect();
+        let mut sorted = idx.clone();
+        sorted.sort_unstable_by(|x, y| y.cmp(x));
+        assert_eq!(idx, sorted, "kernels must be emitted largest-bin first");
+    }
+
+    #[test]
+    fn kernel0_groups_rows_per_block() {
+        // all-tiny matrix => bin0 only; blocks = ceil(rows / 256)
+        let a = Csr::identity(1000);
+        let out = run(&a, HashVariant::SingleAccess, SymbolicRanges::Sym12x);
+        let k0 = out.kernels.iter().find(|k| k.name == "sym_kernel0").unwrap();
+        assert_eq!(k0.blocks.len(), 1000usize.div_ceil(256));
+    }
+}

@@ -1,0 +1,77 @@
+//! Human-readable formatting helpers used by the CLI, benches, and reports.
+
+/// Format a nanosecond duration as an adaptive human string.
+pub fn ns(t: f64) -> String {
+    if t < 1e3 {
+        format!("{t:.0}ns")
+    } else if t < 1e6 {
+        format!("{:.2}us", t / 1e3)
+    } else if t < 1e9 {
+        format!("{:.3}ms", t / 1e6)
+    } else {
+        format!("{:.3}s", t / 1e9)
+    }
+}
+
+/// Format a byte count (binary units).
+pub fn bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+/// Format GFLOPS with 2 decimals.
+pub fn gflops(flops: f64, time_ns: f64) -> f64 {
+    if time_ns <= 0.0 {
+        return 0.0;
+    }
+    flops / time_ns
+}
+
+/// Format a count with thousands separators (1,234,567).
+pub fn count(n: usize) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ns_units() {
+        assert_eq!(ns(500.0), "500ns");
+        assert_eq!(ns(1500.0), "1.50us");
+        assert_eq!(ns(2.5e6), "2.500ms");
+        assert_eq!(ns(3.2e9), "3.200s");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512B");
+        assert_eq!(bytes(4 * 1024 * 1024), "4.00MiB");
+    }
+
+    #[test]
+    fn count_separators() {
+        assert_eq!(count(5), "5");
+        assert_eq!(count(1234), "1,234");
+        assert_eq!(count(1234567), "1,234,567");
+    }
+}

@@ -1,0 +1,53 @@
+//! Small self-contained utilities: deterministic RNG, property-test helper,
+//! human-readable formatting. The build is fully offline, so we avoid the
+//! `rand`/`proptest` crates and keep these in-house.
+
+pub mod fmt;
+pub mod prop;
+pub mod rng;
+
+/// Exclusive prefix sum over `v`, returning a vector one element longer whose
+/// last entry is the total. This is the CPU analog of
+/// `cub::DeviceScan::ExclusiveSum` used throughout the paper's pipeline.
+pub fn exclusive_sum(v: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(v.len() + 1);
+    let mut acc = 0usize;
+    out.push(0);
+    for &x in v {
+        acc += x;
+        out.push(acc);
+    }
+    out
+}
+
+/// In-place exclusive prefix sum over `v` where the live counts occupy
+/// `v[..v.len()-1]`; mirrors the in-place CUB scan the paper relies on when
+/// it reuses `C.rpt` for the per-row nnz counts (§5.3).
+pub fn exclusive_sum_in_place(v: &mut [usize]) {
+    let mut acc = 0usize;
+    for slot in v.iter_mut() {
+        let x = *slot;
+        *slot = acc;
+        acc += x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exclusive_sum_basic() {
+        assert_eq!(exclusive_sum(&[1, 2, 3]), vec![0, 1, 3, 6]);
+        assert_eq!(exclusive_sum(&[]), vec![0]);
+    }
+
+    #[test]
+    fn exclusive_sum_in_place_matches() {
+        let src = [5usize, 0, 7, 1];
+        let mut buf = vec![0usize; src.len() + 1];
+        buf[..src.len()].copy_from_slice(&src);
+        exclusive_sum_in_place(&mut buf);
+        assert_eq!(buf, exclusive_sum(&src));
+    }
+}

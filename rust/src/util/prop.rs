@@ -1,0 +1,80 @@
+//! Minimal property-testing harness (offline build: no `proptest`).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs
+//! from independent seeds; on failure it retries the failing seed with a
+//! sequence of "shrink" attempts produced by the generator itself (the
+//! generator receives a `size` knob that the harness lowers on failure),
+//! then panics with the seed + size so the case is reproducible.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` random inputs. `make` builds an input from
+/// `(rng, size)`; `prop` returns `Err(msg)` on violation.
+pub fn check<T, F, P>(name: &str, cases: usize, base_size: usize, mut make: F, mut prop: P)
+where
+    T: std::fmt::Debug,
+    F: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = make(&mut rng, base_size);
+        if let Err(msg) = prop(&input) {
+            // try shrinking: regenerate at smaller sizes with the same seed
+            let mut smallest: Option<(usize, T, String)> = None;
+            let mut size = base_size / 2;
+            while size >= 1 {
+                let mut srng = Rng::new(seed);
+                let small = make(&mut srng, size);
+                if let Err(smsg) = prop(&small) {
+                    smallest = Some((size, small, smsg));
+                    size /= 2;
+                } else {
+                    break;
+                }
+            }
+            match smallest {
+                Some((ssize, sinput, smsg)) => panic!(
+                    "property `{name}` failed (seed={seed:#x}, shrunk size={ssize}):\n  {smsg}\n  input: {sinput:?}"
+                ),
+                None => panic!(
+                    "property `{name}` failed (seed={seed:#x}, size={base_size}):\n  {msg}\n  input: {input:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(
+            "count",
+            32,
+            10,
+            |rng, size| rng.range(0, size.max(1)),
+            |_| {
+                n += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            4,
+            8,
+            |rng, _| rng.next_u64(),
+            |_| Err("nope".into()),
+        );
+    }
+}

@@ -1,0 +1,176 @@
+//! Deterministic, seedable RNG (splitmix64 + xoshiro256**). Offline build:
+//! no `rand` crate, and determinism matters — the synthetic Table-3 suite
+//! must be bit-reproducible across runs so EXPERIMENTS.md numbers are stable.
+
+/// splitmix64: used to seed xoshiro and for cheap one-shot hashing.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality, tiny.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift reduction.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Nonzero value in roughly `[-1, 1] \ {0}`; used for matrix values.
+    #[inline]
+    pub fn value(&mut self) -> f64 {
+        let v = self.f64() * 2.0 - 1.0;
+        if v == 0.0 {
+            0.5
+        } else {
+            v
+        }
+    }
+
+    /// Sample from a (truncated) power-law over `[1, max]` with exponent
+    /// `alpha > 1` via inverse-CDF. Drives the webbase-like generator where a
+    /// handful of rows are enormous (max nnz/row 4700 in Table 3).
+    pub fn power_law(&mut self, max: usize, alpha: f64) -> usize {
+        let u = self.f64();
+        let m = max as f64;
+        let one_m_a = 1.0 - alpha;
+        // inverse CDF of p(x) ~ x^-alpha on [1, m]
+        let x = ((m.powf(one_m_a) - 1.0) * u + 1.0).powf(1.0 / one_m_a);
+        (x as usize).clamp(1, max)
+    }
+
+    /// Fisher–Yates sample of `k` distinct items from `[0, n)` (k << n uses
+    /// rejection through a small set; otherwise partial shuffle).
+    pub fn sample_distinct(&mut self, n: usize, k: usize, out: &mut Vec<u32>) {
+        out.clear();
+        if k == 0 || n == 0 {
+            return;
+        }
+        let k = k.min(n);
+        if k * 8 < n {
+            // sparse: rejection sampling with sort-dedup fallback
+            while out.len() < k {
+                let c = self.below(n as u64) as u32;
+                if !out.contains(&c) {
+                    out.push(c);
+                }
+            }
+        } else {
+            // dense: reservoir over the full range
+            let mut pool: Vec<u32> = (0..n as u32).collect();
+            for i in 0..k {
+                let j = self.range(i, n);
+                pool.swap(i, j);
+            }
+            out.extend_from_slice(&pool[..k]);
+        }
+        out.sort_unstable();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(2);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn power_law_bounds_and_skew() {
+        let mut r = Rng::new(3);
+        let mut ones = 0;
+        for _ in 0..10_000 {
+            let x = r.power_law(1000, 2.2);
+            assert!((1..=1000).contains(&x));
+            if x == 1 {
+                ones += 1;
+            }
+        }
+        // heavy head: most draws are tiny
+        assert!(ones > 4000, "power law should be head-heavy, got {ones}");
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut r = Rng::new(4);
+        let mut out = Vec::new();
+        for &(n, k) in &[(100usize, 5usize), (10, 10), (50, 40), (1, 1)] {
+            r.sample_distinct(n, k, &mut out);
+            assert_eq!(out.len(), k.min(n));
+            let mut sorted = out.clone();
+            sorted.dedup();
+            assert_eq!(sorted.len(), out.len(), "duplicates in sample");
+            assert!(out.iter().all(|&c| (c as usize) < n));
+            assert!(out.windows(2).all(|w| w[0] < w[1]), "must be sorted");
+        }
+    }
+}

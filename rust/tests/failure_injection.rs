@@ -1,0 +1,178 @@
+//! Failure injection and robustness: malformed inputs must produce
+//! errors, never panics or silent corruption.
+
+use opsparse::baselines::Library;
+use opsparse::gpusim::{simulate, BlockWork, Kernel, Trace, V100};
+use opsparse::sparse::{mmio, Csr};
+use opsparse::spgemm::pipeline::{multiply, OpSparseConfig};
+use opsparse::util::prop::check;
+use opsparse::util::rng::Rng;
+
+#[test]
+fn fuzzed_matrix_market_never_panics() {
+    // random byte soups and near-miss headers must all return Err
+    let cases: Vec<String> = vec![
+        String::new(),
+        "%%MatrixMarket".into(),
+        "%%MatrixMarket matrix coordinate real general".into(), // no size
+        "%%MatrixMarket matrix coordinate real general\n-1 2 1\n1 1 1.0".into(),
+        "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1".into(), // missing value
+        "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 notanumber".into(),
+        "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 0".into(),
+        "%%MatrixMarket matrix coordinate real general\n2 2 9999999999999\n".into(),
+        "\u{0}\u{1}\u{2}garbage\nbinary\u{7f}".into(),
+    ];
+    for (i, text) in cases.iter().enumerate() {
+        let r = mmio::read_matrix_market(text.as_bytes());
+        assert!(r.is_err(), "case {i} should be rejected: {text:?}");
+    }
+}
+
+#[test]
+fn fuzzed_random_bytes_into_parser() {
+    check(
+        "mmio-fuzz",
+        48,
+        256,
+        |rng: &mut Rng, size| {
+            let n = rng.range(1, size.max(2));
+            let mut bytes = Vec::with_capacity(n + 48);
+            // half the cases start with a valid-ish header to reach the
+            // deeper parsing paths
+            if rng.f64() < 0.5 {
+                bytes.extend_from_slice(b"%%MatrixMarket matrix coordinate real general\n");
+            }
+            for _ in 0..n {
+                // printable-biased bytes
+                let b = match rng.below(4) {
+                    0 => b' ',
+                    1 => b'\n',
+                    2 => b'0' + (rng.below(10) as u8),
+                    _ => rng.below(256) as u8,
+                };
+                bytes.push(b);
+            }
+            bytes
+        },
+        |bytes| {
+            // must not panic; any Ok result must be a valid matrix
+            match mmio::read_matrix_market(bytes.as_slice()) {
+                Ok(m) => m.validate().map_err(|e| format!("parsed invalid CSR: {e}")),
+                Err(_) => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn mismatched_dims_error_everywhere() {
+    let a = Csr::zero(4, 7);
+    let b = Csr::zero(6, 4);
+    for lib in Library::all() {
+        assert!(lib.run(&a, &b).is_err(), "{} accepted bad dims", lib.name());
+    }
+}
+
+#[test]
+fn pathological_single_column_matrix() {
+    // every row hits the same column: maximal duplicate-key pressure
+    let n = 2000usize;
+    let rpt: Vec<usize> = (0..=n).collect();
+    let col = vec![0u32; n];
+    let val = vec![1.0f64; n];
+    let a = Csr::from_parts(n, n, rpt, col, val).unwrap();
+    let out = multiply(&a, &a, &OpSparseConfig::default()).unwrap();
+    // A*A: row i = A[i,0] * row0 of A = [1 at col 0] => all rows [0]->1
+    assert_eq!(out.c.nnz(), n);
+    assert!(out.c.val.iter().all(|&v| v == 1.0));
+}
+
+#[test]
+fn pathological_dense_row_matrix() {
+    // one fully dense row among empties
+    let n = 3000usize;
+    let mut rpt = vec![0usize; n + 1];
+    let col: Vec<u32> = (0..n as u32).collect();
+    let val = vec![0.5f64; n];
+    for slot in rpt.iter_mut().skip(1) {
+        *slot = n;
+    }
+    let a = Csr::from_parts(n, n, rpt.clone(), col, val).unwrap();
+    // only row 0 dense: fix rpt so rows 1.. are empty
+    let mut rpt2 = vec![0usize; n + 1];
+    for slot in rpt2.iter_mut().skip(1) {
+        *slot = n;
+    }
+    let _ = a; // (a above had every row dense via shared rpt — also fine)
+    let a2 = Csr::from_parts(
+        n,
+        n,
+        rpt2,
+        (0..n as u32).collect(),
+        vec![0.5; n],
+    )
+    .unwrap();
+    let out = multiply(&a2, &a2, &OpSparseConfig::default()).unwrap();
+    let gold = opsparse::spgemm::reference::spgemm_reference(&a2, &a2);
+    assert!(out.c.approx_eq(&gold, 1e-12));
+}
+
+#[test]
+fn simulator_handles_degenerate_traces() {
+    // empty trace
+    let tl = simulate(&Trace::new(), &V100);
+    assert_eq!(tl.total_ns, 0.0);
+    // kernel with zero blocks
+    let mut t = Trace::new();
+    t.launch(Kernel {
+        name: "empty".into(),
+        step: "symbolic",
+        stream: 0,
+        tb_size: 128,
+        shared_bytes: 0,
+        blocks: vec![],
+    });
+    let tl = simulate(&t, &V100);
+    assert!(tl.total_ns > 0.0, "launch overhead still counts");
+    // free with nothing launched
+    let mut t = Trace::new();
+    t.free("nothing", "cleanup");
+    let tl = simulate(&t, &V100);
+    assert!(tl.total_ns >= V100.free_base_ns);
+    // malloc-only trace
+    let mut t = Trace::new();
+    t.malloc(1 << 20, "buf", "setup");
+    let tl = simulate(&t, &V100);
+    assert!(tl.total_ns >= V100.malloc_ns(1 << 20));
+}
+
+#[test]
+fn zero_sized_and_single_element_matrices() {
+    for (r, c) in [(0usize, 0usize), (1, 1), (0, 5), (5, 0)] {
+        let a = Csr::zero(r, c);
+        let b = Csr::zero(c, r);
+        let out = multiply(&a, &b, &OpSparseConfig::default()).unwrap();
+        assert_eq!(out.c.rows, r);
+        assert_eq!(out.c.cols, r);
+        assert_eq!(out.c.nnz(), 0);
+    }
+    let one = Csr::from_parts(1, 1, vec![0, 1], vec![0], vec![2.0]).unwrap();
+    let out = multiply(&one, &one, &OpSparseConfig::default()).unwrap();
+    assert_eq!(out.c.get(0, 0), 4.0);
+}
+
+#[test]
+fn extreme_value_magnitudes_survive() {
+    let a = Csr::from_parts(
+        2,
+        2,
+        vec![0, 2, 4],
+        vec![0, 1, 0, 1],
+        vec![1e150, 1e-150, -1e150, 1e-150],
+    )
+    .unwrap();
+    let out = multiply(&a, &a, &OpSparseConfig::default()).unwrap();
+    let gold = opsparse::spgemm::reference::spgemm_reference(&a, &a);
+    assert!(out.c.approx_eq(&gold, 1e-9), "{:?}", out.c.diff(&gold, 1e-9));
+    assert!(out.c.val.iter().all(|v| v.is_finite()));
+}

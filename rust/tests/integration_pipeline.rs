@@ -1,0 +1,87 @@
+//! End-to-end pipeline integration: all four libraries on the full Tiny
+//! suite, verified element-exact against the sort-merge reference, plus
+//! file IO round trips and the coordinator service.
+
+use opsparse::baselines::Library;
+use opsparse::coordinator::{Coordinator, Job, Router};
+use opsparse::gen::suite::{entries, SuiteScale};
+use opsparse::sparse::mmio;
+use opsparse::spgemm::reference::spgemm_reference;
+
+#[test]
+fn full_tiny_suite_all_libraries_verified() {
+    for e in entries() {
+        let a = e.generate(SuiteScale::Tiny);
+        let gold = spgemm_reference(&a, &a);
+        for lib in Library::all() {
+            // mirror the paper: cuSPARSE skips the large matrices
+            if e.large && lib == Library::Cusparse {
+                continue;
+            }
+            let out = lib
+                .run(&a, &a)
+                .unwrap_or_else(|err| panic!("{} failed on {}: {err:#}", lib.name(), e.name));
+            if let Some(d) = out.c.diff(&gold, 1e-9) {
+                panic!("{} wrong on {}: {d}", lib.name(), e.name);
+            }
+            out.c.validate().unwrap();
+        }
+    }
+}
+
+#[test]
+fn mtx_roundtrip_preserves_spgemm_result() {
+    let e = entries().into_iter().find(|e| e.name == "poisson3Da").unwrap();
+    let a = e.generate(SuiteScale::Tiny);
+    let tmp = std::env::temp_dir().join("opsparse_roundtrip.mtx");
+    mmio::write_file(&a, &tmp).unwrap();
+    let back = mmio::read_file(&tmp).unwrap();
+    assert_eq!(a, back);
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn coordinator_processes_suite_jobs_concurrently() {
+    let coord = Coordinator::start(4, Router::default(), None);
+    let mats: Vec<_> = entries()
+        .into_iter()
+        .filter(|e| !e.large)
+        .take(6)
+        .map(|e| e.generate(SuiteScale::Tiny))
+        .collect();
+    for (i, a) in mats.iter().enumerate() {
+        coord.submit(Job { id: i as u64, a: a.clone(), b: a.clone(), force_route: None });
+    }
+    for _ in 0..mats.len() {
+        let r = coord.recv().unwrap();
+        let a = &mats[r.id as usize];
+        let gold = spgemm_reference(a, a);
+        assert!(r.c.unwrap().approx_eq(&gold, 1e-9), "job {}", r.id);
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_completed, mats.len() as u64);
+    coord.shutdown();
+}
+
+#[test]
+fn opsparse_wins_on_trace_efficiency_metrics() {
+    // structural assertions that hold regardless of the cost model:
+    // fewer mallocs, fewer malloc'd bytes, fewer global atomics
+    let e = entries().into_iter().find(|e| e.name == "filter3D").unwrap();
+    let a = e.generate(SuiteScale::Tiny);
+    let ops = Library::OpSparse.run(&a, &a).unwrap();
+    let nsp = Library::Nsparse.run(&a, &a).unwrap();
+    let spk = Library::Speck.run(&a, &a).unwrap();
+    assert!(ops.trace.malloc_calls() < nsp.trace.malloc_calls());
+    assert!(ops.trace.malloc_bytes() < spk.trace.malloc_bytes());
+    let atomics = |t: &opsparse::gpusim::Trace| -> u64 {
+        t.ops
+            .iter()
+            .filter_map(|op| match op {
+                opsparse::gpusim::TraceOp::Launch(k) => Some(k.total_work().global_atomics),
+                _ => None,
+            })
+            .sum()
+    };
+    assert!(atomics(&ops.trace) < atomics(&nsp.trace) / 10);
+}

@@ -1,0 +1,163 @@
+//! Integration tests for the PJRT runtime + BSR block engine.
+//! Require `make artifacts` to have run (the Makefile test target does).
+
+use opsparse::gen::banded::Banded;
+use opsparse::runtime::{artifacts_available, default_artifacts_dir, BlockEngine, PjrtRuntime};
+use opsparse::sparse::{Bsr, Csr};
+use opsparse::spgemm::reference::spgemm_reference;
+use opsparse::util::rng::Rng;
+
+fn need_artifacts() {
+    assert!(
+        artifacts_available(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+}
+
+#[test]
+fn pjrt_client_boots() {
+    let rt = PjrtRuntime::cpu().expect("PJRT cpu client");
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+}
+
+#[test]
+fn block_matmul_artifact_executes_correct_numerics() {
+    need_artifacts();
+    let dir = default_artifacts_dir();
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let (p, t) = (64usize, 16usize);
+    let path = dir.join(format!("block_matmul_p{p}_t{t}_f64.hlo.txt"));
+    // identity in the first pair slot, zeros elsewhere
+    let mut a = vec![0f64; p * t * t];
+    let mut b = vec![0f64; p * t * t];
+    for i in 0..t {
+        a[i * t + i] = 1.0; // A[0] = I
+    }
+    for i in 0..t * t {
+        b[i] = i as f64; // B[0] = ramp
+    }
+    let dims = [p, t, t];
+    let out = rt.execute_f64(&path, &[(&a, &dims), (&b, &dims)]).unwrap();
+    assert_eq!(out.len(), p * t * t);
+    // C[0] = I @ B[0] = B[0]
+    for i in 0..t * t {
+        assert!((out[i] - b[i]).abs() < 1e-12, "slot {i}: {} vs {}", out[i], b[i]);
+    }
+    // all other pairs are zero
+    assert!(out[t * t..].iter().all(|&v| v == 0.0));
+    assert_eq!(rt.cached(), 1);
+}
+
+#[test]
+fn row_window_artifact_executes() {
+    need_artifacts();
+    let dir = default_artifacts_dir();
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let (r, k, w) = (64usize, 32usize, 256usize);
+    let path = dir.join(format!("row_window_r{r}_k{k}_w{w}_f64.hlo.txt"));
+    let mut a = vec![0f64; r * k];
+    let mut b = vec![0f64; r * k * w];
+    // row 0: a = [1, 2, 0...], b[0] rows 0/1 = ones
+    a[0] = 1.0;
+    a[1] = 2.0;
+    for j in 0..w {
+        b[j] = 1.0; // row 0, k=0
+        b[w + j] = 1.0; // row 0, k=1
+    }
+    let out = rt
+        .execute_f64(&path, &[(&a, &[r, k]), (&b, &[r, k, w])])
+        .unwrap();
+    assert_eq!(out.len(), r * w);
+    for j in 0..w {
+        assert!((out[j] - 3.0).abs() < 1e-12, "col {j}: {}", out[j]);
+    }
+}
+
+#[test]
+fn block_engine_bsr_spgemm_matches_reference() {
+    need_artifacts();
+    let mut engine = BlockEngine::load(&default_artifacts_dir(), 64, 16).unwrap();
+    let mut rng = Rng::new(505);
+    // blocky FEM-like matrix: the engine's natural workload
+    let a = Banded { n: 160, per_row: 24, band: 20, contiguous_frac: 1.0 }.generate(&mut rng);
+    let got = engine.spgemm_csr(&a, &a).unwrap();
+    let gold = spgemm_reference(&a, &a);
+    assert!(
+        got.approx_eq(&gold, 1e-9),
+        "block engine mismatch: {:?}",
+        got.diff(&gold, 1e-9)
+    );
+    assert!(engine.stats.pairs > 0);
+    assert!(engine.stats.batches > 0);
+}
+
+#[test]
+fn block_engine_rectangular_and_padding() {
+    need_artifacts();
+    let mut engine = BlockEngine::load(&default_artifacts_dir(), 64, 16).unwrap();
+    let mut rng = Rng::new(506);
+    // dims not divisible by T exercise the BSR padding path
+    let a = Banded { n: 77, per_row: 10, band: 9, contiguous_frac: 0.8 }.generate(&mut rng);
+    let got = engine.spgemm_csr(&a, &a).unwrap();
+    let gold = spgemm_reference(&a, &a);
+    assert!(got.approx_eq(&gold, 1e-9), "{:?}", got.diff(&gold, 1e-9));
+}
+
+#[test]
+fn block_engine_empty_matrix() {
+    need_artifacts();
+    let mut engine = BlockEngine::load(&default_artifacts_dir(), 64, 16).unwrap();
+    let z = Csr::zero(32, 32);
+    let got = engine.spgemm_csr(&z, &z).unwrap();
+    assert_eq!(got.nnz(), 0);
+}
+
+#[test]
+fn bsr_roundtrip_through_engine_block_size() {
+    let mut rng = Rng::new(507);
+    let a = Banded { n: 64, per_row: 8, band: 8, contiguous_frac: 0.5 }.generate(&mut rng);
+    let b = Bsr::from_csr(&a, 16).unwrap();
+    assert_eq!(b.to_csr().unwrap(), a);
+}
+
+#[test]
+fn row_window_engine_matches_reference_rows() {
+    need_artifacts();
+    use opsparse::runtime::RowWindowEngine;
+    let mut engine = RowWindowEngine::load(&default_artifacts_dir(), 64, 32, 256).unwrap();
+    let mut rng = Rng::new(606);
+    // banded matrix: every row's window span is bounded by the band
+    let a = Banded { n: 300, per_row: 12, band: 40, contiguous_frac: 0.5 }.generate(&mut rng);
+    let rows: Vec<u32> = (0..a.rows as u32).collect();
+    let (results, overflow) = engine.compute_rows(&a, &a, &rows).unwrap();
+    assert!(overflow.len() < a.rows / 4, "most rows should fit: {} overflow", overflow.len());
+    let gold = spgemm_reference(&a, &a);
+    for (row, sparse) in &results {
+        let i = *row as usize;
+        let (gc, gv) = gold.row(i);
+        let got_cols: Vec<u32> = sparse.iter().map(|&(c, _)| c).collect();
+        assert_eq!(got_cols, gc, "row {i} structure");
+        for (j, &(_, v)) in sparse.iter().enumerate() {
+            assert!((v - gv[j]).abs() < 1e-9 * gv[j].abs().max(1.0), "row {i} value {j}");
+        }
+    }
+    assert!(engine.stats.batches > 0);
+}
+
+#[test]
+fn row_window_engine_rejects_wide_rows() {
+    need_artifacts();
+    use opsparse::runtime::RowWindowEngine;
+    let engine = RowWindowEngine::load(&default_artifacts_dir(), 64, 32, 256).unwrap();
+    // a row referencing columns 0 and 10_000 cannot fit a 256-wide window
+    let a = Csr::from_parts(
+        2,
+        20_000,
+        vec![0, 2, 2],
+        vec![0, 10_000],
+        vec![1.0, 1.0],
+    )
+    .unwrap();
+    let b = Csr::identity(20_000);
+    assert!(!engine.row_fits(&a, &b, 0));
+}

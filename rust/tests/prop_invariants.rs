@@ -1,0 +1,227 @@
+//! Cross-module property tests (the in-house `util::prop` harness):
+//! SpGEMM algebraic identities, CSR invariants through every pipeline,
+//! binning partitions, and simulator sanity over random traces.
+
+use opsparse::baselines::Library;
+use opsparse::gpusim::{simulate, BlockWork, Kernel, Trace, V100};
+use opsparse::sparse::ops::{add, scale, transpose};
+use opsparse::sparse::Csr;
+use opsparse::spgemm::pipeline::{multiply, OpSparseConfig};
+use opsparse::spgemm::reference::spgemm_reference;
+use opsparse::util::prop::check;
+use opsparse::util::rng::Rng;
+
+fn random_csr(rng: &mut Rng, n: usize, per_row: usize) -> Csr {
+    let mut rpt = vec![0usize];
+    let mut col = Vec::new();
+    let mut val = Vec::new();
+    let mut scratch = Vec::new();
+    for _ in 0..n {
+        let k = rng.range(0, per_row + 1);
+        rng.sample_distinct(n, k, &mut scratch);
+        for &c in &scratch {
+            col.push(c);
+            val.push(rng.value());
+        }
+        rpt.push(col.len());
+    }
+    Csr::from_parts(n, n, rpt, col, val).unwrap()
+}
+
+#[test]
+fn prop_every_library_output_is_valid_csr() {
+    check(
+        "library-valid-csr",
+        12,
+        40,
+        |rng, size| random_csr(rng, size.max(4), 6),
+        |a| {
+            for lib in Library::all() {
+                let out = lib.run(a, a).map_err(|e| format!("{}: {e}", lib.name()))?;
+                out.c.validate().map_err(|e| format!("{}: {e}", lib.name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_spgemm_transpose_identity() {
+    // (A·B)^T == B^T · A^T
+    check(
+        "transpose-identity",
+        10,
+        30,
+        |rng, size| {
+            let a = random_csr(rng, size.max(4), 5);
+            let b = random_csr(rng, size.max(4), 5);
+            (a, b)
+        },
+        |(a, b)| {
+            let ab_t = transpose(&spgemm_reference(a, b));
+            let bt_at = spgemm_reference(&transpose(b), &transpose(a));
+            if ab_t.approx_eq(&bt_at, 1e-9) {
+                Ok(())
+            } else {
+                Err("(AB)^T != B^T A^T".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_spgemm_distributes_over_addition() {
+    // A(B + C) == AB + AC
+    check(
+        "distributivity",
+        10,
+        24,
+        |rng, size| {
+            let n = size.max(4);
+            (random_csr(rng, n, 4), random_csr(rng, n, 4), random_csr(rng, n, 4))
+        },
+        |(a, b, c)| {
+            let lhs = spgemm_reference(a, &add(b, c).unwrap());
+            let rhs = add(&spgemm_reference(a, b), &spgemm_reference(a, c)).unwrap();
+            if lhs.approx_eq(&rhs, 1e-9) {
+                Ok(())
+            } else {
+                Err("A(B+C) != AB + AC".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_scaling_commutes() {
+    // (sA)·B == s(A·B)
+    check(
+        "scaling",
+        10,
+        24,
+        |rng, size| {
+            let n = size.max(4);
+            (random_csr(rng, n, 5), random_csr(rng, n, 5), rng.value() * 3.0)
+        },
+        |(a, b, s)| {
+            let lhs = spgemm_reference(&scale(a, *s), b);
+            let rhs = scale(&spgemm_reference(a, b), *s);
+            if lhs.approx_eq(&rhs, 1e-9) {
+                Ok(())
+            } else {
+                Err("(sA)B != s(AB)".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_pipeline_equals_reference_on_random_matrices() {
+    check(
+        "pipeline-vs-reference",
+        16,
+        60,
+        |rng, size| random_csr(rng, size.max(4), 8),
+        |a| {
+            let out = multiply(a, a, &OpSparseConfig::default()).map_err(|e| e.to_string())?;
+            let gold = spgemm_reference(a, a);
+            out.c
+                .diff(&gold, 1e-9)
+                .map_or(Ok(()), |d| Err(d))
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_time_monotone_in_work() {
+    // doubling every block's bytes must not decrease simulated time
+    check(
+        "sim-monotone",
+        12,
+        64,
+        |rng, size| {
+            let blocks: Vec<BlockWork> = (0..size.max(1))
+                .map(|_| BlockWork {
+                    global_bytes: rng.below(1_000_000),
+                    shared_accesses: rng.below(100_000),
+                    ..Default::default()
+                })
+                .collect();
+            blocks
+        },
+        |blocks| {
+            let mk = |mult: u64| {
+                let mut t = Trace::new();
+                t.launch(Kernel {
+                    name: "k".into(),
+                    step: "numeric",
+                    stream: 0,
+                    tb_size: 256,
+                    shared_bytes: 8192,
+                    blocks: blocks
+                        .iter()
+                        .map(|b| BlockWork {
+                            global_bytes: b.global_bytes * mult,
+                            shared_accesses: b.shared_accesses * mult,
+                            ..Default::default()
+                        })
+                        .collect(),
+                });
+                simulate(&t, &V100).total_ns
+            };
+            let t1 = mk(1);
+            let t2 = mk(2);
+            if t2 + 1e-6 >= t1 {
+                Ok(())
+            } else {
+                Err(format!("time decreased: {t1} -> {t2}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_simulated_kernels_all_complete() {
+    check(
+        "sim-completion",
+        12,
+        32,
+        |rng, size| {
+            let mut t = Trace::new();
+            let nk = rng.range(1, 5);
+            for i in 0..nk {
+                let nblocks = rng.range(1, size.max(2));
+                t.launch(Kernel {
+                    name: format!("k{i}"),
+                    step: "symbolic",
+                    stream: rng.range(0, 3),
+                    tb_size: [64, 128, 256, 1024][rng.range(0, 4)],
+                    shared_bytes: [0usize, 2048, 48 * 1024][rng.range(0, 3)],
+                    blocks: vec![
+                        BlockWork { global_bytes: rng.below(100_000), ..Default::default() };
+                        nblocks
+                    ],
+                });
+                if rng.f64() < 0.3 {
+                    t.malloc(rng.below(1 << 20) as usize, "x", "setup");
+                }
+                if rng.f64() < 0.2 {
+                    t.free("x", "cleanup");
+                }
+            }
+            t
+        },
+        |t| {
+            let tl = simulate(t, &V100);
+            for k in &tl.kernels {
+                if !k.start.is_finite() || !k.end.is_finite() || k.end < k.start {
+                    return Err(format!("kernel {} has bad span {}..{}", k.name, k.start, k.end));
+                }
+            }
+            if tl.total_ns <= 0.0 {
+                return Err("zero total".into());
+            }
+            Ok(())
+        },
+    );
+}
