@@ -6,6 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# hypothesis drives the shape/dtype sweeps; environments without it (the
+# offline container) skip this module — CI installs it from
+# python/requirements.txt and runs the full sweep.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.block_matmul import block_pair_matmul, row_window_accumulate

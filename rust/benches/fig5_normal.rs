@@ -1,13 +1,22 @@
 //! `cargo bench --bench fig5_normal` — regenerates paper Figure 5:
 //! SpGEMM GFLOPS of cuSPARSE/nsparse/spECK/OpSparse on the 19 normal
 //! matrices (simulated V100; outputs verified against the reference).
+//!
+//! Set `OPSPARSE_BENCH_JSON=<path>` to also record the rows as JSON —
+//! CI writes `BENCH_seed.json` this way so later PRs have a perf
+//! trajectory to compare against.
 
-use opsparse::bench::figures;
+use opsparse::baselines::Library;
+use opsparse::bench::{figures, write_rows_json};
 use opsparse::gen::suite::SuiteScale;
 
 fn main() {
     let scale = scale_from_env();
-    figures::fig5(scale, true).expect("fig5");
+    let rows = figures::fig5(scale, true).expect("fig5");
+    if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON") {
+        let libs = Library::all().map(|l| l.name());
+        write_rows_json(&path, "fig5", scale, &libs, &rows).expect("write bench json");
+    }
 }
 
 fn scale_from_env() -> SuiteScale {

@@ -1,0 +1,23 @@
+//! `cargo bench --bench pool_reuse` — the serving ablation: repeated
+//! SpGEMM traffic on a warm worker (device memory pool + symbolic-reuse
+//! cache) vs the paper's per-call allocation, plus a one-worker
+//! coordinator run over repeated AMG/MCL-pattern jobs reporting its
+//! pool/cache metrics.
+//!
+//! Env: `OPSPARSE_SCALE=tiny|small|medium` (default small),
+//! `OPSPARSE_REPS=<n>` (default 5).
+
+use opsparse::bench::figures;
+use opsparse::gen::suite::SuiteScale;
+
+fn main() {
+    let scale = std::env::var("OPSPARSE_SCALE")
+        .ok()
+        .and_then(|s| SuiteScale::parse(&s))
+        .unwrap_or(SuiteScale::Small);
+    let reps = std::env::var("OPSPARSE_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+    figures::pool_ablation(scale, reps).expect("pool_reuse ablation");
+}

@@ -7,9 +7,9 @@
 //! direct solve on the coarsest level — enough to demonstrate real
 //! convergence on Poisson problems from the suite's stencil generator.
 
+use super::SpgemmContext;
 use crate::sparse::ops::{diagonal, norm2, spmv, transpose};
 use crate::sparse::{Csr, Dense};
-use crate::spgemm::pipeline::{multiply, OpSparseConfig};
 use anyhow::{ensure, Context, Result};
 
 /// One multigrid level.
@@ -100,10 +100,24 @@ fn prolongation(agg: &[u32]) -> Csr {
 }
 
 impl AmgHierarchy {
-    /// Build the hierarchy for a symmetric M-matrix-ish `a`.
+    /// Build the hierarchy for a symmetric M-matrix-ish `a` with a fresh
+    /// [`SpgemmContext`] (one-shot setup).
     pub fn build(a: &Csr, theta: f64, coarse_limit: usize, max_levels: usize) -> Result<Self> {
+        AmgHierarchy::build_with(&mut SpgemmContext::new(), a, theta, coarse_limit, max_levels)
+    }
+
+    /// Build the hierarchy through a caller-owned context. Re-setup on a
+    /// fixed mesh — new operator values, same stencil every timestep —
+    /// replays every level's cached symbolic phase and recycles every
+    /// allocation from the context's pool.
+    pub fn build_with(
+        ctx: &mut SpgemmContext,
+        a: &Csr,
+        theta: f64,
+        coarse_limit: usize,
+        max_levels: usize,
+    ) -> Result<Self> {
         ensure!(a.rows == a.cols, "AMG needs a square operator");
-        let cfg = OpSparseConfig::default();
         let mut levels = Vec::new();
         let mut cur = a.clone();
         let mut products = 0usize;
@@ -116,7 +130,7 @@ impl AmgHierarchy {
             // smoothed aggregation: P = (I - w D^-1 A) P_tent — one extra
             // SpGEMM per level, and the classic fix for the slow
             // piecewise-constant two-grid rate
-            let ap_tent = multiply(&cur, &p_tent, &cfg).context("A*P_tent")?;
+            let ap_tent = ctx.multiply(&cur, &p_tent).context("A*P_tent")?;
             products += ap_tent.nprod;
             let inv_d = diagonal(&cur);
             let mut damped = ap_tent.c;
@@ -132,8 +146,8 @@ impl AmgHierarchy {
                 .context("P smoothing")?;
             let r = transpose(&p);
             // Galerkin triple product through the OpSparse pipeline
-            let ap = multiply(&cur, &p, &cfg).context("A*P")?;
-            let rap = multiply(&r, &ap.c, &cfg).context("R*(AP)")?;
+            let ap = ctx.multiply(&cur, &p).context("A*P")?;
+            let rap = ctx.multiply(&r, &ap.c).context("R*(AP)")?;
             products += ap.nprod + rap.nprod;
             let inv_diag = diagonal(&cur).iter().map(|&d| if d != 0.0 { 1.0 / d } else { 0.0 }).collect();
             levels.push(Level { a: cur, p: Some(p), inv_diag });
@@ -280,6 +294,7 @@ pub fn poisson2d(side: usize) -> Csr {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spgemm::pipeline::{multiply, OpSparseConfig};
     use crate::util::rng::Rng;
 
     #[test]
@@ -309,6 +324,24 @@ mod tests {
             assert!(w[1].a.rows < w[0].a.rows, "levels must shrink");
         }
         assert!(h.setup_spgemm_products > 0);
+    }
+
+    #[test]
+    fn timestep_resetup_hits_the_symbolic_cache() {
+        let a = poisson2d(24);
+        let mut ctx = SpgemmContext::new();
+        let h1 = AmgHierarchy::build_with(&mut ctx, &a, 0.1, 50, 10).unwrap();
+        assert_eq!(ctx.sym_cache_hits(), 0, "first setup computes everything");
+        // same mesh at the next timestep: refreshed coefficient values,
+        // unchanged stencil — aggregation and every product pattern repeat
+        let mut a2 = a.clone();
+        for v in &mut a2.val {
+            *v *= 1.5;
+        }
+        let h2 = AmgHierarchy::build_with(&mut ctx, &a2, 0.1, 50, 10).unwrap();
+        assert!(ctx.sym_cache_hits() > 0, "re-setup must replay symbolic phases");
+        assert_eq!(h1.levels.len(), h2.levels.len());
+        assert!(ctx.pool_stats().pool_hits > 0, "re-setup must recycle pool buckets");
     }
 
     #[test]

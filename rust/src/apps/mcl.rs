@@ -4,9 +4,9 @@
 //! and pruning, until the matrix reaches a (near-)idempotent state whose
 //! attractor structure defines the clusters.
 
+use super::SpgemmContext;
 use crate::sparse::ops::transpose;
 use crate::sparse::Csr;
-use crate::spgemm::pipeline::{multiply, OpSparseConfig};
 use anyhow::Result;
 
 /// MCL parameters.
@@ -117,17 +117,28 @@ fn extract_clusters(m: &Csr) -> Vec<u32> {
     id.into_iter().map(|x| x as u32).collect()
 }
 
-/// Run MCL on an (undirected) adjacency matrix.
+/// Run MCL on an (undirected) adjacency matrix with a fresh context.
 pub fn mcl(adjacency: &Csr, params: &MclParams) -> Result<MclResult> {
+    mcl_with(&mut SpgemmContext::new(), adjacency, params)
+}
+
+/// MCL through a caller-owned [`SpgemmContext`]: as the clustering
+/// converges the expansion pattern stabilizes, so late iterations (and
+/// any outer loop re-running MCL on the same graph) replay the cached
+/// symbolic phase and recycle the pool's allocations.
+pub fn mcl_with(
+    ctx: &mut SpgemmContext,
+    adjacency: &Csr,
+    params: &MclParams,
+) -> Result<MclResult> {
     // add self loops (standard MCL practice) and normalize
     let with_loops = crate::sparse::ops::add(adjacency, &Csr::identity(adjacency.rows))?;
     let mut m = column_normalize(&with_loops);
-    let cfg = OpSparseConfig::default();
     let mut products = 0usize;
     let mut iters = 0usize;
     for _ in 0..params.max_iters {
         iters += 1;
-        let expanded = multiply(&m, &m, &cfg)?; // expansion via OpSparse
+        let expanded = ctx.multiply(&m, &m)?; // expansion via OpSparse
         products += expanded.nprod;
         let next = inflate(&expanded.c, params.inflation, params.prune);
         let delta = max_change(&next, &m);
@@ -175,6 +186,25 @@ mod tests {
             assert_eq!(r.clusters[i], c0, "node {i}");
             assert_eq!(r.clusters[6 + i], c1, "node {}", 6 + i);
         }
+    }
+
+    #[test]
+    fn context_run_matches_fresh_run_and_pools() {
+        let g = two_cliques(6);
+        let fresh = mcl(&g, &MclParams::default()).unwrap();
+        let mut ctx = SpgemmContext::new();
+        let ctxed = mcl_with(&mut ctx, &g, &MclParams::default()).unwrap();
+        assert_eq!(fresh.clusters, ctxed.clusters);
+        assert_eq!(fresh.iterations, ctxed.iterations);
+        // every expansion went through the pool; re-running the converged
+        // workload replays its symbolic phases from the cache
+        assert!(ctx.pool_stats().requests > 0);
+        let hits_before = ctx.sym_cache_hits();
+        let _ = mcl_with(&mut ctx, &g, &MclParams::default()).unwrap();
+        assert!(
+            ctx.sym_cache_hits() > hits_before,
+            "second MCL run over the same graph must hit the symbolic cache"
+        );
     }
 
     #[test]

@@ -245,6 +245,7 @@ pub fn multiply_cusparse(a: &Csr, b: &Csr) -> Result<SpgemmOutput> {
         sym_stats,
         num_stats: num.stats,
         sym_fallback_rows: 0,
+        symbolic_skipped: false,
     })
 }
 

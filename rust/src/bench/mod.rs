@@ -33,6 +33,41 @@ pub fn gflops(out: &SpgemmOutput, tl: &Timeline) -> f64 {
     tl.gflops(out.flops())
 }
 
+/// Serialize figure rows as a small JSON document (no serde in the
+/// dependency set). Used by CI to record `BENCH_seed.json` baselines:
+/// `{"bench": ..., "scale": ..., "libs": [...], "rows": [{"matrix": ...,
+/// "gflops": [...]}]}`.
+pub fn write_rows_json(
+    path: &str,
+    bench: &str,
+    scale: crate::gen::suite::SuiteScale,
+    libs: &[&str],
+    rows: &[(String, Vec<f64>)],
+) -> Result<()> {
+    fn esc(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\n  \"bench\": \"{}\",\n  \"scale\": \"{:?}\",\n  \"libs\": [{}],\n  \"rows\": [\n",
+        esc(bench),
+        scale,
+        libs.iter().map(|l| format!("\"{}\"", esc(l))).collect::<Vec<_>>().join(", ")
+    ));
+    for (i, (name, vals)) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"matrix\": \"{}\", \"gflops\": [{}]}}{}\n",
+            esc(name),
+            vals.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(", "),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
 /// §Perf harness: median wall time of `multiply()` on a named suite
 /// matrix (used by `opsparse bench perf` and the EXPERIMENTS.md log).
 pub fn perf_l3(matrix: &str, scale: crate::gen::suite::SuiteScale, reps: usize) -> Result<f64> {

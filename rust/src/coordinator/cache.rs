@@ -1,0 +1,137 @@
+//! Sparsity-pattern cache: the serving-layer complement of the paper's
+//! symbolic/numeric split.
+//!
+//! The symbolic phase depends only on the operands' sparsity patterns, so
+//! a worker that sees the same `(A, B)` pattern twice — AMG re-setup on a
+//! fixed mesh, MCL expansion after the pattern stabilizes, any `A·A`
+//! power iteration — can replay the cached per-row nnz instead of
+//! recomputing it (see [`crate::spgemm::SymbolicReuse`]). Entries are
+//! keyed by both operands' [`crate::sparse::Csr::pattern_fingerprint`];
+//! the cache is per-worker and bounded with insertion-order eviction
+//! (FIFO beats LRU bookkeeping at this entry count, and the workloads
+//! that benefit loop over a handful of patterns).
+
+use crate::spgemm::SymbolicReuse;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+/// Key: fingerprints of A's and B's sparsity patterns.
+pub type PatternKey = (u64, u64);
+
+/// Bounded map from operand-pattern pairs to cached symbolic results.
+#[derive(Debug)]
+pub struct PatternCache {
+    map: HashMap<PatternKey, Arc<SymbolicReuse>>,
+    order: VecDeque<PatternKey>,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl PatternCache {
+    /// `capacity` of 0 disables caching (every lookup misses).
+    pub fn new(capacity: usize) -> Self {
+        PatternCache {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            capacity,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Look up a pattern pair, counting the hit or miss.
+    pub fn lookup(&mut self, key: PatternKey) -> Option<Arc<SymbolicReuse>> {
+        match self.map.get(&key) {
+            Some(e) => {
+                self.hits += 1;
+                Some(Arc::clone(e))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an entry, evicting the oldest beyond capacity.
+    pub fn insert(&mut self, key: PatternKey, entry: Arc<SymbolicReuse>) {
+        if self.capacity == 0 {
+            return;
+        }
+        if self.map.insert(key, entry).is_none() {
+            self.order.push_back(key);
+            while self.order.len() > self.capacity {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(n: usize) -> Arc<SymbolicReuse> {
+        Arc::new(SymbolicReuse { row_nnz: vec![1; n], nprod: n, fallback_rows: 0 })
+    }
+
+    #[test]
+    fn hit_after_insert_miss_before() {
+        let mut c = PatternCache::new(4);
+        assert!(c.lookup((1, 2)).is_none());
+        c.insert((1, 2), entry(3));
+        let got = c.lookup((1, 2)).expect("hit");
+        assert_eq!(got.row_nnz.len(), 3);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn evicts_oldest_at_capacity() {
+        let mut c = PatternCache::new(2);
+        c.insert((1, 1), entry(1));
+        c.insert((2, 2), entry(2));
+        c.insert((3, 3), entry(3));
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup((1, 1)).is_none(), "oldest entry must be evicted");
+        assert!(c.lookup((2, 2)).is_some());
+        assert!(c.lookup((3, 3)).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = PatternCache::new(0);
+        c.insert((1, 1), entry(1));
+        assert!(c.lookup((1, 1)).is_none());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn reinsert_same_key_does_not_grow_order() {
+        let mut c = PatternCache::new(2);
+        c.insert((1, 1), entry(1));
+        c.insert((1, 1), entry(5));
+        c.insert((2, 2), entry(2));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.lookup((1, 1)).unwrap().row_nnz.len(), 5);
+    }
+}

@@ -1,5 +1,7 @@
 //! Service metrics: counters plus latency percentiles computed from a
-//! bounded reservoir of observed job latencies.
+//! bounded reservoir of observed job latencies, extended with the
+//! allocation-reuse counters the pool/cache layer reports (device mallocs
+//! avoided, symbolic phases skipped).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -14,6 +16,18 @@ pub struct Metrics {
     pub block_routed: AtomicU64,
     /// Total intermediate products processed (throughput numerator).
     pub nprod_total: AtomicU64,
+    /// Jobs whose symbolic phase was replayed from the pattern cache.
+    pub sym_cache_hits: AtomicU64,
+    /// Jobs that computed (and cached) their symbolic phase.
+    pub sym_cache_misses: AtomicU64,
+    /// Real `cudaMalloc` calls issued through the workers' device pools.
+    pub pool_device_mallocs: AtomicU64,
+    /// Bytes those mallocs reserved (the fleet's grow-only footprint).
+    pub pool_device_bytes: AtomicU64,
+    /// Allocation requests served from recycled pool buckets.
+    pub pool_hits: AtomicU64,
+    /// Bytes served from recycled buckets instead of `cudaMalloc`.
+    pub pool_reused_bytes: AtomicU64,
     /// Latency samples in ns (bounded reservoir).
     latencies: Mutex<Vec<u64>>,
 }
@@ -28,6 +42,14 @@ impl Metrics {
         if l.len() < 65_536 {
             l.push(ns);
         }
+    }
+
+    /// Fold one pool-stats delta (one job's worth) into the registry.
+    pub fn observe_pool(&self, d: &crate::gpusim::PoolStats) {
+        self.pool_device_mallocs.fetch_add(d.device_mallocs, Ordering::Relaxed);
+        self.pool_device_bytes.fetch_add(d.device_bytes, Ordering::Relaxed);
+        self.pool_hits.fetch_add(d.pool_hits, Ordering::Relaxed);
+        self.pool_reused_bytes.fetch_add(d.reused_bytes, Ordering::Relaxed);
     }
 
     /// Latency percentile (0.0..=1.0) over the recorded samples.
@@ -49,6 +71,12 @@ impl Metrics {
             hash_routed: self.hash_routed.load(Ordering::Relaxed),
             block_routed: self.block_routed.load(Ordering::Relaxed),
             nprod_total: self.nprod_total.load(Ordering::Relaxed),
+            sym_cache_hits: self.sym_cache_hits.load(Ordering::Relaxed),
+            sym_cache_misses: self.sym_cache_misses.load(Ordering::Relaxed),
+            pool_device_mallocs: self.pool_device_mallocs.load(Ordering::Relaxed),
+            pool_device_bytes: self.pool_device_bytes.load(Ordering::Relaxed),
+            pool_hits: self.pool_hits.load(Ordering::Relaxed),
+            pool_reused_bytes: self.pool_reused_bytes.load(Ordering::Relaxed),
             p50_ns: self.latency_percentile(0.50),
             p99_ns: self.latency_percentile(0.99),
         }
@@ -64,15 +92,51 @@ pub struct MetricsSnapshot {
     pub hash_routed: u64,
     pub block_routed: u64,
     pub nprod_total: u64,
+    pub sym_cache_hits: u64,
+    pub sym_cache_misses: u64,
+    pub pool_device_mallocs: u64,
+    pub pool_device_bytes: u64,
+    pub pool_hits: u64,
+    pub pool_reused_bytes: u64,
     pub p50_ns: Option<u64>,
     pub p99_ns: Option<u64>,
 }
 
+impl MetricsSnapshot {
+    /// Fraction of jobs that skipped their symbolic phase.
+    pub fn sym_cache_hit_rate(&self) -> f64 {
+        let total = self.sym_cache_hits + self.sym_cache_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.sym_cache_hits as f64 / total as f64
+    }
+}
+
 impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        writeln!(f, "jobs: submitted={} completed={} failed={}", self.jobs_submitted, self.jobs_completed, self.jobs_failed)?;
+        writeln!(
+            f,
+            "jobs: submitted={} completed={} failed={}",
+            self.jobs_submitted, self.jobs_completed, self.jobs_failed
+        )?;
         writeln!(f, "routes: hash={} block={}", self.hash_routed, self.block_routed)?;
         writeln!(f, "nprod total: {}", self.nprod_total)?;
+        writeln!(
+            f,
+            "symbolic cache: hits={} misses={} ({:.0}% skipped)",
+            self.sym_cache_hits,
+            self.sym_cache_misses,
+            100.0 * self.sym_cache_hit_rate()
+        )?;
+        writeln!(
+            f,
+            "device pool: mallocs={} footprint={} reuse_hits={} reused={}",
+            self.pool_device_mallocs,
+            crate::util::fmt::bytes(self.pool_device_bytes as usize),
+            self.pool_hits,
+            crate::util::fmt::bytes(self.pool_reused_bytes as usize)
+        )?;
         match (self.p50_ns, self.p99_ns) {
             (Some(p50), Some(p99)) => writeln!(
                 f,
@@ -106,5 +170,33 @@ mod tests {
     fn empty_latency_is_none() {
         let m = Metrics::new();
         assert!(m.latency_percentile(0.5).is_none());
+    }
+
+    #[test]
+    fn pool_observation_accumulates() {
+        let m = Metrics::new();
+        let d = crate::gpusim::PoolStats {
+            requests: 4,
+            pool_hits: 3,
+            device_mallocs: 1,
+            device_bytes: 4096,
+            reused_bytes: 12_288,
+            high_water_bytes: 16_384,
+        };
+        m.observe_pool(&d);
+        m.observe_pool(&d);
+        let snap = m.snapshot();
+        assert_eq!(snap.pool_device_mallocs, 2);
+        assert_eq!(snap.pool_device_bytes, 8192);
+        assert_eq!(snap.pool_hits, 6);
+        assert_eq!(snap.pool_reused_bytes, 24_576);
+    }
+
+    #[test]
+    fn cache_hit_rate() {
+        let m = Metrics::new();
+        m.sym_cache_hits.fetch_add(3, Ordering::Relaxed);
+        m.sym_cache_misses.fetch_add(1, Ordering::Relaxed);
+        assert!((m.snapshot().sym_cache_hit_rate() - 0.75).abs() < 1e-12);
     }
 }

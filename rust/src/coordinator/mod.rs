@@ -8,13 +8,19 @@
 //!   (CPU + device-trace simulation) or the PJRT BSR block engine (dense
 //!   blocky matrices, DESIGN.md §Hardware-Adaptation).
 //! * [`service`] — a worker-pool job queue (std threads + channels; the
-//!   build is offline so no tokio) with latency metrics.
-//! * [`metrics`] — counters and latency percentiles.
+//!   build is offline so no tokio) with latency metrics. Each hash worker
+//!   owns a grow-only [`crate::gpusim::DevicePool`] and a [`cache`]
+//!   entry set, so warm repeated-pattern traffic pays neither
+//!   `cudaMalloc` nor the symbolic phase.
+//! * [`cache`] — the per-worker sparsity-pattern (symbolic-reuse) cache.
+//! * [`metrics`] — counters, latency percentiles, pool/cache telemetry.
 
+pub mod cache;
 pub mod metrics;
 pub mod router;
 pub mod service;
 
+pub use cache::{PatternCache, PatternKey};
 pub use metrics::Metrics;
 pub use router::{Route, Router, RouterConfig};
 pub use service::{Coordinator, Job, JobResult};

@@ -7,16 +7,26 @@
 //! never crosses threads — the same single-owner pattern a CUDA context
 //! imposes.
 
+use super::cache::PatternCache;
 use super::metrics::Metrics;
 use super::router::{Route, Router};
+use crate::gpusim::DevicePool;
 use crate::runtime::BlockEngine;
 use crate::sparse::Csr;
-use crate::spgemm::pipeline::{multiply, OpSparseConfig};
+use crate::spgemm::pipeline::{multiply_reuse, OpSparseConfig, SymbolicReuse};
 use anyhow::Result;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Patterns each hash worker remembers. The repeated-pattern workloads
+/// (AMG re-setup, MCL expansion, A·A iteration) cycle through a handful
+/// of patterns, so 64 per worker is plenty. Note this bounds entry
+/// *count* only — each entry's `row_nnz` is O(rows of A) (8 B/row), so
+/// worst-case worker memory is 64 × 8 B × max-rows; revisit with a byte
+/// budget if million-row patterns ever dominate traffic.
+const WORKER_CACHE_PATTERNS: usize = 64;
 
 /// A multiply job. `force_route` overrides the router (tests/benches).
 pub struct Job {
@@ -89,25 +99,68 @@ impl Coordinator {
             let rx = Arc::clone(&rx_hash);
             let tx_res = tx_results.clone();
             let metrics = Arc::clone(&metrics);
-            workers.push(std::thread::spawn(move || loop {
-                let msg = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv()
-                };
-                match msg {
-                    Ok(WorkerMsg::Run(job)) => {
-                        let t0 = Instant::now();
-                        let (c, nprod) =
-                            match multiply(&job.a, &job.b, &OpSparseConfig::default()) {
-                                Ok(out) => {
+            workers.push(std::thread::spawn(move || {
+                // warm-worker state: a grow-only device pool and a
+                // symbolic-reuse cache, both single-owner (no locks)
+                let mut pool = DevicePool::new();
+                let mut cache = PatternCache::new(WORKER_CACHE_PATTERNS);
+                let cfg = OpSparseConfig::default();
+                loop {
+                    let msg = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match msg {
+                        Ok(WorkerMsg::Run(job)) => {
+                            let t0 = Instant::now();
+                            let key =
+                                (job.a.pattern_fingerprint(), job.b.pattern_fingerprint());
+                            let reuse = cache.lookup(key);
+                            if reuse.is_some() {
+                                metrics.sym_cache_hits.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                metrics.sym_cache_misses.fetch_add(1, Ordering::Relaxed);
+                            }
+                            let pool_before = pool.stats();
+                            // a panicking multiply (internal bug, or a
+                            // 2^-64 fingerprint collision making the
+                            // cached entry lie) must cost one job, not
+                            // the worker thread and every queued job
+                            let result = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    multiply_reuse(
+                                        &job.a,
+                                        &job.b,
+                                        &cfg,
+                                        Some(&mut pool),
+                                        reuse.as_deref(),
+                                    )
+                                }),
+                            );
+                            let (c, nprod) = match result {
+                                Ok(Ok(out)) => {
                                     let np = out.nprod;
+                                    if reuse.is_none() {
+                                        cache.insert(
+                                            key,
+                                            Arc::new(SymbolicReuse::from_output(&out)),
+                                        );
+                                    }
                                     (Ok(out.c), np)
                                 }
-                                Err(e) => (Err(e), 0),
+                                Ok(Err(e)) => (Err(e), 0),
+                                Err(_) => (
+                                    Err(anyhow::anyhow!(
+                                        "multiply panicked (internal bug or corrupt reuse entry)"
+                                    )),
+                                    0,
+                                ),
                             };
-                        finish(&metrics, &tx_res, job.id, Route::Hash, c, nprod, t0);
+                            metrics.observe_pool(&pool.stats().delta_since(&pool_before));
+                            finish(&metrics, &tx_res, job.id, Route::Hash, c, nprod, t0);
+                        }
+                        Ok(WorkerMsg::Stop) | Err(_) => break,
                     }
-                    Ok(WorkerMsg::Stop) | Err(_) => break,
                 }
             }));
         }
@@ -229,6 +282,29 @@ mod tests {
         assert_eq!(snap.jobs_completed, 8);
         assert_eq!(snap.jobs_failed, 0);
         assert!(snap.p50_ns.is_some());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn repeated_pattern_hits_symbolic_cache_and_pool() {
+        // one worker so every job lands on the same pool + cache
+        let coord = Coordinator::start(1, Router::default(), None);
+        let mut rng = Rng::new(72);
+        let a = Uniform { n: 200, per_row: 8, jitter: 4 }.generate(&mut rng);
+        for id in 0..4u64 {
+            coord.submit(Job { id, a: a.clone(), b: a.clone(), force_route: None });
+        }
+        let gold = spgemm_reference(&a, &a);
+        for _ in 0..4 {
+            let r = coord.recv().unwrap();
+            assert!(r.c.unwrap().approx_eq(&gold, 1e-12));
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.sym_cache_misses, 1, "only the first job computes symbolic");
+        assert_eq!(snap.sym_cache_hits, 3, "repeats must hit the cache");
+        assert!(snap.pool_hits > 0, "warm jobs must recycle pool buckets");
+        assert!(snap.pool_reused_bytes > 0);
+        assert!(snap.pool_device_mallocs > 0, "the cold job grows the pool");
         coord.shutdown();
     }
 

@@ -17,11 +17,13 @@
 pub mod cost;
 pub mod device;
 pub mod occupancy;
+pub mod pool;
 pub mod scheduler;
 pub mod timeline;
 pub mod trace;
 
 pub use device::{DeviceParams, V100};
+pub use pool::{DevicePool, PoolStats};
 pub use scheduler::simulate;
 pub use timeline::Timeline;
 pub use trace::{BlockWork, Kernel, Trace, TraceOp};

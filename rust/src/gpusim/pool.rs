@@ -1,0 +1,255 @@
+//! Reusable device-memory pool: the cross-call allocation layer the paper
+//! motivates in §4.4/§5.3–§5.5 but never builds.
+//!
+//! OpSparse minimizes the *per-call* cost of `cudaMalloc` (combining
+//! metadata allocations, overlapping mallocs with kernels, deferring
+//! frees). A serving system multiplies matrices millions of times, so the
+//! next step is to stop paying `cudaMalloc` at all on warm calls: a
+//! grow-only, size-bucketed arena in the style of `cudaMallocAsync` /
+//! RMM's pool resource. Allocations round up to power-of-two buckets;
+//! a bucket hit costs only host bookkeeping (no trace op — the real
+//! pooled allocator is ~100 ns of free-list work), while a miss issues a
+//! real `cudaMalloc` into the [`Trace`] and grows the footprint
+//! permanently. Releases are stream-ordered: blocks return to the free
+//! lists with **no** `cudaFree` (and therefore none of `cudaFree`'s
+//! implicit device synchronization, §4.6) until [`DevicePool::drain`].
+
+use super::trace::Trace;
+
+/// Smallest bucket: `cudaMalloc` granularity is 256 B on every modern GPU.
+pub const MIN_BUCKET_BYTES: usize = 256;
+
+const MIN_BUCKET_LOG2: u32 = MIN_BUCKET_BYTES.trailing_zeros();
+
+/// Cumulative pool counters. All byte counts are in rounded (bucketed)
+/// bytes, matching what the device would actually reserve.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Allocation requests served (hits + misses).
+    pub requests: u64,
+    /// Requests satisfied from a free bucket (no `cudaMalloc`).
+    pub pool_hits: u64,
+    /// Real `cudaMalloc` calls issued (pool growth).
+    pub device_mallocs: u64,
+    /// Cumulative bytes obtained from `cudaMalloc` (never decreases; the
+    /// current reservation is [`DevicePool::footprint_bytes`]).
+    pub device_bytes: u64,
+    /// Bytes served from recycled buckets instead of the device.
+    pub reused_bytes: u64,
+    /// Peak bytes simultaneously checked out of the pool.
+    pub high_water_bytes: u64,
+}
+
+impl PoolStats {
+    /// Counter increments since `earlier` (a snapshot taken before some
+    /// window of work). `high_water_bytes` carries the later absolute peak.
+    pub fn delta_since(&self, earlier: &PoolStats) -> PoolStats {
+        PoolStats {
+            requests: self.requests - earlier.requests,
+            pool_hits: self.pool_hits - earlier.pool_hits,
+            device_mallocs: self.device_mallocs - earlier.device_mallocs,
+            device_bytes: self.device_bytes - earlier.device_bytes,
+            reused_bytes: self.reused_bytes - earlier.reused_bytes,
+            high_water_bytes: self.high_water_bytes,
+        }
+    }
+
+    /// Fraction of requests served without touching `cudaMalloc`.
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.pool_hits as f64 / self.requests as f64
+    }
+}
+
+/// Size-bucketed, grow-only device memory arena with call-scoped
+/// stream-ordered release. One pool per worker (single owner, like a CUDA
+/// context) — no interior locking.
+#[derive(Debug, Default)]
+pub struct DevicePool {
+    /// Free block count per power-of-two bucket (`bucket 0` ==
+    /// [`MIN_BUCKET_BYTES`]).
+    free: Vec<u32>,
+    /// Buckets handed out since the last [`DevicePool::end_call`].
+    live: Vec<usize>,
+    in_use_bytes: u64,
+    /// Bytes currently reserved from the device (drops on drain; the
+    /// counters in `stats` are strictly cumulative so deltas never
+    /// underflow across a drain).
+    footprint_bytes: u64,
+    stats: PoolStats,
+}
+
+/// Bucket index and rounded size for a request.
+fn bucket_of(bytes: usize) -> (usize, usize) {
+    let rounded = bytes.max(1).next_power_of_two().max(MIN_BUCKET_BYTES);
+    ((rounded.trailing_zeros() - MIN_BUCKET_LOG2) as usize, rounded)
+}
+
+impl DevicePool {
+    pub fn new() -> Self {
+        DevicePool::default()
+    }
+
+    /// Cumulative counters.
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// The device footprint in bytes (grow-only until [`DevicePool::drain`]).
+    pub fn footprint_bytes(&self) -> u64 {
+        self.footprint_bytes
+    }
+
+    /// Bytes currently checked out.
+    pub fn in_use_bytes(&self) -> u64 {
+        self.in_use_bytes
+    }
+
+    /// Allocate `bytes` for the current call. A pooled block is recycled
+    /// silently; otherwise a real `cudaMalloc` of the rounded size is
+    /// emitted on `trace`. Returns the rounded size.
+    pub fn alloc(
+        &mut self,
+        trace: &mut Trace,
+        bytes: usize,
+        label: &str,
+        step: &'static str,
+    ) -> usize {
+        let (bucket, rounded) = bucket_of(bytes);
+        if self.free.len() <= bucket {
+            self.free.resize(bucket + 1, 0);
+        }
+        self.stats.requests += 1;
+        if self.free[bucket] > 0 {
+            self.free[bucket] -= 1;
+            self.stats.pool_hits += 1;
+            self.stats.reused_bytes += rounded as u64;
+        } else {
+            self.stats.device_mallocs += 1;
+            self.stats.device_bytes += rounded as u64;
+            self.footprint_bytes += rounded as u64;
+            trace.malloc(rounded, format!("pool:{label}"), step);
+        }
+        self.in_use_bytes += rounded as u64;
+        if self.in_use_bytes > self.stats.high_water_bytes {
+            self.stats.high_water_bytes = self.in_use_bytes;
+        }
+        self.live.push(bucket);
+        rounded
+    }
+
+    /// Return every allocation of the current call to the free lists —
+    /// the pooled analog of the cleanup step's deferred frees, except no
+    /// `cudaFree` (and no implicit device sync) ever runs.
+    pub fn end_call(&mut self) {
+        for bucket in self.live.drain(..) {
+            self.free[bucket] += 1;
+            self.in_use_bytes -= (MIN_BUCKET_BYTES << bucket) as u64;
+        }
+    }
+
+    /// Release the whole footprint back to the device (process teardown).
+    /// Emits a single `cudaFree` op: real pools free their arenas in one
+    /// sweep. Outstanding call allocations are returned first.
+    pub fn drain(&mut self, trace: &mut Trace, step: &'static str) {
+        self.end_call();
+        if self.footprint_bytes > 0 {
+            trace.free("device_pool", step);
+        }
+        self.free.clear();
+        self.in_use_bytes = 0;
+        self.footprint_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_to_power_of_two_buckets() {
+        assert_eq!(bucket_of(0), (0, 256));
+        assert_eq!(bucket_of(1), (0, 256));
+        assert_eq!(bucket_of(256), (0, 256));
+        assert_eq!(bucket_of(257), (1, 512));
+        assert_eq!(bucket_of(4096), (4, 4096));
+        assert_eq!(bucket_of(5000), (5, 8192));
+    }
+
+    #[test]
+    fn second_call_with_same_sizes_is_all_hits() {
+        let mut pool = DevicePool::new();
+        let mut t1 = Trace::new();
+        pool.alloc(&mut t1, 1000, "meta", "setup");
+        pool.alloc(&mut t1, 50_000, "c_col", "alloc_c");
+        pool.alloc(&mut t1, 100_000, "c_val", "alloc_c");
+        pool.end_call();
+        assert_eq!(t1.malloc_calls(), 3);
+        let before = pool.stats();
+
+        let mut t2 = Trace::new();
+        pool.alloc(&mut t2, 1000, "meta", "setup");
+        pool.alloc(&mut t2, 50_000, "c_col", "alloc_c");
+        pool.alloc(&mut t2, 100_000, "c_val", "alloc_c");
+        pool.end_call();
+        assert_eq!(t2.malloc_calls(), 0, "warm call must not touch cudaMalloc");
+        let d = pool.stats().delta_since(&before);
+        assert_eq!(d.device_bytes, 0);
+        assert_eq!(d.pool_hits, 3);
+        assert!(d.reused_bytes > 0);
+    }
+
+    #[test]
+    fn bigger_request_grows_smaller_reuses() {
+        let mut pool = DevicePool::new();
+        let mut t = Trace::new();
+        pool.alloc(&mut t, 10_000, "a", "setup"); // 16 KiB bucket
+        pool.end_call();
+        // smaller request in the same bucket range still misses (different
+        // bucket), but an equal-bucket request hits
+        let mut t2 = Trace::new();
+        pool.alloc(&mut t2, 9_000, "b", "setup"); // also 16 KiB
+        pool.end_call();
+        assert_eq!(t2.malloc_calls(), 0);
+        let mut t3 = Trace::new();
+        pool.alloc(&mut t3, 20_000, "c", "setup"); // 32 KiB: grow
+        pool.end_call();
+        assert_eq!(t3.malloc_calls(), 1);
+    }
+
+    #[test]
+    fn high_water_tracks_concurrent_use() {
+        let mut pool = DevicePool::new();
+        let mut t = Trace::new();
+        pool.alloc(&mut t, 256, "a", "setup");
+        pool.alloc(&mut t, 256, "b", "setup");
+        pool.end_call();
+        // two buckets live at once => 512 peak, even though later calls
+        // use one at a time
+        pool.alloc(&mut t, 256, "c", "setup");
+        pool.end_call();
+        assert_eq!(pool.stats().high_water_bytes, 512);
+        assert_eq!(pool.in_use_bytes(), 0);
+    }
+
+    #[test]
+    fn drain_emits_one_free_and_resets_footprint() {
+        let mut pool = DevicePool::new();
+        let mut t = Trace::new();
+        pool.alloc(&mut t, 4096, "a", "setup");
+        pool.drain(&mut t, "cleanup");
+        assert_eq!(pool.footprint_bytes(), 0);
+        let frees = t
+            .ops
+            .iter()
+            .filter(|op| matches!(op, crate::gpusim::TraceOp::Free { .. }))
+            .count();
+        assert_eq!(frees, 1);
+        // after a drain the next alloc is a fresh device malloc
+        let mut t2 = Trace::new();
+        pool.alloc(&mut t2, 4096, "a", "setup");
+        assert_eq!(t2.malloc_calls(), 1);
+    }
+}

@@ -266,7 +266,7 @@ pub fn simulate(trace: &Trace, dev: &DeviceParams) -> Timeline {
                 let d = dev.malloc_ns(*bytes);
                 tl.host.push(HostSpan {
                     what: format!("cudaMalloc({label}, {bytes}B)"),
-                    step,
+                    step: *step,
                     start: host,
                     end: host + d,
                 });
@@ -310,7 +310,7 @@ pub fn simulate(trace: &Trace, dev: &DeviceParams) -> Timeline {
                 host = sync_device(&mut sim, &mut tl, host, &mut device_base);
                 tl.host.push(HostSpan {
                     what: format!("cudaFree({label})"),
-                    step,
+                    step: *step,
                     start: host,
                     end: host + dev.free_base_ns,
                 });
@@ -321,10 +321,22 @@ pub fn simulate(trace: &Trace, dev: &DeviceParams) -> Timeline {
                 host = sync_device(&mut sim, &mut tl, host, &mut device_base);
                 tl.host.push(HostSpan {
                     what: "cudaDeviceSynchronize".into(),
-                    step,
+                    step: *step,
                     start: t0,
                     end: host,
                 });
+            }
+            TraceOp::MemcpyH2D { bytes, step } => {
+                // async H2D from pinned memory: host pays the transfer,
+                // already-launched kernels keep executing
+                let d = dev.memcpy_ns(*bytes);
+                tl.host.push(HostSpan {
+                    what: format!("memcpyH2D({bytes}B)"),
+                    step: *step,
+                    start: host,
+                    end: host + d,
+                });
+                host += d;
             }
             TraceOp::MemcpyD2H { bytes, step } => {
                 // synchronous copy: waits for the device
@@ -332,7 +344,7 @@ pub fn simulate(trace: &Trace, dev: &DeviceParams) -> Timeline {
                 let d = dev.memcpy_ns(*bytes);
                 tl.host.push(HostSpan {
                     what: format!("memcpyD2H({bytes}B)"),
-                    step,
+                    step: *step,
                     start: host,
                     end: host + d,
                 });

@@ -104,6 +104,17 @@ impl Timeline {
         }
     }
 
+    /// Host time spent inside `cudaMalloc` / `cudaFree` spans — the
+    /// allocation-stall component of the timeline (§4.4–§4.6). The pooled
+    /// ablation compares this against warm pooled calls, where it is 0.
+    pub fn alloc_stall_ns(&self) -> f64 {
+        self.host
+            .iter()
+            .filter(|h| h.what.starts_with("cudaMalloc") || h.what.starts_with("cudaFree"))
+            .map(|h| h.end - h.start)
+            .sum()
+    }
+
     /// GFLOPS given a FLOP count (the paper's metric: 2·n_prod / time).
     pub fn gflops(&self, flops: f64) -> f64 {
         if self.total_ns <= 0.0 {

@@ -68,16 +68,20 @@ pub enum TraceOp {
     DeviceSync { step: &'static str },
     /// Small synchronous device-to-host copy (e.g. reading back total nnz).
     MemcpyD2H { bytes: usize, step: &'static str },
+    /// Async host-to-device copy from pinned memory (e.g. uploading a
+    /// cached `C.rpt`): host pays the transfer, the device keeps running.
+    MemcpyH2D { bytes: usize, step: &'static str },
 }
 
 impl TraceOp {
     pub fn step(&self) -> &'static str {
         match self {
-            TraceOp::Malloc { step, .. } => step,
-            TraceOp::Free { step, .. } => step,
+            TraceOp::Malloc { step, .. } => *step,
+            TraceOp::Free { step, .. } => *step,
             TraceOp::Launch(k) => k.step,
-            TraceOp::DeviceSync { step } => step,
-            TraceOp::MemcpyD2H { step, .. } => step,
+            TraceOp::DeviceSync { step } => *step,
+            TraceOp::MemcpyD2H { step, .. } => *step,
+            TraceOp::MemcpyH2D { step, .. } => *step,
         }
     }
 }
@@ -111,6 +115,10 @@ impl Trace {
 
     pub fn memcpy_d2h(&mut self, bytes: usize, step: &'static str) {
         self.ops.push(TraceOp::MemcpyD2H { bytes, step });
+    }
+
+    pub fn memcpy_h2d(&mut self, bytes: usize, step: &'static str) {
+        self.ops.push(TraceOp::MemcpyH2D { bytes, step });
     }
 
     /// Total bytes requested through `cudaMalloc` (metadata accounting,

@@ -9,7 +9,12 @@
 //!   (cuSPARSE/nsparse/spECK-like), a V100 cost-model simulator that
 //!   replays device traces, synthetic generators for the 26-matrix suite,
 //!   a PJRT runtime bridge, and the benchmark harness regenerating every
-//!   table and figure of the paper's evaluation.
+//!   table and figure of the paper's evaluation. On top of the per-call
+//!   pipeline sits the serving layer: a grow-only device memory pool
+//!   ([`gpusim::pool`]) and a sparsity-pattern symbolic-reuse cache
+//!   ([`coordinator::cache`]) that make warm repeated-pattern traffic
+//!   malloc-free and symbolic-free (see
+//!   [`spgemm::pipeline::multiply_reuse`]).
 //! * **L2 (python/compile/model.py)** — the numeric-phase dense block
 //!   accumulator as a JAX graph, AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/block_matmul.py)** — the Pallas kernel

@@ -154,6 +154,10 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             tables::table3(scale)?;
         }
         "ablations" => figures::ablations(scale)?,
+        "pool" => {
+            let reps = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(5);
+            figures::pool_ablation(scale, reps)?;
+        }
         "perf" => {
             let m = flags.get("matrix").map(|s| s.as_str()).unwrap_or("consph");
             let reps = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(5);
@@ -171,6 +175,7 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             figures::fig10(scale)?;
             figures::fig11(scale)?;
             figures::ablations(scale)?;
+            figures::pool_ablation(scale, 5)?;
         }
         other => bail!("unknown bench target {other}"),
     }
@@ -180,7 +185,9 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let jobs: usize = flags.get("jobs").map(|s| s.parse()).transpose()?.unwrap_or(32);
     let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(4);
-    let use_engine = !flags.contains_key("no-engine") && opsparse::runtime::artifacts_available();
+    let use_engine = !flags.contains_key("no-engine")
+        && opsparse::runtime::pjrt_compiled()
+        && opsparse::runtime::artifacts_available();
     println!("coordinator: {workers} hash workers, block engine: {use_engine}");
     let factory: Option<opsparse::coordinator::service::EngineFactory> = if use_engine {
         Some(Box::new(|| {
@@ -282,7 +289,7 @@ fn usage() -> ! {
            gen      --name <matrix> [--scale tiny|small|medium] [--out f.mtx]\n\
            spgemm   --a f.mtx [--b g.mtx] [--lib opsparse|nsparse|speck|cusparse] [--verify]\n\
            suite    [--scale s] [--verify]\n\
-           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|all> [--scale s]\n\
+           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|all> [--scale s]\n\
            serve    [--jobs n] [--workers w] [--no-engine]\n\
            sim-case webbase [--scale s]\n\
            list     (suite matrix names)"

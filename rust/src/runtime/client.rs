@@ -5,81 +5,136 @@
 //! serialized protos from jax >= 0.5 (64-bit instruction ids); the text
 //! parser reassigns ids (see /opt/xla-example/README.md and
 //! python/compile/aot.py).
+//!
+//! The real client requires the `pjrt` cargo feature (which pulls the
+//! `xla` crate and its native xla_extension toolchain). Without it this
+//! module compiles a stub with the same API whose constructor fails, so
+//! the rest of the stack — coordinator, router, engines' symbolic phases
+//! — builds and tests everywhere, and block jobs degrade to a clean
+//! runtime error instead of a missing-toolchain build break.
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use anyhow::{anyhow, Context, Result};
+    use std::collections::HashMap;
+    use std::path::Path;
 
-/// A PJRT CPU client plus a cache of compiled executables keyed by
-/// artifact path.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// A PJRT CPU client plus a cache of compiled executables keyed by
+    /// artifact path.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl PjrtRuntime {
+        /// Create the CPU client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(PjrtRuntime { client, exes: HashMap::new() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text artifact (cached by path).
+        pub fn load(&mut self, path: &Path) -> Result<()> {
+            let key = path.to_string_lossy().to_string();
+            if self.exes.contains_key(&key) {
+                return Ok(());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+            self.exes.insert(key, exe);
+            Ok(())
+        }
+
+        /// Execute a loaded artifact on f64 inputs.
+        ///
+        /// `inputs`: `(data, dims)` pairs; the computation was lowered with
+        /// `return_tuple=True`, so the single tuple output is unwrapped and
+        /// returned as a flat f64 vector.
+        pub fn execute_f64(
+            &mut self,
+            path: &Path,
+            inputs: &[(&[f64], &[usize])],
+        ) -> Result<Vec<f64>> {
+            self.load(path)?;
+            let key = path.to_string_lossy().to_string();
+            let exe = self.exes.get(&key).expect("just loaded");
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims_i64)
+                    .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+                literals.push(lit);
+            }
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let out = lit.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+            out.to_vec::<f64>().map_err(|e| anyhow!("to_vec<f64>: {e:?}"))
+        }
+
+        /// Number of compiled executables in the cache.
+        pub fn cached(&self) -> usize {
+            self.exes.len()
+        }
+    }
 }
 
-impl PjrtRuntime {
-    /// Create the CPU client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(PjrtRuntime { client, exes: HashMap::new() })
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// Build-anywhere stub: same API, fails at construction.
+    pub struct PjrtRuntime {
+        _private: (),
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text artifact (cached by path).
-    pub fn load(&mut self, path: &Path) -> Result<()> {
-        let key = path.to_string_lossy().to_string();
-        if self.exes.contains_key(&key) {
-            return Ok(());
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<Self> {
+            bail!("PJRT runtime unavailable: opsparse was built without the `pjrt` feature")
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
-        self.exes.insert(key, exe);
-        Ok(())
-    }
 
-    /// Execute a loaded artifact on f64 inputs.
-    ///
-    /// `inputs`: `(data, dims)` pairs; the computation was lowered with
-    /// `return_tuple=True`, so the single tuple output is unwrapped and
-    /// returned as a flat f64 vector.
-    pub fn execute_f64(
-        &mut self,
-        path: &Path,
-        inputs: &[(&[f64], &[usize])],
-    ) -> Result<Vec<f64>> {
-        self.load(path)?;
-        let key = path.to_string_lossy().to_string();
-        let exe = self.exes.get(&key).expect("just loaded");
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims_i64)
-                .map_err(|e| anyhow!("reshape input: {e:?}"))?;
-            literals.push(lit);
+        pub fn platform(&self) -> String {
+            String::new()
         }
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let out = lit.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
-        out.to_vec::<f64>().map_err(|e| anyhow!("to_vec<f64>: {e:?}"))
-    }
 
-    /// Number of compiled executables in the cache.
-    pub fn cached(&self) -> usize {
-        self.exes.len()
+        pub fn load(&mut self, _path: &Path) -> Result<()> {
+            bail!("PJRT runtime unavailable: opsparse was built without the `pjrt` feature")
+        }
+
+        pub fn execute_f64(
+            &mut self,
+            _path: &Path,
+            _inputs: &[(&[f64], &[usize])],
+        ) -> Result<Vec<f64>> {
+            bail!("PJRT runtime unavailable: opsparse was built without the `pjrt` feature")
+        }
+
+        pub fn cached(&self) -> usize {
+            0
+        }
     }
+}
+
+pub use imp::PjrtRuntime;
+
+/// True when the crate was compiled with the real PJRT client (`pjrt`
+/// feature). Callers use this to skip engine paths gracefully.
+pub fn pjrt_compiled() -> bool {
+    cfg!(feature = "pjrt")
 }

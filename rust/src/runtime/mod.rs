@@ -8,7 +8,7 @@ pub mod client;
 pub mod row_engine;
 
 pub use block_engine::BlockEngine;
-pub use client::PjrtRuntime;
+pub use client::{pjrt_compiled, PjrtRuntime};
 pub use row_engine::RowWindowEngine;
 
 use std::path::{Path, PathBuf};

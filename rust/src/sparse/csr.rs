@@ -124,6 +124,34 @@ impl Csr {
         }
     }
 
+    /// Order-sensitive FNV-1a fingerprint of the sparsity *pattern*:
+    /// shape + `rpt` + `col`, values excluded. Two matrices with equal
+    /// fingerprints share their symbolic phase, which is what the
+    /// coordinator's symbolic-reuse cache keys on. A collision
+    /// (~2^-64 per pair) makes the replayed `row_nnz` lie, which the
+    /// numeric phase detects by panicking on the first mismatched row —
+    /// never by silently corrupting C — and the coordinator worker
+    /// converts that panic into a failed job.
+    pub fn pattern_fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(h: &mut u64, x: u64) {
+            for b in x.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(PRIME);
+            }
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        mix(&mut h, self.rows as u64);
+        mix(&mut h, self.cols as u64);
+        for &r in &self.rpt {
+            mix(&mut h, r as u64);
+        }
+        for &c in &self.col {
+            mix(&mut h, c as u64);
+        }
+        h
+    }
+
     /// Maximum nnz over all rows ("Max nnz/row" column of Table 3).
     pub fn max_row_nnz(&self) -> usize {
         (0..self.rows).map(|i| self.row_nnz(i)).max().unwrap_or(0)
@@ -250,6 +278,24 @@ mod tests {
     fn validate_rejects_out_of_bounds_column() {
         let r = Csr::from_parts(1, 2, vec![0, 1], vec![5], vec![1.0]);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn pattern_fingerprint_ignores_values_not_structure() {
+        let a = sample();
+        let mut b = sample();
+        b.val[0] = 99.0;
+        assert_eq!(a.pattern_fingerprint(), b.pattern_fingerprint());
+        // different column => different pattern
+        let c =
+            Csr::from_parts(3, 3, vec![0, 2, 2, 4], vec![0, 1, 0, 1], vec![1.0, 2.0, 3.0, 4.0])
+                .unwrap();
+        assert_ne!(a.pattern_fingerprint(), c.pattern_fingerprint());
+        // same nnz layout but different shape
+        let i2 = Csr::identity(2);
+        let mut wide = Csr::identity(2);
+        wide.cols = 3;
+        assert_ne!(i2.pattern_fingerprint(), wide.pattern_fingerprint());
     }
 
     #[test]

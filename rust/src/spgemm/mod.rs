@@ -14,7 +14,7 @@ pub mod semiring;
 pub mod symbolic;
 
 pub use kernel_tables::{BinningRanges, KernelConfig, NumericRanges, SymbolicRanges};
-pub use pipeline::{multiply, OpSparseConfig, SpgemmOutput};
+pub use pipeline::{multiply, multiply_reuse, OpSparseConfig, SpgemmOutput, SymbolicReuse};
 
 /// Which hash-probe implementation to use (paper §5.2 / Fig 9).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

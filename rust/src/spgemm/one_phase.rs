@@ -155,6 +155,7 @@ pub fn multiply_one_phase(a: &Csr, b: &Csr) -> Result<SpgemmOutput> {
         sym_stats: super::hash_table::ProbeStats::default(),
         num_stats: stats,
         sym_fallback_rows: 0,
+        symbolic_skipped: false,
     })
 }
 

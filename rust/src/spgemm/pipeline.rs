@@ -9,6 +9,15 @@
 //! (exclusive-sum of nnz reusing `C.rpt` §5.3, C.col/C.val mallocs
 //! interleaved §5.4) → **numeric binning** → **numeric** → **cleanup**
 //! (all frees deferred here §5.5).
+//!
+//! Two cross-call reuse mechanisms extend the paper's per-call view for
+//! serving workloads (see [`multiply_reuse`]):
+//! * a [`DevicePool`] recycles every allocation, so warm calls issue zero
+//!   `cudaMalloc`s and zero `cudaFree`s;
+//! * a [`SymbolicReuse`] entry (cached per sparsity pattern) replays the
+//!   symbolic phase's result, skipping the n_prod kernel, both symbolic
+//!   binning passes, every symbolic hash kernel, and the nnz readback —
+//!   the host uploads the cached `C.rpt` instead (async H2D).
 
 use super::binning::{bin_rows, emit_binning_kernels, metadata_bytes, BinningResult};
 use super::hash_table::ProbeStats;
@@ -16,6 +25,7 @@ use super::kernel_tables::{NumericRanges, SymbolicRanges, NUM_BINS};
 use super::numeric::numeric_step;
 use super::symbolic::symbolic_step;
 use super::{BinningVariant, HashVariant};
+use crate::gpusim::pool::DevicePool;
 use crate::gpusim::trace::{BlockWork, Kernel, Trace};
 use crate::sparse::stats::nprod_per_row;
 use crate::sparse::Csr;
@@ -113,11 +123,43 @@ pub struct SpgemmOutput {
     pub num_stats: ProbeStats,
     /// Rows recomputed by the symbolic global-table kernel.
     pub sym_fallback_rows: usize,
+    /// True when the symbolic phase was replayed from a [`SymbolicReuse`]
+    /// cache entry instead of computed.
+    pub symbolic_skipped: bool,
 }
 
 impl SpgemmOutput {
     pub fn flops(&self) -> f64 {
         2.0 * self.nprod as f64
+    }
+}
+
+/// The pattern-determined result of the symbolic phase, cacheable across
+/// calls that share both operands' sparsity patterns (same `rpt`/`col`;
+/// values are free to differ — see [`Csr::pattern_fingerprint`]).
+///
+/// **Contract:** an entry may only be replayed against operands whose
+/// patterns exactly match the originating pair. [`multiply_reuse`]
+/// rejects the wrong row *count* with an error; a same-sized but
+/// different pattern cannot be detected cheaply and makes the numeric
+/// phase panic on the first row whose nnz disagrees (it never silently
+/// mis-sizes C). Key entries by both fingerprints, as the coordinator
+/// cache does, and this is a ~2^-64-per-pair event.
+#[derive(Clone, Debug)]
+pub struct SymbolicReuse {
+    /// Per-row nnz of C (what the paper stores in the reused `C.rpt`).
+    pub row_nnz: Vec<usize>,
+    /// Total intermediate products (the setup kernel's reduction).
+    pub nprod: usize,
+    /// Fallback-row count of the originating run (reporting only).
+    pub fallback_rows: usize,
+}
+
+impl SymbolicReuse {
+    /// Capture the cacheable part of a finished multiply.
+    pub fn from_output(out: &SpgemmOutput) -> Self {
+        let row_nnz = out.c.rpt.windows(2).map(|w| w[1] - w[0]).collect();
+        SymbolicReuse { row_nnz, nprod: out.nprod, fallback_rows: out.sym_fallback_rows }
     }
 }
 
@@ -153,130 +195,207 @@ pub(crate) fn nprod_kernel(a: &Csr, stream: usize) -> Kernel {
     }
 }
 
+/// Route one allocation either through the pool (recycled on warm calls,
+/// real `cudaMalloc` only on growth) or straight to the trace.
+fn emit_malloc(
+    trace: &mut Trace,
+    pool: &mut Option<&mut DevicePool>,
+    bytes: usize,
+    label: &str,
+    step: &'static str,
+) {
+    match pool.as_deref_mut() {
+        Some(p) => {
+            p.alloc(trace, bytes, label, step);
+        }
+        None => trace.malloc(bytes, label.to_string(), step),
+    }
+}
+
 /// Emit the setup-step metadata mallocs per the configuration.
-fn emit_metadata_mallocs(trace: &mut Trace, m: usize, cfg: &OpSparseConfig) {
+fn emit_metadata_mallocs(
+    trace: &mut Trace,
+    pool: &mut Option<&mut DevicePool>,
+    m: usize,
+    cfg: &OpSparseConfig,
+) {
     let crpt_bytes = 4 * (m + 1);
     if cfg.combined_metadata_malloc {
         let meta = metadata_bytes(m, cfg.binning_variant)
             + if cfg.reuse_crpt { 0 } else { 2 * 4 * m }
             + 1024; // cub exclusive-sum temp storage (§5.3)
-        trace.malloc(crpt_bytes + meta, "metadata+crpt", "setup");
+        emit_malloc(trace, pool, crpt_bytes + meta, "metadata+crpt", "setup");
     } else {
-        trace.malloc(crpt_bytes, "c_rpt", "setup");
-        trace.malloc(4 * m, "bins", "setup");
-        trace.malloc(4 * NUM_BINS * 2 + 4, "bin_sizes", "setup");
+        emit_malloc(trace, pool, crpt_bytes, "c_rpt", "setup");
+        emit_malloc(trace, pool, 4 * m, "bins", "setup");
+        emit_malloc(trace, pool, 4 * NUM_BINS * 2 + 4, "bin_sizes", "setup");
         if !cfg.reuse_crpt {
-            trace.malloc(4 * m, "d_nprod", "setup");
-            trace.malloc(4 * m, "d_nnz", "setup");
+            emit_malloc(trace, pool, 4 * m, "d_nprod", "setup");
+            emit_malloc(trace, pool, 4 * m, "d_nnz", "setup");
         }
         if cfg.binning_variant == BinningVariant::GlobalWide {
-            trace.malloc(4 * m * NUM_BINS, "bins_wide", "setup");
+            emit_malloc(trace, pool, 4 * m * NUM_BINS, "bins_wide", "setup");
         }
-        trace.malloc(1024, "cub_temp", "setup");
+        emit_malloc(trace, pool, 1024, "cub_temp", "setup");
     }
 }
 
 /// Run the full two-phase SpGEMM pipeline: computes `C = A * B` on the
 /// CPU while emitting the device trace the equivalent CUDA implementation
-/// would execute.
+/// would execute. Per-call allocation, no cross-call reuse.
 pub fn multiply(a: &Csr, b: &Csr, cfg: &OpSparseConfig) -> Result<SpgemmOutput> {
+    multiply_reuse(a, b, cfg, None, None)
+}
+
+/// [`multiply`] with the cross-call reuse hooks a warm worker provides:
+///
+/// * `pool` — every `cudaMalloc` of the pipeline (metadata, symbolic /
+///   numeric global hash tables, `C.col`, `C.val`) is served from the
+///   pool; the cleanup step releases stream-ordered instead of freeing,
+///   so a warm call's trace contains **no** malloc and **no** free ops.
+/// * `reuse` — a cached symbolic result for this exact sparsity pattern:
+///   steps 1–3 collapse to one async H2D upload of the cached `C.rpt` +
+///   bin ids, and the synchronizing nnz readback of step 4 disappears.
+pub fn multiply_reuse(
+    a: &Csr,
+    b: &Csr,
+    cfg: &OpSparseConfig,
+    mut pool: Option<&mut DevicePool>,
+    reuse: Option<&SymbolicReuse>,
+) -> Result<SpgemmOutput> {
     ensure!(a.cols == b.rows, "dimension mismatch: {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
+    if let Some(r) = reuse {
+        ensure!(
+            r.row_nnz.len() == a.rows,
+            "symbolic reuse entry is for a {}-row pattern, A has {} rows",
+            r.row_nnz.len(),
+            a.rows
+        );
+    }
     let m = a.rows;
     let mut trace = Trace::new();
+    let mut sym_global_bytes = 0usize;
 
     // ---------------- step 1: setup ----------------
-    if cfg.overlap_malloc {
+    if reuse.is_some() {
+        // symbolic cache hit: the n_prod kernel exists only to feed the
+        // symbolic binning we are about to skip. Metadata buffers are
+        // still needed for C.rpt + the numeric bin arrays.
+        emit_metadata_mallocs(&mut trace, &mut pool, m, cfg);
+    } else if cfg.overlap_malloc {
         // launch the n_prod kernel first, then allocate metadata while it
         // runs (§5.4, Fig. 2)
         trace.launch(nprod_kernel(a, 0));
-        emit_metadata_mallocs(&mut trace, m, cfg);
+        emit_metadata_mallocs(&mut trace, &mut pool, m, cfg);
     } else {
-        emit_metadata_mallocs(&mut trace, m, cfg);
+        emit_metadata_mallocs(&mut trace, &mut pool, m, cfg);
         trace.launch(nprod_kernel(a, 0));
     }
-    let nprod = nprod_per_row(a, b);
-    let nprod_total: usize = nprod.iter().sum();
 
-    // ---------------- step 2: symbolic binning ----------------
-    let sym_binning: BinningResult = bin_rows(&nprod, &cfg.sym_ranges.ranges());
-    emit_binning_kernels(&mut trace, "sym_binning", m, &sym_binning, cfg.binning_variant, 0);
+    // ---------------- steps 2+3: symbolic (computed or replayed) --------
+    let (sym_row_nnz, sym_stats, sym_fallback_count, nprod_total) = match reuse {
+        Some(r) => {
+            // upload the cached C.rpt and numeric bin ids from pinned host
+            // memory; async, so it costs host time only
+            trace.memcpy_h2d(4 * (m + 1) + 4 * m, "setup");
+            (r.row_nnz.clone(), ProbeStats::default(), r.fallback_rows, r.nprod)
+        }
+        None => {
+            let nprod = nprod_per_row(a, b);
+            let nprod_total: usize = nprod.iter().sum();
 
-    // ---------------- step 3: symbolic ----------------
-    let sym = symbolic_step(a, b, &sym_binning, cfg.hash_variant, "symbolic", cfg.num_streams);
-    // global-table malloc for kernel8 rows: sized by their n_prod
-    let sym_global_bytes: usize = sym
-        .fallback_rows
-        .iter()
-        .map(|&r| {
-            let np: usize = a.row_cols(r as usize).iter().map(|&k| b.row_nnz(k as usize)).sum();
-            (np.next_power_of_two().max(1024) * 2) * 4
-        })
-        .sum();
-    let mut sym_kernels = sym.kernels.clone();
-    let has_global_sym = sym_kernels.last().map(|k| k.name.contains("global")).unwrap_or(false);
-    let global_sym_kernel = if has_global_sym { sym_kernels.pop() } else { None };
-    if cfg.overlap_malloc && !sym_kernels.is_empty() && sym_global_bytes > 0 {
-        // launch the first shared-table kernel, then malloc the global
-        // table behind it (§5.4)
-        let first = sym_kernels.remove(0);
-        trace.launch(first);
-        trace.malloc(sym_global_bytes, "sym_global_table", "symbolic");
-        for k in sym_kernels {
-            trace.launch(k);
+            // step 2: symbolic binning
+            let sym_binning: BinningResult = bin_rows(&nprod, &cfg.sym_ranges.ranges());
+            emit_binning_kernels(&mut trace, "sym_binning", m, &sym_binning, cfg.binning_variant, 0);
+
+            // step 3: symbolic
+            let sym = symbolic_step(a, b, &sym_binning, cfg.hash_variant, "symbolic", cfg.num_streams);
+            // global-table malloc for kernel8 rows: sized by their n_prod
+            sym_global_bytes = sym
+                .fallback_rows
+                .iter()
+                .map(|&r| {
+                    let np: usize =
+                        a.row_cols(r as usize).iter().map(|&k| b.row_nnz(k as usize)).sum();
+                    (np.next_power_of_two().max(1024) * 2) * 4
+                })
+                .sum();
+            let mut sym_kernels = sym.kernels.clone();
+            let has_global_sym =
+                sym_kernels.last().map(|k| k.name.contains("global")).unwrap_or(false);
+            let global_sym_kernel = if has_global_sym { sym_kernels.pop() } else { None };
+            if cfg.overlap_malloc && !sym_kernels.is_empty() && sym_global_bytes > 0 {
+                // launch the first shared-table kernel, then malloc the global
+                // table behind it (§5.4)
+                let first = sym_kernels.remove(0);
+                trace.launch(first);
+                emit_malloc(&mut trace, &mut pool, sym_global_bytes, "sym_global_table", "symbolic");
+                for k in sym_kernels {
+                    trace.launch(k);
+                }
+            } else {
+                if sym_global_bytes > 0 {
+                    emit_malloc(&mut trace, &mut pool, sym_global_bytes, "sym_global_table", "symbolic");
+                }
+                for k in sym_kernels {
+                    trace.launch(k);
+                }
+            }
+            if let Some(k) = global_sym_kernel {
+                trace.launch(k);
+                if !cfg.deferred_free && sym_global_bytes > 0 && pool.is_none() {
+                    // nsparse: cudaFree immediately after the global kernel,
+                    // implicitly synchronizing the device (§4.6)
+                    trace.free("sym_global_table", "symbolic");
+                }
+            }
+            (sym.row_nnz, sym.stats, sym.fallback_rows.len(), nprod_total)
         }
-    } else {
-        if sym_global_bytes > 0 {
-            trace.malloc(sym_global_bytes, "sym_global_table", "symbolic");
-        }
-        for k in sym_kernels {
-            trace.launch(k);
-        }
-    }
-    if let Some(k) = global_sym_kernel {
-        trace.launch(k);
-        if !cfg.deferred_free && sym_global_bytes > 0 {
-            // nsparse: cudaFree immediately after the global kernel,
-            // implicitly synchronizing the device (§4.6)
-            trace.free("sym_global_table", "symbolic");
-        }
-    }
+    };
 
     // ---------------- step 4: alloc C ----------------
-    let c_rpt = exclusive_sum(&sym.row_nnz);
+    let c_rpt = exclusive_sum(&sym_row_nnz);
     let c_nnz = *c_rpt.last().unwrap();
-    let num_binning = bin_rows(&sym.row_nnz, &cfg.num_ranges.ranges());
+    let num_binning = bin_rows(&sym_row_nnz, &cfg.num_ranges.ranges());
 
-    // readback of the total nnz (tiny D2H copy, synchronizes)
-    trace.memcpy_d2h(8, "alloc_c");
-    // exclusive sum on C.rpt (in-place cub DeviceScan, §5.3): a streaming
-    // multi-block kernel
-    let exscan = Kernel {
-        name: "exscan_crpt".into(),
-        step: "alloc_c",
-        stream: 0,
-        tb_size: 256,
-        shared_bytes: 2048,
-        blocks: (0..m.div_ceil(2048).max(1))
-            .map(|blk| {
-                let lo = blk * 2048;
-                let rows = 2048.min(m + 1 - lo.min(m + 1));
-                BlockWork { global_bytes: rows as u64 * 8, ..Default::default() }
-            })
-            .collect(),
-    };
-    if cfg.overlap_malloc {
-        // §5.4: the binning pass kernels and the C.rpt scan run on the
-        // device while the C.col / C.val mallocs execute on the host
-        emit_binning_kernels(&mut trace, "num_binning", m, &num_binning, cfg.binning_variant, 0);
-        trace.launch(exscan);
-        trace.malloc(4 * c_nnz, "c_col", "alloc_c");
-        trace.malloc(8 * c_nnz, "c_val", "alloc_c");
+    if reuse.is_some() {
+        // the cached entry already knows nnz(C) host-side: no readback, no
+        // exscan, no binning pass — straight to the result allocations
+        emit_malloc(&mut trace, &mut pool, 4 * c_nnz, "c_col", "alloc_c");
+        emit_malloc(&mut trace, &mut pool, 8 * c_nnz, "c_val", "alloc_c");
     } else {
-        emit_binning_kernels(&mut trace, "num_binning", m, &num_binning, cfg.binning_variant, 0);
-        trace.launch(exscan);
-        trace.device_sync("num_binning");
-        trace.malloc(4 * c_nnz, "c_col", "alloc_c");
-        trace.malloc(8 * c_nnz, "c_val", "alloc_c");
+        // readback of the total nnz (tiny D2H copy, synchronizes)
+        trace.memcpy_d2h(8, "alloc_c");
+        // exclusive sum on C.rpt (in-place cub DeviceScan, §5.3): a
+        // streaming multi-block kernel
+        let exscan = Kernel {
+            name: "exscan_crpt".into(),
+            step: "alloc_c",
+            stream: 0,
+            tb_size: 256,
+            shared_bytes: 2048,
+            blocks: (0..m.div_ceil(2048).max(1))
+                .map(|blk| {
+                    let lo = blk * 2048;
+                    let rows = 2048.min(m + 1 - lo.min(m + 1));
+                    BlockWork { global_bytes: rows as u64 * 8, ..Default::default() }
+                })
+                .collect(),
+        };
+        if cfg.overlap_malloc {
+            // §5.4: the binning pass kernels and the C.rpt scan run on the
+            // device while the C.col / C.val mallocs execute on the host
+            emit_binning_kernels(&mut trace, "num_binning", m, &num_binning, cfg.binning_variant, 0);
+            trace.launch(exscan);
+            emit_malloc(&mut trace, &mut pool, 4 * c_nnz, "c_col", "alloc_c");
+            emit_malloc(&mut trace, &mut pool, 8 * c_nnz, "c_val", "alloc_c");
+        } else {
+            emit_binning_kernels(&mut trace, "num_binning", m, &num_binning, cfg.binning_variant, 0);
+            trace.launch(exscan);
+            trace.device_sync("num_binning");
+            emit_malloc(&mut trace, &mut pool, 4 * c_nnz, "c_col", "alloc_c");
+            emit_malloc(&mut trace, &mut pool, 8 * c_nnz, "c_val", "alloc_c");
+        }
     }
 
     // ---------------- step 5: numeric ----------------
@@ -309,9 +428,9 @@ pub fn multiply(a: &Csr, b: &Csr, cfg: &OpSparseConfig) -> Result<SpgemmOutput> 
             .unwrap_or(0);
         let first_shared = num_kernels.remove(biggest);
         trace.launch(first_shared);
-        trace.malloc(num_global_bytes, "num_global_table", "numeric");
+        emit_malloc(&mut trace, &mut pool, num_global_bytes, "num_global_table", "numeric");
         trace.launch(global);
-        if !cfg.deferred_free {
+        if !cfg.deferred_free && pool.is_none() {
             // nsparse behaviour: free right after the global kernel,
             // implicitly synchronizing before the remaining launches
             trace.free("num_global_table", "numeric");
@@ -321,9 +440,9 @@ pub fn multiply(a: &Csr, b: &Csr, cfg: &OpSparseConfig) -> Result<SpgemmOutput> 
         }
     } else {
         if num_global_bytes > 0 {
-            trace.malloc(num_global_bytes, "num_global_table", "numeric");
+            emit_malloc(&mut trace, &mut pool, num_global_bytes, "num_global_table", "numeric");
         }
-        let eager_free = !cfg.deferred_free && has_global_num;
+        let eager_free = !cfg.deferred_free && has_global_num && pool.is_none();
         for (i, k) in num_kernels.into_iter().enumerate() {
             let was_global = i == 0 && has_global_num;
             trace.launch(k);
@@ -335,23 +454,34 @@ pub fn multiply(a: &Csr, b: &Csr, cfg: &OpSparseConfig) -> Result<SpgemmOutput> 
 
     // ---------------- step 6: cleanup ----------------
     trace.device_sync("cleanup");
-    if cfg.deferred_free {
-        if sym_global_bytes > 0 {
-            trace.free("sym_global_table", "cleanup");
+    match pool.as_deref_mut() {
+        Some(p) => {
+            // stream-ordered release back to the pool: no cudaFree, no
+            // implicit device synchronization — the §5.5 deferral taken to
+            // its cross-call conclusion
+            p.end_call();
         }
-        if num_global_bytes > 0 {
-            trace.free("num_global_table", "cleanup");
+        None => {
+            if cfg.deferred_free {
+                if sym_global_bytes > 0 {
+                    trace.free("sym_global_table", "cleanup");
+                }
+                if num_global_bytes > 0 {
+                    trace.free("num_global_table", "cleanup");
+                }
+            }
+            trace.free("metadata", "cleanup");
         }
     }
-    trace.free("metadata", "cleanup");
 
     Ok(SpgemmOutput {
         c: num.c,
         trace,
         nprod: nprod_total,
-        sym_stats: sym.stats,
+        sym_stats,
         num_stats: num.stats,
-        sym_fallback_rows: sym.fallback_rows.len(),
+        sym_fallback_rows: sym_fallback_count,
+        symbolic_skipped: reuse.is_some(),
     })
 }
 
@@ -449,5 +579,77 @@ mod tests {
         let nprod: usize = crate::sparse::stats::nprod_per_row(&a, &a).iter().sum();
         assert_eq!(out.nprod, nprod);
         assert_eq!(out.flops(), 2.0 * nprod as f64);
+    }
+
+    #[test]
+    fn pooled_multiply_matches_unpooled_bit_for_bit() {
+        let mut rng = Rng::new(16);
+        let a = Uniform { n: 250, per_row: 10, jitter: 5 }.generate(&mut rng);
+        let cfg = OpSparseConfig::default();
+        let cold = multiply(&a, &a, &cfg).unwrap();
+        let mut pool = DevicePool::new();
+        let pooled = multiply_reuse(&a, &a, &cfg, Some(&mut pool), None).unwrap();
+        assert_eq!(pooled.c, cold.c, "pooling must not change the numerics");
+        assert_eq!(pooled.nprod, cold.nprod);
+    }
+
+    #[test]
+    fn warm_pooled_call_issues_no_mallocs_or_frees() {
+        let mut rng = Rng::new(17);
+        let a = Uniform { n: 300, per_row: 9, jitter: 4 }.generate(&mut rng);
+        let cfg = OpSparseConfig::default();
+        let mut pool = DevicePool::new();
+        let first = multiply_reuse(&a, &a, &cfg, Some(&mut pool), None).unwrap();
+        assert!(first.trace.malloc_calls() > 0, "cold call grows the pool");
+        let before = pool.stats();
+        let second = multiply_reuse(&a, &a, &cfg, Some(&mut pool), None).unwrap();
+        assert_eq!(second.trace.malloc_calls(), 0, "warm call must be malloc-free");
+        let frees = second
+            .trace
+            .ops
+            .iter()
+            .filter(|op| matches!(op, crate::gpusim::TraceOp::Free { .. }))
+            .count();
+        assert_eq!(frees, 0, "pooled cleanup must not cudaFree");
+        assert_eq!(pool.stats().delta_since(&before).device_bytes, 0);
+    }
+
+    #[test]
+    fn symbolic_reuse_skips_the_symbolic_phase_and_matches() {
+        let mut rng = Rng::new(18);
+        let a = Uniform { n: 280, per_row: 11, jitter: 5 }.generate(&mut rng);
+        let cfg = OpSparseConfig::default();
+        let cold = multiply(&a, &a, &cfg).unwrap();
+        let entry = SymbolicReuse::from_output(&cold);
+
+        // same pattern, different values: reuse must still be exact
+        let mut a2 = a.clone();
+        for (i, v) in a2.val.iter_mut().enumerate() {
+            *v += (i % 7) as f64 * 0.25;
+        }
+        let warm = multiply_reuse(&a2, &a2, &cfg, None, Some(&entry)).unwrap();
+        let gold = spgemm_reference(&a2, &a2);
+        assert!(warm.c.approx_eq(&gold, 1e-12), "{:?}", warm.c.diff(&gold, 1e-12));
+        assert!(warm.symbolic_skipped);
+        assert_eq!(warm.nprod, cold.nprod);
+        // no symbolic work in the trace
+        let sym_kernels = warm
+            .trace
+            .ops
+            .iter()
+            .filter(|op| op.step() == "symbolic" || op.step() == "sym_binning")
+            .count();
+        assert_eq!(sym_kernels, 0, "symbolic phase must be skipped");
+        // and the simulated timeline is strictly faster
+        let t_cold = simulate(&cold.trace, &V100).total_ns;
+        let t_warm = simulate(&warm.trace, &V100).total_ns;
+        assert!(t_warm < t_cold, "reuse should win: warm={t_warm} cold={t_cold}");
+    }
+
+    #[test]
+    fn symbolic_reuse_rejects_wrong_shape() {
+        let a = Csr::identity(8);
+        let entry = SymbolicReuse { row_nnz: vec![1; 4], nprod: 4, fallback_rows: 0 };
+        assert!(multiply_reuse(&a, &a, &OpSparseConfig::default(), None, Some(&entry)).is_err());
     }
 }

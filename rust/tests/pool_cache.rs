@@ -1,0 +1,107 @@
+//! Cross-call reuse integration: the device pool and the symbolic-reuse
+//! cache must change allocation behaviour and *nothing else*.
+//!
+//! Property over the whole generator suite: a pooled multiply — and a
+//! warm multiply replaying a cached symbolic result — produce the exact
+//! same `Csr` (bit-identical `rpt`/`col`/`val`) as the plain per-call
+//! pipeline, which itself matches the sort-merge reference.
+
+use opsparse::coordinator::{Coordinator, Job, Route, Router};
+use opsparse::gen::suite::{entries, SuiteScale};
+use opsparse::gpusim::{simulate, DevicePool, TraceOp, V100};
+use opsparse::spgemm::pipeline::{multiply, multiply_reuse, OpSparseConfig, SymbolicReuse};
+use opsparse::spgemm::reference::spgemm_reference;
+
+#[test]
+fn pooled_and_cached_multiplies_are_bit_identical_across_the_suite() {
+    let cfg = OpSparseConfig::default();
+    let mut pool = DevicePool::new();
+    for e in entries() {
+        let a = e.generate(SuiteScale::Tiny);
+        let cold = multiply(&a, &a, &cfg)
+            .unwrap_or_else(|err| panic!("per-call multiply failed on {}: {err:#}", e.name));
+        // the reference anchors correctness of the whole family
+        let gold = spgemm_reference(&a, &a);
+        assert!(
+            cold.c.approx_eq(&gold, 1e-9),
+            "{}: pipeline vs reference: {:?}",
+            e.name,
+            cold.c.diff(&gold, 1e-9)
+        );
+        // pooling must not perturb a single bit of the result
+        let pooled = multiply_reuse(&a, &a, &cfg, Some(&mut pool), None)
+            .unwrap_or_else(|err| panic!("pooled multiply failed on {}: {err:#}", e.name));
+        assert_eq!(pooled.c, cold.c, "{}: pooled result diverged", e.name);
+        // neither must a symbolic-cache replay
+        let entry = SymbolicReuse::from_output(&cold);
+        let warm = multiply_reuse(&a, &a, &cfg, Some(&mut pool), Some(&entry))
+            .unwrap_or_else(|err| panic!("warm multiply failed on {}: {err:#}", e.name));
+        assert_eq!(warm.c, cold.c, "{}: cached-symbolic result diverged", e.name);
+        assert!(warm.symbolic_skipped);
+        assert_eq!(warm.nprod, cold.nprod, "{}: cached nprod diverged", e.name);
+    }
+}
+
+#[test]
+fn second_multiply_with_same_pattern_allocates_zero_new_pool_bytes() {
+    let e = entries().into_iter().find(|e| e.name == "cant").unwrap();
+    let a = e.generate(SuiteScale::Tiny);
+    let cfg = OpSparseConfig::default();
+    let mut pool = DevicePool::new();
+
+    let cold = multiply_reuse(&a, &a, &cfg, Some(&mut pool), None).unwrap();
+    assert!(cold.trace.malloc_calls() > 0, "cold call must grow the pool");
+    let entry = SymbolicReuse::from_output(&cold);
+    let footprint = pool.footprint_bytes();
+    let before = pool.stats();
+
+    let warm = multiply_reuse(&a, &a, &cfg, Some(&mut pool), Some(&entry)).unwrap();
+    let delta = pool.stats().delta_since(&before);
+    assert_eq!(delta.device_bytes, 0, "warm call must allocate zero new pool bytes");
+    assert_eq!(delta.device_mallocs, 0);
+    assert_eq!(pool.footprint_bytes(), footprint, "footprint must not grow");
+    assert!(delta.pool_hits > 0, "warm call must be served from the pool");
+    assert_eq!(warm.trace.malloc_calls(), 0, "no cudaMalloc in the warm trace");
+    let frees =
+        warm.trace.ops.iter().filter(|op| matches!(op, TraceOp::Free { .. })).count();
+    assert_eq!(frees, 0, "no cudaFree (and no implicit sync) in the warm trace");
+
+    // the warm timeline strictly beats the cold one: no malloc stalls, no
+    // symbolic phase, no nnz readback
+    let t_cold = simulate(&cold.trace, &V100);
+    let t_warm = simulate(&warm.trace, &V100);
+    assert!(t_warm.total_ns < t_cold.total_ns);
+    assert_eq!(t_warm.alloc_stall_ns(), 0.0);
+}
+
+#[test]
+fn coordinator_reports_cache_hits_on_repeated_app_patterns() {
+    // AMG operator + MCL-style graph, each submitted three times to one
+    // warm worker — the serving shape of the apps/ iteration workloads
+    let amg_a = opsparse::apps::amg::poisson2d(24);
+    let mcl_m =
+        opsparse::gen::kron::Kron::default().generate(&mut opsparse::util::rng::Rng::new(5));
+    let coord = Coordinator::start(1, Router::default(), None);
+    let mut id = 0u64;
+    for _ in 0..3 {
+        for m in [&amg_a, &mcl_m] {
+            coord.submit(Job {
+                id,
+                a: m.clone(),
+                b: m.clone(),
+                force_route: Some(Route::Hash),
+            });
+            id += 1;
+        }
+    }
+    for _ in 0..id {
+        let r = coord.recv().expect("coordinator alive");
+        r.c.unwrap_or_else(|err| panic!("job failed: {err:#}"));
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.sym_cache_misses, 2, "one miss per distinct pattern");
+    assert_eq!(snap.sym_cache_hits, 4, "every repeat must hit");
+    assert!(snap.pool_reused_bytes > 0);
+    assert!(snap.sym_cache_hit_rate() > 0.6);
+    coord.shutdown();
+}
