@@ -1,0 +1,16 @@
+//! `cargo bench --bench shard_scaling` — row-sharded multi-device SpGEMM
+//! on a power-law matrix at 1/2/4/8 shards: per-device makespan, planned
+//! and measured load imbalance, and scaling efficiency vs one device.
+//!
+//! Env: `OPSPARSE_SCALE=tiny|small|medium` (default small).
+
+use opsparse::bench::figures;
+use opsparse::gen::suite::SuiteScale;
+
+fn main() {
+    let scale = std::env::var("OPSPARSE_SCALE")
+        .ok()
+        .and_then(|s| SuiteScale::parse(&s))
+        .unwrap_or(SuiteScale::Small);
+    figures::shard_scaling(scale).expect("shard_scaling bench");
+}

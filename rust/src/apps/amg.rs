@@ -345,6 +345,31 @@ mod tests {
     }
 
     #[test]
+    fn setup_on_an_operator_that_only_fits_sharded() {
+        use crate::coordinator::router::{Router, RouterConfig};
+        let a = poisson2d(24);
+        let mut plain = SpgemmContext::new();
+        let h_plain = AmgHierarchy::build_with(&mut plain, &a, 0.1, 50, 10).unwrap();
+        // a device budget far below the finest-level Galerkin products:
+        // the same build now runs its big multiplies row-sharded
+        let router = Router::new(RouterConfig {
+            device_memory_bytes: 8 * 1024,
+            max_devices: 4,
+            ..Default::default()
+        });
+        let mut ctx = SpgemmContext::with_router(router);
+        let h = AmgHierarchy::build_with(&mut ctx, &a, 0.1, 50, 10).unwrap();
+        assert!(ctx.sharded_multiplies() > 0, "the finest products must shard");
+        assert_eq!(h.levels.len(), h_plain.levels.len());
+        for (l, lp) in h.levels.iter().zip(&h_plain.levels) {
+            assert_eq!(l.a, lp.a, "sharded setup must build identical operators");
+        }
+        let b = vec![1.0; a.rows];
+        let (_, iters, rel) = h.solve(&b, 1e-8, 60);
+        assert!(rel < 1e-8, "sharded-setup hierarchy must converge: rel={rel} after {iters}");
+    }
+
+    #[test]
     fn galerkin_operator_is_consistent() {
         // RAP computed by the pipeline must equal the reference triple
         // product

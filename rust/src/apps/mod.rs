@@ -20,17 +20,27 @@ pub mod mcl;
 pub mod msbfs;
 
 use crate::coordinator::cache::PatternCache;
+use crate::coordinator::router::Router;
 use crate::gpusim::{DevicePool, PoolStats};
 use crate::sparse::Csr;
 use crate::spgemm::pipeline::{multiply_reuse, OpSparseConfig, SpgemmOutput, SymbolicReuse};
+use crate::spgemm::sharded::multiply_sharded_pooled;
 use anyhow::Result;
 use std::sync::Arc;
 
 /// Warm multiply state for an application: one device pool plus one
 /// sparsity-pattern cache, threaded through every SpGEMM the app issues.
+/// With a router attached ([`SpgemmContext::with_router`]) a multiply
+/// whose working set exceeds the router's single-device budget runs
+/// row-sharded across per-device pools instead — an app like AMG setup
+/// then handles operators that only fit sharded without code changes.
 pub struct SpgemmContext {
     pool: DevicePool,
+    /// Per-device pools for the sharded path, grown on demand.
+    shard_pools: Vec<DevicePool>,
     cache: PatternCache,
+    router: Option<Router>,
+    sharded_multiplies: u64,
     pub cfg: OpSparseConfig,
 }
 
@@ -43,14 +53,38 @@ impl SpgemmContext {
     pub fn with_capacity(patterns: usize) -> Self {
         SpgemmContext {
             pool: DevicePool::new(),
+            shard_pools: Vec::new(),
             cache: PatternCache::new(patterns),
+            router: None,
+            sharded_multiplies: 0,
             cfg: OpSparseConfig::default(),
         }
     }
 
+    /// A context that consults `router` before every multiply and takes
+    /// the row-sharded multi-device path when the router says the job
+    /// exceeds one device's memory budget.
+    pub fn with_router(router: Router) -> Self {
+        let mut ctx = SpgemmContext::new();
+        ctx.router = Some(router);
+        ctx
+    }
+
     /// `C = A·B` through the pooled pipeline, replaying the symbolic
-    /// phase when this context has seen the pattern pair before.
+    /// phase when this context has seen the pattern pair before. When a
+    /// router is attached and the working set exceeds its device budget,
+    /// the multiply runs row-sharded; the returned output's trace is then
+    /// the serialized concatenation of the per-device traces (see
+    /// [`crate::spgemm::ShardedOutput::into_output`]) and the symbolic
+    /// cache is bypassed (shard-aware cache keys are a ROADMAP item).
     pub fn multiply(&mut self, a: &Csr, b: &Csr) -> Result<SpgemmOutput> {
+        // shard_count, not route(): the context has no block engine, so
+        // the router's tile-fill sampling would be wasted on every call
+        if let Some(n_devices) = self.router.as_ref().and_then(|r| r.shard_count(a, b)) {
+            self.sharded_multiplies += 1;
+            let out = multiply_sharded_pooled(a, b, &self.cfg, n_devices, &mut self.shard_pools)?;
+            return Ok(out.into_output());
+        }
         let key = (a.pattern_fingerprint(), b.pattern_fingerprint());
         let reuse = self.cache.lookup(key);
         let out = multiply_reuse(a, b, &self.cfg, Some(&mut self.pool), reuse.as_deref())?;
@@ -70,9 +104,19 @@ impl SpgemmContext {
         self.cache.misses()
     }
 
-    /// Cumulative device-pool counters.
+    /// Multiplies that took the row-sharded multi-device path.
+    pub fn sharded_multiplies(&self) -> u64 {
+        self.sharded_multiplies
+    }
+
+    /// Cumulative device-pool counters (the single-device pool).
     pub fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
+    }
+
+    /// Cumulative counters of the per-device shard pools.
+    pub fn shard_pool_stats(&self) -> Vec<PoolStats> {
+        self.shard_pools.iter().map(|p| p.stats()).collect()
     }
 }
 
@@ -103,5 +147,28 @@ mod tests {
         assert_eq!(ctx.sym_cache_misses(), 1);
         assert_eq!(ctx.sym_cache_hits(), 2);
         assert!(ctx.pool_stats().pool_hits > 0);
+    }
+
+    #[test]
+    fn sharded_context_is_bit_identical_and_recycles_shard_pools() {
+        use crate::coordinator::router::RouterConfig;
+        let mut rng = Rng::new(42);
+        let a = Uniform { n: 260, per_row: 8, jitter: 4 }.generate(&mut rng);
+        let mut plain = SpgemmContext::new();
+        let gold = plain.multiply(&a, &a).unwrap();
+        let router = Router::new(RouterConfig {
+            device_memory_bytes: 4096,
+            max_devices: 4,
+            ..Default::default()
+        });
+        let mut ctx = SpgemmContext::with_router(router);
+        let out = ctx.multiply(&a, &a).unwrap();
+        assert_eq!(out.c, gold.c, "sharded context must not change the numerics");
+        assert_eq!(ctx.sharded_multiplies(), 1);
+        // the second identical multiply recycles every per-device pool
+        let out2 = ctx.multiply(&a, &a).unwrap();
+        assert_eq!(out2.c, gold.c);
+        assert_eq!(out2.trace.malloc_calls(), 0, "warm shard pools must be malloc-free");
+        assert!(ctx.shard_pool_stats().iter().any(|s| s.pool_hits > 0));
     }
 }

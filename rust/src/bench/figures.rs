@@ -401,6 +401,97 @@ pub fn pool_ablation(scale: SuiteScale, reps: usize) -> Result<Vec<PoolAblationR
     Ok(rows)
 }
 
+/// One shard count's row of the multi-device scaling bench.
+#[derive(Clone, Debug)]
+pub struct ShardScalingRow {
+    pub shards: usize,
+    /// Critical path: the slowest device's simulated wall time (ns).
+    pub makespan_ns: f64,
+    /// Per-device simulated wall times (ns), in shard order.
+    pub device_ns: Vec<f64>,
+    /// Planned imbalance: max/mean shard `nprod` work.
+    pub plan_imbalance: f64,
+    /// Measured imbalance: max/mean device wall time.
+    pub time_imbalance: f64,
+    /// Speedup over the 1-shard makespan.
+    pub speedup: f64,
+    /// Speedup / shard count (1.0 = linear scaling).
+    pub efficiency: f64,
+}
+
+/// Multi-device scaling: row-sharded SpGEMM on a power-law matrix (the
+/// adversarial case for load balance — work is concentrated in hub-coupled
+/// rows) at 1/2/4/8 shards, reporting per-device makespan, planned and
+/// measured load imbalance, and scaling efficiency. The stitched result
+/// is verified bit-identical to the unsharded pipeline once up front.
+pub fn shard_scaling(scale: SuiteScale) -> Result<Vec<ShardScalingRow>> {
+    use crate::gen::powerlaw::PowerLaw;
+    use crate::gpusim::MultiDevice;
+    use crate::spgemm::sharded::multiply_sharded;
+
+    let n = match scale {
+        SuiteScale::Tiny => 8192,
+        SuiteScale::Small => 24576,
+        SuiteScale::Medium => 65536,
+    };
+    let a = PowerLaw {
+        n,
+        alpha: 2.2,
+        max_row: (n / 32).max(64),
+        mean_row: 8.0,
+        hub_frac: 0.15,
+        forced_giant_rows: 0,
+    }
+    .generate(&mut crate::util::rng::Rng::new(2026));
+    println!(
+        "\n=== Shard scaling: row-sharded SpGEMM, power-law A ({n} rows, nnz {}) ===",
+        a.nnz()
+    );
+    println!(
+        "{:>7} {:>12} {:>12} {:>10} {:>10} {:>9} {:>11}",
+        "shards", "makespan", "mean-dev", "plan-imb", "time-imb", "speedup", "efficiency"
+    );
+    let cfg = OpSparseConfig::default();
+    let mut rows: Vec<ShardScalingRow> = Vec::new();
+    // the 1-shard run IS the unsharded pipeline (one shard = whole A), so
+    // it doubles as the bit-identity baseline for every other shard count
+    let mut baseline_c = None;
+    for shards in [1usize, 2, 4, 8] {
+        let out = multiply_sharded(&a, &a, &cfg, shards)?;
+        match &baseline_c {
+            None => baseline_c = Some(out.c.clone()),
+            Some(g) => {
+                anyhow::ensure!(out.c == *g, "{shards}-shard result must be bit-identical")
+            }
+        }
+        let md = MultiDevice::simulate(out.traces(), &V100);
+        let single = rows.first().map(|r| r.makespan_ns).unwrap_or(md.makespan_ns());
+        let row = ShardScalingRow {
+            shards,
+            makespan_ns: md.makespan_ns(),
+            device_ns: md.device_total_ns(),
+            plan_imbalance: out.plan.load_imbalance(),
+            time_imbalance: md.time_imbalance(),
+            speedup: md.speedup_vs(single),
+            efficiency: md.efficiency_vs(single),
+        };
+        let mean_dev =
+            row.device_ns.iter().sum::<f64>() / row.device_ns.len().max(1) as f64;
+        println!(
+            "{:>7} {:>10.1}us {:>10.1}us {:>9.3}x {:>9.3}x {:>8.2}x {:>10.1}%",
+            row.shards,
+            row.makespan_ns / 1e3,
+            mean_dev / 1e3,
+            row.plan_imbalance,
+            row.time_imbalance,
+            row.speedup,
+            row.efficiency * 100.0
+        );
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -456,5 +547,38 @@ mod tests {
         let bin = tl.step_ns("sym_binning") + tl.step_ns("num_binning");
         let frac = bin / tl.total_ns;
         assert!(frac < 0.15, "OpSparse binning should be cheap, got {:.1}%", frac * 100.0);
+    }
+
+    #[test]
+    fn shard_scaling_makespan_decreases_and_stays_balanced() {
+        let rows = shard_scaling(SuiteScale::Tiny).unwrap();
+        assert_eq!(rows.len(), 4);
+        // makespan must decrease monotonically from 1 -> 4 shards
+        for w in rows.windows(2).take(2) {
+            assert!(
+                w[1].makespan_ns < w[0].makespan_ns,
+                "{} shards ({:.1}us) must beat {} shards ({:.1}us)",
+                w[1].shards,
+                w[1].makespan_ns / 1e3,
+                w[0].shards,
+                w[0].makespan_ns / 1e3
+            );
+        }
+        // nprod-balanced partitioning keeps both planned and measured
+        // load imbalance tight through 4 shards on the power-law input
+        for r in rows.iter().filter(|r| r.shards <= 4) {
+            assert!(
+                r.plan_imbalance < 1.25,
+                "{} shards: planned imbalance {:.3}",
+                r.shards,
+                r.plan_imbalance
+            );
+            assert!(
+                r.time_imbalance < 1.25,
+                "{} shards: measured imbalance {:.3}",
+                r.shards,
+                r.time_imbalance
+            );
+        }
     }
 }

@@ -14,6 +14,9 @@ pub struct Metrics {
     pub jobs_failed: AtomicU64,
     pub hash_routed: AtomicU64,
     pub block_routed: AtomicU64,
+    /// Jobs routed to the row-sharded multi-device path (working set over
+    /// the single-device budget).
+    pub sharded_routed: AtomicU64,
     /// Total intermediate products processed (throughput numerator).
     pub nprod_total: AtomicU64,
     /// Jobs whose symbolic phase was replayed from the pattern cache.
@@ -70,6 +73,7 @@ impl Metrics {
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             hash_routed: self.hash_routed.load(Ordering::Relaxed),
             block_routed: self.block_routed.load(Ordering::Relaxed),
+            sharded_routed: self.sharded_routed.load(Ordering::Relaxed),
             nprod_total: self.nprod_total.load(Ordering::Relaxed),
             sym_cache_hits: self.sym_cache_hits.load(Ordering::Relaxed),
             sym_cache_misses: self.sym_cache_misses.load(Ordering::Relaxed),
@@ -91,6 +95,7 @@ pub struct MetricsSnapshot {
     pub jobs_failed: u64,
     pub hash_routed: u64,
     pub block_routed: u64,
+    pub sharded_routed: u64,
     pub nprod_total: u64,
     pub sym_cache_hits: u64,
     pub sym_cache_misses: u64,
@@ -120,7 +125,11 @@ impl std::fmt::Display for MetricsSnapshot {
             "jobs: submitted={} completed={} failed={}",
             self.jobs_submitted, self.jobs_completed, self.jobs_failed
         )?;
-        writeln!(f, "routes: hash={} block={}", self.hash_routed, self.block_routed)?;
+        writeln!(
+            f,
+            "routes: hash={} block={} sharded={}",
+            self.hash_routed, self.block_routed, self.sharded_routed
+        )?;
         writeln!(f, "nprod total: {}", self.nprod_total)?;
         writeln!(
             f,

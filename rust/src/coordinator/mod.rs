@@ -5,13 +5,17 @@
 //! execution path, and reports metrics. This module provides that layer:
 //!
 //! * [`router`] — picks the execution path per job: the hash pipeline
-//!   (CPU + device-trace simulation) or the PJRT BSR block engine (dense
-//!   blocky matrices, DESIGN.md §Hardware-Adaptation).
+//!   (CPU + device-trace simulation), the PJRT BSR block engine (dense
+//!   blocky matrices, DESIGN.md §Hardware-Adaptation), or the row-sharded
+//!   multi-device path ([`crate::spgemm::sharded`]) when the estimated
+//!   working set exceeds a single device's memory budget.
 //! * [`service`] — a worker-pool job queue (std threads + channels; the
 //!   build is offline so no tokio) with latency metrics. Each hash worker
 //!   owns a grow-only [`crate::gpusim::DevicePool`] and a [`cache`]
 //!   entry set, so warm repeated-pattern traffic pays neither
-//!   `cudaMalloc` nor the symbolic phase.
+//!   `cudaMalloc` nor the symbolic phase; sharded jobs fan out to
+//!   per-device pipelines on scoped threads and are reassembled before
+//!   the result is returned.
 //! * [`cache`] — the per-worker sparsity-pattern (symbolic-reuse) cache.
 //! * [`metrics`] — counters, latency percentiles, pool/cache telemetry.
 

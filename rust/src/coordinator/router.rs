@@ -1,13 +1,40 @@
-//! Job routing: decide per matrix pair whether to run the hash pipeline
-//! or the PJRT block engine.
+//! Job routing: decide per matrix pair whether to run the hash pipeline,
+//! the PJRT block engine, or the row-sharded multi-device path.
 //!
-//! The block engine wins when the matrices are *blocky* — their nonzeros
-//! cluster into dense `T×T` tiles (FEM matrices with contiguous runs, the
-//! high-CR half of Table 3). For scattered matrices the padding overhead
-//! of dense blocks dominates and the hash path wins. The router estimates
-//! block fill on a row sample, mirroring spECK's lightweight pre-analysis
-//! (§3) — cheap, structure-only, value-free.
+//! Two cheap, structure-only estimates drive the decision:
+//!
+//! 1. **Working set** ([`working_set_bytes`]): operands + a result upper
+//!    bound. When it exceeds a single device's memory budget the job
+//!    cannot run unsharded at all, so it routes to
+//!    [`Route::Sharded`] with enough devices to fit
+//!    (see [`crate::spgemm::sharded`]).
+//! 2. **Tile fill** ([`Router::estimate_fill`]): the block engine wins
+//!    when the matrices are *blocky* — their nonzeros cluster into dense
+//!    `T×T` tiles (FEM matrices with contiguous runs, the high-CR half of
+//!    Table 3). For scattered matrices the padding overhead of dense
+//!    blocks dominates and the hash path wins. Fill is estimated on a row
+//!    sample, mirroring spECK's lightweight pre-analysis (§3) — cheap,
+//!    structure-only, value-free.
+//!
+//! # Example
+//!
+//! ```
+//! use opsparse::coordinator::{Route, Router, RouterConfig};
+//! use opsparse::sparse::Csr;
+//!
+//! // scattered identity: low tile fill, fits in memory -> hash pipeline
+//! let a = Csr::identity(512);
+//! assert_eq!(Router::default().route(&a, &a), Route::Hash);
+//!
+//! // shrink the device budget below the working set -> sharded route
+//! let tiny = Router::new(RouterConfig { device_memory_bytes: 1024, ..Default::default() });
+//! match tiny.route(&a, &a) {
+//!     Route::Sharded { n_devices } => assert!(n_devices >= 2),
+//!     other => panic!("expected a sharded route, got {other:?}"),
+//! }
+//! ```
 
+use crate::sparse::stats::total_nprod;
 use crate::sparse::Csr;
 
 /// Execution path for a job.
@@ -17,6 +44,13 @@ pub enum Route {
     Hash,
     /// PJRT BSR block engine.
     Block,
+    /// Row-sharded multi-device hash pipeline
+    /// ([`crate::spgemm::multiply_sharded`]): chosen when the estimated
+    /// working set exceeds one device's memory budget.
+    Sharded {
+        /// Devices the job is split across.
+        n_devices: usize,
+    },
 }
 
 /// Router configuration.
@@ -28,12 +62,38 @@ pub struct RouterConfig {
     pub min_fill: f64,
     /// Rows sampled for the estimate.
     pub sample_rows: usize,
+    /// Single-device memory budget in bytes; jobs whose
+    /// [`working_set_bytes`] exceeds it shard. Default: the V100's 16 GB.
+    pub device_memory_bytes: usize,
+    /// Most devices a sharded job may span. Below 2 the sharded route is
+    /// disabled entirely (single-device deployment): oversized jobs stay
+    /// on the hash path and fail there if they truly cannot fit.
+    pub max_devices: usize,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        RouterConfig { t: 16, min_fill: 0.25, sample_rows: 256 }
+        RouterConfig {
+            t: 16,
+            min_fill: 0.25,
+            sample_rows: 256,
+            device_memory_bytes: 16 * (1 << 30),
+            max_devices: 8,
+        }
     }
+}
+
+/// Upper-bound device working set of `C = A * B` under the paper's CSR
+/// layout: both operands resident, plus `C` sized by the intermediate
+/// product count (`nnz(C) <= n_prod`, 12 B per entry: 4 B column + 8 B
+/// value) plus the `C.rpt` metadata. Transient hash tables are excluded —
+/// they are bounded by the same `n_prod` term. `O(nnz(A))` to compute,
+/// value-free.
+pub fn working_set_bytes(a: &Csr, b: &Csr) -> usize {
+    // a mismatched pair never reaches a device: estimate operands only and
+    // let the pipeline report the dimension error
+    let nprod = if a.cols == b.rows { total_nprod(a, b) } else { 0 };
+    a.device_bytes() + b.device_bytes() + 12 * nprod + 4 * (a.rows + 1)
 }
 
 /// Structure-only router.
@@ -77,8 +137,57 @@ impl Router {
         }
     }
 
-    /// Route a job by the joint fill of both operands.
+    /// Device count a job needs under the memory budget, or `None` when it
+    /// fits on one device. Row sharding replicates `B` on every device, so
+    /// only the `A`/`C` portion of the working set divides by the device
+    /// count: `k` must satisfy `B + (A + C)/k <= budget`. A `B` that alone
+    /// exceeds the budget is infeasible for row sharding (column-sharding
+    /// `B` is a ROADMAP item) — the router then returns `max_devices` as
+    /// the best it can do. Mismatched dimensions never shard: the job goes
+    /// to the hash path, which reports the dimension error.
+    pub fn shard_count(&self, a: &Csr, b: &Csr) -> Option<usize> {
+        if a.cols != b.rows || self.cfg.max_devices < 2 {
+            return None;
+        }
+        let budget = self.cfg.device_memory_bytes.max(1);
+        // cheap screen first: `n_prod <= nnz(A) · max nnz/row of B`, so if
+        // even that pessimistic working set fits, skip the exact O(nnz(A))
+        // fold — submit-path routing stays O(rows) for the common case
+        let base = a.device_bytes() + b.device_bytes() + 4 * (a.rows + 1);
+        let upper =
+            base.saturating_add(12usize.saturating_mul(a.nnz().saturating_mul(b.max_row_nnz())));
+        debug_assert!(
+            upper >= working_set_bytes(a, b),
+            "screen must stay an upper bound of the exact estimate"
+        );
+        if upper <= budget {
+            return None;
+        }
+        let est = working_set_bytes(a, b);
+        if est <= budget {
+            return None;
+        }
+        let max = self.cfg.max_devices;
+        let b_rep = b.device_bytes();
+        let n = if b_rep >= budget {
+            max
+        } else {
+            (est - b_rep).div_ceil(budget - b_rep)
+        };
+        Some(n.clamp(2, max))
+    }
+
+    /// Route a job: memory first (a job that cannot fit must shard), then
+    /// the joint tile fill of both operands. A dimension-mismatched pair
+    /// always routes to the hash path, which rejects it with a proper
+    /// error (the block engine would panic instead of failing the job).
     pub fn route(&self, a: &Csr, b: &Csr) -> Route {
+        if a.cols != b.rows {
+            return Route::Hash;
+        }
+        if let Some(n_devices) = self.shard_count(a, b) {
+            return Route::Sharded { n_devices };
+        }
         let fill = self.estimate_fill(a).min(self.estimate_fill(b));
         if fill >= self.cfg.min_fill {
             Route::Block
@@ -118,5 +227,97 @@ mod tests {
         let z = Csr::zero(10, 10);
         assert_eq!(Router::default().estimate_fill(&z), 0.0);
         assert_eq!(Router::default().route(&z, &z), Route::Hash);
+    }
+
+    #[test]
+    fn oversized_working_set_routes_sharded() {
+        let mut rng = Rng::new(43);
+        let a = Uniform { n: 1000, per_row: 8, jitter: 4 }.generate(&mut rng);
+        let est = working_set_bytes(&a, &a);
+        assert!(est > a.device_bytes() * 2, "estimate must include the C upper bound");
+        // budget just below the estimate: minimal split
+        let r = Router::new(RouterConfig {
+            device_memory_bytes: est - 1,
+            ..Default::default()
+        });
+        assert_eq!(r.route(&a, &a), Route::Sharded { n_devices: 2 });
+        // budget a quarter of the estimate: more devices, still capped
+        let r4 = Router::new(RouterConfig {
+            device_memory_bytes: est / 4,
+            max_devices: 8,
+            ..Default::default()
+        });
+        match r4.route(&a, &a) {
+            Route::Sharded { n_devices } => assert!((4..=8).contains(&n_devices)),
+            other => panic!("expected sharded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shard_count_honors_max_devices() {
+        let mut rng = Rng::new(44);
+        let a = Uniform { n: 500, per_row: 6, jitter: 3 }.generate(&mut rng);
+        let r = Router::new(RouterConfig {
+            device_memory_bytes: 1,
+            max_devices: 4,
+            ..Default::default()
+        });
+        assert_eq!(r.shard_count(&a, &a), Some(4));
+        // memory routing outranks tile fill
+        assert!(matches!(r.route(&a, &a), Route::Sharded { n_devices: 4 }));
+    }
+
+    #[test]
+    fn shard_count_accounts_for_b_replication() {
+        // B is replicated on every device, so the naive est/budget split
+        // would under-provision: with budget = est/2 a 2-way split leaves
+        // each device holding B + half of A/C > budget
+        let mut rng = Rng::new(46);
+        let a = Uniform { n: 400, per_row: 6, jitter: 3 }.generate(&mut rng);
+        let est = working_set_bytes(&a, &a);
+        let b_rep = a.device_bytes();
+        let budget = est.div_ceil(2);
+        let r =
+            Router::new(RouterConfig { device_memory_bytes: budget, ..Default::default() });
+        let n = r.shard_count(&a, &a).expect("over budget");
+        assert!(n > 2, "naive est/budget sizing would give 2, got {n}");
+        assert!(
+            b_rep + (est - b_rep).div_ceil(n) <= budget,
+            "chosen n={n} must actually fit the budget"
+        );
+    }
+
+    #[test]
+    fn max_devices_below_two_disables_sharding() {
+        let mut rng = Rng::new(47);
+        let a = Uniform { n: 300, per_row: 6, jitter: 3 }.generate(&mut rng);
+        for max_devices in [0, 1] {
+            let r = Router::new(RouterConfig {
+                device_memory_bytes: 1,
+                max_devices,
+                ..Default::default()
+            });
+            assert_eq!(r.shard_count(&a, &a), None, "max_devices={max_devices}");
+            assert_eq!(r.route(&a, &a), Route::Hash);
+        }
+    }
+
+    #[test]
+    fn mismatched_dims_never_route_sharded() {
+        // a job the pipeline will reject must reach the hash path so the
+        // caller gets the dimension error, not a shard-planning panic
+        let a = Csr::zero(3, 4);
+        let b = Csr::zero(5, 5);
+        let r = Router::new(RouterConfig { device_memory_bytes: 1, ..Default::default() });
+        assert_eq!(r.shard_count(&a, &b), None);
+        assert_eq!(r.route(&a, &b), Route::Hash);
+    }
+
+    #[test]
+    fn blocky_but_oversized_still_shards() {
+        let mut rng = Rng::new(45);
+        let a = Banded { n: 800, per_row: 48, band: 40, contiguous_frac: 1.0 }.generate(&mut rng);
+        let r = Router::new(RouterConfig { device_memory_bytes: 1024, ..Default::default() });
+        assert!(matches!(r.route(&a, &a), Route::Sharded { .. }));
     }
 }

@@ -14,6 +14,7 @@ use crate::gpusim::DevicePool;
 use crate::runtime::BlockEngine;
 use crate::sparse::Csr;
 use crate::spgemm::pipeline::{multiply_reuse, OpSparseConfig, SymbolicReuse};
+use crate::spgemm::sharded::multiply_sharded_pooled;
 use anyhow::Result;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
@@ -47,7 +48,8 @@ pub struct JobResult {
 }
 
 enum WorkerMsg {
-    Run(Job),
+    /// A job plus the route `submit` resolved for it.
+    Run(Job, Route),
     Stop,
 }
 
@@ -101,8 +103,10 @@ impl Coordinator {
             let metrics = Arc::clone(&metrics);
             workers.push(std::thread::spawn(move || {
                 // warm-worker state: a grow-only device pool and a
-                // symbolic-reuse cache, both single-owner (no locks)
+                // symbolic-reuse cache, both single-owner (no locks), plus
+                // per-device pools for the sharded path (grown on demand)
                 let mut pool = DevicePool::new();
+                let mut shard_pools: Vec<DevicePool> = Vec::new();
                 let mut cache = PatternCache::new(WORKER_CACHE_PATTERNS);
                 let cfg = OpSparseConfig::default();
                 loop {
@@ -111,7 +115,56 @@ impl Coordinator {
                         guard.recv()
                     };
                     match msg {
-                        Ok(WorkerMsg::Run(job)) => {
+                        Ok(WorkerMsg::Run(job, Route::Sharded { n_devices })) => {
+                            // fan the job out across per-shard pipelines
+                            // (scoped threads inside multiply_sharded_pooled)
+                            // and reassemble the stitched CSR. The pattern
+                            // cache is not consulted: entries are keyed on
+                            // whole operands, not shards (ROADMAP item).
+                            let t0 = Instant::now();
+                            let pools_before: Vec<_> =
+                                shard_pools.iter().map(|p| p.stats()).collect();
+                            let result = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    multiply_sharded_pooled(
+                                        &job.a,
+                                        &job.b,
+                                        &cfg,
+                                        n_devices,
+                                        &mut shard_pools,
+                                    )
+                                }),
+                            );
+                            let (c, nprod) = match result {
+                                Ok(Ok(out)) => {
+                                    let np = out.nprod;
+                                    (Ok(out.c), np)
+                                }
+                                Ok(Err(e)) => (Err(e), 0),
+                                Err(_) => {
+                                    (Err(anyhow::anyhow!("sharded multiply panicked")), 0)
+                                }
+                            };
+                            // per-device pool deltas (pools grown by this
+                            // job have no 'before' snapshot: whole stats)
+                            for (i, p) in shard_pools.iter().enumerate() {
+                                let d = match pools_before.get(i) {
+                                    Some(before) => p.stats().delta_since(before),
+                                    None => p.stats(),
+                                };
+                                metrics.observe_pool(&d);
+                            }
+                            finish(
+                                &metrics,
+                                &tx_res,
+                                job.id,
+                                Route::Sharded { n_devices },
+                                c,
+                                nprod,
+                                t0,
+                            );
+                        }
+                        Ok(WorkerMsg::Run(job, _)) => {
                             let t0 = Instant::now();
                             let key =
                                 (job.a.pattern_fingerprint(), job.b.pattern_fingerprint());
@@ -180,9 +233,16 @@ impl Coordinator {
                 };
                 loop {
                     match rx_block.recv() {
-                        Ok(WorkerMsg::Run(job)) => {
+                        Ok(WorkerMsg::Run(job, _)) => {
                             let t0 = Instant::now();
-                            let nprod = crate::sparse::stats::total_nprod(&job.a, &job.b);
+                            // guard the stats assert: a force-routed job
+                            // with mismatched dims must fail via the
+                            // engine's error, not panic this thread
+                            let nprod = if job.a.cols == job.b.rows {
+                                crate::sparse::stats::total_nprod(&job.a, &job.b)
+                            } else {
+                                0
+                            };
                             let c = match engine.as_mut() {
                                 Some(e) => e.spgemm_csr(&job.a, &job.b),
                                 None => Err(anyhow::anyhow!("block engine unavailable")),
@@ -206,17 +266,24 @@ impl Coordinator {
         let route = match (route, &self.tx_block) {
             (Route::Block, Some(_)) => Route::Block,
             (Route::Block, None) if job.force_route.is_some() => Route::Block, // honored, will fail
-            _ => Route::Hash,
+            (Route::Block, None) => Route::Hash,
+            (r, _) => r,
         };
         match route {
             Route::Hash => {
                 self.metrics.hash_routed.fetch_add(1, Ordering::Relaxed);
-                self.tx_hash.send(WorkerMsg::Run(job)).expect("hash workers alive");
+                self.tx_hash.send(WorkerMsg::Run(job, route)).expect("hash workers alive");
+            }
+            Route::Sharded { .. } => {
+                // sharded jobs run on the hash worker pool: each worker
+                // fans the shards out on scoped threads and reassembles
+                self.metrics.sharded_routed.fetch_add(1, Ordering::Relaxed);
+                self.tx_hash.send(WorkerMsg::Run(job, route)).expect("hash workers alive");
             }
             Route::Block => {
                 self.metrics.block_routed.fetch_add(1, Ordering::Relaxed);
                 match &self.tx_block {
-                    Some(tx) => tx.send(WorkerMsg::Run(job)).expect("block worker alive"),
+                    Some(tx) => tx.send(WorkerMsg::Run(job, route)).expect("block worker alive"),
                     None => {
                         self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                         let _ = self.tx_results.send(JobResult {
@@ -316,6 +383,57 @@ mod tests {
         let r = coord.recv().unwrap();
         assert!(r.c.is_err());
         assert_eq!(coord.metrics.snapshot().jobs_failed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn oversized_jobs_shard_and_reassemble_exactly() {
+        use crate::coordinator::router::RouterConfig;
+        // a budget far below any real working set: every job shards
+        let router = Router::new(RouterConfig {
+            device_memory_bytes: 4096,
+            max_devices: 4,
+            ..Default::default()
+        });
+        let coord = Coordinator::start(2, router, None);
+        let mut rng = Rng::new(73);
+        let a = Uniform { n: 300, per_row: 8, jitter: 4 }.generate(&mut rng);
+        for id in 0..3u64 {
+            coord.submit(Job { id, a: a.clone(), b: a.clone(), force_route: None });
+        }
+        let gold = spgemm_reference(&a, &a);
+        for _ in 0..3 {
+            let r = coord.recv().unwrap();
+            assert!(matches!(r.route, Route::Sharded { n_devices } if n_devices >= 2));
+            assert!(r.c.unwrap().approx_eq(&gold, 1e-12));
+            assert!(r.nprod > 0);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.sharded_routed, 3);
+        assert_eq!(snap.jobs_completed, 3);
+        // sharded traffic must show up in the pool telemetry: cold jobs
+        // grow per-device pools, and with 3 jobs on 2 workers some worker
+        // runs warm at least once
+        assert!(snap.pool_device_mallocs > 0, "cold sharded jobs grow the pools");
+        assert!(snap.pool_hits > 0, "warm sharded jobs must recycle pool buckets");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn forced_sharded_route_is_honored() {
+        let coord = Coordinator::start(1, Router::default(), None);
+        let mut rng = Rng::new(74);
+        let a = Uniform { n: 200, per_row: 6, jitter: 3 }.generate(&mut rng);
+        coord.submit(Job {
+            id: 5,
+            a: a.clone(),
+            b: a.clone(),
+            force_route: Some(Route::Sharded { n_devices: 3 }),
+        });
+        let r = coord.recv().unwrap();
+        assert_eq!(r.route, Route::Sharded { n_devices: 3 });
+        let gold = spgemm_reference(&a, &a);
+        assert!(r.c.unwrap().approx_eq(&gold, 1e-12));
         coord.shutdown();
     }
 

@@ -17,7 +17,7 @@
 //!   single-huge-row behaviour that drives the paper's §6.3.4 case study.
 //! * [`kron`] — Kronecker-product (RMAT-like) graphs (cage12/15-like
 //!   diffusion patterns are approximated by stencil+jitter instead).
-//! * [`rand_uniform`] — uniform random rows (poisson3Da, 2cubes_sphere…).
+//! * [`uniform`] — uniform random rows (poisson3Da, 2cubes_sphere…).
 
 pub mod banded;
 pub mod kron;

@@ -16,6 +16,7 @@
 
 pub mod cost;
 pub mod device;
+pub mod multi;
 pub mod occupancy;
 pub mod pool;
 pub mod scheduler;
@@ -23,6 +24,7 @@ pub mod timeline;
 pub mod trace;
 
 pub use device::{DeviceParams, V100};
+pub use multi::MultiDevice;
 pub use pool::{DevicePool, PoolStats};
 pub use scheduler::simulate;
 pub use timeline::Timeline;

@@ -1,0 +1,143 @@
+//! Multi-device view: aggregate per-device timelines into makespan and
+//! scaling figures.
+//!
+//! A sharded SpGEMM run produces one [`Trace`] per simulated device (see
+//! [`crate::spgemm::sharded`]). The devices execute concurrently — each
+//! has its own host thread, streams, and SMs — so the end-to-end figure
+//! is the **makespan**: the critical path, i.e. the slowest device's
+//! wall time. [`MultiDevice`] simulates every trace independently against
+//! one [`DeviceParams`] model and reports makespan, per-device times,
+//! load imbalance, and scaling efficiency versus a single-device run.
+//!
+//! Inter-device transfer costs (broadcasting `B`, gathering the stitched
+//! `C`) are not yet modeled; see ROADMAP "Open items".
+
+use super::device::DeviceParams;
+use super::scheduler::simulate;
+use super::timeline::Timeline;
+use super::trace::Trace;
+
+/// Per-device simulation results of one multi-device run.
+#[derive(Clone, Debug, Default)]
+pub struct MultiDevice {
+    /// One timeline per device, in device order.
+    pub timelines: Vec<Timeline>,
+}
+
+impl MultiDevice {
+    /// Simulate one trace per device against the same device model.
+    pub fn simulate<'a, I>(traces: I, dev: &DeviceParams) -> MultiDevice
+    where
+        I: IntoIterator<Item = &'a Trace>,
+    {
+        MultiDevice { timelines: traces.into_iter().map(|t| simulate(t, dev)).collect() }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.timelines.len()
+    }
+
+    /// Critical path: the slowest device's wall time (devices run
+    /// concurrently).
+    pub fn makespan_ns(&self) -> f64 {
+        self.timelines.iter().map(|t| t.total_ns).fold(0.0, f64::max)
+    }
+
+    /// Per-device wall times in device order.
+    pub fn device_total_ns(&self) -> Vec<f64> {
+        self.timelines.iter().map(|t| t.total_ns).collect()
+    }
+
+    /// Measured load imbalance: max device wall time / mean device wall
+    /// time (1.0 = perfect; idle devices count toward the mean).
+    pub fn time_imbalance(&self) -> f64 {
+        if self.timelines.is_empty() {
+            return 1.0;
+        }
+        let mean: f64 =
+            self.timelines.iter().map(|t| t.total_ns).sum::<f64>() / self.timelines.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            self.makespan_ns() / mean
+        }
+    }
+
+    /// Speedup over a single-device wall time.
+    pub fn speedup_vs(&self, single_device_ns: f64) -> f64 {
+        let m = self.makespan_ns();
+        if m <= 0.0 {
+            0.0
+        } else {
+            single_device_ns / m
+        }
+    }
+
+    /// Scaling efficiency: speedup divided by device count (1.0 = linear).
+    pub fn efficiency_vs(&self, single_device_ns: f64) -> f64 {
+        if self.timelines.is_empty() {
+            return 0.0;
+        }
+        self.speedup_vs(single_device_ns) / self.timelines.len() as f64
+    }
+
+    /// GFLOPS under the makespan (the paper's metric over the fleet).
+    pub fn gflops(&self, flops: f64) -> f64 {
+        let m = self.makespan_ns();
+        if m <= 0.0 {
+            0.0
+        } else {
+            flops / m
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::V100;
+    use crate::gpusim::trace::{BlockWork, Kernel};
+
+    fn trace_with_blocks(nblocks: usize) -> Trace {
+        let mut t = Trace::new();
+        t.launch(Kernel {
+            name: "k".into(),
+            step: "numeric",
+            stream: 0,
+            tb_size: 256,
+            shared_bytes: 0,
+            blocks: vec![BlockWork { global_bytes: 100_000, ..Default::default() }; nblocks],
+        });
+        t
+    }
+
+    #[test]
+    fn makespan_is_slowest_device() {
+        let fast = trace_with_blocks(10);
+        let slow = trace_with_blocks(4000);
+        let md = MultiDevice::simulate([&fast, &slow], &V100);
+        assert_eq!(md.n_devices(), 2);
+        let per = md.device_total_ns();
+        assert!((md.makespan_ns() - per[1]).abs() < 1e-6);
+        assert!(per[1] > per[0]);
+        assert!(md.time_imbalance() > 1.0);
+    }
+
+    #[test]
+    fn balanced_devices_have_low_imbalance_and_good_efficiency() {
+        let traces: Vec<Trace> = (0..4).map(|_| trace_with_blocks(1000)).collect();
+        let md = MultiDevice::simulate(traces.iter(), &V100);
+        assert!((md.time_imbalance() - 1.0).abs() < 1e-9);
+        let single = simulate(&trace_with_blocks(4000), &V100).total_ns;
+        let eff = md.efficiency_vs(single);
+        assert!(eff > 0.5, "4-way split of a 4x trace should scale: eff={eff}");
+    }
+
+    #[test]
+    fn empty_fleet_is_degenerate_but_defined() {
+        let md = MultiDevice::default();
+        assert_eq!(md.makespan_ns(), 0.0);
+        assert_eq!(md.time_imbalance(), 1.0);
+        assert_eq!(md.efficiency_vs(1.0), 0.0);
+    }
+}

@@ -13,6 +13,24 @@
 //! permanently. Releases are stream-ordered: blocks return to the free
 //! lists with **no** `cudaFree` (and therefore none of `cudaFree`'s
 //! implicit device synchronization, §4.6) until [`DevicePool::drain`].
+//!
+//! # Example
+//!
+//! ```
+//! use opsparse::gpusim::{DevicePool, Trace};
+//!
+//! let mut pool = DevicePool::new();
+//! let mut cold = Trace::new();
+//! pool.alloc(&mut cold, 1 << 20, "c_val", "alloc_c");
+//! pool.end_call(); // stream-ordered release: no cudaFree emitted
+//! assert_eq!(cold.malloc_calls(), 1); // first call grows the pool
+//!
+//! let mut warm = Trace::new();
+//! pool.alloc(&mut warm, 1 << 20, "c_val", "alloc_c");
+//! pool.end_call();
+//! assert_eq!(warm.malloc_calls(), 0); // bucket hit: no cudaMalloc
+//! assert_eq!(pool.stats().pool_hits, 1);
+//! ```
 
 use super::trace::Trace;
 

@@ -14,7 +14,11 @@
 //!   ([`gpusim::pool`]) and a sparsity-pattern symbolic-reuse cache
 //!   ([`coordinator::cache`]) that make warm repeated-pattern traffic
 //!   malloc-free and symbolic-free (see
-//!   [`spgemm::pipeline::multiply_reuse`]).
+//!   [`spgemm::pipeline::multiply_reuse`]), plus a row-sharded
+//!   multi-device path ([`spgemm::sharded`], aggregated by
+//!   [`gpusim::multi`]) for multiplies that exceed one device's memory.
+//!   See `docs/ARCHITECTURE.md` for the layer map and the paper-section →
+//!   module table.
 //! * **L2 (python/compile/model.py)** — the numeric-phase dense block
 //!   accumulator as a JAX graph, AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/block_matmul.py)** — the Pallas kernel

@@ -4,7 +4,7 @@
 //! * `gen --name <matrix> [--scale s] [--out f.mtx]` — emit a suite matrix
 //! * `spgemm --a f.mtx [--b g.mtx] [--lib L] [--verify]` — one multiply
 //! * `suite [--scale s] [--verify]` — all 26 matrices, all libraries
-//! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|all>`
+//! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|all>`
 //! * `serve [--jobs n] [--workers w]` — coordinator demo (job queue)
 //! * `sim-case webbase` — §6.3.4 / §6.3.5 case-study timeline
 //!
@@ -158,6 +158,9 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             let reps = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(5);
             figures::pool_ablation(scale, reps)?;
         }
+        "shards" => {
+            figures::shard_scaling(scale)?;
+        }
         "perf" => {
             let m = flags.get("matrix").map(|s| s.as_str()).unwrap_or("consph");
             let reps = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(5);
@@ -176,6 +179,7 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             figures::fig11(scale)?;
             figures::ablations(scale)?;
             figures::pool_ablation(scale, 5)?;
+            figures::shard_scaling(scale)?;
         }
         other => bail!("unknown bench target {other}"),
     }
@@ -289,7 +293,7 @@ fn usage() -> ! {
            gen      --name <matrix> [--scale tiny|small|medium] [--out f.mtx]\n\
            spgemm   --a f.mtx [--b g.mtx] [--lib opsparse|nsparse|speck|cusparse] [--verify]\n\
            suite    [--scale s] [--verify]\n\
-           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|all> [--scale s]\n\
+           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|all> [--scale s]\n\
            serve    [--jobs n] [--workers w] [--no-engine]\n\
            sim-case webbase [--scale s]\n\
            list     (suite matrix names)"

@@ -22,9 +22,12 @@ pub fn nprod_per_row(a: &Csr, b: &Csr) -> Vec<usize> {
     out
 }
 
-/// Total intermediate products (`n_prod` of Table 3).
+/// Total intermediate products (`n_prod` of Table 3). A fold over `A`'s
+/// stored entries — no per-row vector is materialized, so this is safe on
+/// hot paths like the coordinator's submit-side routing.
 pub fn total_nprod(a: &Csr, b: &Csr) -> usize {
-    nprod_per_row(a, b).iter().sum()
+    assert_eq!(a.cols, b.rows, "inner dimension mismatch");
+    a.col.iter().map(|&k| b.row_nnz(k as usize)).sum()
 }
 
 /// FLOP count of the multiply: the paper's GFLOPS metric is

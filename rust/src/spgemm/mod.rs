@@ -11,10 +11,14 @@ pub mod one_phase;
 pub mod pipeline;
 pub mod reference;
 pub mod semiring;
+pub mod sharded;
 pub mod symbolic;
 
 pub use kernel_tables::{BinningRanges, KernelConfig, NumericRanges, SymbolicRanges};
 pub use pipeline::{multiply, multiply_reuse, OpSparseConfig, SpgemmOutput, SymbolicReuse};
+pub use sharded::{
+    multiply_sharded, multiply_sharded_pooled, multiply_sharded_with, ShardPlan, ShardedOutput,
+};
 
 /// Which hash-probe implementation to use (paper §5.2 / Fig 9).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -243,6 +243,27 @@ fn emit_metadata_mallocs(
 /// Run the full two-phase SpGEMM pipeline: computes `C = A * B` on the
 /// CPU while emitting the device trace the equivalent CUDA implementation
 /// would execute. Per-call allocation, no cross-call reuse.
+///
+/// # Example
+///
+/// The quickstart in one breath: generate a suite matrix, compute `A²`,
+/// verify it against the sort-merge reference, and simulate the trace on
+/// the V100 model (see `examples/quickstart.rs` for the narrated
+/// version):
+///
+/// ```
+/// use opsparse::gen::suite::{suite_entry, SuiteScale};
+/// use opsparse::gpusim::{simulate, V100};
+/// use opsparse::spgemm::reference::spgemm_reference;
+/// use opsparse::spgemm::{multiply, OpSparseConfig};
+///
+/// let a = suite_entry("poisson3Da").unwrap().generate(SuiteScale::Tiny);
+/// let out = multiply(&a, &a, &OpSparseConfig::default()).unwrap();
+/// assert!(out.c.approx_eq(&spgemm_reference(&a, &a), 1e-9));
+///
+/// let tl = simulate(&out.trace, &V100);
+/// assert!(tl.gflops(out.flops()) > 0.0);
+/// ```
 pub fn multiply(a: &Csr, b: &Csr, cfg: &OpSparseConfig) -> Result<SpgemmOutput> {
     multiply_reuse(a, b, cfg, None, None)
 }
@@ -256,6 +277,30 @@ pub fn multiply(a: &Csr, b: &Csr, cfg: &OpSparseConfig) -> Result<SpgemmOutput> 
 /// * `reuse` — a cached symbolic result for this exact sparsity pattern:
 ///   steps 1–3 collapse to one async H2D upload of the cached `C.rpt` +
 ///   bin ids, and the synchronizing nnz readback of step 4 disappears.
+///
+/// # Example
+///
+/// A warm worker's loop: the cold call grows the pool and yields a
+/// cacheable symbolic result; the warm call recycles every allocation and
+/// replays the symbolic phase:
+///
+/// ```
+/// use opsparse::gpusim::DevicePool;
+/// use opsparse::sparse::Csr;
+/// use opsparse::spgemm::{multiply_reuse, OpSparseConfig, SymbolicReuse};
+///
+/// let a = Csr::identity(64);
+/// let cfg = OpSparseConfig::default();
+/// let mut pool = DevicePool::new();
+///
+/// let cold = multiply_reuse(&a, &a, &cfg, Some(&mut pool), None).unwrap();
+/// let entry = SymbolicReuse::from_output(&cold);
+///
+/// let warm = multiply_reuse(&a, &a, &cfg, Some(&mut pool), Some(&entry)).unwrap();
+/// assert_eq!(warm.c, cold.c); // bit-identical
+/// assert!(warm.symbolic_skipped);
+/// assert_eq!(warm.trace.malloc_calls(), 0); // pooled: no cudaMalloc
+/// ```
 pub fn multiply_reuse(
     a: &Csr,
     b: &Csr,

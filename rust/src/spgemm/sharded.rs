@@ -1,0 +1,416 @@
+//! Row-sharded multi-device SpGEMM: partition `A` into contiguous row
+//! shards, run the full six-step OpSparse pipeline per shard on its own
+//! simulated device, and stitch the per-shard `C` row blocks into one CSR.
+//!
+//! Sharding is the standard path past a single device's memory and SM
+//! count: row-block decomposition keeps every shard a complete, ordinary
+//! SpGEMM (`C[lo..hi, :] = A[lo..hi, :] * B`), so the per-shard work
+//! reuses [`multiply_reuse`] unchanged and the stitched result is
+//! **bit-identical** to the unsharded pipeline — each output row is
+//! computed by exactly the same code on exactly the same data, only on a
+//! different device.
+//!
+//! Shards are balanced by per-row *intermediate products*
+//! ([`nprod_per_row`]), not raw row count: on power-law matrices a few
+//! hub-coupled rows carry most of the multiply, and an equal-rows split
+//! would overload one shard (see [`ShardPlan::balanced`]).
+//!
+//! `B` is replicated on every device (the broadcast cost is not yet
+//! modeled — see ROADMAP "Open items"). Each shard gets its own
+//! [`DevicePool`] and its own trace; feed the traces to
+//! [`crate::gpusim::MultiDevice`] for the makespan / scaling-efficiency
+//! view, or use [`ShardedOutput::into_output`] for a single-device
+//! serialized view.
+//!
+//! # Example
+//!
+//! ```
+//! use opsparse::gen::uniform::Uniform;
+//! use opsparse::gpusim::{MultiDevice, V100};
+//! use opsparse::spgemm::{multiply, multiply_sharded, OpSparseConfig};
+//! use opsparse::util::rng::Rng;
+//!
+//! let a = Uniform { n: 256, per_row: 6, jitter: 3 }.generate(&mut Rng::new(7));
+//! let cfg = OpSparseConfig::default();
+//!
+//! let sharded = multiply_sharded(&a, &a, &cfg, 4).unwrap();
+//! // stitched result is bit-identical to the unsharded pipeline
+//! assert_eq!(sharded.c, multiply(&a, &a, &cfg).unwrap().c);
+//!
+//! // aggregate the four device timelines into the critical-path view
+//! let md = MultiDevice::simulate(sharded.traces(), &V100);
+//! assert_eq!(md.n_devices(), 4);
+//! assert!(md.makespan_ns() > 0.0);
+//! ```
+
+use super::hash_table::ProbeStats;
+use super::pipeline::{multiply_reuse, OpSparseConfig, SpgemmOutput};
+use crate::gpusim::pool::DevicePool;
+use crate::gpusim::trace::Trace;
+use crate::sparse::ops::row_slice;
+use crate::sparse::stats::nprod_per_row;
+use crate::sparse::Csr;
+use anyhow::{anyhow, ensure, Result};
+
+/// A partition of `A`'s rows into contiguous shards.
+///
+/// Invariants: `bounds.len() == n_shards + 1`, `bounds[0] == 0`, the
+/// bounds are non-decreasing, and `bounds[n_shards] == rows`. Empty
+/// shards (equal neighbouring bounds) are legal — they arise when the
+/// shard count exceeds the row count — and execute as zero-row pipelines.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    bounds: Vec<usize>,
+    /// Per-shard work (sum of `nprod + 1` over the shard's rows).
+    costs: Vec<u64>,
+}
+
+impl ShardPlan {
+    /// Balance shards by per-row intermediate products: a greedy prefix
+    /// walk that closes the current shard when taking the next row would
+    /// overshoot its fair share of the *remaining* work more than
+    /// stopping short undershoots it. Each row costs `nprod[i] + 1` (the
+    /// `+ 1` accounts for per-row metadata traffic and keeps all-zero
+    /// matrices splittable).
+    ///
+    /// With `n_shards >= rows` every non-empty shard holds exactly one
+    /// row; trailing shards are empty.
+    pub fn balanced(nprod: &[usize], n_shards: usize) -> ShardPlan {
+        let n = nprod.len();
+        let shards = n_shards.max(1);
+        let row_cost = |i: usize| nprod[i] as u64 + 1;
+        let total: u64 = (0..n).map(row_cost).sum();
+        let mut bounds = Vec::with_capacity(shards + 1);
+        let mut costs = Vec::with_capacity(shards);
+        bounds.push(0);
+        let mut acc = 0u64;
+        let mut spent = 0u64;
+        for i in 0..n {
+            let open = shards - costs.len(); // shards left, incl. the current one
+            if open > 1 && acc > 0 {
+                let target = (total - spent) as f64 / open as f64;
+                let with = (acc + row_cost(i)) as f64;
+                if with - target > target - acc as f64 {
+                    bounds.push(i);
+                    costs.push(acc);
+                    spent += acc;
+                    acc = 0;
+                }
+            }
+            acc += row_cost(i);
+        }
+        bounds.push(n);
+        costs.push(acc);
+        while costs.len() < shards {
+            bounds.push(n);
+            costs.push(0);
+        }
+        ShardPlan { bounds, costs }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.costs.len()
+    }
+
+    /// Total row count the plan partitions.
+    pub fn rows(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Row range `[lo, hi)` of shard `s`.
+    pub fn range(&self, s: usize) -> (usize, usize) {
+        (self.bounds[s], self.bounds[s + 1])
+    }
+
+    /// The shard boundaries (`n_shards + 1` entries).
+    pub fn bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+
+    /// Planned work per shard (in `nprod + 1` units).
+    pub fn costs(&self) -> &[u64] {
+        &self.costs
+    }
+
+    /// Planned load imbalance: max shard work / mean shard work
+    /// (1.0 = perfect). Empty shards count toward the mean.
+    pub fn load_imbalance(&self) -> f64 {
+        let total: u64 = self.costs.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.costs.len() as f64;
+        let max = *self.costs.iter().max().unwrap() as f64;
+        max / mean
+    }
+}
+
+/// Result of a sharded multiply: the stitched matrix plus every shard's
+/// full pipeline output (one simulated device each).
+#[derive(Clone, Debug)]
+pub struct ShardedOutput {
+    /// The stitched result, bit-identical to the unsharded pipeline's `C`.
+    pub c: Csr,
+    /// The row partition the run used.
+    pub plan: ShardPlan,
+    /// Per-shard pipeline outputs, in shard order. `shards[s].trace` is
+    /// device `s`'s trace; `shards[s].c` is the row block `C[lo..hi, :]`.
+    pub shards: Vec<SpgemmOutput>,
+    /// Total intermediate products across all shards.
+    pub nprod: usize,
+}
+
+impl ShardedOutput {
+    /// Per-device traces in shard order (feed to
+    /// [`crate::gpusim::MultiDevice::simulate`]).
+    pub fn traces(&self) -> impl Iterator<Item = &Trace> {
+        self.shards.iter().map(|s| &s.trace)
+    }
+
+    pub fn flops(&self) -> f64 {
+        2.0 * self.nprod as f64
+    }
+
+    /// Collapse into a single [`SpgemmOutput`] whose trace concatenates
+    /// the shard traces. The merged trace *serializes* the devices, so
+    /// simulating it gives the one-device-at-a-time upper bound, not the
+    /// concurrent makespan — use [`crate::gpusim::MultiDevice`] for that.
+    pub fn into_output(self) -> SpgemmOutput {
+        let ShardedOutput { c, shards, nprod, .. } = self;
+        let mut trace = Trace::new();
+        let mut sym_stats = ProbeStats::default();
+        let mut num_stats = ProbeStats::default();
+        let mut fallback = 0usize;
+        for s in shards {
+            sym_stats.add(&s.sym_stats);
+            num_stats.add(&s.num_stats);
+            fallback += s.sym_fallback_rows;
+            trace.ops.extend(s.trace.ops);
+        }
+        SpgemmOutput {
+            c,
+            trace,
+            nprod,
+            sym_stats,
+            num_stats,
+            sym_fallback_rows: fallback,
+            symbolic_skipped: false,
+        }
+    }
+}
+
+/// Row-sharded `C = A * B` over `n_shards` simulated devices, each shard
+/// balanced by intermediate products and run through the full OpSparse
+/// pipeline with per-call allocation (no cross-call pools).
+pub fn multiply_sharded(
+    a: &Csr,
+    b: &Csr,
+    cfg: &OpSparseConfig,
+    n_shards: usize,
+) -> Result<ShardedOutput> {
+    ensure!(a.cols == b.rows, "dimension mismatch: {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let plan = ShardPlan::balanced(&nprod_per_row(a, b), n_shards);
+    multiply_sharded_with(a, b, cfg, &plan, None)
+}
+
+/// [`multiply_sharded`] for a warm owner: balances a fresh plan and runs
+/// it over `pools`, growing the vector to `n_shards` first (one
+/// [`DevicePool`] per device, recycled across calls). This is the one
+/// sharded dispatch path shared by the coordinator's hash workers and
+/// [`crate::apps::SpgemmContext`].
+pub fn multiply_sharded_pooled(
+    a: &Csr,
+    b: &Csr,
+    cfg: &OpSparseConfig,
+    n_shards: usize,
+    pools: &mut Vec<DevicePool>,
+) -> Result<ShardedOutput> {
+    ensure!(a.cols == b.rows, "dimension mismatch: {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let n = n_shards.max(1);
+    while pools.len() < n {
+        pools.push(DevicePool::new());
+    }
+    let plan = ShardPlan::balanced(&nprod_per_row(a, b), n);
+    multiply_sharded_with(a, b, cfg, &plan, Some(&mut pools[..n]))
+}
+
+/// [`multiply_sharded`] with an explicit plan and optional per-device
+/// pools (one [`DevicePool`] per shard, recycled across calls by a warm
+/// owner such as a coordinator worker or an [`crate::apps::SpgemmContext`]).
+///
+/// Shards execute concurrently on host threads — the service-layer
+/// fan-out — and are stitched back in shard order, so the result is
+/// deterministic regardless of scheduling.
+pub fn multiply_sharded_with(
+    a: &Csr,
+    b: &Csr,
+    cfg: &OpSparseConfig,
+    plan: &ShardPlan,
+    pools: Option<&mut [DevicePool]>,
+) -> Result<ShardedOutput> {
+    ensure!(a.cols == b.rows, "dimension mismatch: {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
+    ensure!(plan.rows() == a.rows, "plan covers {} rows, A has {}", plan.rows(), a.rows);
+    let n = plan.n_shards();
+    let mut slots: Vec<Option<&mut DevicePool>> = match pools {
+        Some(ps) => {
+            ensure!(ps.len() == n, "{} pools for {} shards", ps.len(), n);
+            ps.iter_mut().map(Some).collect()
+        }
+        None => (0..n).map(|_| None).collect(),
+    };
+
+    let results: Vec<Result<SpgemmOutput>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = slots
+            .drain(..)
+            .enumerate()
+            .map(|(s, slot)| {
+                let (lo, hi) = plan.range(s);
+                scope.spawn(move || -> Result<SpgemmOutput> {
+                    let a_s = row_slice(a, lo, hi)?;
+                    multiply_reuse(&a_s, b, cfg, slot, None)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("shard worker panicked"))))
+            .collect()
+    });
+
+    let mut shards = Vec::with_capacity(n);
+    for r in results {
+        shards.push(r?);
+    }
+
+    // stitch the row blocks: offset-adjust each shard's row pointers
+    let mut rpt = Vec::with_capacity(a.rows + 1);
+    rpt.push(0usize);
+    let total_nnz: usize = shards.iter().map(|s| s.c.nnz()).sum();
+    let mut col = Vec::with_capacity(total_nnz);
+    let mut val = Vec::with_capacity(total_nnz);
+    let mut nprod = 0usize;
+    for s in &shards {
+        let base = *rpt.last().unwrap();
+        rpt.extend(s.c.rpt[1..].iter().map(|&p| p + base));
+        col.extend_from_slice(&s.c.col);
+        val.extend_from_slice(&s.c.val);
+        nprod += s.nprod;
+    }
+    let c = Csr { rows: a.rows, cols: b.cols, rpt, col, val };
+    Ok(ShardedOutput { c, plan: plan.clone(), shards, nprod })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::uniform::Uniform;
+    use crate::spgemm::pipeline::multiply;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn plan_partitions_all_rows_in_order() {
+        let nprod = vec![5, 1, 1, 1, 20, 1, 1, 6, 2, 3];
+        let plan = ShardPlan::balanced(&nprod, 3);
+        assert_eq!(plan.n_shards(), 3);
+        assert_eq!(plan.bounds()[0], 0);
+        assert_eq!(plan.rows(), nprod.len());
+        for w in plan.bounds().windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        let total: u64 = plan.costs().iter().sum();
+        assert_eq!(total, nprod.iter().map(|&p| p as u64 + 1).sum::<u64>());
+    }
+
+    #[test]
+    fn plan_balances_skewed_work_better_than_equal_rows() {
+        // one heavy prefix row: an equal-rows split would lump it with a
+        // quarter of the tail; the balanced plan isolates it and spreads
+        // the tail evenly over the remaining shards
+        let mut nprod = vec![1usize; 64];
+        nprod[0] = 1000;
+        let plan = ShardPlan::balanced(&nprod, 4);
+        assert_eq!(plan.range(0), (0, 1), "the giant row gets its own shard");
+        let tail = &plan.costs()[1..];
+        let (min, max) = (tail.iter().min().unwrap(), tail.iter().max().unwrap());
+        assert!(*max <= min + 2, "tail shards must be near-equal: {tail:?}");
+        // strictly better than the equal-rows split, whose first shard
+        // carries the giant row plus a quarter of the tail
+        let equal_rows_max = (1000 + 1) + 15 * 2;
+        let balanced_max = *plan.costs().iter().max().unwrap();
+        assert!(balanced_max < equal_rows_max, "{balanced_max} vs {equal_rows_max}");
+    }
+
+    #[test]
+    fn plan_with_more_shards_than_rows_has_empty_tail() {
+        let plan = ShardPlan::balanced(&[3, 3, 3], 8);
+        assert_eq!(plan.n_shards(), 8);
+        assert_eq!(plan.rows(), 3);
+        let nonempty = (0..8).filter(|&s| plan.range(s).0 < plan.range(s).1).count();
+        assert_eq!(nonempty, 3, "each row in its own shard, 5 empty");
+    }
+
+    #[test]
+    fn single_row_shards_when_counts_match() {
+        let plan = ShardPlan::balanced(&[2, 2, 2, 2], 4);
+        for s in 0..4 {
+            assert_eq!(plan.range(s), (s, s + 1));
+        }
+        assert!((plan.load_imbalance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sharded_matches_unsharded_bit_for_bit() {
+        let mut rng = Rng::new(91);
+        let a = Uniform { n: 300, per_row: 9, jitter: 4 }.generate(&mut rng);
+        let cfg = OpSparseConfig::default();
+        let gold = multiply(&a, &a, &cfg).unwrap();
+        for shards in [1, 2, 3, 4, 8] {
+            let out = multiply_sharded(&a, &a, &cfg, shards).unwrap();
+            assert_eq!(out.c, gold.c, "{shards} shards must be bit-identical");
+            assert_eq!(out.nprod, gold.nprod);
+            assert_eq!(out.shards.len(), shards);
+            out.c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn per_device_pools_recycle_across_calls() {
+        let mut rng = Rng::new(92);
+        let a = Uniform { n: 240, per_row: 8, jitter: 4 }.generate(&mut rng);
+        let cfg = OpSparseConfig::default();
+        let plan = ShardPlan::balanced(&nprod_per_row(&a, &a), 3);
+        let mut pools: Vec<DevicePool> = (0..3).map(|_| DevicePool::new()).collect();
+        let cold = multiply_sharded_with(&a, &a, &cfg, &plan, Some(&mut pools)).unwrap();
+        assert!(cold.traces().any(|t| t.malloc_calls() > 0), "cold call grows the pools");
+        let warm = multiply_sharded_with(&a, &a, &cfg, &plan, Some(&mut pools)).unwrap();
+        assert_eq!(warm.c, cold.c);
+        for (s, t) in warm.traces().enumerate() {
+            assert_eq!(t.malloc_calls(), 0, "shard {s} warm call must be malloc-free");
+        }
+    }
+
+    #[test]
+    fn pooled_helper_grows_and_recycles() {
+        let mut rng = Rng::new(93);
+        let a = Uniform { n: 200, per_row: 7, jitter: 3 }.generate(&mut rng);
+        let cfg = OpSparseConfig::default();
+        let mut pools = Vec::new();
+        let cold = multiply_sharded_pooled(&a, &a, &cfg, 3, &mut pools).unwrap();
+        assert_eq!(pools.len(), 3, "helper must grow the pool vector");
+        let warm = multiply_sharded_pooled(&a, &a, &cfg, 3, &mut pools).unwrap();
+        assert_eq!(warm.c, cold.c);
+        assert!(warm.traces().all(|t| t.malloc_calls() == 0), "warm call must recycle");
+        // dimension mismatch is a proper error, not a shard-planning panic
+        let b = Csr::zero(7, 7);
+        assert!(multiply_sharded_pooled(&a, &b, &cfg, 2, &mut pools).is_err());
+    }
+
+    #[test]
+    fn wrong_pool_count_is_error() {
+        let a = Csr::identity(8);
+        let cfg = OpSparseConfig::default();
+        let plan = ShardPlan::balanced(&nprod_per_row(&a, &a), 2);
+        let mut pools = vec![DevicePool::new()];
+        assert!(multiply_sharded_with(&a, &a, &cfg, &plan, Some(&mut pools)).is_err());
+    }
+}

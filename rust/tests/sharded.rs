@@ -1,0 +1,168 @@
+//! Row-sharded SpGEMM integration: sharding must change *where* rows are
+//! computed and nothing else.
+//!
+//! Property across the generator families (uniform, power-law, stencil,
+//! kron) and shard counts 1/2/4/8: the stitched sharded result is
+//! bit-identical (`rpt`/`col`/`val`) to the unsharded pipeline, which
+//! itself matches the sort-merge reference. Edge cases: empty matrices,
+//! more shards than rows (empty shards), and one row per shard.
+
+use opsparse::gen::kron::Kron;
+use opsparse::gen::powerlaw::PowerLaw;
+use opsparse::gen::stencil::{Grid, Stencil};
+use opsparse::gen::uniform::Uniform;
+use opsparse::gpusim::{MultiDevice, V100};
+use opsparse::sparse::stats::nprod_per_row;
+use opsparse::sparse::Csr;
+use opsparse::spgemm::pipeline::{multiply, OpSparseConfig};
+use opsparse::spgemm::reference::spgemm_reference;
+use opsparse::spgemm::sharded::{multiply_sharded, ShardPlan};
+use opsparse::util::rng::Rng;
+
+/// One representative per generator family.
+fn family_matrices() -> Vec<(&'static str, Csr)> {
+    let mut rng = Rng::new(2077);
+    vec![
+        ("uniform", Uniform { n: 400, per_row: 8, jitter: 4 }.generate(&mut rng)),
+        (
+            "powerlaw",
+            PowerLaw {
+                n: 500,
+                alpha: 2.0,
+                max_row: 60,
+                mean_row: 4.0,
+                hub_frac: 0.2,
+                forced_giant_rows: 1,
+            }
+            .generate(&mut rng),
+        ),
+        (
+            "stencil",
+            Stencil { n: 400, grid: Grid::D2, reach: 1, keep: 1.0, diagonal: true }
+                .generate(&mut rng),
+        ),
+        ("kron", Kron { scale: 8, edge_factor: 8, a: 0.57, b: 0.19, c: 0.19 }.generate(&mut rng)),
+    ]
+}
+
+#[test]
+fn sharded_is_bit_identical_across_families_and_shard_counts() {
+    let cfg = OpSparseConfig::default();
+    for (name, a) in family_matrices() {
+        let gold = spgemm_reference(&a, &a);
+        let unsharded = multiply(&a, &a, &cfg)
+            .unwrap_or_else(|err| panic!("unsharded multiply failed on {name}: {err:#}"));
+        assert!(
+            unsharded.c.approx_eq(&gold, 1e-9),
+            "{name}: pipeline vs reference: {:?}",
+            unsharded.c.diff(&gold, 1e-9)
+        );
+        for shards in [1usize, 2, 4, 8] {
+            let out = multiply_sharded(&a, &a, &cfg, shards)
+                .unwrap_or_else(|err| panic!("{shards}-shard multiply failed on {name}: {err:#}"));
+            assert_eq!(
+                out.c, unsharded.c,
+                "{name}: {shards}-shard result diverged from the unsharded pipeline"
+            );
+            assert!(
+                out.c.approx_eq(&gold, 1e-9),
+                "{name}: {shards}-shard vs reference: {:?}",
+                out.c.diff(&gold, 1e-9)
+            );
+            assert_eq!(out.nprod, unsharded.nprod, "{name}: nprod must be preserved");
+            assert_eq!(out.shards.len(), shards);
+            out.c.validate().unwrap_or_else(|err| panic!("{name}: invalid CSR: {err:#}"));
+        }
+    }
+}
+
+#[test]
+fn empty_matrix_shards_cleanly() {
+    let cfg = OpSparseConfig::default();
+    let z = Csr::zero(10, 10);
+    for shards in [1usize, 4, 8] {
+        let out = multiply_sharded(&z, &z, &cfg, shards).unwrap();
+        assert_eq!(out.c.nnz(), 0);
+        assert_eq!(out.c.rows, 10);
+        out.c.validate().unwrap();
+    }
+}
+
+#[test]
+fn more_shards_than_rows_executes_empty_shards() {
+    let cfg = OpSparseConfig::default();
+    let mut rng = Rng::new(3001);
+    let a = Uniform { n: 5, per_row: 3, jitter: 1 }.generate(&mut rng);
+    let gold = multiply(&a, &a, &cfg).unwrap();
+    let out = multiply_sharded(&a, &a, &cfg, 8).unwrap();
+    assert_eq!(out.c, gold.c);
+    assert_eq!(out.shards.len(), 8);
+    let empty = out.shards.iter().filter(|s| s.c.rows == 0).count();
+    assert!(empty >= 3, "5 rows over 8 shards leaves at least 3 empty shards, got {empty}");
+    let rows_total: usize = out.shards.iter().map(|s| s.c.rows).sum();
+    assert_eq!(rows_total, 5);
+}
+
+#[test]
+fn one_row_per_shard() {
+    let cfg = OpSparseConfig::default();
+    let a = Csr::identity(16);
+    let gold = multiply(&a, &a, &cfg).unwrap();
+    let out = multiply_sharded(&a, &a, &cfg, 16).unwrap();
+    assert_eq!(out.c, gold.c);
+    for s in 0..16 {
+        assert_eq!(out.plan.range(s), (s, s + 1));
+        assert_eq!(out.shards[s].c.rows, 1);
+    }
+}
+
+#[test]
+fn plan_covers_rows_exactly_for_every_family() {
+    for (name, a) in family_matrices() {
+        let nprod = nprod_per_row(&a, &a);
+        for shards in [1usize, 2, 4, 8] {
+            let plan = ShardPlan::balanced(&nprod, shards);
+            assert_eq!(plan.n_shards(), shards, "{name}");
+            assert_eq!(plan.rows(), a.rows, "{name}");
+            assert_eq!(plan.bounds()[0], 0, "{name}");
+            for w in plan.bounds().windows(2) {
+                assert!(w[0] <= w[1], "{name}: bounds must be non-decreasing");
+            }
+            let covered: usize = (0..shards).map(|s| plan.range(s).1 - plan.range(s).0).sum();
+            assert_eq!(covered, a.rows, "{name}: shards must partition all rows");
+        }
+    }
+}
+
+#[test]
+fn multi_device_makespan_shrinks_on_a_balanced_split() {
+    // the per-family check of the bench acceptance: the 2-way split of a
+    // decently sized multiply must beat one device, and the per-device
+    // view must agree with the plan about balance
+    let cfg = OpSparseConfig::default();
+    let mut rng = Rng::new(3002);
+    let a = PowerLaw {
+        n: 3000,
+        alpha: 2.2,
+        max_row: 96,
+        mean_row: 6.0,
+        hub_frac: 0.15,
+        forced_giant_rows: 0,
+    }
+    .generate(&mut rng);
+    let one = multiply_sharded(&a, &a, &cfg, 1).unwrap();
+    let four = multiply_sharded(&a, &a, &cfg, 4).unwrap();
+    assert_eq!(one.c, four.c);
+    let md1 = MultiDevice::simulate(one.traces(), &V100);
+    let md4 = MultiDevice::simulate(four.traces(), &V100);
+    assert!(
+        md4.makespan_ns() < md1.makespan_ns(),
+        "4 devices ({:.1}us) must beat 1 ({:.1}us)",
+        md4.makespan_ns() / 1e3,
+        md1.makespan_ns() / 1e3
+    );
+    assert!(md4.time_imbalance() < 1.25, "imbalance {:.3}", md4.time_imbalance());
+    assert!(four.plan.load_imbalance() < 1.25, "plan imbalance {:.3}", four.plan.load_imbalance());
+    let eff = md4.efficiency_vs(md1.makespan_ns());
+    assert!(eff > 0.25, "4-way split should show real scaling, eff={eff:.2}");
+}
