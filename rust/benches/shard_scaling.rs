@@ -1,16 +1,30 @@
 //! `cargo bench --bench shard_scaling` — row-sharded multi-device SpGEMM
-//! on a power-law matrix at 1/2/4/8 shards: per-device makespan, planned
-//! and measured load imbalance, and scaling efficiency vs one device.
+//! on a power-law matrix at 1/2/4/8 shards: per-device makespan, modeled
+//! `B`-broadcast and `C`-gather interconnect costs, planned and measured
+//! load imbalance, and (honest, communication-charged) scaling
+//! efficiency vs one device.
 //!
-//! Env: `OPSPARSE_SCALE=tiny|small|medium` (default small).
+//! Env:
+//! * `OPSPARSE_SCALE=tiny|small|medium` (default small)
+//! * `OPSPARSE_INTERCONNECT=pcie|nvlink|none` (default pcie)
+//! * `OPSPARSE_BENCH_JSON=<path>` — also record the rows as JSON; CI
+//!   writes `BENCH_shards.json` this way, next to `BENCH_seed.json`.
 
-use opsparse::bench::figures;
+use opsparse::bench::{figures, write_shard_scaling_json};
 use opsparse::gen::suite::SuiteScale;
+use opsparse::gpusim::Interconnect;
 
 fn main() {
     let scale = std::env::var("OPSPARSE_SCALE")
         .ok()
         .and_then(|s| SuiteScale::parse(&s))
         .unwrap_or(SuiteScale::Small);
-    figures::shard_scaling(scale).expect("shard_scaling bench");
+    let ic = match std::env::var("OPSPARSE_INTERCONNECT").as_deref() {
+        Ok(name) => Interconnect::parse_opt(name).expect("pcie|nvlink|none"),
+        Err(_) => Some(Interconnect::pcie3()),
+    };
+    let rows = figures::shard_scaling_with(scale, ic.as_ref()).expect("shard_scaling bench");
+    if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON") {
+        write_shard_scaling_json(&path, scale, &rows).expect("write bench json");
+    }
 }

@@ -45,9 +45,14 @@ fn main() -> anyhow::Result<()> {
     // Galerkin products: the router shards them row-wise across devices
     // and the hierarchy comes out bit-identical
     println!("\n== AMG, row-sharded: device budget below the working set ==");
+    // memory-only routing (`interconnect: None`): the demo forces the
+    // sharded path on a deliberately tiny budget; with the default
+    // interconnect model the router would decline to replicate B for so
+    // small a multiply
     let router = Router::new(RouterConfig {
         device_memory_bytes: 64 * 1024,
         max_devices: 4,
+        interconnect: None,
         ..Default::default()
     });
     let mut ctx = SpgemmContext::with_router(router);

@@ -352,9 +352,12 @@ mod tests {
         let h_plain = AmgHierarchy::build_with(&mut plain, &a, 0.1, 50, 10).unwrap();
         // a device budget far below the finest-level Galerkin products:
         // the same build now runs its big multiplies row-sharded
+        // memory-only routing: force the sharded path regardless of the
+        // modeled replication cost (a 24x24 Poisson operator is small)
         let router = Router::new(RouterConfig {
             device_memory_bytes: 8 * 1024,
             max_devices: 4,
+            interconnect: None,
             ..Default::default()
         });
         let mut ctx = SpgemmContext::with_router(router);

@@ -156,9 +156,12 @@ mod tests {
         let a = Uniform { n: 260, per_row: 8, jitter: 4 }.generate(&mut rng);
         let mut plain = SpgemmContext::new();
         let gold = plain.multiply(&a, &a).unwrap();
+        // memory-only routing: the point here is the sharded machinery,
+        // not the cost model (which would decline so small a multiply)
         let router = Router::new(RouterConfig {
             device_memory_bytes: 4096,
             max_devices: 4,
+            interconnect: None,
             ..Default::default()
         });
         let mut ctx = SpgemmContext::with_router(router);

@@ -68,6 +68,43 @@ pub fn write_rows_json(
     Ok(())
 }
 
+/// Serialize shard-scaling rows as JSON (no serde in the dependency
+/// set). CI records `BENCH_shards.json` this way, next to
+/// `BENCH_seed.json`, so later PRs can compare the multi-device scaling
+/// trajectory — makespan split into compute vs broadcast vs gather, plus
+/// the honest efficiency figure.
+pub fn write_shard_scaling_json(
+    path: &str,
+    scale: crate::gen::suite::SuiteScale,
+    rows: &[figures::ShardScalingRow],
+) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\n  \"bench\": \"shard_scaling\",\n  \"scale\": \"{scale:?}\",\n  \"rows\": [\n"
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"shards\": {}, \"makespan_ns\": {:.1}, \"compute_ns\": {:.1}, \
+             \"broadcast_ns\": {:.1}, \"gather_ns\": {:.1}, \"plan_imbalance\": {:.4}, \
+             \"time_imbalance\": {:.4}, \"speedup\": {:.4}, \"efficiency\": {:.4}}}{}\n",
+            r.shards,
+            r.makespan_ns,
+            r.compute_ns,
+            r.broadcast_ns,
+            r.gather_ns,
+            r.plan_imbalance,
+            r.time_imbalance,
+            r.speedup,
+            r.efficiency,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
 /// §Perf harness: median wall time of `multiply()` on a named suite
 /// matrix (used by `opsparse bench perf` and the EXPERIMENTS.md log).
 pub fn perf_l3(matrix: &str, scale: crate::gen::suite::SuiteScale, reps: usize) -> Result<f64> {

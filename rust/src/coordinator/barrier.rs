@@ -1,0 +1,249 @@
+//! Reassembly barrier for cross-worker shard fan-out.
+//!
+//! [`crate::coordinator::Coordinator::submit`] splits a
+//! [`Route::Sharded`] job into one sub-job per shard and fans them out
+//! over the whole hash-worker pool, so one oversized multiply and many
+//! small jobs share the fleet instead of the shards being trapped on one
+//! worker's scoped threads. Each sub-job reports its `C` row block here;
+//! when the last shard lands, the barrier stitches the blocks back in
+//! shard order (bit-identical to the in-worker and unsharded paths, via
+//! [`stitch_row_blocks`]) and emits **exactly one** [`JobResult`] for
+//! the parent job:
+//!
+//! * all shards `Ok` → the stitched CSR;
+//! * any shard `Err` (a failed worker, a poisoned shard caught by the
+//!   worker's panic guard) → one failure carrying the first shard error,
+//!   after every shard has reported — never a partial stitch;
+//! * the barrier dropped with shards still outstanding (queued sub-jobs
+//!   discarded because the coordinator was dropped mid-flight) → one
+//!   failure from `Drop`, so a lost shard can never hang the parent.
+//!
+//! A clean [`crate::coordinator::Coordinator::shutdown`] does not hit
+//! the `Drop` path: stop markers queue *behind* already-submitted
+//! sub-jobs, so workers drain every in-flight barrier first.
+
+use super::metrics::Metrics;
+use super::router::Route;
+use super::service::{finish, JobResult};
+use crate::sparse::Csr;
+use crate::spgemm::pipeline::SpgemmOutput;
+use crate::spgemm::sharded::stitch_row_blocks;
+use anyhow::{anyhow, Result};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+struct State {
+    /// One slot per shard, filled by [`ShardBarrier::complete`].
+    slots: Vec<Option<Result<SpgemmOutput>>>,
+    /// Shards still outstanding.
+    remaining: usize,
+    /// Set once the parent `JobResult` has been emitted.
+    finished: bool,
+}
+
+/// Collects the per-shard results of one sharded job and emits the
+/// parent [`JobResult`] when the last shard reports (or on `Drop`, if
+/// the coordinator dies with shards outstanding).
+pub struct ShardBarrier {
+    job_id: u64,
+    route: Route,
+    /// Stitched result shape: `rows` = parent `A.rows`, `cols` = `B.cols`.
+    rows: usize,
+    cols: usize,
+    t0: Instant,
+    tx: mpsc::Sender<JobResult>,
+    metrics: Arc<Metrics>,
+    state: Mutex<State>,
+}
+
+impl ShardBarrier {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        job_id: u64,
+        route: Route,
+        n_shards: usize,
+        rows: usize,
+        cols: usize,
+        tx: mpsc::Sender<JobResult>,
+        metrics: Arc<Metrics>,
+        t0: Instant,
+    ) -> ShardBarrier {
+        let n = n_shards.max(1);
+        ShardBarrier {
+            job_id,
+            route,
+            rows,
+            cols,
+            t0,
+            tx,
+            metrics,
+            state: Mutex::new(State {
+                slots: (0..n).map(|_| None).collect(),
+                remaining: n,
+                finished: false,
+            }),
+        }
+    }
+
+    /// Record shard `shard`'s result. The last arrival stitches and
+    /// emits the parent result; duplicate or late reports are ignored.
+    pub fn complete(&self, shard: usize, result: Result<SpgemmOutput>) {
+        let ready = {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            // defensive: a duplicate, out-of-range, or post-completion
+            // report is ignored rather than corrupting the stitch
+            if st.finished || shard >= st.slots.len() || st.slots[shard].is_some() {
+                return;
+            }
+            st.slots[shard] = Some(result);
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                st.finished = true;
+                Some(std::mem::take(&mut st.slots))
+            } else {
+                None
+            }
+        };
+        // stitch outside the lock: it is O(nnz(C)) of copying
+        if let Some(slots) = ready {
+            let (c, nprod) = Self::reassemble(self.rows, self.cols, slots);
+            finish(&self.metrics, &self.tx, self.job_id, self.route, c, nprod, self.t0);
+        }
+    }
+
+    fn reassemble(
+        rows: usize,
+        cols: usize,
+        slots: Vec<Option<Result<SpgemmOutput>>>,
+    ) -> (Result<Csr>, usize) {
+        let mut shards = Vec::with_capacity(slots.len());
+        let mut failure: Option<anyhow::Error> = None;
+        for (s, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(Ok(out)) => shards.push(out),
+                Some(Err(e)) => {
+                    if failure.is_none() {
+                        failure = Some(e.context(format!("shard {s} failed")));
+                    }
+                }
+                None => {
+                    if failure.is_none() {
+                        failure = Some(anyhow!("shard {s} never reported"));
+                    }
+                }
+            }
+        }
+        match failure {
+            Some(e) => (Err(e), 0),
+            None => match stitch_row_blocks(rows, cols, &shards) {
+                Ok((c, nprod)) => (Ok(c), nprod),
+                Err(e) => (Err(e), 0),
+            },
+        }
+    }
+}
+
+impl Drop for ShardBarrier {
+    fn drop(&mut self) {
+        let st = self.state.get_mut().unwrap_or_else(|e| e.into_inner());
+        if !st.finished {
+            st.finished = true;
+            let lost = st.remaining;
+            let total = st.slots.len();
+            finish(
+                &self.metrics,
+                &self.tx,
+                self.job_id,
+                self.route,
+                Err(anyhow!("coordinator dropped with {lost} of {total} shards in flight")),
+                0,
+                self.t0,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spgemm::pipeline::{multiply, OpSparseConfig};
+
+    fn barrier_for(
+        n_shards: usize,
+        rows: usize,
+        cols: usize,
+    ) -> (Arc<ShardBarrier>, mpsc::Receiver<JobResult>, Arc<Metrics>) {
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let b = Arc::new(ShardBarrier::new(
+            7,
+            Route::Sharded { n_devices: n_shards },
+            n_shards,
+            rows,
+            cols,
+            tx,
+            Arc::clone(&metrics),
+            Instant::now(),
+        ));
+        (b, rx, metrics)
+    }
+
+    fn shard_output(m: &Csr) -> SpgemmOutput {
+        multiply(m, m, &OpSparseConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn out_of_order_completion_stitches_in_shard_order() {
+        let m = Csr::identity(4);
+        let gold = shard_output(&m).c;
+        let (b, rx, metrics) = barrier_for(2, 8, 4);
+        // two identity blocks, completed in reverse order
+        b.complete(1, Ok(shard_output(&m)));
+        assert!(rx.try_recv().is_err(), "barrier must wait for every shard");
+        b.complete(0, Ok(shard_output(&m)));
+        let r = rx.recv().unwrap();
+        let c = r.c.unwrap();
+        assert_eq!(c.rows, 8);
+        assert_eq!(c.nnz(), 2 * gold.nnz());
+        assert_eq!(metrics.snapshot().jobs_completed, 1);
+    }
+
+    #[test]
+    fn one_failed_shard_fails_the_parent_exactly_once() {
+        let m = Csr::identity(4);
+        let (b, rx, metrics) = barrier_for(3, 12, 4);
+        b.complete(0, Ok(shard_output(&m)));
+        b.complete(2, Err(anyhow!("injected")));
+        assert!(rx.try_recv().is_err(), "no partial result before all shards report");
+        b.complete(1, Ok(shard_output(&m)));
+        let r = rx.recv().unwrap();
+        assert!(r.c.is_err());
+        assert!(rx.try_recv().is_err(), "exactly one JobResult");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.jobs_failed, 1);
+        assert_eq!(snap.jobs_completed, 0);
+    }
+
+    #[test]
+    fn dropping_an_open_barrier_fails_the_parent() {
+        let m = Csr::identity(4);
+        let (b, rx, metrics) = barrier_for(2, 8, 4);
+        b.complete(0, Ok(shard_output(&m)));
+        drop(b);
+        let r = rx.recv().unwrap();
+        assert!(r.c.is_err(), "a lost shard must fail the job, not hang it");
+        assert_eq!(metrics.snapshot().jobs_failed, 1);
+    }
+
+    #[test]
+    fn finished_barrier_drop_is_silent() {
+        let m = Csr::identity(4);
+        let (b, rx, metrics) = barrier_for(1, 4, 4);
+        b.complete(0, Ok(shard_output(&m)));
+        assert!(rx.recv().unwrap().c.is_ok());
+        drop(b);
+        assert!(rx.try_recv().is_err());
+        assert_eq!(metrics.snapshot().jobs_completed, 1);
+        assert_eq!(metrics.snapshot().jobs_failed, 0);
+    }
+}

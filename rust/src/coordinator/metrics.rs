@@ -15,8 +15,14 @@ pub struct Metrics {
     pub hash_routed: AtomicU64,
     pub block_routed: AtomicU64,
     /// Jobs routed to the row-sharded multi-device path (working set over
-    /// the single-device budget).
+    /// the single-device budget and worth the replication cost).
     pub sharded_routed: AtomicU64,
+    /// Shard sub-jobs executed by hash workers (cross-worker fan-out).
+    pub shard_subjobs: AtomicU64,
+    /// Ids of the workers that have executed at least one shard sub-job —
+    /// the telemetry proving a sharded job's shards actually spread over
+    /// the pool instead of serializing on one worker.
+    shard_worker_ids: Mutex<std::collections::BTreeSet<usize>>,
     /// Total intermediate products processed (throughput numerator).
     pub nprod_total: AtomicU64,
     /// Jobs whose symbolic phase was replayed from the pattern cache.
@@ -31,7 +37,9 @@ pub struct Metrics {
     pub pool_hits: AtomicU64,
     /// Bytes served from recycled buckets instead of `cudaMalloc`.
     pub pool_reused_bytes: AtomicU64,
-    /// Latency samples in ns (bounded reservoir).
+    /// End-to-end (submit → result) latency samples in ns, bounded
+    /// reservoir — every route measures from submit, so queue wait is
+    /// visible and percentiles compare across routes.
     latencies: Mutex<Vec<u64>>,
 }
 
@@ -45,6 +53,17 @@ impl Metrics {
         if l.len() < 65_536 {
             l.push(ns);
         }
+    }
+
+    /// Record that `worker_id` picked up one shard sub-job.
+    pub fn observe_shard_subjob(&self, worker_id: usize) {
+        self.shard_subjobs.fetch_add(1, Ordering::Relaxed);
+        self.shard_worker_ids.lock().unwrap().insert(worker_id);
+    }
+
+    /// Distinct workers that have executed shard sub-jobs.
+    pub fn distinct_shard_workers(&self) -> u64 {
+        self.shard_worker_ids.lock().unwrap().len() as u64
     }
 
     /// Fold one pool-stats delta (one job's worth) into the registry.
@@ -74,6 +93,8 @@ impl Metrics {
             hash_routed: self.hash_routed.load(Ordering::Relaxed),
             block_routed: self.block_routed.load(Ordering::Relaxed),
             sharded_routed: self.sharded_routed.load(Ordering::Relaxed),
+            shard_subjobs: self.shard_subjobs.load(Ordering::Relaxed),
+            shard_workers: self.distinct_shard_workers(),
             nprod_total: self.nprod_total.load(Ordering::Relaxed),
             sym_cache_hits: self.sym_cache_hits.load(Ordering::Relaxed),
             sym_cache_misses: self.sym_cache_misses.load(Ordering::Relaxed),
@@ -96,6 +117,10 @@ pub struct MetricsSnapshot {
     pub hash_routed: u64,
     pub block_routed: u64,
     pub sharded_routed: u64,
+    /// Shard sub-jobs executed across the pool.
+    pub shard_subjobs: u64,
+    /// Distinct workers that executed shard sub-jobs.
+    pub shard_workers: u64,
     pub nprod_total: u64,
     pub sym_cache_hits: u64,
     pub sym_cache_misses: u64,
@@ -127,8 +152,12 @@ impl std::fmt::Display for MetricsSnapshot {
         )?;
         writeln!(
             f,
-            "routes: hash={} block={} sharded={}",
-            self.hash_routed, self.block_routed, self.sharded_routed
+            "routes: hash={} block={} sharded={} (sub-jobs={} over {} workers)",
+            self.hash_routed,
+            self.block_routed,
+            self.sharded_routed,
+            self.shard_subjobs,
+            self.shard_workers
         )?;
         writeln!(f, "nprod total: {}", self.nprod_total)?;
         writeln!(
@@ -199,6 +228,17 @@ mod tests {
         assert_eq!(snap.pool_device_bytes, 8192);
         assert_eq!(snap.pool_hits, 6);
         assert_eq!(snap.pool_reused_bytes, 24_576);
+    }
+
+    #[test]
+    fn shard_subjob_telemetry_counts_distinct_workers() {
+        let m = Metrics::new();
+        m.observe_shard_subjob(0);
+        m.observe_shard_subjob(2);
+        m.observe_shard_subjob(0);
+        let snap = m.snapshot();
+        assert_eq!(snap.shard_subjobs, 3);
+        assert_eq!(snap.shard_workers, 2, "worker 0 counted once");
     }
 
     #[test]

@@ -13,17 +13,23 @@
 //!   build is offline so no tokio) with latency metrics. Each hash worker
 //!   owns a grow-only [`crate::gpusim::DevicePool`] and a [`cache`]
 //!   entry set, so warm repeated-pattern traffic pays neither
-//!   `cudaMalloc` nor the symbolic phase; sharded jobs fan out to
-//!   per-device pipelines on scoped threads and are reassembled before
-//!   the result is returned.
+//!   `cudaMalloc` nor the symbolic phase. A sharded job is split at
+//!   submit time into per-shard **sub-jobs** that fan out across the
+//!   whole worker pool and reassemble through a [`barrier`], so one
+//!   oversized multiply and many small jobs share the fleet.
+//! * [`barrier`] — the per-job shard reassembly barrier (exactly one
+//!   result per parent job, even when shards fail or are lost).
 //! * [`cache`] — the per-worker sparsity-pattern (symbolic-reuse) cache.
-//! * [`metrics`] — counters, latency percentiles, pool/cache telemetry.
+//! * [`metrics`] — counters, latency percentiles, pool/cache/shard
+//!   telemetry.
 
+pub mod barrier;
 pub mod cache;
 pub mod metrics;
 pub mod router;
 pub mod service;
 
+pub use barrier::ShardBarrier;
 pub use cache::{PatternCache, PatternKey};
 pub use metrics::Metrics;
 pub use router::{Route, Router, RouterConfig};

@@ -1,14 +1,19 @@
 //! Job routing: decide per matrix pair whether to run the hash pipeline,
 //! the PJRT block engine, or the row-sharded multi-device path.
 //!
-//! Two cheap, structure-only estimates drive the decision:
+//! Three cheap, structure-only estimates drive the decision:
 //!
 //! 1. **Working set** ([`working_set_bytes`]): operands + a result upper
-//!    bound. When it exceeds a single device's memory budget the job
-//!    cannot run unsharded at all, so it routes to
-//!    [`Route::Sharded`] with enough devices to fit
+//!    bound. When it exceeds a single device's memory budget the job is
+//!    a sharding candidate, with enough devices to fit
 //!    (see [`crate::spgemm::sharded`]).
-//! 2. **Tile fill** ([`Router::estimate_fill`]): the block engine wins
+//! 2. **Replication cost** ([`RouterConfig::interconnect`]): row
+//!    sharding broadcasts `B` to every device and gathers the `C` row
+//!    blocks back, so the router charges both against the interconnect
+//!    model and refines the device count — or declines
+//!    [`Route::Sharded`] outright when the modeled transfers eat the
+//!    compute win (small jobs over a tight budget).
+//! 3. **Tile fill** ([`Router::estimate_fill`]): the block engine wins
 //!    when the matrices are *blocky* — their nonzeros cluster into dense
 //!    `T×T` tiles (FEM matrices with contiguous runs, the high-CR half of
 //!    Table 3). For scattered matrices the padding overhead of dense
@@ -26,14 +31,25 @@
 //! let a = Csr::identity(512);
 //! assert_eq!(Router::default().route(&a, &a), Route::Hash);
 //!
-//! // shrink the device budget below the working set -> sharded route
-//! let tiny = Router::new(RouterConfig { device_memory_bytes: 1024, ..Default::default() });
-//! match tiny.route(&a, &a) {
+//! // budget just below the working set, but the job is tiny: replicating
+//! // B over the modeled PCIe costs more than the split saves, so the
+//! // cost-aware router declines the sharded route
+//! let tight = Router::new(RouterConfig { device_memory_bytes: 16 * 1024, ..Default::default() });
+//! assert_eq!(tight.route(&a, &a), Route::Hash);
+//!
+//! // with interconnect modeling off, the memory budget alone decides
+//! let hard = Router::new(RouterConfig {
+//!     device_memory_bytes: 16 * 1024,
+//!     interconnect: None,
+//!     ..Default::default()
+//! });
+//! match hard.route(&a, &a) {
 //!     Route::Sharded { n_devices } => assert!(n_devices >= 2),
 //!     other => panic!("expected a sharded route, got {other:?}"),
 //! }
 //! ```
 
+use crate::gpusim::Interconnect;
 use crate::sparse::stats::total_nprod;
 use crate::sparse::Csr;
 
@@ -69,6 +85,20 @@ pub struct RouterConfig {
     /// disabled entirely (single-device deployment): oversized jobs stay
     /// on the hash path and fail there if they truly cannot fit.
     pub max_devices: usize,
+    /// Interconnect model used to weigh a sharded route: the `B`
+    /// broadcast and `C` row-block gather are charged against it when
+    /// choosing `n_devices`, and a job whose modeled sharded time is no
+    /// better than unsharded **declines** the route (the budget is a
+    /// planning target, not an allocator — small jobs that barely
+    /// overshoot it run faster unsplit than replicated). `None` restores
+    /// pure memory-budget routing: shard whenever the working set
+    /// exceeds the budget, whatever it costs.
+    pub interconnect: Option<Interconnect>,
+    /// Modeled single-device compute time per intermediate product, in
+    /// ns — the same cheap structure-only proxy `ShardPlan::balanced`
+    /// load-balances with, here scaled to time so broadcast/gather costs
+    /// compare against the compute they amortize.
+    pub ns_per_prod: f64,
 }
 
 impl Default for RouterConfig {
@@ -79,9 +109,25 @@ impl Default for RouterConfig {
             sample_rows: 256,
             device_memory_bytes: 16 * (1 << 30),
             max_devices: 8,
+            interconnect: Some(Interconnect::pcie3()),
+            ns_per_prod: 1.0,
         }
     }
 }
+
+/// Compression-ratio guess used to size the gathered `C` from the
+/// intermediate-product upper bound (`nnz(C) ≈ n_prod / 4`; Table 3's
+/// suite median is ~3–5). Only the routing *estimate* uses this — the
+/// simulator charges the gather on the real row-block sizes.
+const C_GATHER_COMPRESSION: f64 = 4.0;
+
+/// How far over the memory budget a job may be and still *decline* the
+/// sharded route on cost grounds. The working-set estimate is a
+/// pessimistic upper bound (`nnz(C) = n_prod`), so a small job barely
+/// overshooting it typically fits fine unsplit; a job beyond this factor
+/// genuinely cannot run on one device and must shard no matter what the
+/// transfers cost.
+const DECLINE_SPILL_FACTOR: f64 = 2.0;
 
 /// Upper-bound device working set of `C = A * B` under the paper's CSR
 /// layout: both operands resident, plus `C` sized by the intermediate
@@ -137,14 +183,29 @@ impl Router {
         }
     }
 
-    /// Device count a job needs under the memory budget, or `None` when it
-    /// fits on one device. Row sharding replicates `B` on every device, so
-    /// only the `A`/`C` portion of the working set divides by the device
-    /// count: `k` must satisfy `B + (A + C)/k <= budget`. A `B` that alone
-    /// exceeds the budget is infeasible for row sharding (column-sharding
-    /// `B` is a ROADMAP item) — the router then returns `max_devices` as
-    /// the best it can do. Mismatched dimensions never shard: the job goes
-    /// to the hash path, which reports the dimension error.
+    /// Device count a job should shard over, or `None` when it fits on
+    /// one device (or sharding would lose to replication cost).
+    ///
+    /// Memory first: row sharding replicates `B` on every device, so only
+    /// the `A`/`C` portion of the working set divides by the device
+    /// count — `k` must satisfy `B + (A + C)/k <= budget`. A `B` that
+    /// alone exceeds the budget is infeasible for row sharding
+    /// (column-sharding `B` is a ROADMAP item) — the memory-minimal count
+    /// is then `max_devices`. Mismatched dimensions never shard: the job
+    /// goes to the hash path, which reports the dimension error.
+    ///
+    /// With an [`Interconnect`] configured, the count is then refined by
+    /// modeled time: for each feasible `k`, charge the one-to-all/ring
+    /// `B` broadcast plus the `C` row-block gather around `compute / k`,
+    /// pick the fastest `k` — and **decline the route entirely** when
+    /// even the best sharded time is no better than running unsharded.
+    /// That is what stops small jobs from sharding: their compute is
+    /// cheap, so replicating `B` eats the win, exactly the
+    /// communication-bound regime the SpGEMM surveys report. Declining
+    /// is bounded by [`DECLINE_SPILL_FACTOR`]: a job that overshoots the
+    /// budget beyond it (or whose `B` alone exceeds the budget) cannot
+    /// run unsharded at all, so the cost model only picks its `k`, never
+    /// vetoes the split.
     pub fn shard_count(&self, a: &Csr, b: &Csr) -> Option<usize> {
         if a.cols != b.rows || self.cfg.max_devices < 2 {
             return None;
@@ -163,24 +224,62 @@ impl Router {
         if upper <= budget {
             return None;
         }
-        let est = working_set_bytes(a, b);
+        // one exact O(nnz(A)) fold serves both the working-set estimate
+        // and the cost model below (`working_set_bytes` would refold it)
+        let nprod = total_nprod(a, b);
+        let est = base + 12 * nprod;
+        debug_assert_eq!(est, working_set_bytes(a, b));
         if est <= budget {
             return None;
         }
         let max = self.cfg.max_devices;
         let b_rep = b.device_bytes();
-        let n = if b_rep >= budget {
-            max
-        } else {
-            (est - b_rep).div_ceil(budget - b_rep)
+        if b_rep >= budget {
+            // row sharding replicates B, so no k makes this fit; span
+            // the whole fleet as the best available (PR 2 behavior) —
+            // the cost model has no unsharded baseline to prefer here
+            return Some(max);
+        }
+        let n_mem = (est - b_rep).div_ceil(budget - b_rep).clamp(2, max);
+        let Some(ic) = self.cfg.interconnect.as_ref() else {
+            return Some(n_mem);
         };
-        Some(n.clamp(2, max))
+
+        let unsharded_ns = nprod as f64 * self.cfg.ns_per_prod;
+        let c_gather_bytes = 12.0 * nprod as f64 / C_GATHER_COMPRESSION;
+        let mut best: Option<(usize, f64)> = None;
+        for k in n_mem..=max {
+            // an unusable interconnect model (zero bandwidth) cannot
+            // veto a memory-mandated shard: fall back to the memory count
+            let Ok(bcast) = ic.broadcast_ns(b_rep, k) else {
+                return Some(n_mem);
+            };
+            let blocks = vec![(c_gather_bytes / k as f64) as usize; k];
+            let Ok(gather) = ic.gather_ns(&blocks) else {
+                return Some(n_mem);
+            };
+            let t = bcast + unsharded_ns / k as f64 + gather;
+            if best.map_or(true, |(_, bt)| t < bt) {
+                best = Some((k, t));
+            }
+        }
+        let (k, sharded_ns) = best?;
+        // declining is only honest while the unsharded baseline is
+        // actually runnable — a job far over budget must shard anyway
+        let barely_overshoots = (est as f64) <= DECLINE_SPILL_FACTOR * budget as f64;
+        if barely_overshoots && sharded_ns >= unsharded_ns {
+            return None; // replication eats the win: stay unsharded
+        }
+        Some(k)
     }
 
-    /// Route a job: memory first (a job that cannot fit must shard), then
-    /// the joint tile fill of both operands. A dimension-mismatched pair
-    /// always routes to the hash path, which rejects it with a proper
-    /// error (the block engine would panic instead of failing the job).
+    /// Route a job: memory and replication cost first (an over-budget job
+    /// shards — unless it only barely overshoots *and* the modeled
+    /// transfers eat the win, in which case it stays on the hash path;
+    /// see [`Router::shard_count`]), then the joint tile fill of both
+    /// operands. A dimension-mismatched pair always routes to the hash
+    /// path, which rejects it with a proper error (the block engine
+    /// would panic instead of failing the job).
     pub fn route(&self, a: &Csr, b: &Csr) -> Route {
         if a.cols != b.rows {
             return Route::Hash;
@@ -235,9 +334,11 @@ mod tests {
         let a = Uniform { n: 1000, per_row: 8, jitter: 4 }.generate(&mut rng);
         let est = working_set_bytes(&a, &a);
         assert!(est > a.device_bytes() * 2, "estimate must include the C upper bound");
-        // budget just below the estimate: minimal split
+        // budget just below the estimate: minimal split (memory-only
+        // routing — the cost-aware behavior has its own tests below)
         let r = Router::new(RouterConfig {
             device_memory_bytes: est - 1,
+            interconnect: None,
             ..Default::default()
         });
         assert_eq!(r.route(&a, &a), Route::Sharded { n_devices: 2 });
@@ -245,6 +346,7 @@ mod tests {
         let r4 = Router::new(RouterConfig {
             device_memory_bytes: est / 4,
             max_devices: 8,
+            interconnect: None,
             ..Default::default()
         });
         match r4.route(&a, &a) {
@@ -260,6 +362,7 @@ mod tests {
         let r = Router::new(RouterConfig {
             device_memory_bytes: 1,
             max_devices: 4,
+            interconnect: None,
             ..Default::default()
         });
         assert_eq!(r.shard_count(&a, &a), Some(4));
@@ -277,8 +380,11 @@ mod tests {
         let est = working_set_bytes(&a, &a);
         let b_rep = a.device_bytes();
         let budget = est.div_ceil(2);
-        let r =
-            Router::new(RouterConfig { device_memory_bytes: budget, ..Default::default() });
+        let r = Router::new(RouterConfig {
+            device_memory_bytes: budget,
+            interconnect: None,
+            ..Default::default()
+        });
         let n = r.shard_count(&a, &a).expect("over budget");
         assert!(n > 2, "naive est/budget sizing would give 2, got {n}");
         assert!(
@@ -317,7 +423,121 @@ mod tests {
     fn blocky_but_oversized_still_shards() {
         let mut rng = Rng::new(45);
         let a = Banded { n: 800, per_row: 48, band: 40, contiguous_frac: 1.0 }.generate(&mut rng);
-        let r = Router::new(RouterConfig { device_memory_bytes: 1024, ..Default::default() });
+        let r = Router::new(RouterConfig {
+            device_memory_bytes: 1024,
+            interconnect: None,
+            ..Default::default()
+        });
         assert!(matches!(r.route(&a, &a), Route::Sharded { .. }));
+    }
+
+    #[test]
+    fn small_job_declines_sharding_when_replication_eats_the_win() {
+        // the same matrix + budget that shards under memory-only routing
+        // (PR 2 behavior) stays unsharded once the B broadcast and C
+        // gather are charged: its compute is microseconds, the modeled
+        // PCIe transfers are not
+        let mut rng = Rng::new(48);
+        let a = Uniform { n: 300, per_row: 6, jitter: 3 }.generate(&mut rng);
+        let est = working_set_bytes(&a, &a);
+        let memory_only = Router::new(RouterConfig {
+            device_memory_bytes: est - 1,
+            interconnect: None,
+            ..Default::default()
+        });
+        assert!(
+            matches!(memory_only.route(&a, &a), Route::Sharded { .. }),
+            "baseline: memory-only routing shards this job"
+        );
+        let cost_aware = Router::new(RouterConfig {
+            device_memory_bytes: est - 1,
+            ..Default::default()
+        });
+        assert_eq!(cost_aware.shard_count(&a, &a), None);
+        assert_eq!(cost_aware.route(&a, &a), Route::Hash, "replication eats the win");
+    }
+
+    #[test]
+    fn big_job_still_shards_under_interconnect_cost() {
+        // enough intermediate products that splitting the compute pays
+        // for replicating B many times over
+        let mut rng = Rng::new(49);
+        let a = Uniform { n: 20_000, per_row: 16, jitter: 4 }.generate(&mut rng);
+        let est = working_set_bytes(&a, &a);
+        let r = Router::new(RouterConfig {
+            device_memory_bytes: est / 2,
+            ..Default::default()
+        });
+        match r.route(&a, &a) {
+            Route::Sharded { n_devices } => assert!(n_devices >= 2),
+            other => panic!("expected sharded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cost_aware_count_never_undershoots_the_memory_minimum() {
+        // the refined device count must stay memory-feasible: k >= the
+        // minimal count that fits B + (A+C)/k under the budget
+        let mut rng = Rng::new(50);
+        let a = Uniform { n: 20_000, per_row: 16, jitter: 4 }.generate(&mut rng);
+        let est = working_set_bytes(&a, &a);
+        let budget = est / 3;
+        let memory_only = Router::new(RouterConfig {
+            device_memory_bytes: budget,
+            interconnect: None,
+            ..Default::default()
+        });
+        let n_mem = memory_only.shard_count(&a, &a).expect("over budget");
+        let cost_aware =
+            Router::new(RouterConfig { device_memory_bytes: budget, ..Default::default() });
+        if let Some(n) = cost_aware.shard_count(&a, &a) {
+            assert!(n >= n_mem, "cost-aware count {n} under memory minimum {n_mem}");
+        }
+    }
+
+    #[test]
+    fn unusable_interconnect_falls_back_to_memory_routing() {
+        use crate::gpusim::Topology;
+        let mut rng = Rng::new(51);
+        let a = Uniform { n: 300, per_row: 6, jitter: 3 }.generate(&mut rng);
+        let dead = Interconnect {
+            bandwidth_gbps: 0.0,
+            latency_us: 1.0,
+            topology: Topology::OneToAll,
+        };
+        // budget above B's footprint (so the cost model is consulted at
+        // all) but below the working set (so the job is a candidate)
+        let budget = (a.device_bytes() + working_set_bytes(&a, &a)) / 2;
+        let r = Router::new(RouterConfig {
+            device_memory_bytes: budget,
+            interconnect: Some(dead),
+            ..Default::default()
+        });
+        // zero bandwidth cannot veto a memory-mandated shard
+        assert!(matches!(r.route(&a, &a), Route::Sharded { .. }));
+    }
+
+    #[test]
+    fn far_over_budget_job_shards_despite_transfer_cost() {
+        // a job beyond the decline spill factor has no runnable
+        // unsharded baseline: the cost model picks k but cannot veto,
+        // however badly the modeled transfers compare to the compute
+        let mut rng = Rng::new(52);
+        let a = Uniform { n: 300, per_row: 6, jitter: 3 }.generate(&mut rng);
+        let est = working_set_bytes(&a, &a);
+        let budget = (est / 4).max(a.device_bytes() + 1); // b_rep < budget << est
+        let r =
+            Router::new(RouterConfig { device_memory_bytes: budget, ..Default::default() });
+        match r.route(&a, &a) {
+            Route::Sharded { n_devices } => assert!(n_devices >= 2),
+            other => panic!("must shard, got {other:?}"),
+        }
+        // and a B that alone exceeds the budget keeps the forced
+        // whole-fleet split (row sharding cannot shrink B)
+        let r_tiny = Router::new(RouterConfig {
+            device_memory_bytes: 1024,
+            ..Default::default()
+        });
+        assert_eq!(r_tiny.shard_count(&a, &a), Some(RouterConfig::default().max_devices));
     }
 }

@@ -6,15 +6,27 @@
 //! engine is **constructed inside** its thread from a factory closure and
 //! never crosses threads — the same single-owner pattern a CUDA context
 //! imposes.
+//!
+//! A [`Route::Sharded`] job is split at submit time into one **sub-job
+//! per shard**. Sub-jobs ride the same queue as ordinary hash jobs, so
+//! the shards of one oversized multiply interleave with many small jobs
+//! across the whole worker pool, and a
+//! [`ShardBarrier`](super::barrier::ShardBarrier) stitches the row
+//! blocks back — bit-identical to the in-worker
+//! [`crate::spgemm::sharded::multiply_sharded`] path — emitting exactly
+//! one [`JobResult`] per parent job even when a shard fails.
 
+use super::barrier::ShardBarrier;
 use super::cache::PatternCache;
 use super::metrics::Metrics;
 use super::router::{Route, Router};
 use crate::gpusim::DevicePool;
 use crate::runtime::BlockEngine;
+use crate::sparse::ops::row_slice;
+use crate::sparse::stats::nprod_per_row;
 use crate::sparse::Csr;
 use crate::spgemm::pipeline::{multiply_reuse, OpSparseConfig, SymbolicReuse};
-use crate::spgemm::sharded::multiply_sharded_pooled;
+use crate::spgemm::sharded::ShardPlan;
 use anyhow::Result;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
@@ -42,21 +54,40 @@ pub struct JobResult {
     pub id: u64,
     pub route: Route,
     pub c: Result<Csr>,
+    /// End-to-end wall time from submit to result (queue wait included),
+    /// on every route.
     pub wall_ns: u64,
     /// Total intermediate products (0 if the job failed early).
     pub nprod: usize,
 }
 
+/// One shard of a sharded job, schedulable on any hash worker. The
+/// operands are shared (`Arc`), the row range is sliced inside the
+/// worker, and the result reports to the parent's reassembly barrier.
+struct ShardTask {
+    barrier: Arc<ShardBarrier>,
+    shard: usize,
+    lo: usize,
+    hi: usize,
+    a: Arc<Csr>,
+    b: Arc<Csr>,
+}
+
 enum WorkerMsg {
-    /// A job plus the route `submit` resolved for it.
-    Run(Job, Route),
+    /// A job, the route `submit` resolved for it, and the submit-time
+    /// instant — every route reports end-to-end (submit → result)
+    /// latency, so queue wait is visible and the percentiles compare
+    /// across routes.
+    Run(Job, Route, Instant),
+    /// One shard of a sharded parent job.
+    RunShard(ShardTask),
     Stop,
 }
 
 /// Factory that builds the block engine inside its worker thread.
 pub type EngineFactory = Box<dyn FnOnce() -> Result<BlockEngine> + Send>;
 
-fn finish(
+pub(crate) fn finish(
     metrics: &Metrics,
     tx: &mpsc::Sender<JobResult>,
     id: u64,
@@ -97,16 +128,16 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
 
         let mut workers = Vec::new();
-        for _ in 0..n_workers.max(1) {
+        for worker_id in 0..n_workers.max(1) {
             let rx = Arc::clone(&rx_hash);
             let tx_res = tx_results.clone();
             let metrics = Arc::clone(&metrics);
             workers.push(std::thread::spawn(move || {
                 // warm-worker state: a grow-only device pool and a
-                // symbolic-reuse cache, both single-owner (no locks), plus
-                // per-device pools for the sharded path (grown on demand)
+                // symbolic-reuse cache, both single-owner (no locks).
+                // Shard sub-jobs allocate through the same pool, so
+                // repeated sharded traffic runs warm per worker too.
                 let mut pool = DevicePool::new();
-                let mut shard_pools: Vec<DevicePool> = Vec::new();
                 let mut cache = PatternCache::new(WORKER_CACHE_PATTERNS);
                 let cfg = OpSparseConfig::default();
                 loop {
@@ -115,57 +146,34 @@ impl Coordinator {
                         guard.recv()
                     };
                     match msg {
-                        Ok(WorkerMsg::Run(job, Route::Sharded { n_devices })) => {
-                            // fan the job out across per-shard pipelines
-                            // (scoped threads inside multiply_sharded_pooled)
-                            // and reassemble the stitched CSR. The pattern
-                            // cache is not consulted: entries are keyed on
-                            // whole operands, not shards (ROADMAP item).
-                            let t0 = Instant::now();
-                            let pools_before: Vec<_> =
-                                shard_pools.iter().map(|p| p.stats()).collect();
+                        Ok(WorkerMsg::RunShard(task)) => {
+                            // one shard of a sharded parent: slice the row
+                            // range, run the full pipeline, report to the
+                            // reassembly barrier. The pattern cache is not
+                            // consulted: entries are keyed on whole
+                            // operands, not shards (ROADMAP item). A
+                            // panicking shard (poisoned rows reachable
+                            // only from this shard's slice) must cost the
+                            // parent job, not this worker thread.
+                            metrics.observe_shard_subjob(worker_id);
+                            let pool_before = pool.stats();
                             let result = std::panic::catch_unwind(
                                 std::panic::AssertUnwindSafe(|| {
-                                    multiply_sharded_pooled(
-                                        &job.a,
-                                        &job.b,
-                                        &cfg,
-                                        n_devices,
-                                        &mut shard_pools,
-                                    )
+                                    let a_s = row_slice(&task.a, task.lo, task.hi)?;
+                                    multiply_reuse(&a_s, &task.b, &cfg, Some(&mut pool), None)
                                 }),
                             );
-                            let (c, nprod) = match result {
-                                Ok(Ok(out)) => {
-                                    let np = out.nprod;
-                                    (Ok(out.c), np)
-                                }
-                                Ok(Err(e)) => (Err(e), 0),
-                                Err(_) => {
-                                    (Err(anyhow::anyhow!("sharded multiply panicked")), 0)
-                                }
+                            let r = match result {
+                                Ok(r) => r,
+                                Err(_) => Err(anyhow::anyhow!(
+                                    "shard {} panicked (poisoned input or internal bug)",
+                                    task.shard
+                                )),
                             };
-                            // per-device pool deltas (pools grown by this
-                            // job have no 'before' snapshot: whole stats)
-                            for (i, p) in shard_pools.iter().enumerate() {
-                                let d = match pools_before.get(i) {
-                                    Some(before) => p.stats().delta_since(before),
-                                    None => p.stats(),
-                                };
-                                metrics.observe_pool(&d);
-                            }
-                            finish(
-                                &metrics,
-                                &tx_res,
-                                job.id,
-                                Route::Sharded { n_devices },
-                                c,
-                                nprod,
-                                t0,
-                            );
+                            metrics.observe_pool(&pool.stats().delta_since(&pool_before));
+                            task.barrier.complete(task.shard, r);
                         }
-                        Ok(WorkerMsg::Run(job, _)) => {
-                            let t0 = Instant::now();
+                        Ok(WorkerMsg::Run(job, _, t0)) => {
                             let key =
                                 (job.a.pattern_fingerprint(), job.b.pattern_fingerprint());
                             let reuse = cache.lookup(key);
@@ -233,8 +241,7 @@ impl Coordinator {
                 };
                 loop {
                     match rx_block.recv() {
-                        Ok(WorkerMsg::Run(job, _)) => {
-                            let t0 = Instant::now();
+                        Ok(WorkerMsg::Run(job, _, t0)) => {
                             // guard the stats assert: a force-routed job
                             // with mismatched dims must fail via the
                             // engine's error, not panic this thread
@@ -260,8 +267,11 @@ impl Coordinator {
     }
 
     /// Submit a job: routed here (structure-only, cheap), then queued.
+    /// Latency is measured from this point, so `wall_ns` and the metric
+    /// percentiles are end-to-end (queue wait included) on every route.
     pub fn submit(&self, job: Job) {
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
         let route = job.force_route.unwrap_or_else(|| self.router.route(&job.a, &job.b));
         let route = match (route, &self.tx_block) {
             (Route::Block, Some(_)) => Route::Block,
@@ -272,28 +282,81 @@ impl Coordinator {
         match route {
             Route::Hash => {
                 self.metrics.hash_routed.fetch_add(1, Ordering::Relaxed);
-                self.tx_hash.send(WorkerMsg::Run(job, route)).expect("hash workers alive");
+                self.tx_hash.send(WorkerMsg::Run(job, route, t0)).expect("hash workers alive");
             }
-            Route::Sharded { .. } => {
-                // sharded jobs run on the hash worker pool: each worker
-                // fans the shards out on scoped threads and reassembles
+            Route::Sharded { n_devices } => {
+                // split into per-shard sub-jobs that fan out across the
+                // whole worker pool; a ShardBarrier stitches the row
+                // blocks and emits the one parent JobResult
                 self.metrics.sharded_routed.fetch_add(1, Ordering::Relaxed);
-                self.tx_hash.send(WorkerMsg::Run(job, route)).expect("hash workers alive");
+                let n = n_devices.max(1);
+                // planning walks both operands end to end; a malformed
+                // pair (the failure-injection surface) must cost this
+                // job, not the submitting thread. (An auto-routed shard
+                // job also paid the router's O(nnz(A)) total fold — the
+                // per-row vector is deliberately not materialized there,
+                // since most submits never reach this branch.)
+                let planned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    ShardPlan::balanced(&nprod_per_row(&job.a, &job.b), n)
+                }));
+                let plan = match planned {
+                    Ok(p) => p,
+                    Err(_) => {
+                        finish(
+                            &self.metrics,
+                            &self.tx_results,
+                            job.id,
+                            route,
+                            Err(anyhow::anyhow!(
+                                "shard planning panicked (malformed operands?)"
+                            )),
+                            0,
+                            t0,
+                        );
+                        return;
+                    }
+                };
+                let a = Arc::new(job.a);
+                let b = Arc::new(job.b);
+                let barrier = Arc::new(ShardBarrier::new(
+                    job.id,
+                    route,
+                    n,
+                    a.rows,
+                    b.cols,
+                    self.tx_results.clone(),
+                    Arc::clone(&self.metrics),
+                    t0,
+                ));
+                for s in 0..n {
+                    let (lo, hi) = plan.range(s);
+                    self.tx_hash
+                        .send(WorkerMsg::RunShard(ShardTask {
+                            barrier: Arc::clone(&barrier),
+                            shard: s,
+                            lo,
+                            hi,
+                            a: Arc::clone(&a),
+                            b: Arc::clone(&b),
+                        }))
+                        .expect("hash workers alive");
+                }
             }
             Route::Block => {
                 self.metrics.block_routed.fetch_add(1, Ordering::Relaxed);
                 match &self.tx_block {
-                    Some(tx) => tx.send(WorkerMsg::Run(job, route)).expect("block worker alive"),
-                    None => {
-                        self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                        let _ = self.tx_results.send(JobResult {
-                            id: job.id,
-                            route: Route::Block,
-                            c: Err(anyhow::anyhow!("no block engine loaded")),
-                            wall_ns: 0,
-                            nprod: 0,
-                        });
+                    Some(tx) => {
+                        tx.send(WorkerMsg::Run(job, route, t0)).expect("block worker alive")
                     }
+                    None => finish(
+                        &self.metrics,
+                        &self.tx_results,
+                        job.id,
+                        Route::Block,
+                        Err(anyhow::anyhow!("no block engine loaded")),
+                        0,
+                        t0,
+                    ),
                 }
             }
         }
@@ -304,7 +367,11 @@ impl Coordinator {
         self.rx_results.recv().ok()
     }
 
-    /// Stop all workers and join.
+    /// Stop all workers and join. Stop markers queue **behind** every
+    /// already-submitted job and shard sub-job on the shared FIFO, so
+    /// in-flight shard barriers drain to completion before the workers
+    /// exit — shutdown never strands a parent job behind a half-done
+    /// barrier.
     pub fn shutdown(self) {
         for _ in &self.workers {
             let _ = self.tx_hash.send(WorkerMsg::Stop);
@@ -390,9 +457,12 @@ mod tests {
     fn oversized_jobs_shard_and_reassemble_exactly() {
         use crate::coordinator::router::RouterConfig;
         // a budget far below any real working set: every job shards
+        // (memory-only routing — these matrices are small enough that the
+        // cost-aware router would rightly decline to replicate B)
         let router = Router::new(RouterConfig {
             device_memory_bytes: 4096,
             max_devices: 4,
+            interconnect: None,
             ..Default::default()
         });
         let coord = Coordinator::start(2, router, None);
@@ -416,6 +486,42 @@ mod tests {
         // runs warm at least once
         assert!(snap.pool_device_mallocs > 0, "cold sharded jobs grow the pools");
         assert!(snap.pool_hits > 0, "warm sharded jobs must recycle pool buckets");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sharded_job_fans_out_across_distinct_workers() {
+        // the acceptance property of the cross-worker fan-out: with >= 2
+        // workers, one sharded job's sub-jobs execute on >= 2 distinct
+        // workers (observable via telemetry). Several multi-millisecond
+        // jobs keep the queue busy long enough that the second worker
+        // always participates, whatever the thread scheduler does.
+        let coord = Coordinator::start(2, Router::default(), None);
+        let mut rng = Rng::new(76);
+        let a = Uniform { n: 1200, per_row: 8, jitter: 4 }.generate(&mut rng);
+        let gold = spgemm_reference(&a, &a);
+        for id in 0..3u64 {
+            coord.submit(Job {
+                id,
+                a: a.clone(),
+                b: a.clone(),
+                force_route: Some(Route::Sharded { n_devices: 8 }),
+            });
+        }
+        for _ in 0..3 {
+            let r = coord.recv().unwrap();
+            assert_eq!(r.route, Route::Sharded { n_devices: 8 });
+            assert!(r.c.unwrap().approx_eq(&gold, 1e-12));
+            assert!(r.nprod > 0);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 3);
+        assert_eq!(snap.shard_subjobs, 24, "every sub-job must be accounted");
+        assert!(
+            snap.shard_workers >= 2,
+            "shards must spread over the pool, got {} worker(s)",
+            snap.shard_workers
+        );
         coord.shutdown();
     }
 

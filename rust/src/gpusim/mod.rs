@@ -24,7 +24,7 @@ pub mod timeline;
 pub mod trace;
 
 pub use device::{DeviceParams, V100};
-pub use multi::MultiDevice;
+pub use multi::{Interconnect, MultiDevice, Topology};
 pub use pool::{DevicePool, PoolStats};
 pub use scheduler::simulate;
 pub use timeline::Timeline;

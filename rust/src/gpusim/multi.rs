@@ -1,46 +1,226 @@
 //! Multi-device view: aggregate per-device timelines into makespan and
-//! scaling figures.
+//! scaling figures, charging inter-device transfers against an
+//! [`Interconnect`] model.
 //!
 //! A sharded SpGEMM run produces one [`Trace`] per simulated device (see
 //! [`crate::spgemm::sharded`]). The devices execute concurrently — each
-//! has its own host thread, streams, and SMs — so the end-to-end figure
-//! is the **makespan**: the critical path, i.e. the slowest device's
-//! wall time. [`MultiDevice`] simulates every trace independently against
-//! one [`DeviceParams`] model and reports makespan, per-device times,
-//! load imbalance, and scaling efficiency versus a single-device run.
-//!
-//! Inter-device transfer costs (broadcasting `B`, gathering the stitched
-//! `C`) are not yet modeled; see ROADMAP "Open items".
+//! has its own host thread, streams, and SMs — so the compute figure is
+//! the **makespan**: the critical path, i.e. the slowest device's wall
+//! time. Row sharding additionally replicates `B` on every device (a
+//! one-to-all broadcast before compute) and gathers the `C` row blocks
+//! back to the root device afterwards; both ride the interconnect, not
+//! HBM, and on small jobs they dominate — this is exactly where
+//! bhSPARSE-style heterogeneous frameworks report communication-bound
+//! scaling. [`MultiDevice::simulate_with_interconnect`] charges both
+//! phases, so efficiency figures stop over-reporting for small jobs;
+//! [`MultiDevice::simulate`] keeps the transfer-free view (both costs 0).
 
 use super::device::DeviceParams;
 use super::scheduler::simulate;
 use super::timeline::Timeline;
 use super::trace::Trace;
+use anyhow::{ensure, Result};
 
-/// Per-device simulation results of one multi-device run.
+/// Fan-out pattern of the inter-device links.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// The root device pushes a full copy to every peer through its own
+    /// link, one peer at a time (PCIe devices under one host bridge):
+    /// broadcast cost grows linearly with the device count.
+    OneToAll,
+    /// Devices form a ring and broadcasts pipeline chunks around it
+    /// (NVLink-style): the bandwidth term flattens out as the fleet
+    /// grows, so a ring beats one-to-all at high device counts.
+    Ring,
+}
+
+/// Inter-device interconnect: per-link bandwidth, per-message latency,
+/// and topology. `bandwidth_gbps` is in GB/s, which conveniently equals
+/// bytes/ns.
+///
+/// # Example
+///
+/// ```
+/// use opsparse::gpusim::{Interconnect, Topology};
+///
+/// let pcie = Interconnect::pcie3();
+/// let one_to_all = pcie.broadcast_ns(1 << 20, 8).unwrap();
+/// let ring =
+///     Interconnect { topology: Topology::Ring, ..pcie }.broadcast_ns(1 << 20, 8).unwrap();
+/// assert!(ring < one_to_all, "pipelined ring wins at high device counts");
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interconnect {
+    /// Per-link bandwidth in GB/s (== bytes/ns). Must be positive.
+    pub bandwidth_gbps: f64,
+    /// Per-message latency in microseconds.
+    pub latency_us: f64,
+    pub topology: Topology,
+}
+
+impl Interconnect {
+    /// PCIe 3.0 x16 under one host bridge: ~12 GB/s effective, one
+    /// transfer at a time through the root's link.
+    pub const fn pcie3() -> Interconnect {
+        Interconnect { bandwidth_gbps: 12.0, latency_us: 5.0, topology: Topology::OneToAll }
+    }
+
+    /// NVLink ring (V100 DGX-style): ~150 GB/s per direction, pipelined
+    /// ring collectives.
+    pub const fn nvlink() -> Interconnect {
+        Interconnect { bandwidth_gbps: 150.0, latency_us: 1.5, topology: Topology::Ring }
+    }
+
+    /// Parse a preset name (`pcie` | `nvlink`), for CLI/env flags.
+    pub fn parse(s: &str) -> Option<Interconnect> {
+        match s {
+            "pcie" | "pcie3" => Some(Interconnect::pcie3()),
+            "nvlink" => Some(Interconnect::nvlink()),
+            _ => None,
+        }
+    }
+
+    /// [`Interconnect::parse`] plus the `none` sentinel (no interconnect
+    /// charged): `Some(None)` for `"none"`, `Some(Some(_))` for a known
+    /// preset, `None` for anything else. The one parser shared by the
+    /// `bench shards` CLI flag and the `OPSPARSE_INTERCONNECT` env var,
+    /// so both accept exactly the same names.
+    pub fn parse_opt(s: &str) -> Option<Option<Interconnect>> {
+        if s == "none" {
+            Some(None)
+        } else {
+            Interconnect::parse(s).map(Some)
+        }
+    }
+
+    fn check(&self) -> Result<()> {
+        ensure!(
+            self.bandwidth_gbps.is_finite() && self.bandwidth_gbps > 0.0,
+            "interconnect bandwidth must be positive and finite, got {} GB/s",
+            self.bandwidth_gbps
+        );
+        ensure!(
+            self.latency_us.is_finite() && self.latency_us >= 0.0,
+            "interconnect latency must be non-negative, got {} us",
+            self.latency_us
+        );
+        Ok(())
+    }
+
+    fn latency_ns(&self) -> f64 {
+        self.latency_us * 1e3
+    }
+
+    /// Time to replicate `bytes` from the root onto the other
+    /// `n_devices - 1` devices. Zero for a single device. Errors on a
+    /// non-positive bandwidth instead of dividing by zero.
+    pub fn broadcast_ns(&self, bytes: usize, n_devices: usize) -> Result<f64> {
+        self.check()?;
+        if n_devices <= 1 {
+            return Ok(0.0);
+        }
+        let hops = (n_devices - 1) as f64;
+        let xfer = bytes as f64 / self.bandwidth_gbps;
+        Ok(match self.topology {
+            Topology::OneToAll => hops * (self.latency_ns() + xfer),
+            // pipelined ring (scatter + forward): the bandwidth term
+            // approaches 2x one link's transfer time as the ring grows
+            Topology::Ring => hops * self.latency_ns() + xfer * 2.0 * hops / n_devices as f64,
+        })
+    }
+
+    /// Time to gather per-device result blocks onto the root device
+    /// (`block_bytes[0]` is the root's own block and moves nothing).
+    /// Zero for a single device; errors on a non-positive bandwidth.
+    pub fn gather_ns(&self, block_bytes: &[usize]) -> Result<f64> {
+        self.check()?;
+        if block_bytes.len() <= 1 {
+            return Ok(0.0);
+        }
+        let hops = (block_bytes.len() - 1) as f64;
+        let nonroot: f64 = block_bytes[1..].iter().map(|&b| b as f64).sum();
+        // same cost on both topologies: whether blocks serialize through
+        // the root's link directly (one-to-all) or forward around the
+        // ring, the link into the root carries every non-root byte
+        Ok(hops * self.latency_ns() + nonroot / self.bandwidth_gbps)
+    }
+}
+
+/// Per-device simulation results of one multi-device run, plus the
+/// modeled interconnect transfers that bracket the compute phase.
 #[derive(Clone, Debug, Default)]
 pub struct MultiDevice {
     /// One timeline per device, in device order.
     pub timelines: Vec<Timeline>,
+    /// Modeled `B` replication cost before compute (0 when simulated
+    /// without an interconnect, or with a single device).
+    pub broadcast_ns: f64,
+    /// Modeled `C` row-block gather cost after compute (0 when simulated
+    /// without an interconnect, or with a single device).
+    pub gather_ns: f64,
 }
 
 impl MultiDevice {
-    /// Simulate one trace per device against the same device model.
+    /// Simulate one trace per device against the same device model, with
+    /// free inter-device transfers (the PR 2 view; see
+    /// [`MultiDevice::simulate_with_interconnect`] for the honest one).
     pub fn simulate<'a, I>(traces: I, dev: &DeviceParams) -> MultiDevice
     where
         I: IntoIterator<Item = &'a Trace>,
     {
-        MultiDevice { timelines: traces.into_iter().map(|t| simulate(t, dev)).collect() }
+        MultiDevice {
+            timelines: traces.into_iter().map(|t| simulate(t, dev)).collect(),
+            broadcast_ns: 0.0,
+            gather_ns: 0.0,
+        }
+    }
+
+    /// [`MultiDevice::simulate`], charging the one-to-all/ring `B`
+    /// broadcast (`b_bytes` replicated onto every non-root device) and
+    /// the `C` row-block gather (`c_block_bytes`, one entry per device)
+    /// against `ic`. `c_block_bytes` must have one entry per trace.
+    pub fn simulate_with_interconnect<'a, I>(
+        traces: I,
+        dev: &DeviceParams,
+        ic: &Interconnect,
+        b_bytes: usize,
+        c_block_bytes: &[usize],
+    ) -> Result<MultiDevice>
+    where
+        I: IntoIterator<Item = &'a Trace>,
+    {
+        let mut md = MultiDevice::simulate(traces, dev);
+        ensure!(
+            c_block_bytes.len() == md.n_devices(),
+            "{} C blocks for {} devices",
+            c_block_bytes.len(),
+            md.n_devices()
+        );
+        md.broadcast_ns = ic.broadcast_ns(b_bytes, md.n_devices())?;
+        md.gather_ns = ic.gather_ns(c_block_bytes)?;
+        Ok(md)
     }
 
     pub fn n_devices(&self) -> usize {
         self.timelines.len()
     }
 
-    /// Critical path: the slowest device's wall time (devices run
-    /// concurrently).
-    pub fn makespan_ns(&self) -> f64 {
+    /// Compute critical path: the slowest device's wall time (devices
+    /// run concurrently), excluding interconnect transfers.
+    pub fn compute_makespan_ns(&self) -> f64 {
         self.timelines.iter().map(|t| t.total_ns).fold(0.0, f64::max)
+    }
+
+    /// Modeled interconnect time bracketing the compute phase.
+    pub fn comm_ns(&self) -> f64 {
+        self.broadcast_ns + self.gather_ns
+    }
+
+    /// End-to-end critical path: `B` broadcast, then the slowest device's
+    /// compute, then the `C` gather. Equals the compute makespan when no
+    /// interconnect was charged.
+    pub fn makespan_ns(&self) -> f64 {
+        self.comm_ns() + self.compute_makespan_ns()
     }
 
     /// Per-device wall times in device order.
@@ -48,8 +228,9 @@ impl MultiDevice {
         self.timelines.iter().map(|t| t.total_ns).collect()
     }
 
-    /// Measured load imbalance: max device wall time / mean device wall
-    /// time (1.0 = perfect; idle devices count toward the mean).
+    /// Measured compute load imbalance: max device wall time / mean
+    /// device wall time (1.0 = perfect; idle devices count toward the
+    /// mean). Interconnect time is excluded — it is not imbalance.
     pub fn time_imbalance(&self) -> f64 {
         if self.timelines.is_empty() {
             return 1.0;
@@ -59,11 +240,11 @@ impl MultiDevice {
         if mean == 0.0 {
             1.0
         } else {
-            self.makespan_ns() / mean
+            self.compute_makespan_ns() / mean
         }
     }
 
-    /// Speedup over a single-device wall time.
+    /// Speedup over a single-device wall time (interconnect included).
     pub fn speedup_vs(&self, single_device_ns: f64) -> f64 {
         let m = self.makespan_ns();
         if m <= 0.0 {
@@ -121,6 +302,7 @@ mod tests {
         assert!((md.makespan_ns() - per[1]).abs() < 1e-6);
         assert!(per[1] > per[0]);
         assert!(md.time_imbalance() > 1.0);
+        assert_eq!(md.comm_ns(), 0.0, "no interconnect charged by default");
     }
 
     #[test]
@@ -139,5 +321,95 @@ mod tests {
         assert_eq!(md.makespan_ns(), 0.0);
         assert_eq!(md.time_imbalance(), 1.0);
         assert_eq!(md.efficiency_vs(1.0), 0.0);
+    }
+
+    #[test]
+    fn one_to_all_broadcast_scales_linearly_in_bytes_and_devices() {
+        // zero latency isolates the bandwidth term
+        let ic = Interconnect { bandwidth_gbps: 10.0, latency_us: 0.0, topology: Topology::OneToAll };
+        let base = ic.broadcast_ns(1 << 20, 2).unwrap();
+        assert!(base > 0.0);
+        let double_bytes = ic.broadcast_ns(2 << 20, 2).unwrap();
+        assert!((double_bytes - 2.0 * base).abs() < 1e-6, "linear in bytes");
+        let five_devices = ic.broadcast_ns(1 << 20, 5).unwrap();
+        assert!((five_devices - 4.0 * base).abs() < 1e-6, "linear in peer count");
+        // latency is charged per hop
+        let with_lat =
+            Interconnect { latency_us: 5.0, ..ic }.broadcast_ns(1 << 20, 5).unwrap();
+        assert!((with_lat - (five_devices + 4.0 * 5_000.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ring_beats_one_to_all_at_high_device_counts() {
+        let one = Interconnect { bandwidth_gbps: 12.0, latency_us: 2.0, topology: Topology::OneToAll };
+        let ring = Interconnect { topology: Topology::Ring, ..one };
+        let bytes = 64 << 20;
+        // a two-device "ring" is the same single link
+        let o2 = one.broadcast_ns(bytes, 2).unwrap();
+        let r2 = ring.broadcast_ns(bytes, 2).unwrap();
+        assert!((o2 - r2).abs() < 1e-6);
+        // at 8 devices the pipelined ring amortizes the replication
+        let o8 = one.broadcast_ns(bytes, 8).unwrap();
+        let r8 = ring.broadcast_ns(bytes, 8).unwrap();
+        assert!(r8 < o8 / 2.0, "ring {r8} should clearly beat one-to-all {o8}");
+        // and the ring's bandwidth term stays bounded as the fleet grows
+        let r64 = ring.broadcast_ns(bytes, 64).unwrap();
+        let xfer = bytes as f64 / 12.0;
+        assert!(r64 - 63.0 * 2_000.0 < 2.0 * xfer + 1e-6);
+    }
+
+    #[test]
+    fn zero_bandwidth_is_an_error_not_a_division() {
+        let dead = Interconnect { bandwidth_gbps: 0.0, latency_us: 1.0, topology: Topology::OneToAll };
+        assert!(dead.broadcast_ns(1024, 4).is_err());
+        assert!(dead.gather_ns(&[10, 10]).is_err());
+        let neg = Interconnect { bandwidth_gbps: -3.0, ..dead };
+        assert!(neg.broadcast_ns(1024, 4).is_err());
+    }
+
+    #[test]
+    fn single_device_pays_no_interconnect() {
+        let ic = Interconnect::pcie3();
+        assert_eq!(ic.broadcast_ns(1 << 30, 1).unwrap(), 0.0);
+        assert_eq!(ic.gather_ns(&[1 << 30]).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn gather_counts_only_non_root_blocks() {
+        let ic = Interconnect { bandwidth_gbps: 1.0, latency_us: 0.0, topology: Topology::OneToAll };
+        // root block (index 0) never moves
+        let g = ic.gather_ns(&[1_000_000, 100, 200]).unwrap();
+        assert!((g - 300.0).abs() < 1e-9, "got {g}");
+    }
+
+    #[test]
+    fn interconnect_charges_show_up_in_makespan() {
+        let traces: Vec<Trace> = (0..4).map(|_| trace_with_blocks(100)).collect();
+        let free = MultiDevice::simulate(traces.iter(), &V100);
+        let ic = Interconnect::pcie3();
+        let charged = MultiDevice::simulate_with_interconnect(
+            traces.iter(),
+            &V100,
+            &ic,
+            8 << 20,
+            &[1 << 20; 4],
+        )
+        .unwrap();
+        assert!(charged.broadcast_ns > 0.0);
+        assert!(charged.gather_ns > 0.0);
+        assert!(
+            charged.makespan_ns() > free.makespan_ns(),
+            "transfers must lengthen the critical path"
+        );
+        assert_eq!(charged.compute_makespan_ns(), free.compute_makespan_ns());
+        // block-count mismatch is an error
+        assert!(MultiDevice::simulate_with_interconnect(
+            traces.iter(),
+            &V100,
+            &ic,
+            8 << 20,
+            &[1 << 20; 3],
+        )
+        .is_err());
     }
 }

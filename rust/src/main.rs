@@ -5,6 +5,8 @@
 //! * `spgemm --a f.mtx [--b g.mtx] [--lib L] [--verify]` — one multiply
 //! * `suite [--scale s] [--verify]` — all 26 matrices, all libraries
 //! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|all>`
+//!   (`bench shards` takes `--interconnect pcie|nvlink|none` and
+//!   `--json <path>`)
 //! * `serve [--jobs n] [--workers w]` — coordinator demo (job queue)
 //! * `sim-case webbase` — §6.3.4 / §6.3.5 case-study timeline
 //!
@@ -159,7 +161,13 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             figures::pool_ablation(scale, reps)?;
         }
         "shards" => {
-            figures::shard_scaling(scale)?;
+            let name = flags.get("interconnect").map(|s| s.as_str()).unwrap_or("pcie");
+            let ic = opsparse::gpusim::Interconnect::parse_opt(name)
+                .with_context(|| format!("unknown interconnect {name} (pcie|nvlink|none)"))?;
+            let rows = figures::shard_scaling_with(scale, ic.as_ref())?;
+            if let Some(path) = flags.get("json") {
+                opsparse::bench::write_shard_scaling_json(path, scale, &rows)?;
+            }
         }
         "perf" => {
             let m = flags.get("matrix").map(|s| s.as_str()).unwrap_or("consph");
@@ -294,6 +302,7 @@ fn usage() -> ! {
            spgemm   --a f.mtx [--b g.mtx] [--lib opsparse|nsparse|speck|cusparse] [--verify]\n\
            suite    [--scale s] [--verify]\n\
            bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|all> [--scale s]\n\
+                    shards also takes [--interconnect pcie|nvlink|none] [--json out.json]\n\
            serve    [--jobs n] [--workers w] [--no-engine]\n\
            sim-case webbase [--scale s]\n\
            list     (suite matrix names)"

@@ -15,11 +15,13 @@
 //! hub-coupled rows carry most of the multiply, and an equal-rows split
 //! would overload one shard (see [`ShardPlan::balanced`]).
 //!
-//! `B` is replicated on every device (the broadcast cost is not yet
-//! modeled — see ROADMAP "Open items"). Each shard gets its own
-//! [`DevicePool`] and its own trace; feed the traces to
+//! `B` is replicated on every device — a one-to-all broadcast — and the
+//! `C` row blocks are gathered back to the root; both transfers are
+//! charged by [`crate::gpusim::Interconnect`] when the traces are fed to
+//! [`crate::gpusim::MultiDevice::simulate_with_interconnect`]. Each
+//! shard gets its own [`DevicePool`] and its own trace; use
 //! [`crate::gpusim::MultiDevice`] for the makespan / scaling-efficiency
-//! view, or use [`ShardedOutput::into_output`] for a single-device
+//! view, or [`ShardedOutput::into_output`] for a single-device
 //! serialized view.
 //!
 //! # Example
@@ -167,6 +169,13 @@ impl ShardedOutput {
         self.shards.iter().map(|s| &s.trace)
     }
 
+    /// Per-device `C` row-block sizes in bytes, in shard order — the
+    /// payload a result gather moves (feed to
+    /// [`crate::gpusim::MultiDevice::simulate_with_interconnect`]).
+    pub fn c_block_bytes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.c.device_bytes()).collect()
+    }
+
     pub fn flops(&self) -> f64 {
         2.0 * self.nprod as f64
     }
@@ -282,22 +291,37 @@ pub fn multiply_sharded_with(
         shards.push(r?);
     }
 
-    // stitch the row blocks: offset-adjust each shard's row pointers
-    let mut rpt = Vec::with_capacity(a.rows + 1);
+    let (c, nprod) = stitch_row_blocks(a.rows, b.cols, &shards)?;
+    Ok(ShardedOutput { c, plan: plan.clone(), shards, nprod })
+}
+
+/// Stitch per-shard `C` row blocks (in shard order) into one `rows`-row
+/// CSR by offset-adjusting each block's row pointers, and sum the shard
+/// `nprod` counts. Shared by [`multiply_sharded_with`] and the
+/// coordinator's cross-worker reassembly barrier
+/// ([`crate::coordinator::barrier::ShardBarrier`]), so both fan-out
+/// paths reassemble bit-identically.
+pub fn stitch_row_blocks(
+    rows: usize,
+    cols: usize,
+    shards: &[SpgemmOutput],
+) -> Result<(Csr, usize)> {
+    let block_rows: usize = shards.iter().map(|s| s.c.rows).sum();
+    ensure!(block_rows == rows, "row blocks cover {block_rows} rows, expected {rows}");
+    let mut rpt = Vec::with_capacity(rows + 1);
     rpt.push(0usize);
     let total_nnz: usize = shards.iter().map(|s| s.c.nnz()).sum();
     let mut col = Vec::with_capacity(total_nnz);
     let mut val = Vec::with_capacity(total_nnz);
     let mut nprod = 0usize;
-    for s in &shards {
+    for s in shards {
         let base = *rpt.last().unwrap();
         rpt.extend(s.c.rpt[1..].iter().map(|&p| p + base));
         col.extend_from_slice(&s.c.col);
         val.extend_from_slice(&s.c.val);
         nprod += s.nprod;
     }
-    let c = Csr { rows: a.rows, cols: b.cols, rpt, col, val };
-    Ok(ShardedOutput { c, plan: plan.clone(), shards, nprod })
+    Ok((Csr { rows, cols, rpt, col, val }, nprod))
 }
 
 #[cfg(test)]

@@ -1,0 +1,181 @@
+//! Cross-worker shard fan-out must change *where* shards run and nothing
+//! else.
+//!
+//! Matrix of properties across the generator families (uniform,
+//! power-law, stencil, kron), shard counts 1/2/4/8, and worker counts
+//! {1, 2, shards_max + 1}: a sharded job submitted to the coordinator —
+//! whose shards are schedulable sub-jobs spread over the worker pool and
+//! reassembled by a barrier — returns a CSR bit-identical (`rpt`/`col`/
+//! `val`) to both the in-worker `multiply_sharded` fan-out and the
+//! unsharded `multiply`. Includes the empty-row-shard edge cases from
+//! `tests/sharded.rs`, driven through the coordinator.
+
+use opsparse::coordinator::{Coordinator, Job, Route, Router};
+use opsparse::gen::kron::Kron;
+use opsparse::gen::powerlaw::PowerLaw;
+use opsparse::gen::stencil::{Grid, Stencil};
+use opsparse::gen::uniform::Uniform;
+use opsparse::sparse::Csr;
+use opsparse::spgemm::pipeline::{multiply, OpSparseConfig};
+use opsparse::spgemm::sharded::multiply_sharded;
+use opsparse::util::rng::Rng;
+use std::collections::HashMap;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// One representative per generator family (the `tests/sharded.rs` set).
+fn family_matrices() -> Vec<(&'static str, Csr)> {
+    let mut rng = Rng::new(2077);
+    vec![
+        ("uniform", Uniform { n: 400, per_row: 8, jitter: 4 }.generate(&mut rng)),
+        (
+            "powerlaw",
+            PowerLaw {
+                n: 500,
+                alpha: 2.0,
+                max_row: 60,
+                mean_row: 4.0,
+                hub_frac: 0.2,
+                forced_giant_rows: 1,
+            }
+            .generate(&mut rng),
+        ),
+        (
+            "stencil",
+            Stencil { n: 400, grid: Grid::D2, reach: 1, keep: 1.0, diagonal: true }
+                .generate(&mut rng),
+        ),
+        ("kron", Kron { scale: 8, edge_factor: 8, a: 0.57, b: 0.19, c: 0.19 }.generate(&mut rng)),
+    ]
+}
+
+#[test]
+fn cross_worker_fanout_matches_in_worker_and_unsharded() {
+    let cfg = OpSparseConfig::default();
+    let families = family_matrices();
+
+    // unsharded golds, and the in-worker fan-out cross-checked once
+    let golds: Vec<(Csr, usize)> = families
+        .iter()
+        .map(|(name, a)| {
+            let out = multiply(a, a, &cfg)
+                .unwrap_or_else(|e| panic!("unsharded multiply failed on {name}: {e:#}"));
+            (out.c, out.nprod)
+        })
+        .collect();
+    for (f, (name, a)) in families.iter().enumerate() {
+        for shards in SHARD_COUNTS {
+            let inw = multiply_sharded(a, a, &cfg, shards)
+                .unwrap_or_else(|e| panic!("{name}: in-worker {shards}-shard failed: {e:#}"));
+            assert_eq!(inw.c, golds[f].0, "{name}: in-worker {shards}-shard diverged");
+        }
+    }
+
+    // the cross-worker path, at every worker count
+    for n_workers in [1usize, 2, SHARD_COUNTS[3] + 1] {
+        let coord = Coordinator::start(n_workers, Router::default(), None);
+        let mut expected: HashMap<u64, (usize, usize)> = HashMap::new();
+        let mut id = 0u64;
+        for (f, (_, a)) in families.iter().enumerate() {
+            for shards in SHARD_COUNTS {
+                coord.submit(Job {
+                    id,
+                    a: a.clone(),
+                    b: a.clone(),
+                    force_route: Some(Route::Sharded { n_devices: shards }),
+                });
+                expected.insert(id, (f, shards));
+                id += 1;
+            }
+        }
+        for _ in 0..id {
+            let r = coord.recv().expect("coordinator alive");
+            let (f, shards) = expected[&r.id];
+            let name = families[f].0;
+            assert_eq!(r.route, Route::Sharded { n_devices: shards }, "{name}");
+            let c = r.c.unwrap_or_else(|e| {
+                panic!("{name}: {shards} shards on {n_workers} workers failed: {e:#}")
+            });
+            assert_eq!(
+                c, golds[f].0,
+                "{name}: {shards} shards on {n_workers} workers diverged from unsharded"
+            );
+            assert_eq!(r.nprod, golds[f].1, "{name}: nprod must be preserved");
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.sharded_routed, id);
+        assert_eq!(snap.jobs_completed, id);
+        assert_eq!(snap.jobs_failed, 0);
+        let subjobs: usize = SHARD_COUNTS.iter().sum::<usize>() * families.len();
+        assert_eq!(snap.shard_subjobs as usize, subjobs, "every sub-job accounted");
+        if n_workers == 1 {
+            assert_eq!(snap.shard_workers, 1);
+        } else {
+            assert!(
+                snap.shard_workers >= 2,
+                "{n_workers} workers: shards must spread over the pool, got {}",
+                snap.shard_workers
+            );
+        }
+        coord.shutdown();
+    }
+}
+
+#[test]
+fn empty_row_shards_reassemble_through_the_coordinator() {
+    // the tests/sharded.rs edge cases, driven through the sub-job path:
+    // more shards than rows (trailing empty shards) and an all-zero
+    // matrix must stitch cleanly and bit-identically
+    let cfg = OpSparseConfig::default();
+    let mut rng = Rng::new(3001);
+    let a = Uniform { n: 5, per_row: 3, jitter: 1 }.generate(&mut rng);
+    let gold = multiply(&a, &a, &cfg).unwrap();
+    let coord = Coordinator::start(2, Router::default(), None);
+    coord.submit(Job {
+        id: 0,
+        a: a.clone(),
+        b: a.clone(),
+        force_route: Some(Route::Sharded { n_devices: 8 }),
+    });
+    let z = Csr::zero(10, 10);
+    coord.submit(Job {
+        id: 1,
+        a: z.clone(),
+        b: z,
+        force_route: Some(Route::Sharded { n_devices: 4 }),
+    });
+    for _ in 0..2 {
+        let r = coord.recv().unwrap();
+        match r.id {
+            0 => assert_eq!(r.c.unwrap(), gold.c, "5 rows over 8 shards must stitch exactly"),
+            1 => {
+                let c = r.c.unwrap();
+                assert_eq!((c.rows, c.cols, c.nnz()), (10, 10, 0));
+                c.validate().unwrap();
+            }
+            other => panic!("unexpected job id {other}"),
+        }
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.shard_subjobs, 12, "empty shards still execute as sub-jobs");
+    assert_eq!(snap.jobs_completed, 2);
+    coord.shutdown();
+}
+
+#[test]
+fn one_row_per_shard_through_the_coordinator() {
+    let cfg = OpSparseConfig::default();
+    let a = Csr::identity(16);
+    let gold = multiply(&a, &a, &cfg).unwrap();
+    let coord = Coordinator::start(3, Router::default(), None);
+    coord.submit(Job {
+        id: 0,
+        a: a.clone(),
+        b: a,
+        force_route: Some(Route::Sharded { n_devices: 16 }),
+    });
+    let r = coord.recv().unwrap();
+    assert_eq!(r.c.unwrap(), gold.c);
+    assert_eq!(coord.metrics.snapshot().shard_subjobs, 16);
+    coord.shutdown();
+}

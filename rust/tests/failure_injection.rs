@@ -1,12 +1,17 @@
 //! Failure injection and robustness: malformed inputs must produce
-//! errors, never panics or silent corruption.
+//! errors, never panics or silent corruption — including through the
+//! coordinator's cross-worker shard fan-out, where a failed or poisoned
+//! shard must surface exactly one parent-job failure (never a hang or a
+//! partial stitch) and shutdown must drain in-flight shard barriers.
 
 use opsparse::baselines::Library;
+use opsparse::coordinator::{Coordinator, Job, Route, Router};
 use opsparse::gpusim::{simulate, BlockWork, Kernel, Trace, V100};
 use opsparse::sparse::{mmio, Csr};
 use opsparse::spgemm::pipeline::{multiply, OpSparseConfig};
 use opsparse::util::prop::check;
 use opsparse::util::rng::Rng;
+use std::sync::Arc;
 
 #[test]
 fn fuzzed_matrix_market_never_panics() {
@@ -159,6 +164,108 @@ fn zero_sized_and_single_element_matrices() {
     let one = Csr::from_parts(1, 1, vec![0, 1], vec![0], vec![2.0]).unwrap();
     let out = multiply(&one, &one, &OpSparseConfig::default()).unwrap();
     assert_eq!(out.c.get(0, 0), 4.0);
+}
+
+/// A structurally poisoned `B`: rows `0..sound_rows` are a clean
+/// diagonal, while the row pointers of rows `sound_rows..n` claim
+/// entries beyond `col`/`val` — any shard whose `A` rows reference that
+/// region panics inside its pipeline (caught by the worker's guard);
+/// shards confined to the sound region succeed.
+fn poisoned_b(n: usize, sound_rows: usize) -> Csr {
+    let mut rpt: Vec<usize> = (0..=sound_rows).collect();
+    for i in sound_rows + 1..=n {
+        rpt.push(sound_rows + 2 * (i - sound_rows));
+    }
+    let col: Vec<u32> = (0..sound_rows as u32).collect();
+    let val = vec![1.0f64; sound_rows];
+    // deliberately bypasses `Csr::from_parts` validation
+    Csr { rows: n, cols: n, rpt, col, val }
+}
+
+#[test]
+fn poisoned_shard_fails_parent_once_and_workers_survive() {
+    let n = 200;
+    let a = Csr::identity(n); // row i of A references exactly row i of B
+    let b = poisoned_b(n, 150);
+    let coord = Coordinator::start(2, Router::default(), None);
+    coord.submit(Job {
+        id: 1,
+        a: a.clone(),
+        b,
+        force_route: Some(Route::Sharded { n_devices: 4 }),
+    });
+    let r = coord.recv().expect("parent result must arrive, not hang");
+    assert_eq!(r.id, 1);
+    assert!(r.c.is_err(), "a poisoned shard must fail the whole parent job");
+    assert_eq!(r.nprod, 0, "a failed parent reports no work, never a partial stitch");
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_failed, 1);
+    assert_eq!(snap.shard_subjobs, 4, "every sub-job ran to a verdict");
+    // the pool survives a poisoned shard: a healthy job still completes
+    coord.submit(Job { id: 2, a: a.clone(), b: a.clone(), force_route: None });
+    let r2 = coord.recv().unwrap();
+    assert_eq!(r2.id, 2);
+    assert!(r2.c.unwrap().approx_eq(&a, 1e-12), "I*I = I");
+    assert_eq!(coord.metrics.snapshot().jobs_completed, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn mismatched_dims_fail_sharded_jobs_cleanly_both_ways() {
+    // shard planning asserts on the inner dimension (either direction);
+    // the submit-side guard must convert that panic into one failed
+    // JobResult per parent, never a panic on the caller's thread
+    let coord = Coordinator::start(2, Router::default(), None);
+    coord.submit(Job {
+        id: 1,
+        a: Csr::zero(4, 3),
+        b: Csr::zero(6, 4),
+        force_route: Some(Route::Sharded { n_devices: 3 }),
+    });
+    coord.submit(Job {
+        id: 2,
+        a: Csr::identity(7),
+        b: Csr::zero(6, 4),
+        force_route: Some(Route::Sharded { n_devices: 3 }),
+    });
+    for _ in 0..2 {
+        let r = coord.recv().expect("failures must be reported, not hung");
+        assert!(r.c.is_err(), "job {} must fail", r.id);
+        assert!(matches!(r.route, Route::Sharded { .. }));
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_failed, 2);
+    assert_eq!(snap.shard_subjobs, 0, "nothing was fanned out for unplannable jobs");
+    // the workers are untouched: a healthy job still completes
+    let m = Csr::identity(8);
+    coord.submit(Job { id: 3, a: m.clone(), b: m.clone(), force_route: None });
+    assert!(coord.recv().unwrap().c.is_ok());
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_with_in_flight_shard_barriers_drains_cleanly() {
+    let coord = Coordinator::start(3, Router::default(), None);
+    let mut rng = Rng::new(77);
+    let a = opsparse::gen::uniform::Uniform { n: 400, per_row: 8, jitter: 4 }.generate(&mut rng);
+    let jobs = 4u64;
+    for id in 0..jobs {
+        coord.submit(Job {
+            id,
+            a: a.clone(),
+            b: a.clone(),
+            force_route: Some(Route::Sharded { n_devices: 8 }),
+        });
+    }
+    // shut down immediately: stop markers queue behind the 32 in-flight
+    // sub-jobs, so every barrier must drain before the workers exit —
+    // no hang, no stranded parent
+    let metrics = Arc::clone(&coord.metrics);
+    coord.shutdown();
+    let snap = metrics.snapshot();
+    assert_eq!(snap.jobs_completed + snap.jobs_failed, jobs, "every parent got a verdict");
+    assert_eq!(snap.jobs_completed, jobs, "healthy jobs drain to completion");
+    assert_eq!(snap.shard_subjobs, jobs * 8, "every sub-job was executed");
 }
 
 #[test]

@@ -3,11 +3,17 @@
 //! binning partitions, and simulator sanity over random traces.
 
 use opsparse::baselines::Library;
+use opsparse::gen::banded::Banded;
+use opsparse::gen::kron::Kron;
+use opsparse::gen::powerlaw::PowerLaw;
+use opsparse::gen::uniform::Uniform;
 use opsparse::gpusim::{simulate, BlockWork, Kernel, Trace, V100};
 use opsparse::sparse::ops::{add, scale, transpose};
+use opsparse::sparse::stats::nprod_per_row;
 use opsparse::sparse::Csr;
 use opsparse::spgemm::pipeline::{multiply, OpSparseConfig};
 use opsparse::spgemm::reference::spgemm_reference;
+use opsparse::spgemm::sharded::ShardPlan;
 use opsparse::util::prop::check;
 use opsparse::util::rng::Rng;
 
@@ -224,4 +230,109 @@ fn prop_simulated_kernels_all_complete() {
             Ok(())
         },
     );
+}
+
+/// One matrix per generator family, sized by the harness's shrink knob.
+/// (`Kron` sizes by scale, so the knob maps to 2^7..2^8 vertices.)
+fn plan_family_matrix(rng: &mut Rng, fam: usize, n: usize) -> Csr {
+    match fam {
+        0 => Uniform { n, per_row: 6, jitter: 3 }.generate(rng),
+        1 => PowerLaw {
+            n,
+            alpha: 2.0,
+            max_row: (n / 4).max(8),
+            mean_row: 4.0,
+            hub_frac: 0.2,
+            forced_giant_rows: 1,
+        }
+        .generate(rng),
+        2 => Banded { n, per_row: 12, band: 10, contiguous_frac: 0.8 }.generate(rng),
+        _ => Kron {
+            scale: if n >= 200 { 8 } else { 7 },
+            edge_factor: 6,
+            a: 0.57,
+            b: 0.19,
+            c: 0.19,
+        }
+        .generate(rng),
+    }
+}
+
+#[test]
+fn prop_shard_plan_invariants_across_generator_families() {
+    // `ShardPlan::balanced` invariants, checked per generator family so
+    // every family is guaranteed covered (not left to the seed sequence):
+    //  * bounds partition `0..n_rows` exactly, non-decreasing;
+    //  * shards are non-empty unless rows ran out (empty shards only as
+    //    a suffix once every row is consumed);
+    //  * per-shard cost stays within the greedy balance tolerance
+    //    (fair share + one max-row per boundary of slack);
+    //  * the plan is deterministic for a fixed input.
+    for (fam, name) in
+        [(0usize, "uniform"), (1, "powerlaw"), (2, "banded"), (3, "kron")]
+    {
+        check(
+            &format!("shard-plan-{name}"),
+            10,
+            240,
+            |rng, size| {
+                let a = plan_family_matrix(rng, fam, size.max(8));
+                let shards = 1 + rng.below(12) as usize;
+                (a, shards)
+            },
+            |(a, shards)| {
+                let nprod = nprod_per_row(a, a);
+                let plan = ShardPlan::balanced(&nprod, *shards);
+                let m = plan.n_shards();
+                if m != *shards {
+                    return Err(format!("asked {shards} shards, planned {m}"));
+                }
+                let bounds = plan.bounds();
+                if bounds.len() != m + 1 {
+                    return Err(format!("{} bounds for {m} shards", bounds.len()));
+                }
+                if bounds[0] != 0 || plan.rows() != a.rows {
+                    return Err(format!(
+                        "bounds [{}..{}] must span 0..{}",
+                        bounds[0],
+                        plan.rows(),
+                        a.rows
+                    ));
+                }
+                for w in bounds.windows(2) {
+                    if w[0] > w[1] {
+                        return Err(format!("bounds decrease: {} -> {}", w[0], w[1]));
+                    }
+                }
+                for s in 0..m {
+                    let (lo, hi) = plan.range(s);
+                    if lo == hi && lo != a.rows {
+                        return Err(format!(
+                            "interior empty shard {s} at row {lo} of {}",
+                            a.rows
+                        ));
+                    }
+                }
+                let total: u64 = nprod.iter().map(|&p| p as u64 + 1).sum();
+                if plan.costs().iter().sum::<u64>() != total {
+                    return Err("costs must partition the total work".into());
+                }
+                let max_row = nprod.iter().map(|&p| p as u64 + 1).max().unwrap_or(1);
+                let tolerance = total / m as u64 + m as u64 * max_row;
+                for (s, &cost) in plan.costs().iter().enumerate() {
+                    if cost > tolerance {
+                        return Err(format!(
+                            "shard {s} cost {cost} exceeds tolerance {tolerance} \
+                             (total {total}, max row {max_row}, {m} shards)"
+                        ));
+                    }
+                }
+                let again = ShardPlan::balanced(&nprod, *shards);
+                if again.bounds() != plan.bounds() || again.costs() != plan.costs() {
+                    return Err("plan must be deterministic for a fixed input".into());
+                }
+                Ok(())
+            },
+        );
+    }
 }
