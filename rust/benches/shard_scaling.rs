@@ -1,18 +1,27 @@
 //! `cargo bench --bench shard_scaling` — row-sharded multi-device SpGEMM
-//! on a power-law matrix at 1/2/4/8 shards: per-device makespan, modeled
-//! `B`-broadcast and `C`-gather interconnect costs, planned and measured
-//! load imbalance, and (honest, communication-charged) scaling
-//! efficiency vs one device.
+//! on a power-law matrix at 1/2/4/8 shards: per-device makespan under the
+//! serial **and** the overlapped (pipelined broadcast/compute/gather)
+//! schedule, modeled `B`-broadcast and `C`-gather interconnect costs,
+//! planned and measured load imbalance, and both (honest,
+//! communication-charged) scaling-efficiency columns.
 //!
 //! Env:
 //! * `OPSPARSE_SCALE=tiny|small|medium` (default small)
 //! * `OPSPARSE_INTERCONNECT=pcie|nvlink|none` (default pcie)
-//! * `OPSPARSE_BENCH_JSON=<path>` — also record the rows as JSON; CI
+//! * `OPSPARSE_OVERLAP=off` — disable the pipelined schedule (ablation)
+//! * `OPSPARSE_OVERLAP_CHUNK_KB=<n>` — broadcast chunk size (default 1024)
+//! * `OPSPARSE_BENCH_JSON=<path>` — record the full rows as JSON; CI
 //!   writes `BENCH_shards.json` this way, next to `BENCH_seed.json`.
+//! * `OPSPARSE_BENCH_JSON_OVERLAP=<path>` — record the serial-vs-
+//!   overlapped makespan ablation (`BENCH_overlap.json` in CI, where a
+//!   blocking check asserts overlapped ≤ serial on every row).
+//!
+//! The bench itself also enforces the overlap invariant: an overlapped
+//! makespan above the serial one is a model regression and fails the run.
 
-use opsparse::bench::{figures, write_shard_scaling_json};
+use opsparse::bench::{figures, write_overlap_json, write_shard_scaling_json};
 use opsparse::gen::suite::SuiteScale;
-use opsparse::gpusim::Interconnect;
+use opsparse::gpusim::{Interconnect, OverlapConfig};
 
 fn main() {
     let scale = std::env::var("OPSPARSE_SCALE")
@@ -23,8 +32,22 @@ fn main() {
         Ok(name) => Interconnect::parse_opt(name).expect("pcie|nvlink|none"),
         Err(_) => Some(Interconnect::pcie3()),
     };
-    let rows = figures::shard_scaling_with(scale, ic.as_ref()).expect("shard_scaling bench");
+    let overlap = OverlapConfig::from_env();
+    let rows =
+        figures::shard_scaling_with(scale, ic.as_ref(), overlap).expect("shard_scaling bench");
+    for r in &rows {
+        assert!(
+            r.overlapped_makespan_ns <= r.makespan_ns + 1e-6,
+            "{} shards: overlapped makespan {:.1}us exceeds serial {:.1}us — model regression",
+            r.shards,
+            r.overlapped_makespan_ns / 1e3,
+            r.makespan_ns / 1e3
+        );
+    }
     if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON") {
         write_shard_scaling_json(&path, scale, &rows).expect("write bench json");
+    }
+    if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON_OVERLAP") {
+        write_overlap_json(&path, scale, &rows).expect("write overlap json");
     }
 }

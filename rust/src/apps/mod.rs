@@ -21,10 +21,11 @@ pub mod msbfs;
 
 use crate::coordinator::cache::PatternCache;
 use crate::coordinator::router::Router;
-use crate::gpusim::{DevicePool, PoolStats};
+use crate::gpusim::{DevicePool, OverlapConfig, PoolStats};
+use crate::sparse::stats::nprod_per_row;
 use crate::sparse::Csr;
 use crate::spgemm::pipeline::{multiply_reuse, OpSparseConfig, SpgemmOutput, SymbolicReuse};
-use crate::spgemm::sharded::multiply_sharded_pooled;
+use crate::spgemm::sharded::{multiply_sharded_with, ShardPlan, ShardReuse};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -75,14 +76,49 @@ impl SpgemmContext {
     /// router is attached and the working set exceeds its device budget,
     /// the multiply runs row-sharded; the returned output's trace is then
     /// the serialized concatenation of the per-device traces (see
-    /// [`crate::spgemm::ShardedOutput::into_output`]) and the symbolic
-    /// cache is bypassed (shard-aware cache keys are a ROADMAP item).
+    /// [`crate::spgemm::ShardedOutput::into_output`]). The symbolic
+    /// cache covers this path too, with **shard-aware keys**
+    /// `(fingerprint(A[lo..hi]), fingerprint(B))`: repeated sharded
+    /// traffic — AMG re-setup on an operator that only fits sharded —
+    /// skips every per-shard symbolic phase on the second pass.
     pub fn multiply(&mut self, a: &Csr, b: &Csr) -> Result<SpgemmOutput> {
         // shard_count, not route(): the context has no block engine, so
         // the router's tile-fill sampling would be wasted on every call
         if let Some(n_devices) = self.router.as_ref().and_then(|r| r.shard_count(a, b)) {
             self.sharded_multiplies += 1;
-            let out = multiply_sharded_pooled(a, b, &self.cfg, n_devices, &mut self.shard_pools)?;
+            let n = n_devices.max(1);
+            while self.shard_pools.len() < n {
+                self.shard_pools.push(DevicePool::new());
+            }
+            // the plan is a pure function of (A, B, n), so a re-setup on
+            // the same operands recuts identical shard bounds and the
+            // per-shard fingerprints key the same cache entries
+            let plan = ShardPlan::balanced(&nprod_per_row(a, b), n);
+            let b_fp = b.pattern_fingerprint();
+            let keys: Vec<(u64, u64)> = (0..n)
+                .map(|s| {
+                    let (lo, hi) = plan.range(s);
+                    (a.pattern_fingerprint_rows(lo, hi), b_fp)
+                })
+                .collect();
+            let reuse = ShardReuse {
+                entries: keys.iter().map(|&k| self.cache.lookup(k)).collect(),
+            };
+            let out = multiply_sharded_with(
+                a,
+                b,
+                &self.cfg,
+                &plan,
+                Some(&mut self.shard_pools[..n]),
+                OverlapConfig::default(),
+                Some(&reuse),
+            )?;
+            for (s, key) in keys.into_iter().enumerate() {
+                if reuse.entries[s].is_none() {
+                    self.cache
+                        .insert(key, Arc::new(SymbolicReuse::from_output(&out.shards[s])));
+                }
+            }
             return Ok(out.into_output());
         }
         let key = (a.pattern_fingerprint(), b.pattern_fingerprint());
@@ -94,12 +130,16 @@ impl SpgemmContext {
         Ok(out)
     }
 
-    /// Symbolic phases skipped so far.
+    /// Symbolic phases skipped so far. Unlike the coordinator's metrics
+    /// (which split whole-job and shard-level counters), a context has
+    /// one cache and one counter pair: a sharded multiply over `n`
+    /// devices contributes `n` lookups here, one per shard.
     pub fn sym_cache_hits(&self) -> u64 {
         self.cache.hits()
     }
 
-    /// Symbolic phases computed (and cached) so far.
+    /// Symbolic phases computed (and cached) so far (same granularity
+    /// note as [`SpgemmContext::sym_cache_hits`]).
     pub fn sym_cache_misses(&self) -> u64 {
         self.cache.misses()
     }
@@ -169,9 +209,17 @@ mod tests {
         assert_eq!(out.c, gold.c, "sharded context must not change the numerics");
         assert_eq!(ctx.sharded_multiplies(), 1);
         // the second identical multiply recycles every per-device pool
+        // AND replays every shard's symbolic phase via the shard-aware
+        // cache keys (the AMG re-setup property)
+        let hits_before = ctx.sym_cache_hits();
         let out2 = ctx.multiply(&a, &a).unwrap();
         assert_eq!(out2.c, gold.c);
         assert_eq!(out2.trace.malloc_calls(), 0, "warm shard pools must be malloc-free");
         assert!(ctx.shard_pool_stats().iter().any(|s| s.pool_hits > 0));
+        assert!(out2.symbolic_skipped, "every shard must replay its symbolic phase");
+        assert!(
+            ctx.sym_cache_hits() >= hits_before + 2,
+            "per-shard entries must hit on the repeat"
+        );
     }
 }

@@ -84,11 +84,15 @@ pub fn write_shard_scaling_json(
     ));
     for (i, r) in rows.iter().enumerate() {
         out.push_str(&format!(
-            "    {{\"shards\": {}, \"makespan_ns\": {:.1}, \"compute_ns\": {:.1}, \
+            "    {{\"shards\": {}, \"makespan_ns\": {:.1}, \"overlapped_makespan_ns\": {:.1}, \
+             \"overlap_saved_ns\": {:.1}, \"compute_ns\": {:.1}, \
              \"broadcast_ns\": {:.1}, \"gather_ns\": {:.1}, \"plan_imbalance\": {:.4}, \
-             \"time_imbalance\": {:.4}, \"speedup\": {:.4}, \"efficiency\": {:.4}}}{}\n",
+             \"time_imbalance\": {:.4}, \"speedup\": {:.4}, \"efficiency\": {:.4}, \
+             \"efficiency_overlapped\": {:.4}}}{}\n",
             r.shards,
             r.makespan_ns,
+            r.overlapped_makespan_ns,
+            r.overlap_saved_ns,
             r.compute_ns,
             r.broadcast_ns,
             r.gather_ns,
@@ -96,6 +100,37 @@ pub fn write_shard_scaling_json(
             r.time_imbalance,
             r.speedup,
             r.efficiency,
+            r.efficiency_overlapped,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Serialize the serial-vs-overlapped makespan ablation as JSON:
+/// `BENCH_overlap.json`, uploaded by CI next to `BENCH_shards.json` and
+/// consumed by the blocking overlapped-≤-serial check there. One row per
+/// shard count, nothing else — the file is a contract, keep it small.
+pub fn write_overlap_json(
+    path: &str,
+    scale: crate::gen::suite::SuiteScale,
+    rows: &[figures::ShardScalingRow],
+) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\n  \"bench\": \"overlap_ablation\",\n  \"scale\": \"{scale:?}\",\n  \"rows\": [\n"
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"shards\": {}, \"serial_makespan_ns\": {:.1}, \
+             \"overlapped_makespan_ns\": {:.1}, \"overlap_saved_ns\": {:.1}}}{}\n",
+            r.shards,
+            r.makespan_ns,
+            r.overlapped_makespan_ns,
+            r.overlap_saved_ns,
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }

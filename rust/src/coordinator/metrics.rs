@@ -29,6 +29,11 @@ pub struct Metrics {
     pub sym_cache_hits: AtomicU64,
     /// Jobs that computed (and cached) their symbolic phase.
     pub sym_cache_misses: AtomicU64,
+    /// Shard sub-jobs whose symbolic phase was replayed via the
+    /// shard-aware cache keys `(fingerprint(A[lo..hi]), fingerprint(B))`.
+    pub shard_sym_cache_hits: AtomicU64,
+    /// Shard sub-jobs that computed (and cached) their symbolic phase.
+    pub shard_sym_cache_misses: AtomicU64,
     /// Real `cudaMalloc` calls issued through the workers' device pools.
     pub pool_device_mallocs: AtomicU64,
     /// Bytes those mallocs reserved (the fleet's grow-only footprint).
@@ -98,6 +103,8 @@ impl Metrics {
             nprod_total: self.nprod_total.load(Ordering::Relaxed),
             sym_cache_hits: self.sym_cache_hits.load(Ordering::Relaxed),
             sym_cache_misses: self.sym_cache_misses.load(Ordering::Relaxed),
+            shard_sym_cache_hits: self.shard_sym_cache_hits.load(Ordering::Relaxed),
+            shard_sym_cache_misses: self.shard_sym_cache_misses.load(Ordering::Relaxed),
             pool_device_mallocs: self.pool_device_mallocs.load(Ordering::Relaxed),
             pool_device_bytes: self.pool_device_bytes.load(Ordering::Relaxed),
             pool_hits: self.pool_hits.load(Ordering::Relaxed),
@@ -124,6 +131,9 @@ pub struct MetricsSnapshot {
     pub nprod_total: u64,
     pub sym_cache_hits: u64,
     pub sym_cache_misses: u64,
+    /// Shard sub-jobs replayed via shard-aware pattern-cache keys.
+    pub shard_sym_cache_hits: u64,
+    pub shard_sym_cache_misses: u64,
     pub pool_device_mallocs: u64,
     pub pool_device_bytes: u64,
     pub pool_hits: u64,
@@ -162,10 +172,12 @@ impl std::fmt::Display for MetricsSnapshot {
         writeln!(f, "nprod total: {}", self.nprod_total)?;
         writeln!(
             f,
-            "symbolic cache: hits={} misses={} ({:.0}% skipped)",
+            "symbolic cache: hits={} misses={} ({:.0}% skipped); shard-level hits={} misses={}",
             self.sym_cache_hits,
             self.sym_cache_misses,
-            100.0 * self.sym_cache_hit_rate()
+            100.0 * self.sym_cache_hit_rate(),
+            self.shard_sym_cache_hits,
+            self.shard_sym_cache_misses
         )?;
         writeln!(
             f,

@@ -71,6 +71,10 @@ struct ShardTask {
     hi: usize,
     a: Arc<Csr>,
     b: Arc<Csr>,
+    /// `B`'s pattern fingerprint, computed once at submit so every shard
+    /// sub-job can key the shard-aware symbolic cache without re-hashing
+    /// the shared operand.
+    b_fp: u64,
 }
 
 enum WorkerMsg {
@@ -149,9 +153,11 @@ impl Coordinator {
                         Ok(WorkerMsg::RunShard(task)) => {
                             // one shard of a sharded parent: slice the row
                             // range, run the full pipeline, report to the
-                            // reassembly barrier. The pattern cache is not
-                            // consulted: entries are keyed on whole
-                            // operands, not shards (ROADMAP item). A
+                            // reassembly barrier. The pattern cache IS
+                            // consulted, with shard-aware keys
+                            // `(fingerprint(A[lo..hi]), fingerprint(B))`,
+                            // so repeated sharded traffic (AMG re-setup)
+                            // replays each shard's symbolic phase. A
                             // panicking shard (poisoned rows reachable
                             // only from this shard's slice) must cost the
                             // parent job, not this worker thread.
@@ -160,7 +166,31 @@ impl Coordinator {
                             let result = std::panic::catch_unwind(
                                 std::panic::AssertUnwindSafe(|| {
                                     let a_s = row_slice(&task.a, task.lo, task.hi)?;
-                                    multiply_reuse(&a_s, &task.b, &cfg, Some(&mut pool), None)
+                                    let key = (a_s.pattern_fingerprint(), task.b_fp);
+                                    let reuse = cache.lookup(key);
+                                    if reuse.is_some() {
+                                        metrics
+                                            .shard_sym_cache_hits
+                                            .fetch_add(1, Ordering::Relaxed);
+                                    } else {
+                                        metrics
+                                            .shard_sym_cache_misses
+                                            .fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    let out = multiply_reuse(
+                                        &a_s,
+                                        &task.b,
+                                        &cfg,
+                                        Some(&mut pool),
+                                        reuse.as_deref(),
+                                    )?;
+                                    if reuse.is_none() {
+                                        cache.insert(
+                                            key,
+                                            Arc::new(SymbolicReuse::from_output(&out)),
+                                        );
+                                    }
+                                    Ok(out)
                                 }),
                             );
                             let r = match result {
@@ -318,6 +348,9 @@ impl Coordinator {
                 };
                 let a = Arc::new(job.a);
                 let b = Arc::new(job.b);
+                // hash B's pattern once per parent job; every shard
+                // sub-job reuses it for its shard-aware cache key
+                let b_fp = b.pattern_fingerprint();
                 let barrier = Arc::new(ShardBarrier::new(
                     job.id,
                     route,
@@ -338,6 +371,7 @@ impl Coordinator {
                             hi,
                             a: Arc::clone(&a),
                             b: Arc::clone(&b),
+                            b_fp,
                         }))
                         .expect("hash workers alive");
                 }
@@ -522,6 +556,48 @@ mod tests {
             "shards must spread over the pool, got {} worker(s)",
             snap.shard_workers
         );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn repeated_sharded_pattern_hits_shard_aware_cache() {
+        // one worker, so every shard sub-job lands on the same cache:
+        // the first sharded job computes (and caches) each shard's
+        // symbolic phase, every repeat replays all of them
+        let coord = Coordinator::start(1, Router::default(), None);
+        let mut rng = Rng::new(77);
+        let a = Uniform { n: 400, per_row: 8, jitter: 4 }.generate(&mut rng);
+        let gold = spgemm_reference(&a, &a);
+        for id in 0..3u64 {
+            coord.submit(Job {
+                id,
+                a: a.clone(),
+                b: a.clone(),
+                force_route: Some(Route::Sharded { n_devices: 4 }),
+            });
+        }
+        for _ in 0..3 {
+            let r = coord.recv().unwrap();
+            assert!(r.c.unwrap().approx_eq(&gold, 1e-12));
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(
+            snap.shard_sym_cache_hits + snap.shard_sym_cache_misses,
+            12,
+            "every shard sub-job consults the shard-aware cache"
+        );
+        assert!(
+            snap.shard_sym_cache_misses <= 4,
+            "only the first job may compute symbolic phases, got {} misses",
+            snap.shard_sym_cache_misses
+        );
+        assert!(
+            snap.shard_sym_cache_hits >= 8,
+            "both repeats must replay every shard, got {} hits",
+            snap.shard_sym_cache_hits
+        );
+        // whole-job cache counters are untouched by shard sub-jobs
+        assert_eq!(snap.sym_cache_hits + snap.sym_cache_misses, 0);
         coord.shutdown();
     }
 

@@ -24,8 +24,8 @@ pub mod timeline;
 pub mod trace;
 
 pub use device::{DeviceParams, V100};
-pub use multi::{Interconnect, MultiDevice, Topology};
+pub use multi::{Interconnect, MultiDevice, OverlapConfig, OverlapReport, Topology, MAX_CHUNKS};
 pub use pool::{DevicePool, PoolStats};
-pub use scheduler::simulate;
-pub use timeline::Timeline;
+pub use scheduler::{simulate, simulate_with_arrivals};
+pub use timeline::{LaneSpan, OverlapLanes, Timeline};
 pub use trace::{BlockWork, Kernel, Trace, TraceOp};

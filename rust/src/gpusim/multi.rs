@@ -16,10 +16,78 @@
 //! [`MultiDevice::simulate`] keeps the transfer-free view (both costs 0).
 
 use super::device::DeviceParams;
-use super::scheduler::simulate;
-use super::timeline::Timeline;
+use super::scheduler::{simulate, simulate_with_arrivals};
+use super::timeline::{LaneSpan, OverlapLanes, Timeline};
 use super::trace::Trace;
 use anyhow::{ensure, Result};
+
+/// Upper bound on broadcast chunks per transfer: real pipelines bound
+/// their staging-buffer count, and past this the overlap granularity
+/// gains nothing while the event graph keeps growing.
+pub const MAX_CHUNKS: usize = 64;
+
+/// Knobs of the overlapped (pipelined broadcast/compute/gather)
+/// multi-device execution model. `chunk_bytes` sets the row-panel
+/// granularity the `B` broadcast is streamed at: coarse chunks delay the
+/// first symbolic kernels (less overlap), fine chunks pipeline tighter
+/// but add per-chunk forwarding steps on a ring (see
+/// [`Interconnect::chunk_arrivals`]). `enabled: false` keeps the serial
+/// three-phase model everywhere — the honest ablation baseline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverlapConfig {
+    pub enabled: bool,
+    /// Target broadcast chunk size in bytes (clamped to [`MAX_CHUNKS`]
+    /// chunks per transfer). Default 1 MiB.
+    pub chunk_bytes: usize,
+}
+
+impl Default for OverlapConfig {
+    fn default() -> Self {
+        OverlapConfig { enabled: true, chunk_bytes: 1 << 20 }
+    }
+}
+
+impl OverlapConfig {
+    /// The serial baseline: no chunking, no overlap.
+    pub fn off() -> OverlapConfig {
+        OverlapConfig { enabled: false, ..OverlapConfig::default() }
+    }
+
+    /// Defaults overridden by the environment: `OPSPARSE_OVERLAP=off|0`
+    /// disables overlap (case-insensitive; `on|1|true` enables, anything
+    /// else keeps the default rather than silently enabling),
+    /// `OPSPARSE_OVERLAP_CHUNK_KB=<n>` sets the chunk size (benches and
+    /// the CLI read both; an unparseable, zero, or overflowing value
+    /// keeps the default).
+    pub fn from_env() -> OverlapConfig {
+        let mut cfg = OverlapConfig::default();
+        if let Ok(v) = std::env::var("OPSPARSE_OVERLAP") {
+            match v.to_ascii_lowercase().as_str() {
+                "on" | "1" | "true" => cfg.enabled = true,
+                "off" | "0" | "false" => cfg.enabled = false,
+                _ => {}
+            }
+        }
+        if let Some(bytes) = std::env::var("OPSPARSE_OVERLAP_CHUNK_KB")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&kb| kb > 0)
+            .and_then(|kb| kb.checked_mul(1024))
+        {
+            cfg.chunk_bytes = bytes;
+        }
+        cfg
+    }
+
+    /// Chunks a `bytes`-sized broadcast splits into under this config
+    /// (1 when disabled — a single chunk is the unpipelined transfer).
+    pub fn chunks_for(&self, bytes: usize) -> usize {
+        if !self.enabled || bytes == 0 {
+            return 1;
+        }
+        bytes.div_ceil(self.chunk_bytes.max(1)).clamp(1, MAX_CHUNKS)
+    }
+}
 
 /// Fan-out pattern of the inter-device links.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -144,6 +212,192 @@ impl Interconnect {
         // ring, the link into the root carries every non-root byte
         Ok(hops * self.latency_ns() + nonroot / self.bandwidth_gbps)
     }
+
+    /// Arrival time of each broadcast chunk on each device when `bytes`
+    /// stream from the root in `chunks` row panels: `result[d][k]` is the
+    /// instant chunk `k` is resident on device `d` (the root, device 0,
+    /// owns the data — all zeros). The last chunk's arrival on the last
+    /// device never exceeds [`Interconnect::broadcast_ns`]: chunking
+    /// re-times *when* data lands, it does not invent bandwidth.
+    ///
+    /// * `OneToAll`: the root's link sends chunk-major (chunk 0 to every
+    ///   peer, then chunk 1, …) over an open DMA stream per peer — the
+    ///   per-message latency is a stream-head cost, paid once per peer,
+    ///   and the final arrival lands exactly at the serial broadcast
+    ///   time.
+    /// * `Ring`: chunks forward hop by hop, pipelined (hop `h` forwards
+    ///   chunk `k` while receiving `k+1`). Each chunk pays the hop
+    ///   latency at every hop — the latency-per-chunk side of the
+    ///   trade-off — so with fewer chunks than devices the pipeline
+    ///   cannot fill and the model falls back to the serial
+    ///   scatter-allgather schedule (delivering chunks at its steady
+    ///   rate), whichever finishes first.
+    pub fn chunk_arrivals(
+        &self,
+        bytes: usize,
+        n_devices: usize,
+        chunks: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        self.check()?;
+        let k = chunks.max(1);
+        if n_devices <= 1 {
+            return Ok(vec![vec![0.0; k]; n_devices.max(1)]);
+        }
+        let peers = n_devices - 1;
+        let cx = bytes as f64 / k as f64 / self.bandwidth_gbps;
+        let lat = self.latency_ns();
+        let mut arr = vec![vec![0.0f64; k]; n_devices];
+        match self.topology {
+            Topology::OneToAll => {
+                // link event e = c*peers + (p-1): one chunk to one peer;
+                // per-peer stream-head latency charged on the link at the
+                // peer's first chunk, so the total equals broadcast_ns
+                for (c, p) in (0..k).flat_map(|c| (1..n_devices).map(move |p| (c, p))) {
+                    let e = c * peers + (p - 1);
+                    arr[p][c] = (e + 1) as f64 * cx + (e + 1).min(peers) as f64 * lat;
+                }
+            }
+            Topology::Ring => {
+                let serial = self.broadcast_ns(bytes, n_devices)?;
+                // pipelined store-and-forward: chunk c reaches hop h at
+                // h hops of latency plus (h + c) chunk transfers
+                let sf_last = peers as f64 * lat + (peers + k - 1) as f64 * cx;
+                if sf_last <= serial + 1e-9 {
+                    for (p, row) in arr.iter_mut().enumerate().skip(1) {
+                        for (c, slot) in row.iter_mut().enumerate() {
+                            *slot = p as f64 * lat + (p + c) as f64 * cx;
+                        }
+                    }
+                } else {
+                    // too few chunks to fill the ring pipeline: the bulk
+                    // scatter-allgather (the serial algorithm) is faster;
+                    // it streams at a steady rate after the latency fill
+                    let fill = peers as f64 * lat;
+                    let steady = (serial - fill).max(0.0) / k as f64;
+                    for (p, row) in arr.iter_mut().enumerate().skip(1) {
+                        for (c, slot) in row.iter_mut().enumerate() {
+                            *slot = fill * p as f64 / peers as f64 + (c + 1) as f64 * steady;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(arr)
+    }
+
+    /// Closed-form overlapped-makespan estimate on `n_devices` uniform
+    /// devices, for planning (no traces): the broadcast streams in
+    /// [`OverlapConfig::chunks_for`] chunks, each device runs
+    /// `sym_fraction` of `per_device_compute_ns` as chunk-gated symbolic
+    /// segments and the rest after the last chunk, and finished devices
+    /// stream-gather their `c_block_bytes` entry. This is the same event
+    /// model [`MultiDevice::simulate_overlapped`] replays on real traces,
+    /// collapsed onto the router's scalar compute proxy — so the router's
+    /// shard-count decision and the simulator agree on *shape*. Never
+    /// exceeds `broadcast + compute + gather` (the serial schedule).
+    pub fn overlapped_estimate_ns(
+        &self,
+        b_bytes: usize,
+        per_device_compute_ns: f64,
+        sym_fraction: f64,
+        c_block_bytes: &[usize],
+        overlap: &OverlapConfig,
+    ) -> Result<f64> {
+        let n = c_block_bytes.len();
+        if n <= 1 {
+            return Ok(per_device_compute_ns);
+        }
+        let chunks = overlap.chunks_for(b_bytes);
+        let arrivals = self.chunk_arrivals(b_bytes, n, chunks)?;
+        let serial_bcast = self.broadcast_ns(b_bytes, n)?;
+        let frac = sym_fraction.clamp(0.0, 1.0);
+        let seg = per_device_compute_ns * frac / chunks as f64;
+        let rest = per_device_compute_ns * (1.0 - frac);
+        let finish: Vec<f64> = (0..n)
+            .map(|d| {
+                let mut t = 0.0f64;
+                for &a in &arrivals[d] {
+                    t = t.max(a) + seg;
+                }
+                (t + rest).min(serial_bcast + per_device_compute_ns)
+            })
+            .collect();
+        let (done, _) = self.stream_gather(&finish, c_block_bytes)?;
+        let serial =
+            serial_bcast + per_device_compute_ns + self.gather_ns(c_block_bytes)?;
+        Ok(done.max(finish.iter().cloned().fold(0.0, f64::max)).min(serial))
+    }
+
+    /// Streaming `C` gather: device `d`'s row block departs the moment
+    /// the device finishes computing (`finish_ns[d]`) instead of waiting
+    /// for the whole fleet — early finishers gather under the
+    /// stragglers' compute. Blocks serialize on the link into the root in
+    /// finish order; `OneToAll` pays the per-block latency on that link
+    /// (summing to the serial gather's latency term), a `Ring` pipelines
+    /// the forwarding hops so the latency rides outside the link
+    /// occupancy. Returns the gather completion time and one transfer
+    /// lane span per moved block. Never later than waiting for the
+    /// slowest device and then paying [`Interconnect::gather_ns`].
+    pub fn stream_gather(
+        &self,
+        finish_ns: &[f64],
+        block_bytes: &[usize],
+    ) -> Result<(f64, Vec<LaneSpan>)> {
+        self.check()?;
+        ensure!(
+            finish_ns.len() == block_bytes.len(),
+            "{} finish times for {} blocks",
+            finish_ns.len(),
+            block_bytes.len()
+        );
+        let max_finish = finish_ns.iter().cloned().fold(0.0, f64::max);
+        if finish_ns.len() <= 1 {
+            return Ok((max_finish, Vec::new()));
+        }
+        let lat = self.latency_ns();
+        let mut order: Vec<usize> = (1..finish_ns.len()).collect();
+        order.sort_by(|&a, &b| finish_ns[a].partial_cmp(&finish_ns[b]).unwrap().then(a.cmp(&b)));
+        let mut busy = 0.0f64;
+        let mut spans = Vec::with_capacity(order.len());
+        for d in order {
+            let xfer = block_bytes[d] as f64 / self.bandwidth_gbps;
+            let (start, end) = match self.topology {
+                // the root's link carries the block and its message
+                // latency back to back
+                Topology::OneToAll => {
+                    let s = busy.max(finish_ns[d]);
+                    (s, s + lat + xfer)
+                }
+                // forwarding latency overlaps with other blocks in
+                // flight; only the transfer occupies the root's link
+                Topology::Ring => {
+                    let s = busy.max(finish_ns[d] + lat);
+                    (s, s + xfer)
+                }
+            };
+            busy = end;
+            spans.push(LaneSpan::new(format!("gather d{d}"), start, end));
+        }
+        Ok((busy.max(finish_ns[0]), spans))
+    }
+}
+
+/// Result of one overlapped (pipelined) multi-device simulation,
+/// attached to a [`MultiDevice`] by
+/// [`MultiDevice::simulate_overlapped`]. The serial figures on the
+/// parent stay what they were — this report carries the pipelined view.
+#[derive(Clone, Debug)]
+pub struct OverlapReport {
+    /// End-to-end pipelined critical path: chunked broadcast feeding
+    /// per-device compute, early finishers gathering under stragglers.
+    /// Never exceeds the serial [`MultiDevice::makespan_ns`].
+    pub makespan_ns: f64,
+    /// Broadcast chunks the `B` transfer streamed as.
+    pub chunks: usize,
+    /// Per-device compute completion under chunk-arrival dependencies.
+    pub device_finish_ns: Vec<f64>,
+    /// Transfer/compute lane occupancy (diagram + overlap metrics).
+    pub lanes: OverlapLanes,
 }
 
 /// Per-device simulation results of one multi-device run, plus the
@@ -158,6 +412,9 @@ pub struct MultiDevice {
     /// Modeled `C` row-block gather cost after compute (0 when simulated
     /// without an interconnect, or with a single device).
     pub gather_ns: f64,
+    /// The pipelined view, when simulated via
+    /// [`MultiDevice::simulate_overlapped`].
+    pub overlap: Option<OverlapReport>,
 }
 
 impl MultiDevice {
@@ -172,6 +429,7 @@ impl MultiDevice {
             timelines: traces.into_iter().map(|t| simulate(t, dev)).collect(),
             broadcast_ns: 0.0,
             gather_ns: 0.0,
+            overlap: None,
         }
     }
 
@@ -201,8 +459,109 @@ impl MultiDevice {
         Ok(md)
     }
 
+    /// The overlapped (event/dependency) counterpart of
+    /// [`MultiDevice::simulate_with_interconnect`]: the `B` broadcast
+    /// streams as row-panel chunks whose arrivals gate each device's
+    /// trace at its [`crate::gpusim::TraceOp::AwaitChunk`] markers
+    /// (already-received panels feed the first symbolic kernels), and
+    /// each device's `C` row block starts gathering the moment that
+    /// device finishes, while stragglers are still computing. The chunk
+    /// count is read off the traces' annotations (see
+    /// `spgemm::sharded::multiply_sharded_with` and [`OverlapConfig`]);
+    /// an unannotated trace conservatively waits for its device's full
+    /// copy of `B`.
+    ///
+    /// The serial fields (`broadcast_ns`, `gather_ns`, the timelines, and
+    /// therefore [`MultiDevice::makespan_ns`]) still describe the serial
+    /// three-phase schedule of the *same* traces, so one call yields the
+    /// honest before/after pair; the pipelined figure is
+    /// [`MultiDevice::overlapped_makespan_ns`]. It can never exceed the
+    /// serial makespan: a device that would somehow lose by pipelining
+    /// falls back to deferring compute until the bulk broadcast lands —
+    /// the serial schedule is always available — and the model charges
+    /// whichever finishes first.
+    pub fn simulate_overlapped<'a, I>(
+        traces: I,
+        dev: &DeviceParams,
+        ic: &Interconnect,
+        b_bytes: usize,
+        c_block_bytes: &[usize],
+    ) -> Result<MultiDevice>
+    where
+        I: IntoIterator<Item = &'a Trace>,
+    {
+        let traces: Vec<&Trace> = traces.into_iter().collect();
+        let mut md = MultiDevice::simulate_with_interconnect(
+            traces.iter().copied(),
+            dev,
+            ic,
+            b_bytes,
+            c_block_bytes,
+        )?;
+        let n = md.n_devices();
+        let chunks = traces.iter().map(|t| t.chunk_deps()).max().unwrap_or(0).max(1);
+        let arrivals = ic.chunk_arrivals(b_bytes, n, chunks)?;
+        let chunk_xfer = b_bytes as f64 / chunks as f64 / ic.bandwidth_gbps;
+
+        let mut finish = Vec::with_capacity(n);
+        let mut lanes = OverlapLanes::default();
+        for (d, trace) in traces.iter().enumerate() {
+            let serial_ns = md.timelines[d].total_ns;
+            let full_arrival = arrivals[d].last().copied().unwrap_or(0.0);
+            let f = if trace.chunk_deps() > 0 {
+                let piped = simulate_with_arrivals(trace, dev, &arrivals[d]).total_ns;
+                // the serial fallback (wait for the bulk transfer, then
+                // run undisturbed) bounds the pipelined schedule
+                piped.min(md.broadcast_ns + serial_ns)
+            } else {
+                full_arrival + serial_ns
+            };
+            // the compute lane must match the finish model: an
+            // unannotated device idles until its full copy lands
+            let start = if d == 0 {
+                0.0
+            } else if trace.chunk_deps() > 0 {
+                arrivals[d].first().copied().unwrap_or(0.0)
+            } else {
+                full_arrival
+            };
+            lanes.compute.push(LaneSpan::new(format!("dev{d}"), start, f));
+            if d > 0 {
+                for (c, &a) in arrivals[d].iter().enumerate() {
+                    lanes.transfer.push(LaneSpan::new(
+                        format!("bcast d{d} c{c}"),
+                        (a - chunk_xfer).max(0.0),
+                        a,
+                    ));
+                }
+            }
+            finish.push(f);
+        }
+        let (gather_done, gather_spans) = ic.stream_gather(&finish, c_block_bytes)?;
+        lanes.transfer.extend(gather_spans);
+        let makespan =
+            gather_done.max(finish.iter().cloned().fold(0.0, f64::max)).min(md.makespan_ns());
+        lanes.end_ns = makespan;
+        md.overlap =
+            Some(OverlapReport { makespan_ns: makespan, chunks, device_finish_ns: finish, lanes });
+        Ok(md)
+    }
+
     pub fn n_devices(&self) -> usize {
         self.timelines.len()
+    }
+
+    /// Pipelined end-to-end critical path, when this run was simulated
+    /// via [`MultiDevice::simulate_overlapped`] (≤ the serial
+    /// [`MultiDevice::makespan_ns`] by construction).
+    pub fn overlapped_makespan_ns(&self) -> Option<f64> {
+        self.overlap.as_ref().map(|o| o.makespan_ns)
+    }
+
+    /// Serial-minus-overlapped makespan: the transfer time the pipelined
+    /// schedule hid behind compute (0 when simulated serially).
+    pub fn overlap_saved_ns(&self) -> f64 {
+        self.overlapped_makespan_ns().map_or(0.0, |o| self.makespan_ns() - o)
     }
 
     /// Compute critical path: the slowest device's wall time (devices
@@ -380,6 +739,129 @@ mod tests {
         // root block (index 0) never moves
         let g = ic.gather_ns(&[1_000_000, 100, 200]).unwrap();
         assert!((g - 300.0).abs() < 1e-9, "got {g}");
+    }
+
+    #[test]
+    fn chunk_arrivals_monotone_and_bounded_by_serial_broadcast() {
+        let bytes = 16 << 20;
+        for topo in [Topology::OneToAll, Topology::Ring] {
+            let ic = Interconnect { bandwidth_gbps: 12.0, latency_us: 3.0, topology: topo };
+            for n in [2usize, 4, 8] {
+                for chunks in [1usize, 2, 7, 16, 64] {
+                    let serial = ic.broadcast_ns(bytes, n).unwrap();
+                    let arr = ic.chunk_arrivals(bytes, n, chunks).unwrap();
+                    assert_eq!(arr.len(), n);
+                    assert!(arr[0].iter().all(|&a| a == 0.0), "root owns B");
+                    for (d, row) in arr.iter().enumerate().skip(1) {
+                        assert_eq!(row.len(), chunks);
+                        for w in row.windows(2) {
+                            assert!(w[0] <= w[1] + 1e-9, "{topo:?} d{d}: arrivals not monotone");
+                        }
+                        assert!(
+                            *row.last().unwrap() <= serial + 1e-6,
+                            "{topo:?} n={n} chunks={chunks} d{d}: last arrival {} > serial {serial}",
+                            row.last().unwrap()
+                        );
+                        assert!(row[0] > 0.0, "non-root chunk 0 must cost something");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_arrivals_land_earlier_than_the_bulk_transfer() {
+        let ic = Interconnect::pcie3();
+        let bulk = ic.chunk_arrivals(32 << 20, 4, 1).unwrap();
+        let fine = ic.chunk_arrivals(32 << 20, 4, 32).unwrap();
+        for d in 1..4 {
+            assert!(
+                fine[d][0] < bulk[d][0] / 4.0,
+                "first panel should land long before the bulk copy: {} vs {}",
+                fine[d][0],
+                bulk[d][0]
+            );
+        }
+    }
+
+    #[test]
+    fn stream_gather_never_beats_physics_nor_loses_to_serial() {
+        let ic = Interconnect { bandwidth_gbps: 10.0, latency_us: 2.0, topology: Topology::OneToAll };
+        let finish = [5_000.0, 9_000.0, 1_000.0, 14_000.0];
+        let blocks = [4096usize, 50_000, 50_000, 50_000];
+        let (done, spans) = ic.stream_gather(&finish, &blocks).unwrap();
+        // early finisher (device 2) goes first, under device 3's compute
+        assert_eq!(spans[0].what, "gather d2");
+        assert!(spans[0].start >= 1_000.0);
+        // serial bound: wait for the slowest device, then the full gather
+        let serial_done = 14_000.0 + ic.gather_ns(&blocks).unwrap();
+        assert!(done <= serial_done + 1e-6, "{done} vs serial {serial_done}");
+        // physics bound: the last device's block still has to move
+        assert!(done >= 14_000.0 + 50_000.0 / 10.0);
+        // mismatched lengths error
+        assert!(ic.stream_gather(&finish[..2], &blocks).is_err());
+    }
+
+    #[test]
+    fn overlapped_simulation_beats_serial_and_is_bounded_by_it() {
+        use crate::gpusim::trace::TraceOp;
+        let mk = |nblocks: usize, chunks: usize| {
+            let mut t = trace_with_blocks(nblocks);
+            // annotate: all chunk waits ahead of the launch
+            let mut ops = Vec::new();
+            for c in 0..chunks {
+                ops.push(TraceOp::AwaitChunk { chunk: c, step: "symbolic" });
+            }
+            ops.append(&mut t.ops);
+            t.ops = ops;
+            t
+        };
+        let ic = Interconnect::pcie3();
+        let b_bytes = 64 << 20; // make the broadcast matter
+        let c_blocks = [1 << 20; 4];
+        for chunks in [1usize, 4, 16] {
+            let traces: Vec<Trace> = (0..4).map(|_| mk(1000, chunks)).collect();
+            let md =
+                MultiDevice::simulate_overlapped(traces.iter(), &V100, &ic, b_bytes, &c_blocks)
+                    .unwrap();
+            let serial = md.makespan_ns();
+            let over = md.overlapped_makespan_ns().unwrap();
+            assert!(over <= serial + 1e-6, "chunks={chunks}: {over} > serial {serial}");
+            assert!(md.overlap_saved_ns() >= -1e-6);
+            // the root never waits, so some overlap always materializes
+            assert!(over < serial, "chunks={chunks}: pipelining must save something here");
+            let report = md.overlap.as_ref().unwrap();
+            assert_eq!(report.chunks, chunks);
+            assert_eq!(report.device_finish_ns.len(), 4);
+            assert!(report.lanes.overlapped_busy_ns() > 0.0, "lanes must overlap");
+            assert!(report.lanes.end_ns <= serial + 1e-6);
+        }
+    }
+
+    #[test]
+    fn overlapped_estimate_bounded_by_serial_schedule() {
+        for topo in [Topology::OneToAll, Topology::Ring] {
+            let ic = Interconnect { bandwidth_gbps: 12.0, latency_us: 4.0, topology: topo };
+            for n in [2usize, 4, 8] {
+                let blocks = vec![256 << 10; n];
+                for chunk_kb in [64usize, 512, 4096] {
+                    let overlap =
+                        OverlapConfig { enabled: true, chunk_bytes: chunk_kb << 10 };
+                    let compute = 2_000_000.0;
+                    let est = ic
+                        .overlapped_estimate_ns(8 << 20, compute, 0.35, &blocks, &overlap)
+                        .unwrap();
+                    let serial = ic.broadcast_ns(8 << 20, n).unwrap()
+                        + compute
+                        + ic.gather_ns(&blocks).unwrap();
+                    assert!(
+                        est <= serial + 1e-6,
+                        "{topo:?} n={n} chunk={chunk_kb}KB: {est} > {serial}"
+                    );
+                    assert!(est >= compute, "cannot finish before the compute itself");
+                }
+            }
+        }
     }
 
     #[test]

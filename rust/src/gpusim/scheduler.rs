@@ -230,7 +230,24 @@ impl<'d> DeviceSim<'d> {
 }
 
 /// Simulate a trace on the device model, returning the full timeline.
+/// [`crate::gpusim::trace::TraceOp::AwaitChunk`] ops are free here (no
+/// arrival times): annotated traces replay exactly like unannotated ones.
 pub fn simulate(trace: &Trace, dev: &DeviceParams) -> Timeline {
+    simulate_with_arrivals(trace, dev, &[])
+}
+
+/// [`simulate`] with inter-device broadcast chunk arrival times: an
+/// `AwaitChunk { chunk }` op blocks the **host** until
+/// `chunk_arrival_ns[chunk]` (already-launched kernels keep executing,
+/// like a `cudaStreamWaitEvent` on the copy stream). Missing indices
+/// count as already-arrived. This is the per-device half of the
+/// overlapped multi-device model
+/// ([`crate::gpusim::MultiDevice::simulate_overlapped`]).
+pub fn simulate_with_arrivals(
+    trace: &Trace,
+    dev: &DeviceParams,
+    chunk_arrival_ns: &[f64],
+) -> Timeline {
     let mut tl = Timeline::default();
     let mut host = 0.0f64;
     let mut sim = DeviceSim::new(dev);
@@ -337,6 +354,22 @@ pub fn simulate(trace: &Trace, dev: &DeviceParams) -> Timeline {
                     end: host + d,
                 });
                 host += d;
+            }
+            TraceOp::AwaitChunk { chunk, step } => {
+                // host blocks until the broadcast chunk lands; the device
+                // keeps draining already-launched kernels (that overlap is
+                // the point). Zero-length waits leave no span, so a serial
+                // replay of an annotated trace is bit-identical.
+                let arrival = chunk_arrival_ns.get(*chunk).copied().unwrap_or(0.0);
+                if arrival > host {
+                    tl.host.push(HostSpan {
+                        what: format!("awaitChunk({chunk})"),
+                        step: *step,
+                        start: host,
+                        end: arrival,
+                    });
+                    host = arrival;
+                }
             }
             TraceOp::MemcpyD2H { bytes, step } => {
                 // synchronous copy: waits for the device
@@ -487,6 +520,36 @@ mod tests {
         }
         let busy: f64 = tl.sm_busy_ns.iter().sum();
         assert!(busy > 0.0);
+    }
+
+    #[test]
+    fn await_chunk_blocks_host_but_not_resident_kernels() {
+        // launch, then await a late-arriving chunk, then launch again:
+        // kernel a keeps executing through the wait, kernel b's start is
+        // pushed past the arrival
+        let mut t = Trace::new();
+        t.launch(kernel("a", 0, 300, 100_000));
+        t.await_chunk(0, "symbolic");
+        t.launch(kernel("b", 1, 300, 100_000));
+        let arrival = 1_000_000.0; // 1ms, far past a's launch
+        let tl = simulate_with_arrivals(&t, &V100, &[arrival]);
+        // the wait shows up as a host span ending at the arrival
+        let wait = tl.host.iter().find(|h| h.what.starts_with("awaitChunk")).unwrap();
+        assert!((wait.end - arrival).abs() < 1e-6);
+        // kernel a started before the arrival (it was already launched)
+        assert!(tl.kernels[0].start < arrival);
+        // kernel b could not launch until the chunk landed
+        assert!(tl.kernels[1].start > arrival);
+
+        // without arrivals the annotated trace replays identically to the
+        // unannotated one (bit-identical serial baseline)
+        let mut clean = Trace::new();
+        clean.launch(kernel("a", 0, 300, 100_000));
+        clean.launch(kernel("b", 1, 300, 100_000));
+        let tl_annotated = simulate(&t, &V100);
+        let tl_clean = simulate(&clean, &V100);
+        assert_eq!(tl_annotated.total_ns, tl_clean.total_ns);
+        assert_eq!(tl_annotated.host.len(), tl_clean.host.len(), "no zero-length wait spans");
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub struct Timeline {
 }
 
 /// Union length of a set of `[start, end)` intervals.
-fn union_ns(mut spans: Vec<(f64, f64)>) -> f64 {
+pub(crate) fn union_ns(mut spans: Vec<(f64, f64)>) -> f64 {
     spans.retain(|&(s, e)| e > s && s.is_finite() && e.is_finite());
     spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     let mut total = 0.0;
@@ -179,6 +179,109 @@ impl Timeline {
     }
 }
 
+/// One occupied interval on an overlapped-execution lane (a broadcast
+/// chunk in flight, a device computing, a gather block on the wire).
+#[derive(Clone, Debug)]
+pub struct LaneSpan {
+    pub what: String,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl LaneSpan {
+    pub fn new(what: impl Into<String>, start: f64, end: f64) -> LaneSpan {
+        LaneSpan { what: what.into(), start, end }
+    }
+}
+
+/// Lane occupancy of one overlapped multi-device run: the **transfer**
+/// lane (broadcast chunks + gather blocks on the interconnect) and the
+/// **compute** lane (per-device busy windows). The serial model keeps
+/// these lanes disjoint — transfer, then compute, then transfer — so the
+/// time both lanes are busy at once is exactly what overlapping bought
+/// (see [`OverlapLanes::overlapped_busy_ns`] and
+/// `MultiDevice::overlap_saved_ns`).
+#[derive(Clone, Debug, Default)]
+pub struct OverlapLanes {
+    /// Interconnect activity: broadcast chunk arrivals and gather blocks.
+    pub transfer: Vec<LaneSpan>,
+    /// Per-device compute windows (first issued op to device drain).
+    pub compute: Vec<LaneSpan>,
+    /// End of the overlapped timeline (the pipelined makespan).
+    pub end_ns: f64,
+}
+
+impl OverlapLanes {
+    fn union(spans: &[LaneSpan]) -> f64 {
+        union_ns(spans.iter().map(|s| (s.start, s.end)).collect())
+    }
+
+    /// Wall time the interconnect lane is busy.
+    pub fn transfer_busy_ns(&self) -> f64 {
+        Self::union(&self.transfer)
+    }
+
+    /// Wall time at least one device is computing.
+    pub fn compute_busy_ns(&self) -> f64 {
+        Self::union(&self.compute)
+    }
+
+    /// Wall time both lanes are busy at once — the transfer cost hidden
+    /// behind compute. Zero on a serial (non-overlapped) timeline.
+    pub fn overlapped_busy_ns(&self) -> f64 {
+        let mut boundaries: Vec<f64> = Vec::new();
+        for s in self.transfer.iter().chain(&self.compute) {
+            boundaries.push(s.start);
+            boundaries.push(s.end);
+        }
+        boundaries.retain(|b| b.is_finite());
+        boundaries.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        boundaries.dedup();
+        let busy = |spans: &[LaneSpan], lo: f64, hi: f64| {
+            spans.iter().any(|s| s.start < hi && s.end > lo)
+        };
+        boundaries
+            .windows(2)
+            .filter(|w| busy(&self.transfer, w[0], w[1]) && busy(&self.compute, w[0], w[1]))
+            .map(|w| w[1] - w[0])
+            .sum()
+    }
+
+    /// Occupancy of (transfer, compute) as fractions of the makespan.
+    pub fn occupancy(&self) -> (f64, f64) {
+        if self.end_ns <= 0.0 {
+            return (0.0, 0.0);
+        }
+        (self.transfer_busy_ns() / self.end_ns, self.compute_busy_ns() / self.end_ns)
+    }
+
+    /// Render the two lanes as a text diagram (`width` columns): one
+    /// `XFER` row plus one row per compute span.
+    pub fn render(&self, width: usize) -> String {
+        let mut out = String::new();
+        if self.end_ns <= 0.0 {
+            return "empty lanes\n".into();
+        }
+        let scale = width as f64 / self.end_ns;
+        let mut row = |label: &str, spans: &[&LaneSpan], c: char| {
+            let mut cells = vec![' '; width + 1];
+            for s in spans {
+                let b = ((s.start * scale) as usize).min(width);
+                let e = (((s.end * scale) as usize).max(b + 1)).min(width + 1);
+                for slot in cells.iter_mut().take(e).skip(b) {
+                    *slot = c;
+                }
+            }
+            out.push_str(&format!("{label:<6}|{}\n", cells.iter().collect::<String>()));
+        };
+        row("XFER", &self.transfer.iter().collect::<Vec<_>>(), '▒');
+        for s in &self.compute {
+            row(&s.what, &[s], '█');
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,5 +328,34 @@ mod tests {
         let g = tl.render_gantt(40);
         assert!(g.contains("k [numeric]"));
         assert!(g.contains('M'));
+    }
+
+    #[test]
+    fn lane_occupancy_and_overlap() {
+        let lanes = OverlapLanes {
+            transfer: vec![LaneSpan::new("bcast", 0.0, 10.0), LaneSpan::new("gather", 25.0, 30.0)],
+            compute: vec![LaneSpan::new("dev0", 5.0, 25.0)],
+            end_ns: 30.0,
+        };
+        assert!((lanes.transfer_busy_ns() - 15.0).abs() < 1e-9);
+        assert!((lanes.compute_busy_ns() - 20.0).abs() < 1e-9);
+        // transfer ∩ compute: [5, 10) only
+        assert!((lanes.overlapped_busy_ns() - 5.0).abs() < 1e-9);
+        let (t, c) = lanes.occupancy();
+        assert!((t - 0.5).abs() < 1e-9);
+        assert!((c - 2.0 / 3.0).abs() < 1e-9);
+        let diagram = lanes.render(30);
+        assert!(diagram.contains("XFER"));
+        assert!(diagram.contains("dev0"));
+    }
+
+    #[test]
+    fn disjoint_lanes_have_zero_overlap() {
+        let lanes = OverlapLanes {
+            transfer: vec![LaneSpan::new("bcast", 0.0, 10.0)],
+            compute: vec![LaneSpan::new("dev0", 10.0, 20.0)],
+            end_ns: 20.0,
+        };
+        assert_eq!(lanes.overlapped_busy_ns(), 0.0);
     }
 }

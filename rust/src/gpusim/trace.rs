@@ -71,6 +71,14 @@ pub enum TraceOp {
     /// Async host-to-device copy from pinned memory (e.g. uploading a
     /// cached `C.rpt`): host pays the transfer, the device keeps running.
     MemcpyH2D { bytes: usize, step: &'static str },
+    /// Dependency on an inter-device broadcast chunk (a row panel of the
+    /// replicated operand): the host blocks until chunk `chunk` has
+    /// arrived over the interconnect, then resumes issuing work.
+    /// Already-launched kernels keep executing — this is how chunked
+    /// broadcasts overlap with the first symbolic kernels. Under a plain
+    /// [`crate::gpusim::simulate`] (no arrival times) it is free, so
+    /// annotated traces replay bit-identically on the serial path.
+    AwaitChunk { chunk: usize, step: &'static str },
 }
 
 impl TraceOp {
@@ -82,6 +90,7 @@ impl TraceOp {
             TraceOp::DeviceSync { step } => *step,
             TraceOp::MemcpyD2H { step, .. } => *step,
             TraceOp::MemcpyH2D { step, .. } => *step,
+            TraceOp::AwaitChunk { step, .. } => *step,
         }
     }
 }
@@ -119,6 +128,23 @@ impl Trace {
 
     pub fn memcpy_h2d(&mut self, bytes: usize, step: &'static str) {
         self.ops.push(TraceOp::MemcpyH2D { bytes, step });
+    }
+
+    pub fn await_chunk(&mut self, chunk: usize, step: &'static str) {
+        self.ops.push(TraceOp::AwaitChunk { chunk, step });
+    }
+
+    /// Number of broadcast chunks this trace depends on: highest
+    /// [`TraceOp::AwaitChunk`] index + 1, or 0 for an unannotated trace.
+    pub fn chunk_deps(&self) -> usize {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                TraceOp::AwaitChunk { chunk, .. } => Some(chunk + 1),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
     }
 
     /// Total bytes requested through `cudaMalloc` (metadata accounting,

@@ -5,8 +5,9 @@
 //! * `spgemm --a f.mtx [--b g.mtx] [--lib L] [--verify]` — one multiply
 //! * `suite [--scale s] [--verify]` — all 26 matrices, all libraries
 //! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|all>`
-//!   (`bench shards` takes `--interconnect pcie|nvlink|none` and
-//!   `--json <path>`)
+//!   (`bench shards` takes `--interconnect pcie|nvlink|none`,
+//!   `--overlap on|off`, `--chunk-kb <KiB>`, `--json <path>`, and
+//!   `--overlap-json <path>`)
 //! * `serve [--jobs n] [--workers w]` — coordinator demo (job queue)
 //! * `sim-case webbase` — §6.3.4 / §6.3.5 case-study timeline
 //!
@@ -164,9 +165,31 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             let name = flags.get("interconnect").map(|s| s.as_str()).unwrap_or("pcie");
             let ic = opsparse::gpusim::Interconnect::parse_opt(name)
                 .with_context(|| format!("unknown interconnect {name} (pcie|nvlink|none)"))?;
-            let rows = figures::shard_scaling_with(scale, ic.as_ref())?;
+            // overlap defaults come from the environment
+            // (OPSPARSE_OVERLAP / OPSPARSE_OVERLAP_CHUNK_KB); flags win
+            let mut overlap = opsparse::gpusim::OverlapConfig::from_env();
+            if let Some(v) = flags.get("overlap") {
+                overlap.enabled = match v.to_ascii_lowercase().as_str() {
+                    "on" | "1" | "true" => true,
+                    "off" | "0" | "false" => false,
+                    other => bail!("unknown --overlap value {other} (on|off)"),
+                };
+            }
+            if let Some(kb) = flags.get("chunk-kb") {
+                let kb: usize = kb.parse().context("--chunk-kb <KiB>")?;
+                if kb == 0 {
+                    bail!("--chunk-kb must be positive");
+                }
+                overlap.chunk_bytes = kb
+                    .checked_mul(1024)
+                    .with_context(|| format!("--chunk-kb {kb} overflows"))?;
+            }
+            let rows = figures::shard_scaling_with(scale, ic.as_ref(), overlap)?;
             if let Some(path) = flags.get("json") {
                 opsparse::bench::write_shard_scaling_json(path, scale, &rows)?;
+            }
+            if let Some(path) = flags.get("overlap-json") {
+                opsparse::bench::write_overlap_json(path, scale, &rows)?;
             }
         }
         "perf" => {
@@ -213,7 +236,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     } else {
         None
     };
-    let coord = Coordinator::start(workers, Router::default(), factory);
+    // startup calibration: fit ns_per_prod from simulated timelines so
+    // the shard-vs-stay decision tracks the cost model (cached fit)
+    let router_cfg = opsparse::coordinator::RouterConfig::calibrated();
+    println!("router: calibrated ns_per_prod = {:.3}", router_cfg.ns_per_prod);
+    let coord = Coordinator::start(workers, Router::new(router_cfg), factory);
     // mixed workload: alternating blocky (FEM) and scattered matrices
     let mut rng = Rng::new(2026);
     let t0 = std::time::Instant::now();
@@ -302,7 +329,8 @@ fn usage() -> ! {
            spgemm   --a f.mtx [--b g.mtx] [--lib opsparse|nsparse|speck|cusparse] [--verify]\n\
            suite    [--scale s] [--verify]\n\
            bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|all> [--scale s]\n\
-                    shards also takes [--interconnect pcie|nvlink|none] [--json out.json]\n\
+                    shards also takes [--interconnect pcie|nvlink|none] [--overlap on|off]\n\
+                    [--chunk-kb n] [--json out.json] [--overlap-json out.json]\n\
            serve    [--jobs n] [--workers w] [--no-engine]\n\
            sim-case webbase [--scale s]\n\
            list     (suite matrix names)"

@@ -152,6 +152,35 @@ impl Csr {
         h
     }
 
+    /// [`Csr::pattern_fingerprint`] of the row block `[lo, hi)` without
+    /// materializing the slice: identical to
+    /// `row_slice(self, lo, hi).pattern_fingerprint()` (the rebased
+    /// `rpt`, the sliced `col`, and the slice's shape are hashed), so
+    /// shard-aware cache keys can be computed from the whole operand —
+    /// no allocation, `O(hi - lo + nnz of the block)`.
+    pub fn pattern_fingerprint_rows(&self, lo: usize, hi: usize) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(h: &mut u64, x: u64) {
+            for b in x.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(PRIME);
+            }
+        }
+        let (lo, hi) = (lo.min(self.rows), hi.min(self.rows));
+        let (lo, hi) = (lo, hi.max(lo));
+        let base = self.rpt[lo];
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        mix(&mut h, (hi - lo) as u64);
+        mix(&mut h, self.cols as u64);
+        for &r in &self.rpt[lo..=hi] {
+            mix(&mut h, (r - base) as u64);
+        }
+        for &c in &self.col[self.rpt[lo]..self.rpt[hi]] {
+            mix(&mut h, c as u64);
+        }
+        h
+    }
+
     /// Maximum nnz over all rows ("Max nnz/row" column of Table 3).
     pub fn max_row_nnz(&self) -> usize {
         (0..self.rows).map(|i| self.row_nnz(i)).max().unwrap_or(0)
@@ -296,6 +325,24 @@ mod tests {
         let mut wide = Csr::identity(2);
         wide.cols = 3;
         assert_ne!(i2.pattern_fingerprint(), wide.pattern_fingerprint());
+    }
+
+    #[test]
+    fn range_fingerprint_matches_materialized_slice() {
+        let a = sample();
+        for (lo, hi) in [(0, 3), (0, 1), (1, 3), (2, 2), (0, 0)] {
+            let sliced = crate::sparse::ops::row_slice(&a, lo, hi).unwrap();
+            assert_eq!(
+                a.pattern_fingerprint_rows(lo, hi),
+                sliced.pattern_fingerprint(),
+                "range [{lo},{hi})"
+            );
+        }
+        // the whole-matrix range equals the plain fingerprint
+        assert_eq!(a.pattern_fingerprint_rows(0, a.rows), a.pattern_fingerprint());
+        // different ranges of the same matrix disagree (they are
+        // different patterns)
+        assert_ne!(a.pattern_fingerprint_rows(0, 1), a.pattern_fingerprint_rows(1, 2));
     }
 
     #[test]

@@ -17,7 +17,8 @@ pub mod symbolic;
 pub use kernel_tables::{BinningRanges, KernelConfig, NumericRanges, SymbolicRanges};
 pub use pipeline::{multiply, multiply_reuse, OpSparseConfig, SpgemmOutput, SymbolicReuse};
 pub use sharded::{
-    multiply_sharded, multiply_sharded_pooled, multiply_sharded_with, ShardPlan, ShardedOutput,
+    annotate_chunk_deps, multiply_sharded, multiply_sharded_pooled, multiply_sharded_with,
+    ShardPlan, ShardReuse, ShardedOutput,
 };
 
 /// Which hash-probe implementation to use (paper §5.2 / Fig 9).

@@ -46,13 +46,15 @@
 //! ```
 
 use super::hash_table::ProbeStats;
-use super::pipeline::{multiply_reuse, OpSparseConfig, SpgemmOutput};
+use super::pipeline::{multiply_reuse, OpSparseConfig, SpgemmOutput, SymbolicReuse};
+use crate::gpusim::multi::OverlapConfig;
 use crate::gpusim::pool::DevicePool;
-use crate::gpusim::trace::Trace;
+use crate::gpusim::trace::{Trace, TraceOp};
 use crate::sparse::ops::row_slice;
 use crate::sparse::stats::nprod_per_row;
 use crate::sparse::Csr;
 use anyhow::{anyhow, ensure, Result};
+use std::sync::Arc;
 
 /// A partition of `A`'s rows into contiguous shards.
 ///
@@ -147,6 +149,18 @@ impl ShardPlan {
     }
 }
 
+/// Cached per-shard symbolic results for one `(A pattern, B pattern,
+/// plan)` triple: entry `s` replays shard `s`'s symbolic phase (see
+/// [`SymbolicReuse`]). Callers key entries on
+/// `(Csr::pattern_fingerprint_rows(lo, hi), fingerprint(B))` — the
+/// shard-aware cache keys — so repeated sharded traffic (AMG re-setup at
+/// scale) skips every per-shard symbolic phase, not just whole-operand
+/// repeats. Missing (`None`) entries compute normally.
+#[derive(Clone, Debug, Default)]
+pub struct ShardReuse {
+    pub entries: Vec<Option<Arc<SymbolicReuse>>>,
+}
+
 /// Result of a sharded multiply: the stitched matrix plus every shard's
 /// full pipeline output (one simulated device each).
 #[derive(Clone, Debug)]
@@ -160,6 +174,14 @@ pub struct ShardedOutput {
     pub shards: Vec<SpgemmOutput>,
     /// Total intermediate products across all shards.
     pub nprod: usize,
+    /// Overlap model the traces were annotated for (chunked-broadcast
+    /// dependencies; see [`annotate_chunk_deps`]).
+    pub overlap: OverlapConfig,
+    /// Device footprint of the replicated `B` operand — the broadcast
+    /// payload, kept so callers can feed
+    /// [`crate::gpusim::MultiDevice::simulate_overlapped`] without
+    /// holding on to `B`.
+    pub b_bytes: usize,
 }
 
 impl ShardedOutput {
@@ -186,6 +208,7 @@ impl ShardedOutput {
     /// concurrent makespan — use [`crate::gpusim::MultiDevice`] for that.
     pub fn into_output(self) -> SpgemmOutput {
         let ShardedOutput { c, shards, nprod, .. } = self;
+        let symbolic_skipped = !shards.is_empty() && shards.iter().all(|s| s.symbolic_skipped);
         let mut trace = Trace::new();
         let mut sym_stats = ProbeStats::default();
         let mut num_stats = ProbeStats::default();
@@ -203,7 +226,7 @@ impl ShardedOutput {
             sym_stats,
             num_stats,
             sym_fallback_rows: fallback,
-            symbolic_skipped: false,
+            symbolic_skipped,
         }
     }
 }
@@ -219,14 +242,16 @@ pub fn multiply_sharded(
 ) -> Result<ShardedOutput> {
     ensure!(a.cols == b.rows, "dimension mismatch: {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
     let plan = ShardPlan::balanced(&nprod_per_row(a, b), n_shards);
-    multiply_sharded_with(a, b, cfg, &plan, None)
+    multiply_sharded_with(a, b, cfg, &plan, None, OverlapConfig::default(), None)
 }
 
 /// [`multiply_sharded`] for a warm owner: balances a fresh plan and runs
 /// it over `pools`, growing the vector to `n_shards` first (one
-/// [`DevicePool`] per device, recycled across calls). This is the one
-/// sharded dispatch path shared by the coordinator's hash workers and
-/// [`crate::apps::SpgemmContext`].
+/// [`DevicePool`] per device, recycled across calls). A convenience
+/// wrapper with the default overlap model and no per-shard symbolic
+/// reuse — callers that need the plan up front (shard-aware cache keys,
+/// as [`crate::apps::SpgemmContext`] does) or custom overlap/reuse call
+/// [`multiply_sharded_with`] directly.
 pub fn multiply_sharded_pooled(
     a: &Csr,
     b: &Csr,
@@ -240,26 +265,39 @@ pub fn multiply_sharded_pooled(
         pools.push(DevicePool::new());
     }
     let plan = ShardPlan::balanced(&nprod_per_row(a, b), n);
-    multiply_sharded_with(a, b, cfg, &plan, Some(&mut pools[..n]))
+    multiply_sharded_with(a, b, cfg, &plan, Some(&mut pools[..n]), OverlapConfig::default(), None)
 }
 
-/// [`multiply_sharded`] with an explicit plan and optional per-device
+/// [`multiply_sharded`] with an explicit plan, optional per-device
 /// pools (one [`DevicePool`] per shard, recycled across calls by a warm
-/// owner such as a coordinator worker or an [`crate::apps::SpgemmContext`]).
+/// owner such as a coordinator worker or an
+/// [`crate::apps::SpgemmContext`]), an [`OverlapConfig`] governing the
+/// chunked-broadcast trace annotation, and optional per-shard symbolic
+/// reuse entries ([`ShardReuse`], the shard-aware pattern-cache hook).
 ///
 /// Shards execute concurrently on host threads — the service-layer
 /// fan-out — and are stitched back in shard order, so the result is
-/// deterministic regardless of scheduling.
+/// deterministic regardless of scheduling, and **independent of
+/// `overlap`**: overlap only annotates each shard's trace with
+/// [`TraceOp::AwaitChunk`] dependencies (symbolic work gated on the
+/// arrival of `B`'s row panels) for
+/// [`crate::gpusim::MultiDevice::simulate_overlapped`]; the serial
+/// simulation path ignores them, and the numerics never see them.
 pub fn multiply_sharded_with(
     a: &Csr,
     b: &Csr,
     cfg: &OpSparseConfig,
     plan: &ShardPlan,
     pools: Option<&mut [DevicePool]>,
+    overlap: OverlapConfig,
+    reuse: Option<&ShardReuse>,
 ) -> Result<ShardedOutput> {
     ensure!(a.cols == b.rows, "dimension mismatch: {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
     ensure!(plan.rows() == a.rows, "plan covers {} rows, A has {}", plan.rows(), a.rows);
     let n = plan.n_shards();
+    if let Some(r) = reuse {
+        ensure!(r.entries.len() == n, "{} reuse entries for {} shards", r.entries.len(), n);
+    }
     let mut slots: Vec<Option<&mut DevicePool>> = match pools {
         Some(ps) => {
             ensure!(ps.len() == n, "{} pools for {} shards", ps.len(), n);
@@ -274,9 +312,10 @@ pub fn multiply_sharded_with(
             .enumerate()
             .map(|(s, slot)| {
                 let (lo, hi) = plan.range(s);
+                let entry = reuse.and_then(|r| r.entries[s].clone());
                 scope.spawn(move || -> Result<SpgemmOutput> {
                     let a_s = row_slice(a, lo, hi)?;
-                    multiply_reuse(&a_s, b, cfg, slot, None)
+                    multiply_reuse(&a_s, b, cfg, slot, entry.as_deref())
                 })
             })
             .collect();
@@ -291,8 +330,82 @@ pub fn multiply_sharded_with(
         shards.push(r?);
     }
 
+    let b_bytes = b.device_bytes();
+    if overlap.enabled && n > 1 {
+        let chunks = overlap.chunks_for(b_bytes);
+        for s in &mut shards {
+            annotate_chunk_deps(&mut s.trace, chunks);
+        }
+    }
+
     let (c, nprod) = stitch_row_blocks(a.rows, b.cols, &shards)?;
-    Ok(ShardedOutput { c, plan: plan.clone(), shards, nprod })
+    Ok(ShardedOutput { c, plan: plan.clone(), shards, nprod, overlap, b_bytes })
+}
+
+/// Annotate one shard's device trace with its chunked-broadcast
+/// dependencies: `B` streams in as `chunks` row panels, the first
+/// B-reading launch (the setup `n_prod` kernel) waits on panel 0, the
+/// remaining panels gate evenly-spaced symbolic launches (already-
+/// received panels feed the kernels in between — OpSparse's §5.4
+/// overlap discipline applied to the interconnect), and every await
+/// precedes the numeric phase, which scans all of `B`. On a trace with
+/// no symbolic launches (a symbolic-reuse replay) the residual awaits
+/// gate the first numeric launch instead. Serial replays are unaffected:
+/// [`crate::gpusim::simulate`] treats the markers as free.
+pub fn annotate_chunk_deps(trace: &mut Trace, chunks: usize) {
+    let k = chunks.max(1);
+    let n_sym = trace
+        .ops
+        .iter()
+        .filter(|op| matches!(op, TraceOp::Launch(krn) if krn.step == "symbolic"))
+        .count();
+    // chunk -> how many awaits to emit before the i-th symbolic launch;
+    // chunk 0 precedes the first launch of any step, leftovers precede
+    // the first numeric launch
+    let mut before_sym = vec![0usize; n_sym];
+    let mut before_numeric = 0usize;
+    for c in 1..k {
+        let idx = c * n_sym / k;
+        if idx < n_sym {
+            before_sym[idx] += 1;
+        } else {
+            before_numeric += 1;
+        }
+    }
+    let mut ops = Vec::with_capacity(trace.ops.len() + k);
+    let mut next_chunk = 0usize;
+    let mut sym_seen = 0usize;
+    let mut numeric_seen = false;
+    for op in trace.ops.drain(..) {
+        if let TraceOp::Launch(krn) = &op {
+            if next_chunk == 0 {
+                ops.push(TraceOp::AwaitChunk { chunk: 0, step: krn.step });
+                next_chunk = 1;
+            }
+            if krn.step == "symbolic" {
+                for _ in 0..before_sym[sym_seen] {
+                    ops.push(TraceOp::AwaitChunk { chunk: next_chunk, step: "symbolic" });
+                    next_chunk += 1;
+                }
+                sym_seen += 1;
+            }
+            if krn.step == "numeric" && !numeric_seen {
+                numeric_seen = true;
+                for _ in 0..before_numeric {
+                    ops.push(TraceOp::AwaitChunk { chunk: next_chunk, step: "numeric" });
+                    next_chunk += 1;
+                }
+            }
+        }
+        ops.push(op);
+    }
+    // a trace with no launches at all (degenerate): park every await up
+    // front so the dependency count still reflects the broadcast
+    while next_chunk < k {
+        ops.push(TraceOp::AwaitChunk { chunk: next_chunk, step: "cleanup" });
+        next_chunk += 1;
+    }
+    trace.ops = ops;
 }
 
 /// Stitch per-shard `C` row blocks (in shard order) into one `rows`-row
@@ -404,9 +517,27 @@ mod tests {
         let cfg = OpSparseConfig::default();
         let plan = ShardPlan::balanced(&nprod_per_row(&a, &a), 3);
         let mut pools: Vec<DevicePool> = (0..3).map(|_| DevicePool::new()).collect();
-        let cold = multiply_sharded_with(&a, &a, &cfg, &plan, Some(&mut pools)).unwrap();
+        let cold = multiply_sharded_with(
+            &a,
+            &a,
+            &cfg,
+            &plan,
+            Some(&mut pools),
+            OverlapConfig::default(),
+            None,
+        )
+        .unwrap();
         assert!(cold.traces().any(|t| t.malloc_calls() > 0), "cold call grows the pools");
-        let warm = multiply_sharded_with(&a, &a, &cfg, &plan, Some(&mut pools)).unwrap();
+        let warm = multiply_sharded_with(
+            &a,
+            &a,
+            &cfg,
+            &plan,
+            Some(&mut pools),
+            OverlapConfig::default(),
+            None,
+        )
+        .unwrap();
         assert_eq!(warm.c, cold.c);
         for (s, t) in warm.traces().enumerate() {
             assert_eq!(t.malloc_calls(), 0, "shard {s} warm call must be malloc-free");
@@ -435,6 +566,101 @@ mod tests {
         let cfg = OpSparseConfig::default();
         let plan = ShardPlan::balanced(&nprod_per_row(&a, &a), 2);
         let mut pools = vec![DevicePool::new()];
-        assert!(multiply_sharded_with(&a, &a, &cfg, &plan, Some(&mut pools)).is_err());
+        assert!(multiply_sharded_with(
+            &a,
+            &a,
+            &cfg,
+            &plan,
+            Some(&mut pools),
+            OverlapConfig::default(),
+            None
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn overlap_annotation_covers_every_chunk_in_order() {
+        let mut rng = Rng::new(94);
+        let a = Uniform { n: 260, per_row: 8, jitter: 4 }.generate(&mut rng);
+        let cfg = OpSparseConfig::default();
+        let plan = ShardPlan::balanced(&nprod_per_row(&a, &a), 3);
+        let overlap = OverlapConfig { enabled: true, chunk_bytes: a.device_bytes() / 7 + 1 };
+        let out =
+            multiply_sharded_with(&a, &a, &cfg, &plan, None, overlap, None).unwrap();
+        let chunks = overlap.chunks_for(a.device_bytes());
+        assert!(chunks > 1, "test needs a chunked broadcast");
+        for (s, t) in out.traces().enumerate() {
+            assert_eq!(t.chunk_deps(), chunks, "shard {s} must wait on every chunk");
+            // awaits appear in increasing chunk order
+            let seen: Vec<usize> = t
+                .ops
+                .iter()
+                .filter_map(|op| match op {
+                    TraceOp::AwaitChunk { chunk, .. } => Some(*chunk),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(seen, (0..chunks).collect::<Vec<_>>(), "shard {s}");
+            // the numeric phase never precedes the last await
+            let last_await = t
+                .ops
+                .iter()
+                .rposition(|op| matches!(op, TraceOp::AwaitChunk { .. }))
+                .unwrap();
+            let first_numeric = t
+                .ops
+                .iter()
+                .position(|op| matches!(op, TraceOp::Launch(k) if k.step == "numeric"));
+            if let Some(fnum) = first_numeric {
+                assert!(last_await < fnum, "shard {s}: numeric launched before chunk arrival");
+            }
+        }
+        // overlap off (or a single device) leaves traces clean
+        let off = multiply_sharded_with(&a, &a, &cfg, &plan, None, OverlapConfig::off(), None)
+            .unwrap();
+        assert!(off.traces().all(|t| t.chunk_deps() == 0));
+        assert_eq!(off.c, out.c, "annotation must not change the numerics");
+    }
+
+    #[test]
+    fn shard_reuse_entries_replay_per_shard_symbolic() {
+        let mut rng = Rng::new(95);
+        let a = Uniform { n: 300, per_row: 9, jitter: 4 }.generate(&mut rng);
+        let cfg = OpSparseConfig::default();
+        let plan = ShardPlan::balanced(&nprod_per_row(&a, &a), 4);
+        let cold =
+            multiply_sharded_with(&a, &a, &cfg, &plan, None, OverlapConfig::default(), None)
+                .unwrap();
+        let reuse = ShardReuse {
+            entries: cold
+                .shards
+                .iter()
+                .map(|s| Some(Arc::new(SymbolicReuse::from_output(s))))
+                .collect(),
+        };
+        let warm = multiply_sharded_with(
+            &a,
+            &a,
+            &cfg,
+            &plan,
+            None,
+            OverlapConfig::default(),
+            Some(&reuse),
+        )
+        .unwrap();
+        assert_eq!(warm.c, cold.c, "shard-level symbolic replay must be bit-identical");
+        assert!(warm.shards.iter().all(|s| s.symbolic_skipped), "every shard must skip");
+        // entry count must match the plan
+        let short = ShardReuse { entries: vec![None; 3] };
+        assert!(multiply_sharded_with(
+            &a,
+            &a,
+            &cfg,
+            &plan,
+            None,
+            OverlapConfig::default(),
+            Some(&short)
+        )
+        .is_err());
     }
 }

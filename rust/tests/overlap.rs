@@ -1,0 +1,255 @@
+//! Overlapped multi-device execution: the pipelined
+//! broadcast/compute/gather schedule must only ever *re-time* the run,
+//! never change it.
+//!
+//! Two property layers:
+//!
+//! 1. **Makespan dominance.** For every generator family, topology, and
+//!    chunk size, the overlapped makespan is ≤ the serial makespan of
+//!    the same traces; equality is reserved for the cases with nothing
+//!    to pipeline (overlap disabled). On the power-law family with a
+//!    chunked broadcast over PCIe, the saving must be strictly positive
+//!    — the acceptance bar of the overlap PR.
+//! 2. **Bit-identity.** Sharded results with overlap on vs off are
+//!    identical (`rpt`/`col`/`val`) across the 4 generator families ×
+//!    1/2/4/8 shards: the overlap annotation is simulation metadata, not
+//!    a numeric path.
+
+use opsparse::gen::kron::Kron;
+use opsparse::gen::powerlaw::PowerLaw;
+use opsparse::gen::stencil::{Grid, Stencil};
+use opsparse::gen::uniform::Uniform;
+use opsparse::gpusim::{Interconnect, MultiDevice, OverlapConfig, Topology, V100};
+use opsparse::sparse::stats::nprod_per_row;
+use opsparse::sparse::Csr;
+use opsparse::spgemm::pipeline::OpSparseConfig;
+use opsparse::spgemm::sharded::{multiply_sharded_with, ShardPlan};
+use opsparse::util::prop::check;
+use opsparse::util::rng::Rng;
+
+/// One representative per generator family (the sharding test matrix).
+fn family_matrices() -> Vec<(&'static str, Csr)> {
+    let mut rng = Rng::new(4077);
+    vec![
+        ("uniform", Uniform { n: 400, per_row: 8, jitter: 4 }.generate(&mut rng)),
+        (
+            "powerlaw",
+            PowerLaw {
+                n: 500,
+                alpha: 2.0,
+                max_row: 60,
+                mean_row: 4.0,
+                hub_frac: 0.2,
+                forced_giant_rows: 1,
+            }
+            .generate(&mut rng),
+        ),
+        (
+            "stencil",
+            Stencil { n: 400, grid: Grid::D2, reach: 1, keep: 1.0, diagonal: true }
+                .generate(&mut rng),
+        ),
+        ("kron", Kron { scale: 8, edge_factor: 8, a: 0.57, b: 0.19, c: 0.19 }.generate(&mut rng)),
+    ]
+}
+
+fn sharded_with_overlap(
+    a: &Csr,
+    shards: usize,
+    overlap: OverlapConfig,
+) -> opsparse::spgemm::ShardedOutput {
+    let cfg = OpSparseConfig::default();
+    let plan = ShardPlan::balanced(&nprod_per_row(a, a), shards);
+    multiply_sharded_with(a, a, &cfg, &plan, None, overlap, None).expect("sharded multiply")
+}
+
+#[test]
+fn overlapped_makespan_never_exceeds_serial_for_all_topologies_and_chunks() {
+    let topologies = [
+        Interconnect::pcie3(),
+        Interconnect::nvlink(),
+        Interconnect { topology: Topology::Ring, ..Interconnect::pcie3() },
+        Interconnect { topology: Topology::OneToAll, ..Interconnect::nvlink() },
+    ];
+    for (name, a) in family_matrices() {
+        let b_bytes = a.device_bytes();
+        for shards in [2usize, 4, 8] {
+            for chunk_bytes in [b_bytes + 1, b_bytes / 3 + 1, 64 << 10, 8 << 10] {
+                let overlap = OverlapConfig { enabled: true, chunk_bytes };
+                let out = sharded_with_overlap(&a, shards, overlap);
+                for ic in &topologies {
+                    let md = MultiDevice::simulate_overlapped(
+                        out.traces(),
+                        &V100,
+                        ic,
+                        b_bytes,
+                        &out.c_block_bytes(),
+                    )
+                    .unwrap();
+                    let serial = md.makespan_ns();
+                    let over = md.overlapped_makespan_ns().unwrap();
+                    assert!(
+                        over <= serial + 1e-6,
+                        "{name}: {shards} shards, chunk {chunk_bytes}B, {:?} {:.0}GB/s: \
+                         overlapped {over} > serial {serial}",
+                        ic.topology,
+                        ic.bandwidth_gbps
+                    );
+                    assert!(md.overlap_saved_ns() >= -1e-6);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn overlapped_makespan_strictly_less_on_chunked_powerlaw_over_pcie() {
+    // the acceptance strictness clause: a power-law matrix, PCIe
+    // one-to-all, broadcast split into multiple chunks — pipelining must
+    // actually save wall time at every multi-device count
+    let (_, a) = family_matrices().into_iter().find(|(n, _)| *n == "powerlaw").unwrap();
+    let b_bytes = a.device_bytes();
+    let overlap = OverlapConfig { enabled: true, chunk_bytes: (b_bytes / 6).max(1) };
+    assert!(overlap.chunks_for(b_bytes) > 1, "broadcast must be chunked");
+    let ic = Interconnect::pcie3();
+    for shards in [2usize, 4, 8] {
+        let out = sharded_with_overlap(&a, shards, overlap);
+        let md =
+            MultiDevice::simulate_overlapped(out.traces(), &V100, &ic, b_bytes, &out.c_block_bytes())
+                .unwrap();
+        assert!(
+            md.overlap_saved_ns() > 0.0,
+            "{shards} shards: chunked pipelining saved nothing \
+             (serial {:.1}us, overlapped {:.1}us)",
+            md.makespan_ns() / 1e3,
+            md.overlapped_makespan_ns().unwrap() / 1e3
+        );
+    }
+}
+
+#[test]
+fn overlap_disabled_replays_the_serial_timeline_exactly() {
+    // with overlap off the traces carry no chunk dependencies, and the
+    // serial simulation of those traces equals PR 3's model: the same
+    // timelines, the same makespan, nothing saved
+    let (_, a) = family_matrices().into_iter().next().unwrap();
+    let out = sharded_with_overlap(&a, 4, OverlapConfig::off());
+    assert!(out.traces().all(|t| t.chunk_deps() == 0), "off = unannotated traces");
+    let ic = Interconnect::pcie3();
+    let serial = MultiDevice::simulate_with_interconnect(
+        out.traces(),
+        &V100,
+        &ic,
+        out.b_bytes,
+        &out.c_block_bytes(),
+    )
+    .unwrap();
+    let annotated = sharded_with_overlap(&a, 4, OverlapConfig::default());
+    let serial_of_annotated = MultiDevice::simulate_with_interconnect(
+        annotated.traces(),
+        &V100,
+        &ic,
+        annotated.b_bytes,
+        &annotated.c_block_bytes(),
+    )
+    .unwrap();
+    // AwaitChunk markers are free on the serial path: identical figures
+    assert_eq!(serial.makespan_ns(), serial_of_annotated.makespan_ns());
+    assert_eq!(serial.compute_makespan_ns(), serial_of_annotated.compute_makespan_ns());
+    for (t0, t1) in serial.timelines.iter().zip(&serial_of_annotated.timelines) {
+        assert_eq!(t0.total_ns, t1.total_ns, "annotation changed a serial device timeline");
+    }
+}
+
+#[test]
+fn sharded_results_bit_identical_with_overlap_on_and_off() {
+    // 4 families × 1/2/4/8 shards × overlap {on, off, tiny chunks}: the
+    // stitched C never moves a bit
+    let configs = [
+        OverlapConfig::off(),
+        OverlapConfig::default(),
+        OverlapConfig { enabled: true, chunk_bytes: 4 << 10 },
+    ];
+    for (name, a) in family_matrices() {
+        let gold = sharded_with_overlap(&a, 1, OverlapConfig::off()).c;
+        for shards in [1usize, 2, 4, 8] {
+            for (i, overlap) in configs.iter().enumerate() {
+                let out = sharded_with_overlap(&a, shards, *overlap);
+                assert_eq!(
+                    out.c, gold,
+                    "{name}: {shards} shards, overlap config #{i} changed the result"
+                );
+                out.c.validate().unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn overlapped_makespan_bounded_on_every_suite_matrix_and_shard_count() {
+    // the acceptance sweep: every generator-suite matrix at Tiny scale,
+    // every shard count, default PCIe — overlapped ≤ serial, always
+    use opsparse::gen::suite::{entries, SuiteScale};
+    let ic = Interconnect::pcie3();
+    let overlap = OverlapConfig { enabled: true, chunk_bytes: 64 << 10 };
+    for e in entries() {
+        let a = e.generate(SuiteScale::Tiny);
+        let b_bytes = a.device_bytes();
+        for shards in [2usize, 4, 8] {
+            let out = sharded_with_overlap(&a, shards, overlap);
+            let md = MultiDevice::simulate_overlapped(
+                out.traces(),
+                &V100,
+                &ic,
+                b_bytes,
+                &out.c_block_bytes(),
+            )
+            .unwrap();
+            assert!(
+                md.overlapped_makespan_ns().unwrap() <= md.makespan_ns() + 1e-6,
+                "{}: {shards} shards: overlapped {:.1}us > serial {:.1}us",
+                e.name,
+                md.overlapped_makespan_ns().unwrap() / 1e3,
+                md.makespan_ns() / 1e3
+            );
+        }
+    }
+}
+
+#[test]
+fn overlap_dominance_property_randomized() {
+    // randomized sweep on top of the fixed family matrix: random uniform
+    // matrices, random shard counts and chunk sizes, both topologies —
+    // overlapped ≤ serial must hold everywhere
+    check(
+        "overlapped_makespan_le_serial",
+        24,
+        300,
+        |rng, size| {
+            let n = rng.range(32, size.max(33));
+            let a = Uniform { n, per_row: 6, jitter: 3 }.generate(rng);
+            let shards = 1usize << rng.range(1, 4); // 2, 4, or 8
+            let chunk_bytes = 1usize << rng.range(10, 22);
+            let ring = rng.range(0, 2) == 1;
+            (a, shards, chunk_bytes, ring)
+        },
+        |(a, shards, chunk_bytes, ring)| {
+            let overlap = OverlapConfig { enabled: true, chunk_bytes: *chunk_bytes };
+            let out = sharded_with_overlap(a, *shards, overlap);
+            let ic = if *ring { Interconnect::nvlink() } else { Interconnect::pcie3() };
+            let md = MultiDevice::simulate_overlapped(
+                out.traces(),
+                &V100,
+                &ic,
+                a.device_bytes(),
+                &out.c_block_bytes(),
+            )
+            .map_err(|e| format!("simulate_overlapped failed: {e:#}"))?;
+            let (serial, over) = (md.makespan_ns(), md.overlapped_makespan_ns().unwrap());
+            if over > serial + 1e-6 {
+                return Err(format!("overlapped {over} > serial {serial}"));
+            }
+            Ok(())
+        },
+    );
+}
