@@ -15,11 +15,16 @@
 //! * `OPSPARSE_BENCH_JSON_OVERLAP=<path>` — record the serial-vs-
 //!   overlapped makespan ablation (`BENCH_overlap.json` in CI, where a
 //!   blocking check asserts overlapped ≤ serial on every row).
+//! * `OPSPARSE_REPLAN=on` — also run the adaptive re-planning ablation
+//!   (cold proxy-cut vs warm measured re-cut per generator family and
+//!   shard count), asserting warm ≤ cold on every row.
+//! * `OPSPARSE_BENCH_JSON_ADAPTIVE=<path>` — record that ablation
+//!   (`BENCH_adaptive.json` in CI, with a blocking warm-≤-cold check).
 //!
 //! The bench itself also enforces the overlap invariant: an overlapped
 //! makespan above the serial one is a model regression and fails the run.
 
-use opsparse::bench::{figures, write_overlap_json, write_shard_scaling_json};
+use opsparse::bench::{figures, write_adaptive_json, write_overlap_json, write_shard_scaling_json};
 use opsparse::gen::suite::SuiteScale;
 use opsparse::gpusim::{Interconnect, OverlapConfig};
 
@@ -49,5 +54,16 @@ fn main() {
     }
     if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON_OVERLAP") {
         write_overlap_json(&path, scale, &rows).expect("write overlap json");
+    }
+    let replan_on = std::env::var("OPSPARSE_REPLAN")
+        .ok()
+        .and_then(|v| opsparse::coordinator::feedback::parse_on_off(&v))
+        .unwrap_or(false);
+    if replan_on {
+        // warm <= cold is asserted inside adaptive_replan itself
+        let arows = figures::adaptive_replan(scale).expect("adaptive_replan bench");
+        if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON_ADAPTIVE") {
+            write_adaptive_json(&path, scale, &arows).expect("write adaptive json");
+        }
     }
 }

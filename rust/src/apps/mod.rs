@@ -19,13 +19,14 @@ pub mod amg;
 pub mod mcl;
 pub mod msbfs;
 
-use crate::coordinator::cache::PatternCache;
+use crate::coordinator::cache::{PatternCache, PatternKey};
+use crate::coordinator::feedback::{ChunkFeedback, ExecHistory, ReplanConfig, RunObservation};
 use crate::coordinator::router::Router;
-use crate::gpusim::{DevicePool, OverlapConfig, PoolStats};
+use crate::gpusim::{DevicePool, MultiDevice, OverlapConfig, PoolStats, V100};
 use crate::sparse::stats::nprod_per_row;
 use crate::sparse::Csr;
 use crate::spgemm::pipeline::{multiply_reuse, OpSparseConfig, SpgemmOutput, SymbolicReuse};
-use crate::spgemm::sharded::{multiply_sharded_with, ShardPlan, ShardReuse};
+use crate::spgemm::sharded::{multiply_sharded_with, ShardPlan, ShardReuse, ShardedOutput};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -35,6 +36,12 @@ use std::sync::Arc;
 /// whose working set exceeds the router's single-device budget runs
 /// row-sharded across per-device pools instead — an app like AMG setup
 /// then handles operators that only fit sharded without code changes.
+/// With re-planning on top ([`SpgemmContext::with_router_replan`]) the
+/// context also threads a pattern-keyed execution history through the
+/// sharded path: each run records its simulated per-device times (and
+/// chunk-arrival stalls), and the *next* multiply of the same pattern —
+/// AMG re-setup on the same level operators — re-cuts its shard bounds
+/// from the measurement and broadcasts at the tuned chunk size.
 pub struct SpgemmContext {
     pool: DevicePool,
     /// Per-device pools for the sharded path, grown on demand.
@@ -42,6 +49,11 @@ pub struct SpgemmContext {
     cache: PatternCache,
     router: Option<Router>,
     sharded_multiplies: u64,
+    /// Pattern-keyed measured-run store for the adaptive loop.
+    history: ExecHistory,
+    replan: ReplanConfig,
+    replans: u64,
+    replan_cold: u64,
     pub cfg: OpSparseConfig,
 }
 
@@ -52,12 +64,19 @@ impl SpgemmContext {
     }
 
     pub fn with_capacity(patterns: usize) -> Self {
+        // re-planning is opt-in per context (`with_router_replan`): a
+        // plain context keeps the proxy-planned behavior exactly
+        let replan = ReplanConfig::off();
         SpgemmContext {
             pool: DevicePool::new(),
             shard_pools: Vec::new(),
             cache: PatternCache::new(patterns),
             router: None,
             sharded_multiplies: 0,
+            history: ExecHistory::new(replan.history_cap),
+            replan,
+            replans: 0,
+            replan_cold: 0,
             cfg: OpSparseConfig::default(),
         }
     }
@@ -68,6 +87,21 @@ impl SpgemmContext {
     pub fn with_router(router: Router) -> Self {
         let mut ctx = SpgemmContext::new();
         ctx.router = Some(router);
+        ctx
+    }
+
+    /// [`SpgemmContext::with_router`] with the adaptive feedback loop
+    /// on: sharded multiplies record measured (simulated) per-device
+    /// times into an execution history, and repeats of a pattern re-cut
+    /// their shard bounds from it ([`ShardPlan::from_history`]) instead
+    /// of the `nprod` proxy — the AMG re-setup loop re-plans between
+    /// levels. Results stay bit-identical whatever the plan; only time
+    /// moves.
+    pub fn with_router_replan(router: Router, replan: ReplanConfig) -> Self {
+        let mut ctx = SpgemmContext::new();
+        ctx.router = Some(router);
+        ctx.history = ExecHistory::new(replan.history_cap);
+        ctx.replan = replan;
         ctx
     }
 
@@ -90,11 +124,40 @@ impl SpgemmContext {
             while self.shard_pools.len() < n {
                 self.shard_pools.push(DevicePool::new());
             }
-            // the plan is a pure function of (A, B, n), so a re-setup on
-            // the same operands recuts identical shard bounds and the
-            // per-shard fingerprints key the same cache entries
-            let plan = ShardPlan::balanced(&nprod_per_row(a, b), n);
+            let nprod = nprod_per_row(a, b);
             let b_fp = b.pattern_fingerprint();
+            // without re-planning the plan is a pure function of
+            // (A, B, n); with it, a warm pattern re-cuts from the last
+            // run's measured device times and broadcasts at the tuned
+            // chunk granularity — either way the stitched result is
+            // bit-identical, so the loop only moves time
+            let mut overlap = OverlapConfig::default();
+            let (plan, hist_key) = if self.replan.enabled {
+                let key = (a.pattern_fingerprint(), b_fp);
+                let (measured, chunk_bytes) = match self.history.lookup(key) {
+                    Some(s) => (
+                        Some(s.measured.clone()).filter(|m| !m.is_empty()),
+                        s.chunk_bytes,
+                    ),
+                    None => (None, None),
+                };
+                if let Some(cb) = chunk_bytes {
+                    overlap.chunk_bytes = cb;
+                }
+                let plan = match &measured {
+                    Some(m) => {
+                        self.replans += 1;
+                        ShardPlan::from_history(&nprod, n, m)
+                    }
+                    None => {
+                        self.replan_cold += 1;
+                        ShardPlan::balanced(&nprod, n)
+                    }
+                };
+                (plan, Some(key))
+            } else {
+                (ShardPlan::balanced(&nprod, n), None)
+            };
             let keys: Vec<(u64, u64)> = (0..n)
                 .map(|s| {
                     let (lo, hi) = plan.range(s);
@@ -110,7 +173,7 @@ impl SpgemmContext {
                 &self.cfg,
                 &plan,
                 Some(&mut self.shard_pools[..n]),
-                OverlapConfig::default(),
+                overlap,
                 Some(&reuse),
             )?;
             for (s, key) in keys.into_iter().enumerate() {
@@ -118,6 +181,9 @@ impl SpgemmContext {
                     self.cache
                         .insert(key, Arc::new(SymbolicReuse::from_output(&out.shards[s])));
                 }
+            }
+            if let Some(key) = hist_key {
+                self.observe_sharded(key, &plan, &out, overlap);
             }
             return Ok(out.into_output());
         }
@@ -128,6 +194,78 @@ impl SpgemmContext {
             self.cache.insert(key, Arc::new(SymbolicReuse::from_output(&out)));
         }
         Ok(out)
+    }
+
+    /// Record one sharded run into the execution history: per-device
+    /// simulated times (the measurement `ShardPlan::from_history`
+    /// re-cuts from) and, when the router models an interconnect, the
+    /// overlapped schedule's chunk-arrival stalls (the measurement
+    /// chunk-size tuning reads). The simulator plays the role CUDA
+    /// events would on hardware, which also keeps re-planning
+    /// deterministic: the same operands always measure the same.
+    ///
+    /// Runs where any shard replayed its symbolic phase are **not**
+    /// recorded: a replayed shard's trace has no symbolic ops, so its
+    /// time is incomparable with a cold shard's and would skew the
+    /// re-cut. The cost of that filter is staleness: a re-cut that
+    /// leaves some shard ranges unchanged replays those shards from
+    /// cache and is never re-measured, so the history keeps the last
+    /// all-cold measurement (the one the current plan was cut from)
+    /// and chunk tuning advances only on cold observations.
+    /// Reuse-aware cost normalization to re-measure warm runs is a
+    /// ROADMAP follow-on.
+    fn observe_sharded(
+        &mut self,
+        key: PatternKey,
+        plan: &ShardPlan,
+        out: &ShardedOutput,
+        overlap: OverlapConfig,
+    ) {
+        if out.shards.iter().any(|s| s.symbolic_skipped) {
+            return;
+        }
+        let ic = self.router.as_ref().and_then(|r| r.cfg.interconnect);
+        let n = plan.n_shards();
+        let (md, chunk) = match ic {
+            Some(ic) if overlap.enabled && n > 1 => {
+                match MultiDevice::simulate_overlapped(
+                    out.traces(),
+                    &V100,
+                    &ic,
+                    out.b_bytes,
+                    &out.c_block_bytes(),
+                ) {
+                    Ok(md) => {
+                        let chunks = md.overlap.as_ref().map(|o| o.chunks).unwrap_or(1);
+                        let fb = ChunkFeedback {
+                            chunk_bytes: overlap.chunk_bytes,
+                            chunks,
+                            b_bytes: out.b_bytes,
+                            stall_ns: md
+                                .overlap_stall_ns()
+                                .into_iter()
+                                .fold(0.0, f64::max),
+                            compute_ns: md.compute_makespan_ns(),
+                            hop_latency_ns: ic.hop_latency_ns(),
+                            chunk_xfer_ns: ic.chunk_xfer_ns(out.b_bytes, chunks),
+                        };
+                        (md, Some(fb))
+                    }
+                    // an unusable interconnect model must not fail the
+                    // multiply — fall back to the transfer-free view
+                    Err(_) => (MultiDevice::simulate(out.traces(), &V100), None),
+                }
+            }
+            _ => (MultiDevice::simulate(out.traces(), &V100), None),
+        };
+        let mut obs = RunObservation::from_device_ns(
+            plan,
+            &md.device_total_ns(),
+            md.makespan_ns(),
+            out.nprod as u64,
+        );
+        obs.chunk = chunk;
+        self.history.record(key, obs);
     }
 
     /// Symbolic phases skipped so far. Unlike the coordinator's metrics
@@ -147,6 +285,24 @@ impl SpgemmContext {
     /// Multiplies that took the row-sharded multi-device path.
     pub fn sharded_multiplies(&self) -> u64 {
         self.sharded_multiplies
+    }
+
+    /// Sharded multiplies planned from measured history (warm-pattern
+    /// consults — the re-cut applies only when it improves the modeled
+    /// makespan; only with [`SpgemmContext::with_router_replan`]).
+    pub fn replans(&self) -> u64 {
+        self.replans
+    }
+
+    /// Sharded multiplies planned by the `nprod` proxy because the
+    /// pattern had no history yet.
+    pub fn replan_cold_misses(&self) -> u64 {
+        self.replan_cold
+    }
+
+    /// Patterns currently held by the execution history.
+    pub fn history_patterns(&self) -> usize {
+        self.history.len()
     }
 
     /// Cumulative device-pool counters (the single-device pool).
@@ -221,5 +377,59 @@ mod tests {
             ctx.sym_cache_hits() >= hits_before + 2,
             "per-shard entries must hit on the repeat"
         );
+        // a plain router context never consults or fills the history
+        assert_eq!(ctx.replans(), 0);
+        assert_eq!(ctx.replan_cold_misses(), 0);
+        assert_eq!(ctx.history_patterns(), 0);
+    }
+
+    #[test]
+    fn replanning_context_recuts_warm_patterns_bit_identically() {
+        use crate::coordinator::router::RouterConfig;
+        use crate::gen::powerlaw::PowerLaw;
+        // the AMG re-setup shape: the same (imbalanced, power-law)
+        // operator multiplied repeatedly. The first pass is proxy-cut
+        // and records measured device times; every repeat re-cuts from
+        // them — and the result never moves a bit.
+        let mut rng = Rng::new(43);
+        let a = PowerLaw {
+            n: 600,
+            alpha: 2.2,
+            max_row: 64,
+            mean_row: 6.0,
+            hub_frac: 0.15,
+            forced_giant_rows: 2,
+        }
+        .generate(&mut rng);
+        let mut plain = SpgemmContext::new();
+        let gold = plain.multiply(&a, &a).unwrap();
+        let router = Router::new(RouterConfig {
+            device_memory_bytes: 4096,
+            max_devices: 4,
+            interconnect: None,
+            ..Default::default()
+        });
+        let mut ctx = SpgemmContext::with_router_replan(router, ReplanConfig::default());
+        for i in 0..3 {
+            let out = ctx.multiply(&a, &a).unwrap();
+            assert_eq!(out.c, gold.c, "pass {i}: re-planning must not change the numerics");
+        }
+        assert_eq!(ctx.sharded_multiplies(), 3);
+        assert_eq!(ctx.replan_cold_misses(), 1, "only the first pass is cold");
+        assert_eq!(ctx.replans(), 2, "every repeat re-plans from history");
+        assert_eq!(ctx.history_patterns(), 1);
+        // replan: off on the same workload is the PR 4 baseline: no
+        // history, no re-cut
+        let router = Router::new(RouterConfig {
+            device_memory_bytes: 4096,
+            max_devices: 4,
+            interconnect: None,
+            ..Default::default()
+        });
+        let mut off = SpgemmContext::with_router_replan(router, ReplanConfig::off());
+        let o = off.multiply(&a, &a).unwrap();
+        assert_eq!(o.c, gold.c);
+        assert_eq!(off.replans() + off.replan_cold_misses(), 0);
+        assert_eq!(off.history_patterns(), 0);
     }
 }

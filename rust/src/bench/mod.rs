@@ -140,6 +140,43 @@ pub fn write_overlap_json(
     Ok(())
 }
 
+/// Serialize the adaptive re-planning ablation as JSON:
+/// `BENCH_adaptive.json`, uploaded by CI next to `BENCH_shards.json` /
+/// `BENCH_overlap.json` and consumed by the blocking warm-≤-cold check
+/// there. One row per (family, shard count): the cold proxy-planned
+/// makespan, the warm (kept-plan) makespan, and the raw re-cut figure
+/// before rollback.
+pub fn write_adaptive_json(
+    path: &str,
+    scale: crate::gen::suite::SuiteScale,
+    rows: &[figures::AdaptiveRow],
+) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\n  \"bench\": \"adaptive_replan\",\n  \"scale\": \"{scale:?}\",\n  \"rows\": [\n"
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"family\": \"{}\", \"shards\": {}, \"cold_makespan_ns\": {:.1}, \
+             \"warm_makespan_ns\": {:.1}, \"replanned_makespan_ns\": {:.1}, \
+             \"cold_imbalance\": {:.4}, \"warm_imbalance\": {:.4}, \"kept_replan\": {}}}{}\n",
+            r.family,
+            r.shards,
+            r.cold_makespan_ns,
+            r.warm_makespan_ns,
+            r.replanned_makespan_ns,
+            r.cold_imbalance,
+            r.warm_imbalance,
+            r.kept_replan,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
 /// §Perf harness: median wall time of `multiply()` on a named suite
 /// matrix (used by `opsparse bench perf` and the EXPERIMENTS.md log).
 pub fn perf_l3(matrix: &str, scale: crate::gen::suite::SuiteScale, reps: usize) -> Result<f64> {

@@ -22,19 +22,38 @@
 //! the `Drop` path: stop markers queue *behind* already-submitted
 //! sub-jobs, so workers drain every in-flight barrier first.
 
+use super::cache::PatternKey;
+use super::feedback::{ExecHistory, RunObservation};
 use super::metrics::Metrics;
 use super::router::Route;
 use super::service::{finish, JobResult};
 use crate::sparse::Csr;
 use crate::spgemm::pipeline::SpgemmOutput;
-use crate::spgemm::sharded::stitch_row_blocks;
+use crate::spgemm::sharded::{stitch_row_blocks, MeasuredShard};
 use anyhow::{anyhow, Result};
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
+
+/// What the barrier needs to feed the execution history when the parent
+/// completes: the shared store, the pattern key, and the row ranges the
+/// plan assigned (shard `s` of the observation is `ranges[s]` plus the
+/// measured ns its worker reported). Attached only when adaptive
+/// re-planning is on — with it off, the barrier does exactly what it
+/// did before.
+pub struct ShardFeedback {
+    pub history: Arc<Mutex<ExecHistory>>,
+    pub key: PatternKey,
+    pub ranges: Vec<(usize, usize)>,
+}
 
 struct State {
     /// One slot per shard, filled by [`ShardBarrier::complete`].
     slots: Vec<Option<Result<SpgemmOutput>>>,
+    /// Measured per-shard execution ns, parallel to `slots`. `None`
+    /// when the worker reported no measurement (e.g. a symbolic-cache
+    /// replay, whose trace time is not comparable to a cold shard's).
+    ns: Vec<Option<f64>>,
     /// Shards still outstanding.
     remaining: usize,
     /// Set once the parent `JobResult` has been emitted.
@@ -53,6 +72,8 @@ pub struct ShardBarrier {
     t0: Instant,
     tx: mpsc::Sender<JobResult>,
     metrics: Arc<Metrics>,
+    /// Execution-history hook, when adaptive re-planning is on.
+    feedback: Option<ShardFeedback>,
     state: Mutex<State>,
 }
 
@@ -67,6 +88,7 @@ impl ShardBarrier {
         tx: mpsc::Sender<JobResult>,
         metrics: Arc<Metrics>,
         t0: Instant,
+        feedback: Option<ShardFeedback>,
     ) -> ShardBarrier {
         let n = n_shards.max(1);
         ShardBarrier {
@@ -77,17 +99,23 @@ impl ShardBarrier {
             t0,
             tx,
             metrics,
+            feedback,
             state: Mutex::new(State {
                 slots: (0..n).map(|_| None).collect(),
+                ns: vec![None; n],
                 remaining: n,
                 finished: false,
             }),
         }
     }
 
-    /// Record shard `shard`'s result. The last arrival stitches and
-    /// emits the parent result; duplicate or late reports are ignored.
-    pub fn complete(&self, shard: usize, result: Result<SpgemmOutput>) {
+    /// Record shard `shard`'s result (plus its measured execution ns,
+    /// when the worker timed it). The last arrival stitches and emits
+    /// the parent result — and, with a [`ShardFeedback`] attached and a
+    /// successful stitch, folds the measured per-shard timings into the
+    /// execution history so the *next* submit of this pattern re-cuts
+    /// from them. Duplicate or late reports are ignored.
+    pub fn complete(&self, shard: usize, result: Result<SpgemmOutput>, measured_ns: Option<f64>) {
         let ready = {
             let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
             // defensive: a duplicate, out-of-range, or post-completion
@@ -96,19 +124,55 @@ impl ShardBarrier {
                 return;
             }
             st.slots[shard] = Some(result);
+            st.ns[shard] = measured_ns;
             st.remaining -= 1;
             if st.remaining == 0 {
                 st.finished = true;
-                Some(std::mem::take(&mut st.slots))
+                Some((std::mem::take(&mut st.slots), std::mem::take(&mut st.ns)))
             } else {
                 None
             }
         };
         // stitch outside the lock: it is O(nnz(C)) of copying
-        if let Some(slots) = ready {
+        if let Some((slots, ns)) = ready {
             let (c, nprod) = Self::reassemble(self.rows, self.cols, slots);
+            if c.is_ok() {
+                self.observe(&ns, nprod);
+            }
             finish(&self.metrics, &self.tx, self.job_id, self.route, c, nprod, self.t0);
         }
+    }
+
+    /// Fold this run into the execution history (successful parents
+    /// only — a failed shard's timings describe nothing worth planning
+    /// from) and refresh the occupancy gauges. A run where any shard
+    /// reported no measurement (a symbolic-cache replay) is dropped
+    /// whole: mixing replayed and cold shard times would hand the
+    /// planner incomparable numbers, so only homogeneous all-cold runs
+    /// update the plan history — at the cost of staleness for plans
+    /// whose shards stay partially cache-warm (see the ROADMAP
+    /// re-measurement follow-on).
+    fn observe(&self, ns: &[Option<f64>], nprod: usize) {
+        let Some(fb) = &self.feedback else { return };
+        if ns.iter().any(|n| n.is_none()) {
+            return;
+        }
+        let shards: Vec<MeasuredShard> = fb
+            .ranges
+            .iter()
+            .zip(ns)
+            .map(|(&(lo, hi), &ns)| MeasuredShard { lo, hi, ns: ns.unwrap_or(0.0) })
+            .collect();
+        let obs = RunObservation {
+            shards,
+            wall_ns: self.t0.elapsed().as_nanos() as f64,
+            nprod: nprod as u64,
+            chunk: None,
+        };
+        let mut h = fb.history.lock().unwrap_or_else(|e| e.into_inner());
+        h.record(fb.key, obs);
+        self.metrics.history_patterns.store(h.len() as u64, Ordering::Relaxed);
+        self.metrics.history_evictions.store(h.evictions(), Ordering::Relaxed);
     }
 
     fn reassemble(
@@ -184,6 +248,7 @@ mod tests {
             tx,
             Arc::clone(&metrics),
             Instant::now(),
+            None,
         ));
         (b, rx, metrics)
     }
@@ -198,9 +263,9 @@ mod tests {
         let gold = shard_output(&m).c;
         let (b, rx, metrics) = barrier_for(2, 8, 4);
         // two identity blocks, completed in reverse order
-        b.complete(1, Ok(shard_output(&m)));
+        b.complete(1, Ok(shard_output(&m)), None);
         assert!(rx.try_recv().is_err(), "barrier must wait for every shard");
-        b.complete(0, Ok(shard_output(&m)));
+        b.complete(0, Ok(shard_output(&m)), None);
         let r = rx.recv().unwrap();
         let c = r.c.unwrap();
         assert_eq!(c.rows, 8);
@@ -212,10 +277,10 @@ mod tests {
     fn one_failed_shard_fails_the_parent_exactly_once() {
         let m = Csr::identity(4);
         let (b, rx, metrics) = barrier_for(3, 12, 4);
-        b.complete(0, Ok(shard_output(&m)));
-        b.complete(2, Err(anyhow!("injected")));
+        b.complete(0, Ok(shard_output(&m)), None);
+        b.complete(2, Err(anyhow!("injected")), None);
         assert!(rx.try_recv().is_err(), "no partial result before all shards report");
-        b.complete(1, Ok(shard_output(&m)));
+        b.complete(1, Ok(shard_output(&m)), None);
         let r = rx.recv().unwrap();
         assert!(r.c.is_err());
         assert!(rx.try_recv().is_err(), "exactly one JobResult");
@@ -228,7 +293,7 @@ mod tests {
     fn dropping_an_open_barrier_fails_the_parent() {
         let m = Csr::identity(4);
         let (b, rx, metrics) = barrier_for(2, 8, 4);
-        b.complete(0, Ok(shard_output(&m)));
+        b.complete(0, Ok(shard_output(&m)), None);
         drop(b);
         let r = rx.recv().unwrap();
         assert!(r.c.is_err(), "a lost shard must fail the job, not hang it");
@@ -239,11 +304,106 @@ mod tests {
     fn finished_barrier_drop_is_silent() {
         let m = Csr::identity(4);
         let (b, rx, metrics) = barrier_for(1, 4, 4);
-        b.complete(0, Ok(shard_output(&m)));
+        b.complete(0, Ok(shard_output(&m)), None);
         assert!(rx.recv().unwrap().c.is_ok());
         drop(b);
         assert!(rx.try_recv().is_err());
         assert_eq!(metrics.snapshot().jobs_completed, 1);
         assert_eq!(metrics.snapshot().jobs_failed, 0);
+    }
+
+    #[test]
+    fn successful_parent_records_measured_shards_into_history() {
+        let m = Csr::identity(4);
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let history = Arc::new(Mutex::new(ExecHistory::new(8)));
+        let b = ShardBarrier::new(
+            7,
+            Route::Sharded { n_devices: 2 },
+            2,
+            8,
+            4,
+            tx,
+            Arc::clone(&metrics),
+            Instant::now(),
+            Some(ShardFeedback {
+                history: Arc::clone(&history),
+                key: (11, 22),
+                ranges: vec![(0, 4), (4, 8)],
+            }),
+        );
+        b.complete(0, Ok(shard_output(&m)), Some(1500.0));
+        b.complete(1, Ok(shard_output(&m)), Some(2500.0));
+        assert!(rx.recv().unwrap().c.is_ok());
+        let h = history.lock().unwrap();
+        let stats = h.lookup((11, 22)).expect("completed parent must record");
+        assert_eq!(
+            stats.measured,
+            vec![
+                MeasuredShard { lo: 0, hi: 4, ns: 1500.0 },
+                MeasuredShard { lo: 4, hi: 8, ns: 2500.0 }
+            ]
+        );
+        assert!(stats.ewma_wall_ns > 0.0, "end-to-end wall time must be folded in");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.history_patterns, 1, "occupancy gauge must refresh");
+    }
+
+    #[test]
+    fn mixed_measurement_run_is_not_recorded() {
+        // one shard reported no measurement (a symbolic-cache replay):
+        // recording the other half would hand the planner incomparable
+        // numbers, so the whole observation is dropped
+        let m = Csr::identity(4);
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let history = Arc::new(Mutex::new(ExecHistory::new(8)));
+        let b = ShardBarrier::new(
+            9,
+            Route::Sharded { n_devices: 2 },
+            2,
+            8,
+            4,
+            tx,
+            Arc::clone(&metrics),
+            Instant::now(),
+            Some(ShardFeedback {
+                history: Arc::clone(&history),
+                key: (11, 22),
+                ranges: vec![(0, 4), (4, 8)],
+            }),
+        );
+        b.complete(0, Ok(shard_output(&m)), Some(1500.0));
+        b.complete(1, Ok(shard_output(&m)), None);
+        assert!(rx.recv().unwrap().c.is_ok(), "the job itself still succeeds");
+        assert!(history.lock().unwrap().is_empty(), "mixed measurements must be dropped");
+    }
+
+    #[test]
+    fn failed_parent_records_nothing() {
+        let m = Csr::identity(4);
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let history = Arc::new(Mutex::new(ExecHistory::new(8)));
+        let b = ShardBarrier::new(
+            8,
+            Route::Sharded { n_devices: 2 },
+            2,
+            8,
+            4,
+            tx,
+            Arc::clone(&metrics),
+            Instant::now(),
+            Some(ShardFeedback {
+                history: Arc::clone(&history),
+                key: (11, 22),
+                ranges: vec![(0, 4), (4, 8)],
+            }),
+        );
+        b.complete(0, Ok(shard_output(&m)), Some(1500.0));
+        b.complete(1, Err(anyhow!("injected")), None);
+        assert!(rx.recv().unwrap().c.is_err());
+        assert!(history.lock().unwrap().is_empty(), "failed runs must not pollute history");
     }
 }

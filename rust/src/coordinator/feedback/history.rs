@@ -1,0 +1,235 @@
+//! Pattern-keyed execution history: the bounded store the adaptive
+//! planning loops read from and write to.
+//!
+//! Entries are keyed like the symbolic-reuse cache — both operands'
+//! [`crate::sparse::Csr::pattern_fingerprint`] — because every quantity
+//! recorded here is a function of the sparsity patterns and the device
+//! model, not the values: per-shard device times, intermediate-product
+//! counts, chunk-arrival stalls. Eviction is insertion-order (FIFO),
+//! matching [`crate::coordinator::cache::PatternCache`]: the workloads
+//! that benefit (AMG re-setup, MCL expansion) loop over a handful of
+//! patterns.
+
+use super::replan::{tune_chunk_bytes, ChunkFeedback};
+use crate::coordinator::cache::PatternKey;
+use crate::spgemm::sharded::{MeasuredShard, ShardPlan};
+use std::collections::{HashMap, VecDeque};
+
+/// Decay of the exponentially-weighted wall-time average: new runs get
+/// this weight. High enough to track drift (a changed fleet), low
+/// enough that one noisy run does not whipsaw the plan.
+const WALL_EWMA_ALPHA: f64 = 0.3;
+
+/// Everything the history remembers about one pattern pair.
+#[derive(Clone, Debug, Default)]
+pub struct PatternStats {
+    /// Per-shard measured timings of the most recent run — what
+    /// [`ShardPlan::from_history`] re-cuts from. The shard count of the
+    /// *next* run need not match: the re-cut reconstructs per-row costs
+    /// and cuts them into whatever count the router asks for.
+    pub measured: Vec<MeasuredShard>,
+    /// Runs recorded for this pattern.
+    pub runs: u64,
+    /// Exponentially-weighted end-to-end time of this pattern's runs
+    /// (ns), **in the recorder's clock domain**: host wall clock on the
+    /// coordinator path (queue wait included), simulated makespan on
+    /// the context path. Diagnostic/forecasting state for future
+    /// consumers (admission control, capacity-weighted planning) — the
+    /// three current loops plan from `measured` and the chunk feedback,
+    /// never from this field, so the domains must not be mixed by
+    /// whatever reads it next.
+    pub ewma_wall_ns: f64,
+    /// Intermediate products of the last run (same diagnostic role).
+    pub last_nprod: u64,
+    /// Tuned broadcast chunk size, once overlap feedback has been
+    /// observed ([`tune_chunk_bytes`]); `None` until then.
+    pub chunk_bytes: Option<usize>,
+}
+
+/// One run's worth of observations, recorded after the run completes.
+#[derive(Clone, Debug, Default)]
+pub struct RunObservation {
+    /// Per-shard measured timings (row range + ns), in shard order.
+    pub shards: Vec<MeasuredShard>,
+    /// End-to-end wall time of the run (ns); 0 when unknown.
+    pub wall_ns: f64,
+    /// Total intermediate products of the run.
+    pub nprod: u64,
+    /// Overlap feedback (chunk-arrival stalls), when the run was
+    /// simulated under the pipelined schedule.
+    pub chunk: Option<ChunkFeedback>,
+}
+
+impl RunObservation {
+    /// Build an observation from a plan and the per-device measured
+    /// times it produced (e.g. `MultiDevice::device_total_ns`). Extra
+    /// entries on either side are ignored — the observation covers the
+    /// shards both describe.
+    pub fn from_device_ns(
+        plan: &ShardPlan,
+        device_ns: &[f64],
+        wall_ns: f64,
+        nprod: u64,
+    ) -> RunObservation {
+        let shards = (0..plan.n_shards().min(device_ns.len()))
+            .map(|s| {
+                let (lo, hi) = plan.range(s);
+                MeasuredShard { lo, hi, ns: device_ns[s] }
+            })
+            .collect();
+        RunObservation { shards, wall_ns, nprod, chunk: None }
+    }
+}
+
+/// Bounded, pattern-fingerprint-keyed store of [`PatternStats`].
+#[derive(Debug)]
+pub struct ExecHistory {
+    map: HashMap<PatternKey, PatternStats>,
+    order: VecDeque<PatternKey>,
+    capacity: usize,
+    evictions: u64,
+}
+
+impl ExecHistory {
+    /// `capacity` of 0 disables the history (records are dropped).
+    pub fn new(capacity: usize) -> Self {
+        ExecHistory { map: HashMap::new(), order: VecDeque::new(), capacity, evictions: 0 }
+    }
+
+    /// Fold one run's observations into the pattern's stats, evicting
+    /// the oldest pattern beyond capacity.
+    pub fn record(&mut self, key: PatternKey, obs: RunObservation) {
+        if self.capacity == 0 {
+            return;
+        }
+        if !self.map.contains_key(&key) {
+            self.map.insert(key, PatternStats::default());
+            self.order.push_back(key);
+            while self.order.len() > self.capacity {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                    self.evictions += 1;
+                }
+            }
+        }
+        // the entry can only be absent if this key was the one just
+        // evicted, which cannot happen: it was pushed last
+        let Some(stats) = self.map.get_mut(&key) else { return };
+        stats.runs += 1;
+        if !obs.shards.is_empty() {
+            stats.measured = obs.shards;
+        }
+        if obs.wall_ns > 0.0 && obs.wall_ns.is_finite() {
+            stats.ewma_wall_ns = if stats.ewma_wall_ns > 0.0 {
+                (1.0 - WALL_EWMA_ALPHA) * stats.ewma_wall_ns + WALL_EWMA_ALPHA * obs.wall_ns
+            } else {
+                obs.wall_ns
+            };
+        }
+        if obs.nprod > 0 {
+            stats.last_nprod = obs.nprod;
+        }
+        if let Some(fb) = obs.chunk {
+            stats.chunk_bytes = Some(tune_chunk_bytes(&fb));
+        }
+    }
+
+    /// The stats recorded for a pattern, if it is warm.
+    pub fn lookup(&self, key: PatternKey) -> Option<&PatternStats> {
+        self.map.get(&key)
+    }
+
+    /// Patterns currently held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Patterns evicted since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(n: usize, ns: f64) -> RunObservation {
+        RunObservation {
+            shards: vec![MeasuredShard { lo: 0, hi: n, ns }],
+            wall_ns: ns,
+            nprod: 10,
+            chunk: None,
+        }
+    }
+
+    #[test]
+    fn record_then_lookup() {
+        let mut h = ExecHistory::new(4);
+        assert!(h.lookup((1, 2)).is_none());
+        h.record((1, 2), obs(8, 500.0));
+        let s = h.lookup((1, 2)).expect("warm");
+        assert_eq!(s.runs, 1);
+        assert_eq!(s.measured, vec![MeasuredShard { lo: 0, hi: 8, ns: 500.0 }]);
+        assert_eq!(s.ewma_wall_ns, 500.0);
+        assert_eq!(s.last_nprod, 10);
+    }
+
+    #[test]
+    fn ewma_tracks_and_latest_measurement_wins() {
+        let mut h = ExecHistory::new(4);
+        h.record((1, 1), obs(8, 1000.0));
+        h.record((1, 1), obs(8, 2000.0));
+        let s = h.lookup((1, 1)).unwrap();
+        assert_eq!(s.runs, 2);
+        assert!((s.ewma_wall_ns - (0.7 * 1000.0 + 0.3 * 2000.0)).abs() < 1e-9);
+        assert_eq!(s.measured[0].ns, 2000.0, "measured shards are the latest run's");
+    }
+
+    #[test]
+    fn fifo_eviction_is_bounded_and_counted() {
+        let mut h = ExecHistory::new(2);
+        h.record((1, 1), obs(4, 1.0));
+        h.record((2, 2), obs(4, 1.0));
+        h.record((3, 3), obs(4, 1.0));
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.evictions(), 1);
+        assert!(h.lookup((1, 1)).is_none(), "oldest pattern evicted");
+        assert!(h.lookup((2, 2)).is_some());
+        assert!(h.lookup((3, 3)).is_some());
+        // re-recording a live key must not evict anything
+        h.record((3, 3), obs(4, 2.0));
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.evictions(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut h = ExecHistory::new(0);
+        h.record((1, 1), obs(4, 1.0));
+        assert!(h.is_empty());
+        assert!(h.lookup((1, 1)).is_none());
+    }
+
+    #[test]
+    fn observation_from_device_ns_follows_the_plan() {
+        let plan = ShardPlan::balanced(&[1, 1, 1, 1, 1, 1], 3);
+        let o = RunObservation::from_device_ns(&plan, &[10.0, 20.0, 30.0], 60.0, 6);
+        assert_eq!(o.shards.len(), 3);
+        for (s, m) in o.shards.iter().enumerate() {
+            assert_eq!((m.lo, m.hi), plan.range(s));
+        }
+        assert_eq!(o.shards[2].ns, 30.0);
+        // a short device list truncates instead of panicking
+        let short = RunObservation::from_device_ns(&plan, &[10.0], 10.0, 6);
+        assert_eq!(short.shards.len(), 1);
+    }
+}

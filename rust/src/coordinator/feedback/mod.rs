@@ -1,0 +1,133 @@
+//! Feedback-driven adaptive planning: close the loop between *measured*
+//! execution and the planner stack.
+//!
+//! OpSparse's core insight is that measured behavior — not a static
+//! proxy — should drive configuration (§5.3's binning ranges are tuned
+//! from observed collision/utilization trade-offs). The serving layers
+//! above the pipeline ran entirely on a-priori proxies until this
+//! module: `ShardPlan::balanced` cuts on the `nprod` product proxy, the
+//! router's `ns_per_prod` was fit once at startup, and the overlap
+//! model's `chunk_bytes` was a fixed default. Every one of those
+//! quantities is *observable* — per-shard device times, job wall times,
+//! chunk-arrival stalls — so this module records them and feeds them
+//! back:
+//!
+//! * [`history`] — [`ExecHistory`]: a bounded, pattern-fingerprint-keyed
+//!   store of per-run observations (per-shard measured ns, end-to-end
+//!   wall time, overlap chunk feedback).
+//! * [`crate::spgemm::sharded::ShardPlan::from_history`] — re-cuts
+//!   shard bounds by equalizing measured per-row-block ns (cold
+//!   patterns fall back to the proxy; a re-cut never degrades the
+//!   modeled makespan).
+//! * [`refit`] — [`NsPerProdFit`]: a refreshable (exponentially
+//!   weighted) fit of the router's ns-per-product compute proxy that
+//!   folds in measured job execution times, replacing the write-once
+//!   `OnceLock` table — the router reads it per decision.
+//! * [`replan`] — [`tune_chunk_bytes`]: broadcast chunk-size selection
+//!   from measured arrival slack (shrink when devices stall on
+//!   `AwaitChunk`, grow when per-chunk latency keeps the pipeline from
+//!   filling).
+//!
+//! Consumers: the coordinator's `RunShard` fan-out re-plans warm
+//! sharded jobs and its barrier records completed ones; hash workers
+//! fold execution times into the live fit; `apps::SpgemmContext`
+//! threads a history through repeated sharded multiplies (AMG re-setup
+//! re-plans between levels); the `bench shards --replan` ablation
+//! records cold-vs-warm makespans to `BENCH_adaptive.json`, where CI
+//! blocks any warm regression.
+
+pub mod history;
+pub mod refit;
+pub mod replan;
+
+pub use history::{ExecHistory, PatternStats, RunObservation};
+pub use refit::{default_fit, NsPerProdFit};
+pub use replan::{tune_chunk_bytes, ChunkFeedback, MAX_CHUNK_BYTES, MIN_CHUNK_BYTES};
+
+/// Parse an on/off switch value (`on|1|true` / `off|0|false`,
+/// case-insensitive); `None` for anything else. The one parser behind
+/// every `--replan` flag and `OPSPARSE_REPLAN` env read, so the CLI,
+/// the bench binary, and [`ReplanConfig::from_env`] accept exactly the
+/// same spellings — callers decide whether an unknown value keeps a
+/// default (env paths) or is rejected (CLI flags).
+pub fn parse_on_off(s: &str) -> Option<bool> {
+    match s.to_ascii_lowercase().as_str() {
+        "on" | "1" | "true" => Some(true),
+        "off" | "0" | "false" => Some(false),
+        _ => None,
+    }
+}
+
+/// Knobs of the adaptive re-planning loop, mirroring the overlap knobs:
+/// `enabled: false` is the ablation baseline that reproduces the
+/// proxy-planned (PR 4) behavior exactly — no history is recorded, no
+/// plan is re-cut, no extra work is done on the job path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplanConfig {
+    /// Re-cut warm patterns from measured timelines (default on).
+    pub enabled: bool,
+    /// Patterns the execution history retains (FIFO eviction beyond it).
+    pub history_cap: usize,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig { enabled: true, history_cap: 128 }
+    }
+}
+
+impl ReplanConfig {
+    /// The ablation baseline: no history, no re-planning — byte-for-byte
+    /// the proxy-planned behavior.
+    pub fn off() -> ReplanConfig {
+        ReplanConfig { enabled: false, ..ReplanConfig::default() }
+    }
+
+    /// Defaults overridden by the environment, mirroring the overlap
+    /// knobs: `OPSPARSE_REPLAN=off|0|false` disables re-planning
+    /// (`on|1|true` enables; anything else keeps the default),
+    /// `OPSPARSE_HISTORY_CAP=<n>` bounds the history (an unparseable or
+    /// zero value keeps the default).
+    pub fn from_env() -> ReplanConfig {
+        let mut cfg = ReplanConfig::default();
+        if let Some(on) = std::env::var("OPSPARSE_REPLAN").ok().and_then(|v| parse_on_off(&v)) {
+            cfg.enabled = on;
+        }
+        if let Some(cap) = std::env::var("OPSPARSE_HISTORY_CAP")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+        {
+            cfg.history_cap = cap;
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn on_off_parser_accepts_both_spellings_and_rejects_junk() {
+        for v in ["on", "ON", "1", "true", "True"] {
+            assert_eq!(parse_on_off(v), Some(true), "{v}");
+        }
+        for v in ["off", "OFF", "0", "false", "False"] {
+            assert_eq!(parse_on_off(v), Some(false), "{v}");
+        }
+        for v in ["yes", "no", "", "2"] {
+            assert_eq!(parse_on_off(v), None, "{v}");
+        }
+    }
+
+    #[test]
+    fn defaults_and_off() {
+        let d = ReplanConfig::default();
+        assert!(d.enabled);
+        assert!(d.history_cap > 0);
+        let off = ReplanConfig::off();
+        assert!(!off.enabled);
+        assert_eq!(off.history_cap, d.history_cap);
+    }
+}

@@ -1,0 +1,175 @@
+//! Refreshable `ns_per_prod` calibration: the online counterpart of the
+//! startup least-squares fit.
+//!
+//! The router's shard-vs-stay decision weighs modeled transfer time
+//! against compute estimated as `n_prod × ns_per_prod`. The startup
+//! calibration fits that constant from *simulated* generator-suite
+//! timelines — but the write-once `OnceLock` table it used to live in
+//! could never be refreshed in-process, so the router kept planning with
+//! a stale constant while real measured job times flowed past it. This
+//! module replaces the frozen table with [`NsPerProdFit`]: the same
+//! deterministic startup fit as the initial value, plus an
+//! exponentially-weighted fold of measured `(execution ns, n_prod)`
+//! observations. The router reads the current fit **per decision**
+//! ([`crate::coordinator::RouterConfig::with_live_fit`]), so routing
+//! tracks the fleet it actually runs on. Reads without intervening
+//! observations are bit-stable — a fit is only moved by `observe`.
+
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Physically plausible band for the fit, matching the startup
+/// calibration's clamp: one intermediate product costs at least a
+/// fraction of an HBM access and at most a page of them.
+pub const NS_PER_PROD_MIN: f64 = 0.05;
+pub const NS_PER_PROD_MAX: f64 = 50.0;
+
+/// Weight of one new observation in the exponentially-weighted fold.
+const EWMA_ALPHA: f64 = 0.25;
+
+#[derive(Clone, Copy, Debug)]
+struct Fit {
+    k: f64,
+    updates: u64,
+}
+
+/// A refreshable ns-per-product fit: seeded with a deterministic value
+/// (the startup calibration, or a caller-chosen constant) and folded
+/// forward by measured observations. Cheap to share (`Arc`) between the
+/// router (reads) and the coordinator's workers (writes).
+#[derive(Debug)]
+pub struct NsPerProdFit {
+    state: RwLock<Fit>,
+}
+
+impl NsPerProdFit {
+    /// A fit seeded at `initial` (clamped to the plausible band).
+    pub fn new(initial: f64) -> Self {
+        let k = if initial.is_finite() {
+            initial.clamp(NS_PER_PROD_MIN, NS_PER_PROD_MAX)
+        } else {
+            1.0
+        };
+        NsPerProdFit { state: RwLock::new(Fit { k, updates: 0 }) }
+    }
+
+    /// A fit seeded from the simulated generator-suite calibration
+    /// ([`crate::coordinator::router::calibrate_ns_per_prod`]).
+    pub fn calibrated() -> Self {
+        NsPerProdFit::new(crate::coordinator::router::fit_ns_per_prod_suite())
+    }
+
+    /// The current fit. Bit-stable across repeated reads with no
+    /// intervening [`NsPerProdFit::observe`].
+    pub fn current(&self) -> f64 {
+        self.state.read().unwrap_or_else(|e| e.into_inner()).k
+    }
+
+    /// Observations folded in so far.
+    pub fn updates(&self) -> u64 {
+        self.state.read().unwrap_or_else(|e| e.into_inner()).updates
+    }
+
+    /// Fold one measured job into the fit: `exec_ns` of compute over
+    /// `nprod` intermediate products. Returns `false` (and leaves the
+    /// fit untouched) for unusable samples — zero products, non-finite
+    /// or non-positive times. A sample whose implied per-product cost
+    /// falls outside the plausible band is *clamped* to it before
+    /// folding, so outliers (queue storms, trivial jobs) can nudge the
+    /// fit toward the band edge but never poison it past physics.
+    pub fn observe(&self, exec_ns: f64, nprod: u64) -> bool {
+        if nprod == 0 || !exec_ns.is_finite() || exec_ns <= 0.0 {
+            return false;
+        }
+        let k_obs = (exec_ns / nprod as f64).clamp(NS_PER_PROD_MIN, NS_PER_PROD_MAX);
+        let mut st = self.state.write().unwrap_or_else(|e| e.into_inner());
+        st.k = (1.0 - EWMA_ALPHA) * st.k + EWMA_ALPHA * k_obs;
+        st.updates += 1;
+        true
+    }
+}
+
+/// The process-wide default fit, seeded lazily from the simulated-suite
+/// calibration on first use and returned as a shared handle — attach it
+/// to a router ([`crate::coordinator::RouterConfig::with_live_fit`]) so
+/// the expensive suite fit runs once per process, however many routers
+/// and coordinators share it. The `OnceLock` holds the *refreshable
+/// fit*, not a frozen value: observations folded into the handle move
+/// every subsequent read (including
+/// [`crate::coordinator::router::calibrate_ns_per_prod`] snapshots —
+/// "calibrated" means the process's *current* calibration, by design),
+/// which the old write-once `f64` table could not do.
+pub fn default_fit() -> Arc<NsPerProdFit> {
+    static FIT: OnceLock<Arc<NsPerProdFit>> = OnceLock::new();
+    Arc::clone(FIT.get_or_init(|| Arc::new(NsPerProdFit::calibrated())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_reads_without_observations_are_bit_stable() {
+        // the regression the OnceLock replacement must keep: a fit that
+        // nobody feeds never drifts
+        let f = NsPerProdFit::new(1.25);
+        let k0 = f.current();
+        for _ in 0..32 {
+            assert_eq!(f.current(), k0, "read must not move the fit");
+        }
+        assert_eq!(f.updates(), 0);
+        // ... and after one observation, reads are bit-stable again
+        assert!(f.observe(2000.0, 1000));
+        let k1 = f.current();
+        assert_ne!(k1, k0);
+        for _ in 0..32 {
+            assert_eq!(f.current(), k1);
+        }
+        assert_eq!(f.updates(), 1);
+    }
+
+    #[test]
+    fn observations_move_the_fit_toward_the_measured_rate() {
+        let f = NsPerProdFit::new(0.1);
+        for _ in 0..64 {
+            assert!(f.observe(10_000.0, 1000)); // 10 ns/product
+        }
+        let k = f.current();
+        assert!((k - 10.0).abs() < 0.1, "EWMA must converge near 10, got {k}");
+        assert_eq!(f.updates(), 64);
+    }
+
+    #[test]
+    fn junk_samples_are_rejected() {
+        let f = NsPerProdFit::new(1.0);
+        assert!(!f.observe(1000.0, 0), "zero products");
+        assert!(!f.observe(f64::NAN, 10), "non-finite time");
+        assert!(!f.observe(-5.0, 10), "negative time");
+        assert!(!f.observe(0.0, 10), "zero time");
+        assert_eq!(f.current(), 1.0, "rejected samples must not move the fit");
+        assert_eq!(f.updates(), 0);
+    }
+
+    #[test]
+    fn outliers_are_clamped_to_the_band_not_folded_raw() {
+        let f = NsPerProdFit::new(1.0);
+        assert!(f.observe(1e12, 1), "outliers fold clamped, not rejected");
+        let k = f.current();
+        assert!(k <= 0.75 + 0.25 * NS_PER_PROD_MAX + 1e-12, "one step toward the cap at most");
+        // even an endless storm of garbage cannot push the fit past physics
+        for _ in 0..256 {
+            f.observe(1e12, 1);
+        }
+        assert!(f.current() <= NS_PER_PROD_MAX);
+        for _ in 0..256 {
+            f.observe(1.0, 1_000_000);
+        }
+        assert!(f.current() >= NS_PER_PROD_MIN);
+    }
+
+    #[test]
+    fn seed_is_clamped_to_the_band() {
+        assert_eq!(NsPerProdFit::new(1e9).current(), NS_PER_PROD_MAX);
+        assert_eq!(NsPerProdFit::new(1e-9).current(), NS_PER_PROD_MIN);
+        assert_eq!(NsPerProdFit::new(f64::NAN).current(), 1.0);
+    }
+}

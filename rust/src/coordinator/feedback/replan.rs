@@ -1,0 +1,152 @@
+//! Chunk-size selection from measured arrival slack — the third
+//! feedback loop.
+//!
+//! The overlapped broadcast streams `B` in row-panel chunks
+//! ([`crate::gpusim::OverlapConfig::chunk_bytes`], a fixed 1 MiB by
+//! default). The right granularity is workload-dependent and
+//! observable:
+//!
+//! * **Devices stall on `AwaitChunk`** (compute finishes later than the
+//!   serial compute time because panels arrive too slowly) → *shrink*
+//!   chunks, so the first panels land earlier and the symbolic kernels
+//!   start sooner.
+//! * **The pipeline cannot fill** (the per-chunk hop latency exceeds a
+//!   chunk's wire time, so chunking pays latency without buying
+//!   overlap) → *grow* chunks, amortizing the per-message cost.
+//!
+//! [`tune_chunk_bytes`] applies one multiplicative step per observed
+//! run; the history ([`super::history::ExecHistory`]) stores the tuned
+//! size per pattern, and warm runs broadcast at the tuned granularity.
+
+use crate::gpusim::MAX_CHUNKS;
+
+/// Smallest chunk the tuner will choose: below this the per-chunk
+/// launch/latency overheads dominate any pipelining win.
+pub const MIN_CHUNK_BYTES: usize = 64 << 10;
+
+/// Largest chunk the tuner will choose (a whole-transfer chunk is the
+/// unpipelined broadcast; there is no point growing past it).
+pub const MAX_CHUNK_BYTES: usize = 64 << 20;
+
+/// Worst per-device stall above this fraction of the compute makespan
+/// triggers a shrink step.
+const STALL_SHRINK_FRAC: f64 = 0.05;
+
+/// One overlapped run's chunk-granularity measurements, extracted from
+/// the simulated schedule (`MultiDevice::overlap_stall_ns` and the
+/// interconnect parameters).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChunkFeedback {
+    /// Chunk size the run was configured with (bytes).
+    pub chunk_bytes: usize,
+    /// Chunks the broadcast actually split into (after clamping).
+    pub chunks: usize,
+    /// Broadcast payload (bytes of `B`).
+    pub b_bytes: usize,
+    /// Worst per-device time lost waiting on chunk arrivals (the max
+    /// over `MultiDevice::overlap_stall_ns`): the arrival *slack* the
+    /// schedule failed to hide on the critical path. Per-device — not
+    /// summed over the fleet — so the shrink threshold means the same
+    /// thing at 2 devices and at 8.
+    pub stall_ns: f64,
+    /// Compute makespan of the run (the scale stalls are judged
+    /// against).
+    pub compute_ns: f64,
+    /// Interconnect per-message (hop) latency, ns.
+    pub hop_latency_ns: f64,
+    /// Wire time of one chunk at the link bandwidth, ns.
+    pub chunk_xfer_ns: f64,
+}
+
+/// One multiplicative tuning step from a measured run: shrink on
+/// arrival stall, grow when per-chunk latency keeps the pipeline from
+/// filling, otherwise keep. Always returns a value in
+/// [`MIN_CHUNK_BYTES`], [`MAX_CHUNK_BYTES`].
+pub fn tune_chunk_bytes(fb: &ChunkFeedback) -> usize {
+    let cur = fb.chunk_bytes.clamp(MIN_CHUNK_BYTES, MAX_CHUNK_BYTES);
+    if fb.b_bytes == 0 || fb.chunks == 0 {
+        return cur;
+    }
+    let stall_frac = if fb.compute_ns > 0.0 { fb.stall_ns / fb.compute_ns } else { 0.0 };
+    if stall_frac > STALL_SHRINK_FRAC && fb.chunks < MAX_CHUNKS {
+        // panels arrive too late: finer chunks land the first panel
+        // earlier. (At MAX_CHUNKS the clamp makes shrinking a no-op:
+        // the stall is bandwidth, not granularity.)
+        return (cur / 2).max(MIN_CHUNK_BYTES);
+    }
+    if fb.chunks > 1 && fb.hop_latency_ns > fb.chunk_xfer_ns {
+        // each chunk pays more latency than wire time: the pipeline
+        // cannot fill, so chunking is pure overhead — coarsen
+        return cur.saturating_mul(2).min(MAX_CHUNK_BYTES);
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ChunkFeedback {
+        ChunkFeedback {
+            chunk_bytes: 1 << 20,
+            chunks: 8,
+            b_bytes: 8 << 20,
+            stall_ns: 0.0,
+            compute_ns: 1_000_000.0,
+            hop_latency_ns: 5_000.0,
+            chunk_xfer_ns: 80_000.0,
+        }
+    }
+
+    #[test]
+    fn stall_shrinks_chunks() {
+        let fb = ChunkFeedback { stall_ns: 200_000.0, ..base() };
+        assert_eq!(tune_chunk_bytes(&fb), (1 << 20) / 2);
+    }
+
+    #[test]
+    fn latency_bound_pipeline_grows_chunks() {
+        // hop latency above one chunk's wire time, no stall: coarsen
+        let fb = ChunkFeedback { hop_latency_ns: 100_000.0, ..base() };
+        assert_eq!(tune_chunk_bytes(&fb), 2 << 20);
+    }
+
+    #[test]
+    fn balanced_run_keeps_the_size() {
+        assert_eq!(tune_chunk_bytes(&base()), 1 << 20);
+    }
+
+    #[test]
+    fn bounds_hold_under_repeated_steps() {
+        // repeated shrink bottoms out at MIN, repeated grow tops out at MAX
+        let mut fb = ChunkFeedback { stall_ns: 500_000.0, ..base() };
+        for _ in 0..32 {
+            fb.chunk_bytes = tune_chunk_bytes(&fb);
+        }
+        assert_eq!(fb.chunk_bytes, MIN_CHUNK_BYTES);
+        let mut fb = ChunkFeedback { hop_latency_ns: 1e9, ..base() };
+        for _ in 0..32 {
+            fb.chunk_bytes = tune_chunk_bytes(&fb);
+        }
+        assert_eq!(fb.chunk_bytes, MAX_CHUNK_BYTES);
+    }
+
+    #[test]
+    fn clamped_chunk_count_does_not_shrink_further() {
+        // already at the chunk-count clamp: the stall is bandwidth-bound,
+        // shrinking buys nothing
+        let fb = ChunkFeedback { stall_ns: 500_000.0, chunks: MAX_CHUNKS, ..base() };
+        assert_eq!(tune_chunk_bytes(&fb), 1 << 20);
+    }
+
+    #[test]
+    fn degenerate_feedback_is_identity() {
+        let fb = ChunkFeedback { b_bytes: 0, ..base() };
+        assert_eq!(tune_chunk_bytes(&fb), 1 << 20);
+        let fb = ChunkFeedback { chunks: 0, ..base() };
+        assert_eq!(tune_chunk_bytes(&fb), 1 << 20);
+        // out-of-band configured size is clamped on the way through
+        let fb = ChunkFeedback { chunk_bytes: 1, ..base() };
+        assert_eq!(tune_chunk_bytes(&fb), MIN_CHUNK_BYTES);
+    }
+}

@@ -34,6 +34,20 @@ pub struct Metrics {
     pub shard_sym_cache_hits: AtomicU64,
     /// Shard sub-jobs that computed (and cached) their symbolic phase.
     pub shard_sym_cache_misses: AtomicU64,
+    /// Sharded jobs planned from the execution history (a warm pattern
+    /// with measured per-shard timings was consulted; the measured
+    /// re-cut is applied only when it improves the modeled makespan —
+    /// `BENCH_adaptive.json`'s `kept_replan` tracks that split).
+    pub replans: AtomicU64,
+    /// Sharded jobs that fell back to the `nprod` proxy plan because the
+    /// pattern had no recorded history (cold).
+    pub replan_cold_misses: AtomicU64,
+    /// Measured job executions folded into the live `ns_per_prod` fit.
+    pub refit_updates: AtomicU64,
+    /// Patterns currently held by the execution history (gauge).
+    pub history_patterns: AtomicU64,
+    /// Patterns evicted from the execution history so far (gauge).
+    pub history_evictions: AtomicU64,
     /// Real `cudaMalloc` calls issued through the workers' device pools.
     pub pool_device_mallocs: AtomicU64,
     /// Bytes those mallocs reserved (the fleet's grow-only footprint).
@@ -105,6 +119,11 @@ impl Metrics {
             sym_cache_misses: self.sym_cache_misses.load(Ordering::Relaxed),
             shard_sym_cache_hits: self.shard_sym_cache_hits.load(Ordering::Relaxed),
             shard_sym_cache_misses: self.shard_sym_cache_misses.load(Ordering::Relaxed),
+            replans: self.replans.load(Ordering::Relaxed),
+            replan_cold_misses: self.replan_cold_misses.load(Ordering::Relaxed),
+            refit_updates: self.refit_updates.load(Ordering::Relaxed),
+            history_patterns: self.history_patterns.load(Ordering::Relaxed),
+            history_evictions: self.history_evictions.load(Ordering::Relaxed),
             pool_device_mallocs: self.pool_device_mallocs.load(Ordering::Relaxed),
             pool_device_bytes: self.pool_device_bytes.load(Ordering::Relaxed),
             pool_hits: self.pool_hits.load(Ordering::Relaxed),
@@ -134,6 +153,16 @@ pub struct MetricsSnapshot {
     /// Shard sub-jobs replayed via shard-aware pattern-cache keys.
     pub shard_sym_cache_hits: u64,
     pub shard_sym_cache_misses: u64,
+    /// Sharded jobs planned from measured history (warm-pattern
+    /// consults; the re-cut applies only when it improves the model).
+    pub replans: u64,
+    /// Sharded jobs planned by the proxy (no history yet).
+    pub replan_cold_misses: u64,
+    /// Measured executions folded into the live ns-per-product fit.
+    pub refit_updates: u64,
+    /// Execution-history occupancy (patterns held / evicted so far).
+    pub history_patterns: u64,
+    pub history_evictions: u64,
     pub pool_device_mallocs: u64,
     pub pool_device_bytes: u64,
     pub pool_hits: u64,
@@ -178,6 +207,15 @@ impl std::fmt::Display for MetricsSnapshot {
             100.0 * self.sym_cache_hit_rate(),
             self.shard_sym_cache_hits,
             self.shard_sym_cache_misses
+        )?;
+        writeln!(
+            f,
+            "adaptive: replans={} cold_misses={} refit_updates={} history={} patterns ({} evicted)",
+            self.replans,
+            self.replan_cold_misses,
+            self.refit_updates,
+            self.history_patterns,
+            self.history_evictions
         )?;
         writeln!(
             f,

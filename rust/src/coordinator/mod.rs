@@ -20,17 +20,23 @@
 //! * [`barrier`] — the per-job shard reassembly barrier (exactly one
 //!   result per parent job, even when shards fail or are lost).
 //! * [`cache`] — the per-worker sparsity-pattern (symbolic-reuse) cache.
+//! * [`feedback`] — the adaptive planning loop: a pattern-keyed
+//!   execution history fed by measured timelines, consumed to re-cut
+//!   shard plans, re-fit the router's compute proxy online, and tune
+//!   the broadcast chunk size.
 //! * [`metrics`] — counters, latency percentiles, pool/cache/shard
 //!   telemetry.
 
 pub mod barrier;
 pub mod cache;
+pub mod feedback;
 pub mod metrics;
 pub mod router;
 pub mod service;
 
 pub use barrier::ShardBarrier;
 pub use cache::{PatternCache, PatternKey};
+pub use feedback::{ExecHistory, NsPerProdFit, ReplanConfig, RunObservation};
 pub use metrics::Metrics;
 pub use router::{Route, Router, RouterConfig};
 pub use service::{Coordinator, Job, JobResult};

@@ -49,10 +49,11 @@
 //! }
 //! ```
 
+use super::feedback::NsPerProdFit;
 use crate::gpusim::{Interconnect, OverlapConfig};
 use crate::sparse::stats::total_nprod;
 use crate::sparse::Csr;
-use std::sync::OnceLock;
+use std::sync::Arc;
 
 /// Execution path for a job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -110,6 +111,13 @@ pub struct RouterConfig {
     /// break-even toward more shards; `OverlapConfig::off()` restores
     /// the serial three-phase comparison.
     pub overlap: OverlapConfig,
+    /// Live (refreshable) ns-per-product fit. When set, the router
+    /// reads [`NsPerProdFit::current`] **per decision** instead of the
+    /// frozen `ns_per_prod` constant, so measured job times folded into
+    /// the shared fit (the coordinator's workers do this) move every
+    /// subsequent shard-vs-stay decision — the online re-fit loop.
+    /// `None` keeps the static constant.
+    pub fit: Option<Arc<NsPerProdFit>>,
 }
 
 impl Default for RouterConfig {
@@ -123,17 +131,32 @@ impl Default for RouterConfig {
             interconnect: Some(Interconnect::pcie3()),
             ns_per_prod: 1.0,
             overlap: OverlapConfig::default(),
+            fit: None,
         }
     }
 }
 
 impl RouterConfig {
-    /// [`RouterConfig::default`] with `ns_per_prod` fitted from
-    /// simulated compute timelines instead of the hard-coded constant
-    /// (see [`calibrate_ns_per_prod`]; the fit is computed once per
-    /// process and cached).
+    /// [`RouterConfig::default`] with `ns_per_prod` snapshotted from the
+    /// simulated-suite calibration instead of the hard-coded constant
+    /// (see [`calibrate_ns_per_prod`]). The snapshot does not refresh;
+    /// use [`RouterConfig::with_live_fit`] for a router that tracks
+    /// measured traffic.
     pub fn calibrated() -> Self {
         RouterConfig { ns_per_prod: calibrate_ns_per_prod(), ..Default::default() }
+    }
+
+    /// [`RouterConfig::default`] reading `fit` on every routing
+    /// decision: the compute proxy starts at the fit's current value
+    /// and follows every measured observation folded into it.
+    pub fn with_live_fit(fit: Arc<NsPerProdFit>) -> Self {
+        RouterConfig { ns_per_prod: fit.current(), fit: Some(fit), ..Default::default() }
+    }
+
+    /// The compute proxy in effect right now: the live fit when one is
+    /// attached, the static constant otherwise.
+    pub fn ns_per_prod_now(&self) -> f64 {
+        self.fit.as_ref().map(|f| f.current()).unwrap_or(self.ns_per_prod)
     }
 }
 
@@ -145,20 +168,27 @@ impl RouterConfig {
 /// the serial bound, so a rough constant is safe here.
 const ROUTER_SYM_FRACTION: f64 = 0.35;
 
+/// Current value of the process-wide default ns-per-product fit
+/// ([`crate::coordinator::feedback::default_fit`]): seeded lazily from
+/// the simulated-suite least-squares calibration (the
+/// `fit_ns_per_prod_suite` fit below) and *refreshable* — observations folded
+/// into the default fit move every later read. Reads with no
+/// intervening observations are bit-stable. (This replaces a
+/// write-once `OnceLock<f64>` table that could never be refreshed
+/// in-process.)
+pub fn calibrate_ns_per_prod() -> f64 {
+    super::feedback::default_fit().current()
+}
+
 /// Least-squares calibration of [`RouterConfig::ns_per_prod`]: run the
 /// pipeline on one representative of each generator family (uniform,
 /// power-law, stencil, Kronecker — the same families the sharding test
 /// matrix uses) at two sizes, simulate each trace on the V100 model, and
 /// fit `total_ns ≈ k · n_prod` through the origin
-/// (`k = Σ tᵢpᵢ / Σ pᵢ²`). Cached in a process-wide `OnceLock`, so the
-/// fit runs once at first use (coordinator startup) and every router
-/// built afterwards reads the table.
-pub fn calibrate_ns_per_prod() -> f64 {
-    static FIT: OnceLock<f64> = OnceLock::new();
-    *FIT.get_or_init(fit_ns_per_prod)
-}
-
-fn fit_ns_per_prod() -> f64 {
+/// (`k = Σ tᵢpᵢ / Σ pᵢ²`). Deterministic and moderately expensive —
+/// callers seed a [`NsPerProdFit`] with it once rather than refitting
+/// per read.
+pub(crate) fn fit_ns_per_prod_suite() -> f64 {
     use crate::gen::kron::Kron;
     use crate::gen::powerlaw::PowerLaw;
     use crate::gen::stencil::{Grid, Stencil};
@@ -336,7 +366,9 @@ impl Router {
             return Some(n_mem);
         };
 
-        let unsharded_ns = nprod as f64 * self.cfg.ns_per_prod;
+        // read the compute proxy *now*: with a live fit attached, every
+        // decision tracks the latest measured re-fit
+        let unsharded_ns = nprod as f64 * self.cfg.ns_per_prod_now();
         let c_gather_bytes = 12.0 * nprod as f64 / C_GATHER_COMPRESSION;
         let mut best: Option<(usize, f64)> = None;
         for k in n_mem..=max {
@@ -660,6 +692,38 @@ mod tests {
         // the placeholder constant is replaced, not echoed, unless the
         // fit happens to land exactly on it (it does not on this model)
         assert_ne!(cfg.ns_per_prod, RouterConfig::default().ns_per_prod);
+    }
+
+    #[test]
+    fn live_fit_moves_the_routing_decision_between_reads() {
+        // the online re-fit loop, end to end at the router: the same
+        // Router instance declines sharding while the fit says compute
+        // is cheap, then shards once measured observations say each
+        // product costs ~50 ns (compute now dwarfs the transfers). No
+        // router rebuild in between — the fit is read per decision.
+        let mut rng = Rng::new(56);
+        let a = Uniform { n: 20_000, per_row: 16, jitter: 4 }.generate(&mut rng);
+        let est = working_set_bytes(&a, &a);
+        let fit = Arc::new(NsPerProdFit::new(0.05));
+        let r = Router::new(RouterConfig {
+            device_memory_bytes: est / 2,
+            fit: Some(Arc::clone(&fit)),
+            ..Default::default()
+        });
+        assert_eq!(
+            r.shard_count(&a, &a),
+            None,
+            "at 0.05 ns/product the modeled transfers eat the win"
+        );
+        let nprod = crate::sparse::stats::total_nprod(&a, &a) as u64;
+        for _ in 0..64 {
+            assert!(fit.observe(nprod as f64 * 50.0, nprod));
+        }
+        assert!(r.cfg.ns_per_prod_now() > 40.0, "fit must have converged upward");
+        assert!(
+            r.shard_count(&a, &a).is_some(),
+            "with measured compute 1000x costlier, the same router must shard"
+        );
     }
 
     #[test]

@@ -16,17 +16,18 @@
 //! [`crate::spgemm::sharded::multiply_sharded`] path — emitting exactly
 //! one [`JobResult`] per parent job even when a shard fails.
 
-use super::barrier::ShardBarrier;
+use super::barrier::{ShardBarrier, ShardFeedback};
 use super::cache::PatternCache;
+use super::feedback::{ExecHistory, NsPerProdFit, ReplanConfig};
 use super::metrics::Metrics;
 use super::router::{Route, Router};
-use crate::gpusim::DevicePool;
+use crate::gpusim::{simulate, DevicePool, V100};
 use crate::runtime::BlockEngine;
 use crate::sparse::ops::row_slice;
 use crate::sparse::stats::nprod_per_row;
 use crate::sparse::Csr;
 use crate::spgemm::pipeline::{multiply_reuse, OpSparseConfig, SymbolicReuse};
-use crate::spgemm::sharded::ShardPlan;
+use crate::spgemm::sharded::{MeasuredShard, ShardPlan};
 use anyhow::Result;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
@@ -75,6 +76,12 @@ struct ShardTask {
     /// sub-job can key the shard-aware symbolic cache without re-hashing
     /// the shared operand.
     b_fp: u64,
+    /// Simulate the shard's trace and report its device time to the
+    /// barrier (set when adaptive re-planning records this parent). In a
+    /// real deployment this is a pair of CUDA events around the shard's
+    /// stream; here the simulator supplies the same measurement
+    /// deterministically.
+    measure: bool,
 }
 
 enum WorkerMsg {
@@ -119,23 +126,51 @@ pub struct Coordinator {
     tx_results: mpsc::Sender<JobResult>,
     workers: Vec<JoinHandle<()>>,
     router: Router,
+    /// Adaptive re-planning knobs (see [`ReplanConfig`]).
+    replan: ReplanConfig,
+    /// Pattern-keyed execution history: written by shard barriers on
+    /// parent completion, read at submit time to re-cut warm patterns.
+    history: Arc<Mutex<ExecHistory>>,
     pub metrics: Arc<Metrics>,
 }
 
 impl Coordinator {
     /// Start `n_workers` hash workers plus (optionally) one block worker
-    /// built from `engine_factory`.
+    /// built from `engine_factory`, with the default adaptive
+    /// re-planning config (enabled; see [`Coordinator::start_with`]).
     pub fn start(n_workers: usize, router: Router, engine_factory: Option<EngineFactory>) -> Self {
+        Coordinator::start_with(n_workers, router, engine_factory, ReplanConfig::default())
+    }
+
+    /// [`Coordinator::start`] with explicit [`ReplanConfig`]:
+    /// `replan.enabled == false` is the ablation baseline — no history
+    /// is recorded, every sharded job is proxy-planned, and the job path
+    /// does exactly what it did before the feedback layer existed.
+    ///
+    /// When the router carries a live fit
+    /// ([`super::RouterConfig::with_live_fit`]), hash workers fold each
+    /// completed job's measured execution time back into it
+    /// (`refit_updates` in the metrics), so the shard-vs-stay decision
+    /// tracks measured traffic.
+    pub fn start_with(
+        n_workers: usize,
+        router: Router,
+        engine_factory: Option<EngineFactory>,
+        replan: ReplanConfig,
+    ) -> Self {
         let (tx_hash, rx_hash) = mpsc::channel::<WorkerMsg>();
         let (tx_results, rx_results) = mpsc::channel::<JobResult>();
         let rx_hash = Arc::new(Mutex::new(rx_hash));
         let metrics = Arc::new(Metrics::new());
+        let history = Arc::new(Mutex::new(ExecHistory::new(replan.history_cap)));
+        let fit: Option<Arc<NsPerProdFit>> = router.cfg.fit.clone();
 
         let mut workers = Vec::new();
         for worker_id in 0..n_workers.max(1) {
             let rx = Arc::clone(&rx_hash);
             let tx_res = tx_results.clone();
             let metrics = Arc::clone(&metrics);
+            let fit = fit.clone();
             workers.push(std::thread::spawn(move || {
                 // warm-worker state: a grow-only device pool and a
                 // symbolic-reuse cache, both single-owner (no locks).
@@ -201,7 +236,24 @@ impl Coordinator {
                                 )),
                             };
                             metrics.observe_pool(&pool.stats().delta_since(&pool_before));
-                            task.barrier.complete(task.shard, r);
+                            // measured per-shard device time for the
+                            // execution history: the simulator plays the
+                            // role CUDA events would on hardware. A
+                            // symbolic-cache-warm shard's trace has no
+                            // symbolic ops, so its time is incomparable
+                            // with a cold shard's — report nothing and
+                            // let the barrier drop the mixed
+                            // observation (only homogeneous all-cold
+                            // runs update the plan history, which also
+                            // keeps the measurement independent of
+                            // which worker's cache a shard landed on).
+                            let shard_ns = match (&r, task.measure) {
+                                (Ok(out), true) if !out.symbolic_skipped => {
+                                    Some(simulate(&out.trace, &V100).total_ns)
+                                }
+                                _ => None,
+                            };
+                            task.barrier.complete(task.shard, r, shard_ns);
                         }
                         Ok(WorkerMsg::Run(job, _, t0)) => {
                             let key =
@@ -231,6 +283,32 @@ impl Coordinator {
                             let (c, nprod) = match result {
                                 Ok(Ok(out)) => {
                                     let np = out.nprod;
+                                    // online re-fit: fold this job's
+                                    // measured device time into the live
+                                    // ns_per_prod fit. The fit is seeded
+                                    // from (and the router compares it
+                                    // against) *simulated* device ns, so
+                                    // the observation must be in the same
+                                    // unit system — the simulator plays
+                                    // the CUDA-event role here, exactly
+                                    // as on the RunShard path; host wall
+                                    // clock would drift the fit with
+                                    // machine speed. Cache-warm replays
+                                    // skip the symbolic phase and would
+                                    // bias the full-pipeline constant
+                                    // low; skip them.
+                                    if let Some(f) = &fit {
+                                        if !out.symbolic_skipped
+                                            && f.observe(
+                                                simulate(&out.trace, &V100).total_ns,
+                                                np as u64,
+                                            )
+                                        {
+                                            metrics
+                                                .refit_updates
+                                                .fetch_add(1, Ordering::Relaxed);
+                                        }
+                                    }
                                     if reuse.is_none() {
                                         cache.insert(
                                             key,
@@ -293,7 +371,22 @@ impl Coordinator {
             tx_block
         });
 
-        Coordinator { tx_hash, tx_block, rx_results, tx_results, workers, router, metrics }
+        Coordinator {
+            tx_hash,
+            tx_block,
+            rx_results,
+            tx_results,
+            workers,
+            router,
+            replan,
+            history,
+            metrics,
+        }
+    }
+
+    /// The execution history (shared with in-flight shard barriers).
+    pub fn history(&self) -> &Arc<Mutex<ExecHistory>> {
+        &self.history
     }
 
     /// Submit a job: routed here (structure-only, cheap), then queued.
@@ -320,6 +413,33 @@ impl Coordinator {
                 // blocks and emits the one parent JobResult
                 self.metrics.sharded_routed.fetch_add(1, Ordering::Relaxed);
                 let n = n_devices.max(1);
+                // hash B's pattern once per parent job; every shard
+                // sub-job reuses it for its shard-aware cache key, and
+                // the execution history keys on (fp(A), fp(B))
+                let b_fp = job.b.pattern_fingerprint();
+                // adaptive re-planning: a warm pattern re-cuts its shard
+                // bounds from the previous run's measured per-shard
+                // times instead of the nprod proxy. Forced routes are a
+                // test/bench override and bypass adaptation the same way
+                // they bypass the router.
+                let adaptive = self.replan.enabled && job.force_route.is_none();
+                let (key, measured) = if adaptive {
+                    let key = (job.a.pattern_fingerprint(), b_fp);
+                    let measured: Option<Vec<MeasuredShard>> = {
+                        let h = self.history.lock().unwrap_or_else(|e| e.into_inner());
+                        h.lookup(key)
+                            .map(|s| s.measured.clone())
+                            .filter(|m| !m.is_empty())
+                    };
+                    if measured.is_some() {
+                        self.metrics.replans.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.metrics.replan_cold_misses.fetch_add(1, Ordering::Relaxed);
+                    }
+                    (Some(key), measured)
+                } else {
+                    (None, None)
+                };
                 // planning walks both operands end to end; a malformed
                 // pair (the failure-injection surface) must cost this
                 // job, not the submitting thread. (An auto-routed shard
@@ -327,7 +447,11 @@ impl Coordinator {
                 // per-row vector is deliberately not materialized there,
                 // since most submits never reach this branch.)
                 let planned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    ShardPlan::balanced(&nprod_per_row(&job.a, &job.b), n)
+                    let nprod = nprod_per_row(&job.a, &job.b);
+                    match &measured {
+                        Some(m) => ShardPlan::from_history(&nprod, n, m),
+                        None => ShardPlan::balanced(&nprod, n),
+                    }
                 }));
                 let plan = match planned {
                     Ok(p) => p,
@@ -348,9 +472,12 @@ impl Coordinator {
                 };
                 let a = Arc::new(job.a);
                 let b = Arc::new(job.b);
-                // hash B's pattern once per parent job; every shard
-                // sub-job reuses it for its shard-aware cache key
-                let b_fp = b.pattern_fingerprint();
+                let feedback = key.map(|key| ShardFeedback {
+                    history: Arc::clone(&self.history),
+                    key,
+                    ranges: (0..n).map(|s| plan.range(s)).collect(),
+                });
+                let measure = feedback.is_some();
                 let barrier = Arc::new(ShardBarrier::new(
                     job.id,
                     route,
@@ -360,6 +487,7 @@ impl Coordinator {
                     self.tx_results.clone(),
                     Arc::clone(&self.metrics),
                     t0,
+                    feedback,
                 ));
                 for s in 0..n {
                     let (lo, hi) = plan.range(s);
@@ -372,6 +500,7 @@ impl Coordinator {
                             a: Arc::clone(&a),
                             b: Arc::clone(&b),
                             b_fp,
+                            measure,
                         }))
                         .expect("hash workers alive");
                 }
@@ -598,6 +727,80 @@ mod tests {
         );
         // whole-job cache counters are untouched by shard sub-jobs
         assert_eq!(snap.sym_cache_hits + snap.sym_cache_misses, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn warm_sharded_pattern_replans_from_history() {
+        use crate::coordinator::feedback::NsPerProdFit;
+        use crate::coordinator::router::RouterConfig;
+        // a live fit + a budget far below any real working set: every
+        // auto-routed job shards, and repeats of the pattern re-cut from
+        // the history the first run recorded
+        let fit = Arc::new(NsPerProdFit::new(1.0));
+        let router = Router::new(RouterConfig {
+            device_memory_bytes: 4096,
+            max_devices: 4,
+            interconnect: None,
+            fit: Some(Arc::clone(&fit)),
+            ..Default::default()
+        });
+        let coord = Coordinator::start(2, router, None);
+        let mut rng = Rng::new(78);
+        let a = Uniform { n: 300, per_row: 8, jitter: 4 }.generate(&mut rng);
+        let gold = spgemm_reference(&a, &a);
+        // sequential submit→recv so each repeat sees the recorded history
+        for id in 0..3u64 {
+            coord.submit(Job { id, a: a.clone(), b: a.clone(), force_route: None });
+            let r = coord.recv().unwrap();
+            assert!(matches!(r.route, Route::Sharded { .. }));
+            assert!(r.c.unwrap().approx_eq(&gold, 1e-12), "job {id}: replanned result wrong");
+        }
+        // the §1 workloads also send ordinary hash traffic, which feeds
+        // the online ns_per_prod re-fit
+        coord.submit(Job {
+            id: 99,
+            a: a.clone(),
+            b: a.clone(),
+            force_route: Some(Route::Hash),
+        });
+        assert!(coord.recv().unwrap().c.is_ok());
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.replan_cold_misses, 1, "only the first submit is cold");
+        assert_eq!(snap.replans, 2, "every repeat must consult the history");
+        assert_eq!(snap.history_patterns, 1, "one pattern held");
+        assert_eq!(snap.history_evictions, 0);
+        assert!(snap.refit_updates >= 1, "measured hash traffic must fold into the fit");
+        assert_eq!(fit.updates(), snap.refit_updates, "metric mirrors the fit");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn replan_off_is_the_proxy_planned_baseline() {
+        use crate::coordinator::feedback::ReplanConfig;
+        use crate::coordinator::router::RouterConfig;
+        let router = Router::new(RouterConfig {
+            device_memory_bytes: 4096,
+            max_devices: 4,
+            interconnect: None,
+            ..Default::default()
+        });
+        let coord = Coordinator::start_with(1, router, None, ReplanConfig::off());
+        let mut rng = Rng::new(79);
+        let a = Uniform { n: 250, per_row: 7, jitter: 3 }.generate(&mut rng);
+        let gold = spgemm_reference(&a, &a);
+        for id in 0..2u64 {
+            coord.submit(Job { id, a: a.clone(), b: a.clone(), force_route: None });
+            let r = coord.recv().unwrap();
+            assert!(matches!(r.route, Route::Sharded { .. }));
+            assert!(r.c.unwrap().approx_eq(&gold, 1e-12));
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.replans, 0, "ablation baseline must never replan");
+        assert_eq!(snap.replan_cold_misses, 0, "… or even consult the history");
+        assert_eq!(snap.history_patterns, 0, "… or record into it");
+        assert_eq!(snap.refit_updates, 0, "no fit attached, nothing folded");
+        assert!(coord.history().lock().unwrap().is_empty());
         coord.shutdown();
     }
 

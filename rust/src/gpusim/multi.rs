@@ -179,6 +179,20 @@ impl Interconnect {
         self.latency_us * 1e3
     }
 
+    /// Wire time of one chunk when `bytes` stream in `chunks` panels —
+    /// the per-chunk rate every arrival schedule here is built from.
+    /// Exposed so feedback consumers (chunk-size tuning) read the same
+    /// figure the simulator charges instead of re-deriving it.
+    pub fn chunk_xfer_ns(&self, bytes: usize, chunks: usize) -> f64 {
+        bytes as f64 / chunks.max(1) as f64 / self.bandwidth_gbps
+    }
+
+    /// Per-message (hop) latency in ns — the other half of the chunk
+    /// trade-off the tuner weighs.
+    pub fn hop_latency_ns(&self) -> f64 {
+        self.latency_ns()
+    }
+
     /// Time to replicate `bytes` from the root onto the other
     /// `n_devices - 1` devices. Zero for a single device. Errors on a
     /// non-positive bandwidth instead of dividing by zero.
@@ -244,7 +258,7 @@ impl Interconnect {
             return Ok(vec![vec![0.0; k]; n_devices.max(1)]);
         }
         let peers = n_devices - 1;
-        let cx = bytes as f64 / k as f64 / self.bandwidth_gbps;
+        let cx = self.chunk_xfer_ns(bytes, k);
         let lat = self.latency_ns();
         let mut arr = vec![vec![0.0f64; k]; n_devices];
         match self.topology {
@@ -501,7 +515,7 @@ impl MultiDevice {
         let n = md.n_devices();
         let chunks = traces.iter().map(|t| t.chunk_deps()).max().unwrap_or(0).max(1);
         let arrivals = ic.chunk_arrivals(b_bytes, n, chunks)?;
-        let chunk_xfer = b_bytes as f64 / chunks as f64 / ic.bandwidth_gbps;
+        let chunk_xfer = ic.chunk_xfer_ns(b_bytes, chunks);
 
         let mut finish = Vec::with_capacity(n);
         let mut lanes = OverlapLanes::default();
@@ -562,6 +576,25 @@ impl MultiDevice {
     /// schedule hid behind compute (0 when simulated serially).
     pub fn overlap_saved_ns(&self) -> f64 {
         self.overlapped_makespan_ns().map_or(0.0, |o| self.makespan_ns() - o)
+    }
+
+    /// Per-device chunk-arrival **stall** under the overlapped schedule:
+    /// how much later each device finished than its undisturbed compute
+    /// time — the broadcast slack the pipeline failed to hide (the
+    /// feedback signal chunk-size tuning reads; see
+    /// [`crate::coordinator::feedback::tune_chunk_bytes`]). All zeros
+    /// when the run was simulated serially; the root (device 0) owns `B`
+    /// and never stalls.
+    pub fn overlap_stall_ns(&self) -> Vec<f64> {
+        match &self.overlap {
+            Some(o) => o
+                .device_finish_ns
+                .iter()
+                .zip(&self.timelines)
+                .map(|(f, t)| (f - t.total_ns).max(0.0))
+                .collect(),
+            None => vec![0.0; self.timelines.len()],
+        }
     }
 
     /// Compute critical path: the slowest device's wall time (devices
@@ -836,6 +869,44 @@ mod tests {
             assert!(report.lanes.overlapped_busy_ns() > 0.0, "lanes must overlap");
             assert!(report.lanes.end_ns <= serial + 1e-6);
         }
+    }
+
+    #[test]
+    fn overlap_stall_is_the_unhidden_broadcast_slack() {
+        use crate::gpusim::trace::TraceOp;
+        // every device waits for all chunks before computing: the stall
+        // is positive on non-root devices and bounded by the serial
+        // broadcast; the root owns B and never stalls
+        let mk = |chunks: usize| {
+            let mut t = trace_with_blocks(500);
+            let mut ops = Vec::new();
+            for c in 0..chunks {
+                ops.push(TraceOp::AwaitChunk { chunk: c, step: "symbolic" });
+            }
+            ops.append(&mut t.ops);
+            t.ops = ops;
+            t
+        };
+        let ic = Interconnect::pcie3();
+        let traces: Vec<Trace> = (0..3).map(|_| mk(4)).collect();
+        let md = MultiDevice::simulate_overlapped(
+            traces.iter(),
+            &V100,
+            &ic,
+            32 << 20,
+            &[1 << 20; 3],
+        )
+        .unwrap();
+        let stall = md.overlap_stall_ns();
+        assert_eq!(stall.len(), 3);
+        assert_eq!(stall[0], 0.0, "the root owns B");
+        for (d, &s) in stall.iter().enumerate().skip(1) {
+            assert!(s > 0.0, "device {d} must stall waiting on panels");
+            assert!(s <= md.broadcast_ns + 1e-6, "stall cannot exceed the serial broadcast");
+        }
+        // a serial simulation reports no stall at all
+        let serial = MultiDevice::simulate(traces.iter(), &V100);
+        assert!(serial.overlap_stall_ns().iter().all(|&s| s == 0.0));
     }
 
     #[test]

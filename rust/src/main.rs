@@ -6,9 +6,11 @@
 //! * `suite [--scale s] [--verify]` — all 26 matrices, all libraries
 //! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|all>`
 //!   (`bench shards` takes `--interconnect pcie|nvlink|none`,
-//!   `--overlap on|off`, `--chunk-kb <KiB>`, `--json <path>`, and
-//!   `--overlap-json <path>`)
-//! * `serve [--jobs n] [--workers w]` — coordinator demo (job queue)
+//!   `--overlap on|off`, `--chunk-kb <KiB>`, `--json <path>`,
+//!   `--overlap-json <path>`, `--replan on|off`, and
+//!   `--adaptive-json <path>`)
+//! * `serve [--jobs n] [--workers w] [--replan on|off] [--history-cap n]`
+//!   — coordinator demo (job queue)
 //! * `sim-case webbase` — §6.3.4 / §6.3.5 case-study timeline
 //!
 //! Offline build: argument parsing is hand-rolled (no clap in the vendor
@@ -162,6 +164,7 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             figures::pool_ablation(scale, reps)?;
         }
         "shards" => {
+            use opsparse::coordinator::feedback::parse_on_off;
             let name = flags.get("interconnect").map(|s| s.as_str()).unwrap_or("pcie");
             let ic = opsparse::gpusim::Interconnect::parse_opt(name)
                 .with_context(|| format!("unknown interconnect {name} (pcie|nvlink|none)"))?;
@@ -169,11 +172,8 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             // (OPSPARSE_OVERLAP / OPSPARSE_OVERLAP_CHUNK_KB); flags win
             let mut overlap = opsparse::gpusim::OverlapConfig::from_env();
             if let Some(v) = flags.get("overlap") {
-                overlap.enabled = match v.to_ascii_lowercase().as_str() {
-                    "on" | "1" | "true" => true,
-                    "off" | "0" | "false" => false,
-                    other => bail!("unknown --overlap value {other} (on|off)"),
-                };
+                overlap.enabled = parse_on_off(v)
+                    .with_context(|| format!("unknown --overlap value {v} (on|off)"))?;
             }
             if let Some(kb) = flags.get("chunk-kb") {
                 let kb: usize = kb.parse().context("--chunk-kb <KiB>")?;
@@ -190,6 +190,28 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             }
             if let Some(path) = flags.get("overlap-json") {
                 opsparse::bench::write_overlap_json(path, scale, &rows)?;
+            }
+            // --replan runs the adaptive cold-vs-warm ablation on top
+            // and emits BENCH_adaptive.json. Env defaults, flags win —
+            // the same pattern as the overlap knobs above.
+            let mut replan_on = std::env::var("OPSPARSE_REPLAN")
+                .ok()
+                .and_then(|v| parse_on_off(&v))
+                .unwrap_or(false);
+            if let Some(v) = flags.get("replan") {
+                replan_on = parse_on_off(v)
+                    .with_context(|| format!("unknown --replan value {v} (on|off)"))?;
+            }
+            if replan_on {
+                // warm <= cold is enforced inside adaptive_replan
+                let arows = figures::adaptive_replan(scale)?;
+                let env_path = std::env::var("OPSPARSE_BENCH_JSON_ADAPTIVE").ok();
+                let path = flags
+                    .get("adaptive-json")
+                    .map(String::as_str)
+                    .or(env_path.as_deref())
+                    .unwrap_or("BENCH_adaptive.json");
+                opsparse::bench::write_adaptive_json(path, scale, &arows)?;
             }
         }
         "perf" => {
@@ -236,11 +258,32 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     } else {
         None
     };
-    // startup calibration: fit ns_per_prod from simulated timelines so
-    // the shard-vs-stay decision tracks the cost model (cached fit)
-    let router_cfg = opsparse::coordinator::RouterConfig::calibrated();
-    println!("router: calibrated ns_per_prod = {:.3}", router_cfg.ns_per_prod);
-    let coord = Coordinator::start(workers, Router::new(router_cfg), factory);
+    // adaptive knobs: env defaults (OPSPARSE_REPLAN / OPSPARSE_HISTORY_CAP),
+    // flags win — mirroring the overlap knobs
+    let mut replan = opsparse::coordinator::ReplanConfig::from_env();
+    if let Some(v) = flags.get("replan") {
+        replan.enabled = opsparse::coordinator::feedback::parse_on_off(v)
+            .with_context(|| format!("unknown --replan value {v} (on|off)"))?;
+    }
+    if let Some(cap) = flags.get("history-cap") {
+        let cap: usize = cap.parse().context("--history-cap <n>")?;
+        if cap == 0 {
+            bail!("--history-cap must be positive");
+        }
+        replan.history_cap = cap;
+    }
+    // the process-wide default fit, made *live*: workers fold measured
+    // job times back in, and the router reads the current fit per
+    // decision (one suite calibration per process, shared)
+    let fit = opsparse::coordinator::feedback::default_fit();
+    let router_cfg = opsparse::coordinator::RouterConfig::with_live_fit(fit.clone());
+    println!(
+        "router: calibrated ns_per_prod = {:.3} (live re-fit); replan: {} (history cap {})",
+        router_cfg.ns_per_prod,
+        if replan.enabled { "on" } else { "off" },
+        replan.history_cap
+    );
+    let coord = Coordinator::start_with(workers, Router::new(router_cfg), factory, replan);
     // mixed workload: alternating blocky (FEM) and scattered matrices
     let mut rng = Rng::new(2026);
     let t0 = std::time::Instant::now();
@@ -265,9 +308,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let snap = coord.metrics.snapshot();
     println!("{snap}");
     println!(
-        "throughput: {:.1} jobs/s, {:.2} Gprod/s",
+        "throughput: {:.1} jobs/s, {:.2} Gprod/s  (ns_per_prod now {:.3} after {} refits)",
         jobs as f64 / wall,
-        snap.nprod_total as f64 / wall / 1e9
+        snap.nprod_total as f64 / wall / 1e9,
+        fit.current(),
+        fit.updates()
     );
     coord.shutdown();
     if failed > 0 {
@@ -331,7 +376,8 @@ fn usage() -> ! {
            bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|all> [--scale s]\n\
                     shards also takes [--interconnect pcie|nvlink|none] [--overlap on|off]\n\
                     [--chunk-kb n] [--json out.json] [--overlap-json out.json]\n\
-           serve    [--jobs n] [--workers w] [--no-engine]\n\
+                    [--replan on|off] [--adaptive-json out.json]\n\
+           serve    [--jobs n] [--workers w] [--no-engine] [--replan on|off] [--history-cap n]\n\
            sim-case webbase [--scale s]\n\
            list     (suite matrix names)"
     );

@@ -18,7 +18,7 @@ pub use kernel_tables::{BinningRanges, KernelConfig, NumericRanges, SymbolicRang
 pub use pipeline::{multiply, multiply_reuse, OpSparseConfig, SpgemmOutput, SymbolicReuse};
 pub use sharded::{
     annotate_chunk_deps, multiply_sharded, multiply_sharded_pooled, multiply_sharded_with,
-    ShardPlan, ShardReuse, ShardedOutput,
+    MeasuredShard, ShardPlan, ShardReuse, ShardedOutput,
 };
 
 /// Which hash-probe implementation to use (paper §5.2 / Fig 9).
