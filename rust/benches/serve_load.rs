@@ -1,0 +1,58 @@
+//! `cargo bench --bench serve_load` — the serving front door under a
+//! concurrent-identical load: coalesced vs uncoalesced rows (throughput,
+//! executed jobs, symbolic executions, coalesce hits, p50/p99 serve
+//! latency, max queue depth, bit-identity), plus the warm-start
+//! persistence round trip and the all-knobs-off baseline-parity check.
+//!
+//! Env:
+//! * `OPSPARSE_SCALE=tiny|small|medium` (default tiny)
+//! * `OPSPARSE_BENCH_SERVE_JOBS=<n>` — identical requests (default 32)
+//! * `OPSPARSE_BENCH_JSON_SERVE=<path>` — record the report as JSON; CI
+//!   writes `BENCH_serve.json` this way, next to the other `BENCH_*`
+//!   baselines, and blocks on: coalesced throughput ≥ uncoalesced,
+//!   `sym_executions == 1` and `coalesce_hits == jobs − 1` on the
+//!   coalesced row, bit-identical fan-out on both rows, and the
+//!   `persist_route_stable` / `baseline_match` verdicts.
+//!
+//! The bench itself enforces the hard contracts too, so a plain
+//! `cargo bench --bench serve_load` fails loudly without CI.
+
+use opsparse::bench::{serve_bench, write_serve_json};
+use opsparse::gen::suite::SuiteScale;
+
+fn main() {
+    let scale = std::env::var("OPSPARSE_SCALE")
+        .ok()
+        .and_then(|s| SuiteScale::parse(&s))
+        .unwrap_or(SuiteScale::Tiny);
+    let jobs = std::env::var("OPSPARSE_BENCH_SERVE_JOBS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(32);
+    let report = serve_bench::serve_load(jobs, scale).expect("serve_load bench");
+    let coalesced = &report.rows[0];
+    let uncoalesced = &report.rows[1];
+    assert!(coalesced.bit_identical, "coalesced results diverged from independent multiplies");
+    assert!(uncoalesced.bit_identical, "uncoalesced results diverged from independent multiplies");
+    assert_eq!(
+        coalesced.sym_executions, 1,
+        "{} identical in-flight requests must execute exactly one symbolic phase",
+        report.jobs
+    );
+    assert_eq!(
+        coalesced.coalesce_hits,
+        report.jobs as u64 - 1,
+        "every request after the leader must coalesce"
+    );
+    assert!(
+        coalesced.throughput_jobs_per_s >= uncoalesced.throughput_jobs_per_s,
+        "coalesced throughput {:.1} jobs/s below uncoalesced {:.1} jobs/s",
+        coalesced.throughput_jobs_per_s,
+        uncoalesced.throughput_jobs_per_s
+    );
+    assert!(report.persist_route_stable, "warm-start persistence round trip not route-stable");
+    assert!(report.baseline_match, "all-knobs-off front door diverged from the raw coordinator");
+    if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON_SERVE") {
+        write_serve_json(&path, &report).expect("write serve json");
+    }
+}

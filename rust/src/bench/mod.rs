@@ -3,6 +3,7 @@
 //! (`opsparse bench <target>`) and the `cargo bench` targets.
 
 pub mod figures;
+pub mod serve_bench;
 pub mod tables;
 
 use crate::gpusim::{simulate, Timeline, V100};
@@ -172,6 +173,52 @@ pub fn write_adaptive_json(
         ));
     }
     out.push_str("  ]\n}\n");
+    std::fs::write(path, out)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Serialize the serving-front-door bench as JSON: `BENCH_serve.json`,
+/// uploaded by CI next to the other `BENCH_*.json` baselines and
+/// consumed by the blocking checks there (coalesced throughput ≥
+/// uncoalesced, `sym_executions == 1` with `coalesce_hits == jobs − 1`
+/// on the coalesced row, bit-identical fan-out, persistence route
+/// stability, and all-knobs-off baseline parity). One row per mode plus
+/// the two verdict booleans — the file is a contract, keep it small.
+pub fn write_serve_json(path: &str, report: &serve_bench::ServeBenchReport) -> Result<()> {
+    fn opt(v: Option<u64>) -> String {
+        v.map(|x| x.to_string()).unwrap_or_else(|| "null".to_string())
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\n  \"bench\": \"serve\",\n  \"scale\": \"{:?}\",\n  \"jobs\": {},\n  \"rows\": [\n",
+        report.scale, report.jobs
+    ));
+    for (i, r) in report.rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"jobs\": {}, \"wall_ns\": {}, \
+             \"throughput_jobs_per_s\": {:.4}, \"executed_jobs\": {}, \"sym_executions\": {}, \
+             \"coalesce_hits\": {}, \"rejected_jobs\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \
+             \"queue_depth_max\": {}, \"bit_identical\": {}}}{}\n",
+            r.mode,
+            r.jobs,
+            r.wall_ns,
+            r.throughput_jobs_per_s,
+            r.executed_jobs,
+            r.sym_executions,
+            r.coalesce_hits,
+            r.rejected_jobs,
+            opt(r.p50_ns),
+            opt(r.p99_ns),
+            r.queue_depth_max,
+            r.bit_identical,
+            if i + 1 < report.rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str(&format!(
+        "  ],\n  \"persist_route_stable\": {},\n  \"baseline_match\": {}\n}}\n",
+        report.persist_route_stable, report.baseline_match
+    ));
     std::fs::write(path, out)?;
     println!("wrote {path}");
     Ok(())

@@ -1,0 +1,283 @@
+//! `bench serve` — the serving front door under a concurrent-identical
+//! load, with the three contract checks CI blocks on:
+//!
+//! 1. **Coalescing** — N identical in-flight requests execute exactly
+//!    one symbolic phase (`sym_executions == 1`, `coalesce_hits ==
+//!    N−1`) and every waiter's matrix is bit-identical to an
+//!    independent [`crate::spgemm::pipeline::multiply`]. The
+//!    uncoalesced row is the ablation: same load with `--coalesce off`
+//!    executes every member, so coalesced throughput must come out ≥
+//!    uncoalesced.
+//! 2. **Warm-start persistence** — a front door restarted on its saved
+//!    state routes the warm pattern identically to the pre-restart run,
+//!    with the restored fit bit-equal and the first submit re-planned
+//!    from warm history (`replans == 1`, `replan_cold_misses == 0`).
+//! 3. **Baseline parity** — every knob off reproduces the raw
+//!    coordinator (PR 5) behavior: bit-identical results, identical
+//!    routes, identical job/cache/product counters.
+//!
+//! Determinism of the coalescing count: the front door runs one worker
+//! with `inflight_cap = 1`, and a **plug job** (a larger,
+//! different-pattern multiply) is submitted first. The plug occupies
+//! the only inflight slot, so the first identical request stays an
+//! outstanding leader — every later identical submit must attach to it
+//! while the plug grinds. Submitting the whole load takes microseconds
+//! against the plug's milliseconds, so `coalesce_hits = N−1` exactly.
+//! The plug rides both modes (same overhead on each side) and its own
+//! counters are subtracted from the reported row.
+
+use crate::coordinator::feedback::NsPerProdFit;
+use crate::coordinator::serve::{Serve, ServeConfig, ServeResult};
+use crate::coordinator::{Coordinator, Job, ReplanConfig, Router, RouterConfig};
+use crate::gen::suite::SuiteScale;
+use crate::gen::uniform::Uniform;
+use crate::sparse::Csr;
+use crate::spgemm::pipeline::{multiply, OpSparseConfig};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One serving mode (coalesced or uncoalesced) under the identical
+/// load. Counters are deltas with the plug job subtracted out.
+#[derive(Clone, Debug)]
+pub struct ServeModeRow {
+    pub mode: &'static str,
+    /// Identical requests served (the plug not counted).
+    pub jobs: usize,
+    /// First submit → last fan-out, ns (plug included on both modes).
+    pub wall_ns: u64,
+    pub throughput_jobs_per_s: f64,
+    /// Multiplies the coordinator actually executed for the load.
+    pub executed_jobs: u64,
+    /// Symbolic phases computed for the load (the coalescing contract:
+    /// exactly 1 in coalesced mode).
+    pub sym_executions: u64,
+    pub coalesce_hits: u64,
+    pub rejected_jobs: u64,
+    /// Serve-latency percentiles over every waiter (plug included).
+    pub p50_ns: Option<u64>,
+    pub p99_ns: Option<u64>,
+    pub queue_depth_max: u64,
+    /// Every waiter's matrix equals the independent-multiply reference.
+    pub bit_identical: bool,
+}
+
+/// The full `bench serve` report: both mode rows plus the persistence
+/// and baseline-parity verdicts CI blocks on.
+#[derive(Clone, Debug)]
+pub struct ServeBenchReport {
+    pub jobs: usize,
+    pub scale: SuiteScale,
+    pub rows: Vec<ServeModeRow>,
+    /// Restarted-on-saved-state front door routed the warm pattern
+    /// identically (bit-equal fit, warm re-plan, same route).
+    pub persist_route_stable: bool,
+    /// All-knobs-off front door matched the raw coordinator bitwise
+    /// (results, routes, counters).
+    pub baseline_match: bool,
+}
+
+fn sizes(scale: SuiteScale) -> usize {
+    match scale {
+        SuiteScale::Tiny => 200,
+        SuiteScale::Small => 400,
+        SuiteScale::Medium => 800,
+    }
+}
+
+/// Run the identical load through one front-door mode and report the
+/// plug-subtracted counters.
+fn run_mode(
+    coalesce: bool,
+    jobs: usize,
+    a: &Csr,
+    b: &Csr,
+    plug: &Csr,
+    expected: &Csr,
+) -> Result<ServeModeRow> {
+    let mut cfg = ServeConfig::default();
+    cfg.workers = 1;
+    cfg.coalesce = coalesce;
+    cfg.inflight_cap = 1;
+    cfg.ns_per_prod = Some(1.0);
+    let serve = Serve::start(cfg)?;
+    let t0 = Instant::now();
+    // the plug holds the single inflight slot while the load submits
+    let plug_ticket = serve.submit("bench", plug.clone(), plug.clone());
+    let tickets: Vec<_> =
+        (0..jobs).map(|_| serve.submit("bench", a.clone(), b.clone())).collect();
+    ensure!(plug_ticket.wait().csr().is_some(), "plug job failed");
+    let mut bit_identical = true;
+    for t in tickets {
+        match t.wait() {
+            ServeResult::Done { c, .. } => bit_identical &= **c == *expected,
+            other => {
+                eprintln!("serve bench: request did not complete: {other:?}");
+                bit_identical = false;
+            }
+        }
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let snap = serve.metrics_snapshot();
+    serve.shutdown();
+    Ok(ServeModeRow {
+        mode: if coalesce { "coalesced" } else { "uncoalesced" },
+        jobs,
+        wall_ns,
+        throughput_jobs_per_s: jobs as f64 / (wall_ns.max(1) as f64 / 1e9),
+        // minus the plug's own completion / symbolic miss
+        executed_jobs: snap.jobs_completed.saturating_sub(1),
+        sym_executions: snap.sym_cache_misses.saturating_sub(1),
+        coalesce_hits: snap.coalesce_hits,
+        rejected_jobs: snap.rejected_jobs,
+        p50_ns: snap.serve_p50_ns,
+        p99_ns: snap.serve_p99_ns,
+        queue_depth_max: snap.queue_depth_max,
+        bit_identical,
+    })
+}
+
+/// Save warm state on shutdown, restart on it, and check the warm
+/// pattern routes identically (same route, bit-equal fit, first submit
+/// re-planned from warm history).
+fn persist_round_trip() -> Result<bool> {
+    let path = std::env::temp_dir()
+        .join(format!("opsparse-serve-bench-{}.state", std::process::id()));
+    let path_s = path.to_string_lossy().into_owned();
+    let _ = std::fs::remove_file(&path);
+    let mk_cfg = || {
+        let mut c = ServeConfig::default();
+        c.workers = 2;
+        c.ns_per_prod = Some(1.0);
+        c.persist = Some(path_s.clone());
+        // a 4 KiB device budget forces the pattern onto the sharded
+        // route, which is the one warm history re-plans
+        c.device_memory_bytes = 4096;
+        c.max_devices = 4;
+        c.interconnect = None;
+        c
+    };
+    let a = Uniform { n: 300, per_row: 6, jitter: 2 }.generate(&mut Rng::new(21));
+    let serve = Serve::start(mk_cfg())?;
+    let mut route_before = None;
+    for _ in 0..3 {
+        let r = serve.submit("bench", a.clone(), a.clone()).wait();
+        ensure!(r.csr().is_some(), "persistence-phase job failed");
+        route_before = r.route();
+    }
+    let fit_before = serve.fit().current().to_bits();
+    serve.shutdown(); // writes the state file
+    let serve2 = Serve::start(mk_cfg())?;
+    let fit_after = serve2.fit().current().to_bits();
+    let r2 = serve2.submit("bench", a.clone(), a.clone()).wait();
+    let snap2 = serve2.metrics_snapshot();
+    serve2.shutdown();
+    let _ = std::fs::remove_file(&path);
+    let stable = route_before.is_some()
+        && r2.route() == route_before
+        && fit_after == fit_before
+        && snap2.replan_cold_misses == 0
+        && snap2.replans >= 1;
+    if !stable {
+        eprintln!(
+            "serve bench: persistence NOT stable: route {:?} -> {:?}, fit {:016x} -> {:016x}, \
+             replans {} cold_misses {}",
+            route_before,
+            r2.route(),
+            fit_before,
+            fit_after,
+            snap2.replans,
+            snap2.replan_cold_misses
+        );
+    }
+    Ok(stable)
+}
+
+/// Every knob off vs the raw coordinator, over one serial job stream:
+/// bitwise results, routes, and counters must match.
+fn baseline_parity() -> Result<bool> {
+    let mut cfg = ServeConfig::default();
+    cfg.workers = 1;
+    cfg.coalesce = false;
+    cfg.ns_per_prod = Some(1.0);
+    let serve = Serve::start(cfg)?;
+    let fit = Arc::new(NsPerProdFit::new(1.0));
+    let raw_rc = RouterConfig {
+        ns_per_prod: fit.current(),
+        fit: Some(fit),
+        ..RouterConfig::default()
+    };
+    let coord = Coordinator::start_with(1, Router::new(raw_rc), None, ReplanConfig::default());
+    let m1 = Uniform { n: 220, per_row: 6, jitter: 2 }.generate(&mut Rng::new(31));
+    let m2 = Uniform { n: 180, per_row: 9, jitter: 3 }.generate(&mut Rng::new(32));
+    // two patterns, twice each: the repeat exercises the symbolic cache
+    // on both sides
+    let stream = [&m1, &m2, &m1, &m2];
+    let mut ok = true;
+    for (i, m) in stream.iter().enumerate() {
+        let sres = serve.submit("parity", (*m).clone(), (*m).clone()).wait();
+        coord.submit(Job { id: i as u64, a: (*m).clone(), b: (*m).clone(), force_route: None });
+        let cres = coord.recv().context("raw coordinator hung up")?;
+        match (sres, cres.c) {
+            (ServeResult::Done { c, route, .. }, Ok(raw_c)) => {
+                ok &= *c == raw_c && route == cres.route;
+            }
+            _ => ok = false,
+        }
+    }
+    let s = serve.metrics_snapshot();
+    let r = coord.metrics.snapshot();
+    ok &= (s.jobs_submitted, s.jobs_completed, s.jobs_failed)
+        == (r.jobs_submitted, r.jobs_completed, r.jobs_failed);
+    ok &= (s.hash_routed, s.block_routed, s.sharded_routed)
+        == (r.hash_routed, r.block_routed, r.sharded_routed);
+    ok &= (s.sym_cache_hits, s.sym_cache_misses, s.nprod_total)
+        == (r.sym_cache_hits, r.sym_cache_misses, r.nprod_total);
+    // the new gauges must stay untouched with the knobs off
+    ok &= s.coalesce_hits == 0 && s.rejected_jobs == 0 && s.batches == 0 && s.batched_jobs == 0;
+    serve.shutdown();
+    coord.shutdown();
+    if !ok {
+        eprintln!("serve bench: all-knobs-off front door DIVERGED from the raw coordinator");
+    }
+    Ok(ok)
+}
+
+/// The `bench serve` entry: both mode rows plus the persistence and
+/// parity verdicts, printed as a table and returned for JSON recording.
+pub fn serve_load(jobs: usize, scale: SuiteScale) -> Result<ServeBenchReport> {
+    let jobs = jobs.max(2);
+    let n = sizes(scale);
+    let a = Uniform { n, per_row: 8, jitter: 3 }.generate(&mut Rng::new(11));
+    let b = Uniform { n, per_row: 8, jitter: 3 }.generate(&mut Rng::new(12));
+    // the plug: different pattern, ~two orders of magnitude more work
+    // than one fingerprinted submit
+    let plug = Uniform { n: n * 6, per_row: 12, jitter: 4 }.generate(&mut Rng::new(13));
+    let expected = multiply(&a, &b, &OpSparseConfig::default())?.c;
+    println!("serve bench: {jobs} identical requests at {scale:?} (n={n})");
+    let rows =
+        vec![run_mode(true, jobs, &a, &b, &plug, &expected)?, run_mode(false, jobs, &a, &b, &plug, &expected)?];
+    for row in &rows {
+        println!(
+            "  {:<12} wall {:>10} ns  {:>8.1} jobs/s  executed {:>3}  sym {:>2}  \
+             coalesce_hits {:>3}  p50 {:?}  p99 {:?}  depth_max {}  bit_identical {}",
+            row.mode,
+            row.wall_ns,
+            row.throughput_jobs_per_s,
+            row.executed_jobs,
+            row.sym_executions,
+            row.coalesce_hits,
+            row.p50_ns,
+            row.p99_ns,
+            row.queue_depth_max,
+            row.bit_identical
+        );
+    }
+    let persist_route_stable = persist_round_trip()?;
+    let baseline_match = baseline_parity()?;
+    println!(
+        "  persist_route_stable {persist_route_stable}  baseline_match {baseline_match}"
+    );
+    Ok(ServeBenchReport { jobs, scale, rows, persist_route_stable, baseline_match })
+}

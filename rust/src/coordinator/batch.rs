@@ -1,0 +1,185 @@
+//! Size/age-watermarked batching for the serving front door.
+//!
+//! Many serving workloads are storms of *small* multiplies — each one
+//! cheap enough that per-job queue traffic, worker wakeups, and cold
+//! pool growth dominate its cost (the serving-scale echo of the §5.4
+//! launch-overhead argument). The front door therefore accumulates
+//! hash-routed requests in an open batch and flushes them to the
+//! coordinator as **one worker visit**
+//! ([`crate::coordinator::Coordinator::submit_batch`]): the members run
+//! back-to-back on one worker's device pool and pattern cache, so the
+//! visit is amortized and repeated patterns within the batch warm the
+//! same cache — while results stay bit-identical to one-at-a-time
+//! submission.
+//!
+//! A batch closes on whichever watermark trips first:
+//!
+//! * **size** — `max_jobs` members buys no further amortization per
+//!   member, flush;
+//! * **age** — the oldest member has waited `max_age`; latency bounds
+//!   beat a fuller batch (the dispatcher polls [`Batcher::take_aged`]
+//!   every tick).
+//!
+//! [`BatchConfig::default`] is **off**: the front door then forwards
+//! every request individually, reproducing the pre-batching (PR 5)
+//! submission pattern exactly.
+
+use super::service::Job;
+use std::time::{Duration, Instant};
+
+/// Knobs of the front door's batcher. `enabled: false` (the default) is
+/// the baseline: no batch is ever opened and every job is forwarded
+/// individually.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Accumulate hash-routed requests into batched worker visits.
+    pub enabled: bool,
+    /// Size watermark: flush when the open batch reaches this many jobs.
+    pub max_jobs: usize,
+    /// Age watermark: flush when the oldest member has waited this long.
+    pub max_age: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { enabled: false, max_jobs: 8, max_age: Duration::from_millis(2) }
+    }
+}
+
+impl BatchConfig {
+    /// Batching on, with the default watermarks.
+    pub fn on() -> BatchConfig {
+        BatchConfig { enabled: true, ..BatchConfig::default() }
+    }
+}
+
+/// The open-batch accumulator. Watermark policy only — it never talks
+/// to the coordinator itself; the dispatcher submits whatever a method
+/// returns. (It also doesn't check `BatchConfig::enabled`: the caller
+/// decides whether to route jobs through the batcher at all.)
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatchConfig,
+    open: Vec<Job>,
+    /// When the current batch's first member arrived (age watermark).
+    opened_at: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatchConfig) -> Self {
+        Batcher { cfg, open: Vec::new(), opened_at: None }
+    }
+
+    /// Add one job to the open batch. Returns the batch when `job` trips
+    /// the size watermark, `None` while it is still filling.
+    pub fn push(&mut self, job: Job) -> Option<Vec<Job>> {
+        if self.open.is_empty() {
+            self.opened_at = Some(Instant::now());
+        }
+        self.open.push(job);
+        if self.open.len() >= self.cfg.max_jobs.max(1) {
+            return self.take();
+        }
+        None
+    }
+
+    /// The open batch, if its oldest member has waited past the age
+    /// watermark. Poll once per dispatcher tick.
+    pub fn take_aged(&mut self) -> Option<Vec<Job>> {
+        match self.opened_at {
+            Some(t) if t.elapsed() >= self.cfg.max_age => self.take(),
+            _ => None,
+        }
+    }
+
+    /// The open batch regardless of watermarks (shutdown drain).
+    pub fn take(&mut self) -> Option<Vec<Job>> {
+        if self.open.is_empty() {
+            return None;
+        }
+        self.opened_at = None;
+        Some(std::mem::take(&mut self.open))
+    }
+
+    /// Members currently waiting in the open batch.
+    pub fn len(&self) -> usize {
+        self.open.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.open.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+
+    fn job(id: u64) -> Job {
+        Job { id, a: Csr::identity(4), b: Csr::identity(4), force_route: None }
+    }
+
+    #[test]
+    fn size_watermark_closes_the_batch() {
+        let mut b = Batcher::new(BatchConfig {
+            enabled: true,
+            max_jobs: 3,
+            max_age: Duration::from_secs(3600),
+        });
+        assert!(b.push(job(0)).is_none());
+        assert!(b.push(job(1)).is_none());
+        let batch = b.push(job(2)).expect("third member trips the size watermark");
+        assert_eq!(batch.iter().map(|j| j.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(b.is_empty(), "flushing resets the accumulator");
+        // the next batch starts fresh
+        assert!(b.push(job(3)).is_none());
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn age_watermark_closes_a_partial_batch() {
+        let mut b = Batcher::new(BatchConfig {
+            enabled: true,
+            max_jobs: 100,
+            max_age: Duration::from_millis(0),
+        });
+        assert!(b.take_aged().is_none(), "no open batch, nothing to age out");
+        assert!(b.push(job(0)).is_none());
+        assert!(b.push(job(1)).is_none());
+        // max_age 0: the open batch is immediately aged
+        let batch = b.take_aged().expect("aged batch flushes");
+        assert_eq!(batch.len(), 2);
+        assert!(b.take_aged().is_none());
+        // a long age keeps the batch open
+        let mut slow = Batcher::new(BatchConfig {
+            enabled: true,
+            max_jobs: 100,
+            max_age: Duration::from_secs(3600),
+        });
+        slow.push(job(0));
+        assert!(slow.take_aged().is_none(), "an hour has not passed");
+        assert_eq!(slow.take().expect("explicit drain").len(), 1);
+    }
+
+    #[test]
+    fn degenerate_size_watermark_flushes_every_push() {
+        // max_jobs 0 clamps to 1: every push returns a singleton batch
+        let mut b = Batcher::new(BatchConfig {
+            enabled: true,
+            max_jobs: 0,
+            max_age: Duration::from_secs(3600),
+        });
+        let batch = b.push(job(7)).expect("singleton flush");
+        assert_eq!(batch.len(), 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn default_is_off() {
+        let d = BatchConfig::default();
+        assert!(!d.enabled, "batching must default to the PR 5 baseline");
+        assert!(BatchConfig::on().enabled);
+        assert_eq!(BatchConfig::on().max_jobs, d.max_jobs);
+    }
+}

@@ -21,7 +21,7 @@ use std::collections::{HashMap, VecDeque};
 const WALL_EWMA_ALPHA: f64 = 0.3;
 
 /// Everything the history remembers about one pattern pair.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct PatternStats {
     /// Per-shard measured timings of the most recent run — what
     /// [`ShardPlan::from_history`] re-cuts from. The shard count of the
@@ -156,6 +156,36 @@ impl ExecHistory {
     pub fn evictions(&self) -> u64 {
         self.evictions
     }
+
+    /// Iterate the held patterns oldest-first (insertion order — the
+    /// order FIFO eviction consumes). Persistence walks this so a saved
+    /// file restored through [`ExecHistory::insert_stats`] reproduces
+    /// both the contents and the eviction order.
+    pub fn iter_in_order(&self) -> impl Iterator<Item = (&PatternKey, &PatternStats)> {
+        self.order.iter().filter_map(move |k| self.map.get(k).map(|s| (k, s)))
+    }
+
+    /// Install a fully-formed stats record, bypassing the per-run fold
+    /// of [`ExecHistory::record`] — the persistence-reload path, where
+    /// the stats were already folded before they were saved. A new key
+    /// takes the next insertion-order slot (evicting beyond capacity,
+    /// e.g. when a file saved under a larger cap is loaded into a
+    /// smaller one); an existing key keeps its slot and is overwritten.
+    pub fn insert_stats(&mut self, key: PatternKey, stats: PatternStats) {
+        if self.capacity == 0 {
+            return;
+        }
+        if !self.map.contains_key(&key) {
+            self.order.push_back(key);
+            while self.order.len() > self.capacity {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                    self.evictions += 1;
+                }
+            }
+        }
+        self.map.insert(key, stats);
+    }
 }
 
 #[cfg(test)]
@@ -209,6 +239,50 @@ mod tests {
         h.record((3, 3), obs(4, 2.0));
         assert_eq!(h.len(), 2);
         assert_eq!(h.evictions(), 1);
+    }
+
+    #[test]
+    fn in_order_iteration_and_reinsertion_reproduce_the_store() {
+        let mut h = ExecHistory::new(4);
+        h.record((3, 3), obs(4, 30.0));
+        h.record((1, 1), obs(4, 10.0));
+        h.record((2, 2), obs(4, 20.0));
+        let keys: Vec<PatternKey> = h.iter_in_order().map(|(k, _)| *k).collect();
+        assert_eq!(keys, vec![(3, 3), (1, 1), (2, 2)], "oldest-first insertion order");
+        // rebuild through insert_stats: contents and eviction order match
+        let mut r = ExecHistory::new(4);
+        for (k, s) in h.iter_in_order() {
+            r.insert_stats(*k, s.clone());
+        }
+        assert_eq!(r.len(), 3);
+        for (k, s) in h.iter_in_order() {
+            assert_eq!(r.lookup(*k), Some(s), "{k:?}");
+        }
+        // FIFO order carried over: the next eviction hits (3,3) first
+        r.record((9, 9), obs(4, 1.0));
+        r.record((8, 8), obs(4, 1.0));
+        assert!(r.lookup((3, 3)).is_none(), "oldest restored key evicts first");
+        assert!(r.lookup((1, 1)).is_some());
+    }
+
+    #[test]
+    fn insert_stats_respects_capacity_and_overwrites_in_place() {
+        let mut h = ExecHistory::new(2);
+        h.insert_stats((1, 1), PatternStats { runs: 1, ..Default::default() });
+        h.insert_stats((2, 2), PatternStats { runs: 2, ..Default::default() });
+        h.insert_stats((3, 3), PatternStats { runs: 3, ..Default::default() });
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.evictions(), 1);
+        assert!(h.lookup((1, 1)).is_none(), "loading beyond capacity evicts oldest");
+        // overwriting a live key keeps its slot and does not evict
+        h.insert_stats((2, 2), PatternStats { runs: 20, ..Default::default() });
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.evictions(), 1);
+        assert_eq!(h.lookup((2, 2)).unwrap().runs, 20);
+        // capacity 0 stays disabled
+        let mut off = ExecHistory::new(0);
+        off.insert_stats((1, 1), PatternStats::default());
+        assert!(off.is_empty());
     }
 
     #[test]

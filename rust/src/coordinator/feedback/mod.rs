@@ -27,6 +27,10 @@
 //!   from measured arrival slack (shrink when devices stall on
 //!   `AwaitChunk`, grow when per-chunk latency keeps the pipeline from
 //!   filling).
+//! * [`persist`] — warm-start persistence: everything above is a
+//!   function of patterns and the device model, so none of it expires
+//!   with the process; the serving front door saves the history + fit
+//!   on shutdown and reloads them on start (bit-stable round trip).
 //!
 //! Consumers: the coordinator's `RunShard` fan-out re-plans warm
 //! sharded jobs and its barrier records completed ones; hash workers
@@ -37,10 +41,12 @@
 //! blocks any warm regression.
 
 pub mod history;
+pub mod persist;
 pub mod refit;
 pub mod replan;
 
 pub use history::{ExecHistory, PatternStats, RunObservation};
+pub use persist::{load_state, save_state, PersistedState};
 pub use refit::{default_fit, NsPerProdFit};
 pub use replan::{tune_chunk_bytes, ChunkFeedback, MAX_CHUNK_BYTES, MIN_CHUNK_BYTES};
 

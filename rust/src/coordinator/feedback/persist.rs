@@ -1,0 +1,270 @@
+//! Warm-start persistence: the serving layer's execution history and
+//! `ns_per_prod` fit, saved on shutdown and reloaded on start.
+//!
+//! Everything the feedback layer learns (PR 5) is a function of sparsity
+//! patterns and the device model — none of it expires with the process —
+//! yet until this module a restart forgot it all and the first job of
+//! every pattern was planned cold again. The serving front door
+//! ([`crate::coordinator::serve`]) saves this state when it shuts down
+//! and reloads it when it starts, so the first post-restart submit of a
+//! warm pattern is re-cut from measured timings exactly like the last
+//! pre-restart one.
+//!
+//! The format is a versioned line-oriented text file with **every `f64`
+//! stored as its IEEE-754 bit pattern in hex** — decimal formatting
+//! would round, and the acceptance bar is a *bit-stable* round trip:
+//! restored EWMA wall times, shard timings, and the fit constant compare
+//! bitwise equal, so a reloaded router makes byte-for-byte the same
+//! decisions the pre-restart one did. No serde in the dependency set;
+//! the hand-rolled reader rejects unknown versions and malformed lines
+//! loudly instead of planning from half-parsed state.
+
+use super::history::{ExecHistory, PatternStats};
+use super::refit::NsPerProdFit;
+use crate::coordinator::cache::PatternKey;
+use crate::spgemm::sharded::MeasuredShard;
+use anyhow::{bail, Context, Result};
+
+/// First line of every state file; the version bumps on layout changes.
+pub const STATE_HEADER: &str = "opsparse-serve-state v1";
+
+/// Parsed contents of a state file: the fit snapshot plus the history's
+/// patterns in insertion (eviction) order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PersistedState {
+    /// `ns_per_prod` fit constant (restored bitwise).
+    pub fit_k: f64,
+    /// Observations the fit had folded in.
+    pub fit_updates: u64,
+    /// Pattern stats, oldest-first — feed to
+    /// [`ExecHistory::insert_stats`] in order.
+    pub patterns: Vec<(PatternKey, PatternStats)>,
+}
+
+impl PersistedState {
+    /// Snapshot live serving state for saving.
+    pub fn capture(history: &ExecHistory, fit: &NsPerProdFit) -> PersistedState {
+        let (fit_k, fit_updates) = fit.state();
+        PersistedState {
+            fit_k,
+            fit_updates,
+            patterns: history.iter_in_order().map(|(k, s)| (*k, s.clone())).collect(),
+        }
+    }
+
+    /// Rebuild the fit this snapshot describes.
+    pub fn restore_fit(&self) -> NsPerProdFit {
+        NsPerProdFit::from_state(self.fit_k, self.fit_updates)
+    }
+
+    /// Replay the snapshot's patterns into `history` (oldest-first, so
+    /// FIFO eviction order carries over; a smaller-capacity history
+    /// evicts the oldest entries during the replay).
+    pub fn restore_history(&self, history: &mut ExecHistory) {
+        for (key, stats) in &self.patterns {
+            history.insert_stats(*key, stats.clone());
+        }
+    }
+}
+
+fn render(state: &PersistedState) -> String {
+    let mut out = String::new();
+    out.push_str(STATE_HEADER);
+    out.push('\n');
+    out.push_str(&format!("fit {:016x} {}\n", state.fit_k.to_bits(), state.fit_updates));
+    for (key, s) in &state.patterns {
+        out.push_str(&format!(
+            "pattern {:016x} {:016x} {} {:016x} {} {}\n",
+            key.0,
+            key.1,
+            s.runs,
+            s.ewma_wall_ns.to_bits(),
+            s.last_nprod,
+            s.chunk_bytes.map(|b| b.to_string()).unwrap_or_else(|| "-".to_string()),
+        ));
+        for m in &s.measured {
+            out.push_str(&format!("shard {} {} {:016x}\n", m.lo, m.hi, m.ns.to_bits()));
+        }
+    }
+    out
+}
+
+/// Write `state` to `path` (atomically enough for a single writer: the
+/// whole file in one `fs::write`).
+pub fn save_state(path: &str, state: &PersistedState) -> Result<()> {
+    std::fs::write(path, render(state))
+        .with_context(|| format!("writing serve state to {path}"))
+}
+
+fn parse_hex_bits(s: &str, what: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex {what}: {s:?}"))
+}
+
+fn parse_state(text: &str, path: &str) -> Result<PersistedState> {
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(h) if h == STATE_HEADER => {}
+        Some(h) => bail!("{path}: unsupported state header {h:?} (want {STATE_HEADER:?})"),
+        None => bail!("{path}: empty state file"),
+    }
+    let mut state = PersistedState::default();
+    let mut saw_fit = false;
+    for (lineno, line) in lines.enumerate() {
+        let lineno = lineno + 2; // 1-based, after the header
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        match fields[..] {
+            [] => {}
+            ["fit", k, updates] => {
+                state.fit_k = f64::from_bits(parse_hex_bits(k, "fit constant")?);
+                state.fit_updates =
+                    updates.parse().with_context(|| format!("{path}:{lineno}: bad fit updates"))?;
+                saw_fit = true;
+            }
+            ["pattern", a_fp, b_fp, runs, ewma, nprod, chunk] => {
+                let key: PatternKey = (
+                    parse_hex_bits(a_fp, "pattern fingerprint")?,
+                    parse_hex_bits(b_fp, "pattern fingerprint")?,
+                );
+                let stats = PatternStats {
+                    measured: Vec::new(),
+                    runs: runs
+                        .parse()
+                        .with_context(|| format!("{path}:{lineno}: bad run count"))?,
+                    ewma_wall_ns: f64::from_bits(parse_hex_bits(ewma, "ewma wall ns")?),
+                    last_nprod: nprod
+                        .parse()
+                        .with_context(|| format!("{path}:{lineno}: bad nprod"))?,
+                    chunk_bytes: match chunk {
+                        "-" => None,
+                        c => Some(
+                            c.parse()
+                                .with_context(|| format!("{path}:{lineno}: bad chunk bytes"))?,
+                        ),
+                    },
+                };
+                state.patterns.push((key, stats));
+            }
+            ["shard", lo, hi, ns] => {
+                let Some((_, stats)) = state.patterns.last_mut() else {
+                    bail!("{path}:{lineno}: shard line before any pattern line");
+                };
+                stats.measured.push(MeasuredShard {
+                    lo: lo.parse().with_context(|| format!("{path}:{lineno}: bad shard lo"))?,
+                    hi: hi.parse().with_context(|| format!("{path}:{lineno}: bad shard hi"))?,
+                    ns: f64::from_bits(parse_hex_bits(ns, "shard ns")?),
+                });
+            }
+            _ => bail!("{path}:{lineno}: unrecognized state line {line:?}"),
+        }
+    }
+    if !saw_fit {
+        bail!("{path}: state file has no fit line");
+    }
+    Ok(state)
+}
+
+/// Read a state file written by [`save_state`]. Malformed content is an
+/// error — a serving process must not come up half-warm from a file it
+/// misread — but a *missing* file is the ordinary cold start, which
+/// callers detect with [`std::path::Path::exists`] before calling this.
+pub fn load_state(path: &str) -> Result<PersistedState> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading serve state {path}"))?;
+    parse_state(&text, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> PersistedState {
+        let fit = NsPerProdFit::new(1.0);
+        for i in 1..=9u64 {
+            fit.observe(700.0 * i as f64, 200 * i);
+        }
+        let mut h = ExecHistory::new(8);
+        let mut hist_obs = |key: PatternKey, ns: f64| {
+            h.record(
+                key,
+                super::super::history::RunObservation {
+                    shards: vec![
+                        MeasuredShard { lo: 0, hi: 7, ns },
+                        MeasuredShard { lo: 7, hi: 16, ns: ns * 1.5 },
+                    ],
+                    wall_ns: ns * 3.0,
+                    nprod: 1234,
+                    chunk: None,
+                },
+            );
+        };
+        hist_obs((11, 22), 1000.0);
+        hist_obs((33, 44), 2000.0);
+        hist_obs((11, 22), 1500.0); // fold a second run: non-trivial EWMA bits
+        PersistedState::capture(&h, &fit)
+    }
+
+    fn tmp_path(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("opsparse-persist-{tag}-{}.state", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn round_trip_is_bit_stable() {
+        let state = sample_state();
+        let path = tmp_path("roundtrip");
+        save_state(&path, &state).unwrap();
+        let loaded = load_state(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // PartialEq on f64 is exact equality, so this asserts the bits
+        assert_eq!(loaded, state);
+        assert_eq!(loaded.fit_k.to_bits(), state.fit_k.to_bits());
+        let (a, b) = (&loaded.patterns, &state.patterns);
+        assert_eq!(a.len(), 2, "insertion order and occupancy preserved");
+        assert_eq!(a[0].0, (11, 22), "oldest pattern first");
+        assert_eq!(
+            a[0].1.ewma_wall_ns.to_bits(),
+            b[0].1.ewma_wall_ns.to_bits(),
+            "EWMA restored bitwise"
+        );
+        assert_eq!(a[0].1.measured, b[0].1.measured, "shard timings restored exactly");
+    }
+
+    #[test]
+    fn restore_rebuilds_history_and_fit_exactly() {
+        let state = sample_state();
+        let mut h = ExecHistory::new(8);
+        state.restore_history(&mut h);
+        assert_eq!(h.len(), 2);
+        let s = h.lookup((11, 22)).unwrap();
+        assert_eq!(s.runs, 2);
+        assert_eq!(s.measured.len(), 2);
+        let fit = state.restore_fit();
+        assert_eq!(fit.state().0.to_bits(), state.fit_k.to_bits());
+        assert_eq!(fit.updates(), state.fit_updates);
+    }
+
+    #[test]
+    fn missing_fit_unknown_header_and_junk_lines_are_rejected() {
+        let path = tmp_path("malformed");
+        std::fs::write(&path, "opsparse-serve-state v99\n").unwrap();
+        assert!(load_state(&path).unwrap_err().to_string().contains("unsupported"));
+        std::fs::write(&path, format!("{STATE_HEADER}\n")).unwrap();
+        assert!(load_state(&path).unwrap_err().to_string().contains("no fit line"));
+        std::fs::write(&path, format!("{STATE_HEADER}\nfit 0 0\nwat 1 2\n")).unwrap();
+        assert!(load_state(&path).unwrap_err().to_string().contains("unrecognized"));
+        std::fs::write(
+            &path,
+            format!("{STATE_HEADER}\nfit 0 0\nshard 0 4 {:016x}\n", 1.0f64.to_bits()),
+        )
+        .unwrap();
+        assert!(load_state(&path)
+            .unwrap_err()
+            .to_string()
+            .contains("before any pattern"));
+        std::fs::remove_file(&path).ok();
+        // a missing file is an error too (callers gate on exists())
+        assert!(load_state(&tmp_path("absent")).is_err());
+    }
+}

@@ -58,6 +58,24 @@ impl NsPerProdFit {
         NsPerProdFit::new(crate::coordinator::router::fit_ns_per_prod_suite())
     }
 
+    /// Rebuild a fit from a persisted snapshot (see
+    /// [`NsPerProdFit::state`]): `k` is taken verbatim apart from the
+    /// usual finite/band guard, and since every persisted `k` was
+    /// already produced inside the band by `new`/`observe`, the clamp is
+    /// the identity there — a save → reload round trip is bit-stable.
+    pub fn from_state(k: f64, updates: u64) -> Self {
+        let k =
+            if k.is_finite() { k.clamp(NS_PER_PROD_MIN, NS_PER_PROD_MAX) } else { 1.0 };
+        NsPerProdFit { state: RwLock::new(Fit { k, updates }) }
+    }
+
+    /// Snapshot `(k, updates)` for persistence — the exact pair
+    /// [`NsPerProdFit::from_state`] restores.
+    pub fn state(&self) -> (f64, u64) {
+        let st = self.state.read().unwrap_or_else(|e| e.into_inner());
+        (st.k, st.updates)
+    }
+
     /// The current fit. Bit-stable across repeated reads with no
     /// intervening [`NsPerProdFit::observe`].
     pub fn current(&self) -> f64 {
@@ -164,6 +182,24 @@ mod tests {
             f.observe(1.0, 1_000_000);
         }
         assert!(f.current() >= NS_PER_PROD_MIN);
+    }
+
+    #[test]
+    fn state_round_trip_is_bit_stable() {
+        let f = NsPerProdFit::new(1.0);
+        for i in 1..=17u64 {
+            assert!(f.observe(1000.0 * i as f64, 300 * i));
+        }
+        let (k, updates) = f.state();
+        assert_eq!(updates, 17);
+        let g = NsPerProdFit::from_state(k, updates);
+        let (k2, u2) = g.state();
+        assert_eq!(k.to_bits(), k2.to_bits(), "restored k must be bitwise identical");
+        assert_eq!(u2, 17);
+        assert_eq!(g.current().to_bits(), f.current().to_bits());
+        // a tampered out-of-band snapshot is clamped, not trusted
+        assert_eq!(NsPerProdFit::from_state(1e9, 3).current(), NS_PER_PROD_MAX);
+        assert_eq!(NsPerProdFit::from_state(f64::NAN, 3).current(), 1.0);
     }
 
     #[test]

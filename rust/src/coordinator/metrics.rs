@@ -60,6 +60,25 @@ pub struct Metrics {
     /// reservoir — every route measures from submit, so queue wait is
     /// visible and percentiles compare across routes.
     latencies: Mutex<Vec<u64>>,
+    /// Serving front door: requests that attached to an identical
+    /// in-flight request instead of executing (N identical concurrent
+    /// requests count N−1 hits).
+    pub coalesce_hits: AtomicU64,
+    /// Requests refused at admission (`Rejected { queue_full }`).
+    pub rejected_jobs: AtomicU64,
+    /// Batches flushed to workers (each is one `RunBatch` visit).
+    pub batches: AtomicU64,
+    /// Jobs that rode inside those batches.
+    pub batched_jobs: AtomicU64,
+    /// Current front-door queue depth: admitted-but-unfinished leader
+    /// requests (gauge; waiters coalesced onto a leader don't count).
+    pub queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth`.
+    pub queue_depth_max: AtomicU64,
+    /// Front-door latency samples in ns (admission → fan-out, per
+    /// waiter), bounded like `latencies`. Kept separate because a
+    /// coalesced waiter observes a latency no coordinator job ever ran.
+    serve_latencies: Mutex<Vec<u64>>,
 }
 
 impl Metrics {
@@ -72,6 +91,31 @@ impl Metrics {
         if l.len() < 65_536 {
             l.push(ns);
         }
+    }
+
+    /// Record one front-door (admission → fan-out) latency sample.
+    pub fn observe_serve_latency(&self, ns: u64) {
+        let mut l = self.serve_latencies.lock().unwrap();
+        if l.len() < 65_536 {
+            l.push(ns);
+        }
+    }
+
+    /// Move the queue-depth gauge, tracking its high-water mark.
+    pub fn observe_queue_depth(&self, depth: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+        self.queue_depth_max.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Front-door latency percentile (0.0..=1.0) over recorded samples.
+    pub fn serve_latency_percentile(&self, q: f64) -> Option<u64> {
+        let mut l = self.serve_latencies.lock().unwrap().clone();
+        if l.is_empty() {
+            return None;
+        }
+        l.sort_unstable();
+        let idx = ((l.len() as f64 - 1.0) * q).round() as usize;
+        Some(l[idx.min(l.len() - 1)])
     }
 
     /// Record that `worker_id` picked up one shard sub-job.
@@ -128,8 +172,16 @@ impl Metrics {
             pool_device_bytes: self.pool_device_bytes.load(Ordering::Relaxed),
             pool_hits: self.pool_hits.load(Ordering::Relaxed),
             pool_reused_bytes: self.pool_reused_bytes.load(Ordering::Relaxed),
+            coalesce_hits: self.coalesce_hits.load(Ordering::Relaxed),
+            rejected_jobs: self.rejected_jobs.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            queue_depth_max: self.queue_depth_max.load(Ordering::Relaxed),
             p50_ns: self.latency_percentile(0.50),
             p99_ns: self.latency_percentile(0.99),
+            serve_p50_ns: self.serve_latency_percentile(0.50),
+            serve_p99_ns: self.serve_latency_percentile(0.99),
         }
     }
 }
@@ -167,8 +219,19 @@ pub struct MetricsSnapshot {
     pub pool_device_bytes: u64,
     pub pool_hits: u64,
     pub pool_reused_bytes: u64,
+    /// Serving front door: coalesced attach count, admission rejects,
+    /// batch flushes / members, and the queue-depth gauge + high-water.
+    pub coalesce_hits: u64,
+    pub rejected_jobs: u64,
+    pub batches: u64,
+    pub batched_jobs: u64,
+    pub queue_depth: u64,
+    pub queue_depth_max: u64,
     pub p50_ns: Option<u64>,
     pub p99_ns: Option<u64>,
+    /// Front-door (admission → fan-out) latency percentiles, per waiter.
+    pub serve_p50_ns: Option<u64>,
+    pub serve_p99_ns: Option<u64>,
 }
 
 impl MetricsSnapshot {
@@ -225,6 +288,16 @@ impl std::fmt::Display for MetricsSnapshot {
             self.pool_hits,
             crate::util::fmt::bytes(self.pool_reused_bytes as usize)
         )?;
+        writeln!(
+            f,
+            "serve: coalesce_hits={} rejected={} batches={} batched_jobs={} queue_depth={} (max {})",
+            self.coalesce_hits,
+            self.rejected_jobs,
+            self.batches,
+            self.batched_jobs,
+            self.queue_depth,
+            self.queue_depth_max
+        )?;
         match (self.p50_ns, self.p99_ns) {
             (Some(p50), Some(p99)) => writeln!(
                 f,
@@ -233,6 +306,15 @@ impl std::fmt::Display for MetricsSnapshot {
                 crate::util::fmt::ns(p99 as f64)
             ),
             _ => writeln!(f, "latency: no samples"),
+        }?;
+        match (self.serve_p50_ns, self.serve_p99_ns) {
+            (Some(p50), Some(p99)) => writeln!(
+                f,
+                "serve latency: p50={} p99={}",
+                crate::util::fmt::ns(p50 as f64),
+                crate::util::fmt::ns(p99 as f64)
+            ),
+            _ => writeln!(f, "serve latency: no samples"),
         }
     }
 }
@@ -289,6 +371,28 @@ mod tests {
         let snap = m.snapshot();
         assert_eq!(snap.shard_subjobs, 3);
         assert_eq!(snap.shard_workers, 2, "worker 0 counted once");
+    }
+
+    #[test]
+    fn queue_depth_gauge_tracks_high_water() {
+        let m = Metrics::new();
+        m.observe_queue_depth(3);
+        m.observe_queue_depth(7);
+        m.observe_queue_depth(2);
+        let snap = m.snapshot();
+        assert_eq!(snap.queue_depth, 2, "gauge holds the latest value");
+        assert_eq!(snap.queue_depth_max, 7, "high-water mark sticks");
+    }
+
+    #[test]
+    fn serve_latency_reservoir_is_separate_from_job_latency() {
+        let m = Metrics::new();
+        for ns in [10u64, 20, 30] {
+            m.observe_serve_latency(ns);
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.serve_p50_ns, Some(20));
+        assert_eq!(snap.p50_ns, None, "job reservoir untouched");
     }
 
     #[test]

@@ -26,17 +26,30 @@
 //!   the broadcast chunk size.
 //! * [`metrics`] — counters, latency percentiles, pool/cache/shard
 //!   telemetry.
+//! * [`serve`] — the serving front door over the coordinator: request
+//!   coalescing (N identical in-flight multiplies pay one symbolic
+//!   phase and share one `Arc`'d result), admission control (bounded
+//!   queue with explicit rejection, per-tenant fair dequeue), warm-start
+//!   persistence (the [`feedback`] history + fit survive restarts), and
+//!   the unified [`ServeConfig`] that replaces scattered `OPSPARSE_*`
+//!   env reads with documented CLI > env > default layering.
+//! * [`batch`] — the front door's size/age-watermarked batcher: many
+//!   small hash-routed requests become one worker visit.
 
 pub mod barrier;
+pub mod batch;
 pub mod cache;
 pub mod feedback;
 pub mod metrics;
 pub mod router;
+pub mod serve;
 pub mod service;
 
 pub use barrier::ShardBarrier;
+pub use batch::{BatchConfig, Batcher};
 pub use cache::{PatternCache, PatternKey};
-pub use feedback::{ExecHistory, NsPerProdFit, ReplanConfig, RunObservation};
+pub use feedback::{ExecHistory, NsPerProdFit, PersistedState, ReplanConfig, RunObservation};
 pub use metrics::Metrics;
 pub use router::{Route, Router, RouterConfig};
+pub use serve::{Serve, ServeConfig, ServeResult, ServeTicket};
 pub use service::{Coordinator, Job, JobResult};

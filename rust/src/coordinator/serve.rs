@@ -1,0 +1,867 @@
+//! The serving front door: request coalescing, batched execution,
+//! admission control, and warm-start persistence over the
+//! [`Coordinator`].
+//!
+//! The coordinator executes one queue-pop at a time and its planner
+//! forgets everything on restart; a production front end needs the four
+//! behaviors this module layers on top — without touching the execution
+//! paths underneath, so every knob's `off` position reproduces the raw
+//! coordinator (PR 5) behavior exactly:
+//!
+//! * **Coalescing** — concurrent identical requests (same operand
+//!   pattern *and* value fingerprints) attach to the one in-flight
+//!   leader and share its result: N identical multiplies pay one
+//!   symbolic phase and every waiter receives the **same** `Arc`'d
+//!   matrix — bit-identical by construction, not by comparison. The
+//!   issue keys coalescing on the pattern-fingerprint pair (that is
+//!   what the shared symbolic phase depends on); the value
+//!   fingerprints are the numeric-identity guard, because two
+//!   pattern-equal but value-different requests may share symbolic
+//!   work in the worker cache yet must never share a numeric result.
+//! * **Batching** — small hash-routed requests accumulate in a
+//!   size/age-watermarked [`Batcher`] and flush as one worker visit
+//!   ([`Coordinator::submit_batch`]).
+//! * **Admission control** — at most `queue_cap` leaders outstanding;
+//!   beyond that a request is answered [`ServeResult::Rejected`]
+//!   immediately instead of growing the queue without bound. Admission
+//!   to the coordinator drains per-tenant queues round-robin, so one
+//!   chatty tenant cannot starve the rest, and `inflight_cap` bounds
+//!   how many leaders the coordinator holds at once.
+//! * **Warm-start persistence** — on shutdown the execution history and
+//!   the `ns_per_prod` fit are saved ([`persist`]); on start they are
+//!   reloaded, so the first post-restart submit of a warm pattern is
+//!   planned from measured timings exactly like the last pre-restart
+//!   one (bit-stable: see [`persist::save_state`]).
+//!
+//! Request lifecycle: **admit** (reject if the bound is hit) →
+//! **coalesce** (attach to an identical in-flight leader) → **batch**
+//! (hash-routed leaders ride a watermarked batch) → **route** (the
+//! coordinator's router, as ever) → **fan-out** (one result, every
+//! waiter). Clients hold a [`ServeTicket`] and block on
+//! [`ServeTicket::wait`].
+//!
+//! The [`Coordinator`] owns an `mpsc` receiver and is deliberately not
+//! `Sync`, so the front door moves it into a single dispatcher thread;
+//! clients only touch a small mutex-guarded front state. The dispatcher
+//! alternates between admitting pending requests and polling the
+//! coordinator for results (short timeout), which also gives the age
+//! watermark its clock.
+
+use super::batch::{BatchConfig, Batcher};
+use super::feedback::{parse_on_off, persist, NsPerProdFit, PersistedState, ReplanConfig};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::router::{Route, Router, RouterConfig};
+use super::service::{Coordinator, EngineFactory, Job, JobResult};
+use crate::gpusim::{Interconnect, OverlapConfig};
+use crate::sparse::Csr;
+use anyhow::{bail, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long the dispatcher blocks on the coordinator's result channel
+/// per loop iteration. Short enough that admission and the batch age
+/// watermark stay responsive under a result drought; long enough that
+/// an idle front door costs ~no CPU.
+const DISPATCHER_TICK: Duration = Duration::from_micros(500);
+
+/// Where `--persist on` keeps the state file when no path is given.
+pub const DEFAULT_PERSIST_PATH: &str = "opsparse-serve.state";
+
+/// Identity of a request for coalescing: both operands' pattern
+/// fingerprints (the pair the shared symbolic phase depends on) plus
+/// both value fingerprints (the numeric-identity guard — see the module
+/// docs).
+pub type CoalesceKey = (u64, u64, u64, u64);
+
+/// Every serving knob in one place, replacing scattered `OPSPARSE_*`
+/// env reads. Precedence is **CLI > env > default**:
+/// [`ServeConfig::default`] is the base, [`ServeConfig::from_env`] lays
+/// the environment over it, and [`ServeConfig::from_args`] lays parsed
+/// CLI flags over *that*. Env values that fail to parse keep the prior
+/// layer's value (the established env convention); CLI values that
+/// fail to parse are an error (a typo on the command line should not
+/// run with a silently different config).
+///
+/// The defaults reproduce the PR 5 baseline wherever a knob gates new
+/// behavior: batching and persistence are off, the queue bound is high,
+/// and `inflight_cap` is unlimited. Coalescing defaults on — it is the
+/// front door's reason to exist — and `--coalesce off` restores
+/// pass-through admission.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Hash workers in the coordinator pool (`OPSPARSE_WORKERS`,
+    /// `--workers`).
+    pub workers: usize,
+    /// Attach identical in-flight requests to one leader
+    /// (`OPSPARSE_COALESCE`, `--coalesce`).
+    pub coalesce: bool,
+    /// Batch small hash-routed requests into one worker visit
+    /// (`OPSPARSE_BATCH`/`--batch`, with `OPSPARSE_BATCH_MAX`/
+    /// `--batch-max` and `OPSPARSE_BATCH_AGE_MS`/`--batch-age-ms`).
+    pub batch: BatchConfig,
+    /// Most leaders outstanding before requests are rejected
+    /// (`OPSPARSE_QUEUE_CAP`, `--queue-cap`).
+    pub queue_cap: usize,
+    /// Most leaders handed to the coordinator at once; pending requests
+    /// wait in per-tenant queues drained round-robin
+    /// (`OPSPARSE_INFLIGHT`, `--inflight`).
+    pub inflight_cap: usize,
+    /// State-file path for warm-start persistence; `None` disables
+    /// (`OPSPARSE_PERSIST`, `--persist off|on|<path>`; `on` means
+    /// [`DEFAULT_PERSIST_PATH`]).
+    pub persist: Option<String>,
+    /// Adaptive re-planning knobs (`OPSPARSE_REPLAN`/`--replan`,
+    /// `OPSPARSE_HISTORY_CAP`/`--history-cap`).
+    pub replan: ReplanConfig,
+    /// Overlap model (`OPSPARSE_OVERLAP`/`--overlap`,
+    /// `OPSPARSE_OVERLAP_CHUNK_KB`/`--chunk-kb`).
+    pub overlap: OverlapConfig,
+    /// Interconnect charged by the router's sharded-route comparison
+    /// (`OPSPARSE_INTERCONNECT`/`--interconnect pcie|nvlink|none`).
+    pub interconnect: Option<Interconnect>,
+    /// Single-device memory budget for the router.
+    pub device_memory_bytes: usize,
+    /// Most devices a sharded job may span.
+    pub max_devices: usize,
+    /// Seed for the live `ns_per_prod` fit when no persisted state is
+    /// loaded: `Some(k)` seeds cheaply (tests), `None` uses the
+    /// process-wide suite calibration
+    /// ([`super::feedback::default_fit`]).
+    pub ns_per_prod: Option<f64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let router = RouterConfig::default();
+        ServeConfig {
+            workers: 4,
+            coalesce: true,
+            batch: BatchConfig::default(),
+            queue_cap: 1024,
+            inflight_cap: usize::MAX,
+            persist: None,
+            replan: ReplanConfig::default(),
+            overlap: OverlapConfig::default(),
+            interconnect: router.interconnect,
+            device_memory_bytes: router.device_memory_bytes,
+            max_devices: router.max_devices,
+            ns_per_prod: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Defaults overlaid by environment variables read through `get`
+    /// (tests pass a closure over a plain map; production passes
+    /// [`std::env::var`] via [`ServeConfig::from_env`]). Unparseable
+    /// values keep the default, matching [`ReplanConfig::from_env`] and
+    /// [`OverlapConfig::from_env`].
+    pub fn from_env_map(get: impl Fn(&str) -> Option<String>) -> ServeConfig {
+        let mut cfg = ServeConfig::default();
+        let on_off = |key: &str| get(key).and_then(|v| parse_on_off(&v));
+        let num = |key: &str| get(key).and_then(|v| v.parse::<usize>().ok());
+        if let Some(n) = num("OPSPARSE_WORKERS").filter(|&n| n > 0) {
+            cfg.workers = n;
+        }
+        if let Some(on) = on_off("OPSPARSE_COALESCE") {
+            cfg.coalesce = on;
+        }
+        if let Some(on) = on_off("OPSPARSE_BATCH") {
+            cfg.batch.enabled = on;
+        }
+        if let Some(n) = num("OPSPARSE_BATCH_MAX").filter(|&n| n > 0) {
+            cfg.batch.max_jobs = n;
+        }
+        if let Some(ms) = num("OPSPARSE_BATCH_AGE_MS") {
+            cfg.batch.max_age = Duration::from_millis(ms as u64);
+        }
+        if let Some(n) = num("OPSPARSE_QUEUE_CAP").filter(|&n| n > 0) {
+            cfg.queue_cap = n;
+        }
+        if let Some(n) = num("OPSPARSE_INFLIGHT").filter(|&n| n > 0) {
+            cfg.inflight_cap = n;
+        }
+        if let Some(v) = get("OPSPARSE_PERSIST") {
+            cfg.persist = match parse_on_off(&v) {
+                Some(true) => Some(DEFAULT_PERSIST_PATH.to_string()),
+                Some(false) => None,
+                None if !v.is_empty() => Some(v),
+                None => None,
+            };
+        }
+        if let Some(on) = on_off("OPSPARSE_REPLAN") {
+            cfg.replan.enabled = on;
+        }
+        if let Some(cap) = num("OPSPARSE_HISTORY_CAP").filter(|&n| n > 0) {
+            cfg.replan.history_cap = cap;
+        }
+        if let Some(on) = on_off("OPSPARSE_OVERLAP") {
+            cfg.overlap.enabled = on;
+        }
+        if let Some(bytes) = num("OPSPARSE_OVERLAP_CHUNK_KB")
+            .filter(|&kb| kb > 0)
+            .and_then(|kb| kb.checked_mul(1024))
+        {
+            cfg.overlap.chunk_bytes = bytes;
+        }
+        if let Some(ic) = get("OPSPARSE_INTERCONNECT").and_then(|v| Interconnect::parse_opt(&v))
+        {
+            cfg.interconnect = ic;
+        }
+        cfg
+    }
+
+    /// [`ServeConfig::from_env_map`] over the process environment.
+    pub fn from_env() -> ServeConfig {
+        ServeConfig::from_env_map(|k| std::env::var(k).ok())
+    }
+
+    /// Environment-derived config overlaid by parsed CLI flags
+    /// (`--name value` pairs from the CLI's flag parser): the top of
+    /// the CLI > env > default precedence. Unknown flag *names* are
+    /// ignored (commands carry their own extra flags); a known flag
+    /// with an unparseable *value* is an error.
+    pub fn from_args(flags: &HashMap<String, String>) -> Result<ServeConfig> {
+        ServeConfig::from_args_over(ServeConfig::from_env(), flags)
+    }
+
+    /// [`ServeConfig::from_args`] over an explicit base config — the
+    /// testable core (no process-global env reads).
+    pub fn from_args_over(
+        mut cfg: ServeConfig,
+        flags: &HashMap<String, String>,
+    ) -> Result<ServeConfig> {
+        fn on_off_flag(flags: &HashMap<String, String>, name: &str) -> Result<Option<bool>> {
+            match flags.get(name) {
+                None => Ok(None),
+                Some(v) => match parse_on_off(v) {
+                    Some(on) => Ok(Some(on)),
+                    None => bail!("--{name} wants on|off, got {v:?}"),
+                },
+            }
+        }
+        fn num_flag(flags: &HashMap<String, String>, name: &str) -> Result<Option<usize>> {
+            match flags.get(name) {
+                None => Ok(None),
+                Some(v) => match v.parse::<usize>() {
+                    Ok(n) => Ok(Some(n)),
+                    Err(_) => bail!("--{name} wants a number, got {v:?}"),
+                },
+            }
+        }
+        if let Some(n) = num_flag(flags, "workers")?.filter(|&n| n > 0) {
+            cfg.workers = n;
+        }
+        if let Some(on) = on_off_flag(flags, "coalesce")? {
+            cfg.coalesce = on;
+        }
+        if let Some(on) = on_off_flag(flags, "batch")? {
+            cfg.batch.enabled = on;
+        }
+        if let Some(n) = num_flag(flags, "batch-max")?.filter(|&n| n > 0) {
+            cfg.batch.max_jobs = n;
+        }
+        if let Some(ms) = num_flag(flags, "batch-age-ms")? {
+            cfg.batch.max_age = Duration::from_millis(ms as u64);
+        }
+        if let Some(n) = num_flag(flags, "queue-cap")?.filter(|&n| n > 0) {
+            cfg.queue_cap = n;
+        }
+        if let Some(n) = num_flag(flags, "inflight")?.filter(|&n| n > 0) {
+            cfg.inflight_cap = n;
+        }
+        if let Some(v) = flags.get("persist") {
+            cfg.persist = match parse_on_off(v) {
+                Some(true) => Some(DEFAULT_PERSIST_PATH.to_string()),
+                Some(false) => None,
+                None if !v.is_empty() => Some(v.clone()),
+                None => bail!("--persist wants on|off|<path>, got an empty value"),
+            };
+        }
+        if let Some(on) = on_off_flag(flags, "replan")? {
+            cfg.replan.enabled = on;
+        }
+        if let Some(cap) = num_flag(flags, "history-cap")?.filter(|&n| n > 0) {
+            cfg.replan.history_cap = cap;
+        }
+        if let Some(on) = on_off_flag(flags, "overlap")? {
+            cfg.overlap.enabled = on;
+        }
+        if let Some(kb) = num_flag(flags, "chunk-kb")?.filter(|&kb| kb > 0) {
+            match kb.checked_mul(1024) {
+                Some(bytes) => cfg.overlap.chunk_bytes = bytes,
+                None => bail!("--chunk-kb {kb} overflows"),
+            }
+        }
+        if let Some(v) = flags.get("interconnect") {
+            match Interconnect::parse_opt(v) {
+                Some(ic) => cfg.interconnect = ic,
+                None => bail!("--interconnect wants pcie|nvlink|none, got {v:?}"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// The [`RouterConfig`] this serving config implies, carrying the
+    /// given live fit.
+    pub fn router_config(&self, fit: Arc<NsPerProdFit>) -> RouterConfig {
+        RouterConfig {
+            device_memory_bytes: self.device_memory_bytes,
+            max_devices: self.max_devices,
+            interconnect: self.interconnect,
+            overlap: self.overlap,
+            ns_per_prod: fit.current(),
+            fit: Some(fit),
+            ..RouterConfig::default()
+        }
+    }
+}
+
+/// What a [`ServeTicket`] resolves to. Cloneable: coalesced waiters all
+/// hold the **same** `Arc`'d matrix or error, which is what makes the
+/// fan-out bit-identical by construction.
+#[derive(Clone, Debug)]
+pub enum ServeResult {
+    /// The multiply succeeded.
+    Done {
+        c: Arc<Csr>,
+        /// Route the coordinator executed (the leader's route, for
+        /// every coalesced waiter).
+        route: Route,
+        /// Admission → fan-out latency observed by *this* waiter, ns.
+        wall_ns: u64,
+        /// This waiter attached to another request's execution.
+        coalesced: bool,
+    },
+    /// The multiply failed; the one error fans out to every waiter.
+    Failed { error: Arc<String>, wall_ns: u64, coalesced: bool },
+    /// Refused at admission; nothing was queued or executed.
+    Rejected {
+        /// The outstanding-leader bound (`queue_cap`) was hit.
+        queue_full: bool,
+    },
+}
+
+impl ServeResult {
+    /// The result matrix, when the request succeeded.
+    pub fn csr(&self) -> Option<&Arc<Csr>> {
+        match self {
+            ServeResult::Done { c, .. } => Some(c),
+            _ => None,
+        }
+    }
+
+    /// The executed route, when the request ran at all.
+    pub fn route(&self) -> Option<Route> {
+        match self {
+            ServeResult::Done { route, .. } => Some(*route),
+            _ => None,
+        }
+    }
+
+    pub fn is_rejected(&self) -> bool {
+        matches!(self, ServeResult::Rejected { .. })
+    }
+}
+
+/// A claim on one submitted request's result.
+pub struct ServeTicket {
+    rx: mpsc::Receiver<ServeResult>,
+}
+
+impl ServeTicket {
+    /// Block until the request resolves. A front door that shut down
+    /// before resolving (it drains by design, so this means the
+    /// dispatcher died) reports a failure rather than hanging.
+    pub fn wait(self) -> ServeResult {
+        self.rx.recv().unwrap_or_else(|_| ServeResult::Failed {
+            error: Arc::new("serving front door shut down before the result".to_string()),
+            wall_ns: 0,
+            coalesced: false,
+        })
+    }
+
+    /// The result, if it has already resolved (non-blocking).
+    pub fn try_wait(&self) -> Option<ServeResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+struct Waiter {
+    tx: mpsc::Sender<ServeResult>,
+    t0: Instant,
+    coalesced: bool,
+}
+
+/// One admitted leader: its waiters (itself plus everyone coalesced
+/// onto it) and its coalesce-map key.
+struct OutstandingReq {
+    waiters: Vec<Waiter>,
+    key: Option<CoalesceKey>,
+}
+
+struct PendingJob {
+    id: u64,
+    a: Csr,
+    b: Csr,
+}
+
+/// The mutex-guarded state clients and the dispatcher share. Everything
+/// the `!Sync` coordinator owns stays on the dispatcher's side.
+#[derive(Default)]
+struct FrontState {
+    next_id: u64,
+    /// Admitted leaders by job id, until their result fans out.
+    outstanding: HashMap<u64, OutstandingReq>,
+    /// In-flight coalesce identities → leader job id.
+    coalesce: HashMap<CoalesceKey, u64>,
+    /// Per-tenant FIFO of leaders awaiting coordinator admission.
+    queues: HashMap<String, VecDeque<PendingJob>>,
+    /// Round-robin rotation over tenants with non-empty queues.
+    rr: VecDeque<String>,
+    /// Leaders handed to the coordinator (or an open batch) and not yet
+    /// finished — bounded by `inflight_cap`.
+    admitted: usize,
+}
+
+/// The serving front door. Construct with [`Serve::start`], submit with
+/// [`Serve::submit`], stop with [`Serve::shutdown`] (which drains
+/// in-flight requests and persists warm state when configured).
+pub struct Serve {
+    cfg: ServeConfig,
+    state: Arc<Mutex<FrontState>>,
+    metrics: Arc<Metrics>,
+    fit: Arc<NsPerProdFit>,
+    stop: Arc<AtomicBool>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl Serve {
+    /// Start the front door: load persisted warm state if configured
+    /// and present, seed the live fit, spin up the coordinator, and
+    /// move it into the dispatcher thread.
+    pub fn start(cfg: ServeConfig) -> Result<Serve> {
+        Serve::start_with_engine(cfg, None)
+    }
+
+    /// [`Serve::start`] with an optional block-engine factory for the
+    /// coordinator's PJRT path.
+    pub fn start_with_engine(cfg: ServeConfig, engine: Option<EngineFactory>) -> Result<Serve> {
+        let loaded: Option<PersistedState> = match &cfg.persist {
+            Some(path) if std::path::Path::new(path).exists() => {
+                Some(persist::load_state(path)?)
+            }
+            _ => None,
+        };
+        let fit: Arc<NsPerProdFit> = match (&loaded, cfg.ns_per_prod) {
+            (Some(s), _) => Arc::new(s.restore_fit()),
+            (None, Some(k)) => Arc::new(NsPerProdFit::new(k)),
+            (None, None) => super::feedback::default_fit(),
+        };
+        let router = Router::new(cfg.router_config(Arc::clone(&fit)));
+        let coord = Coordinator::start_with(cfg.workers, router.clone(), engine, cfg.replan);
+        if let Some(s) = &loaded {
+            let (held, evicted) = {
+                let mut h = coord.history().lock().unwrap_or_else(|e| e.into_inner());
+                s.restore_history(&mut h);
+                (h.len() as u64, h.evictions())
+            };
+            coord.metrics.history_patterns.store(held, Ordering::Relaxed);
+            coord.metrics.history_evictions.store(evicted, Ordering::Relaxed);
+        }
+        let metrics = Arc::clone(&coord.metrics);
+        let state: Arc<Mutex<FrontState>> = Arc::default();
+        let stop = Arc::new(AtomicBool::new(false));
+        let dispatcher = {
+            let cfg = cfg.clone();
+            let state = Arc::clone(&state);
+            let metrics = Arc::clone(&metrics);
+            let stop = Arc::clone(&stop);
+            let fit = Arc::clone(&fit);
+            std::thread::spawn(move || {
+                dispatcher_loop(coord, router, cfg, state, metrics, stop, fit)
+            })
+        };
+        Ok(Serve { cfg, state, metrics, fit, stop, dispatcher: Some(dispatcher) })
+    }
+
+    /// Submit one multiply on behalf of `tenant`. Never blocks on
+    /// execution: the ticket resolves later — possibly to
+    /// [`ServeResult::Rejected`], decided synchronously here.
+    pub fn submit(&self, tenant: &str, a: Csr, b: Csr) -> ServeTicket {
+        let (tx, rx) = mpsc::channel();
+        let t0 = Instant::now();
+        // fingerprint outside the lock: O(nnz) hashing must not stall
+        // other submitters or the dispatcher
+        let key: Option<CoalesceKey> = self.cfg.coalesce.then(|| {
+            (
+                a.pattern_fingerprint(),
+                b.pattern_fingerprint(),
+                a.value_fingerprint(),
+                b.value_fingerprint(),
+            )
+        });
+        let mut guard = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let st = &mut *guard;
+        if let Some(k) = &key {
+            if let Some(&leader) = st.coalesce.get(k) {
+                if let Some(req) = st.outstanding.get_mut(&leader) {
+                    req.waiters.push(Waiter { tx, t0, coalesced: true });
+                    self.metrics.coalesce_hits.fetch_add(1, Ordering::Relaxed);
+                    return ServeTicket { rx };
+                }
+            }
+        }
+        if st.outstanding.len() >= self.cfg.queue_cap {
+            self.metrics.rejected_jobs.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(ServeResult::Rejected { queue_full: true });
+            return ServeTicket { rx };
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        st.outstanding
+            .insert(id, OutstandingReq { waiters: vec![Waiter { tx, t0, coalesced: false }], key });
+        if let Some(k) = key {
+            st.coalesce.insert(k, id);
+        }
+        self.metrics.observe_queue_depth(st.outstanding.len() as u64);
+        let q = st.queues.entry(tenant.to_string()).or_default();
+        q.push_back(PendingJob { id, a, b });
+        if q.len() == 1 && !st.rr.iter().any(|t| t == tenant) {
+            st.rr.push_back(tenant.to_string());
+        }
+        ServeTicket { rx }
+    }
+
+    /// Live metrics handle (shared with the coordinator underneath).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Point-in-time copy of the counters.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// The live `ns_per_prod` fit the router reads per decision.
+    pub fn fit(&self) -> &Arc<NsPerProdFit> {
+        &self.fit
+    }
+
+    /// The config this front door runs under.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Drain in-flight requests, persist warm state when configured,
+    /// stop the coordinator, and join every thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+}
+
+impl Drop for Serve {
+    fn drop(&mut self) {
+        // dropping without shutdown() must not leak the dispatcher (or
+        // skip persistence); stop_and_join is idempotent
+        self.stop_and_join();
+    }
+}
+
+/// Resolve one coordinator result: look up the leader, drop its
+/// coalesce-map entry, and send every waiter its shared view of the one
+/// result.
+fn fan_out(st: &mut FrontState, metrics: &Metrics, r: JobResult) {
+    let Some(req) = st.outstanding.remove(&r.id) else {
+        return; // unknown id: not ours to resolve
+    };
+    if let Some(k) = &req.key {
+        st.coalesce.remove(k);
+    }
+    st.admitted = st.admitted.saturating_sub(1);
+    metrics.observe_queue_depth(st.outstanding.len() as u64);
+    let shared: std::result::Result<Arc<Csr>, Arc<String>> = match r.c {
+        Ok(c) => Ok(Arc::new(c)),
+        Err(e) => Err(Arc::new(format!("{e:#}"))),
+    };
+    for w in req.waiters {
+        let wall_ns = w.t0.elapsed().as_nanos() as u64;
+        metrics.observe_serve_latency(wall_ns);
+        let msg = match &shared {
+            Ok(c) => ServeResult::Done {
+                c: Arc::clone(c),
+                route: r.route,
+                wall_ns,
+                coalesced: w.coalesced,
+            },
+            Err(e) => ServeResult::Failed {
+                error: Arc::clone(e),
+                wall_ns,
+                coalesced: w.coalesced,
+            },
+        };
+        let _ = w.tx.send(msg);
+    }
+}
+
+/// Move pending leaders into the coordinator (or the open batch) until
+/// the inflight bound is hit, draining tenant queues round-robin.
+fn admit_ready(
+    st: &mut FrontState,
+    cfg: &ServeConfig,
+    coord: &Coordinator,
+    router: &Router,
+    metrics: &Metrics,
+    batcher: &mut Batcher,
+) {
+    while st.admitted < cfg.inflight_cap {
+        let Some(tenant) = st.rr.pop_front() else { break };
+        let Some(q) = st.queues.get_mut(&tenant) else { continue };
+        let Some(pj) = q.pop_front() else { continue };
+        if !q.is_empty() {
+            st.rr.push_back(tenant);
+        }
+        st.admitted += 1;
+        let id = pj.id;
+        let job = Job { id, a: pj.a, b: pj.b, force_route: None };
+        // routing and shard planning walk malformed operands (the
+        // failure-injection surface); on the raw coordinator that
+        // panic costs the *submitting* thread, but here the submitting
+        // thread is the dispatcher every tenant depends on — convert
+        // the panic into one failed request instead
+        let submitted = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if cfg.batch.enabled && matches!(router.route(&job.a, &job.b), Route::Hash) {
+                if let Some(batch) = batcher.push(job) {
+                    coord.submit_batch(batch);
+                }
+            } else {
+                coord.submit(job);
+            }
+        }));
+        if submitted.is_err() {
+            fan_out(
+                st,
+                metrics,
+                JobResult {
+                    id,
+                    route: Route::Hash,
+                    c: Err(anyhow::anyhow!(
+                        "admission panicked while routing (malformed operands?)"
+                    )),
+                    wall_ns: 0,
+                    nprod: 0,
+                },
+            );
+        }
+    }
+}
+
+/// The dispatcher: owns the coordinator, alternates admission with
+/// result polling, flushes aged batches, and on stop drains everything
+/// outstanding before persisting and shutting the coordinator down.
+fn dispatcher_loop(
+    coord: Coordinator,
+    router: Router,
+    cfg: ServeConfig,
+    state: Arc<Mutex<FrontState>>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    fit: Arc<NsPerProdFit>,
+) {
+    let mut batcher = Batcher::new(cfg.batch);
+    loop {
+        let stopping = stop.load(Ordering::SeqCst);
+        {
+            let mut guard = state.lock().unwrap_or_else(|e| e.into_inner());
+            admit_ready(&mut guard, &cfg, &coord, &router, &metrics, &mut batcher);
+        }
+        // the age watermark (or a stop) flushes a partial batch so its
+        // members never wait on traffic that may not come
+        let flush = if stopping { batcher.take() } else { batcher.take_aged() };
+        if let Some(batch) = flush {
+            coord.submit_batch(batch);
+        }
+        if let Some(r) = coord.recv_timeout(DISPATCHER_TICK) {
+            let mut guard = state.lock().unwrap_or_else(|e| e.into_inner());
+            // fan out before admitting: a freed inflight slot goes to
+            // the next tenant in the rotation on the same tick
+            fan_out(&mut guard, &metrics, r);
+            admit_ready(&mut guard, &cfg, &coord, &router, &metrics, &mut batcher);
+        }
+        if stopping {
+            let drained = {
+                let guard = state.lock().unwrap_or_else(|e| e.into_inner());
+                guard.outstanding.is_empty()
+            };
+            if drained && batcher.is_empty() {
+                break;
+            }
+        }
+    }
+    if let Some(path) = &cfg.persist {
+        let snapshot = {
+            let h = coord.history().lock().unwrap_or_else(|e| e.into_inner());
+            PersistedState::capture(&h, &fit)
+        };
+        if let Err(e) = persist::save_state(path, &snapshot) {
+            eprintln!("serve: failed to persist warm state: {e:#}");
+        }
+    }
+    coord.shutdown();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Serving behavior (coalescing, rejection, batching, persistence,
+    // baseline parity) is integration-tested in tests/serve.rs; these
+    // unit tests pin the config layering contract: CLI > env > default.
+
+    #[test]
+    fn default_layer_reproduces_the_baseline_posture() {
+        let d = ServeConfig::default();
+        assert!(d.coalesce, "coalescing is the front door's default-on feature");
+        assert!(!d.batch.enabled, "batching defaults off (PR 5 baseline)");
+        assert!(d.persist.is_none(), "persistence defaults off");
+        assert_eq!(d.inflight_cap, usize::MAX, "admission is pass-through by default");
+        assert_eq!(d.workers, 4);
+        assert!(d.queue_cap >= 1024);
+        let r = RouterConfig::default();
+        assert_eq!(d.device_memory_bytes, r.device_memory_bytes);
+        assert_eq!(d.max_devices, r.max_devices);
+        assert_eq!(d.interconnect, r.interconnect);
+        assert_eq!(d.replan, ReplanConfig::default());
+        assert_eq!(d.overlap, OverlapConfig::default());
+    }
+
+    #[test]
+    fn env_layer_overrides_defaults_and_junk_keeps_them() {
+        let env: HashMap<&str, &str> = [
+            ("OPSPARSE_WORKERS", "7"),
+            ("OPSPARSE_COALESCE", "off"),
+            ("OPSPARSE_BATCH", "on"),
+            ("OPSPARSE_BATCH_MAX", "12"),
+            ("OPSPARSE_BATCH_AGE_MS", "9"),
+            ("OPSPARSE_QUEUE_CAP", "3"),
+            ("OPSPARSE_INFLIGHT", "2"),
+            ("OPSPARSE_PERSIST", "warm.state"),
+            ("OPSPARSE_REPLAN", "off"),
+            ("OPSPARSE_HISTORY_CAP", "5"),
+            ("OPSPARSE_OVERLAP", "off"),
+            ("OPSPARSE_OVERLAP_CHUNK_KB", "64"),
+            ("OPSPARSE_INTERCONNECT", "none"),
+        ]
+        .into_iter()
+        .collect();
+        let cfg = ServeConfig::from_env_map(|k| env.get(k).map(|v| v.to_string()));
+        assert_eq!(cfg.workers, 7);
+        assert!(!cfg.coalesce);
+        assert!(cfg.batch.enabled);
+        assert_eq!(cfg.batch.max_jobs, 12);
+        assert_eq!(cfg.batch.max_age, Duration::from_millis(9));
+        assert_eq!(cfg.queue_cap, 3);
+        assert_eq!(cfg.inflight_cap, 2);
+        assert_eq!(cfg.persist.as_deref(), Some("warm.state"));
+        assert!(!cfg.replan.enabled);
+        assert_eq!(cfg.replan.history_cap, 5);
+        assert!(!cfg.overlap.enabled);
+        assert_eq!(cfg.overlap.chunk_bytes, 64 * 1024);
+        assert_eq!(cfg.interconnect, None);
+        // `on` maps to the default path; junk values keep the defaults
+        let env2: HashMap<&str, &str> = [
+            ("OPSPARSE_PERSIST", "on"),
+            ("OPSPARSE_WORKERS", "zero"),
+            ("OPSPARSE_COALESCE", "maybe"),
+            ("OPSPARSE_INTERCONNECT", "carrier-pigeon"),
+        ]
+        .into_iter()
+        .collect();
+        let cfg2 = ServeConfig::from_env_map(|k| env2.get(k).map(|v| v.to_string()));
+        assert_eq!(cfg2.persist.as_deref(), Some(DEFAULT_PERSIST_PATH));
+        assert_eq!(cfg2.workers, ServeConfig::default().workers, "junk keeps default");
+        assert!(cfg2.coalesce, "junk keeps default");
+        assert_eq!(cfg2.interconnect, ServeConfig::default().interconnect);
+        // an empty env reproduces the defaults exactly
+        assert_eq!(ServeConfig::from_env_map(|_| None), ServeConfig::default());
+    }
+
+    #[test]
+    fn cli_layer_beats_env_and_rejects_junk() {
+        // env says one thing...
+        let env: HashMap<&str, &str> =
+            [("OPSPARSE_COALESCE", "off"), ("OPSPARSE_QUEUE_CAP", "3"), ("OPSPARSE_BATCH", "on")]
+                .into_iter()
+                .collect();
+        let base = ServeConfig::from_env_map(|k| env.get(k).map(|v| v.to_string()));
+        // ...the CLI says another: CLI wins, untouched knobs keep env
+        let flags: HashMap<String, String> = [
+            ("coalesce".to_string(), "on".to_string()),
+            ("queue-cap".to_string(), "77".to_string()),
+            ("persist".to_string(), "cli.state".to_string()),
+        ]
+        .into_iter()
+        .collect();
+        let cfg = ServeConfig::from_args_over(base.clone(), &flags).unwrap();
+        assert!(cfg.coalesce, "CLI overrides env");
+        assert_eq!(cfg.queue_cap, 77, "CLI overrides env");
+        assert!(cfg.batch.enabled, "knobs the CLI left alone keep the env layer");
+        assert_eq!(cfg.persist.as_deref(), Some("cli.state"));
+        // unknown flag names are ignored (commands carry extra flags)
+        let extra: HashMap<String, String> =
+            [("jobs".to_string(), "32".to_string())].into_iter().collect();
+        assert_eq!(ServeConfig::from_args_over(base.clone(), &extra).unwrap(), base);
+        // ...but a junk value on a known flag is an error, not a default
+        for (k, v) in
+            [("coalesce", "maybe"), ("queue-cap", "many"), ("interconnect", "string-and-cans")]
+        {
+            let bad: HashMap<String, String> =
+                [(k.to_string(), v.to_string())].into_iter().collect();
+            assert!(
+                ServeConfig::from_args_over(base.clone(), &bad).is_err(),
+                "--{k} {v} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn persist_flag_spellings() {
+        let base = ServeConfig::default();
+        let mk = |v: &str| {
+            let flags: HashMap<String, String> =
+                [("persist".to_string(), v.to_string())].into_iter().collect();
+            ServeConfig::from_args_over(base.clone(), &flags).unwrap().persist
+        };
+        assert_eq!(mk("on").as_deref(), Some(DEFAULT_PERSIST_PATH));
+        assert_eq!(mk("off"), None);
+        assert_eq!(mk("/tmp/custom.state").as_deref(), Some("/tmp/custom.state"));
+    }
+
+    #[test]
+    fn router_config_carries_the_serve_knobs_and_fit() {
+        let mut cfg = ServeConfig::default();
+        cfg.device_memory_bytes = 4096;
+        cfg.max_devices = 4;
+        cfg.interconnect = None;
+        cfg.overlap = OverlapConfig::off();
+        let fit = Arc::new(NsPerProdFit::new(2.0));
+        let rc = cfg.router_config(Arc::clone(&fit));
+        assert_eq!(rc.device_memory_bytes, 4096);
+        assert_eq!(rc.max_devices, 4);
+        assert_eq!(rc.interconnect, None);
+        assert!(!rc.overlap.enabled);
+        assert_eq!(rc.ns_per_prod, 2.0);
+        assert!(rc.fit.is_some());
+        assert_eq!(rc.ns_per_prod_now(), 2.0);
+    }
+}

@@ -90,6 +90,14 @@ enum WorkerMsg {
     /// latency, so queue wait is visible and the percentiles compare
     /// across routes.
     Run(Job, Route, Instant),
+    /// Several hash jobs delivered as **one worker visit**: the batched
+    /// device pass the serving front door flushes
+    /// ([`Coordinator::submit_batch`]). Every member runs the same code
+    /// as a singleton [`WorkerMsg::Run`] against the same warm pool and
+    /// pattern cache, so results are bit-identical to one-at-a-time
+    /// submission — the batch only amortizes queue traffic and keeps
+    /// the members' allocations on one pool.
+    RunBatch(Vec<Job>, Instant),
     /// One shard of a sharded parent job.
     RunShard(ShardTask),
     Stop,
@@ -116,6 +124,69 @@ pub(crate) fn finish(
     }
     metrics.observe_latency(wall_ns);
     let _ = tx.send(JobResult { id, route, c, wall_ns, nprod });
+}
+
+/// Execute one hash-routed job against a worker's warm state (device
+/// pool + pattern cache) and report it through `finish`. Shared by the
+/// per-job [`WorkerMsg::Run`] arm and the batched [`WorkerMsg::RunBatch`]
+/// arm — a batch is exactly this, looped, so batching changes *where*
+/// the work runs (one worker visit), never *what* it computes.
+fn run_hash_job(
+    job: Job,
+    t0: Instant,
+    pool: &mut DevicePool,
+    cache: &mut PatternCache,
+    cfg: &OpSparseConfig,
+    fit: Option<&Arc<NsPerProdFit>>,
+    metrics: &Metrics,
+    tx_res: &mpsc::Sender<JobResult>,
+) {
+    let key = (job.a.pattern_fingerprint(), job.b.pattern_fingerprint());
+    let reuse = cache.lookup(key);
+    if reuse.is_some() {
+        metrics.sym_cache_hits.fetch_add(1, Ordering::Relaxed);
+    } else {
+        metrics.sym_cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+    let pool_before = pool.stats();
+    // a panicking multiply (internal bug, or a 2^-64 fingerprint
+    // collision making the cached entry lie) must cost one job, not
+    // the worker thread and every queued job
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        multiply_reuse(&job.a, &job.b, cfg, Some(pool), reuse.as_deref())
+    }));
+    let (c, nprod) = match result {
+        Ok(Ok(out)) => {
+            let np = out.nprod;
+            // online re-fit: fold this job's measured device time into
+            // the live ns_per_prod fit. The fit is seeded from (and the
+            // router compares it against) *simulated* device ns, so the
+            // observation must be in the same unit system — the
+            // simulator plays the CUDA-event role here, exactly as on
+            // the RunShard path; host wall clock would drift the fit
+            // with machine speed. Cache-warm replays skip the symbolic
+            // phase and would bias the full-pipeline constant low; skip
+            // them.
+            if let Some(f) = fit {
+                if !out.symbolic_skipped
+                    && f.observe(simulate(&out.trace, &V100).total_ns, np as u64)
+                {
+                    metrics.refit_updates.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            if reuse.is_none() {
+                cache.insert(key, Arc::new(SymbolicReuse::from_output(&out)));
+            }
+            (Ok(out.c), np)
+        }
+        Ok(Err(e)) => (Err(e), 0),
+        Err(_) => (
+            Err(anyhow::anyhow!("multiply panicked (internal bug or corrupt reuse entry)")),
+            0,
+        ),
+    };
+    metrics.observe_pool(&pool.stats().delta_since(&pool_before));
+    finish(metrics, tx_res, job.id, Route::Hash, c, nprod, t0);
 }
 
 /// The coordinator: spawn, submit, drain, join.
@@ -256,77 +327,36 @@ impl Coordinator {
                             task.barrier.complete(task.shard, r, shard_ns);
                         }
                         Ok(WorkerMsg::Run(job, _, t0)) => {
-                            let key =
-                                (job.a.pattern_fingerprint(), job.b.pattern_fingerprint());
-                            let reuse = cache.lookup(key);
-                            if reuse.is_some() {
-                                metrics.sym_cache_hits.fetch_add(1, Ordering::Relaxed);
-                            } else {
-                                metrics.sym_cache_misses.fetch_add(1, Ordering::Relaxed);
-                            }
-                            let pool_before = pool.stats();
-                            // a panicking multiply (internal bug, or a
-                            // 2^-64 fingerprint collision making the
-                            // cached entry lie) must cost one job, not
-                            // the worker thread and every queued job
-                            let result = std::panic::catch_unwind(
-                                std::panic::AssertUnwindSafe(|| {
-                                    multiply_reuse(
-                                        &job.a,
-                                        &job.b,
-                                        &cfg,
-                                        Some(&mut pool),
-                                        reuse.as_deref(),
-                                    )
-                                }),
+                            run_hash_job(
+                                job,
+                                t0,
+                                &mut pool,
+                                &mut cache,
+                                &cfg,
+                                fit.as_ref(),
+                                &metrics,
+                                &tx_res,
                             );
-                            let (c, nprod) = match result {
-                                Ok(Ok(out)) => {
-                                    let np = out.nprod;
-                                    // online re-fit: fold this job's
-                                    // measured device time into the live
-                                    // ns_per_prod fit. The fit is seeded
-                                    // from (and the router compares it
-                                    // against) *simulated* device ns, so
-                                    // the observation must be in the same
-                                    // unit system — the simulator plays
-                                    // the CUDA-event role here, exactly
-                                    // as on the RunShard path; host wall
-                                    // clock would drift the fit with
-                                    // machine speed. Cache-warm replays
-                                    // skip the symbolic phase and would
-                                    // bias the full-pipeline constant
-                                    // low; skip them.
-                                    if let Some(f) = &fit {
-                                        if !out.symbolic_skipped
-                                            && f.observe(
-                                                simulate(&out.trace, &V100).total_ns,
-                                                np as u64,
-                                            )
-                                        {
-                                            metrics
-                                                .refit_updates
-                                                .fetch_add(1, Ordering::Relaxed);
-                                        }
-                                    }
-                                    if reuse.is_none() {
-                                        cache.insert(
-                                            key,
-                                            Arc::new(SymbolicReuse::from_output(&out)),
-                                        );
-                                    }
-                                    (Ok(out.c), np)
-                                }
-                                Ok(Err(e)) => (Err(e), 0),
-                                Err(_) => (
-                                    Err(anyhow::anyhow!(
-                                        "multiply panicked (internal bug or corrupt reuse entry)"
-                                    )),
-                                    0,
-                                ),
-                            };
-                            metrics.observe_pool(&pool.stats().delta_since(&pool_before));
-                            finish(&metrics, &tx_res, job.id, Route::Hash, c, nprod, t0);
+                        }
+                        Ok(WorkerMsg::RunBatch(jobs, t0)) => {
+                            // one worker visit, many members: each runs
+                            // the identical singleton path against this
+                            // worker's pool and cache, so a batch's
+                            // results match one-at-a-time submission
+                            // bit for bit while repeated patterns warm
+                            // the same cache within the visit
+                            for job in jobs {
+                                run_hash_job(
+                                    job,
+                                    t0,
+                                    &mut pool,
+                                    &mut cache,
+                                    &cfg,
+                                    fit.as_ref(),
+                                    &metrics,
+                                    &tx_res,
+                                );
+                            }
                         }
                         Ok(WorkerMsg::Stop) | Err(_) => break,
                     }
@@ -364,6 +394,11 @@ impl Coordinator {
                             };
                             finish(&metrics, &tx_res, job.id, Route::Block, c, nprod, t0);
                         }
+                        // the submit path never sends shard or batch
+                        // messages to the block channel; if one ever
+                        // arrives, dropping it is safe (a dropped
+                        // ShardTask's barrier reports the parent failed)
+                        Ok(WorkerMsg::RunShard(_)) | Ok(WorkerMsg::RunBatch(..)) => {}
                         Ok(WorkerMsg::Stop) | Err(_) => break,
                     }
                 }
@@ -525,9 +560,40 @@ impl Coordinator {
         }
     }
 
+    /// Submit several small hash jobs as **one device pass on one
+    /// worker**: the members travel as a single queue message, run
+    /// back-to-back against that worker's device pool and pattern cache
+    /// (one visit amortizes the queue traffic and keeps every member's
+    /// allocations on one pool), and each emits its own [`JobResult`] in
+    /// member order. Results are bit-identical to submitting the members
+    /// one at a time — batching moves work, it never changes it. Routing
+    /// is **not** consulted: the caller (the serving front door's
+    /// batcher) only batches jobs it already routed to the hash path;
+    /// `force_route` is ignored.
+    pub fn submit_batch(&self, jobs: Vec<Job>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        let n = jobs.len() as u64;
+        self.metrics.jobs_submitted.fetch_add(n, Ordering::Relaxed);
+        self.metrics.hash_routed.fetch_add(n, Ordering::Relaxed);
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics.batched_jobs.fetch_add(n, Ordering::Relaxed);
+        self.tx_hash.send(WorkerMsg::RunBatch(jobs, t0)).expect("hash workers alive");
+    }
+
     /// Receive the next completed job (blocking).
     pub fn recv(&self) -> Option<JobResult> {
         self.rx_results.recv().ok()
+    }
+
+    /// Receive the next completed job, waiting at most `timeout` —
+    /// `None` on timeout or when every sender is gone. The serving
+    /// front door's dispatcher polls with this so it can interleave
+    /// result fan-out with admission and age-based batch flushing.
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Option<JobResult> {
+        self.rx_results.recv_timeout(timeout).ok()
     }
 
     /// Stop all workers and join. Stop markers queue **behind** every
@@ -603,6 +669,62 @@ mod tests {
         assert!(snap.pool_reused_bytes > 0);
         assert!(snap.pool_device_mallocs > 0, "the cold job grows the pool");
         coord.shutdown();
+    }
+
+    #[test]
+    fn batched_submission_is_bit_identical_to_singletons_and_ordered() {
+        let mut rng = Rng::new(81);
+        let mats: Vec<Csr> = (0..5)
+            .map(|_| Uniform { n: 100, per_row: 5, jitter: 2 }.generate(&mut rng))
+            .collect();
+        // singleton reference pass (same worker count, fresh state)
+        let solo_coord = Coordinator::start(1, Router::default(), None);
+        for (i, m) in mats.iter().enumerate() {
+            solo_coord.submit(Job {
+                id: i as u64,
+                a: m.clone(),
+                b: m.clone(),
+                force_route: None,
+            });
+        }
+        let mut solo: Vec<Option<Csr>> = vec![None; mats.len()];
+        for _ in 0..mats.len() {
+            let r = solo_coord.recv().unwrap();
+            solo[r.id as usize] = Some(r.c.unwrap());
+        }
+        solo_coord.shutdown();
+        // batched pass: one message, one worker visit
+        let coord = Coordinator::start(1, Router::default(), None);
+        coord.submit_batch(
+            mats.iter()
+                .enumerate()
+                .map(|(i, m)| Job {
+                    id: i as u64,
+                    a: m.clone(),
+                    b: m.clone(),
+                    force_route: None,
+                })
+                .collect(),
+        );
+        for want_id in 0..mats.len() as u64 {
+            let r = coord.recv().unwrap();
+            assert_eq!(r.id, want_id, "batch members complete in member order");
+            assert_eq!(r.route, Route::Hash);
+            let got = r.c.unwrap();
+            assert_eq!(&got, solo[r.id as usize].as_ref().unwrap(), "bitwise identical");
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.batches, 1);
+        assert_eq!(snap.batched_jobs, 5);
+        assert_eq!(snap.jobs_submitted, 5);
+        assert_eq!(snap.jobs_completed, 5);
+        assert_eq!(snap.hash_routed, 5);
+        coord.shutdown();
+        // an empty batch is a no-op, not a message
+        let c2 = Coordinator::start(1, Router::default(), None);
+        c2.submit_batch(Vec::new());
+        assert_eq!(c2.metrics.snapshot().batches, 0);
+        c2.shutdown();
     }
 
     #[test]

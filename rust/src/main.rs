@@ -4,13 +4,18 @@
 //! * `gen --name <matrix> [--scale s] [--out f.mtx]` — emit a suite matrix
 //! * `spgemm --a f.mtx [--b g.mtx] [--lib L] [--verify]` — one multiply
 //! * `suite [--scale s] [--verify]` — all 26 matrices, all libraries
-//! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|all>`
+//! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|all>`
 //!   (`bench shards` takes `--interconnect pcie|nvlink|none`,
 //!   `--overlap on|off`, `--chunk-kb <KiB>`, `--json <path>`,
 //!   `--overlap-json <path>`, `--replan on|off`, and
-//!   `--adaptive-json <path>`)
-//! * `serve [--jobs n] [--workers w] [--replan on|off] [--history-cap n]`
-//!   — coordinator demo (job queue)
+//!   `--adaptive-json <path>`; `bench serve` takes `--jobs n` and
+//!   `--json <path>`)
+//! * `serve [--jobs n] [--workers w] [--coalesce on|off] [--batch on|off]
+//!   [--batch-max n] [--batch-age-ms n] [--queue-cap n] [--inflight n]
+//!   [--persist on|off|path] [--replan on|off] [--history-cap n]
+//!   [--overlap on|off] [--chunk-kb n] [--interconnect pcie|nvlink|none]`
+//!   — the serving front door (coalescing, batching, admission control,
+//!   warm-start persistence) over the coordinator
 //! * `sim-case webbase` — §6.3.4 / §6.3.5 case-study timeline
 //!
 //! Offline build: argument parsing is hand-rolled (no clap in the vendor
@@ -19,7 +24,7 @@
 use anyhow::{bail, Context, Result};
 use opsparse::baselines::Library;
 use opsparse::bench::{figures, gflops, run_and_simulate, tables};
-use opsparse::coordinator::{Coordinator, Job, Router};
+use opsparse::coordinator::{Serve, ServeConfig, ServeResult};
 use opsparse::gen::suite::{entries, suite_entry, SuiteScale};
 use opsparse::gpusim::{simulate, V100};
 use opsparse::sparse::mmio;
@@ -219,6 +224,15 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             let reps = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(5);
             opsparse::bench::perf_l3(m, scale, reps)?;
         }
+        "serve" => {
+            let jobs = flags.get("jobs").map(|s| s.parse()).transpose()?.unwrap_or(32);
+            let report = opsparse::bench::serve_bench::serve_load(jobs, scale)?;
+            // --json wins over the env path, matching the shards bench
+            let env_path = std::env::var("OPSPARSE_BENCH_JSON_SERVE").ok();
+            if let Some(path) = flags.get("json").map(String::as_str).or(env_path.as_deref()) {
+                opsparse::bench::write_serve_json(path, &report)?;
+            }
+        }
         "all" => {
             tables::table1();
             tables::table2();
@@ -241,11 +255,30 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let jobs: usize = flags.get("jobs").map(|s| s.parse()).transpose()?.unwrap_or(32);
-    let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    // every serving knob flows through one config with documented
+    // CLI > env > default precedence (--workers, --coalesce, --batch,
+    // --batch-max, --batch-age-ms, --queue-cap, --inflight, --persist,
+    // --replan, --history-cap, --overlap, --chunk-kb, --interconnect)
+    let cfg = ServeConfig::from_args(flags)?;
     let use_engine = !flags.contains_key("no-engine")
         && opsparse::runtime::pjrt_compiled()
         && opsparse::runtime::artifacts_available();
-    println!("coordinator: {workers} hash workers, block engine: {use_engine}");
+    println!(
+        "serve: {} hash workers, block engine: {use_engine}, coalesce: {}, batch: {}, \
+         queue cap {}, persist: {}",
+        cfg.workers,
+        if cfg.coalesce { "on" } else { "off" },
+        if cfg.batch.enabled { "on" } else { "off" },
+        cfg.queue_cap,
+        cfg.persist.as_deref().unwrap_or("off")
+    );
+    println!(
+        "replan: {} (history cap {}); overlap: {} ({} KiB chunks)",
+        if cfg.replan.enabled { "on" } else { "off" },
+        cfg.replan.history_cap,
+        if cfg.overlap.enabled { "on" } else { "off" },
+        cfg.overlap.chunk_bytes / 1024
+    );
     let factory: Option<opsparse::coordinator::service::EngineFactory> = if use_engine {
         Some(Box::new(|| {
             // P=16: optimal batch for the interpret-mode CPU path (§Perf)
@@ -258,63 +291,56 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     } else {
         None
     };
-    // adaptive knobs: env defaults (OPSPARSE_REPLAN / OPSPARSE_HISTORY_CAP),
-    // flags win — mirroring the overlap knobs
-    let mut replan = opsparse::coordinator::ReplanConfig::from_env();
-    if let Some(v) = flags.get("replan") {
-        replan.enabled = opsparse::coordinator::feedback::parse_on_off(v)
-            .with_context(|| format!("unknown --replan value {v} (on|off)"))?;
-    }
-    if let Some(cap) = flags.get("history-cap") {
-        let cap: usize = cap.parse().context("--history-cap <n>")?;
-        if cap == 0 {
-            bail!("--history-cap must be positive");
-        }
-        replan.history_cap = cap;
-    }
-    // the process-wide default fit, made *live*: workers fold measured
-    // job times back in, and the router reads the current fit per
-    // decision (one suite calibration per process, shared)
-    let fit = opsparse::coordinator::feedback::default_fit();
-    let router_cfg = opsparse::coordinator::RouterConfig::with_live_fit(fit.clone());
-    println!(
-        "router: calibrated ns_per_prod = {:.3} (live re-fit); replan: {} (history cap {})",
-        router_cfg.ns_per_prod,
-        if replan.enabled { "on" } else { "off" },
-        replan.history_cap
-    );
-    let coord = Coordinator::start_with(workers, Router::new(router_cfg), factory, replan);
-    // mixed workload: alternating blocky (FEM) and scattered matrices
+    let serve = Serve::start_with_engine(cfg, factory)?;
+    println!("router: ns_per_prod = {:.3} (live re-fit)", serve.fit().current());
+    // mixed workload: alternating blocky (FEM) and scattered matrices,
+    // submitted as two tenants through the front door
     let mut rng = Rng::new(2026);
     let t0 = std::time::Instant::now();
-    for id in 0..jobs as u64 {
-        let a = if id % 2 == 0 {
-            opsparse::gen::banded::Banded { n: 512, per_row: 32, band: 24, contiguous_frac: 1.0 }
-                .generate(&mut rng)
-        } else {
-            opsparse::gen::uniform::Uniform { n: 1024, per_row: 8, jitter: 4 }.generate(&mut rng)
-        };
-        coord.submit(Job { id, a: a.clone(), b: a, force_route: None });
-    }
+    let tickets: Vec<_> = (0..jobs as u64)
+        .map(|id| {
+            let (tenant, a) = if id % 2 == 0 {
+                let m = opsparse::gen::banded::Banded {
+                    n: 512,
+                    per_row: 32,
+                    band: 24,
+                    contiguous_frac: 1.0,
+                }
+                .generate(&mut rng);
+                ("fem", m)
+            } else {
+                let m = opsparse::gen::uniform::Uniform { n: 1024, per_row: 8, jitter: 4 }
+                    .generate(&mut rng);
+                ("scatter", m)
+            };
+            serve.submit(tenant, a.clone(), a)
+        })
+        .collect();
     let mut failed = 0usize;
-    for _ in 0..jobs {
-        let r = coord.recv().context("coordinator hung up")?;
-        if let Err(e) = &r.c {
-            eprintln!("job {} failed: {e:#}", r.id);
-            failed += 1;
+    for (id, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            ServeResult::Done { .. } => {}
+            ServeResult::Failed { error, .. } => {
+                eprintln!("job {id} failed: {error}");
+                failed += 1;
+            }
+            ServeResult::Rejected { queue_full } => {
+                eprintln!("job {id} rejected (queue_full={queue_full})");
+                failed += 1;
+            }
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let snap = coord.metrics.snapshot();
+    let snap = serve.metrics_snapshot();
     println!("{snap}");
     println!(
         "throughput: {:.1} jobs/s, {:.2} Gprod/s  (ns_per_prod now {:.3} after {} refits)",
         jobs as f64 / wall,
         snap.nprod_total as f64 / wall / 1e9,
-        fit.current(),
-        fit.updates()
+        serve.fit().current(),
+        serve.fit().updates()
     );
-    coord.shutdown();
+    serve.shutdown();
     if failed > 0 {
         bail!("{failed} jobs failed");
     }
@@ -373,11 +399,15 @@ fn usage() -> ! {
            gen      --name <matrix> [--scale tiny|small|medium] [--out f.mtx]\n\
            spgemm   --a f.mtx [--b g.mtx] [--lib opsparse|nsparse|speck|cusparse] [--verify]\n\
            suite    [--scale s] [--verify]\n\
-           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|all> [--scale s]\n\
+           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|all> [--scale s]\n\
                     shards also takes [--interconnect pcie|nvlink|none] [--overlap on|off]\n\
                     [--chunk-kb n] [--json out.json] [--overlap-json out.json]\n\
                     [--replan on|off] [--adaptive-json out.json]\n\
-           serve    [--jobs n] [--workers w] [--no-engine] [--replan on|off] [--history-cap n]\n\
+                    serve also takes [--jobs n] [--json out.json]\n\
+           serve    [--jobs n] [--workers w] [--no-engine] [--coalesce on|off]\n\
+                    [--batch on|off] [--batch-max n] [--batch-age-ms n] [--queue-cap n]\n\
+                    [--inflight n] [--persist on|off|path] [--replan on|off] [--history-cap n]\n\
+                    [--overlap on|off] [--chunk-kb n] [--interconnect pcie|nvlink|none]\n\
            sim-case webbase [--scale s]\n\
            list     (suite matrix names)"
     );

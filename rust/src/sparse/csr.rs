@@ -181,6 +181,29 @@ impl Csr {
         h
     }
 
+    /// Order-sensitive FNV-1a fingerprint of the numeric *values* (raw
+    /// `f64` bits, pattern excluded). Combined with
+    /// [`Csr::pattern_fingerprint`] this identifies a matrix up to hash
+    /// collision: the serving layer's request-coalescing key uses both,
+    /// because two requests may only share one *numeric* result when
+    /// patterns **and** values match — the pattern fingerprint alone
+    /// would let a coalesced waiter receive another matrix's product.
+    pub fn value_fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(h: &mut u64, x: u64) {
+            for b in x.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(PRIME);
+            }
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        mix(&mut h, self.val.len() as u64);
+        for &v in &self.val {
+            mix(&mut h, v.to_bits());
+        }
+        h
+    }
+
     /// Maximum nnz over all rows ("Max nnz/row" column of Table 3).
     pub fn max_row_nnz(&self) -> usize {
         (0..self.rows).map(|i| self.row_nnz(i)).max().unwrap_or(0)
@@ -325,6 +348,28 @@ mod tests {
         let mut wide = Csr::identity(2);
         wide.cols = 3;
         assert_ne!(i2.pattern_fingerprint(), wide.pattern_fingerprint());
+    }
+
+    #[test]
+    fn value_fingerprint_tracks_values_not_structure() {
+        let a = sample();
+        let mut b = sample();
+        assert_eq!(a.value_fingerprint(), b.value_fingerprint());
+        b.val[0] = 99.0;
+        assert_ne!(a.value_fingerprint(), b.value_fingerprint(), "changed value must show");
+        // same values in a different pattern hash equal here (the
+        // pattern fingerprint covers that axis; the coalesce key uses
+        // both)
+        let c =
+            Csr::from_parts(3, 3, vec![0, 2, 2, 4], vec![0, 1, 0, 1], vec![1.0, 2.0, 3.0, 4.0])
+                .unwrap();
+        assert_eq!(a.value_fingerprint(), c.value_fingerprint());
+        // -0.0 and 0.0 differ bitwise, and the fingerprint is bitwise
+        let mut neg = sample();
+        neg.val[0] = -0.0;
+        let mut pos = sample();
+        pos.val[0] = 0.0;
+        assert_ne!(neg.value_fingerprint(), pos.value_fingerprint());
     }
 
     #[test]

@@ -10,12 +10,16 @@ pub mod numeric;
 pub mod one_phase;
 pub mod pipeline;
 pub mod reference;
+pub mod request;
 pub mod semiring;
 pub mod sharded;
 pub mod symbolic;
 
 pub use kernel_tables::{BinningRanges, KernelConfig, NumericRanges, SymbolicRanges};
-pub use pipeline::{multiply, multiply_reuse, OpSparseConfig, SpgemmOutput, SymbolicReuse};
+pub use pipeline::{
+    multiply, multiply_batch, multiply_reuse, OpSparseConfig, SpgemmOutput, SymbolicReuse,
+};
+pub use request::SpgemmRequest;
 pub use sharded::{
     annotate_chunk_deps, multiply_sharded, multiply_sharded_pooled, multiply_sharded_with,
     MeasuredShard, ShardPlan, ShardReuse, ShardedOutput,

@@ -264,8 +264,57 @@ fn emit_metadata_mallocs(
 /// let tl = simulate(&out.trace, &V100);
 /// assert!(tl.gflops(out.flops()) > 0.0);
 /// ```
+///
+/// Prefer [`crate::spgemm::request::SpgemmRequest`] in new code — this
+/// wrapper is the builder with no options set, kept for existing
+/// callers:
+///
+/// ```
+/// use opsparse::sparse::Csr;
+/// use opsparse::spgemm::{multiply, OpSparseConfig, SpgemmRequest};
+///
+/// let a = Csr::identity(64);
+/// let cfg = OpSparseConfig::default();
+/// let old = multiply(&a, &a, &cfg).unwrap();
+/// let new = SpgemmRequest::new(&a, &a).config(&cfg).run().unwrap();
+/// assert_eq!(old.c, new.c); // bit-identical
+/// ```
 pub fn multiply(a: &Csr, b: &Csr, cfg: &OpSparseConfig) -> Result<SpgemmOutput> {
-    multiply_reuse(a, b, cfg, None, None)
+    crate::spgemm::request::SpgemmRequest::new(a, b).config(cfg).run()
+}
+
+/// Run several multiplies back-to-back against one warm pool — the
+/// batched entry the serving front door's
+/// [`crate::coordinator::Coordinator::submit_batch`] path executes per
+/// member. Each pair runs the exact singleton pipeline
+/// ([`multiply_reuse`]), so outputs are bit-identical to one-at-a-time
+/// calls; the batch only shares the pool (after the first member, a
+/// same-shape member's trace is malloc-free) and amortizes the caller's
+/// per-job overhead.
+///
+/// Per-pair results: one failed member (e.g. a dimension mismatch)
+/// fails only its own slot.
+///
+/// ```
+/// use opsparse::gpusim::DevicePool;
+/// use opsparse::sparse::Csr;
+/// use opsparse::spgemm::{multiply, multiply_batch, OpSparseConfig};
+///
+/// let a = Csr::identity(32);
+/// let cfg = OpSparseConfig::default();
+/// let solo = multiply(&a, &a, &cfg).unwrap();
+/// let mut pool = DevicePool::new();
+/// let batch = multiply_batch(&[(&a, &a), (&a, &a)], &cfg, Some(&mut pool));
+/// for out in &batch {
+///     assert_eq!(out.as_ref().unwrap().c, solo.c); // bit-identical
+/// }
+/// ```
+pub fn multiply_batch(
+    pairs: &[(&Csr, &Csr)],
+    cfg: &OpSparseConfig,
+    mut pool: Option<&mut DevicePool>,
+) -> Vec<Result<SpgemmOutput>> {
+    pairs.iter().map(|(a, b)| multiply_reuse(a, b, cfg, pool.as_deref_mut(), None)).collect()
 }
 
 /// [`multiply`] with the cross-call reuse hooks a warm worker provides:

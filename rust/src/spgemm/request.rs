@@ -1,0 +1,286 @@
+//! One front door for every way to run a multiply: the
+//! [`SpgemmRequest`] builder.
+//!
+//! The pipeline grew one entry point per capability — [`multiply`] for
+//! the cold path, [`multiply_reuse`] adding the pool + symbolic-reuse
+//! hooks, [`multiply_sharded`] / [`multiply_sharded_pooled`] /
+//! [`multiply_sharded_with`] adding row sharding with progressively
+//! more knobs — seven positional-argument spellings of the same
+//! question. This module collapses the sprawl into one builder:
+//!
+//! ```text
+//! SpgemmRequest::new(&a, &b)
+//!     .config(&cfg)        // pipeline knobs        (default: OpSparseConfig::default())
+//!     .pool(&mut pool)     // warm device pool      (default: per-call allocation)
+//!     .reuse(&sym)         // cached symbolic phase (default: compute it)
+//!     .shards(4)           // row-shard over n devices
+//!     .plan(&plan)         // ...or an explicit row partition
+//!     .pools(&mut pools)   // per-device pools for the sharded path
+//!     .shard_reuse(&sr)    // per-shard symbolic reuse
+//!     .overlap(ov)         // chunked-broadcast annotation
+//!     .run()               // -> SpgemmOutput   (or .run_sharded() -> ShardedOutput)
+//! ```
+//!
+//! The builder adds **no** third execution path: [`SpgemmRequest::run`]
+//! dispatches to [`multiply_reuse`] (unsharded) and
+//! [`SpgemmRequest::run_sharded`] to [`multiply_sharded_with`], which
+//! remain the two engine entries. The legacy free functions survive as
+//! thin wrappers over the builder (see their doctests proving identical
+//! results), so existing callers keep working while new code states
+//! only the options it uses.
+
+use super::pipeline::{multiply_reuse, OpSparseConfig, SpgemmOutput, SymbolicReuse};
+use super::sharded::{multiply_sharded_with, ShardPlan, ShardReuse, ShardedOutput};
+use crate::gpusim::{DevicePool, OverlapConfig};
+use crate::sparse::stats::nprod_per_row;
+use crate::sparse::Csr;
+use anyhow::{ensure, Result};
+
+/// How a request partitions rows across devices (nothing, a shard
+/// count balanced by intermediate products, or an explicit plan).
+enum Sharding<'p> {
+    None,
+    Count(usize),
+    Plan(&'p ShardPlan),
+}
+
+/// A multiply being assembled: operands first, then only the options
+/// that matter, then [`run`](SpgemmRequest::run) (or
+/// [`run_sharded`](SpgemmRequest::run_sharded) when the per-shard
+/// outputs are wanted). See the [module docs](self) for the full menu.
+pub struct SpgemmRequest<'r> {
+    a: &'r Csr,
+    b: &'r Csr,
+    cfg: Option<&'r OpSparseConfig>,
+    pool: Option<&'r mut DevicePool>,
+    reuse: Option<&'r SymbolicReuse>,
+    sharding: Sharding<'r>,
+    pools: Option<&'r mut [DevicePool]>,
+    shard_reuse: Option<&'r ShardReuse>,
+    overlap: Option<OverlapConfig>,
+}
+
+impl<'r> SpgemmRequest<'r> {
+    /// A request for `C = A * B` with every option at its default.
+    pub fn new(a: &'r Csr, b: &'r Csr) -> Self {
+        SpgemmRequest {
+            a,
+            b,
+            cfg: None,
+            pool: None,
+            reuse: None,
+            sharding: Sharding::None,
+            pools: None,
+            shard_reuse: None,
+            overlap: None,
+        }
+    }
+
+    /// Pipeline knobs (default: [`OpSparseConfig::default`]).
+    pub fn config(mut self, cfg: &'r OpSparseConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Serve every device allocation from a warm grow-only pool
+    /// (unsharded path; the sharded path takes [`pools`](Self::pools)).
+    pub fn pool(mut self, pool: &'r mut DevicePool) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Replay a cached symbolic phase for this exact sparsity pattern
+    /// (unsharded path).
+    pub fn reuse(mut self, reuse: &'r SymbolicReuse) -> Self {
+        self.reuse = Some(reuse);
+        self
+    }
+
+    /// Row-shard across `n` devices, balancing shards by intermediate
+    /// products. Overridden by [`plan`](Self::plan).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.sharding = Sharding::Count(n);
+        self
+    }
+
+    /// Row-shard by an explicit partition (wins over
+    /// [`shards`](Self::shards)).
+    pub fn plan(mut self, plan: &'r ShardPlan) -> Self {
+        self.sharding = Sharding::Plan(plan);
+        self
+    }
+
+    /// Per-device pools for the sharded path (one per shard; a short
+    /// slice fails the run, as [`multiply_sharded_with`] always has).
+    pub fn pools(mut self, pools: &'r mut [DevicePool]) -> Self {
+        self.pools = Some(pools);
+        self
+    }
+
+    /// Per-shard symbolic-reuse entries (the shard-aware pattern-cache
+    /// hook).
+    pub fn shard_reuse(mut self, reuse: &'r ShardReuse) -> Self {
+        self.shard_reuse = Some(reuse);
+        self
+    }
+
+    /// Chunked-broadcast overlap annotation for the sharded path
+    /// (default: [`OverlapConfig::default`]; never changes numerics).
+    pub fn overlap(mut self, overlap: OverlapConfig) -> Self {
+        self.overlap = Some(overlap);
+        self
+    }
+
+    /// Run the request. Unsharded requests dispatch to
+    /// [`multiply_reuse`]; sharded ones run
+    /// [`run_sharded`](Self::run_sharded) and collapse the result with
+    /// [`ShardedOutput::into_output`] (note its merged trace
+    /// *serializes* the devices — keep the [`ShardedOutput`] when the
+    /// concurrent makespan matters).
+    pub fn run(self) -> Result<SpgemmOutput> {
+        match self.sharding {
+            Sharding::None => {
+                let default_cfg;
+                let cfg = match self.cfg {
+                    Some(c) => c,
+                    None => {
+                        default_cfg = OpSparseConfig::default();
+                        &default_cfg
+                    }
+                };
+                multiply_reuse(self.a, self.b, cfg, self.pool, self.reuse)
+            }
+            _ => Ok(self.run_sharded()?.into_output()),
+        }
+    }
+
+    /// Run the request sharded, keeping the per-shard outputs. A
+    /// request with no sharding configured runs as one shard.
+    pub fn run_sharded(self) -> Result<ShardedOutput> {
+        let default_cfg;
+        let cfg = match self.cfg {
+            Some(c) => c,
+            None => {
+                default_cfg = OpSparseConfig::default();
+                &default_cfg
+            }
+        };
+        let overlap = self.overlap.unwrap_or_default();
+        match self.sharding {
+            Sharding::Plan(plan) => multiply_sharded_with(
+                self.a,
+                self.b,
+                cfg,
+                plan,
+                self.pools,
+                overlap,
+                self.shard_reuse,
+            ),
+            Sharding::Count(n) | Sharding::None => {
+                let n = if let Sharding::Count(n) = self.sharding { n } else { 1 };
+                ensure!(
+                    self.a.cols == self.b.rows,
+                    "dimension mismatch: {}x{} * {}x{}",
+                    self.a.rows,
+                    self.a.cols,
+                    self.b.rows,
+                    self.b.cols
+                );
+                let plan = ShardPlan::balanced(&nprod_per_row(self.a, self.b), n);
+                multiply_sharded_with(
+                    self.a,
+                    self.b,
+                    cfg,
+                    &plan,
+                    self.pools,
+                    overlap,
+                    self.shard_reuse,
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::uniform::Uniform;
+    use crate::spgemm::pipeline::multiply;
+    use crate::spgemm::sharded::{multiply_sharded, multiply_sharded_pooled};
+    use crate::util::rng::Rng;
+
+    fn mat(seed: u64) -> Csr {
+        Uniform { n: 120, per_row: 6, jitter: 2 }.generate(&mut Rng::new(seed))
+    }
+
+    #[test]
+    fn builder_matches_every_legacy_spelling() {
+        let (a, b) = (mat(1), mat(2));
+        let cfg = OpSparseConfig::default();
+        // unsharded
+        let old = multiply(&a, &b, &cfg).unwrap();
+        let new = SpgemmRequest::new(&a, &b).config(&cfg).run().unwrap();
+        assert_eq!(old.c, new.c);
+        assert_eq!(old.nprod, new.nprod);
+        // defaulted config is the default config
+        let defaulted = SpgemmRequest::new(&a, &b).run().unwrap();
+        assert_eq!(defaulted.c, old.c);
+        // sharded by count
+        let old_s = multiply_sharded(&a, &b, &cfg, 3).unwrap();
+        let new_s = SpgemmRequest::new(&a, &b).config(&cfg).shards(3).run_sharded().unwrap();
+        assert_eq!(old_s.c, new_s.c);
+        assert_eq!(old_s.plan.bounds(), new_s.plan.bounds());
+        // sharded + pooled
+        let mut pools = Vec::new();
+        let old_p = multiply_sharded_pooled(&a, &b, &cfg, 2, &mut pools).unwrap();
+        let mut pools2 = vec![DevicePool::new(), DevicePool::new()];
+        let new_p = SpgemmRequest::new(&a, &b)
+            .config(&cfg)
+            .shards(2)
+            .pools(&mut pools2)
+            .run_sharded()
+            .unwrap();
+        assert_eq!(old_p.c, new_p.c);
+        // sharded collapsed through run()
+        let collapsed = SpgemmRequest::new(&a, &b).config(&cfg).shards(3).run().unwrap();
+        assert_eq!(collapsed.c, old_s.c);
+        // every spelling agrees with the unsharded result
+        assert_eq!(old_s.c, old.c);
+    }
+
+    #[test]
+    fn explicit_plan_and_reuse_flow_through() {
+        let (a, b) = (mat(3), mat(4));
+        let cfg = OpSparseConfig::default();
+        let plan = ShardPlan::balanced(&nprod_per_row(&a, &b), 4);
+        let via_plan =
+            SpgemmRequest::new(&a, &b).config(&cfg).plan(&plan).run_sharded().unwrap();
+        assert_eq!(via_plan.plan.bounds(), plan.bounds());
+        // .plan() wins over .shards()
+        let both = SpgemmRequest::new(&a, &b)
+            .config(&cfg)
+            .shards(2)
+            .plan(&plan)
+            .run_sharded()
+            .unwrap();
+        assert_eq!(both.plan.bounds(), plan.bounds());
+        // unsharded reuse replays the symbolic phase
+        let cold = SpgemmRequest::new(&a, &b).config(&cfg).run().unwrap();
+        let sym = SymbolicReuse::from_output(&cold);
+        let warm = SpgemmRequest::new(&a, &b).config(&cfg).reuse(&sym).run().unwrap();
+        assert!(warm.symbolic_skipped);
+        assert_eq!(warm.c, cold.c);
+        // warm pool run stays bit-identical
+        let mut pool = DevicePool::new();
+        let pooled = SpgemmRequest::new(&a, &b).config(&cfg).pool(&mut pool).run().unwrap();
+        assert_eq!(pooled.c, cold.c);
+    }
+
+    #[test]
+    fn dimension_mismatch_is_an_error_on_both_paths() {
+        let a = mat(5);
+        let b = Uniform { n: 64, per_row: 4, jitter: 1 }.generate(&mut Rng::new(6));
+        assert!(SpgemmRequest::new(&a, &b).run().is_err());
+        assert!(SpgemmRequest::new(&a, &b).shards(2).run_sharded().is_err());
+    }
+}

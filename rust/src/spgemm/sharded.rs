@@ -11,7 +11,8 @@
 //! different device.
 //!
 //! Shards are balanced by per-row *intermediate products*
-//! ([`nprod_per_row`]), not raw row count: on power-law matrices a few
+//! ([`crate::sparse::stats::nprod_per_row`]), not raw row count: on
+//! power-law matrices a few
 //! hub-coupled rows carry most of the multiply, and an equal-rows split
 //! would overload one shard (see [`ShardPlan::balanced`]).
 //!
@@ -51,7 +52,6 @@ use crate::gpusim::multi::OverlapConfig;
 use crate::gpusim::pool::DevicePool;
 use crate::gpusim::trace::{Trace, TraceOp};
 use crate::sparse::ops::row_slice;
-use crate::sparse::stats::nprod_per_row;
 use crate::sparse::Csr;
 use anyhow::{anyhow, ensure, Result};
 use std::sync::Arc;
@@ -382,15 +382,29 @@ impl ShardedOutput {
 /// Row-sharded `C = A * B` over `n_shards` simulated devices, each shard
 /// balanced by intermediate products and run through the full OpSparse
 /// pipeline with per-call allocation (no cross-call pools).
+///
+/// Prefer [`crate::spgemm::request::SpgemmRequest`] in new code — this
+/// wrapper is `SpgemmRequest::new(a, b).config(cfg).shards(n)`, kept
+/// for existing callers:
+///
+/// ```
+/// use opsparse::sparse::Csr;
+/// use opsparse::spgemm::{multiply_sharded, OpSparseConfig, SpgemmRequest};
+///
+/// let a = Csr::identity(64);
+/// let cfg = OpSparseConfig::default();
+/// let old = multiply_sharded(&a, &a, &cfg, 3).unwrap();
+/// let new = SpgemmRequest::new(&a, &a).config(&cfg).shards(3).run_sharded().unwrap();
+/// assert_eq!(old.c, new.c); // bit-identical
+/// assert_eq!(old.plan.bounds(), new.plan.bounds()); // same cut
+/// ```
 pub fn multiply_sharded(
     a: &Csr,
     b: &Csr,
     cfg: &OpSparseConfig,
     n_shards: usize,
 ) -> Result<ShardedOutput> {
-    ensure!(a.cols == b.rows, "dimension mismatch: {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
-    let plan = ShardPlan::balanced(&nprod_per_row(a, b), n_shards);
-    multiply_sharded_with(a, b, cfg, &plan, None, OverlapConfig::default(), None)
+    crate::spgemm::request::SpgemmRequest::new(a, b).config(cfg).shards(n_shards).run_sharded()
 }
 
 /// [`multiply_sharded`] for a warm owner: balances a fresh plan and runs
@@ -400,6 +414,28 @@ pub fn multiply_sharded(
 /// reuse — callers that need the plan up front (shard-aware cache keys,
 /// as [`crate::apps::SpgemmContext`] does) or custom overlap/reuse call
 /// [`multiply_sharded_with`] directly.
+/// Prefer [`crate::spgemm::request::SpgemmRequest`] in new code — this
+/// wrapper only adds the pool-vector growth before delegating to
+/// `SpgemmRequest::new(a, b).config(cfg).shards(n).pools(..)`:
+///
+/// ```
+/// use opsparse::gpusim::DevicePool;
+/// use opsparse::sparse::Csr;
+/// use opsparse::spgemm::{multiply_sharded_pooled, OpSparseConfig, SpgemmRequest};
+///
+/// let a = Csr::identity(64);
+/// let cfg = OpSparseConfig::default();
+/// let mut pools = Vec::new();
+/// let old = multiply_sharded_pooled(&a, &a, &cfg, 2, &mut pools).unwrap();
+/// let mut pools2 = vec![DevicePool::new(), DevicePool::new()];
+/// let new = SpgemmRequest::new(&a, &a)
+///     .config(&cfg)
+///     .shards(2)
+///     .pools(&mut pools2)
+///     .run_sharded()
+///     .unwrap();
+/// assert_eq!(old.c, new.c); // bit-identical
+/// ```
 pub fn multiply_sharded_pooled(
     a: &Csr,
     b: &Csr,
@@ -407,13 +443,15 @@ pub fn multiply_sharded_pooled(
     n_shards: usize,
     pools: &mut Vec<DevicePool>,
 ) -> Result<ShardedOutput> {
-    ensure!(a.cols == b.rows, "dimension mismatch: {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
     let n = n_shards.max(1);
     while pools.len() < n {
         pools.push(DevicePool::new());
     }
-    let plan = ShardPlan::balanced(&nprod_per_row(a, b), n);
-    multiply_sharded_with(a, b, cfg, &plan, Some(&mut pools[..n]), OverlapConfig::default(), None)
+    crate::spgemm::request::SpgemmRequest::new(a, b)
+        .config(cfg)
+        .shards(n)
+        .pools(&mut pools[..n])
+        .run_sharded()
 }
 
 /// [`multiply_sharded`] with an explicit plan, optional per-device
@@ -589,6 +627,7 @@ pub fn stitch_row_blocks(
 mod tests {
     use super::*;
     use crate::gen::uniform::Uniform;
+    use crate::sparse::stats::nprod_per_row;
     use crate::spgemm::pipeline::multiply;
     use crate::util::rng::Rng;
 

@@ -1,0 +1,350 @@
+//! Integration tests for the serving front door: coalescing (including
+//! error fan-out when the leader dies), admission control, batching,
+//! warm-start persistence, and the all-knobs-off parity with the raw
+//! coordinator.
+//!
+//! Determinism pattern: the front door under test runs few workers with
+//! `inflight_cap = 1`, and a **plug job** (a larger, different-pattern
+//! multiply) is submitted first. The plug occupies the only inflight
+//! slot, so the next request stays an outstanding leader while the test
+//! thread submits the rest of its load — coalescing and queue-bound
+//! decisions happen against a pinned-down front state, not a race.
+
+use opsparse::coordinator::serve::{Serve, ServeConfig, ServeResult};
+use opsparse::coordinator::{
+    Coordinator, Job, NsPerProdFit, ReplanConfig, Router, RouterConfig,
+};
+use opsparse::gen::uniform::Uniform;
+use opsparse::sparse::Csr;
+use opsparse::spgemm::pipeline::{multiply, OpSparseConfig};
+use opsparse::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn mat(n: usize, per_row: usize, seed: u64) -> Csr {
+    Uniform { n, per_row, jitter: 2 }.generate(&mut Rng::new(seed))
+}
+
+/// A big different-pattern multiply that holds the single inflight slot
+/// for milliseconds while the test thread submits microsecond-cheap
+/// requests behind it.
+fn plug() -> Csr {
+    mat(1200, 10, 99)
+}
+
+fn base_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.workers = 1;
+    cfg.inflight_cap = 1;
+    // cheap deterministic seed instead of the startup suite calibration
+    cfg.ns_per_prod = Some(1.0);
+    cfg
+}
+
+#[test]
+fn coalesced_requests_share_one_execution_bit_identically() {
+    let (a, b) = (mat(250, 6, 1), mat(250, 6, 2));
+    let expected = multiply(&a, &b, &OpSparseConfig::default()).unwrap().c;
+    let n = 8;
+    let serve = Serve::start(base_cfg()).unwrap();
+    let p = plug();
+    let plug_ticket = serve.submit("t", p.clone(), p);
+    let tickets: Vec<_> = (0..n).map(|_| serve.submit("t", a.clone(), b.clone())).collect();
+    assert!(plug_ticket.wait().csr().is_some());
+    let mut shared: Option<Arc<Csr>> = None;
+    let mut coalesced_waiters = 0;
+    for t in tickets {
+        match t.wait() {
+            ServeResult::Done { c, coalesced, .. } => {
+                assert_eq!(*c, expected, "every waiter sees the reference result");
+                if coalesced {
+                    coalesced_waiters += 1;
+                }
+                match &shared {
+                    None => shared = Some(c),
+                    Some(first) => assert!(
+                        Arc::ptr_eq(first, &c),
+                        "coalesced waiters must share ONE allocation — bit-identical by construction"
+                    ),
+                }
+            }
+            other => panic!("request did not complete: {other:?}"),
+        }
+    }
+    assert_eq!(coalesced_waiters, n - 1, "everyone after the leader coalesced");
+    let snap = serve.metrics_snapshot();
+    assert_eq!(snap.coalesce_hits, (n - 1) as u64);
+    assert_eq!(snap.jobs_completed, 2, "the plug and the one leader executed");
+    assert_eq!(snap.sym_cache_misses, 2, "exactly one symbolic phase for the whole load");
+    assert_eq!(snap.rejected_jobs, 0);
+    assert!(snap.queue_depth_max >= 2, "leader + plug were outstanding together");
+    assert!(snap.serve_p50_ns.is_some() && snap.serve_p99_ns.is_some());
+    serve.shutdown();
+}
+
+/// A structurally poisoned `B` (same construction as
+/// tests/failure_injection.rs): rows `0..sound` are a clean diagonal,
+/// rows `sound..n` claim entries beyond `col`/`val` — shards touching
+/// that region panic inside the worker's guard.
+fn poisoned_b(n: usize, sound: usize) -> Csr {
+    let mut rpt: Vec<usize> = (0..=sound).collect();
+    for i in sound + 1..=n {
+        rpt.push(sound + 2 * (i - sound));
+    }
+    let col: Vec<u32> = (0..sound as u32).collect();
+    let val = vec![1.0f64; sound];
+    Csr { rows: n, cols: n, rpt, col, val }
+}
+
+#[test]
+fn leader_shard_panic_fans_out_one_error_per_waiter_and_workers_survive() {
+    let mut cfg = base_cfg();
+    cfg.workers = 2;
+    // 4 KiB budget: these operands overflow it, so the router shards
+    // them without ever slicing the poisoned rows itself
+    cfg.device_memory_bytes = 4096;
+    cfg.max_devices = 4;
+    cfg.interconnect = None;
+    let serve = Serve::start(cfg).unwrap();
+    let p = plug();
+    let plug_ticket = serve.submit("t", p.clone(), p);
+    let a = Csr::identity(300); // row i of A references exactly row i of B
+    let b = poisoned_b(300, 150);
+    let n = 5;
+    let tickets: Vec<_> = (0..n).map(|_| serve.submit("t", a.clone(), b.clone())).collect();
+    assert!(plug_ticket.wait().csr().is_some());
+    let mut shared: Option<Arc<String>> = None;
+    for t in tickets {
+        match t.wait() {
+            ServeResult::Failed { error, .. } => match &shared {
+                None => shared = Some(error),
+                Some(first) => assert!(
+                    Arc::ptr_eq(first, &error),
+                    "the ONE error fans out to every waiter"
+                ),
+            },
+            other => panic!("poisoned request must fail, got {other:?}"),
+        }
+    }
+    let snap = serve.metrics_snapshot();
+    assert_eq!(snap.jobs_failed, 1, "only the leader executed (and failed)");
+    assert_eq!(snap.coalesce_hits, (n - 1) as u64);
+    // the workers survive the poisoned shards: a healthy job completes
+    let healthy = mat(260, 6, 3);
+    let expected = multiply(&healthy, &healthy, &OpSparseConfig::default()).unwrap().c;
+    match serve.submit("t", healthy.clone(), healthy).wait() {
+        ServeResult::Done { c, .. } => assert_eq!(*c, expected),
+        other => panic!("healthy follow-up failed: {other:?}"),
+    }
+    serve.shutdown();
+}
+
+#[test]
+fn queue_full_rejects_immediately_under_a_one_slot_bound() {
+    let mut cfg = base_cfg();
+    cfg.coalesce = false; // the second request must be its own leader
+    cfg.queue_cap = 1;
+    let serve = Serve::start(cfg).unwrap();
+    let p = plug();
+    let plug_ticket = serve.submit("t", p.clone(), p.clone());
+    let (a, b) = (mat(200, 5, 4), mat(200, 5, 5));
+    // the plug holds the one queue slot: this must bounce synchronously
+    let bounced = serve.submit("t", a.clone(), b.clone());
+    match bounced.wait() {
+        ServeResult::Rejected { queue_full } => assert!(queue_full),
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+    assert_eq!(serve.metrics_snapshot().rejected_jobs, 1);
+    assert!(plug_ticket.wait().csr().is_some(), "the occupant is unaffected");
+    // capacity freed: the same request is now admitted and served
+    let expected = multiply(&a, &b, &OpSparseConfig::default()).unwrap().c;
+    match serve.submit("t", a, b).wait() {
+        ServeResult::Done { c, .. } => assert_eq!(*c, expected),
+        other => panic!("post-drain request failed: {other:?}"),
+    }
+    let snap = serve.metrics_snapshot();
+    assert_eq!(snap.rejected_jobs, 1, "no further rejections");
+    assert_eq!(snap.jobs_failed, 0, "a rejection is not a failure");
+    serve.shutdown();
+}
+
+#[test]
+fn persistence_round_trip_restores_fit_and_routes_warm_patterns_identically() {
+    let path = std::env::temp_dir()
+        .join(format!("opsparse-serve-test-{}.state", std::process::id()));
+    let path_s = path.to_string_lossy().into_owned();
+    let _ = std::fs::remove_file(&path);
+    let mk_cfg = || {
+        let mut c = ServeConfig::default();
+        c.workers = 2;
+        c.ns_per_prod = Some(1.0);
+        c.persist = Some(path_s.clone());
+        c.device_memory_bytes = 4096; // warm pattern lives on the sharded route
+        c.max_devices = 4;
+        c.interconnect = None;
+        c
+    };
+    let a = mat(300, 6, 21);
+    let serve = Serve::start(mk_cfg()).unwrap();
+    let mut route_before = None;
+    let mut result_before: Option<Arc<Csr>> = None;
+    for _ in 0..3 {
+        match serve.submit("t", a.clone(), a.clone()).wait() {
+            ServeResult::Done { c, route, .. } => {
+                route_before = Some(route);
+                result_before = Some(c);
+            }
+            other => panic!("warm-up job failed: {other:?}"),
+        }
+    }
+    let warm = serve.metrics_snapshot();
+    assert!(warm.replans >= 1, "repeat submissions re-planned from history");
+    let fit_before = serve.fit().current().to_bits();
+    serve.shutdown();
+    assert!(path.exists(), "shutdown persisted the warm state");
+
+    let serve2 = Serve::start(mk_cfg()).unwrap();
+    assert_eq!(
+        serve2.fit().current().to_bits(),
+        fit_before,
+        "the restored fit is bit-equal, not merely close"
+    );
+    match serve2.submit("t", a.clone(), a.clone()).wait() {
+        ServeResult::Done { c, route, .. } => {
+            assert_eq!(Some(route), route_before, "the warm pattern routes identically");
+            assert_eq!(*c, **result_before.as_ref().unwrap(), "and computes identically");
+        }
+        other => panic!("post-restart job failed: {other:?}"),
+    }
+    let snap2 = serve2.metrics_snapshot();
+    assert_eq!(
+        snap2.replan_cold_misses, 0,
+        "the first post-restart submit found warm history, not a cold miss"
+    );
+    assert_eq!(snap2.replans, 1, "…and was re-planned from it");
+    serve2.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn all_knobs_off_reproduces_the_raw_coordinator_exactly() {
+    let mut cfg = base_cfg();
+    cfg.coalesce = false;
+    cfg.inflight_cap = usize::MAX;
+    let serve = Serve::start(cfg).unwrap();
+    let fit = Arc::new(NsPerProdFit::new(1.0));
+    let raw_rc =
+        RouterConfig { ns_per_prod: fit.current(), fit: Some(fit), ..RouterConfig::default() };
+    let coord = Coordinator::start_with(1, Router::new(raw_rc), None, ReplanConfig::default());
+    let m1 = mat(220, 6, 31);
+    let m2 = mat(180, 9, 32);
+    // two patterns, twice each (serially): the repeats exercise the
+    // symbolic cache identically on both sides
+    for (i, m) in [&m1, &m2, &m1, &m2].into_iter().enumerate() {
+        let sres = serve.submit("t", m.clone(), m.clone()).wait();
+        coord.submit(Job { id: i as u64, a: m.clone(), b: m.clone(), force_route: None });
+        let cres = coord.recv().expect("raw coordinator result");
+        match (sres, cres.c) {
+            (ServeResult::Done { c, route, .. }, Ok(raw_c)) => {
+                assert_eq!(*c, raw_c, "job {i}: bit-identical result");
+                assert_eq!(route, cres.route, "job {i}: identical route");
+            }
+            (s, r) => panic!("job {i} diverged: serve={s:?} raw_ok={}", r.is_ok()),
+        }
+    }
+    let s = serve.metrics_snapshot();
+    let r = coord.metrics.snapshot();
+    assert_eq!(
+        (s.jobs_submitted, s.jobs_completed, s.jobs_failed),
+        (r.jobs_submitted, r.jobs_completed, r.jobs_failed)
+    );
+    assert_eq!(
+        (s.hash_routed, s.block_routed, s.sharded_routed),
+        (r.hash_routed, r.block_routed, r.sharded_routed)
+    );
+    assert_eq!(
+        (s.sym_cache_hits, s.sym_cache_misses, s.nprod_total),
+        (r.sym_cache_hits, r.sym_cache_misses, r.nprod_total)
+    );
+    // the new machinery must stay silent with the knobs off
+    assert_eq!(s.coalesce_hits, 0);
+    assert_eq!(s.rejected_jobs, 0);
+    assert_eq!(s.batches, 0);
+    assert_eq!(s.batched_jobs, 0);
+    serve.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn batched_execution_is_bit_identical_and_flushes_on_both_watermarks() {
+    // size watermark: exactly 3 distinct jobs, max_age far away
+    let mut cfg = base_cfg();
+    cfg.coalesce = false;
+    cfg.inflight_cap = usize::MAX;
+    cfg.batch.enabled = true;
+    cfg.batch.max_jobs = 3;
+    cfg.batch.max_age = Duration::from_secs(3600);
+    let serve = Serve::start(cfg).unwrap();
+    let mats: Vec<Csr> = (0..3).map(|i| mat(200 + 10 * i, 5, 40 + i as u64)).collect();
+    let expected: Vec<Csr> =
+        mats.iter().map(|m| multiply(m, m, &OpSparseConfig::default()).unwrap().c).collect();
+    let tickets: Vec<_> =
+        mats.iter().map(|m| serve.submit("t", m.clone(), m.clone())).collect();
+    for (t, want) in tickets.into_iter().zip(&expected) {
+        match t.wait() {
+            ServeResult::Done { c, .. } => assert_eq!(*c, *want, "batched == singleton"),
+            other => panic!("batched request failed: {other:?}"),
+        }
+    }
+    let snap = serve.metrics_snapshot();
+    assert_eq!(snap.batches, 1, "three members, one worker visit");
+    assert_eq!(snap.batched_jobs, 3);
+    serve.shutdown();
+
+    // age watermark: a partial batch flushes on the dispatcher tick
+    let mut cfg = base_cfg();
+    cfg.coalesce = false;
+    cfg.inflight_cap = usize::MAX;
+    cfg.batch.enabled = true;
+    cfg.batch.max_jobs = 100;
+    cfg.batch.max_age = Duration::from_millis(0);
+    let serve = Serve::start(cfg).unwrap();
+    let m = mat(210, 5, 50);
+    let want = multiply(&m, &m, &OpSparseConfig::default()).unwrap().c;
+    for _ in 0..2 {
+        match serve.submit("t", m.clone(), m.clone()).wait() {
+            ServeResult::Done { c, .. } => assert_eq!(*c, want),
+            other => panic!("aged-batch request failed: {other:?}"),
+        }
+    }
+    let snap = serve.metrics_snapshot();
+    assert!(snap.batches >= 1, "the age watermark flushed a partial batch");
+    assert_eq!(snap.batched_jobs, 2);
+    serve.shutdown();
+}
+
+#[test]
+fn tenants_dequeue_round_robin_not_in_arrival_order() {
+    let serve = Serve::start(base_cfg()).unwrap();
+    let p = plug();
+    let plug_ticket = serve.submit("a", p.clone(), p);
+    // tenant a backlogs three more jobs while the plug holds the slot...
+    let a_jobs: Vec<Csr> = (0..3).map(|i| mat(500, 8, 60 + i)).collect();
+    let a_tickets: Vec<_> =
+        a_jobs.iter().map(|m| serve.submit("a", m.clone(), m.clone())).collect();
+    // ...then tenant b arrives with one job, behind four of tenant a's
+    let b_mat = mat(240, 6, 70);
+    let b_ticket = serve.submit("b", b_mat.clone(), b_mat);
+    assert!(plug_ticket.wait().csr().is_some());
+    // round-robin: a1 runs (a was next), then b's job — NOT a's backlog
+    assert!(b_ticket.wait().csr().is_some());
+    let [a1, a2, a3] = <[_; 3]>::try_from(a_tickets).ok().unwrap();
+    assert!(
+        a3.try_wait().is_none(),
+        "tenant a's backlog must still be pending when tenant b is served"
+    );
+    for t in [a1, a2, a3] {
+        assert!(t.wait().csr().is_some(), "the backlog still completes");
+    }
+    serve.shutdown();
+}
