@@ -1,0 +1,62 @@
+//! `cargo bench --bench chaos_fleet` — the shard fleet under
+//! deterministic fault injection: {gentle, aggressive} × {speculate off,
+//! on} rows (completion rate, bit-identity, p50/p99 makespan, deaths,
+//! requeues, speculative launches/wins).
+//!
+//! Env:
+//! * `OPSPARSE_BENCH_CHAOS_JOBS=<n>` — force-sharded jobs per row
+//!   (default 24)
+//! * `OPSPARSE_CHAOS_SEED=<n>` — root seed of the kill/delay schedule
+//!   (default `chaos_bench::DEFAULT_CHAOS_SEED`)
+//! * `OPSPARSE_BENCH_JSON_CHAOS=<path>` — record the report as JSON; CI
+//!   writes `BENCH_chaos.json` this way and blocks on: gentle rows
+//!   complete 100%, every row bit-identical, no hangs.
+//!
+//! The bench itself enforces the hard contracts too, so a plain
+//! `cargo bench --bench chaos_fleet` fails loudly without CI.
+
+use opsparse::bench::{chaos_bench, write_chaos_json};
+
+fn main() {
+    let jobs = std::env::var("OPSPARSE_BENCH_CHAOS_JOBS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(24);
+    let seed = std::env::var("OPSPARSE_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(chaos_bench::DEFAULT_CHAOS_SEED);
+    let report = chaos_bench::chaos_fleet(jobs, seed).expect("chaos_fleet bench");
+    for row in &report.rows {
+        assert!(
+            !row.hung,
+            "{} (speculate {}): a parent job neither completed nor failed — barrier hang",
+            row.preset, row.speculate
+        );
+        assert!(
+            row.bit_identical,
+            "{} (speculate {}): a completed job diverged from the undisturbed reference",
+            row.preset, row.speculate
+        );
+        assert_eq!(
+            row.completed + row.failed,
+            row.jobs as u64,
+            "{} (speculate {}): every parent must resolve exactly once",
+            row.preset, row.speculate
+        );
+        if row.preset == "gentle" {
+            // rare kills must always be absorbed by requeue (budget
+            // exhaustion needs MAX_REQUEUES consecutive deaths on one
+            // chain, p ≈ 0.02⁶) — anything less is a recoverable death
+            // taking down a parent
+            assert_eq!(
+                row.completed, row.jobs as u64,
+                "gentle chaos (speculate {}) must complete 100%, got {}/{}",
+                row.speculate, row.completed, row.jobs
+            );
+        }
+    }
+    if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON_CHAOS") {
+        write_chaos_json(&path, &report).expect("write chaos json");
+    }
+}

@@ -1,0 +1,207 @@
+//! `bench chaos` — the shard fleet under deterministic fault injection,
+//! with and without straggler speculation.
+//!
+//! Four rows: {gentle, aggressive} × {speculate off, speculate on}.
+//! Every row drives the same force-sharded job stream through a
+//! 4-worker coordinator with the chaos preset active, then reports the
+//! failure-domain contract figures CI blocks on:
+//!
+//! * **completion rate** — parents that produced an `Ok` result. Under
+//!   `gentle` this must be 100%: rare kills are always absorbed by the
+//!   requeue path (a chain fails only after `MAX_REQUEUES` consecutive
+//!   deaths, p ≈ 0.02⁶ per chain). Under `aggressive` the budget can
+//!   genuinely exhaust — the contract there is the next bullet.
+//! * **bit-identity** — every `Ok` result equals the undisturbed
+//!   reference bitwise, whatever the kill/delay/requeue interleaving
+//!   did. A failed parent must carry a typed error; a hang (any parent
+//!   that never reported) fails the bench.
+//! * **p50/p99 makespan** — end-to-end parent wall time, with and
+//!   without speculation, so `BENCH_chaos.json` records what backup
+//!   sub-jobs buy under injected stragglers.
+//!
+//! The chaos schedule is seeded (`--chaos-seed`, default below), so a
+//! CI failure replays locally with the same kill/delay stream per
+//! worker generation. (Which *worker* dequeues which sub-job still
+//! depends on thread scheduling; determinism of the full metrics
+//! snapshot needs one worker — `tests/chaos.rs` pins that separately.)
+
+use crate::coordinator::barrier::SpeculateConfig;
+use crate::coordinator::chaos::ChaosConfig;
+use crate::coordinator::feedback::ReplanConfig;
+use crate::coordinator::router::Route;
+use crate::coordinator::{Coordinator, Job, Router};
+use crate::gen::uniform::Uniform;
+use crate::sparse::Csr;
+use crate::spgemm::reference::spgemm_reference;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Default root seed for the deterministic chaos schedule.
+pub const DEFAULT_CHAOS_SEED: u64 = 0xC0FFEE;
+
+/// Workers in the fleet under test (shards fan out over all of them).
+const WORKERS: usize = 4;
+
+/// Shards per parent job (forced, so routing noise never changes the
+/// sub-job count).
+const SHARDS: usize = 4;
+
+/// Longest we wait for any single parent before declaring a hang — the
+/// one outcome the failure-domain contract forbids outright.
+const HANG_GUARD: Duration = Duration::from_secs(60);
+
+/// One (preset × speculation) row of the chaos bench.
+#[derive(Clone, Debug)]
+pub struct ChaosRow {
+    pub preset: &'static str,
+    pub speculate: bool,
+    pub jobs: usize,
+    /// Parents that produced an `Ok` result.
+    pub completed: u64,
+    /// Parents that produced a typed error (retry budget exhausted).
+    pub failed: u64,
+    pub completion_rate: f64,
+    /// Every `Ok` result matched the undisturbed reference bitwise.
+    pub bit_identical: bool,
+    /// A parent never reported within the hang guard (contract breach).
+    pub hung: bool,
+    /// End-to-end parent makespan percentiles over completed parents.
+    pub p50_makespan_ns: Option<u64>,
+    pub p99_makespan_ns: Option<u64>,
+    pub worker_deaths: u64,
+    pub requeued_shards: u64,
+    pub speculative_launches: u64,
+    pub speculative_wins: u64,
+}
+
+/// The full `bench chaos` report (`BENCH_chaos.json`).
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    pub jobs: usize,
+    pub seed: u64,
+    pub rows: Vec<ChaosRow>,
+}
+
+fn percentile(sorted: &[u64], q: f64) -> Option<u64> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    Some(sorted[idx.min(sorted.len() - 1)])
+}
+
+fn run_row(
+    preset: &'static str,
+    chaos: ChaosConfig,
+    speculate: bool,
+    mats: &[Csr],
+    golds: &[Csr],
+    jobs: usize,
+) -> ChaosRow {
+    let spec = if speculate { SpeculateConfig::on() } else { SpeculateConfig::default() };
+    let coord = Coordinator::start_full(
+        WORKERS,
+        Router::default(),
+        None,
+        ReplanConfig::default(),
+        spec,
+        chaos,
+    );
+    for id in 0..jobs as u64 {
+        let m = &mats[id as usize % mats.len()];
+        coord.submit(Job {
+            id,
+            a: m.clone(),
+            b: m.clone(),
+            force_route: Some(Route::Sharded { n_devices: SHARDS }),
+        });
+    }
+    let mut completed = 0u64;
+    let mut failed = 0u64;
+    let mut bit_identical = true;
+    let mut hung = false;
+    let mut makespans: Vec<u64> = Vec::new();
+    for _ in 0..jobs {
+        match coord.recv_timeout(HANG_GUARD) {
+            Some(r) => match r.c {
+                Ok(c) => {
+                    completed += 1;
+                    makespans.push(r.wall_ns);
+                    bit_identical &= c == golds[r.id as usize % golds.len()];
+                }
+                Err(_) => failed += 1,
+            },
+            None => {
+                // the contract forbids exactly this: a parent that
+                // neither completed nor failed
+                hung = true;
+                break;
+            }
+        }
+    }
+    let snap = coord.metrics.snapshot();
+    coord.shutdown();
+    makespans.sort_unstable();
+    ChaosRow {
+        preset,
+        speculate,
+        jobs,
+        completed,
+        failed,
+        completion_rate: completed as f64 / jobs.max(1) as f64,
+        bit_identical,
+        hung,
+        p50_makespan_ns: percentile(&makespans, 0.50),
+        p99_makespan_ns: percentile(&makespans, 0.99),
+        worker_deaths: snap.worker_deaths,
+        requeued_shards: snap.requeued_shards,
+        speculative_launches: snap.speculative_launches,
+        speculative_wins: snap.speculative_wins,
+    }
+}
+
+/// The `bench chaos` entry: four rows, printed as a table and returned
+/// for JSON recording. The hard contracts (no hang, bit-identity, 100%
+/// completion under `gentle`) are asserted by the bench binary and the
+/// CI check on `BENCH_chaos.json`, not here — this function only
+/// measures.
+pub fn chaos_fleet(jobs: usize, seed: u64) -> Result<ChaosReport> {
+    let jobs = jobs.max(4);
+    let mut rng = Rng::new(2027);
+    let mats: Vec<Csr> = (0..3)
+        .map(|_| Uniform { n: 400, per_row: 8, jitter: 4 }.generate(&mut rng))
+        .collect();
+    let golds: Vec<Csr> = mats.iter().map(|m| spgemm_reference(m, m)).collect();
+    println!(
+        "chaos bench: {jobs} force-sharded jobs ({SHARDS} shards each) over {WORKERS} workers, \
+         seed {seed:#x}"
+    );
+    let mut rows = Vec::new();
+    for (preset, cfg) in [
+        ("gentle", ChaosConfig::gentle().with_seed(seed)),
+        ("aggressive", ChaosConfig::aggressive().with_seed(seed)),
+    ] {
+        for speculate in [false, true] {
+            let row = run_row(preset, cfg, speculate, &mats, &golds, jobs);
+            println!(
+                "  {:<10} speculate {:<5} completed {:>3}/{:<3} bit_identical {:<5} hung {:<5} \
+                 p50 {:?} p99 {:?} deaths {} requeued {} spec {}/{}",
+                row.preset,
+                row.speculate,
+                row.completed,
+                row.jobs,
+                row.bit_identical,
+                row.hung,
+                row.p50_makespan_ns,
+                row.p99_makespan_ns,
+                row.worker_deaths,
+                row.requeued_shards,
+                row.speculative_wins,
+                row.speculative_launches,
+            );
+            rows.push(row);
+        }
+    }
+    Ok(ChaosReport { jobs, seed, rows })
+}

@@ -2,6 +2,7 @@
 //! evaluation (§6) on the synthetic suite. Shared by the CLI
 //! (`opsparse bench <target>`) and the `cargo bench` targets.
 
+pub mod chaos_bench;
 pub mod figures;
 pub mod serve_bench;
 pub mod tables;
@@ -219,6 +220,48 @@ pub fn write_serve_json(path: &str, report: &serve_bench::ServeBenchReport) -> R
         "  ],\n  \"persist_route_stable\": {},\n  \"baseline_match\": {}\n}}\n",
         report.persist_route_stable, report.baseline_match
     ));
+    std::fs::write(path, out)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Serialize the chaos bench as JSON: `BENCH_chaos.json`, uploaded by
+/// the CI chaos job and consumed by the blocking checks there (gentle
+/// rows complete 100%, every row bit-identical, no hangs). One row per
+/// (preset × speculation) — the file is a contract, keep it small.
+pub fn write_chaos_json(path: &str, report: &chaos_bench::ChaosReport) -> Result<()> {
+    fn opt(v: Option<u64>) -> String {
+        v.map(|x| x.to_string()).unwrap_or_else(|| "null".to_string())
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\n  \"bench\": \"chaos\",\n  \"jobs\": {},\n  \"seed\": {},\n  \"rows\": [\n",
+        report.jobs, report.seed
+    ));
+    for (i, r) in report.rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"preset\": \"{}\", \"speculate\": {}, \"jobs\": {}, \"completed\": {}, \
+             \"failed\": {}, \"completion_rate\": {:.4}, \"bit_identical\": {}, \"hung\": {}, \
+             \"p50_makespan_ns\": {}, \"p99_makespan_ns\": {}, \"worker_deaths\": {}, \
+             \"requeued_shards\": {}, \"speculative_launches\": {}, \"speculative_wins\": {}}}{}\n",
+            r.preset,
+            r.speculate,
+            r.jobs,
+            r.completed,
+            r.failed,
+            r.completion_rate,
+            r.bit_identical,
+            r.hung,
+            opt(r.p50_makespan_ns),
+            opt(r.p99_makespan_ns),
+            r.worker_deaths,
+            r.requeued_shards,
+            r.speculative_launches,
+            r.speculative_wins,
+            if i + 1 < report.rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
     std::fs::write(path, out)?;
     println!("wrote {path}");
     Ok(())

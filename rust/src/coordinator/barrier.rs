@@ -47,6 +47,58 @@ pub struct ShardFeedback {
     pub ranges: Vec<(usize, usize)>,
 }
 
+/// Straggler-speculation knobs. Off by default: with speculation off the
+/// barrier (and the whole coordinator) reproduces the pre-speculation
+/// baseline exactly — no monitor thread, no extra sub-jobs, identical
+/// metrics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpeculateConfig {
+    pub enabled: bool,
+    /// Launch a backup for a shard once the parent has been running
+    /// `lag_factor ×` the median wall time of its completed shards.
+    pub lag_factor: f64,
+    /// Never speculate before this much wall time has passed — keeps
+    /// microsecond-scale jobs from paying backup overhead.
+    pub min_lag_ns: u64,
+}
+
+impl Default for SpeculateConfig {
+    fn default() -> Self {
+        SpeculateConfig { enabled: false, lag_factor: 3.0, min_lag_ns: 200_000 }
+    }
+}
+
+impl SpeculateConfig {
+    pub fn on() -> Self {
+        SpeculateConfig { enabled: true, ..Default::default() }
+    }
+}
+
+/// Everything needed to relaunch one shard speculatively: the shared
+/// operands plus the shard-task ingredients the original submit used.
+/// Stored on the barrier (not the `ShardTask`s themselves — those hold
+/// an `Arc<ShardBarrier>` and storing them here would leak the barrier
+/// through an `Arc` cycle).
+pub struct SpeculationState {
+    pub cfg: SpeculateConfig,
+    pub a: Arc<Csr>,
+    pub b: Arc<Csr>,
+    pub b_fp: u64,
+    pub measure: bool,
+    pub ranges: Vec<(usize, usize)>,
+}
+
+/// One backup sub-job the speculation monitor should launch.
+pub struct SpeculationPlan {
+    pub shard: usize,
+    pub lo: usize,
+    pub hi: usize,
+    pub a: Arc<Csr>,
+    pub b: Arc<Csr>,
+    pub b_fp: u64,
+    pub measure: bool,
+}
+
 struct State {
     /// One slot per shard, filled by [`ShardBarrier::complete`].
     slots: Vec<Option<Result<SpgemmOutput>>>,
@@ -54,6 +106,19 @@ struct State {
     /// when the worker reported no measurement (e.g. a symbolic-cache
     /// replay, whose trace time is not comparable to a cold shard's).
     ns: Vec<Option<f64>>,
+    /// Wall ns (from the parent's `t0`) at which each shard's slot was
+    /// filled — the timing view straggler detection runs on.
+    done_wall_ns: Vec<Option<u64>>,
+    /// Outstanding attempt chains per shard: 1 for the primary, +1 when
+    /// a speculative backup launches, −1 when a chain is abandoned
+    /// (retry budget exhausted). A shard only resolves to an error when
+    /// its last chain dies.
+    inflight: Vec<usize>,
+    /// Whether a backup has already been launched (at most one).
+    speculated: Vec<bool>,
+    /// First abandonment error per shard, held back while another chain
+    /// is still running (that chain may yet deliver the result).
+    deferred: Vec<Option<anyhow::Error>>,
     /// Shards still outstanding.
     remaining: usize,
     /// Set once the parent `JobResult` has been emitted.
@@ -74,6 +139,10 @@ pub struct ShardBarrier {
     metrics: Arc<Metrics>,
     /// Execution-history hook, when adaptive re-planning is on.
     feedback: Option<ShardFeedback>,
+    /// Straggler-speculation hook ([`ShardBarrier::set_speculation`]):
+    /// operand handles + ranges so the monitor can relaunch a lagging
+    /// shard. `None` with speculation off.
+    spec: Option<SpeculationState>,
     state: Mutex<State>,
 }
 
@@ -100,13 +169,25 @@ impl ShardBarrier {
             tx,
             metrics,
             feedback,
+            spec: None,
             state: Mutex::new(State {
                 slots: (0..n).map(|_| None).collect(),
                 ns: vec![None; n],
+                done_wall_ns: vec![None; n],
+                inflight: vec![1; n],
+                speculated: vec![false; n],
+                deferred: (0..n).map(|_| None).collect(),
                 remaining: n,
                 finished: false,
             }),
         }
+    }
+
+    /// Attach the speculation hook (called by `submit` before the
+    /// barrier is shared, when `--speculate on`). Without it the barrier
+    /// never reports stragglers and behaves exactly as before.
+    pub fn set_speculation(&mut self, spec: SpeculationState) {
+        self.spec = Some(spec);
     }
 
     /// Record shard `shard`'s result (plus its measured execution ns,
@@ -116,6 +197,22 @@ impl ShardBarrier {
     /// execution history so the *next* submit of this pattern re-cuts
     /// from them. Duplicate or late reports are ignored.
     pub fn complete(&self, shard: usize, result: Result<SpgemmOutput>, measured_ns: Option<f64>) {
+        self.complete_from(shard, result, measured_ns, false);
+    }
+
+    /// [`ShardBarrier::complete`], tagged with whether the report came
+    /// from a speculative backup. **First result wins**: whichever
+    /// attempt fills the slot decides the shard (primary and backup
+    /// compute the identical deterministic row slice, so the stitched
+    /// output is bit-identical either way); the loser's later report
+    /// hits the duplicate guard and is discarded.
+    pub fn complete_from(
+        &self,
+        shard: usize,
+        result: Result<SpgemmOutput>,
+        measured_ns: Option<f64>,
+        speculative: bool,
+    ) {
         let ready = {
             let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
             // defensive: a duplicate, out-of-range, or post-completion
@@ -123,8 +220,12 @@ impl ShardBarrier {
             if st.finished || shard >= st.slots.len() || st.slots[shard].is_some() {
                 return;
             }
+            if speculative {
+                self.metrics.speculative_wins.fetch_add(1, Ordering::Relaxed);
+            }
             st.slots[shard] = Some(result);
             st.ns[shard] = measured_ns;
+            st.done_wall_ns[shard] = Some(self.t0.elapsed().as_nanos() as u64);
             st.remaining -= 1;
             if st.remaining == 0 {
                 st.finished = true;
@@ -141,6 +242,83 @@ impl ShardBarrier {
             }
             finish(&self.metrics, &self.tx, self.job_id, self.route, c, nprod, self.t0);
         }
+    }
+
+    /// One attempt chain for `shard` died permanently (its retry budget
+    /// is exhausted). If another chain is still in flight (a speculative
+    /// backup, or the primary when the backup died), the error is held
+    /// back — that chain may yet deliver. Only when the *last* chain
+    /// dies does the shard resolve to a clean error, failing the parent
+    /// through the normal all-shards-reported path.
+    pub fn abandon(&self, shard: usize, err: anyhow::Error) {
+        {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            if st.finished || shard >= st.slots.len() || st.slots[shard].is_some() {
+                return;
+            }
+            st.inflight[shard] = st.inflight[shard].saturating_sub(1);
+            if st.inflight[shard] > 0 {
+                if st.deferred[shard].is_none() {
+                    st.deferred[shard] = Some(err);
+                }
+                return;
+            }
+            // fall through to complete() with the first chain's error
+        }
+        let first = {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.deferred.get_mut(shard).and_then(|d| d.take())
+        };
+        self.complete(shard, Err(first.unwrap_or(err)), None);
+    }
+
+    /// Speculation monitor entry point: under the barrier's timing view,
+    /// return the backup sub-jobs to launch *now*. Requires speculation
+    /// attached, a completed-shard quorum (≥ half), and the parent's
+    /// wall time exceeding `max(lag_factor × median completed wall,
+    /// min_lag_ns)`. Each shard speculates at most once; the returned
+    /// plans are already marked in flight, so the caller just launches
+    /// them.
+    pub fn stragglers(&self) -> Vec<SpeculationPlan> {
+        let Some(spec) = &self.spec else { return Vec::new() };
+        if !spec.cfg.enabled {
+            return Vec::new();
+        }
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let n = st.slots.len();
+        if st.finished || st.remaining == 0 {
+            return Vec::new();
+        }
+        let mut done: Vec<u64> = st.done_wall_ns.iter().flatten().copied().collect();
+        // quorum: without a majority of shards done, "the median of
+        // completed shards" says nothing about who is lagging
+        if done.len() * 2 < n {
+            return Vec::new();
+        }
+        done.sort_unstable();
+        let median = done[done.len() / 2] as f64;
+        let threshold = (median * spec.cfg.lag_factor).max(spec.cfg.min_lag_ns as f64);
+        if (self.t0.elapsed().as_nanos() as f64) < threshold {
+            return Vec::new();
+        }
+        let mut plans = Vec::new();
+        for s in 0..n {
+            if st.slots[s].is_none() && !st.speculated[s] && st.inflight[s] > 0 {
+                st.speculated[s] = true;
+                st.inflight[s] += 1;
+                let (lo, hi) = spec.ranges[s];
+                plans.push(SpeculationPlan {
+                    shard: s,
+                    lo,
+                    hi,
+                    a: Arc::clone(&spec.a),
+                    b: Arc::clone(&spec.b),
+                    b_fp: spec.b_fp,
+                    measure: spec.measure,
+                });
+            }
+        }
+        plans
     }
 
     /// Fold this run into the execution history (successful parents
@@ -378,6 +556,131 @@ mod tests {
         b.complete(1, Ok(shard_output(&m)), None);
         assert!(rx.recv().unwrap().c.is_ok(), "the job itself still succeeds");
         assert!(history.lock().unwrap().is_empty(), "mixed measurements must be dropped");
+    }
+
+    #[test]
+    fn speculative_first_result_wins_and_late_loser_is_discarded() {
+        let m = Csr::identity(4);
+        let (b, rx, metrics) = barrier_for(2, 8, 4);
+        b.complete(0, Ok(shard_output(&m)), None);
+        // the backup reports shard 1 first...
+        b.complete_from(1, Ok(shard_output(&m)), None, true);
+        let r = rx.recv().unwrap();
+        assert!(r.c.is_ok());
+        // ...and the straggling primary's late report is discarded
+        b.complete(1, Ok(shard_output(&m)), None);
+        assert!(rx.try_recv().is_err(), "exactly one JobResult");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.speculative_wins, 1);
+        assert_eq!(snap.jobs_completed, 1);
+    }
+
+    #[test]
+    fn primary_win_does_not_count_as_speculative() {
+        let m = Csr::identity(4);
+        let (b, rx, metrics) = barrier_for(1, 4, 4);
+        b.complete(0, Ok(shard_output(&m)), None);
+        assert!(rx.recv().unwrap().c.is_ok());
+        assert_eq!(metrics.snapshot().speculative_wins, 0);
+    }
+
+    #[test]
+    fn abandoning_the_last_chain_fails_the_shard_cleanly() {
+        let m = Csr::identity(4);
+        let (b, rx, metrics) = barrier_for(2, 8, 4);
+        b.complete(0, Ok(shard_output(&m)), None);
+        b.abandon(1, anyhow!("retry budget exhausted"));
+        let r = rx.recv().unwrap();
+        let err = format!("{:#}", r.c.unwrap_err());
+        assert!(err.contains("retry budget exhausted"), "typed error surfaces: {err}");
+        assert_eq!(metrics.snapshot().jobs_failed, 1);
+    }
+
+    fn speculating_barrier(
+        lag_factor: f64,
+        age_ms: u64,
+    ) -> (Arc<ShardBarrier>, mpsc::Receiver<JobResult>, Arc<Metrics>) {
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let t0 = Instant::now()
+            .checked_sub(std::time::Duration::from_millis(age_ms))
+            .expect("backdated t0");
+        let mut b = ShardBarrier::new(
+            7,
+            Route::Sharded { n_devices: 2 },
+            2,
+            8,
+            4,
+            tx,
+            Arc::clone(&metrics),
+            t0,
+            None,
+        );
+        let a = Arc::new(Csr::identity(8));
+        let bb = Arc::new(Csr::identity(4));
+        b.set_speculation(SpeculationState {
+            cfg: SpeculateConfig { enabled: true, lag_factor, min_lag_ns: 0 },
+            a,
+            b: bb,
+            b_fp: 99,
+            measure: false,
+            ranges: vec![(0, 4), (4, 8)],
+        });
+        (Arc::new(b), rx, metrics)
+    }
+
+    #[test]
+    fn stragglers_fire_after_quorum_and_lag_threshold_at_most_once() {
+        let m = Csr::identity(4);
+        let (b, _rx, _metrics) = speculating_barrier(0.5, 20);
+        assert!(b.stragglers().is_empty(), "no quorum yet: nothing completed");
+        b.complete(0, Ok(shard_output(&m)), None);
+        let plans = b.stragglers();
+        assert_eq!(plans.len(), 1, "the lagging shard gets one backup");
+        assert_eq!(plans[0].shard, 1);
+        assert_eq!((plans[0].lo, plans[0].hi), (4, 8));
+        assert!(b.stragglers().is_empty(), "each shard speculates at most once");
+    }
+
+    #[test]
+    fn stragglers_hold_before_the_lag_threshold() {
+        let m = Csr::identity(4);
+        // lag_factor 1000 × a ~20ms median is far beyond the parent's age
+        let (b, _rx, _metrics) = speculating_barrier(1000.0, 20);
+        b.complete(0, Ok(shard_output(&m)), None);
+        assert!(b.stragglers().is_empty(), "threshold not reached");
+    }
+
+    #[test]
+    fn abandoned_primary_defers_to_the_in_flight_backup() {
+        let m = Csr::identity(4);
+        let (b, rx, metrics) = speculating_barrier(0.5, 20);
+        b.complete(0, Ok(shard_output(&m)), None);
+        assert_eq!(b.stragglers().len(), 1, "backup launched for shard 1");
+        // the primary's chain dies — but the backup is still running, so
+        // the shard must NOT resolve to an error yet
+        b.abandon(1, anyhow!("primary chain died"));
+        assert!(rx.try_recv().is_err(), "backup still in flight");
+        b.complete_from(1, Ok(shard_output(&m)), None, true);
+        let r = rx.recv().unwrap();
+        assert!(r.c.is_ok(), "the backup rescued the abandoned shard");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.speculative_wins, 1);
+        assert_eq!(snap.jobs_completed, 1);
+        assert_eq!(snap.jobs_failed, 0);
+    }
+
+    #[test]
+    fn both_chains_dying_surfaces_the_first_error() {
+        let m = Csr::identity(4);
+        let (b, rx, _metrics) = speculating_barrier(0.5, 20);
+        b.complete(0, Ok(shard_output(&m)), None);
+        assert_eq!(b.stragglers().len(), 1);
+        b.abandon(1, anyhow!("first death"));
+        b.abandon(1, anyhow!("second death"));
+        let r = rx.recv().unwrap();
+        let err = format!("{:#}", r.c.unwrap_err());
+        assert!(err.contains("first death"), "the first chain's error wins: {err}");
     }
 
     #[test]

@@ -1,0 +1,210 @@
+//! Deterministic fault injection for the worker fleet.
+//!
+//! Chaos is applied at **sub-job boundaries**: after a worker dequeues a
+//! message and before it executes, the worker consults its
+//! [`WorkerChaos`] stream and may be delayed (a straggler), have its
+//! device pool torn down (memory pressure), or die outright (the
+//! process-kill case — the worker still *owns* the dequeued message, so
+//! the death path can requeue it onto the surviving fleet; see
+//! `coordinator::service`). Injecting only at boundaries keeps results
+//! bit-identical: a sub-job either runs the normal code path to
+//! completion or never starts on that worker.
+//!
+//! Every decision comes from a per-`(seed, worker_id, generation)`
+//! xoshiro stream with a fixed draw order, so the same
+//! [`ChaosConfig::seed`] replays the same kill/delay/shrink schedule —
+//! chaos CI failures reproduce locally (`tests/chaos.rs` pins this).
+
+use crate::util::rng::{splitmix64, Rng};
+
+/// Fault-injection knobs. `Default` (and [`ChaosConfig::off`]) injects
+/// nothing — the fleet behaves exactly as without the chaos layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChaosConfig {
+    /// Probability a worker dies at a sub-job boundary (its in-flight
+    /// message is requeued onto the surviving fleet, a replacement
+    /// worker spawns).
+    pub kill_prob: f64,
+    /// Injected straggler delay per boundary, drawn uniformly from
+    /// `[lo, hi)` ns. `(0, 0)` injects no delay.
+    pub delay_ns_range: (u64, u64),
+    /// Probability the worker's device pool + pattern cache are torn
+    /// down at a boundary (simulated memory pressure; the next sub-job
+    /// runs cold but correct).
+    pub mem_pressure: f64,
+    /// Root seed for the deterministic schedule.
+    pub seed: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig::off()
+    }
+}
+
+impl ChaosConfig {
+    /// No injection at all (the production default).
+    pub fn off() -> Self {
+        ChaosConfig { kill_prob: 0.0, delay_ns_range: (0, 0), mem_pressure: 0.0, seed: 0 }
+    }
+
+    /// Mild background faults: rare deaths, sub-200µs stragglers, the
+    /// occasional pool teardown. Under `gentle` every job must still
+    /// complete (CI gates `BENCH_chaos.json` on a 100% completion rate).
+    pub fn gentle() -> Self {
+        ChaosConfig { kill_prob: 0.02, delay_ns_range: (0, 200_000), mem_pressure: 0.05, seed: 0 }
+    }
+
+    /// Hostile fleet: a quarter of boundaries kill the worker, delays up
+    /// to 2ms, frequent pool teardowns. Jobs may exhaust their retry
+    /// budget here — the contract is bit-identical result *or* clean
+    /// typed error, never a hang or a torn stitch.
+    pub fn aggressive() -> Self {
+        ChaosConfig {
+            kill_prob: 0.25,
+            delay_ns_range: (0, 2_000_000),
+            mem_pressure: 0.25,
+            seed: 0,
+        }
+    }
+
+    /// Parse a preset name (`off` / `gentle` / `aggressive`).
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "off" | "0" | "false" => Some(ChaosConfig::off()),
+            "gentle" => Some(ChaosConfig::gentle()),
+            "aggressive" => Some(ChaosConfig::aggressive()),
+            _ => None,
+        }
+    }
+
+    /// The preset with a specific root seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// True when no fault can ever fire — the worker loop skips the
+    /// stream entirely, so `off` is byte-for-byte the pre-chaos path.
+    pub fn is_off(&self) -> bool {
+        self.kill_prob <= 0.0
+            && self.mem_pressure <= 0.0
+            && self.delay_ns_range.1 <= self.delay_ns_range.0
+            && self.delay_ns_range.0 == 0
+    }
+}
+
+/// What the stream decided for one sub-job boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BoundaryFault {
+    /// The worker dies here (after requeueing its in-flight message).
+    pub kill: bool,
+    /// Injected straggler delay (0 = none).
+    pub delay_ns: u64,
+    /// Tear down the worker's device pool + pattern cache.
+    pub shrink_pool: bool,
+}
+
+impl BoundaryFault {
+    pub fn none() -> Self {
+        BoundaryFault { kill: false, delay_ns: 0, shrink_pool: false }
+    }
+}
+
+/// One worker's deterministic fault stream. Seeded from
+/// `(cfg.seed, worker_id, generation)` — a replacement worker (same id,
+/// generation + 1) gets a fresh stream, so a kill doesn't replay
+/// immediately on the respawn.
+pub struct WorkerChaos {
+    cfg: ChaosConfig,
+    rng: Rng,
+}
+
+impl WorkerChaos {
+    pub fn new(cfg: &ChaosConfig, worker_id: usize, generation: u64) -> Self {
+        // splitmix the three inputs into one stream seed; xor-folding
+        // alone would collide (id, gen) pairs like (0,1)/(1,0)
+        let mut s = cfg.seed;
+        let mut mix = splitmix64(&mut s);
+        s = mix ^ (worker_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        mix = splitmix64(&mut s);
+        s = mix ^ generation.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        let seed = splitmix64(&mut s);
+        WorkerChaos { cfg: *cfg, rng: Rng::new(seed) }
+    }
+
+    /// Draw the fault decision for the next sub-job boundary. The draw
+    /// order (kill, delay, shrink) is fixed so the schedule for a given
+    /// config is a pure function of `(seed, worker_id, generation,
+    /// boundary index)`.
+    pub fn at_boundary(&mut self) -> BoundaryFault {
+        if self.cfg.is_off() {
+            return BoundaryFault::none();
+        }
+        let kill = self.rng.f64() < self.cfg.kill_prob;
+        let (lo, hi) = self.cfg.delay_ns_range;
+        let delay_ns = if hi > lo { lo + self.rng.below(hi - lo) } else { lo };
+        let shrink_pool = self.rng.f64() < self.cfg.mem_pressure;
+        BoundaryFault { kill, delay_ns, shrink_pool }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_injects_nothing_ever() {
+        let mut c = WorkerChaos::new(&ChaosConfig::off(), 3, 0);
+        for _ in 0..1000 {
+            assert_eq!(c.at_boundary(), BoundaryFault::none());
+        }
+        assert!(ChaosConfig::off().is_off());
+        assert!(ChaosConfig::default().is_off());
+        assert!(!ChaosConfig::gentle().is_off());
+        assert!(!ChaosConfig::aggressive().is_off());
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let cfg = ChaosConfig::aggressive().with_seed(42);
+        let mut a = WorkerChaos::new(&cfg, 1, 0);
+        let mut b = WorkerChaos::new(&cfg, 1, 0);
+        let sa: Vec<BoundaryFault> = (0..256).map(|_| a.at_boundary()).collect();
+        let sb: Vec<BoundaryFault> = (0..256).map(|_| b.at_boundary()).collect();
+        assert_eq!(sa, sb, "the schedule is a pure function of (seed, id, gen)");
+    }
+
+    #[test]
+    fn workers_and_generations_get_distinct_streams() {
+        let cfg = ChaosConfig::aggressive().with_seed(7);
+        let draw = |id, gen| -> Vec<BoundaryFault> {
+            let mut c = WorkerChaos::new(&cfg, id, gen);
+            (0..64).map(|_| c.at_boundary()).collect()
+        };
+        assert_ne!(draw(0, 0), draw(1, 0), "per-worker streams differ");
+        assert_ne!(draw(0, 0), draw(0, 1), "a respawn gets a fresh stream");
+        assert_ne!(draw(0, 1), draw(1, 0), "(id, gen) pairs don't fold together");
+    }
+
+    #[test]
+    fn aggressive_actually_fires_each_fault_kind() {
+        let cfg = ChaosConfig::aggressive().with_seed(9);
+        let mut c = WorkerChaos::new(&cfg, 0, 0);
+        let faults: Vec<BoundaryFault> = (0..512).map(|_| c.at_boundary()).collect();
+        assert!(faults.iter().any(|f| f.kill));
+        assert!(faults.iter().any(|f| f.delay_ns > 0));
+        assert!(faults.iter().any(|f| f.shrink_pool));
+        let kills = faults.iter().filter(|f| f.kill).count();
+        assert!((64..192).contains(&kills), "kill rate far off 25%: {kills}/512");
+    }
+
+    #[test]
+    fn preset_parsing() {
+        assert_eq!(ChaosConfig::preset("off"), Some(ChaosConfig::off()));
+        assert_eq!(ChaosConfig::preset("gentle"), Some(ChaosConfig::gentle()));
+        assert_eq!(ChaosConfig::preset("aggressive"), Some(ChaosConfig::aggressive()));
+        assert_eq!(ChaosConfig::preset("cruel"), None);
+        assert_eq!(ChaosConfig::preset("gentle").unwrap().with_seed(5).seed, 5);
+    }
+}

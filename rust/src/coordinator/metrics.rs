@@ -79,6 +79,22 @@ pub struct Metrics {
     /// waiter), bounded like `latencies`. Kept separate because a
     /// coalesced waiter observes a latency no coordinator job ever ran.
     serve_latencies: Mutex<Vec<u64>>,
+    /// Speculative backup sub-jobs launched for lagging shards.
+    pub speculative_launches: AtomicU64,
+    /// Shards whose *backup* reported first (the straggler's result,
+    /// when it eventually lands, is discarded — first result wins).
+    pub speculative_wins: AtomicU64,
+    /// Shard sub-jobs requeued off a dead worker onto the surviving
+    /// fleet (each requeue is one death survived by the parent job).
+    pub requeued_shards: AtomicU64,
+    /// Whole hash jobs / batches requeued off a dead worker.
+    pub requeued_jobs: AtomicU64,
+    /// Workers that died (chaos kill) — each spawns one replacement.
+    pub worker_deaths: AtomicU64,
+    /// Chaos-injected straggler delays applied at sub-job boundaries.
+    pub chaos_delays: AtomicU64,
+    /// Chaos-injected device-pool teardowns (simulated memory pressure).
+    pub chaos_pool_shrinks: AtomicU64,
 }
 
 impl Metrics {
@@ -178,6 +194,13 @@ impl Metrics {
             batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             queue_depth_max: self.queue_depth_max.load(Ordering::Relaxed),
+            speculative_launches: self.speculative_launches.load(Ordering::Relaxed),
+            speculative_wins: self.speculative_wins.load(Ordering::Relaxed),
+            requeued_shards: self.requeued_shards.load(Ordering::Relaxed),
+            requeued_jobs: self.requeued_jobs.load(Ordering::Relaxed),
+            worker_deaths: self.worker_deaths.load(Ordering::Relaxed),
+            chaos_delays: self.chaos_delays.load(Ordering::Relaxed),
+            chaos_pool_shrinks: self.chaos_pool_shrinks.load(Ordering::Relaxed),
             p50_ns: self.latency_percentile(0.50),
             p99_ns: self.latency_percentile(0.99),
             serve_p50_ns: self.serve_latency_percentile(0.50),
@@ -227,6 +250,18 @@ pub struct MetricsSnapshot {
     pub batched_jobs: u64,
     pub queue_depth: u64,
     pub queue_depth_max: u64,
+    /// Failure domains: straggler speculation (backups launched / backups
+    /// that reported first), dead-worker recovery (sub-jobs and whole
+    /// jobs requeued, deaths survived), and the chaos injection that
+    /// exercised them (delays applied, pools torn down). All zero when
+    /// `--speculate off --chaos off`.
+    pub speculative_launches: u64,
+    pub speculative_wins: u64,
+    pub requeued_shards: u64,
+    pub requeued_jobs: u64,
+    pub worker_deaths: u64,
+    pub chaos_delays: u64,
+    pub chaos_pool_shrinks: u64,
     pub p50_ns: Option<u64>,
     pub p99_ns: Option<u64>,
     /// Front-door (admission → fan-out) latency percentiles, per waiter.
@@ -297,6 +332,18 @@ impl std::fmt::Display for MetricsSnapshot {
             self.batched_jobs,
             self.queue_depth,
             self.queue_depth_max
+        )?;
+        writeln!(
+            f,
+            "failure domains: deaths={} requeued_shards={} requeued_jobs={} \
+             spec_launches={} spec_wins={} chaos_delays={} pool_shrinks={}",
+            self.worker_deaths,
+            self.requeued_shards,
+            self.requeued_jobs,
+            self.speculative_launches,
+            self.speculative_wins,
+            self.chaos_delays,
+            self.chaos_pool_shrinks
         )?;
         match (self.p50_ns, self.p99_ns) {
             (Some(p50), Some(p99)) => writeln!(

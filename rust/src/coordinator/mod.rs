@@ -18,7 +18,12 @@
 //!   whole worker pool and reassemble through a [`barrier`], so one
 //!   oversized multiply and many small jobs share the fleet.
 //! * [`barrier`] — the per-job shard reassembly barrier (exactly one
-//!   result per parent job, even when shards fail or are lost).
+//!   result per parent job, even when shards fail or are lost), plus
+//!   the straggler view that drives speculative backup sub-jobs
+//!   (first result wins, loser discarded, stitch bit-identical).
+//! * [`chaos`] — deterministic fault injection at sub-job boundaries
+//!   (worker kill / straggler delay / pool teardown) so the
+//!   speculation + requeue machinery is provable under test.
 //! * [`cache`] — the per-worker sparsity-pattern (symbolic-reuse) cache.
 //! * [`feedback`] — the adaptive planning loop: a pattern-keyed
 //!   execution history fed by measured timelines, consumed to re-cut
@@ -39,14 +44,16 @@
 pub mod barrier;
 pub mod batch;
 pub mod cache;
+pub mod chaos;
 pub mod feedback;
 pub mod metrics;
 pub mod router;
 pub mod serve;
 pub mod service;
 
-pub use barrier::ShardBarrier;
+pub use barrier::{ShardBarrier, SpeculateConfig};
 pub use batch::{BatchConfig, Batcher};
+pub use chaos::ChaosConfig;
 pub use cache::{PatternCache, PatternKey};
 pub use feedback::{ExecHistory, NsPerProdFit, PersistedState, ReplanConfig, RunObservation};
 pub use metrics::Metrics;

@@ -47,7 +47,9 @@
 //! coordinator for results (short timeout), which also gives the age
 //! watermark its clock.
 
+use super::barrier::SpeculateConfig;
 use super::batch::{BatchConfig, Batcher};
+use super::chaos::ChaosConfig;
 use super::feedback::{parse_on_off, persist, NsPerProdFit, PersistedState, ReplanConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::{Route, Router, RouterConfig};
@@ -131,6 +133,17 @@ pub struct ServeConfig {
     /// process-wide suite calibration
     /// ([`super::feedback::default_fit`]).
     pub ns_per_prod: Option<f64>,
+    /// Straggler speculation for sharded jobs (`OPSPARSE_SPECULATE`/
+    /// `--speculate on|off`, `OPSPARSE_SPECULATE_LAG`/`--speculate-lag`).
+    /// Off by default: `--speculate off` is exactly the pre-speculation
+    /// coordinator.
+    pub speculate: SpeculateConfig,
+    /// Chaos fault injection at worker sub-job boundaries
+    /// (`OPSPARSE_CHAOS`/`--chaos off|gentle|aggressive`,
+    /// `OPSPARSE_CHAOS_SEED`/`--chaos-seed`). Off by default; never
+    /// enable in production — this knob exists so CI and the chaos bench
+    /// can prove the failure-domain machinery.
+    pub chaos: ChaosConfig,
 }
 
 impl Default for ServeConfig {
@@ -149,6 +162,8 @@ impl Default for ServeConfig {
             device_memory_bytes: router.device_memory_bytes,
             max_devices: router.max_devices,
             ns_per_prod: None,
+            speculate: SpeculateConfig::default(),
+            chaos: ChaosConfig::off(),
         }
     }
 }
@@ -210,6 +225,21 @@ impl ServeConfig {
         if let Some(ic) = get("OPSPARSE_INTERCONNECT").and_then(|v| Interconnect::parse_opt(&v))
         {
             cfg.interconnect = ic;
+        }
+        if let Some(on) = on_off("OPSPARSE_SPECULATE") {
+            cfg.speculate.enabled = on;
+        }
+        if let Some(lag) = get("OPSPARSE_SPECULATE_LAG")
+            .and_then(|v| v.parse::<f64>().ok())
+            .filter(|&l| l > 0.0 && l.is_finite())
+        {
+            cfg.speculate.lag_factor = lag;
+        }
+        if let Some(chaos) = get("OPSPARSE_CHAOS").and_then(|v| ChaosConfig::preset(&v)) {
+            cfg.chaos = chaos.with_seed(cfg.chaos.seed);
+        }
+        if let Some(seed) = get("OPSPARSE_CHAOS_SEED").and_then(|v| v.parse::<u64>().ok()) {
+            cfg.chaos.seed = seed;
         }
         cfg
     }
@@ -300,6 +330,29 @@ impl ServeConfig {
             match Interconnect::parse_opt(v) {
                 Some(ic) => cfg.interconnect = ic,
                 None => bail!("--interconnect wants pcie|nvlink|none, got {v:?}"),
+            }
+        }
+        if let Some(on) = on_off_flag(flags, "speculate")? {
+            cfg.speculate.enabled = on;
+        }
+        if let Some(v) = flags.get("speculate-lag") {
+            match v.parse::<f64>() {
+                Ok(l) if l > 0.0 && l.is_finite() => cfg.speculate.lag_factor = l,
+                _ => bail!("--speculate-lag wants a positive factor, got {v:?}"),
+            }
+        }
+        if let Some(v) = flags.get("chaos") {
+            match ChaosConfig::preset(v) {
+                // keep a seed the env layer (or an earlier flag pass)
+                // already chose: the preset picks rates, not the schedule
+                Some(preset) => cfg.chaos = preset.with_seed(cfg.chaos.seed),
+                None => bail!("--chaos wants off|gentle|aggressive, got {v:?}"),
+            }
+        }
+        if let Some(v) = flags.get("chaos-seed") {
+            match v.parse::<u64>() {
+                Ok(seed) => cfg.chaos.seed = seed,
+                Err(_) => bail!("--chaos-seed wants a number, got {v:?}"),
             }
         }
         Ok(cfg)
@@ -450,9 +503,23 @@ impl Serve {
     /// [`Serve::start`] with an optional block-engine factory for the
     /// coordinator's PJRT path.
     pub fn start_with_engine(cfg: ServeConfig, engine: Option<EngineFactory>) -> Result<Serve> {
+        // a truncated or garbage state file (a crash mid-save, a stale
+        // format, disk corruption) must cost only the warmth: log it and
+        // start cold — `replan_cold_misses` behaves exactly as with no
+        // file — rather than refusing to serve (tests/serve.rs pins both
+        // corruption shapes)
         let loaded: Option<PersistedState> = match &cfg.persist {
             Some(path) if std::path::Path::new(path).exists() => {
-                Some(persist::load_state(path)?)
+                match persist::load_state(path) {
+                    Ok(s) => Some(s),
+                    Err(e) => {
+                        eprintln!(
+                            "serve: ignoring unreadable warm-start state {path:?} \
+                             (cold start): {e:#}"
+                        );
+                        None
+                    }
+                }
             }
             _ => None,
         };
@@ -462,7 +529,14 @@ impl Serve {
             (None, None) => super::feedback::default_fit(),
         };
         let router = Router::new(cfg.router_config(Arc::clone(&fit)));
-        let coord = Coordinator::start_with(cfg.workers, router.clone(), engine, cfg.replan);
+        let coord = Coordinator::start_full(
+            cfg.workers,
+            router.clone(),
+            engine,
+            cfg.replan,
+            cfg.speculate,
+            cfg.chaos,
+        );
         if let Some(s) = &loaded {
             let (held, evicted) = {
                 let mut h = coord.history().lock().unwrap_or_else(|e| e.into_inner());
@@ -743,6 +817,8 @@ mod tests {
         assert_eq!(d.interconnect, r.interconnect);
         assert_eq!(d.replan, ReplanConfig::default());
         assert_eq!(d.overlap, OverlapConfig::default());
+        assert!(!d.speculate.enabled, "speculation defaults off (PR 6 baseline)");
+        assert!(d.chaos.is_off(), "chaos defaults off");
     }
 
     #[test]
@@ -761,6 +837,10 @@ mod tests {
             ("OPSPARSE_OVERLAP", "off"),
             ("OPSPARSE_OVERLAP_CHUNK_KB", "64"),
             ("OPSPARSE_INTERCONNECT", "none"),
+            ("OPSPARSE_SPECULATE", "on"),
+            ("OPSPARSE_SPECULATE_LAG", "2.5"),
+            ("OPSPARSE_CHAOS", "gentle"),
+            ("OPSPARSE_CHAOS_SEED", "42"),
         ]
         .into_iter()
         .collect();
@@ -778,6 +858,9 @@ mod tests {
         assert!(!cfg.overlap.enabled);
         assert_eq!(cfg.overlap.chunk_bytes, 64 * 1024);
         assert_eq!(cfg.interconnect, None);
+        assert!(cfg.speculate.enabled);
+        assert_eq!(cfg.speculate.lag_factor, 2.5);
+        assert_eq!(cfg.chaos, ChaosConfig::gentle().with_seed(42));
         // `on` maps to the default path; junk values keep the defaults
         let env2: HashMap<&str, &str> = [
             ("OPSPARSE_PERSIST", "on"),
@@ -822,9 +905,15 @@ mod tests {
             [("jobs".to_string(), "32".to_string())].into_iter().collect();
         assert_eq!(ServeConfig::from_args_over(base.clone(), &extra).unwrap(), base);
         // ...but a junk value on a known flag is an error, not a default
-        for (k, v) in
-            [("coalesce", "maybe"), ("queue-cap", "many"), ("interconnect", "string-and-cans")]
-        {
+        for (k, v) in [
+            ("coalesce", "maybe"),
+            ("queue-cap", "many"),
+            ("interconnect", "string-and-cans"),
+            ("speculate", "perhaps"),
+            ("speculate-lag", "-3"),
+            ("chaos", "cruel"),
+            ("chaos-seed", "lucky"),
+        ] {
             let bad: HashMap<String, String> =
                 [(k.to_string(), v.to_string())].into_iter().collect();
             assert!(
@@ -832,6 +921,32 @@ mod tests {
                 "--{k} {v} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn speculate_and_chaos_flags_layer_over_env() {
+        // env turns chaos on with a seed; the CLI swaps the preset but
+        // keeps the seed (the preset picks rates, not the schedule),
+        // and flips speculation on with a custom lag factor
+        let env: HashMap<&str, &str> =
+            [("OPSPARSE_CHAOS", "gentle"), ("OPSPARSE_CHAOS_SEED", "7")].into_iter().collect();
+        let base = ServeConfig::from_env_map(|k| env.get(k).map(|v| v.to_string()));
+        assert_eq!(base.chaos, ChaosConfig::gentle().with_seed(7));
+        let flags: HashMap<String, String> = [
+            ("chaos".to_string(), "aggressive".to_string()),
+            ("speculate".to_string(), "on".to_string()),
+            ("speculate-lag".to_string(), "1.5".to_string()),
+        ]
+        .into_iter()
+        .collect();
+        let cfg = ServeConfig::from_args_over(base, &flags).unwrap();
+        assert_eq!(cfg.chaos, ChaosConfig::aggressive().with_seed(7));
+        assert!(cfg.speculate.enabled);
+        assert_eq!(cfg.speculate.lag_factor, 1.5);
+        // --chaos off really is off, whatever the seed says
+        let off: HashMap<String, String> =
+            [("chaos".to_string(), "off".to_string())].into_iter().collect();
+        assert!(ServeConfig::from_args_over(cfg, &off).unwrap().chaos.is_off());
     }
 
     #[test]

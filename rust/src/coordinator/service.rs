@@ -15,9 +15,20 @@
 //! blocks back — bit-identical to the in-worker
 //! [`crate::spgemm::sharded::multiply_sharded`] path — emitting exactly
 //! one [`JobResult`] per parent job even when a shard fails.
+//!
+//! **Failure domains** (see `docs/ARCHITECTURE.md`): a worker that dies
+//! at a sub-job boundary (chaos kill, standing in for a SIGKILL'd or
+//! OOM'd process) requeues the message it owned onto the surviving
+//! fleet and spawns its own replacement, so one death never fails a
+//! parent job; a bounded retry budget ([`MAX_REQUEUES`]) converts
+//! repeated deaths into one clean typed error. With `--speculate on`, a
+//! monitor thread polls in-flight shard barriers and launches backup
+//! sub-jobs for shards lagging the completed-shard median — first
+//! result wins, bit-identically either way.
 
-use super::barrier::{ShardBarrier, ShardFeedback};
+use super::barrier::{ShardBarrier, ShardFeedback, SpeculateConfig, SpeculationState};
 use super::cache::PatternCache;
+use super::chaos::{ChaosConfig, WorkerChaos};
 use super::feedback::{ExecHistory, NsPerProdFit, ReplanConfig};
 use super::metrics::Metrics;
 use super::router::{Route, Router};
@@ -29,10 +40,10 @@ use crate::sparse::Csr;
 use crate::spgemm::pipeline::{multiply_reuse, OpSparseConfig, SymbolicReuse};
 use crate::spgemm::sharded::{MeasuredShard, ShardPlan};
 use anyhow::Result;
-use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex, Weak};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Patterns each hash worker remembers. The repeated-pattern workloads
 /// (AMG re-setup, MCL expansion, A·A iteration) cycle through a handful
@@ -41,6 +52,16 @@ use std::time::Instant;
 /// worst-case worker memory is 64 × 8 B × max-rows; revisit with a byte
 /// budget if million-row patterns ever dominate traffic.
 const WORKER_CACHE_PATTERNS: usize = 64;
+
+/// How many times a sub-job may be requeued off dead workers before its
+/// attempt chain is abandoned with a clean error (≤ `MAX_REQUEUES + 1`
+/// delivery attempts total). Bounds livelock at `kill_prob = 1.0`.
+const MAX_REQUEUES: u32 = 5;
+
+/// Speculation-monitor poll cadence. 200µs is far below any makespan
+/// worth speculating on (`SpeculateConfig::min_lag_ns`) and cheap: each
+/// tick takes one registry lock and per-barrier state lock.
+const SPECULATION_TICK: Duration = Duration::from_micros(200);
 
 /// A multiply job. `force_route` overrides the router (tests/benches).
 pub struct Job {
@@ -82,22 +103,31 @@ struct ShardTask {
     /// stream; here the simulator supplies the same measurement
     /// deterministically.
     measure: bool,
+    /// Deliveries this task already survived being requeued from dead
+    /// workers (bounded by [`MAX_REQUEUES`]).
+    attempts: u32,
+    /// A speculative backup launched by the monitor — its result reports
+    /// through [`ShardBarrier::complete_from`] so a backup-first finish
+    /// counts as a `speculative_win`.
+    speculative: bool,
 }
 
 enum WorkerMsg {
-    /// A job, the route `submit` resolved for it, and the submit-time
+    /// A job, the route `submit` resolved for it, the submit-time
     /// instant — every route reports end-to-end (submit → result)
     /// latency, so queue wait is visible and the percentiles compare
-    /// across routes.
-    Run(Job, Route, Instant),
+    /// across routes — and the dead-worker requeue count.
+    Run(Job, Route, Instant, u32),
     /// Several hash jobs delivered as **one worker visit**: the batched
     /// device pass the serving front door flushes
     /// ([`Coordinator::submit_batch`]). Every member runs the same code
     /// as a singleton [`WorkerMsg::Run`] against the same warm pool and
     /// pattern cache, so results are bit-identical to one-at-a-time
     /// submission — the batch only amortizes queue traffic and keeps
-    /// the members' allocations on one pool.
-    RunBatch(Vec<Job>, Instant),
+    /// the members' allocations on one pool. The trailing count is the
+    /// dead-worker requeue budget spent so far (the batch requeues
+    /// whole: its members were never started).
+    RunBatch(Vec<Job>, Instant, u32),
     /// One shard of a sharded parent job.
     RunShard(ShardTask),
     Stop,
@@ -141,52 +171,313 @@ fn run_hash_job(
     metrics: &Metrics,
     tx_res: &mpsc::Sender<JobResult>,
 ) {
-    let key = (job.a.pattern_fingerprint(), job.b.pattern_fingerprint());
-    let reuse = cache.lookup(key);
-    if reuse.is_some() {
-        metrics.sym_cache_hits.fetch_add(1, Ordering::Relaxed);
-    } else {
-        metrics.sym_cache_misses.fetch_add(1, Ordering::Relaxed);
-    }
+    let id = job.id;
     let pool_before = pool.stats();
-    // a panicking multiply (internal bug, or a 2^-64 fingerprint
-    // collision making the cached entry lie) must cost one job, not
-    // the worker thread and every queued job
-    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        multiply_reuse(&job.a, &job.b, cfg, Some(pool), reuse.as_deref())
-    }));
-    let (c, nprod) = match result {
-        Ok(Ok(out)) => {
-            let np = out.nprod;
-            // online re-fit: fold this job's measured device time into
-            // the live ns_per_prod fit. The fit is seeded from (and the
-            // router compares it against) *simulated* device ns, so the
-            // observation must be in the same unit system — the
-            // simulator plays the CUDA-event role here, exactly as on
-            // the RunShard path; host wall clock would drift the fit
-            // with machine speed. Cache-warm replays skip the symbolic
-            // phase and would bias the full-pipeline constant low; skip
-            // them.
-            if let Some(f) = fit {
-                if !out.symbolic_skipped
-                    && f.observe(simulate(&out.trace, &V100).total_ns, np as u64)
-                {
-                    metrics.refit_updates.fetch_add(1, Ordering::Relaxed);
-                }
-            }
-            if reuse.is_none() {
-                cache.insert(key, Arc::new(SymbolicReuse::from_output(&out)));
-            }
-            (Ok(out.c), np)
+    // the ENTIRE per-job body is one fault domain: a panic anywhere in
+    // it (the multiply itself, the post-multiply refit/simulate, the
+    // cache insert — e.g. a 2^-64 fingerprint collision making the
+    // cached entry lie) must cost exactly this job. Anything narrower
+    // would let a panic unwind through a RunBatch member loop and
+    // strand the batch siblings without a JobResult — their waiters
+    // would hang forever (tests/failure_injection.rs pins this).
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let key = (job.a.pattern_fingerprint(), job.b.pattern_fingerprint());
+        let reuse = cache.lookup(key);
+        if reuse.is_some() {
+            metrics.sym_cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            metrics.sym_cache_misses.fetch_add(1, Ordering::Relaxed);
         }
-        Ok(Err(e)) => (Err(e), 0),
+        match multiply_reuse(&job.a, &job.b, cfg, Some(pool), reuse.as_deref()) {
+            Ok(out) => {
+                let np = out.nprod;
+                // online re-fit: fold this job's measured device time
+                // into the live ns_per_prod fit. The fit is seeded from
+                // (and the router compares it against) *simulated*
+                // device ns, so the observation must be in the same
+                // unit system — the simulator plays the CUDA-event role
+                // here, exactly as on the RunShard path; host wall
+                // clock would drift the fit with machine speed.
+                // Cache-warm replays skip the symbolic phase and would
+                // bias the full-pipeline constant low; skip them.
+                if let Some(f) = fit {
+                    if !out.symbolic_skipped
+                        && f.observe(simulate(&out.trace, &V100).total_ns, np as u64)
+                    {
+                        metrics.refit_updates.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                if reuse.is_none() {
+                    cache.insert(key, Arc::new(SymbolicReuse::from_output(&out)));
+                }
+                (Ok(out.c), np)
+            }
+            Err(e) => (Err(e), 0),
+        }
+    }));
+    let (c, nprod) = match outcome {
+        Ok(r) => r,
         Err(_) => (
-            Err(anyhow::anyhow!("multiply panicked (internal bug or corrupt reuse entry)")),
+            Err(anyhow::anyhow!("job panicked (internal bug or corrupt reuse entry)")),
             0,
         ),
     };
     metrics.observe_pool(&pool.stats().delta_since(&pool_before));
-    finish(metrics, tx_res, job.id, Route::Hash, c, nprod, t0);
+    finish(metrics, tx_res, id, Route::Hash, c, nprod, t0);
+}
+
+/// Execute one shard sub-job against a worker's warm state, reporting to
+/// the parent's reassembly barrier. A chaos-injected straggler delay is
+/// folded into the shard's measured timeline
+/// ([`crate::gpusim::Timeline::inject_delay`]) so the barrier's timing
+/// view — and therefore straggler speculation and the execution history
+/// — sees the shard as slow, exactly as CUDA events would on hardware.
+fn run_shard_task(
+    task: ShardTask,
+    injected_delay_ns: u64,
+    pool: &mut DevicePool,
+    cache: &mut PatternCache,
+    cfg: &OpSparseConfig,
+    metrics: &Metrics,
+    worker_id: usize,
+) {
+    // one shard of a sharded parent: slice the row range, run the full
+    // pipeline, report to the reassembly barrier. The pattern cache IS
+    // consulted, with shard-aware keys
+    // `(fingerprint(A[lo..hi]), fingerprint(B))`, so repeated sharded
+    // traffic (AMG re-setup) replays each shard's symbolic phase. A
+    // panicking shard (poisoned rows reachable only from this shard's
+    // slice) must cost the parent job, not this worker thread.
+    metrics.observe_shard_subjob(worker_id);
+    let pool_before = pool.stats();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let a_s = row_slice(&task.a, task.lo, task.hi)?;
+        let key = (a_s.pattern_fingerprint(), task.b_fp);
+        let reuse = cache.lookup(key);
+        if reuse.is_some() {
+            metrics.shard_sym_cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            metrics.shard_sym_cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        let out = multiply_reuse(&a_s, &task.b, cfg, Some(pool), reuse.as_deref())?;
+        if reuse.is_none() {
+            cache.insert(key, Arc::new(SymbolicReuse::from_output(&out)));
+        }
+        Ok(out)
+    }));
+    let r = match result {
+        Ok(r) => r,
+        Err(_) => Err(anyhow::anyhow!(
+            "shard {} panicked (poisoned input or internal bug)",
+            task.shard
+        )),
+    };
+    metrics.observe_pool(&pool.stats().delta_since(&pool_before));
+    // measured per-shard device time for the execution history: the
+    // simulator plays the role CUDA events would on hardware. A
+    // symbolic-cache-warm shard's trace has no symbolic ops, so its
+    // time is incomparable with a cold shard's — report nothing and
+    // let the barrier drop the mixed observation (only homogeneous
+    // all-cold runs update the plan history, which also keeps the
+    // measurement independent of which worker's cache a shard landed
+    // on).
+    let shard_ns = match (&r, task.measure) {
+        (Ok(out), true) if !out.symbolic_skipped => {
+            let mut tl = simulate(&out.trace, &V100);
+            if injected_delay_ns > 0 {
+                tl.inject_delay(injected_delay_ns as f64);
+            }
+            Some(tl.total_ns)
+        }
+        _ => None,
+    };
+    task.barrier.complete_from(task.shard, r, shard_ns, task.speculative);
+}
+
+/// Everything a hash worker (or its respawned replacement) needs,
+/// bundled so the death path can hand it to the next generation.
+#[derive(Clone)]
+struct WorkerShared {
+    rx: Arc<Mutex<mpsc::Receiver<WorkerMsg>>>,
+    /// A clone of the hash sender: dead workers requeue their in-flight
+    /// message through it onto the surviving fleet.
+    tx_requeue: mpsc::Sender<WorkerMsg>,
+    tx_res: mpsc::Sender<JobResult>,
+    metrics: Arc<Metrics>,
+    fit: Option<Arc<NsPerProdFit>>,
+    chaos: ChaosConfig,
+    /// Replacement-worker handles, pushed by each dying worker *before*
+    /// it exits so [`Coordinator::shutdown`]'s drain loop can't miss
+    /// one.
+    replacements: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+fn spawn_hash_worker(sh: WorkerShared, worker_id: usize, generation: u64) -> JoinHandle<()> {
+    std::thread::spawn(move || hash_worker_loop(sh, worker_id, generation))
+}
+
+/// A worker died at a sub-job boundary (chaos kill — the stand-in for a
+/// SIGKILL'd or OOM'd worker process). It still owns the message it
+/// dequeued, so: requeue it onto the surviving fleet (or abandon the
+/// attempt chain with a clean error once the retry budget is spent),
+/// then spawn a replacement so the fleet keeps its width — shutdown's
+/// stop-marker count stays correct and capacity never decays.
+fn worker_died(sh: &WorkerShared, worker_id: usize, generation: u64, msg: WorkerMsg) {
+    sh.metrics.worker_deaths.fetch_add(1, Ordering::Relaxed);
+    match msg {
+        WorkerMsg::RunShard(mut task) => {
+            if task.attempts >= MAX_REQUEUES {
+                let (shard, attempts) = (task.shard, task.attempts);
+                task.barrier.abandon(
+                    shard,
+                    anyhow::anyhow!(
+                        "shard {shard} retry budget exhausted \
+                         ({attempts} requeues after worker deaths)"
+                    ),
+                );
+            } else {
+                task.attempts += 1;
+                sh.metrics.requeued_shards.fetch_add(1, Ordering::Relaxed);
+                let _ = sh.tx_requeue.send(WorkerMsg::RunShard(task));
+            }
+        }
+        WorkerMsg::Run(job, route, t0, attempts) => {
+            if attempts >= MAX_REQUEUES {
+                finish(
+                    &sh.metrics,
+                    &sh.tx_res,
+                    job.id,
+                    route,
+                    Err(anyhow::anyhow!(
+                        "job retry budget exhausted ({attempts} requeues after worker deaths)"
+                    )),
+                    0,
+                    t0,
+                );
+            } else {
+                sh.metrics.requeued_jobs.fetch_add(1, Ordering::Relaxed);
+                let _ = sh.tx_requeue.send(WorkerMsg::Run(job, route, t0, attempts + 1));
+            }
+        }
+        WorkerMsg::RunBatch(jobs, t0, attempts) => {
+            // the batch requeues whole: the kill fired before any member
+            // started, so no member ran twice
+            if attempts >= MAX_REQUEUES {
+                for job in jobs {
+                    finish(
+                        &sh.metrics,
+                        &sh.tx_res,
+                        job.id,
+                        Route::Hash,
+                        Err(anyhow::anyhow!(
+                            "batch retry budget exhausted \
+                             ({attempts} requeues after worker deaths)"
+                        )),
+                        0,
+                        t0,
+                    );
+                }
+            } else {
+                sh.metrics.requeued_jobs.fetch_add(1, Ordering::Relaxed);
+                let _ = sh.tx_requeue.send(WorkerMsg::RunBatch(jobs, t0, attempts + 1));
+            }
+        }
+        WorkerMsg::Stop => {
+            // not reachable (Stop is handled before chaos), but if it
+            // ever were, the marker must survive for the shutdown count
+            let _ = sh.tx_requeue.send(WorkerMsg::Stop);
+        }
+    }
+    let replacement = spawn_hash_worker(sh.clone(), worker_id, generation + 1);
+    sh.replacements.lock().unwrap_or_else(|e| e.into_inner()).push(replacement);
+}
+
+/// The hash-worker loop: warm per-worker state (a grow-only device pool
+/// and a symbolic-reuse cache, both single-owner — no locks), messages
+/// off the shared queue, chaos consulted at every sub-job boundary.
+fn hash_worker_loop(sh: WorkerShared, worker_id: usize, generation: u64) {
+    let mut pool = DevicePool::new();
+    let mut cache = PatternCache::new(WORKER_CACHE_PATTERNS);
+    let cfg = OpSparseConfig::default();
+    let mut chaos = WorkerChaos::new(&sh.chaos, worker_id, generation);
+    loop {
+        let msg = {
+            let guard = sh.rx.lock().unwrap();
+            guard.recv()
+        };
+        let msg = match msg {
+            Ok(WorkerMsg::Stop) | Err(_) => return,
+            Ok(m) => m,
+        };
+        // chaos fires at the sub-job boundary, while this worker still
+        // owns the dequeued message: a kill hands it to worker_died for
+        // requeueing, so injection never loses work — and never tears a
+        // result, because the sub-job either runs the normal path to
+        // completion or never starts here.
+        let mut injected_delay_ns = 0u64;
+        if !sh.chaos.is_off() {
+            let fault = chaos.at_boundary();
+            if fault.delay_ns > 0 {
+                sh.metrics.chaos_delays.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_nanos(fault.delay_ns));
+                injected_delay_ns = fault.delay_ns;
+            }
+            if fault.shrink_pool {
+                sh.metrics.chaos_pool_shrinks.fetch_add(1, Ordering::Relaxed);
+                pool = DevicePool::new();
+                cache = PatternCache::new(WORKER_CACHE_PATTERNS);
+            }
+            if fault.kill {
+                worker_died(&sh, worker_id, generation, msg);
+                return;
+            }
+        }
+        match msg {
+            WorkerMsg::RunShard(task) => {
+                run_shard_task(
+                    task,
+                    injected_delay_ns,
+                    &mut pool,
+                    &mut cache,
+                    &cfg,
+                    &sh.metrics,
+                    worker_id,
+                );
+            }
+            WorkerMsg::Run(job, _, t0, _) => {
+                run_hash_job(
+                    job,
+                    t0,
+                    &mut pool,
+                    &mut cache,
+                    &cfg,
+                    sh.fit.as_ref(),
+                    &sh.metrics,
+                    &sh.tx_res,
+                );
+            }
+            WorkerMsg::RunBatch(jobs, t0, _) => {
+                // one worker visit, many members: each runs the
+                // identical singleton path against this worker's pool
+                // and cache, so a batch's results match one-at-a-time
+                // submission bit for bit while repeated patterns warm
+                // the same cache within the visit
+                for job in jobs {
+                    run_hash_job(
+                        job,
+                        t0,
+                        &mut pool,
+                        &mut cache,
+                        &cfg,
+                        sh.fit.as_ref(),
+                        &sh.metrics,
+                        &sh.tx_res,
+                    );
+                }
+            }
+            WorkerMsg::Stop => return,
+        }
+    }
 }
 
 /// The coordinator: spawn, submit, drain, join.
@@ -196,6 +487,18 @@ pub struct Coordinator {
     rx_results: mpsc::Receiver<JobResult>,
     tx_results: mpsc::Sender<JobResult>,
     workers: Vec<JoinHandle<()>>,
+    /// Replacements spawned by dying workers (chaos kills), joined by
+    /// `shutdown`'s drain loop after the original handles.
+    replacements: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// Straggler-speculation monitor (spawned only with `--speculate
+    /// on`) and its stop flag.
+    monitor: Option<JoinHandle<()>>,
+    monitor_stop: Arc<AtomicBool>,
+    speculate: SpeculateConfig,
+    /// In-flight shard barriers the monitor watches. `Weak` — the
+    /// shard tasks own the barrier; a completed parent's entry prunes
+    /// itself on the next tick.
+    spec_registry: Arc<Mutex<Vec<Weak<ShardBarrier>>>>,
     router: Router,
     /// Adaptive re-planning knobs (see [`ReplanConfig`]).
     replan: ReplanConfig,
@@ -229,140 +532,92 @@ impl Coordinator {
         engine_factory: Option<EngineFactory>,
         replan: ReplanConfig,
     ) -> Self {
+        Coordinator::start_full(
+            n_workers,
+            router,
+            engine_factory,
+            replan,
+            SpeculateConfig::default(),
+            ChaosConfig::off(),
+        )
+    }
+
+    /// [`Coordinator::start_with`] plus the failure-domain knobs:
+    /// straggler speculation ([`SpeculateConfig`], default off) and
+    /// chaos fault injection ([`ChaosConfig`], default off). With both
+    /// off this is byte-for-byte the pre-chaos coordinator — no monitor
+    /// thread, no per-boundary draws, identical results, routes, and
+    /// metrics.
+    pub fn start_full(
+        n_workers: usize,
+        router: Router,
+        engine_factory: Option<EngineFactory>,
+        replan: ReplanConfig,
+        speculate: SpeculateConfig,
+        chaos: ChaosConfig,
+    ) -> Self {
         let (tx_hash, rx_hash) = mpsc::channel::<WorkerMsg>();
         let (tx_results, rx_results) = mpsc::channel::<JobResult>();
         let rx_hash = Arc::new(Mutex::new(rx_hash));
         let metrics = Arc::new(Metrics::new());
         let history = Arc::new(Mutex::new(ExecHistory::new(replan.history_cap)));
         let fit: Option<Arc<NsPerProdFit>> = router.cfg.fit.clone();
+        let replacements: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
 
+        let shared = WorkerShared {
+            rx: Arc::clone(&rx_hash),
+            tx_requeue: tx_hash.clone(),
+            tx_res: tx_results.clone(),
+            metrics: Arc::clone(&metrics),
+            fit,
+            chaos,
+            replacements: Arc::clone(&replacements),
+        };
         let mut workers = Vec::new();
         for worker_id in 0..n_workers.max(1) {
-            let rx = Arc::clone(&rx_hash);
-            let tx_res = tx_results.clone();
+            workers.push(spawn_hash_worker(shared.clone(), worker_id, 0));
+        }
+
+        // straggler-speculation monitor: polls in-flight barriers'
+        // timing views and launches backup sub-jobs for lagging shards
+        let monitor_stop = Arc::new(AtomicBool::new(false));
+        let spec_registry: Arc<Mutex<Vec<Weak<ShardBarrier>>>> = Arc::new(Mutex::new(Vec::new()));
+        let monitor = speculate.enabled.then(|| {
+            let reg = Arc::clone(&spec_registry);
+            let tx = tx_hash.clone();
             let metrics = Arc::clone(&metrics);
-            let fit = fit.clone();
-            workers.push(std::thread::spawn(move || {
-                // warm-worker state: a grow-only device pool and a
-                // symbolic-reuse cache, both single-owner (no locks).
-                // Shard sub-jobs allocate through the same pool, so
-                // repeated sharded traffic runs warm per worker too.
-                let mut pool = DevicePool::new();
-                let mut cache = PatternCache::new(WORKER_CACHE_PATTERNS);
-                let cfg = OpSparseConfig::default();
-                loop {
-                    let msg = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
+            let stop = Arc::clone(&monitor_stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(SPECULATION_TICK);
+                    let live: Vec<Arc<ShardBarrier>> = {
+                        let mut g = reg.lock().unwrap_or_else(|e| e.into_inner());
+                        g.retain(|w| w.strong_count() > 0);
+                        g.iter().filter_map(Weak::upgrade).collect()
                     };
-                    match msg {
-                        Ok(WorkerMsg::RunShard(task)) => {
-                            // one shard of a sharded parent: slice the row
-                            // range, run the full pipeline, report to the
-                            // reassembly barrier. The pattern cache IS
-                            // consulted, with shard-aware keys
-                            // `(fingerprint(A[lo..hi]), fingerprint(B))`,
-                            // so repeated sharded traffic (AMG re-setup)
-                            // replays each shard's symbolic phase. A
-                            // panicking shard (poisoned rows reachable
-                            // only from this shard's slice) must cost the
-                            // parent job, not this worker thread.
-                            metrics.observe_shard_subjob(worker_id);
-                            let pool_before = pool.stats();
-                            let result = std::panic::catch_unwind(
-                                std::panic::AssertUnwindSafe(|| {
-                                    let a_s = row_slice(&task.a, task.lo, task.hi)?;
-                                    let key = (a_s.pattern_fingerprint(), task.b_fp);
-                                    let reuse = cache.lookup(key);
-                                    if reuse.is_some() {
-                                        metrics
-                                            .shard_sym_cache_hits
-                                            .fetch_add(1, Ordering::Relaxed);
-                                    } else {
-                                        metrics
-                                            .shard_sym_cache_misses
-                                            .fetch_add(1, Ordering::Relaxed);
-                                    }
-                                    let out = multiply_reuse(
-                                        &a_s,
-                                        &task.b,
-                                        &cfg,
-                                        Some(&mut pool),
-                                        reuse.as_deref(),
-                                    )?;
-                                    if reuse.is_none() {
-                                        cache.insert(
-                                            key,
-                                            Arc::new(SymbolicReuse::from_output(&out)),
-                                        );
-                                    }
-                                    Ok(out)
-                                }),
-                            );
-                            let r = match result {
-                                Ok(r) => r,
-                                Err(_) => Err(anyhow::anyhow!(
-                                    "shard {} panicked (poisoned input or internal bug)",
-                                    task.shard
-                                )),
+                    for barrier in live {
+                        for plan in barrier.stragglers() {
+                            metrics.speculative_launches.fetch_add(1, Ordering::Relaxed);
+                            let task = ShardTask {
+                                barrier: Arc::clone(&barrier),
+                                shard: plan.shard,
+                                lo: plan.lo,
+                                hi: plan.hi,
+                                a: plan.a,
+                                b: plan.b,
+                                b_fp: plan.b_fp,
+                                measure: plan.measure,
+                                attempts: 0,
+                                speculative: true,
                             };
-                            metrics.observe_pool(&pool.stats().delta_since(&pool_before));
-                            // measured per-shard device time for the
-                            // execution history: the simulator plays the
-                            // role CUDA events would on hardware. A
-                            // symbolic-cache-warm shard's trace has no
-                            // symbolic ops, so its time is incomparable
-                            // with a cold shard's — report nothing and
-                            // let the barrier drop the mixed
-                            // observation (only homogeneous all-cold
-                            // runs update the plan history, which also
-                            // keeps the measurement independent of
-                            // which worker's cache a shard landed on).
-                            let shard_ns = match (&r, task.measure) {
-                                (Ok(out), true) if !out.symbolic_skipped => {
-                                    Some(simulate(&out.trace, &V100).total_ns)
-                                }
-                                _ => None,
-                            };
-                            task.barrier.complete(task.shard, r, shard_ns);
-                        }
-                        Ok(WorkerMsg::Run(job, _, t0)) => {
-                            run_hash_job(
-                                job,
-                                t0,
-                                &mut pool,
-                                &mut cache,
-                                &cfg,
-                                fit.as_ref(),
-                                &metrics,
-                                &tx_res,
-                            );
-                        }
-                        Ok(WorkerMsg::RunBatch(jobs, t0)) => {
-                            // one worker visit, many members: each runs
-                            // the identical singleton path against this
-                            // worker's pool and cache, so a batch's
-                            // results match one-at-a-time submission
-                            // bit for bit while repeated patterns warm
-                            // the same cache within the visit
-                            for job in jobs {
-                                run_hash_job(
-                                    job,
-                                    t0,
-                                    &mut pool,
-                                    &mut cache,
-                                    &cfg,
-                                    fit.as_ref(),
-                                    &metrics,
-                                    &tx_res,
-                                );
+                            if tx.send(WorkerMsg::RunShard(task)).is_err() {
+                                return;
                             }
                         }
-                        Ok(WorkerMsg::Stop) | Err(_) => break,
                     }
                 }
-            }));
-        }
+            })
+        });
 
         let tx_block = engine_factory.map(|factory| {
             let (tx_block, rx_block) = mpsc::channel::<WorkerMsg>();
@@ -379,7 +634,7 @@ impl Coordinator {
                 };
                 loop {
                     match rx_block.recv() {
-                        Ok(WorkerMsg::Run(job, _, t0)) => {
+                        Ok(WorkerMsg::Run(job, _, t0, _)) => {
                             // guard the stats assert: a force-routed job
                             // with mismatched dims must fail via the
                             // engine's error, not panic this thread
@@ -412,6 +667,11 @@ impl Coordinator {
             rx_results,
             tx_results,
             workers,
+            replacements,
+            monitor,
+            monitor_stop,
+            speculate,
+            spec_registry,
             router,
             replan,
             history,
@@ -440,7 +700,7 @@ impl Coordinator {
         match route {
             Route::Hash => {
                 self.metrics.hash_routed.fetch_add(1, Ordering::Relaxed);
-                self.tx_hash.send(WorkerMsg::Run(job, route, t0)).expect("hash workers alive");
+                self.tx_hash.send(WorkerMsg::Run(job, route, t0, 0)).expect("hash workers alive");
             }
             Route::Sharded { n_devices } => {
                 // split into per-shard sub-jobs that fan out across the
@@ -513,7 +773,7 @@ impl Coordinator {
                     ranges: (0..n).map(|s| plan.range(s)).collect(),
                 });
                 let measure = feedback.is_some();
-                let barrier = Arc::new(ShardBarrier::new(
+                let mut barrier = ShardBarrier::new(
                     job.id,
                     route,
                     n,
@@ -523,7 +783,28 @@ impl Coordinator {
                     Arc::clone(&self.metrics),
                     t0,
                     feedback,
-                ));
+                );
+                if self.speculate.enabled {
+                    // attach the operand handles the monitor needs to
+                    // relaunch a lagging shard (stored on the barrier,
+                    // not the tasks — tasks own the barrier, and a
+                    // barrier owning its tasks would be an Arc cycle)
+                    barrier.set_speculation(SpeculationState {
+                        cfg: self.speculate,
+                        a: Arc::clone(&a),
+                        b: Arc::clone(&b),
+                        b_fp,
+                        measure,
+                        ranges: (0..n).map(|s| plan.range(s)).collect(),
+                    });
+                }
+                let barrier = Arc::new(barrier);
+                if self.speculate.enabled {
+                    self.spec_registry
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .push(Arc::downgrade(&barrier));
+                }
                 for s in 0..n {
                     let (lo, hi) = plan.range(s);
                     self.tx_hash
@@ -536,6 +817,8 @@ impl Coordinator {
                             b: Arc::clone(&b),
                             b_fp,
                             measure,
+                            attempts: 0,
+                            speculative: false,
                         }))
                         .expect("hash workers alive");
                 }
@@ -544,7 +827,7 @@ impl Coordinator {
                 self.metrics.block_routed.fetch_add(1, Ordering::Relaxed);
                 match &self.tx_block {
                     Some(tx) => {
-                        tx.send(WorkerMsg::Run(job, route, t0)).expect("block worker alive")
+                        tx.send(WorkerMsg::Run(job, route, t0, 0)).expect("block worker alive")
                     }
                     None => finish(
                         &self.metrics,
@@ -580,7 +863,7 @@ impl Coordinator {
         self.metrics.hash_routed.fetch_add(n, Ordering::Relaxed);
         self.metrics.batches.fetch_add(1, Ordering::Relaxed);
         self.metrics.batched_jobs.fetch_add(n, Ordering::Relaxed);
-        self.tx_hash.send(WorkerMsg::RunBatch(jobs, t0)).expect("hash workers alive");
+        self.tx_hash.send(WorkerMsg::RunBatch(jobs, t0, 0)).expect("hash workers alive");
     }
 
     /// Receive the next completed job (blocking).
@@ -601,7 +884,25 @@ impl Coordinator {
     /// in-flight shard barriers drain to completion before the workers
     /// exit — shutdown never strands a parent job behind a half-done
     /// barrier.
+    ///
+    /// Ordering matters with speculation and chaos on:
+    /// 1. The speculation monitor is stopped and joined **first**, so no
+    ///    backup sub-job can land behind the Stop markers (it would be
+    ///    dropped unexecuted, which is harmless — the primary chain still
+    ///    resolves the shard — but pointless).
+    /// 2. Exactly `n` Stop markers suffice even under chaos kills,
+    ///    because every death spawns exactly one replacement: the live
+    ///    fleet width is always `n`.
+    /// 3. Replacement handles are drained pop-until-empty *after* the
+    ///    original handles join. A dying worker pushes its replacement's
+    ///    handle before its own thread exits, so once all original
+    ///    threads (and transitively their replacements) have returned,
+    ///    the registry cannot grow again — the drain terminates.
     pub fn shutdown(self) {
+        self.monitor_stop.store(true, Ordering::Relaxed);
+        if let Some(m) = self.monitor {
+            let _ = m.join();
+        }
         for _ in &self.workers {
             let _ = self.tx_hash.send(WorkerMsg::Stop);
         }
@@ -610,6 +911,15 @@ impl Coordinator {
         }
         for w in self.workers {
             let _ = w.join();
+        }
+        loop {
+            let h = self.replacements.lock().unwrap_or_else(|e| e.into_inner()).pop();
+            match h {
+                Some(h) => {
+                    let _ = h.join();
+                }
+                None => break,
+            }
         }
     }
 }

@@ -33,6 +33,10 @@ pub struct Timeline {
     /// Total busy ns per SM (load-balance metric, §6.3.4).
     pub sm_busy_ns: Vec<f64>,
     pub total_ns: f64,
+    /// Externally injected straggler delay folded into `total_ns`
+    /// (chaos harness; 0 on every real simulation). Kept separate so
+    /// consumers can recover the undelayed makespan.
+    pub injected_delay_ns: f64,
 }
 
 /// Union length of a set of `[start, end)` intervals.
@@ -113,6 +117,16 @@ impl Timeline {
             .filter(|h| h.what.starts_with("cudaMalloc") || h.what.starts_with("cudaFree"))
             .map(|h| h.end - h.start)
             .sum()
+    }
+
+    /// Fold an externally injected delay (a chaos-harness straggler)
+    /// into the makespan. The per-shard timing view and the feedback
+    /// history both read `total_ns`, so an injected delay makes the
+    /// shard *look* slow exactly the way a real straggler would — which
+    /// is what lets speculation react to it.
+    pub fn inject_delay(&mut self, ns: f64) {
+        self.injected_delay_ns += ns;
+        self.total_ns += ns;
     }
 
     /// GFLOPS given a FLOP count (the paper's metric: 2·n_prod / time).
@@ -303,6 +317,7 @@ mod tests {
             host: vec![],
             sm_busy_ns: vec![],
             total_ns: 30.0,
+            injected_delay_ns: 0.0,
         };
         assert_eq!(tl.step_ns("symbolic"), 10.0);
         assert_eq!(tl.step_ns("numeric"), 20.0);
@@ -324,6 +339,7 @@ mod tests {
             host: vec![HostSpan { what: "cudaMalloc(x, 4B)".into(), step: "setup", start: 0.0, end: 50.0 }],
             sm_busy_ns: vec![],
             total_ns: 100.0,
+            injected_delay_ns: 0.0,
         };
         let g = tl.render_gantt(40);
         assert!(g.contains("k [numeric]"));
@@ -347,6 +363,16 @@ mod tests {
         let diagram = lanes.render(30);
         assert!(diagram.contains("XFER"));
         assert!(diagram.contains("dev0"));
+    }
+
+    #[test]
+    fn injected_delay_extends_the_makespan_and_is_recoverable() {
+        let mut tl = Timeline { total_ns: 100.0, ..Default::default() };
+        tl.inject_delay(40.0);
+        tl.inject_delay(10.0);
+        assert_eq!(tl.total_ns, 150.0);
+        assert_eq!(tl.injected_delay_ns, 50.0);
+        assert_eq!(tl.total_ns - tl.injected_delay_ns, 100.0);
     }
 
     #[test]

@@ -4,18 +4,22 @@
 //! * `gen --name <matrix> [--scale s] [--out f.mtx]` — emit a suite matrix
 //! * `spgemm --a f.mtx [--b g.mtx] [--lib L] [--verify]` — one multiply
 //! * `suite [--scale s] [--verify]` — all 26 matrices, all libraries
-//! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|all>`
+//! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|chaos|all>`
 //!   (`bench shards` takes `--interconnect pcie|nvlink|none`,
 //!   `--overlap on|off`, `--chunk-kb <KiB>`, `--json <path>`,
 //!   `--overlap-json <path>`, `--replan on|off`, and
 //!   `--adaptive-json <path>`; `bench serve` takes `--jobs n` and
-//!   `--json <path>`)
+//!   `--json <path>`; `bench chaos` takes `--jobs n`, `--chaos-seed n`,
+//!   and `--json <path>`)
 //! * `serve [--jobs n] [--workers w] [--coalesce on|off] [--batch on|off]
 //!   [--batch-max n] [--batch-age-ms n] [--queue-cap n] [--inflight n]
 //!   [--persist on|off|path] [--replan on|off] [--history-cap n]
-//!   [--overlap on|off] [--chunk-kb n] [--interconnect pcie|nvlink|none]`
+//!   [--overlap on|off] [--chunk-kb n] [--interconnect pcie|nvlink|none]
+//!   [--speculate on|off] [--speculate-lag f]
+//!   [--chaos off|gentle|aggressive] [--chaos-seed n]`
 //!   — the serving front door (coalescing, batching, admission control,
-//!   warm-start persistence) over the coordinator
+//!   warm-start persistence, straggler speculation, fault injection)
+//!   over the coordinator
 //! * `sim-case webbase` — §6.3.4 / §6.3.5 case-study timeline
 //!
 //! Offline build: argument parsing is hand-rolled (no clap in the vendor
@@ -233,6 +237,21 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
                 opsparse::bench::write_serve_json(path, &report)?;
             }
         }
+        "chaos" => {
+            let jobs = flags.get("jobs").map(|s| s.parse()).transpose()?.unwrap_or(24);
+            let seed = flags
+                .get("chaos-seed")
+                .map(|s| s.parse::<u64>())
+                .transpose()
+                .context("--chaos-seed <u64>")?
+                .unwrap_or(opsparse::bench::chaos_bench::DEFAULT_CHAOS_SEED);
+            let report = opsparse::bench::chaos_bench::chaos_fleet(jobs, seed)?;
+            // --json wins over the env path, matching the serve bench
+            let env_path = std::env::var("OPSPARSE_BENCH_JSON_CHAOS").ok();
+            if let Some(path) = flags.get("json").map(String::as_str).or(env_path.as_deref()) {
+                opsparse::bench::write_chaos_json(path, &report)?;
+            }
+        }
         "all" => {
             tables::table1();
             tables::table2();
@@ -278,6 +297,23 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         cfg.replan.history_cap,
         if cfg.overlap.enabled { "on" } else { "off" },
         cfg.overlap.chunk_bytes / 1024
+    );
+    println!(
+        "speculate: {} (lag ×{:.1}); chaos: {}",
+        if cfg.speculate.enabled { "on" } else { "off" },
+        cfg.speculate.lag_factor,
+        if cfg.chaos.is_off() {
+            "off".to_string()
+        } else {
+            format!(
+                "on (kill {:.2}, delay {}..{} ns, shrink {:.2}, seed {})",
+                cfg.chaos.kill_prob,
+                cfg.chaos.delay_ns_range.0,
+                cfg.chaos.delay_ns_range.1,
+                cfg.chaos.mem_pressure,
+                cfg.chaos.seed
+            )
+        }
     );
     let factory: Option<opsparse::coordinator::service::EngineFactory> = if use_engine {
         Some(Box::new(|| {
@@ -399,15 +435,18 @@ fn usage() -> ! {
            gen      --name <matrix> [--scale tiny|small|medium] [--out f.mtx]\n\
            spgemm   --a f.mtx [--b g.mtx] [--lib opsparse|nsparse|speck|cusparse] [--verify]\n\
            suite    [--scale s] [--verify]\n\
-           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|all> [--scale s]\n\
+           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|chaos|all> [--scale s]\n\
                     shards also takes [--interconnect pcie|nvlink|none] [--overlap on|off]\n\
                     [--chunk-kb n] [--json out.json] [--overlap-json out.json]\n\
                     [--replan on|off] [--adaptive-json out.json]\n\
                     serve also takes [--jobs n] [--json out.json]\n\
+                    chaos also takes [--jobs n] [--chaos-seed n] [--json out.json]\n\
            serve    [--jobs n] [--workers w] [--no-engine] [--coalesce on|off]\n\
                     [--batch on|off] [--batch-max n] [--batch-age-ms n] [--queue-cap n]\n\
                     [--inflight n] [--persist on|off|path] [--replan on|off] [--history-cap n]\n\
                     [--overlap on|off] [--chunk-kb n] [--interconnect pcie|nvlink|none]\n\
+                    [--speculate on|off] [--speculate-lag f] [--chaos off|gentle|aggressive]\n\
+                    [--chaos-seed n]\n\
            sim-case webbase [--scale s]\n\
            list     (suite matrix names)"
     );

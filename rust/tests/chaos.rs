@@ -1,0 +1,251 @@
+//! The chaos harness proves the failure-domain contract: under
+//! deterministic fault injection (worker kills, straggler delays, pool
+//! teardowns) every submitted job either completes **bit-identically**
+//! to the undisturbed reference or returns a clean typed error — never a
+//! hang, never a torn stitch — and the same `ChaosConfig.seed`
+//! reproduces the same kill/delay schedule and the same metrics
+//! snapshot.
+//!
+//! Every receive in this file goes through a hang guard
+//! (`recv_timeout`): a test that would hang instead fails loudly with
+//! the case that stranded its parent job.
+
+use opsparse::coordinator::barrier::SpeculateConfig;
+use opsparse::coordinator::chaos::ChaosConfig;
+use opsparse::coordinator::feedback::ReplanConfig;
+use opsparse::coordinator::{Coordinator, Job, Route, Router};
+use opsparse::gen::banded::Banded;
+use opsparse::gen::powerlaw::PowerLaw;
+use opsparse::gen::stencil::{Grid, Stencil};
+use opsparse::gen::uniform::Uniform;
+use opsparse::sparse::Csr;
+use opsparse::spgemm::reference::spgemm_reference;
+use opsparse::util::prop::check;
+use opsparse::util::rng::Rng;
+use std::time::Duration;
+
+/// Per-receive hang guard: generous enough for a CI box under load,
+/// small enough that a stranded parent fails the suite instead of
+/// timing it out.
+const HANG_GUARD: Duration = Duration::from_secs(60);
+
+/// The four generator families of the property suite — one blocky, one
+/// banded, one skewed with a giant row, one regular stencil, so the
+/// shard cuts the chaos interleaves with range from trivial to lopsided.
+fn family_matrix(family: usize, n: usize, rng: &mut Rng) -> Csr {
+    match family % 4 {
+        0 => Uniform { n, per_row: 6, jitter: 3 }.generate(rng),
+        1 => Banded { n, per_row: 8, band: 12, contiguous_frac: 0.8 }.generate(rng),
+        2 => PowerLaw {
+            n,
+            alpha: 2.2,
+            max_row: 40,
+            mean_row: 5.0,
+            hub_frac: 0.2,
+            forced_giant_rows: 1,
+        }
+        .generate(rng),
+        _ => Stencil { n, grid: Grid::D2, reach: 2, keep: 0.9, diagonal: true }.generate(rng),
+    }
+}
+
+fn coordinator_under_chaos(workers: usize, speculate: SpeculateConfig, chaos: ChaosConfig) -> Coordinator {
+    Coordinator::start_full(
+        workers,
+        Router::default(),
+        None,
+        ReplanConfig::default(),
+        speculate,
+        chaos,
+    )
+}
+
+/// Satellite property suite: any (chaos seed × preset × generator
+/// family × shard count) yields a bit-identical result or a clean typed
+/// error — never a hang, never a torn stitch — with speculation ON so
+/// backups race primaries while workers die under them.
+#[test]
+fn any_seed_preset_family_shards_is_bitwise_or_typed_error() {
+    check(
+        "chaos-bitwise-or-error",
+        24,
+        260,
+        |rng: &mut Rng, size| {
+            let preset = rng.below(2); // 0 = gentle, 1 = aggressive
+            let family = rng.below(4) as usize;
+            let shards = 1usize << rng.below(4); // 1 | 2 | 4 | 8
+            let chaos_seed = rng.next_u64();
+            let mat_seed = rng.next_u64();
+            let n = rng.range(40, size.max(41));
+            (preset, family, shards, chaos_seed, mat_seed, n)
+        },
+        |&(preset, family, shards, chaos_seed, mat_seed, n)| {
+            let cfg = if preset == 0 {
+                ChaosConfig::gentle().with_seed(chaos_seed)
+            } else {
+                ChaosConfig::aggressive().with_seed(chaos_seed)
+            };
+            let a = family_matrix(family, n, &mut Rng::new(mat_seed));
+            let gold = spgemm_reference(&a, &a);
+            let coord = coordinator_under_chaos(3, SpeculateConfig::on(), cfg);
+            coord.submit(Job {
+                id: 1,
+                a: a.clone(),
+                b: a,
+                force_route: Some(Route::Sharded { n_devices: shards }),
+            });
+            let verdict = match coord.recv_timeout(HANG_GUARD) {
+                None => Err("parent job hung: no result within the guard".to_string()),
+                Some(r) => match r.c {
+                    Ok(c) if c == gold => Ok(()),
+                    Ok(_) => Err("torn stitch: completed result diverged from reference".into()),
+                    // a clean typed error is an allowed outcome under
+                    // chaos (retry budget exhaustion)
+                    Err(_) => Ok(()),
+                },
+            };
+            coord.shutdown();
+            verdict
+        },
+    );
+}
+
+/// Satellite determinism test: the same `ChaosConfig.seed` reproduces
+/// the same kill/delay schedule — same per-job outcomes bitwise and the
+/// same failure-domain metrics. One worker and sequential submits pin
+/// the message order; speculation stays off so the monitor's wall-clock
+/// sampling cannot add schedule-dependent launches.
+#[test]
+fn same_chaos_seed_reproduces_the_same_schedule_and_metrics() {
+    let run = || {
+        let a = Uniform { n: 220, per_row: 6, jitter: 3 }.generate(&mut Rng::new(9));
+        let coord = coordinator_under_chaos(
+            1,
+            SpeculateConfig::default(),
+            ChaosConfig::aggressive().with_seed(42),
+        );
+        let mut outcomes: Vec<Result<Csr, String>> = Vec::new();
+        for id in 0..6u64 {
+            let route = if id % 2 == 0 {
+                Some(Route::Sharded { n_devices: 2 })
+            } else {
+                Some(Route::Hash)
+            };
+            coord.submit(Job { id, a: a.clone(), b: a.clone(), force_route: route });
+            let r = coord.recv_timeout(HANG_GUARD).expect("no hang under seeded chaos");
+            assert_eq!(r.id, id, "sequential submits report in order");
+            outcomes.push(r.c.map_err(|e| format!("{e:#}")));
+        }
+        let snap = coord.metrics.snapshot();
+        coord.shutdown();
+        (outcomes, snap)
+    };
+    let (out1, snap1) = run();
+    let (out2, snap2) = run();
+    assert_eq!(out1, out2, "same seed, same per-job outcomes (bitwise results, same errors)");
+    assert_eq!(
+        (snap1.worker_deaths, snap1.requeued_shards, snap1.requeued_jobs),
+        (snap2.worker_deaths, snap2.requeued_shards, snap2.requeued_jobs),
+        "same kill schedule"
+    );
+    assert_eq!(
+        (snap1.chaos_delays, snap1.chaos_pool_shrinks),
+        (snap2.chaos_delays, snap2.chaos_pool_shrinks),
+        "same delay/teardown schedule"
+    );
+    assert_eq!(
+        (snap1.jobs_completed, snap1.jobs_failed),
+        (snap2.jobs_completed, snap2.jobs_failed),
+        "same verdicts"
+    );
+    // aggressive delays are drawn from (0, 2ms) at every boundary, so a
+    // schedule that injects nothing at all means injection is broken
+    assert!(
+        snap1.chaos_delays > 0,
+        "aggressive chaos must have injected faults (the schedule is live, not a no-op)"
+    );
+}
+
+/// Under `gentle` chaos a recoverable worker death must never surface
+/// to a parent: requeue absorbs every kill (budget exhaustion needs
+/// `MAX_REQUEUES` consecutive deaths on one chain, p ≈ 0.02⁶), so the
+/// whole load completes bit-identically.
+#[test]
+fn gentle_chaos_with_speculation_completes_everything_bit_identically() {
+    let a = Uniform { n: 300, per_row: 6, jitter: 3 }.generate(&mut Rng::new(11));
+    let gold = spgemm_reference(&a, &a);
+    let jobs = 12u64;
+    let coord = coordinator_under_chaos(
+        3,
+        SpeculateConfig::on(),
+        ChaosConfig::gentle().with_seed(7),
+    );
+    for id in 0..jobs {
+        coord.submit(Job {
+            id,
+            a: a.clone(),
+            b: a.clone(),
+            force_route: Some(Route::Sharded { n_devices: 4 }),
+        });
+    }
+    for _ in 0..jobs {
+        let r = coord.recv_timeout(HANG_GUARD).expect("no hang under gentle chaos");
+        let c = r.c.unwrap_or_else(|e| panic!("job {} failed under gentle chaos: {e:#}", r.id));
+        assert_eq!(c, gold, "job {}: stitched result must be bit-identical", r.id);
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_completed, jobs);
+    assert_eq!(snap.jobs_failed, 0, "gentle kills are absorbed by requeue, never surfaced");
+    coord.shutdown();
+}
+
+/// Under `aggressive` chaos every parent still resolves exactly once:
+/// completions are bit-identical, failures carry the typed
+/// retry-budget error, and nothing hangs — while workers demonstrably
+/// die under the load.
+#[test]
+fn aggressive_chaos_never_hangs_and_survivors_are_bit_identical() {
+    let a = Uniform { n: 300, per_row: 6, jitter: 3 }.generate(&mut Rng::new(13));
+    let gold = spgemm_reference(&a, &a);
+    let jobs = 16u64;
+    let coord = coordinator_under_chaos(
+        4,
+        SpeculateConfig::on(),
+        ChaosConfig::aggressive().with_seed(1),
+    );
+    for id in 0..jobs {
+        coord.submit(Job {
+            id,
+            a: a.clone(),
+            b: a.clone(),
+            force_route: Some(Route::Sharded { n_devices: 4 }),
+        });
+    }
+    let mut resolved = 0u64;
+    for _ in 0..jobs {
+        let r = coord
+            .recv_timeout(HANG_GUARD)
+            .expect("every parent resolves under aggressive chaos — no hangs");
+        resolved += 1;
+        match r.c {
+            Ok(c) => assert_eq!(c, gold, "job {}: survivor must be bit-identical", r.id),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("retry budget exhausted"),
+                    "job {}: failure must be the typed requeue-exhaustion error, got: {msg}",
+                    r.id
+                );
+            }
+        }
+    }
+    assert_eq!(resolved, jobs);
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_completed + snap.jobs_failed, jobs, "exactly one verdict per parent");
+    assert!(
+        snap.worker_deaths > 0,
+        "a 25% kill rate over {} sub-job boundaries fires with near certainty",
+        jobs * 4
+    );
+    coord.shutdown();
+}

@@ -269,6 +269,52 @@ fn shutdown_with_in_flight_shard_barriers_drains_cleanly() {
 }
 
 #[test]
+fn poisoned_batch_member_fails_alone_and_siblings_match_solo_runs() {
+    // the whole per-job body of a batch member runs under the worker's
+    // panic guard: a poisoned member fails its own JobResult and nothing
+    // else — siblings in the same batch complete bitwise-identically to
+    // solo submissions, and the worker survives for follow-up traffic
+    let n = 200;
+    let a = Csr::identity(n);
+    let solo = {
+        let coord = Coordinator::start(1, Router::default(), None);
+        coord.submit(Job {
+            id: 0,
+            a: a.clone(),
+            b: a.clone(),
+            force_route: Some(Route::Hash),
+        });
+        let c = coord.recv().unwrap().c.expect("healthy solo run");
+        coord.shutdown();
+        c
+    };
+    let coord = Coordinator::start(1, Router::default(), None);
+    coord.submit_batch(vec![
+        Job { id: 10, a: a.clone(), b: a.clone(), force_route: None },
+        Job { id: 11, a: a.clone(), b: poisoned_b(n, 150), force_route: None },
+        Job { id: 12, a: a.clone(), b: a.clone(), force_route: None },
+    ]);
+    // one worker executes batch members sequentially, so results arrive
+    // in member order
+    let r10 = coord.recv().expect("member 0 reports");
+    let r11 = coord.recv().expect("member 1 reports even when poisoned");
+    let r12 = coord.recv().expect("member 2 survives its poisoned predecessor");
+    assert_eq!((r10.id, r11.id, r12.id), (10, 11, 12));
+    assert!(r11.c.is_err(), "the poisoned member must fail alone");
+    assert_eq!(r10.c.unwrap(), solo, "sibling before the poison is bitwise-identical to solo");
+    assert_eq!(r12.c.unwrap(), solo, "sibling after the poison is bitwise-identical to solo");
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_failed, 1);
+    assert_eq!(snap.jobs_completed, 2);
+    assert_eq!(snap.batches, 1);
+    assert_eq!(snap.batched_jobs, 3);
+    // the worker (pool + cache included) is untouched by the panic
+    coord.submit(Job { id: 13, a: a.clone(), b: a.clone(), force_route: None });
+    assert!(coord.recv().unwrap().c.is_ok(), "worker survives a poisoned batch member");
+    coord.shutdown();
+}
+
+#[test]
 fn extreme_value_magnitudes_survive() {
     let a = Csr::from_parts(
         2,

@@ -227,6 +227,60 @@ fn persistence_round_trip_restores_fit_and_routes_warm_patterns_identically() {
 }
 
 #[test]
+fn corrupt_persist_state_costs_only_the_warmth_never_a_panic() {
+    // a truncated or garbage state file (crash mid-save, stale format,
+    // disk corruption) must yield a clean cold start: Serve::start
+    // succeeds, the first submit of the formerly-warm pattern is a cold
+    // miss exactly as with no file at all, and nothing panics
+    let path = std::env::temp_dir()
+        .join(format!("opsparse-serve-corrupt-{}.state", std::process::id()));
+    let path_s = path.to_string_lossy().into_owned();
+    let _ = std::fs::remove_file(&path);
+    let mk_cfg = || {
+        let mut c = ServeConfig::default();
+        c.workers = 2;
+        c.ns_per_prod = Some(1.0);
+        c.persist = Some(path_s.clone());
+        c.device_memory_bytes = 4096; // warm pattern lives on the sharded route
+        c.max_devices = 4;
+        c.interconnect = None;
+        c
+    };
+    let a = mat(300, 6, 21);
+    let serve = Serve::start(mk_cfg()).unwrap();
+    for _ in 0..2 {
+        assert!(serve.submit("t", a.clone(), a.clone()).wait().csr().is_some());
+    }
+    serve.shutdown();
+    let full = std::fs::read_to_string(&path).expect("shutdown persisted the warm state");
+
+    // shape 1: truncation mid-save — the last line loses its final
+    // field, which the loud parser must reject
+    let cut = full.rfind(' ').unwrap();
+    std::fs::write(&path, &full[..cut]).unwrap();
+    let serve2 = Serve::start(mk_cfg()).expect("a truncated state file must not refuse to serve");
+    assert!(serve2.submit("t", a.clone(), a.clone()).wait().csr().is_some());
+    assert_eq!(
+        serve2.metrics_snapshot().replan_cold_misses,
+        1,
+        "truncated state behaves exactly like no state file: the warm pattern plans cold"
+    );
+    serve2.shutdown();
+
+    // shape 2: garbage bytes (wrong header, binary junk)
+    std::fs::write(&path, b"\x00\x01\x7fnot a state file\xff\xfe").unwrap();
+    let serve3 = Serve::start(mk_cfg()).expect("a garbage state file must not refuse to serve");
+    assert!(serve3.submit("t", a.clone(), a.clone()).wait().csr().is_some());
+    assert_eq!(
+        serve3.metrics_snapshot().replan_cold_misses,
+        1,
+        "garbage state behaves exactly like no state file"
+    );
+    serve3.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
 fn all_knobs_off_reproduces_the_raw_coordinator_exactly() {
     let mut cfg = base_cfg();
     cfg.coalesce = false;
@@ -271,6 +325,17 @@ fn all_knobs_off_reproduces_the_raw_coordinator_exactly() {
     assert_eq!(s.rejected_jobs, 0);
     assert_eq!(s.batches, 0);
     assert_eq!(s.batched_jobs, 0);
+    // …including the failure-domain machinery (`--speculate off
+    // --chaos off` is the default): no backups, no injected faults
+    for snap in [&s, &r] {
+        assert_eq!(snap.speculative_launches, 0);
+        assert_eq!(snap.speculative_wins, 0);
+        assert_eq!(snap.requeued_shards, 0);
+        assert_eq!(snap.requeued_jobs, 0);
+        assert_eq!(snap.worker_deaths, 0);
+        assert_eq!(snap.chaos_delays, 0);
+        assert_eq!(snap.chaos_pool_shrinks, 0);
+    }
     serve.shutdown();
     coord.shutdown();
 }
