@@ -9,11 +9,19 @@
 //! * `OPSPARSE_CHAOS_SEED=<n>` — root seed of the kill/delay schedule
 //!   (default `chaos_bench::DEFAULT_CHAOS_SEED`)
 //! * `OPSPARSE_BENCH_JSON_CHAOS=<path>` — record the report as JSON; CI
-//!   writes `BENCH_chaos.json` this way and blocks on: gentle rows
-//!   complete 100%, every row bit-identical, no hangs.
+//!   writes `BENCH_chaos.json` this way and blocks on: the embedded
+//!   exact-binomial completion gate (gentle-preset completions pooled
+//!   across adaptively many seeded repetitions, tested against
+//!   `GENTLE_COMPLETION_P0`), every row bit-identical, no hangs.
+//! * `OPSPARSE_STAT_{MIN_REPS,MAX_REPS,REL_HW,ALPHA}` — statistical
+//!   runner knobs (see `util::stats::AdaptiveConfig::from_env`).
 //!
 //! The bench itself enforces the hard contracts too, so a plain
-//! `cargo bench --bench chaos_fleet` fails loudly without CI.
+//! `cargo bench --bench chaos_fleet` fails loudly without CI. Completion
+//! is a hypothesis test, not a 100%-or-bust point check: one unlucky
+//! kill streak at the root seed triggers extra derived-seed repetitions
+//! instead of a flaky failure, while a genuinely broken requeue path
+//! keeps failing with any amount of added evidence.
 
 use opsparse::bench::{chaos_bench, write_chaos_json};
 
@@ -44,17 +52,20 @@ fn main() {
             "{} (speculate {}): every parent must resolve exactly once",
             row.preset, row.speculate
         );
-        if row.preset == "gentle" {
-            // rare kills must always be absorbed by requeue (budget
-            // exhaustion needs MAX_REQUEUES consecutive deaths on one
-            // chain, p ≈ 0.02⁶) — anything less is a recoverable death
-            // taking down a parent
-            assert_eq!(
-                row.completed, row.jobs as u64,
-                "gentle chaos (speculate {}) must complete 100%, got {}/{}",
-                row.speculate, row.completed, row.jobs
-            );
-        }
+    }
+    for g in &report.gates {
+        assert!(
+            g.pass,
+            "{}: completion rate significantly below p0 \
+             (p={:.4} < alpha={}, observed {:.4} vs p0 {:.4}, {}/{} pooled)",
+            g.name,
+            g.p,
+            g.alpha,
+            g.candidate_mean,
+            g.reference_mean,
+            report.gentle_completed,
+            report.gentle_total
+        );
     }
     if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON_CHAOS") {
         write_chaos_json(&path, &report).expect("write chaos json");

@@ -1,0 +1,64 @@
+//! `cargo bench --bench corpus` — the real-matrix Matrix Market corpus
+//! through the full stack: every checked-in `.mtx` fixture plus the
+//! synthesized large regimes runs pipeline (reference-verified), the
+//! `cusparse_like` baseline, the corpus router, sharded execution, and
+//! the serve front door, recording per-matrix speedup, route, bin-range
+//! occupancy, and makespan.
+//!
+//! Env:
+//! * `OPSPARSE_CORPUS_DIR=<dir>` — fixture directory (default: first of
+//!   `corpus/`, `rust/corpus/`, `../corpus/` that exists)
+//! * `OPSPARSE_BENCH_JSON_CORPUS=<path>` — record the report as JSON; CI
+//!   writes `BENCH_corpus.json` this way and blocks on: at least
+//!   `MIN_REAL_FIXTURES` checked-in fixtures, every matrix bit-identical
+//!   across the unsharded/sharded/serve paths, an mmio round trip and a
+//!   finite positive speedup per matrix.
+//!
+//! The bench itself enforces the same contracts, so a plain
+//! `cargo bench --bench corpus` fails loudly without CI.
+
+use opsparse::bench::{corpus, write_corpus_json};
+
+fn main() {
+    let dir = corpus::resolve_corpus_dir(None);
+    println!("corpus bench: loading .mtx fixtures from {}", dir.display());
+    let report = corpus::run_corpus(&dir).expect("corpus bench");
+    for r in &report.rows {
+        println!(
+            "  {:<22} {:<11} {:>10} speedup {:>6.2}x gflops {:>7.2} shard {} serve {} mmio {}",
+            r.name,
+            r.source,
+            r.route,
+            r.speedup_vs_cusparse,
+            r.gflops,
+            r.bit_identical_sharded,
+            r.bit_identical_serve,
+            r.mmio_roundtrip
+        );
+    }
+    println!(
+        "corpus: {} fixtures + {} synthesized, all_bit_identical {}",
+        report.fixtures, report.synthesized, report.all_bit_identical
+    );
+    assert!(
+        report.fixtures >= corpus::MIN_REAL_FIXTURES,
+        "corpus has {} checked-in fixtures, need at least {}",
+        report.fixtures,
+        corpus::MIN_REAL_FIXTURES
+    );
+    assert!(
+        report.all_bit_identical,
+        "a corpus matrix diverged across the unsharded/sharded/serve/mmio paths"
+    );
+    for r in &report.rows {
+        assert!(
+            r.speedup_vs_cusparse.is_finite() && r.speedup_vs_cusparse > 0.0,
+            "{}: degenerate speedup {}",
+            r.name,
+            r.speedup_vs_cusparse
+        );
+    }
+    if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON_CORPUS") {
+        write_corpus_json(&path, &report).expect("write corpus json");
+    }
+}

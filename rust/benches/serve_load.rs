@@ -9,13 +9,18 @@
 //! * `OPSPARSE_BENCH_SERVE_JOBS=<n>` — identical requests (default 32)
 //! * `OPSPARSE_BENCH_JSON_SERVE=<path>` — record the report as JSON; CI
 //!   writes `BENCH_serve.json` this way, next to the other `BENCH_*`
-//!   baselines, and blocks on: coalesced throughput ≥ uncoalesced,
-//!   `sym_executions == 1` and `coalesce_hits == jobs − 1` on the
-//!   coalesced row, bit-identical fan-out on both rows, and the
+//!   baselines, and blocks on: the embedded Welch-gate verdict (coalesced
+//!   throughput not significantly below uncoalesced over adaptively many
+//!   repetitions), `sym_executions == 1` and `coalesce_hits == jobs − 1`
+//!   on the coalesced row, bit-identical fan-out on both rows, and the
 //!   `persist_route_stable` / `baseline_match` verdicts.
+//! * `OPSPARSE_STAT_{MIN_REPS,MAX_REPS,REL_HW,ALPHA}` — statistical
+//!   runner knobs (see `util::stats::AdaptiveConfig::from_env`).
 //!
 //! The bench itself enforces the hard contracts too, so a plain
-//! `cargo bench --bench serve_load` fails loudly without CI.
+//! `cargo bench --bench serve_load` fails loudly without CI. The
+//! throughput comparison is a hypothesis test, not a point comparison —
+//! real wall clock is noisy, and a one-run flake must not fail the gate.
 
 use opsparse::bench::{serve_bench, write_serve_json};
 use opsparse::gen::suite::SuiteScale;
@@ -44,12 +49,14 @@ fn main() {
         report.jobs as u64 - 1,
         "every request after the leader must coalesce"
     );
-    assert!(
-        coalesced.throughput_jobs_per_s >= uncoalesced.throughput_jobs_per_s,
-        "coalesced throughput {:.1} jobs/s below uncoalesced {:.1} jobs/s",
-        coalesced.throughput_jobs_per_s,
-        uncoalesced.throughput_jobs_per_s
-    );
+    for g in &report.gates {
+        assert!(
+            g.pass,
+            "{}: candidate significantly worse than reference \
+             (p={:.4} < alpha={}, {:.1} vs {:.1} over {} reps)",
+            g.name, g.p, g.alpha, g.candidate_mean, g.reference_mean, g.reps_candidate
+        );
+    }
     assert!(report.persist_route_stable, "warm-start persistence round trip not route-stable");
     assert!(report.baseline_match, "all-knobs-off front door diverged from the raw coordinator");
     if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON_SERVE") {

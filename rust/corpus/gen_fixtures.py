@@ -1,0 +1,296 @@
+#!/usr/bin/env python3
+"""Deterministic generator for the checked-in Matrix Market corpus.
+
+The fixtures are hand-built stand-ins that mirror the *structure* of the
+SuiteSparse matrices the OpSparse paper evaluates (Table 3): banded FEM
+blocks, power-law webs, near-diagonal stencils, symmetric road graphs,
+skew-symmetric circuit couplings. They are deliberately tiny (nnz <= ~1000,
+max 12 nonzeros per row) so that the router's cheap working-set screen
+`base + 12*nnz(A)*max_row_nnz(B) <= budget` proves "no shard" under the
+corpus RouterConfig (256 KiB budget) and every route pin is deterministic.
+
+Regenerating: `python3 gen_fixtures.py` from this directory rewrites every
+fixture byte-identically (fixed LCG seed, no wall clock, no dict-order
+dependence). The printed table is the provenance table in ARCHITECTURE.md.
+
+Values are dyadic rationals (k/8) so text round-trips are exact in f64.
+"""
+
+import os
+
+T = 16  # router tile width (RouterConfig::t)
+
+
+class Lcg:
+    """Tiny deterministic PRNG (MMIX constants) so regeneration is stable."""
+
+    def __init__(self, seed):
+        self.s = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next(self):
+        self.s = (self.s * 6364136223846793005 + 1442695040888963407) & 0xFFFFFFFFFFFFFFFF
+        return self.s >> 33
+
+    def below(self, n):
+        return self.next() % n
+
+
+def dyadic(rng, signed=True):
+    v = (1 + rng.below(13)) / 8.0
+    if signed and rng.below(2) == 1:
+        v = -v
+    return v
+
+
+def fmt_real(v):
+    # exact decimal for dyadic k/8 values: at most 3 fractional digits
+    s = f"{v:.3f}".rstrip("0").rstrip(".")
+    return s if s not in ("", "-0") else "0"
+
+
+def distinct_tile_cols(rng, n, k, lo=0, hi=None, used_tiles=None):
+    """Pick k columns in [lo, hi) whose 16-wide tiles are pairwise distinct."""
+    hi = n if hi is None else hi
+    used = set() if used_tiles is None else used_tiles
+    avail = len({c // T for c in range(lo, hi)} - used)
+    k = min(k, avail)
+    cols = []
+    while len(cols) < k:
+        c = lo + rng.below(hi - lo)
+        t = c // T
+        if t in used:
+            continue
+        used.add(t)
+        cols.append(c)
+    return sorted(cols)
+
+
+def write_mtx(path, field, symmetry, n, entries, comments=(), interleave=False):
+    """entries: list of (row, col, value-or-None), 0-based; written 1-based."""
+    lines = [f"%%MatrixMarket matrix coordinate {field} {symmetry}"]
+    for c in comments:
+        lines.append(f"% {c}")
+    lines.append(f"{n} {n} {len(entries)}")
+    for idx, (r, c, v) in enumerate(entries):
+        if interleave and idx == len(entries) // 2:
+            # the SuiteSparse archive interleaves comments and blank lines
+            lines.append("")
+            lines.append("% interleaved mid-body comment (reader must skip)")
+        if field == "pattern":
+            lines.append(f"{r + 1} {c + 1}")
+        elif field == "integer":
+            lines.append(f"{r + 1} {c + 1} {int(v)}")
+        else:
+            lines.append(f"{r + 1} {c + 1} {fmt_real(v)}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def expand(entries, symmetry, n):
+    """Expanded (general-form) CSR row structure, mirroring the reader."""
+    rows = [dict() for _ in range(n)]
+    for r, c, v in entries:
+        val = 1.0 if v is None else float(v)
+        assert (r, c) not in rows[r], f"duplicate ({r},{c})"
+        rows[r][c] = rows[r].get(c, 0.0) + val
+        if symmetry == "symmetric" and r != c:
+            rows[c][r] = rows[c].get(r, 0.0) + val
+        elif symmetry == "skew-symmetric":
+            assert r != c, "skew diagonal"
+            rows[c][r] = rows[c].get(r, 0.0) - val
+    return [sorted(d) for d in rows]
+
+
+def fill_of(rows_cols):
+    elems, tiles = 0, 0
+    for cols in rows_cols:
+        last = None
+        for c in cols:
+            t = c // T
+            if t != last:
+                tiles += 1
+                last = t
+            elems += 1
+    return elems / (tiles * T) if tiles else 0.0
+
+
+def stats(entries, symmetry, n):
+    rc = expand(entries, symmetry, n)
+    nnz = sum(len(c) for c in rc)
+    maxr = max((len(c) for c in rc), default=0)
+    fill = fill_of(rc)
+    route = "Block" if fill >= 0.25 else "Hash"
+    # corpus router shard screen: 256 KiB budget, upper bound must fit
+    upper = 12 * nnz * maxr
+    assert upper + 32 * nnz + 8 * (n + 1) < 256 * 1024, "fixture too big: would shard"
+    assert not (0.20 <= fill < 0.30), f"fill {fill:.3f} too close to 0.25 threshold"
+    return nnz, maxr, fill, route
+
+
+def fem_cant_like(rng):
+    # six dense 12x12 diagonal blocks, tile-aligned (FEM cantilever style)
+    n, entries = 96, []
+    for b in range(0, n, 16):
+        for i in range(12):
+            for j in range(i + 1):  # lower triangle incl. diagonal
+                entries.append((b + i, b + j, dyadic(rng)))
+    return "real", "symmetric", n, entries
+
+
+def fem_ship_like(rng):
+    # contiguous 12-wide tile-aligned runs marching down the band
+    n, entries = 80, []
+    for i in range(n):
+        base = min((i // 16) * 16, n - 12)
+        for j in range(12):
+            entries.append((i, base + j, dyadic(rng)))
+    return "real", "general", n, entries
+
+
+def power_web_like(rng):
+    # web graph: a few degree-12 hubs, long tail of degree 1..4
+    n, entries = 200, []
+    for i in range(n):
+        deg = 12 if i < 8 else 1 + rng.below(4)
+        used = set()
+        cols = distinct_tile_cols(rng, n, deg - 1, used_tiles=used)
+        # every page links toward a hub column (power-law in-degree)
+        hub = rng.below(8)
+        if hub // T not in used:
+            cols.append(hub)
+        for c in sorted(set(cols)):
+            entries.append((i, c, None))
+    return "pattern", "general", n, entries
+
+
+def power_patents_like(rng):
+    # citation counts: power-law out-degree, integer weights
+    n, entries = 150, []
+    for i in range(n):
+        u = rng.below(1000) / 1000.0
+        deg = 1 + int(7 * u * u)  # most rows 1-2, few rows up to 8
+        for c in distinct_tile_cols(rng, n, deg):
+            entries.append((i, c, 1 + rng.below(9)))
+    return "integer", "general", n, entries
+
+
+def tridiag_near_diag(rng):
+    n, entries = 120, []
+    for i in range(n):
+        for c in (i - 1, i, i + 1):
+            if 0 <= c < n:
+                entries.append((i, c, dyadic(rng)))
+    return "real", "general", n, entries
+
+
+def stencil_lap2d_like(rng):
+    # 5-point Laplacian on a 10x10 grid, lower triangle stored
+    g, entries = 10, []
+    n = g * g
+    for i in range(n):
+        for c in (i - g, i - 1, i):
+            if c < 0:
+                continue
+            if c == i - 1 and i % g == 0:
+                continue  # west neighbor wraps the grid row: not an edge
+            entries.append((i, c, 4.0 if c == i else -1.0))
+    return "real", "symmetric", n, entries
+
+
+def skew_circuit_like(rng):
+    # antisymmetric coupling matrix: strictly-lower scattered pairs
+    n, entries = 64, []
+    for i in range(2, n):
+        for c in distinct_tile_cols(rng, n, 1 + rng.below(2), hi=i):
+            entries.append((i, c, dyadic(rng, signed=False)))
+    return "real", "skew-symmetric", n, entries
+
+
+def pattern_road_like(rng):
+    # road network: sparse symmetric graph, degree ~4, no self loops
+    n, entries = 140, []
+    for i in range(1, n):
+        for c in distinct_tile_cols(rng, n, min(2, i), hi=i):
+            entries.append((i, c, None))
+    return "pattern", "symmetric", n, entries
+
+
+def int_econ_like(rng):
+    # input-output table: full diagonal plus scattered sector couplings
+    n, entries = 110, []
+    for i in range(n):
+        used = {i // T}
+        cols = distinct_tile_cols(rng, n, 5, used_tiles=used)
+        for c in sorted(cols + [i]):
+            entries.append((i, c, 1 + rng.below(9)))
+    return "integer", "general", n, entries
+
+
+def diag_dominant_jacobi(rng):
+    n, entries = 130, []
+    for i in range(n):
+        used = {i // T}
+        cols = distinct_tile_cols(rng, n, 2, used_tiles=used)
+        for c in sorted(cols + [i]):
+            entries.append((i, c, 8.0 if c == i else dyadic(rng)))
+    return "real", "general", n, entries
+
+
+def band_wide_cage_like(rng):
+    # DNA electrophoresis style: scattered picks inside a wide band
+    n, entries = 128, []
+    for i in range(n):
+        lo, hi = max(0, i - 16), min(n, i + 16)
+        used = set()
+        cols = distinct_tile_cols(rng, n, 2, lo=lo, hi=hi, used_tiles=used)
+        for c in cols:
+            entries.append((i, c, dyadic(rng)))
+    return "real", "general", n, entries
+
+
+def blocky_bsr_like(rng):
+    # dense 12-wide runs at permuted tile-aligned block columns
+    n, entries = 64, []
+    for i in range(n):
+        base = 16 * ((i // 16) * 3 % 4)
+        for j in range(12):
+            entries.append((i, base + j, dyadic(rng)))
+    return "real", "general", n, entries
+
+
+FIXTURES = [
+    ("fem_cant_like", fem_cant_like, "FEM cantilever (cant): dense tile-aligned diagonal blocks"),
+    ("fem_ship_like", fem_ship_like, "FEM ship section (ship_001): contiguous banded runs"),
+    ("power_web_like", power_web_like, "web graph (webbase): power-law hubs, pattern-only"),
+    ("power_patents_like", power_patents_like, "patent citations (patents_main): integer power-law"),
+    ("tridiag_near_diag", tridiag_near_diag, "near-diagonal tridiagonal chain (1D Poisson)"),
+    ("stencil_lap2d_like", stencil_lap2d_like, "5-point 2D Laplacian (10x10 grid), symmetric"),
+    ("skew_circuit_like", skew_circuit_like, "circuit coupling (scircuit-ish), skew-symmetric"),
+    ("pattern_road_like", pattern_road_like, "road network (roadNet): symmetric pattern graph"),
+    ("int_econ_like", int_econ_like, "economic input-output (mac_econ): integer general"),
+    ("diag_dominant_jacobi", diag_dominant_jacobi, "diagonally dominant Jacobi-ready system"),
+    ("band_wide_cage_like", band_wide_cage_like, "wide-band scatter (cage-ish)"),
+    ("blocky_bsr_like", blocky_bsr_like, "permuted dense block columns (BSR-friendly)"),
+]
+
+
+def main():
+    out = os.path.dirname(os.path.abspath(__file__))
+    print(f"{'fixture':24} {'field':8} {'symmetry':15} {'n':>4} {'nnz':>5} {'maxr':>4} {'fill':>6} route")
+    for idx, (name, build, _desc) in enumerate(FIXTURES):
+        rng = Lcg(0xC0DE0 + idx)
+        field, symmetry, n, entries = build(rng)
+        nnz, maxr, fill, route = stats(entries, symmetry, n)
+        comments = [
+            f"stand-in fixture mirroring the structure of: {_desc}",
+            "generated by gen_fixtures.py (deterministic; see ARCHITECTURE.md)",
+        ]
+        write_mtx(
+            os.path.join(out, f"{name}.mtx"), field, symmetry, n, entries,
+            comments=comments, interleave=(idx % 3 == 0),
+        )
+        print(f"{name:24} {field:8} {symmetry:15} {n:>4} {nnz:>5} {maxr:>4} {fill:>6.3f} {route}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,357 @@
+//! Real-matrix corpus harness (the Fig. 5/6 reproduction at real-world
+//! diversity): drive the full pipeline → router → sharding → serve stack
+//! over a Matrix Market corpus and record per-matrix speedup vs
+//! `baselines::cusparse_like`, the route taken, bin-range occupancy, and
+//! the simulated makespan into `BENCH_corpus.json`.
+//!
+//! The corpus has two halves:
+//! * **Checked-in fixtures** under `rust/corpus/` (see `gen_fixtures.py`
+//!   there): ~12 small `.mtx` stand-ins mirroring the structure of the
+//!   paper's SuiteSparse regimes — banded/FEM, power-law, near-diagonal,
+//!   symmetric, skew-symmetric, pattern-only, integer. They are sized so
+//!   the corpus router's cheap working-set screen proves "fits on one
+//!   device", making every route pin deterministic
+//!   ([`corpus_router_config`]).
+//! * **Synthesized large regimes**: `gen` families big enough that the
+//!   router *must* shard them (working set beyond
+//!   `DECLINE_SPILL_FACTOR ×` budget), materialized through a
+//!   `sparse::mmio` write→read round-trip so the interchange path is
+//!   exercised at scale, not just on toy fixtures.
+//!
+//! Every entry is checked **bit-identical across the unsharded, sharded,
+//! and serve paths** — the blocking per-matrix identity gate in CI.
+
+use super::run_and_simulate;
+use crate::baselines::Library;
+use crate::coordinator::serve::{Serve, ServeConfig};
+use crate::coordinator::{Route, Router, RouterConfig};
+use crate::gen::banded::Banded;
+use crate::gen::powerlaw::PowerLaw;
+use crate::gen::stencil::{Grid, Stencil};
+use crate::gen::uniform::Uniform;
+use crate::gpusim::{simulate, V100};
+use crate::sparse::stats::nprod_per_row;
+use crate::sparse::{mmio, Csr};
+use crate::spgemm::binning::bin_rows;
+use crate::spgemm::kernel_tables::{SymbolicRanges, NUM_BINS};
+use crate::spgemm::multiply_sharded;
+use crate::spgemm::pipeline::OpSparseConfig;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The acceptance floor on checked-in `.mtx` fixtures; enforced by
+/// `tests/corpus.rs` and the CI corpus gate.
+pub const MIN_REAL_FIXTURES: usize = 10;
+
+/// One corpus member: a named square matrix plus where it came from.
+pub struct CorpusEntry {
+    pub name: String,
+    /// `"fixture"` (checked-in `.mtx`) or `"synthesized"` (gen family
+    /// materialized through an mmio round-trip).
+    pub source: &'static str,
+    pub a: Csr,
+}
+
+/// Per-matrix measurements for `BENCH_corpus.json`.
+#[derive(Clone, Debug)]
+pub struct CorpusRow {
+    pub name: String,
+    pub source: &'static str,
+    pub rows: usize,
+    pub nnz: usize,
+    /// Route the corpus router picks for `A*A` ([`route_label`]).
+    pub route: String,
+    /// Simulated OpSparse pipeline time (unsharded, V100 model).
+    pub opsparse_ns: f64,
+    /// Simulated `baselines::cusparse_like` time on the same product.
+    pub cusparse_ns: f64,
+    /// `cusparse_ns / opsparse_ns` — the Fig. 5/6 metric.
+    pub speedup_vs_cusparse: f64,
+    pub gflops: f64,
+    /// Makespan of the route actually taken: unsharded pipeline time for
+    /// `Hash`/`Block`, slowest-shard compute time for `Sharded`.
+    pub makespan_ns: f64,
+    /// Symbolic-phase bin occupancy (paper Table 4, `sym_1.2x` ranges).
+    pub bin_occupancy: [usize; NUM_BINS],
+    /// Whether the Algorithm-3 fast path applied (all rows in bin 0).
+    pub fast_path: bool,
+    pub bit_identical_sharded: bool,
+    pub bit_identical_serve: bool,
+    pub mmio_roundtrip: bool,
+}
+
+/// Whole-corpus report.
+pub struct CorpusReport {
+    pub dir: String,
+    pub fixtures: usize,
+    pub synthesized: usize,
+    /// Every row bit-identical across unsharded/sharded/serve AND
+    /// mmio-round-trip clean — the blocking CI verdict.
+    pub all_bit_identical: bool,
+    pub rows: Vec<CorpusRow>,
+}
+
+/// Router configuration the corpus is sized against: a deliberately tight
+/// 256 KiB device budget and a 4-device fleet, so the checked-in fixtures
+/// provably fit unsharded (their pessimistic working set stays under the
+/// budget) while the synthesized large regimes overshoot
+/// `DECLINE_SPILL_FACTOR ×` budget and *must* shard. `ns_per_prod` stays
+/// the static 1.0 proxy — no live fit — so routes cannot drift between
+/// runs.
+pub fn corpus_router_config() -> RouterConfig {
+    RouterConfig {
+        device_memory_bytes: 256 * 1024,
+        max_devices: 4,
+        ..Default::default()
+    }
+}
+
+/// Locate the corpus directory: explicit argument, then
+/// `OPSPARSE_CORPUS_DIR`, then the first of `corpus/` / `rust/corpus/`
+/// that exists (the bench runs from either the repo root or `rust/`).
+pub fn resolve_corpus_dir(explicit: Option<&str>) -> PathBuf {
+    if let Some(d) = explicit {
+        return PathBuf::from(d);
+    }
+    if let Ok(d) = std::env::var("OPSPARSE_CORPUS_DIR") {
+        if !d.is_empty() {
+            return PathBuf::from(d);
+        }
+    }
+    for cand in ["corpus", "rust/corpus", "../corpus"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    PathBuf::from("corpus")
+}
+
+/// Load every `.mtx` fixture in `dir`, sorted by name for stable output.
+pub fn load_corpus(dir: &Path) -> Result<Vec<CorpusEntry>> {
+    let mut entries = Vec::new();
+    let rd = std::fs::read_dir(dir)
+        .with_context(|| format!("corpus dir {} (set OPSPARSE_CORPUS_DIR?)", dir.display()))?;
+    let mut paths: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "mtx"))
+        .collect();
+    paths.sort();
+    for p in paths {
+        let name = p
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .context("non-utf8 fixture name")?
+            .to_string();
+        let a = mmio::read_file(&p).with_context(|| format!("fixture {}", p.display()))?;
+        ensure!(a.rows == a.cols, "fixture {name} must be square for A*A");
+        entries.push(CorpusEntry { name, source: "fixture", a });
+    }
+    ensure!(!entries.is_empty(), "no .mtx fixtures found in {}", dir.display());
+    Ok(entries)
+}
+
+/// Synthesize the large regimes the fixtures are too small for, each
+/// materialized through an mmio `write→read` round-trip that must be
+/// bit-identical (the round-tripped matrix is what the harness runs on).
+/// All are sized past `2×` the corpus budget, so the router must shard.
+pub fn synthesized_entries() -> Result<Vec<CorpusEntry>> {
+    let mut out = Vec::new();
+    let specs: [(&str, Box<dyn Fn(&mut Rng) -> Csr>); 4] = [
+        (
+            "syn_uniform_large",
+            Box::new(|rng| Uniform { n: 2048, per_row: 12, jitter: 4 }.generate(rng)),
+        ),
+        (
+            "syn_powerlaw_large",
+            Box::new(|rng| {
+                PowerLaw {
+                    n: 2048,
+                    alpha: 2.2,
+                    max_row: 200,
+                    mean_row: 8.0,
+                    hub_frac: 0.1,
+                    forced_giant_rows: 0,
+                }
+                .generate(rng)
+            }),
+        ),
+        (
+            "syn_banded_large",
+            Box::new(|rng| {
+                Banded { n: 2048, per_row: 16, band: 48, contiguous_frac: 1.0 }.generate(rng)
+            }),
+        ),
+        (
+            "syn_stencil_large",
+            Box::new(|rng| {
+                Stencil { n: 2025, grid: Grid::D2, reach: 2, keep: 1.0, diagonal: true }
+                    .generate(rng)
+            }),
+        ),
+    ];
+    for (i, (name, build)) in specs.iter().enumerate() {
+        let mut rng = Rng::new(0x5EED_C0DE + i as u64);
+        let a = build(&mut rng);
+        // materialize through the interchange format: write → read must be
+        // bit-identical, and the round-tripped matrix is what runs
+        let mut buf = Vec::new();
+        mmio::write_matrix_market(&a, &mut buf)?;
+        let back = mmio::read_matrix_market(buf.as_slice())
+            .with_context(|| format!("round-trip {name}"))?;
+        ensure!(back == a, "mmio round-trip not bit-identical for {name}");
+        out.push(CorpusEntry { name: name.to_string(), source: "synthesized", a: back });
+    }
+    Ok(out)
+}
+
+/// Stable display form of a route for JSON and route-pin tests.
+pub fn route_label(route: &Route) -> String {
+    match route {
+        Route::Hash => "Hash".to_string(),
+        Route::Block => "Block".to_string(),
+        Route::Sharded { n_devices } => format!("Sharded:{n_devices}"),
+    }
+}
+
+/// Run the whole corpus (fixtures in `dir` + synthesized regimes) through
+/// pipeline, baseline, router, sharded execution, and the serve front
+/// door.
+pub fn run_corpus(dir: &Path) -> Result<CorpusReport> {
+    let mut entries = load_corpus(dir)?;
+    let fixtures = entries.len();
+    entries.extend(synthesized_entries()?);
+    let synthesized = entries.len() - fixtures;
+
+    let router = Router::new(corpus_router_config());
+    let serve_cfg = ServeConfig {
+        workers: 2,
+        device_memory_bytes: 256 * 1024,
+        max_devices: 4,
+        ns_per_prod: Some(1.0),
+        ..Default::default()
+    };
+    let serve = Serve::start(serve_cfg)?;
+
+    // collect, then shut the serve stack down before propagating failures
+    let mut rows: Vec<Result<CorpusRow>> = Vec::with_capacity(entries.len());
+    for e in &entries {
+        rows.push(run_entry(e, &router, &serve));
+    }
+    serve.shutdown();
+    let rows: Vec<CorpusRow> = rows.into_iter().collect::<Result<_>>()?;
+
+    let all_bit_identical = rows
+        .iter()
+        .all(|r| r.bit_identical_sharded && r.bit_identical_serve && r.mmio_roundtrip);
+    Ok(CorpusReport {
+        dir: dir.display().to_string(),
+        fixtures,
+        synthesized,
+        all_bit_identical,
+        rows,
+    })
+}
+
+fn run_entry(e: &CorpusEntry, router: &Router, serve: &Serve) -> Result<CorpusRow> {
+    let a = &e.a;
+    // unsharded pipeline (verified against the dense reference) + baseline
+    let (out, tl) = run_and_simulate(Library::OpSparse, a, true)
+        .with_context(|| format!("{}: opsparse", e.name))?;
+    let (_cus_out, cus_tl) = run_and_simulate(Library::Cusparse, a, false)
+        .with_context(|| format!("{}: cusparse_like", e.name))?;
+    let opsparse_ns = tl.total_ns;
+    let cusparse_ns = cus_tl.total_ns;
+
+    // route + symbolic bin occupancy under the paper's adopted ranges
+    let route = router.route(a, a);
+    let sizes = nprod_per_row(a, a);
+    let binned = bin_rows(&sizes, &SymbolicRanges::Sym12x.ranges());
+
+    // sharded execution must stitch bit-identically on every matrix, not
+    // just the ones the router would shard
+    let n_shards = match route {
+        Route::Sharded { n_devices } => n_devices,
+        _ => 2,
+    };
+    let cfg = OpSparseConfig::default();
+    let sharded = multiply_sharded(a, a, &cfg, n_shards)
+        .with_context(|| format!("{}: sharded x{n_shards}", e.name))?;
+    let bit_identical_sharded = sharded.c == out.c;
+    let makespan_ns = match route {
+        Route::Sharded { .. } => sharded
+            .traces()
+            .map(|t| simulate(t, &V100).total_ns)
+            .fold(0.0f64, f64::max),
+        _ => opsparse_ns,
+    };
+
+    // serve front door: same request through coalesce/batch/admission
+    let ticket = serve.submit("corpus", a.clone(), a.clone());
+    let result = ticket.wait();
+    let served = result
+        .csr()
+        .with_context(|| format!("{}: serve path returned no result", e.name))?;
+    let bit_identical_serve = **served == out.c;
+
+    // interchange: the general-form writer must round-trip every corpus
+    // member bit-identically (fixtures included, whatever their original
+    // field/symmetry storage was)
+    let mut buf = Vec::new();
+    mmio::write_matrix_market(a, &mut buf)?;
+    let mmio_roundtrip = mmio::read_matrix_market(buf.as_slice())? == *a;
+
+    if opsparse_ns <= 0.0 {
+        bail!("{}: degenerate simulated time", e.name);
+    }
+    Ok(CorpusRow {
+        name: e.name.clone(),
+        source: e.source,
+        rows: a.rows,
+        nnz: a.nnz(),
+        route: route_label(&route),
+        opsparse_ns,
+        cusparse_ns,
+        speedup_vs_cusparse: cusparse_ns / opsparse_ns,
+        gflops: super::gflops(&out, &tl),
+        makespan_ns,
+        bin_occupancy: binned.bin_size,
+        fast_path: binned.fast_path,
+        bit_identical_sharded,
+        bit_identical_serve,
+        mmio_roundtrip,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_router_budget_is_tight_and_fleet_small() {
+        let cfg = corpus_router_config();
+        assert_eq!(cfg.device_memory_bytes, 256 * 1024);
+        assert_eq!(cfg.max_devices, 4);
+    }
+
+    #[test]
+    fn synthesized_regimes_all_shard() {
+        let router = Router::new(corpus_router_config());
+        for e in synthesized_entries().unwrap() {
+            let route = router.route(&e.a, &e.a);
+            assert!(
+                matches!(route, Route::Sharded { .. }),
+                "{} must shard under the corpus budget, got {route:?}",
+                e.name
+            );
+        }
+    }
+
+    #[test]
+    fn route_labels_are_stable() {
+        assert_eq!(route_label(&Route::Hash), "Hash");
+        assert_eq!(route_label(&Route::Block), "Block");
+        assert_eq!(route_label(&Route::Sharded { n_devices: 3 }), "Sharded:3");
+    }
+}

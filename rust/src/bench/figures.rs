@@ -463,6 +463,20 @@ pub fn shard_scaling_with(
     ic: Option<&Interconnect>,
     overlap: OverlapConfig,
 ) -> Result<Vec<ShardScalingRow>> {
+    shard_scaling_run(scale, ic, overlap, 2026, true)
+}
+
+/// Seeded, optionally quiet variant of [`shard_scaling_with`]. The
+/// statistical overlap gate ([`overlap_gate`]) re-runs this with a fresh
+/// generator seed per repetition — the simulator is deterministic, so
+/// repetition variance comes entirely from the matrix draw.
+pub fn shard_scaling_run(
+    scale: SuiteScale,
+    ic: Option<&Interconnect>,
+    overlap: OverlapConfig,
+    seed: u64,
+    verbose: bool,
+) -> Result<Vec<ShardScalingRow>> {
     use crate::gen::powerlaw::PowerLaw;
     use crate::gpusim::MultiDevice;
     use crate::sparse::stats::nprod_per_row;
@@ -481,36 +495,38 @@ pub fn shard_scaling_with(
         hub_frac: 0.15,
         forced_giant_rows: 0,
     }
-    .generate(&mut crate::util::rng::Rng::new(2026));
+    .generate(&mut crate::util::rng::Rng::new(seed));
     let charged = ic.is_some();
-    match ic {
-        Some(ic) => println!(
-            "\n=== Shard scaling: row-sharded SpGEMM, power-law A ({n} rows, nnz {}), \
-             interconnect {:.0} GB/s {:?} (lat {:.1}us), overlap {} (chunk {} KiB) ===",
-            a.nnz(),
-            ic.bandwidth_gbps,
-            ic.topology,
-            ic.latency_us,
-            if overlap.enabled { "on" } else { "off" },
-            overlap.chunk_bytes >> 10
-        ),
-        None => println!(
-            "\n=== Shard scaling: row-sharded SpGEMM, power-law A ({n} rows, nnz {}), \
-             free interconnect (transfer columns skipped) ===",
-            a.nnz()
-        ),
-    }
-    if charged {
-        println!(
-            "{:>7} {:>12} {:>12} {:>10} {:>11} {:>11} {:>9} {:>9} {:>9} {:>9}",
-            "shards", "serial-mk", "overlap-mk", "saved", "broadcast", "gather", "plan-imb",
-            "time-imb", "eff-ser", "eff-ovl"
-        );
-    } else {
-        println!(
-            "{:>7} {:>12} {:>10} {:>10} {:>9} {:>11}",
-            "shards", "makespan", "plan-imb", "time-imb", "speedup", "efficiency"
-        );
+    if verbose {
+        match ic {
+            Some(ic) => println!(
+                "\n=== Shard scaling: row-sharded SpGEMM, power-law A ({n} rows, nnz {}), \
+                 interconnect {:.0} GB/s {:?} (lat {:.1}us), overlap {} (chunk {} KiB) ===",
+                a.nnz(),
+                ic.bandwidth_gbps,
+                ic.topology,
+                ic.latency_us,
+                if overlap.enabled { "on" } else { "off" },
+                overlap.chunk_bytes >> 10
+            ),
+            None => println!(
+                "\n=== Shard scaling: row-sharded SpGEMM, power-law A ({n} rows, nnz {}), \
+                 free interconnect (transfer columns skipped) ===",
+                a.nnz()
+            ),
+        }
+        if charged {
+            println!(
+                "{:>7} {:>12} {:>12} {:>10} {:>11} {:>11} {:>9} {:>9} {:>9} {:>9}",
+                "shards", "serial-mk", "overlap-mk", "saved", "broadcast", "gather", "plan-imb",
+                "time-imb", "eff-ser", "eff-ovl"
+            );
+        } else {
+            println!(
+                "{:>7} {:>12} {:>10} {:>10} {:>9} {:>11}",
+                "shards", "makespan", "plan-imb", "time-imb", "speedup", "efficiency"
+            );
+        }
     }
     let cfg = OpSparseConfig::default();
     let b_bytes = a.device_bytes();
@@ -568,7 +584,7 @@ pub fn shard_scaling_with(
             efficiency: md.efficiency_vs(single),
             efficiency_overlapped: eff_overlapped,
         };
-        if charged {
+        if verbose && charged {
             println!(
                 "{:>7} {:>10.1}us {:>10.1}us {:>8.1}us {:>9.1}us {:>9.1}us {:>8.3}x {:>8.3}x \
                  {:>8.1}% {:>8.1}%",
@@ -583,7 +599,7 @@ pub fn shard_scaling_with(
                 row.efficiency * 100.0,
                 row.efficiency_overlapped * 100.0
             );
-        } else {
+        } else if verbose {
             println!(
                 "{:>7} {:>10.1}us {:>9.3}x {:>9.3}x {:>8.2}x {:>10.1}%",
                 row.shards,
@@ -635,6 +651,17 @@ pub struct AdaptiveRow {
 /// warm ≤ cold on every row; the raw re-cut figure is reported
 /// alongside. Results are verified bit-identical across plans.
 pub fn adaptive_replan(scale: SuiteScale) -> Result<Vec<AdaptiveRow>> {
+    adaptive_replan_seeded(scale, 2026, true)
+}
+
+/// Seeded, optionally quiet variant of [`adaptive_replan`]. The
+/// statistical warm-≤-cold gate ([`adaptive_gate`]) re-runs this with a
+/// fresh generator seed per repetition.
+pub fn adaptive_replan_seeded(
+    scale: SuiteScale,
+    seed: u64,
+    verbose: bool,
+) -> Result<Vec<AdaptiveRow>> {
     use crate::gen::kron::Kron;
     use crate::gen::powerlaw::PowerLaw;
     use crate::gen::stencil::{Grid, Stencil};
@@ -648,7 +675,7 @@ pub fn adaptive_replan(scale: SuiteScale) -> Result<Vec<AdaptiveRow>> {
         SuiteScale::Small => (8192, 12),
         SuiteScale::Medium => (24576, 13),
     };
-    let mut rng = crate::util::rng::Rng::new(2026);
+    let mut rng = crate::util::rng::Rng::new(seed);
     let mats: Vec<(&'static str, crate::sparse::Csr)> = vec![
         ("uniform", Uniform { n, per_row: 8, jitter: 4 }.generate(&mut rng)),
         (
@@ -674,14 +701,16 @@ pub fn adaptive_replan(scale: SuiteScale) -> Result<Vec<AdaptiveRow>> {
                 .generate(&mut rng),
         ),
     ];
-    println!(
-        "\n=== Adaptive re-planning: cold (proxy-cut) vs warm (measured re-cut, \
-         rollback on loss) compute makespan (scale {scale:?}) ==="
-    );
-    println!(
-        "{:<10} {:>7} {:>12} {:>12} {:>12} {:>9} {:>9} {:>6}",
-        "family", "shards", "cold-mk", "warm-mk", "recut-mk", "cold-imb", "warm-imb", "kept"
-    );
+    if verbose {
+        println!(
+            "\n=== Adaptive re-planning: cold (proxy-cut) vs warm (measured re-cut, \
+             rollback on loss) compute makespan (scale {scale:?}) ==="
+        );
+        println!(
+            "{:<10} {:>7} {:>12} {:>12} {:>12} {:>9} {:>9} {:>6}",
+            "family", "shards", "cold-mk", "warm-mk", "recut-mk", "cold-imb", "warm-imb", "kept"
+        );
+    }
     let cfg = OpSparseConfig::default();
     let mut rows = Vec::new();
     for (family, a) in &mats {
@@ -719,17 +748,19 @@ pub fn adaptive_replan(scale: SuiteScale) -> Result<Vec<AdaptiveRow>> {
             } else {
                 (cold_mk, cold_md.time_imbalance())
             };
-            println!(
-                "{:<10} {:>7} {:>10.1}us {:>10.1}us {:>10.1}us {:>8.3}x {:>8.3}x {:>6}",
-                family,
-                shards,
-                cold_mk / 1e3,
-                warm_mk / 1e3,
-                recut_mk / 1e3,
-                cold_md.time_imbalance(),
-                warm_imb,
-                if kept { "yes" } else { "no" }
-            );
+            if verbose {
+                println!(
+                    "{:<10} {:>7} {:>10.1}us {:>10.1}us {:>10.1}us {:>8.3}x {:>8.3}x {:>6}",
+                    family,
+                    shards,
+                    cold_mk / 1e3,
+                    warm_mk / 1e3,
+                    recut_mk / 1e3,
+                    cold_md.time_imbalance(),
+                    warm_imb,
+                    if kept { "yes" } else { "no" }
+                );
+            }
             // the rollback above makes this structural; asserting it
             // HERE (not in each caller) is the one place a regression
             // could originate — the CLI, the bench binary, and CI all
@@ -754,6 +785,89 @@ pub fn adaptive_replan(scale: SuiteScale) -> Result<Vec<AdaptiveRow>> {
         }
     }
     Ok(rows)
+}
+
+/// Statistical overlap-dominance gate: run the shard-scaling bench with
+/// the overlapped schedule on across adaptively many repetitions (fresh
+/// power-law draw per rep; seed 2026 first so `BENCH_overlap.json` rows
+/// stay comparable run-to-run), summing the serial and overlapped
+/// makespans over all shard counts per rep, then test "overlapped not
+/// significantly worse than serial" one-sided at `cfg.alpha`. Returns the
+/// first repetition's rows (the JSON display) plus the verdict CI blocks
+/// on. The loop is manual rather than [`crate::util::stats::sample_adaptive_paired`]
+/// because each repetition can fail and the error must propagate.
+pub fn overlap_gate(
+    scale: SuiteScale,
+    cfg: &crate::util::stats::AdaptiveConfig,
+) -> Result<(Vec<ShardScalingRow>, crate::util::stats::GateResult)> {
+    use crate::util::stats::{not_worse_gate, Samples};
+    let ic = Interconnect::pcie3();
+    let overlap = OverlapConfig { enabled: true, ..OverlapConfig::from_env() };
+    let mut serial = Samples::new();
+    let mut overlapped = Samples::new();
+    let mut first_rows: Option<Vec<ShardScalingRow>> = None;
+    for rep in 0..cfg.max_reps.max(cfg.min_reps).max(2) {
+        let rows = shard_scaling_run(scale, Some(&ic), overlap, 2026 + rep as u64, rep == 0)?;
+        serial.push(rows.iter().map(|r| r.makespan_ns).sum());
+        overlapped.push(rows.iter().map(|r| r.overlapped_makespan_ns).sum());
+        if first_rows.is_none() {
+            first_rows = Some(rows);
+        }
+        if cfg.converged(&serial) && cfg.converged(&overlapped) {
+            break;
+        }
+    }
+    let gate = not_worse_gate("overlap_dominance", &overlapped, &serial, false, cfg.alpha);
+    println!(
+        "overlap gate: {} (p={:.4}, alpha={}, overlapped {:.1}us vs serial {:.1}us over {} reps)",
+        if gate.pass { "pass" } else { "FAIL" },
+        gate.p,
+        gate.alpha,
+        gate.candidate_mean / 1e3,
+        gate.reference_mean / 1e3,
+        gate.reps_candidate
+    );
+    Ok((first_rows.expect("at least one repetition"), gate))
+}
+
+/// Statistical warm-≤-cold gate for adaptive re-planning: re-run the
+/// ablation across adaptively many repetitions (fresh generator seed per
+/// rep; seed 2026 first, kept as the `BENCH_adaptive.json` rows), summing
+/// cold and warm compute makespans over every (family × shard count) cell
+/// per rep, then test "warm not significantly worse than cold" one-sided
+/// at `cfg.alpha`. The per-cell structural rollback guarantee stays a
+/// hard `ensure!` inside [`adaptive_replan_seeded`]; this gate is the
+/// aggregate, noise-aware CI verdict.
+pub fn adaptive_gate(
+    scale: SuiteScale,
+    cfg: &crate::util::stats::AdaptiveConfig,
+) -> Result<(Vec<AdaptiveRow>, crate::util::stats::GateResult)> {
+    use crate::util::stats::{not_worse_gate, Samples};
+    let mut cold = Samples::new();
+    let mut warm = Samples::new();
+    let mut first_rows: Option<Vec<AdaptiveRow>> = None;
+    for rep in 0..cfg.max_reps.max(cfg.min_reps).max(2) {
+        let rows = adaptive_replan_seeded(scale, 2026 + rep as u64, rep == 0)?;
+        cold.push(rows.iter().map(|r| r.cold_makespan_ns).sum());
+        warm.push(rows.iter().map(|r| r.warm_makespan_ns).sum());
+        if first_rows.is_none() {
+            first_rows = Some(rows);
+        }
+        if cfg.converged(&cold) && cfg.converged(&warm) {
+            break;
+        }
+    }
+    let gate = not_worse_gate("adaptive_warm_le_cold", &warm, &cold, false, cfg.alpha);
+    println!(
+        "adaptive gate: {} (p={:.4}, alpha={}, warm {:.1}us vs cold {:.1}us over {} reps)",
+        if gate.pass { "pass" } else { "FAIL" },
+        gate.p,
+        gate.alpha,
+        gate.candidate_mean / 1e3,
+        gate.reference_mean / 1e3,
+        gate.reps_candidate
+    );
+    Ok((first_rows.expect("at least one repetition"), gate))
 }
 
 #[cfg(test)]

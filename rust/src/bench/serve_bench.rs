@@ -34,6 +34,7 @@ use crate::gen::uniform::Uniform;
 use crate::sparse::Csr;
 use crate::spgemm::pipeline::{multiply, OpSparseConfig};
 use crate::util::rng::Rng;
+use crate::util::stats::{not_worse_gate, AdaptiveConfig, GateResult, Samples};
 use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
 use std::time::Instant;
@@ -76,6 +77,11 @@ pub struct ServeBenchReport {
     /// All-knobs-off front door matched the raw coordinator bitwise
     /// (results, routes, counters).
     pub baseline_match: bool,
+    /// Statistical verdicts CI blocks on (currently one: coalesced
+    /// throughput not significantly below uncoalesced, one-sided Welch
+    /// over adaptively many repetitions — real wall clock is noisy, so a
+    /// point comparison of two single runs would flake).
+    pub gates: Vec<GateResult>,
 }
 
 fn sizes(scale: SuiteScale) -> usize {
@@ -274,10 +280,41 @@ pub fn serve_load(jobs: usize, scale: SuiteScale) -> Result<ServeBenchReport> {
             row.bit_identical
         );
     }
+    // statistical throughput gate: the displayed rows above are repetition
+    // 0; keep re-running both modes until the throughput samples converge
+    // (wall clock is genuinely noisy), then one-sided Welch at alpha
+    let stat = AdaptiveConfig::from_env();
+    let mut coalesced = Samples::from_values(vec![rows[0].throughput_jobs_per_s]);
+    let mut uncoalesced = Samples::from_values(vec![rows[1].throughput_jobs_per_s]);
+    while coalesced.n() < stat.max_reps.max(stat.min_reps).max(2)
+        && !(stat.converged(&coalesced) && stat.converged(&uncoalesced))
+    {
+        coalesced.push(run_mode(true, jobs, &a, &b, &plug, &expected)?.throughput_jobs_per_s);
+        uncoalesced.push(run_mode(false, jobs, &a, &b, &plug, &expected)?.throughput_jobs_per_s);
+    }
+    let gate =
+        not_worse_gate("serve_coalesced_throughput", &coalesced, &uncoalesced, true, stat.alpha);
+    println!(
+        "  throughput gate: {} (p={:.4}, alpha={}, coalesced {:.1} vs uncoalesced {:.1} jobs/s \
+         over {} reps)",
+        if gate.pass { "pass" } else { "FAIL" },
+        gate.p,
+        gate.alpha,
+        gate.candidate_mean,
+        gate.reference_mean,
+        gate.reps_candidate
+    );
     let persist_route_stable = persist_round_trip()?;
     let baseline_match = baseline_parity()?;
     println!(
         "  persist_route_stable {persist_route_stable}  baseline_match {baseline_match}"
     );
-    Ok(ServeBenchReport { jobs, scale, rows, persist_route_stable, baseline_match })
+    Ok(ServeBenchReport {
+        jobs,
+        scale,
+        rows,
+        persist_route_stable,
+        baseline_match,
+        gates: vec![gate],
+    })
 }

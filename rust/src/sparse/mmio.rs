@@ -1,33 +1,139 @@
 //! MatrixMarket (`.mtx`) reader/writer — the SuiteSparse interchange format
 //! the paper's suite ships in. Supports `matrix coordinate
 //! real|integer|pattern general|symmetric|skew-symmetric`.
+//!
+//! The reader is strict in exactly the ways the corpus fuzz tests pin down
+//! ([`MmioError`]): declared-vs-actual entry counts, 1-based index bounds,
+//! duplicate coordinates, symmetric/skew storage convention (lower triangle
+//! only, per the MatrixMarket spec), no diagonal in skew-symmetric files,
+//! integral values in `integer` fields, finite values in `real` fields, and
+//! a clear "unsupported" error for `complex` (instead of a generic bail).
+//! Comment (`%`) and blank lines are skipped **anywhere** — the SuiteSparse
+//! archive interleaves them mid-body.
+//!
+//! Every rejection is a typed [`MmioError`] carried inside the `anyhow`
+//! error chain, so callers can `downcast_ref::<MmioError>()` to branch on
+//! the failure mode while casual callers keep the plain `Result<Csr>` API.
 
 use super::coo::Coo;
 use super::csr::Csr;
 use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
 
+/// Value field of a coordinate MatrixMarket file.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Field {
+pub enum Field {
     Real,
     Integer,
     Pattern,
 }
 
+impl Field {
+    pub const ALL: [Field; 3] = [Field::Real, Field::Integer, Field::Pattern];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Field::Real => "real",
+            Field::Integer => "integer",
+            Field::Pattern => "pattern",
+        }
+    }
+}
+
+/// Symmetry of a coordinate MatrixMarket file. `Symmetric` and
+/// `SkewSymmetric` files store the lower triangle only; the reader expands
+/// them to general form.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Symmetry {
+pub enum Symmetry {
     General,
     Symmetric,
     SkewSymmetric,
 }
 
-/// Parse MatrixMarket text into CSR.
+impl Symmetry {
+    pub const ALL: [Symmetry; 3] =
+        [Symmetry::General, Symmetry::Symmetric, Symmetry::SkewSymmetric];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Symmetry::General => "general",
+            Symmetry::Symmetric => "symmetric",
+            Symmetry::SkewSymmetric => "skew-symmetric",
+        }
+    }
+}
+
+/// Typed rejection reasons for malformed MatrixMarket input. Indices are
+/// 1-based, matching the file text.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MmioError {
+    /// `complex` (or any other unknown) field — parseable format, value
+    /// type we deliberately do not support.
+    UnsupportedField(String),
+    /// Body ended early or carried extra entries vs the size line.
+    EntryCountMismatch { declared: usize, seen: usize },
+    /// Entry coordinates outside the declared `rows x cols`.
+    OutOfRange { row: usize, col: usize, rows: usize, cols: usize },
+    /// The same coordinate appeared twice (MatrixMarket coordinate files
+    /// list each nonzero once; summing duplicates silently would corrupt
+    /// round-trips).
+    Duplicate { row: usize, col: usize },
+    /// A skew-symmetric file stored a diagonal entry (`a_ii = -a_ii` forces
+    /// zero, so the format forbids them).
+    SkewDiagonal { row: usize },
+    /// A symmetric/skew-symmetric file stored a strictly-upper entry; the
+    /// spec says lower triangle only.
+    UpperTriangle { row: usize, col: usize },
+    /// `real` value failed to parse or was non-finite (NaN/inf).
+    BadReal { row: usize, col: usize },
+    /// `integer` value was not an integer.
+    BadInteger { row: usize, col: usize },
+}
+
+impl std::fmt::Display for MmioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MmioError::UnsupportedField(field) => write!(
+                f,
+                "unsupported MatrixMarket field '{field}': only real|integer|pattern \
+                 are supported (complex is recognized but unsupported)"
+            ),
+            MmioError::EntryCountMismatch { declared, seen } => {
+                write!(f, "size line declared {declared} entries, body has {seen}")
+            }
+            MmioError::OutOfRange { row, col, rows, cols } => {
+                write!(f, "entry ({row},{col}) out of bounds for {rows}x{cols}")
+            }
+            MmioError::Duplicate { row, col } => {
+                write!(f, "duplicate entry at ({row},{col})")
+            }
+            MmioError::SkewDiagonal { row } => {
+                write!(f, "skew-symmetric file stores diagonal entry at row {row}")
+            }
+            MmioError::UpperTriangle { row, col } => write!(
+                f,
+                "symmetric storage must be lower-triangular, found upper entry ({row},{col})"
+            ),
+            MmioError::BadReal { row, col } => {
+                write!(f, "entry ({row},{col}): real value missing, unparseable, or non-finite")
+            }
+            MmioError::BadInteger { row, col } => {
+                write!(f, "entry ({row},{col}): integer value missing or not integral")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MmioError {}
+
+/// Parse MatrixMarket text into CSR (symmetric/skew storage expanded to
+/// general form). Malformed input yields a typed [`MmioError`] in the
+/// chain — never a panic.
 pub fn read_matrix_market<R: Read>(reader: R) -> Result<Csr> {
     let mut lines = BufReader::new(reader).lines();
-    let header = lines
-        .next()
-        .context("empty MatrixMarket file")??;
+    let header = lines.next().context("empty MatrixMarket file")??;
     let head: Vec<String> = header.split_whitespace().map(|s| s.to_lowercase()).collect();
     ensure!(
         head.len() >= 5 && head[0] == "%%matrixmarket" && head[1] == "matrix",
@@ -38,7 +144,7 @@ pub fn read_matrix_market<R: Read>(reader: R) -> Result<Csr> {
         "real" => Field::Real,
         "integer" => Field::Integer,
         "pattern" => Field::Pattern,
-        f => bail!("unsupported field type: {f}"),
+        f => bail!(MmioError::UnsupportedField(f.to_string())),
     };
     let sym = match head[4].as_str() {
         "general" => Symmetry::General,
@@ -47,7 +153,7 @@ pub fn read_matrix_market<R: Read>(reader: R) -> Result<Csr> {
         s => bail!("unsupported symmetry: {s}"),
     };
 
-    // skip comments, read size line
+    // skip comments/blank lines, read size line
     let mut size_line = String::new();
     for line in lines.by_ref() {
         let line = line?;
@@ -73,31 +179,69 @@ pub fn read_matrix_market<R: Read>(reader: R) -> Result<Csr> {
     // not OOM the process); grow organically past this cap
     let cap = nnz.min(1 << 22) * if sym == Symmetry::General { 1 } else { 2 };
     let mut coo = Coo::with_capacity(rows, cols, cap);
+    let mut stored: HashSet<(usize, usize)> = HashSet::with_capacity(cap.min(1 << 22));
     let mut seen = 0usize;
     for line in lines {
         let line = line?;
         let t = line.trim();
+        // comment and blank lines are legal anywhere in the body — the
+        // SuiteSparse archive interleaves them between entries
         if t.is_empty() || t.starts_with('%') {
             continue;
         }
         let mut it = t.split_whitespace();
         let r: usize = it.next().context("missing row")?.parse()?;
         let c: usize = it.next().context("missing col")?.parse()?;
-        ensure!(r >= 1 && r <= rows && c >= 1 && c <= cols, "entry ({r},{c}) out of bounds");
+        if !(r >= 1 && r <= rows && c >= 1 && c <= cols) {
+            bail!(MmioError::OutOfRange { row: r, col: c, rows, cols });
+        }
+        match sym {
+            Symmetry::General => {}
+            Symmetry::Symmetric if c > r => bail!(MmioError::UpperTriangle { row: r, col: c }),
+            Symmetry::SkewSymmetric if r == c => bail!(MmioError::SkewDiagonal { row: r }),
+            Symmetry::SkewSymmetric if c > r => {
+                bail!(MmioError::UpperTriangle { row: r, col: c })
+            }
+            _ => {}
+        }
         let v = match field {
             Field::Pattern => 1.0,
-            _ => it.next().context("missing value")?.parse::<f64>()?,
+            Field::Real => {
+                let v: f64 = it
+                    .next()
+                    .and_then(|tok| tok.parse().ok())
+                    .ok_or(MmioError::BadReal { row: r, col: c })?;
+                if !v.is_finite() {
+                    bail!(MmioError::BadReal { row: r, col: c });
+                }
+                v
+            }
+            Field::Integer => {
+                let v: i64 = it
+                    .next()
+                    .and_then(|tok| tok.parse().ok())
+                    .ok_or(MmioError::BadInteger { row: r, col: c })?;
+                v as f64
+            }
         };
+        if !stored.insert((r, c)) {
+            bail!(MmioError::Duplicate { row: r, col: c });
+        }
+        seen += 1;
+        if seen > nnz {
+            bail!(MmioError::EntryCountMismatch { declared: nnz, seen });
+        }
         coo.push(r - 1, c - 1, v);
         match sym {
             Symmetry::General => {}
             Symmetry::Symmetric if r != c => coo.push(c - 1, r - 1, v),
-            Symmetry::SkewSymmetric if r != c => coo.push(c - 1, r - 1, -v),
+            Symmetry::SkewSymmetric => coo.push(c - 1, r - 1, -v),
             _ => {}
         }
-        seen += 1;
     }
-    ensure!(seen == nnz, "expected {nnz} entries, saw {seen}");
+    if seen != nnz {
+        bail!(MmioError::EntryCountMismatch { declared: nnz, seen });
+    }
     coo.to_csr()
 }
 
@@ -108,21 +252,104 @@ pub fn read_file<P: AsRef<Path>>(path: P) -> Result<Csr> {
     read_matrix_market(f)
 }
 
-/// Write CSR as `matrix coordinate real general`.
-pub fn write_matrix_market<W: Write>(m: &Csr, mut w: W) -> Result<()> {
-    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
-    writeln!(w, "% generated by opsparse")?;
-    writeln!(w, "{} {} {}", m.rows, m.cols, m.nnz())?;
+/// Write CSR as `matrix coordinate real general` (the historical default).
+pub fn write_matrix_market<W: Write>(m: &Csr, w: W) -> Result<()> {
+    write_matrix_market_with(m, Field::Real, Symmetry::General, w)
+}
+
+/// Write CSR in an explicit `field x symmetry` representation.
+///
+/// The matrix must actually be representable in the requested form, and the
+/// writer verifies rather than trusts:
+/// * `Pattern` requires every stored value to be exactly `1.0` (what the
+///   reader reconstructs), so `write -> read` round-trips bit-identically;
+/// * `Integer` requires every value to be integral and within `i64`;
+/// * `Symmetric` requires `a_ij == a_ji` for every stored entry and emits
+///   the lower triangle;
+/// * `SkewSymmetric` requires `a_ij == -a_ji` and an empty stored diagonal,
+///   and emits the strictly-lower triangle.
+pub fn write_matrix_market_with<W: Write>(
+    m: &Csr,
+    field: Field,
+    sym: Symmetry,
+    mut w: W,
+) -> Result<()> {
+    // validate representability first so a failed write never emits a
+    // half-file some later reader chokes on
+    let mut stored = 0usize;
     for i in 0..m.rows {
         let (cols, vals) = m.row(i);
         for (&c, &v) in cols.iter().zip(vals) {
-            writeln!(w, "{} {} {:.17e}", i + 1, c + 1, v)?;
+            let c = c as usize;
+            match field {
+                Field::Real => ensure!(v.is_finite(), "({},{}) non-finite value {v}", i + 1, c + 1),
+                Field::Integer => ensure!(
+                    v.fract() == 0.0 && v.abs() <= i64::MAX as f64,
+                    "({},{}) value {v} not representable as integer",
+                    i + 1,
+                    c + 1
+                ),
+                Field::Pattern => ensure!(
+                    v == 1.0,
+                    "({},{}) value {v} not representable as pattern (must be 1.0)",
+                    i + 1,
+                    c + 1
+                ),
+            }
+            match sym {
+                Symmetry::General => stored += 1,
+                Symmetry::Symmetric => {
+                    ensure!(
+                        m.get(c, i) == v,
+                        "matrix not symmetric at ({},{})",
+                        i + 1,
+                        c + 1
+                    );
+                    if c <= i {
+                        stored += 1;
+                    }
+                }
+                Symmetry::SkewSymmetric => {
+                    ensure!(c != i, "skew-symmetric cannot store diagonal ({},{})", i + 1, i + 1);
+                    ensure!(
+                        m.get(c, i) == -v,
+                        "matrix not skew-symmetric at ({},{})",
+                        i + 1,
+                        c + 1
+                    );
+                    if c < i {
+                        stored += 1;
+                    }
+                }
+            }
+        }
+    }
+    writeln!(w, "%%MatrixMarket matrix coordinate {} {}", field.as_str(), sym.as_str())?;
+    writeln!(w, "% generated by opsparse")?;
+    writeln!(w, "{} {} {}", m.rows, m.cols, stored)?;
+    for i in 0..m.rows {
+        let (cols, vals) = m.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            let c = c as usize;
+            let keep = match sym {
+                Symmetry::General => true,
+                Symmetry::Symmetric => c <= i,
+                Symmetry::SkewSymmetric => c < i,
+            };
+            if !keep {
+                continue;
+            }
+            match field {
+                Field::Real => writeln!(w, "{} {} {:.17e}", i + 1, c + 1, v)?,
+                Field::Integer => writeln!(w, "{} {} {}", i + 1, c + 1, v as i64)?,
+                Field::Pattern => writeln!(w, "{} {}", i + 1, c + 1)?,
+            }
         }
     }
     Ok(())
 }
 
-/// Write a `.mtx` file to disk.
+/// Write a `.mtx` file to disk (`real general` form).
 pub fn write_file<P: AsRef<Path>>(m: &Csr, path: P) -> Result<()> {
     let f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("create {}", path.as_ref().display()))?;
@@ -132,6 +359,13 @@ pub fn write_file<P: AsRef<Path>>(m: &Csr, path: P) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn mmio_err(r: Result<Csr>) -> MmioError {
+        let err = r.expect_err("expected a parse rejection");
+        err.downcast_ref::<MmioError>()
+            .unwrap_or_else(|| panic!("not a typed MmioError: {err:#}"))
+            .clone()
+    }
 
     #[test]
     fn parse_general_real() {
@@ -183,6 +417,24 @@ mod tests {
     }
 
     #[test]
+    fn skips_comments_and_blank_lines_mid_body() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % leading comment\n\
+                    \n\
+                    3 3 3\n\
+                    1 1 1.5\n\
+                    \n\
+                    % interleaved comment, as the SuiteSparse archive does\n\
+                    2 3 -2.0\n\
+                    \n\
+                    3 1 4.0\n\
+                    % trailing comment\n";
+        let m = read_matrix_market(text.as_bytes()).unwrap();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.get(1, 2), -2.0);
+    }
+
+    #[test]
     fn write_read_roundtrip() {
         let m = Csr::from_parts(2, 3, vec![0, 2, 3], vec![0, 2, 1], vec![0.5, -1.25, 3.75])
             .unwrap();
@@ -193,20 +445,124 @@ mod tests {
     }
 
     #[test]
+    fn typed_writer_roundtrips_each_form() {
+        // symmetric with off-diagonal pair and a diagonal entry
+        let sym =
+            Csr::from_parts(2, 2, vec![0, 2, 4], vec![0, 1, 0, 1], vec![2.0, 3.0, 3.0, -1.0])
+                .unwrap();
+        let mut buf = Vec::new();
+        write_matrix_market_with(&sym, Field::Real, Symmetry::Symmetric, &mut buf).unwrap();
+        assert_eq!(read_matrix_market(buf.as_slice()).unwrap(), sym);
+
+        // skew-symmetric: empty diagonal, mirrored negation
+        let skew = Csr::from_parts(2, 2, vec![0, 1, 2], vec![1, 0], vec![-7.0, 7.0]).unwrap();
+        let mut buf = Vec::new();
+        write_matrix_market_with(&skew, Field::Real, Symmetry::SkewSymmetric, &mut buf).unwrap();
+        assert_eq!(read_matrix_market(buf.as_slice()).unwrap(), skew);
+
+        // integer + pattern general
+        let int = Csr::from_parts(2, 2, vec![0, 1, 2], vec![1, 0], vec![42.0, -3.0]).unwrap();
+        let mut buf = Vec::new();
+        write_matrix_market_with(&int, Field::Integer, Symmetry::General, &mut buf).unwrap();
+        assert_eq!(read_matrix_market(buf.as_slice()).unwrap(), int);
+
+        let pat = Csr::from_parts(2, 2, vec![0, 2, 3], vec![0, 1, 0], vec![1.0, 1.0, 1.0])
+            .unwrap();
+        let mut buf = Vec::new();
+        write_matrix_market_with(&pat, Field::Pattern, Symmetry::General, &mut buf).unwrap();
+        assert_eq!(read_matrix_market(buf.as_slice()).unwrap(), pat);
+    }
+
+    #[test]
+    fn typed_writer_rejects_unrepresentable() {
+        let m = Csr::from_parts(2, 2, vec![0, 1, 2], vec![0, 1], vec![1.5, 2.0]).unwrap();
+        // 1.5 is not an integer, not a pattern 1.0, and m is not symmetric
+        assert!(write_matrix_market_with(&m, Field::Integer, Symmetry::General, Vec::new())
+            .is_err());
+        assert!(write_matrix_market_with(&m, Field::Pattern, Symmetry::General, Vec::new())
+            .is_err());
+        let asym = Csr::from_parts(2, 2, vec![0, 1, 1], vec![1], vec![4.0]).unwrap();
+        assert!(write_matrix_market_with(&asym, Field::Real, Symmetry::Symmetric, Vec::new())
+            .is_err());
+    }
+
+    #[test]
     fn rejects_bad_header() {
-        assert!(read_matrix_market("%%MatrixMarket matrix array real general\n1 1 1\n".as_bytes()).is_err());
+        assert!(read_matrix_market(
+            "%%MatrixMarket matrix array real general\n1 1 1\n".as_bytes()
+        )
+        .is_err());
         assert!(read_matrix_market("garbage\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn complex_field_gets_clear_unsupported_error() {
+        let text = "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 2.0 3.0\n";
+        let e = mmio_err(read_matrix_market(text.as_bytes()));
+        assert_eq!(e, MmioError::UnsupportedField("complex".into()));
+        assert!(e.to_string().contains("complex"), "{e}");
     }
 
     #[test]
     fn rejects_out_of_bounds_entry() {
         let text = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
-        assert!(read_matrix_market(text.as_bytes()).is_err());
+        let e = mmio_err(read_matrix_market(text.as_bytes()));
+        assert_eq!(e, MmioError::OutOfRange { row: 3, col: 1, rows: 2, cols: 2 });
     }
 
     #[test]
     fn rejects_truncated_entries() {
         let text = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
-        assert!(read_matrix_market(text.as_bytes()).is_err());
+        let e = mmio_err(read_matrix_market(text.as_bytes()));
+        assert_eq!(e, MmioError::EntryCountMismatch { declared: 2, seen: 1 });
+    }
+
+    #[test]
+    fn rejects_extra_entries() {
+        let text =
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0\n2 2 2.0\n";
+        let e = mmio_err(read_matrix_market(text.as_bytes()));
+        assert_eq!(e, MmioError::EntryCountMismatch { declared: 1, seen: 2 });
+    }
+
+    #[test]
+    fn rejects_duplicate_entries() {
+        let text =
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n1 1 2.0\n";
+        let e = mmio_err(read_matrix_market(text.as_bytes()));
+        assert_eq!(e, MmioError::Duplicate { row: 1, col: 1 });
+    }
+
+    #[test]
+    fn rejects_skew_diagonal() {
+        let text = "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 1\n2 2 1.0\n";
+        let e = mmio_err(read_matrix_market(text.as_bytes()));
+        assert_eq!(e, MmioError::SkewDiagonal { row: 2 });
+    }
+
+    #[test]
+    fn rejects_upper_triangle_in_symmetric() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n2 2 1\n1 2 1.0\n";
+        let e = mmio_err(read_matrix_market(text.as_bytes()));
+        assert_eq!(e, MmioError::UpperTriangle { row: 1, col: 2 });
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let nonfinite = "%%MatrixMarket matrix coordinate real general\n1 1 1\n1 1 inf\n";
+        assert_eq!(
+            mmio_err(read_matrix_market(nonfinite.as_bytes())),
+            MmioError::BadReal { row: 1, col: 1 }
+        );
+        let fractional = "%%MatrixMarket matrix coordinate integer general\n1 1 1\n1 1 1.5\n";
+        assert_eq!(
+            mmio_err(read_matrix_market(fractional.as_bytes())),
+            MmioError::BadInteger { row: 1, col: 1 }
+        );
+        let missing = "%%MatrixMarket matrix coordinate real general\n1 1 1\n1 1\n";
+        assert_eq!(
+            mmio_err(read_matrix_market(missing.as_bytes())),
+            MmioError::BadReal { row: 1, col: 1 }
+        );
     }
 }

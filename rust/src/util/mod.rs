@@ -5,6 +5,7 @@
 pub mod fmt;
 pub mod prop;
 pub mod rng;
+pub mod stats;
 
 /// Exclusive prefix sum over `v`, returning a vector one element longer whose
 /// last entry is the total. This is the CPU analog of

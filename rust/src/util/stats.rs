@@ -1,0 +1,637 @@
+//! Hypothesis-test machinery for the perf gates.
+//!
+//! Every blocking CI perf comparison used to be a single-point check
+//! (`warm_ns <= cold_ns` on one run), which flaps on scheduler noise and
+//! silently passes on luck. This module replaces those with N-repetition
+//! **one-sided Welch t-tests** at a documented significance level
+//! ([`DEFAULT_ALPHA`] = 0.01):
+//!
+//! * A gate **fails only when the candidate is *significantly worse* than
+//!   the reference** — i.e. when the one-sided p-value for "candidate is
+//!   worse" drops below `alpha`. Equal or better candidates pass, and a
+//!   noisy-but-centered candidate passes too, so gates catch real
+//!   regressions without flapping.
+//! * Repetition counts are **adaptive** ([`sample_adaptive`]): sampling
+//!   continues until the ~95% CI half-width (`2·s/√n`) shrinks below a
+//!   relative threshold of the mean, or a rep cap is hit. Deterministic
+//!   metrics converge at `min_reps`; noisy ones buy precision with reps.
+//! * Pass/fail completion rates (the chaos gate) use an **exact binomial
+//!   tail test** ([`completion_gate`]) against a target rate, so one rare
+//!   retry-chain exhaustion in hundreds of trials no longer fails CI while
+//!   a systematic completion regression still does.
+//!
+//! The special functions (`ln_gamma`, regularized incomplete beta) are
+//! self-contained Lanczos/continued-fraction implementations — the build is
+//! fully offline, so no `statrs`/`special` crates.
+
+use std::fmt::Write as _;
+
+/// Significance level shared by every blocking perf gate. One-sided: the
+/// probability of failing a gate when the candidate is truly no worse than
+/// the reference is at most this value (per gate, per run).
+pub const DEFAULT_ALPHA: f64 = 0.01;
+
+// ---------------------------------------------------------------------------
+// samples
+
+/// A sample set with the derived moments the tests need.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    pub values: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples { values: Vec::new() }
+    }
+
+    pub fn from_values(values: Vec<f64>) -> Self {
+        Samples { values }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn n(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    /// Unbiased sample variance (`n-1` denominator); 0 for fewer than two
+    /// samples.
+    pub fn var(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Approximate 95% confidence-interval half-width, `2·s/√n`. The exact
+    /// width would use the t critical value (2.78 at n=5 down to 1.96 as
+    /// n→∞); the fixed factor 2 keeps the stopping rule monotone and free
+    /// of an inverse-CDF dependency, and errs slightly tight for small n.
+    pub fn ci_half_width(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return f64::INFINITY;
+        }
+        2.0 * self.std() / (n as f64).sqrt()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// special functions
+
+/// `ln Γ(x)` for `x > 0` (Lanczos approximation, g=7, 9 coefficients;
+/// |relative error| < 1e-13 over the domain the tests use).
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection: Γ(x)Γ(1-x) = π / sin(πx)
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = G[0];
+    let t = x + 7.5;
+    for (i, &g) in G.iter().enumerate().skip(1) {
+        a += g / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Continued fraction for the incomplete beta (Numerical Recipes `betacf`).
+fn betacf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_IT: usize = 200;
+    const EPS: f64 = 3.0e-14;
+    const FPMIN: f64 = 1.0e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_IT {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Regularized incomplete beta `I_x(a, b)` for `a, b > 0`, `x ∈ [0, 1]`.
+pub fn betai(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let bt = (ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln()).exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        bt * betacf(a, b, x) / a
+    } else {
+        1.0 - bt * betacf(b, a, 1.0 - x) / b
+    }
+}
+
+/// Survival function of Student's t: `P(T > t)` with `df` degrees of
+/// freedom (`df` need not be an integer — Welch–Satterthwaite yields
+/// fractional df).
+pub fn student_t_sf(t: f64, df: f64) -> f64 {
+    if !t.is_finite() {
+        return if t > 0.0 { 0.0 } else { 1.0 };
+    }
+    let x = df / (df + t * t);
+    let tail = 0.5 * betai(0.5 * df, 0.5, x);
+    if t >= 0.0 {
+        tail
+    } else {
+        1.0 - tail
+    }
+}
+
+/// Exact binomial lower tail: `P(X <= k)` for `X ~ Binomial(n, p)`,
+/// via `I_{1-p}(n-k, k+1)`.
+pub fn binomial_cdf(k: usize, n: usize, p: f64) -> f64 {
+    if k >= n {
+        return 1.0;
+    }
+    betai((n - k) as f64, (k + 1) as f64, 1.0 - p)
+}
+
+// ---------------------------------------------------------------------------
+// Welch's t-test
+
+/// Result of a one-sided Welch two-sample t-test.
+#[derive(Clone, Copy, Debug)]
+pub struct WelchTest {
+    /// t statistic for `mean(x) - mean(y)`.
+    pub t: f64,
+    /// Welch–Satterthwaite degrees of freedom.
+    pub df: f64,
+    /// One-sided p-value for H1: `mean(x) > mean(y)`.
+    pub p_greater: f64,
+}
+
+/// Welch's unequal-variance t-test of `x` against `y`.
+///
+/// Degenerate inputs resolve deterministically rather than panic: with zero
+/// variance on both sides the p-value is 0/1/0.5 by the sign of the mean
+/// difference, and with fewer than two samples on either side the test is
+/// treated the same way (no variance information).
+pub fn welch_test(x: &Samples, y: &Samples) -> WelchTest {
+    let (nx, ny) = (x.n(), y.n());
+    let diff = x.mean() - y.mean();
+    let (vx, vy) = (x.var(), y.var());
+    let se2 = if nx > 0 && ny > 0 {
+        vx / nx as f64 + vy / ny as f64
+    } else {
+        0.0
+    };
+    if se2 <= 0.0 || nx < 2 || ny < 2 {
+        // no usable variance: the comparison is deterministic
+        let p = if diff > 0.0 {
+            0.0
+        } else if diff < 0.0 {
+            1.0
+        } else {
+            0.5
+        };
+        let t = if diff == 0.0 {
+            0.0
+        } else {
+            diff.signum() * f64::INFINITY
+        };
+        return WelchTest { t, df: (nx + ny).saturating_sub(2).max(1) as f64, p_greater: p };
+    }
+    let t = diff / se2.sqrt();
+    // Welch–Satterthwaite
+    let num = se2 * se2;
+    let den = (vx / nx as f64).powi(2) / (nx as f64 - 1.0)
+        + (vy / ny as f64).powi(2) / (ny as f64 - 1.0);
+    let df = if den > 0.0 { num / den } else { (nx + ny - 2) as f64 };
+    WelchTest { t, df, p_greater: student_t_sf(t, df) }
+}
+
+// ---------------------------------------------------------------------------
+// adaptive repetition
+
+/// Stopping rule for adaptive repetition: sample at least `min_reps`, stop
+/// as soon as the CI half-width drops below `rel_half_width · |mean|`, cap
+/// at `max_reps`. Deterministic metrics (zero variance) stop at `min_reps`.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveConfig {
+    pub min_reps: usize,
+    pub max_reps: usize,
+    /// Target relative precision of the mean (CI half-width / |mean|).
+    pub rel_half_width: f64,
+    /// Significance level the downstream gate will test at (recorded in
+    /// every [`GateResult`]).
+    pub alpha: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            min_reps: 5,
+            max_reps: 20,
+            rel_half_width: 0.05,
+            alpha: DEFAULT_ALPHA,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Env-var overrides shared by every bench binary:
+    /// `OPSPARSE_STAT_MIN_REPS`, `OPSPARSE_STAT_MAX_REPS`,
+    /// `OPSPARSE_STAT_REL_HW`, `OPSPARSE_STAT_ALPHA`.
+    pub fn from_env() -> Self {
+        let mut cfg = AdaptiveConfig::default();
+        if let Some(v) = env_parse::<usize>("OPSPARSE_STAT_MIN_REPS") {
+            cfg.min_reps = v.max(2);
+        }
+        if let Some(v) = env_parse::<usize>("OPSPARSE_STAT_MAX_REPS") {
+            cfg.max_reps = v;
+        }
+        if let Some(v) = env_parse::<f64>("OPSPARSE_STAT_REL_HW") {
+            cfg.rel_half_width = v;
+        }
+        if let Some(v) = env_parse::<f64>("OPSPARSE_STAT_ALPHA") {
+            cfg.alpha = v;
+        }
+        if cfg.max_reps < cfg.min_reps {
+            cfg.max_reps = cfg.min_reps;
+        }
+        cfg
+    }
+
+    pub fn converged(&self, s: &Samples) -> bool {
+        if s.n() < self.min_reps.max(2) {
+            return false;
+        }
+        let hw = s.ci_half_width();
+        let scale = s.mean().abs();
+        // a zero mean can't anchor a relative threshold; fall back to an
+        // absolute check against the spread itself
+        hw <= self.rel_half_width * if scale > 0.0 { scale } else { 1.0 }
+    }
+}
+
+fn env_parse<T: std::str::FromStr>(key: &str) -> Option<T> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+/// Run `measure(rep)` adaptively: at least `min_reps` times, then until the
+/// CI half-width converges or `max_reps` is hit. The rep index lets callers
+/// derive a fresh seed per repetition — the simulator itself is
+/// deterministic, so repetition variance comes from varying the workload
+/// seed, which is exactly the robustness the gates should test.
+pub fn sample_adaptive(cfg: &AdaptiveConfig, mut measure: impl FnMut(usize) -> f64) -> Samples {
+    let mut s = Samples::new();
+    for rep in 0..cfg.max_reps.max(cfg.min_reps).max(2) {
+        s.push(measure(rep));
+        if cfg.converged(&s) {
+            break;
+        }
+    }
+    s
+}
+
+/// Paired variant: each repetition produces `(candidate, reference)` from
+/// the same seeded workload; sampling stops when **both** sides converge.
+pub fn sample_adaptive_paired(
+    cfg: &AdaptiveConfig,
+    mut measure: impl FnMut(usize) -> (f64, f64),
+) -> (Samples, Samples) {
+    let mut a = Samples::new();
+    let mut b = Samples::new();
+    for rep in 0..cfg.max_reps.max(cfg.min_reps).max(2) {
+        let (x, y) = measure(rep);
+        a.push(x);
+        b.push(y);
+        if cfg.converged(&a) && cfg.converged(&b) {
+            break;
+        }
+    }
+    (a, b)
+}
+
+// ---------------------------------------------------------------------------
+// gates
+
+/// Outcome of one blocking CI gate, serialized into the bench JSON so the
+/// python check only reads a verdict it can re-derive.
+#[derive(Clone, Debug)]
+pub struct GateResult {
+    pub name: String,
+    /// `"welch_one_sided"` or `"binomial_exact"`.
+    pub kind: String,
+    pub pass: bool,
+    /// One-sided p-value for "the candidate is worse than the reference".
+    pub p: f64,
+    pub alpha: f64,
+    /// Mean of the candidate metric (observed rate for binomial gates).
+    pub candidate_mean: f64,
+    /// Mean of the reference metric (target rate for binomial gates).
+    pub reference_mean: f64,
+    pub reps_candidate: usize,
+    pub reps_reference: usize,
+    pub t: f64,
+    pub df: f64,
+    pub detail: String,
+}
+
+impl GateResult {
+    /// Hand-rolled JSON object (the repo has no serde).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{{\"name\":\"{}\",\"kind\":\"{}\",\"pass\":{},\"p\":{},\"alpha\":{},\
+             \"candidate_mean\":{},\"reference_mean\":{},\"reps_candidate\":{},\
+             \"reps_reference\":{},\"t\":{},\"df\":{},\"detail\":\"{}\"}}",
+            self.name,
+            self.kind,
+            self.pass,
+            jnum(self.p),
+            jnum(self.alpha),
+            jnum(self.candidate_mean),
+            jnum(self.reference_mean),
+            self.reps_candidate,
+            self.reps_reference,
+            jnum(self.t),
+            jnum(self.df),
+            self.detail.replace('"', "'"),
+        );
+        s
+    }
+}
+
+/// Render an f64 as a JSON-safe number (non-finite values have no JSON
+/// representation; clamp to huge-but-finite so parsers stay happy).
+fn jnum(v: f64) -> String {
+    if v.is_nan() {
+        return "0".into();
+    }
+    if v.is_infinite() {
+        return if v > 0.0 { "1e308".into() } else { "-1e308".into() };
+    }
+    // `Display` for f64 emits plain decimal or `5e-324`-style exponents,
+    // both valid JSON numbers
+    format!("{v}")
+}
+
+/// One-sided Welch gate: **fail only if the candidate is significantly
+/// worse than the reference** at level `alpha`.
+///
+/// "Worse" depends on the metric direction: with `higher_is_better=false`
+/// (latencies, makespans) worse means greater, so the test is
+/// H1: `mean(candidate) > mean(reference)`; with `higher_is_better=true`
+/// (throughput) the sides swap. `pass = p >= alpha`.
+pub fn not_worse_gate(
+    name: &str,
+    candidate: &Samples,
+    reference: &Samples,
+    higher_is_better: bool,
+    alpha: f64,
+) -> GateResult {
+    let w = if higher_is_better {
+        welch_test(reference, candidate) // H1: reference > candidate
+    } else {
+        welch_test(candidate, reference) // H1: candidate > reference
+    };
+    let p = w.p_greater;
+    GateResult {
+        name: name.to_string(),
+        kind: "welch_one_sided".to_string(),
+        pass: p >= alpha,
+        p,
+        alpha,
+        candidate_mean: candidate.mean(),
+        reference_mean: reference.mean(),
+        reps_candidate: candidate.n(),
+        reps_reference: reference.n(),
+        t: w.t,
+        df: w.df,
+        detail: format!(
+            "H1: candidate {} reference; fail iff p < alpha",
+            if higher_is_better { "<" } else { ">" }
+        ),
+    }
+}
+
+/// Exact binomial completion gate: **fail only if the observed success
+/// count is significantly below the target rate `p0`** at level `alpha`
+/// (`p = P(X <= completed | n, p0)`, fail iff `p < alpha`).
+///
+/// At `p0 = 0.995`, one lost job in 200 trials gives
+/// `p = P(X <= 199) = 1 - 0.995^200 ≈ 0.63` — passes; a systematic drop to
+/// 95% completion gives `p < 1e-6` — fails.
+pub fn completion_gate(
+    name: &str,
+    completed: usize,
+    total: usize,
+    p0: f64,
+    alpha: f64,
+) -> GateResult {
+    let p = if total == 0 { 1.0 } else { binomial_cdf(completed, total, p0) };
+    let observed = if total == 0 { 1.0 } else { completed as f64 / total as f64 };
+    GateResult {
+        name: name.to_string(),
+        kind: "binomial_exact".to_string(),
+        pass: p >= alpha,
+        p,
+        alpha,
+        candidate_mean: observed,
+        reference_mean: p0,
+        reps_candidate: total,
+        reps_reference: 0,
+        t: 0.0,
+        df: 0.0,
+        detail: format!(
+            "exact binomial tail P(X <= {completed} | n={total}, p0={p0}); fail iff p < alpha"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol, "{a} !~ {b} (tol {tol})");
+    }
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        approx(ln_gamma(5.0), 24.0f64.ln(), 1e-12);
+        approx(ln_gamma(1.0), 0.0, 1e-12);
+        approx(ln_gamma(0.5), std::f64::consts::PI.sqrt().ln(), 1e-12);
+    }
+
+    #[test]
+    fn betai_known_values() {
+        // I_x(1, 1) = x
+        approx(betai(1.0, 1.0, 0.3), 0.3, 1e-12);
+        // symmetry: I_x(a,b) = 1 - I_{1-x}(b,a)
+        approx(betai(2.5, 1.5, 0.4), 1.0 - betai(1.5, 2.5, 0.6), 1e-12);
+        assert_eq!(betai(2.0, 3.0, 0.0), 0.0);
+        assert_eq!(betai(2.0, 3.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn t_sf_center_and_tails() {
+        approx(student_t_sf(0.0, 7.0), 0.5, 1e-12);
+        // standard normal limit: P(T > 1.96) -> 0.025 as df grows
+        approx(student_t_sf(1.96, 1e6), 0.025, 1e-3);
+        // symmetry
+        approx(
+            student_t_sf(-1.3, 9.0) + student_t_sf(1.3, 9.0),
+            1.0,
+            1e-12,
+        );
+        assert!(student_t_sf(100.0, 5.0) < 1e-6);
+    }
+
+    #[test]
+    fn binomial_cdf_hand_computed() {
+        // n=10, p=0.5: P(X<=2) = (1 + 10 + 45) / 1024
+        approx(binomial_cdf(2, 10, 0.5), 56.0 / 1024.0, 1e-12);
+        assert_eq!(binomial_cdf(10, 10, 0.5), 1.0);
+        assert_eq!(binomial_cdf(12, 10, 0.5), 1.0);
+    }
+
+    #[test]
+    fn welch_separated_samples_significant() {
+        let x = Samples::from_values(vec![10.0, 10.1, 9.9, 10.2, 9.8]);
+        let y = Samples::from_values(vec![5.0, 5.1, 4.9, 5.2, 4.8]);
+        let w = welch_test(&x, &y);
+        assert!(w.p_greater < 1e-4, "p={}", w.p_greater);
+        let back = welch_test(&y, &x);
+        assert!(back.p_greater > 0.999, "p={}", back.p_greater);
+    }
+
+    #[test]
+    fn welch_zero_variance_is_deterministic() {
+        let x = Samples::from_values(vec![3.0, 3.0, 3.0]);
+        let y = Samples::from_values(vec![2.0, 2.0, 2.0]);
+        assert_eq!(welch_test(&x, &y).p_greater, 0.0);
+        assert_eq!(welch_test(&y, &x).p_greater, 1.0);
+        assert_eq!(welch_test(&x, &x).p_greater, 0.5);
+    }
+
+    #[test]
+    fn adaptive_stops_early_on_deterministic_metric() {
+        let cfg = AdaptiveConfig { min_reps: 3, max_reps: 50, ..Default::default() };
+        let s = sample_adaptive(&cfg, |_| 42.0);
+        assert_eq!(s.n(), 3);
+        approx(s.mean(), 42.0, 0.0);
+    }
+
+    #[test]
+    fn adaptive_spends_reps_on_noisy_metric() {
+        let cfg = AdaptiveConfig {
+            min_reps: 3,
+            max_reps: 8,
+            rel_half_width: 1e-9,
+            ..Default::default()
+        };
+        // alternating values never reach 1e-9 relative precision: cap hit
+        let s = sample_adaptive(&cfg, |rep| if rep % 2 == 0 { 1.0 } else { 2.0 });
+        assert_eq!(s.n(), 8);
+    }
+
+    #[test]
+    fn paired_sampler_tracks_both_sides() {
+        let cfg = AdaptiveConfig { min_reps: 4, max_reps: 10, ..Default::default() };
+        let (a, b) = sample_adaptive_paired(&cfg, |rep| (1.0, rep as f64));
+        assert_eq!(a.n(), b.n());
+        assert!(a.n() >= 4);
+    }
+
+    #[test]
+    fn not_worse_gate_directions() {
+        let fast = Samples::from_values(vec![1.0, 1.1, 0.9, 1.0, 1.05]);
+        let slow = Samples::from_values(vec![9.0, 9.1, 8.9, 9.0, 9.05]);
+        // lower is better: fast candidate passes, slow candidate fails
+        assert!(not_worse_gate("g", &fast, &slow, false, DEFAULT_ALPHA).pass);
+        assert!(!not_worse_gate("g", &slow, &fast, false, DEFAULT_ALPHA).pass);
+        // higher is better: the directions flip
+        assert!(not_worse_gate("g", &slow, &fast, true, DEFAULT_ALPHA).pass);
+        assert!(!not_worse_gate("g", &fast, &slow, true, DEFAULT_ALPHA).pass);
+        // statistical tie passes both ways
+        assert!(not_worse_gate("g", &fast, &fast, false, DEFAULT_ALPHA).pass);
+    }
+
+    #[test]
+    fn completion_gate_tolerates_rare_loss_catches_regression() {
+        let ok = completion_gate("c", 199, 200, 0.995, DEFAULT_ALPHA);
+        assert!(ok.pass, "one loss in 200 at p0=0.995 must pass: p={}", ok.p);
+        let bad = completion_gate("c", 190, 200, 0.995, DEFAULT_ALPHA);
+        assert!(!bad.pass, "95% completion must fail: p={}", bad.p);
+        assert!(completion_gate("c", 200, 200, 0.995, DEFAULT_ALPHA).pass);
+    }
+
+    #[test]
+    fn gate_json_is_parseable_shape() {
+        let g = completion_gate("chaos_gentle_completion", 200, 200, 0.995, 0.01);
+        let j = g.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"pass\":true"));
+        assert!(j.contains("\"kind\":\"binomial_exact\""));
+        assert!(!j.contains("inf") && !j.contains("NaN"));
+    }
+}

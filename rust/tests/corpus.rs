@@ -1,0 +1,128 @@
+//! Corpus integration tests: the checked-in Matrix Market fixtures load,
+//! each one routes exactly where the provenance table in ARCHITECTURE.md
+//! says it should, and the full corpus run is bit-identical across the
+//! unsharded / sharded / serve paths.
+//!
+//! The route pins are deliberately table-driven *by fixture name*: adding
+//! a matrix to `rust/corpus/` without adding a row here fails loudly, so
+//! the routing contract stays documented next to the corpus itself.
+
+use opsparse::bench::corpus::{
+    self, load_corpus, resolve_corpus_dir, run_corpus, synthesized_entries, MIN_REAL_FIXTURES,
+};
+use opsparse::coordinator::{Route, Router};
+
+/// Expected router decision per checked-in fixture, keyed by file stem.
+/// Dense-block FEM-like matrices take the block engine; everything else
+/// in the small-fixture corpus stays on the hash pipeline (they all fit
+/// the 256 KiB corpus budget, so nothing shards).
+const ROUTE_PINS: &[(&str, &str)] = &[
+    ("band_wide_cage_like", "Hash"),
+    ("blocky_bsr_like", "Block"),
+    ("diag_dominant_jacobi", "Hash"),
+    ("fem_cant_like", "Block"),
+    ("fem_ship_like", "Block"),
+    ("int_econ_like", "Hash"),
+    ("pattern_road_like", "Hash"),
+    ("power_patents_like", "Hash"),
+    ("power_web_like", "Hash"),
+    ("skew_circuit_like", "Hash"),
+    ("stencil_lap2d_like", "Hash"),
+    ("tridiag_near_diag", "Hash"),
+];
+
+#[test]
+fn corpus_has_enough_real_fixtures() {
+    let dir = resolve_corpus_dir(None);
+    let entries = load_corpus(&dir).expect("load corpus");
+    assert!(
+        entries.len() >= MIN_REAL_FIXTURES,
+        "corpus at {} holds {} fixtures, need at least {}",
+        dir.display(),
+        entries.len(),
+        MIN_REAL_FIXTURES
+    );
+    for e in &entries {
+        assert_eq!(e.source, "fixture");
+        assert_eq!(e.a.rows, e.a.cols, "{}: corpus matrices are square", e.name);
+        assert!(e.a.nnz() > 0, "{}: empty fixture", e.name);
+    }
+}
+
+#[test]
+fn every_fixture_routes_as_pinned() {
+    let dir = resolve_corpus_dir(None);
+    let entries = load_corpus(&dir).expect("load corpus");
+    let router = Router::new(corpus::corpus_router_config());
+    for e in &entries {
+        let expected = ROUTE_PINS
+            .iter()
+            .find(|(name, _)| *name == e.name)
+            .unwrap_or_else(|| {
+                panic!(
+                    "fixture {} has no route pin — add it to ROUTE_PINS (and to the \
+                     provenance table in ARCHITECTURE.md)",
+                    e.name
+                )
+            })
+            .1;
+        let route = router.route(&e.a, &e.a);
+        let got = corpus::route_label(&route);
+        assert_eq!(
+            got, expected,
+            "{}: router chose {} but the pin table says {}",
+            e.name, got, expected
+        );
+    }
+    // and the pin table must not reference fixtures that no longer exist
+    for (name, _) in ROUTE_PINS {
+        assert!(
+            entries.iter().any(|e| e.name == *name),
+            "route pin for {name} references a missing fixture"
+        );
+    }
+}
+
+#[test]
+fn synthesized_large_regimes_route_to_sharded() {
+    let router = Router::new(corpus::corpus_router_config());
+    for e in synthesized_entries().expect("synthesized entries") {
+        assert_eq!(e.source, "synthesized");
+        let route = router.route(&e.a, &e.a);
+        assert!(
+            matches!(route, Route::Sharded { n_devices } if n_devices >= 2),
+            "{}: synthesized regime must exceed the 256 KiB corpus budget and \
+             shard, got {route:?}",
+            e.name
+        );
+    }
+}
+
+#[test]
+fn full_corpus_run_is_bit_identical_everywhere() {
+    let dir = resolve_corpus_dir(None);
+    let report = run_corpus(&dir).expect("run corpus");
+    assert!(report.fixtures >= MIN_REAL_FIXTURES);
+    assert_eq!(report.rows.len(), report.fixtures + report.synthesized);
+    assert!(
+        report.all_bit_identical,
+        "a corpus matrix diverged across unsharded/sharded/serve/mmio paths"
+    );
+    for r in &report.rows {
+        assert!(r.bit_identical_sharded, "{}: sharded stitch diverged", r.name);
+        assert!(r.bit_identical_serve, "{}: serve path diverged", r.name);
+        assert!(r.mmio_roundtrip, "{}: mmio round trip not bit-identical", r.name);
+        assert!(
+            r.speedup_vs_cusparse.is_finite() && r.speedup_vs_cusparse > 0.0,
+            "{}: degenerate speedup {}",
+            r.name,
+            r.speedup_vs_cusparse
+        );
+        assert_eq!(
+            r.bin_occupancy.iter().sum::<usize>(),
+            r.rows,
+            "{}: every row lands in exactly one symbolic bin",
+            r.name
+        );
+    }
+}

@@ -1,0 +1,332 @@
+//! Property/fuzz tests for `sparse::mmio` via the in-house
+//! `util::prop::check` harness: write→read round trips must be
+//! bit-identical for every generator family × field × symmetry the
+//! writer supports, and malformed input must be rejected with a *typed*
+//! [`MmioError`] — never a panic, never a silently corrupted matrix.
+//!
+//! (`pattern × skew-symmetric` is excluded from the round-trip matrix:
+//! the mirror of a pattern `1.0` entry is `-1.0`, which pattern storage
+//! cannot represent — the writer rejects it, and a test pins that.)
+
+use opsparse::sparse::mmio::{self, Field, MmioError, Symmetry};
+use opsparse::sparse::Csr;
+use opsparse::util::prop::check;
+use opsparse::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Build a CSR from per-row column→value maps (sorted, deduplicated).
+fn csr_from_rows(n: usize, rows: Vec<BTreeMap<usize, f64>>) -> Csr {
+    let mut rpt = vec![0usize];
+    let mut col = Vec::new();
+    let mut val = Vec::new();
+    for r in &rows {
+        for (&c, &v) in r {
+            col.push(c as u32);
+            val.push(v);
+        }
+        rpt.push(col.len());
+    }
+    Csr::from_parts(n, n, rpt, col, val).unwrap()
+}
+
+/// A value representable in `field`: dyadic k/8 reals (exact in text),
+/// small nonzero integers, or the pattern constant 1.0.
+fn field_value(rng: &mut Rng, field: Field) -> f64 {
+    match field {
+        Field::Pattern => 1.0,
+        Field::Integer => {
+            let v = 1.0 + rng.below(9) as f64;
+            if rng.below(2) == 1 {
+                -v
+            } else {
+                v
+            }
+        }
+        Field::Real => {
+            let v = (1 + rng.below(13)) as f64 / 8.0;
+            if rng.below(2) == 1 {
+                -v
+            } else {
+                v
+            }
+        }
+    }
+}
+
+/// Generate a random square matrix representable in `(field, sym)` with
+/// the sparsity structure of one generator family: 0 = uniform scatter,
+/// 1 = near-diagonal band, 2 = power-law (hub rows), 3 = diagonal-heavy.
+fn gen_matrix(rng: &mut Rng, size: usize, family: usize, field: Field, sym: Symmetry) -> Csr {
+    let n = size.clamp(2, 64);
+    let mut rows: Vec<BTreeMap<usize, f64>> = vec![BTreeMap::new(); n];
+    let mut put = |rows: &mut Vec<BTreeMap<usize, f64>>, r: usize, c: usize, v: f64| match sym {
+        Symmetry::General => {
+            rows[r].insert(c, v);
+        }
+        Symmetry::Symmetric => {
+            // always install the pair together so later overwrites keep
+            // the matrix exactly symmetric
+            rows[r].insert(c, v);
+            rows[c].insert(r, v);
+        }
+        Symmetry::SkewSymmetric => {
+            if r != c {
+                rows[r].insert(c, v);
+                rows[c].insert(r, -v);
+            }
+        }
+    };
+    for r in 0..n {
+        let deg = match family {
+            0 => 1 + rng.range(0, 3),
+            1 => 2,
+            2 => {
+                if r < n / 8 + 1 {
+                    1 + rng.range(0, n.min(6))
+                } else {
+                    1
+                }
+            }
+            _ => 1 + rng.range(0, 2),
+        };
+        for _ in 0..deg {
+            let c = match family {
+                // uniform / power-law: anywhere
+                0 | 2 => rng.range(0, n),
+                // band: within ±2 of the diagonal
+                1 => (r + rng.range(0, 5)).saturating_sub(2).min(n - 1),
+                // diagonal-heavy: the diagonal itself plus a rare scatter
+                _ => {
+                    if rng.below(4) == 0 {
+                        rng.range(0, n)
+                    } else {
+                        r
+                    }
+                }
+            };
+            let v = field_value(rng, field);
+            put(&mut rows, r, c, v);
+        }
+    }
+    csr_from_rows(n, rows)
+}
+
+#[test]
+fn roundtrip_bit_identical_per_family_field_symmetry() {
+    for family in 0..4usize {
+        for field in Field::ALL {
+            for sym in Symmetry::ALL {
+                if field == Field::Pattern && sym == Symmetry::SkewSymmetric {
+                    continue; // unrepresentable by construction
+                }
+                let name = format!(
+                    "mmio-roundtrip/family{family}/{}/{}",
+                    field.as_str(),
+                    sym.as_str()
+                );
+                check(
+                    &name,
+                    8,
+                    24,
+                    |rng, size| gen_matrix(rng, size, family, field, sym),
+                    |m| {
+                        let mut buf = Vec::new();
+                        mmio::write_matrix_market_with(m, field, sym, &mut buf)
+                            .map_err(|e| format!("write failed: {e:#}"))?;
+                        let back = mmio::read_matrix_market(buf.as_slice())
+                            .map_err(|e| format!("read failed: {e:#}"))?;
+                        if back != *m {
+                            return Err(format!(
+                                "round trip not bit-identical: {} nnz in, {} nnz out",
+                                m.nnz(),
+                                back.nnz()
+                            ));
+                        }
+                        Ok(())
+                    },
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn general_real_writer_roundtrips_any_finite_matrix() {
+    // the default writer must round-trip arbitrary f64 values (17
+    // significant digits), not just the dyadic ones above
+    check(
+        "mmio-roundtrip/general-real-arbitrary",
+        16,
+        32,
+        |rng, size| {
+            let n = size.clamp(2, 64);
+            let mut rows: Vec<BTreeMap<usize, f64>> = vec![BTreeMap::new(); n];
+            for r in 0..n {
+                for _ in 0..1 + rng.range(0, 3) {
+                    let c = rng.range(0, n);
+                    rows[r].insert(c, rng.value());
+                }
+            }
+            csr_from_rows(n, rows)
+        },
+        |m| {
+            let mut buf = Vec::new();
+            mmio::write_matrix_market(m, &mut buf).map_err(|e| format!("write: {e:#}"))?;
+            let back =
+                mmio::read_matrix_market(buf.as_slice()).map_err(|e| format!("read: {e:#}"))?;
+            if back != *m {
+                return Err("general real round trip not bit-identical".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Corrupt a well-formed file in one of several typed ways and demand the
+/// reader rejects it with the matching [`MmioError`] variant — and never
+/// panics on any of them.
+#[test]
+fn malformed_input_rejected_with_typed_errors() {
+    let expect = |text: &str| -> MmioError {
+        let err = mmio::read_matrix_market(text.as_bytes())
+            .expect_err("malformed input must be rejected");
+        err.downcast_ref::<MmioError>()
+            .unwrap_or_else(|| panic!("untyped rejection for:\n{text}\n  error: {err:#}"))
+            .clone()
+    };
+
+    check(
+        "mmio-reject/typed",
+        24,
+        16,
+        |rng, size| {
+            let m = gen_matrix(rng, size, 0, Field::Real, Symmetry::General);
+            let mutation = rng.below(6);
+            (m, mutation)
+        },
+        |(m, mutation)| {
+            let mut buf = Vec::new();
+            mmio::write_matrix_market(m, &mut buf).map_err(|e| format!("write: {e:#}"))?;
+            let text = String::from_utf8(buf).map_err(|e| e.to_string())?;
+            let mut lines: Vec<String> = text.lines().map(|s| s.to_string()).collect();
+            // lines[0] header, lines[1] comment, lines[2] size, body after
+            if lines.len() < 4 {
+                return Ok(()); // nothing to corrupt on an empty body
+            }
+            let got = match mutation {
+                0 => {
+                    // truncate the body
+                    lines.pop();
+                    expect(&(lines.join("\n") + "\n"))
+                }
+                1 => {
+                    // append a duplicate of the last entry
+                    lines.push(lines.last().unwrap().clone());
+                    expect(&(lines.join("\n") + "\n"))
+                }
+                2 => {
+                    // out-of-range row index
+                    let last = lines.last().unwrap().clone();
+                    let mut toks: Vec<&str> = last.split_whitespace().collect();
+                    let big = format!("{}", m.rows + 7);
+                    toks[0] = &big;
+                    *lines.last_mut().unwrap() = toks.join(" ");
+                    expect(&(lines.join("\n") + "\n"))
+                }
+                3 => {
+                    // non-finite real value
+                    let last = lines.last().unwrap().clone();
+                    let mut toks: Vec<&str> = last.split_whitespace().collect();
+                    toks[2] = "nan";
+                    *lines.last_mut().unwrap() = toks.join(" ");
+                    expect(&(lines.join("\n") + "\n"))
+                }
+                4 => {
+                    // complex field in the header
+                    lines[0] = "%%MatrixMarket matrix coordinate complex general".to_string();
+                    expect(&(lines.join("\n") + "\n"))
+                }
+                _ => {
+                    // extra entry beyond the declared count (fresh
+                    // coordinate so the duplicate check can't fire first)
+                    lines.push(format!("{} {} 9.0", m.rows, m.cols));
+                    let e = mmio::read_matrix_market((lines.join("\n") + "\n").as_bytes())
+                        .expect_err("extra entry must be rejected");
+                    match e.downcast_ref::<MmioError>() {
+                        Some(t) => t.clone(),
+                        None => return Err(format!("untyped rejection: {e:#}")),
+                    }
+                }
+            };
+            let ok = matches!(
+                (mutation, &got),
+                (0, MmioError::EntryCountMismatch { .. })
+                    | (1, MmioError::Duplicate { .. })
+                    | (2, MmioError::OutOfRange { .. })
+                    | (3, MmioError::BadReal { .. })
+                    | (4, MmioError::UnsupportedField(_))
+                    | (5, MmioError::EntryCountMismatch { .. })
+                    | (5, MmioError::Duplicate { .. })
+            );
+            if !ok {
+                return Err(format!("mutation {mutation} produced unexpected error {got:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn skew_with_diagonal_rejected_both_directions() {
+    // reader: a skew file storing a diagonal entry
+    let text = "%%MatrixMarket matrix coordinate real skew-symmetric\n3 3 2\n2 1 1.0\n3 3 2.0\n";
+    let err = mmio::read_matrix_market(text.as_bytes()).expect_err("skew diagonal must fail");
+    assert_eq!(
+        err.downcast_ref::<MmioError>(),
+        Some(&MmioError::SkewDiagonal { row: 3 })
+    );
+    // writer: a matrix with a nonzero diagonal cannot be written skew
+    let m = Csr::from_parts(2, 2, vec![0, 1, 2], vec![0, 1], vec![1.0, 1.0]).unwrap();
+    assert!(mmio::write_matrix_market_with(&m, Field::Real, Symmetry::SkewSymmetric, Vec::new())
+        .is_err());
+}
+
+#[test]
+fn pattern_skew_symmetric_is_rejected_by_the_writer() {
+    let m = Csr::from_parts(2, 2, vec![0, 1, 2], vec![1, 0], vec![1.0, -1.0]).unwrap();
+    // values are a valid skew pair but -1.0 is not a pattern value
+    assert!(
+        mmio::write_matrix_market_with(&m, Field::Pattern, Symmetry::SkewSymmetric, Vec::new())
+            .is_err()
+    );
+}
+
+#[test]
+fn arbitrary_garbage_never_panics() {
+    // bytes that merely *look* like MatrixMarket must produce Err, not
+    // a panic, whatever the corruption
+    check(
+        "mmio-reject/garbage",
+        64,
+        12,
+        |rng, size| {
+            let mut s = String::from("%%MatrixMarket matrix coordinate real general\n");
+            for _ in 0..rng.range(0, size.max(1)) {
+                match rng.below(5) {
+                    0 => s.push_str("1 1 1.0\n"),
+                    1 => s.push_str(&format!("{} {} {}\n", rng.below(9), rng.below(9), rng.f64())),
+                    2 => s.push_str("% comment\n"),
+                    3 => s.push_str("not numbers at all\n"),
+                    _ => s.push_str(&format!("{} {}\n", rng.below(5), rng.below(5))),
+                }
+            }
+            s
+        },
+        |text| {
+            // success or typed failure are both fine; a panic is the only
+            // losing outcome, and the harness would surface it
+            let _ = mmio::read_matrix_market(text.as_bytes());
+            Ok(())
+        },
+    );
+}
