@@ -1,0 +1,62 @@
+//! `cargo bench --bench engines` — the engine-dispatch ablation:
+//! fixed-hash vs fixed-block vs measured dispatch (`EngineMode::Auto`)
+//! over blocky/FEM and scattered corpus classes, with per-seed dispatch
+//! lifecycles (cold estimate → engine-tagged measurement → hysteresis
+//! convergence) and Welch-gated verdicts.
+//!
+//! Env:
+//! * `OPSPARSE_ENGINE_BENCH_REPS=<n>` — seeds per class (default
+//!   `DEFAULT_ENGINE_REPS`)
+//! * `OPSPARSE_BENCH_JSON_ENGINES=<path>` — record the report as JSON;
+//!   CI writes `BENCH_engines.json` this way and blocks on the embedded
+//!   gates: per class dispatched is statistically no worse (alpha 0.01)
+//!   than the better fixed engine, and on the blocky/FEM classes
+//!   dispatched is strictly faster than fixed hash.
+//!
+//! The bench itself enforces the same contracts, so a plain
+//! `cargo bench --bench engines` fails loudly without CI.
+
+use opsparse::bench::{engines, write_engines_json};
+
+fn main() {
+    let reps = std::env::var("OPSPARSE_ENGINE_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(engines::DEFAULT_ENGINE_REPS);
+    let report = engines::engines_ablation(reps).expect("engines bench");
+    println!(
+        "{:<20} {:>6} {:>14} {:>14} {:>14} {:>6} {:>5} {:>5}",
+        "class", "blocky", "hash_ns", "block_ns", "dispatched_ns", "bpick", "cold", "bit"
+    );
+    for r in &report.rows {
+        println!(
+            "{:<20} {:>6} {:>14.0} {:>14.0} {:>14.0} {:>4}/{} {:>3}/{} {:>5}",
+            r.class,
+            r.blocky,
+            r.hash_ns_mean,
+            r.block_ns_mean,
+            r.dispatched_ns_mean,
+            r.dispatched_block_picks,
+            r.reps,
+            r.cold_agreed,
+            r.reps,
+            r.bit_identical
+        );
+    }
+    for g in &report.gates {
+        println!(
+            "gate {:<45} pass {} p {:.4} (candidate {:.0} ns vs reference {:.0} ns)",
+            g.name, g.pass, g.p, g.candidate_mean, g.reference_mean
+        );
+    }
+    assert!(
+        report.all_bit_identical,
+        "the native block engine diverged from the hash pipeline on some seed"
+    );
+    for g in &report.gates {
+        assert!(g.pass, "engine gate {} failed: p={} detail={}", g.name, g.p, g.detail);
+    }
+    if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON_ENGINES") {
+        write_engines_json(&path, &report).expect("write engines json");
+    }
+}

@@ -212,6 +212,7 @@ pub fn route_label(route: &Route) -> String {
         Route::Hash => "Hash".to_string(),
         Route::Block => "Block".to_string(),
         Route::Sharded { n_devices } => format!("Sharded:{n_devices}"),
+        Route::ShardedBlock { n_devices } => format!("ShardedBlock:{n_devices}"),
     }
 }
 
@@ -353,5 +354,9 @@ mod tests {
         assert_eq!(route_label(&Route::Hash), "Hash");
         assert_eq!(route_label(&Route::Block), "Block");
         assert_eq!(route_label(&Route::Sharded { n_devices: 3 }), "Sharded:3");
+        assert_eq!(
+            route_label(&Route::ShardedBlock { n_devices: 3 }),
+            "ShardedBlock:3"
+        );
     }
 }

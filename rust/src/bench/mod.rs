@@ -4,6 +4,7 @@
 
 pub mod chaos_bench;
 pub mod corpus;
+pub mod engines;
 pub mod figures;
 pub mod serve_bench;
 pub mod tables;
@@ -337,6 +338,45 @@ pub fn write_corpus_json(path: &str, report: &corpus::CorpusReport) -> Result<()
         ));
     }
     out.push_str("  ]\n}\n");
+    std::fs::write(path, out)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Serialize the engine-dispatch ablation as JSON: `BENCH_engines.json`,
+/// uploaded by CI next to the other `BENCH_*.json` baselines and consumed
+/// by the blocking engine gates there (per class: dispatched statistically
+/// no worse than the better fixed engine; on the blocky/FEM classes,
+/// dispatched strictly faster than fixed hash; the native block engine
+/// bitwise identical to the hash pipeline on every seed). One row per
+/// class plus the embedded Welch-gate verdicts — the file is a contract,
+/// keep it small.
+pub fn write_engines_json(path: &str, report: &engines::EnginesReport) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\n  \"bench\": \"engines\",\n  \"reps\": {},\n  \"all_bit_identical\": {},\n  \
+         \"rows\": [\n",
+        report.reps, report.all_bit_identical
+    ));
+    for (i, r) in report.rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"class\": \"{}\", \"blocky\": {}, \"reps\": {}, \
+             \"hash_ns_mean\": {:.1}, \"block_ns_mean\": {:.1}, \
+             \"dispatched_ns_mean\": {:.1}, \"dispatched_block_picks\": {}, \
+             \"cold_agreed\": {}, \"bit_identical\": {}}}{}\n",
+            r.class,
+            r.blocky,
+            r.reps,
+            r.hash_ns_mean,
+            r.block_ns_mean,
+            r.dispatched_ns_mean,
+            r.dispatched_block_picks,
+            r.cold_agreed,
+            r.bit_identical,
+            if i + 1 < report.rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str(&format!("  ],\n{}\n}}\n", gates_json_fragment(&report.gates)));
     std::fs::write(path, out)?;
     println!("wrote {path}");
     Ok(())

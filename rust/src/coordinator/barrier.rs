@@ -23,7 +23,7 @@
 //! sub-jobs, so workers drain every in-flight barrier first.
 
 use super::cache::PatternKey;
-use super::feedback::{ExecHistory, RunObservation};
+use super::feedback::{Engine, ExecHistory, RunObservation};
 use super::metrics::Metrics;
 use super::router::Route;
 use super::service::{finish, JobResult};
@@ -86,6 +86,11 @@ pub struct SpeculationState {
     pub b_fp: u64,
     pub measure: bool,
     pub ranges: Vec<(usize, usize)>,
+    /// Engine the primaries run on — a backup must run the identical
+    /// engine or first-result-wins would not be bit-identical.
+    pub engine: Engine,
+    /// Block size of the shard plan's alignment (block-engine shards).
+    pub block_t: usize,
 }
 
 /// One backup sub-job the speculation monitor should launch.
@@ -97,6 +102,8 @@ pub struct SpeculationPlan {
     pub b: Arc<Csr>,
     pub b_fp: u64,
     pub measure: bool,
+    pub engine: Engine,
+    pub block_t: usize,
 }
 
 struct State {
@@ -315,6 +322,8 @@ impl ShardBarrier {
                     b: Arc::clone(&spec.b),
                     b_fp: spec.b_fp,
                     measure: spec.measure,
+                    engine: spec.engine,
+                    block_t: spec.block_t,
                 });
             }
         }
@@ -341,11 +350,22 @@ impl ShardBarrier {
             .zip(ns)
             .map(|(&(lo, hi), &ns)| MeasuredShard { lo, hi, ns: ns.unwrap_or(0.0) })
             .collect();
+        // Engine-tagged timing: the shards ran in parallel, so the
+        // engine-comparable figure is the makespan (slowest shard), not
+        // the sum — that is what an unsharded run of the same engine
+        // competes against in the dispatcher.
+        let engine = match self.route {
+            Route::ShardedBlock { .. } | Route::Block => Engine::Block,
+            _ => Engine::Hash,
+        };
+        let engine_ns = shards.iter().map(|s| s.ns).fold(0.0_f64, f64::max);
         let obs = RunObservation {
             shards,
             wall_ns: self.t0.elapsed().as_nanos() as f64,
             nprod: nprod as u64,
             chunk: None,
+            engine,
+            engine_ns,
         };
         let mut h = fb.history.lock().unwrap_or_else(|e| e.into_inner());
         h.record(fb.key, obs);
@@ -524,8 +544,42 @@ mod tests {
             ]
         );
         assert!(stats.ewma_wall_ns > 0.0, "end-to-end wall time must be folded in");
+        assert!(stats.hash.warm(), "a Sharded (hash-engine) run must tag the hash EWMA");
+        assert_eq!(stats.hash.ewma_ns, 2500.0, "engine ns is the shard makespan");
+        assert!(!stats.block.warm(), "the block EWMA must stay untouched");
         let snap = metrics.snapshot();
         assert_eq!(snap.history_patterns, 1, "occupancy gauge must refresh");
+    }
+
+    #[test]
+    fn sharded_block_parent_tags_the_block_engine() {
+        let m = Csr::identity(4);
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let history = Arc::new(Mutex::new(ExecHistory::new(8)));
+        let b = ShardBarrier::new(
+            7,
+            Route::ShardedBlock { n_devices: 2 },
+            2,
+            8,
+            4,
+            tx,
+            Arc::clone(&metrics),
+            Instant::now(),
+            Some(ShardFeedback {
+                history: Arc::clone(&history),
+                key: (33, 44),
+                ranges: vec![(0, 4), (4, 8)],
+            }),
+        );
+        b.complete(0, Ok(shard_output(&m)), Some(900.0));
+        b.complete(1, Ok(shard_output(&m)), Some(700.0));
+        assert!(rx.recv().unwrap().c.is_ok());
+        let h = history.lock().unwrap();
+        let stats = h.lookup((33, 44)).expect("completed parent must record");
+        assert!(stats.block.warm(), "a ShardedBlock run must tag the block EWMA");
+        assert_eq!(stats.block.ewma_ns, 900.0, "engine ns is the shard makespan");
+        assert!(!stats.hash.warm());
     }
 
     #[test]
@@ -625,6 +679,8 @@ mod tests {
             b_fp: 99,
             measure: false,
             ranges: vec![(0, 4), (4, 8)],
+            engine: Engine::Hash,
+            block_t: 16,
         });
         (Arc::new(b), rx, metrics)
     }

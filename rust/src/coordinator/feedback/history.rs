@@ -20,6 +20,83 @@ use std::collections::{HashMap, VecDeque};
 /// enough that one noisy run does not whipsaw the plan.
 const WALL_EWMA_ALPHA: f64 = 0.3;
 
+/// Which execution engine produced a run: the two-phase hash pipeline
+/// or the BSR block engine. Observations are tagged so the router can
+/// compare *measured* per-engine timings for a warm pattern instead of
+/// re-deriving the choice from the structural fill heuristic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Engine {
+    #[default]
+    Hash,
+    Block,
+}
+
+impl Engine {
+    /// Stable lowercase label (persistence lines, metrics, JSON).
+    pub fn label(self) -> &'static str {
+        match self {
+            Engine::Hash => "hash",
+            Engine::Block => "block",
+        }
+    }
+
+    /// Inverse of [`Engine::label`]; `None` for anything else.
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s.to_ascii_lowercase().as_str() {
+            "hash" => Some(Engine::Hash),
+            "block" => Some(Engine::Block),
+            _ => None,
+        }
+    }
+
+    pub fn other(self) -> Engine {
+        match self {
+            Engine::Hash => Engine::Block,
+            Engine::Block => Engine::Hash,
+        }
+    }
+}
+
+/// Measured timing summary of one engine on one pattern. The ns domain
+/// is the **simulated device timeline** (the same clock the router's
+/// cost model predicts in), so hash and block figures are directly
+/// comparable — never host wall clock, which would fold in queue wait.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EngineStats {
+    /// Runs of this engine recorded for the pattern.
+    pub runs: u64,
+    /// Exponentially-weighted simulated execution time (ns); 0 until
+    /// the first observation carrying an `engine_ns` lands.
+    pub ewma_ns: f64,
+}
+
+impl EngineStats {
+    /// Whether this engine has a usable measurement.
+    pub fn warm(&self) -> bool {
+        self.runs > 0 && self.ewma_ns > 0.0 && self.ewma_ns.is_finite()
+    }
+
+    fn fold(&mut self, ns: f64) {
+        self.runs += 1;
+        if ns > 0.0 && ns.is_finite() {
+            self.ewma_ns = if self.ewma_ns > 0.0 {
+                (1.0 - WALL_EWMA_ALPHA) * self.ewma_ns + WALL_EWMA_ALPHA * ns
+            } else {
+                ns
+            };
+        }
+    }
+
+    /// Seed a prior measurement (cold-estimate seeding): only applies
+    /// when nothing real has been recorded yet, so one real run always
+    /// outweighs the estimate's influence beyond the EWMA fold.
+    pub fn seed(&mut self, ns: f64) {
+        if self.runs == 0 && self.ewma_ns == 0.0 && ns > 0.0 && ns.is_finite() {
+            self.ewma_ns = ns;
+        }
+    }
+}
+
 /// Everything the history remembers about one pattern pair.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct PatternStats {
@@ -44,6 +121,27 @@ pub struct PatternStats {
     /// Tuned broadcast chunk size, once overlap feedback has been
     /// observed ([`tune_chunk_bytes`]); `None` until then.
     pub chunk_bytes: Option<usize>,
+    /// Measured hash-pipeline timings (simulated-ns domain) — what the
+    /// dispatcher compares against `block`.
+    pub hash: EngineStats,
+    /// Measured block-engine timings (simulated-ns domain).
+    pub block: EngineStats,
+}
+
+impl PatternStats {
+    pub fn engine(&self, e: Engine) -> &EngineStats {
+        match e {
+            Engine::Hash => &self.hash,
+            Engine::Block => &self.block,
+        }
+    }
+
+    pub fn engine_mut(&mut self, e: Engine) -> &mut EngineStats {
+        match e {
+            Engine::Hash => &mut self.hash,
+            Engine::Block => &mut self.block,
+        }
+    }
 }
 
 /// One run's worth of observations, recorded after the run completes.
@@ -58,6 +156,13 @@ pub struct RunObservation {
     /// Overlap feedback (chunk-arrival stalls), when the run was
     /// simulated under the pipelined schedule.
     pub chunk: Option<ChunkFeedback>,
+    /// Engine that executed the run ([`Engine::Hash`] by default, so
+    /// every pre-existing recording site stays hash-tagged).
+    pub engine: Engine,
+    /// Simulated execution time of the run on that engine (ns); 0 when
+    /// no simulated figure is available (the per-engine EWMA then skips
+    /// this run — `wall_ns` stays host-clock diagnostic state).
+    pub engine_ns: f64,
 }
 
 impl RunObservation {
@@ -77,7 +182,7 @@ impl RunObservation {
                 MeasuredShard { lo, hi, ns: device_ns[s] }
             })
             .collect();
-        RunObservation { shards, wall_ns, nprod, chunk: None }
+        RunObservation { shards, wall_ns, nprod, ..Default::default() }
     }
 }
 
@@ -132,6 +237,30 @@ impl ExecHistory {
         if let Some(fb) = obs.chunk {
             stats.chunk_bytes = Some(tune_chunk_bytes(&fb));
         }
+        stats.engine_mut(obs.engine).fold(obs.engine_ns);
+    }
+
+    /// Seed a cold pattern's per-engine priors from an upfront estimate
+    /// (the Ocean-style sampled estimator). Creates the entry if absent
+    /// but records no run; real measurements fold on top via the EWMA,
+    /// and a seed never overwrites an existing measurement.
+    pub fn seed_engine_priors(&mut self, key: PatternKey, hash_ns: f64, block_ns: f64) {
+        if self.capacity == 0 {
+            return;
+        }
+        if !self.map.contains_key(&key) {
+            self.map.insert(key, PatternStats::default());
+            self.order.push_back(key);
+            while self.order.len() > self.capacity {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                    self.evictions += 1;
+                }
+            }
+        }
+        let Some(stats) = self.map.get_mut(&key) else { return };
+        stats.hash.seed(hash_ns);
+        stats.block.seed(block_ns);
     }
 
     /// The stats recorded for a pattern, if it is warm.
@@ -197,7 +326,8 @@ mod tests {
             shards: vec![MeasuredShard { lo: 0, hi: n, ns }],
             wall_ns: ns,
             nprod: 10,
-            chunk: None,
+            engine_ns: ns,
+            ..Default::default()
         }
     }
 
@@ -283,6 +413,62 @@ mod tests {
         let mut off = ExecHistory::new(0);
         off.insert_stats((1, 1), PatternStats::default());
         assert!(off.is_empty());
+    }
+
+    #[test]
+    fn engine_tagged_observations_fold_per_engine() {
+        let mut h = ExecHistory::new(4);
+        h.record((1, 2), obs(8, 1000.0)); // hash by default
+        h.record((1, 2), RunObservation { engine: Engine::Block, engine_ns: 400.0, ..obs(8, 400.0) });
+        h.record((1, 2), RunObservation { engine: Engine::Block, engine_ns: 200.0, ..obs(8, 200.0) });
+        let s = h.lookup((1, 2)).unwrap();
+        assert_eq!(s.runs, 3, "total run count spans engines");
+        assert_eq!(s.hash.runs, 1);
+        assert_eq!(s.hash.ewma_ns, 1000.0);
+        assert_eq!(s.block.runs, 2);
+        assert!((s.block.ewma_ns - (0.7 * 400.0 + 0.3 * 200.0)).abs() < 1e-9);
+        assert!(s.hash.warm() && s.block.warm());
+    }
+
+    #[test]
+    fn zero_engine_ns_counts_the_run_but_skips_the_ewma() {
+        let mut h = ExecHistory::new(4);
+        h.record((1, 1), RunObservation { engine_ns: 0.0, ..obs(8, 500.0) });
+        let s = h.lookup((1, 1)).unwrap();
+        assert_eq!(s.hash.runs, 1);
+        assert_eq!(s.hash.ewma_ns, 0.0);
+        assert!(!s.hash.warm(), "no usable measurement yet");
+    }
+
+    #[test]
+    fn seeded_priors_yield_to_real_measurements() {
+        let mut h = ExecHistory::new(4);
+        h.seed_engine_priors((5, 5), 900.0, 300.0);
+        let s = h.lookup((5, 5)).unwrap();
+        assert_eq!(s.runs, 0, "a seed is not a run");
+        assert_eq!(s.hash.ewma_ns, 900.0);
+        assert_eq!(s.block.ewma_ns, 300.0);
+        assert!(!s.hash.warm(), "seeds alone are not warm");
+        // a real run folds on top of the seed via the EWMA
+        h.record((5, 5), RunObservation { engine: Engine::Block, engine_ns: 500.0, ..obs(8, 500.0) });
+        let s = h.lookup((5, 5)).unwrap();
+        assert!((s.block.ewma_ns - (0.7 * 300.0 + 0.3 * 500.0)).abs() < 1e-9);
+        assert!(s.block.warm());
+        // re-seeding a measured pattern is a no-op
+        h.seed_engine_priors((5, 5), 1.0, 1.0);
+        let s = h.lookup((5, 5)).unwrap();
+        assert_eq!(s.hash.ewma_ns, 900.0);
+        assert!(s.block.ewma_ns > 1.0);
+    }
+
+    #[test]
+    fn engine_labels_round_trip() {
+        for e in [Engine::Hash, Engine::Block] {
+            assert_eq!(Engine::parse(e.label()), Some(e));
+            assert_eq!(e.other().other(), e);
+        }
+        assert_eq!(Engine::parse("cuda"), None);
+        assert_eq!(Engine::default(), Engine::Hash);
     }
 
     #[test]

@@ -45,7 +45,7 @@ pub mod persist;
 pub mod refit;
 pub mod replan;
 
-pub use history::{ExecHistory, PatternStats, RunObservation};
+pub use history::{Engine, EngineStats, ExecHistory, PatternStats, RunObservation};
 pub use persist::{load_state, save_state, PersistedState};
 pub use refit::{default_fit, NsPerProdFit};
 pub use replan::{tune_chunk_bytes, ChunkFeedback, MAX_CHUNK_BYTES, MIN_CHUNK_BYTES};

@@ -19,14 +19,22 @@
 //! the hand-rolled reader rejects unknown versions and malformed lines
 //! loudly instead of planning from half-parsed state.
 
-use super::history::{ExecHistory, PatternStats};
+use super::history::{Engine, EngineStats, ExecHistory, PatternStats};
 use super::refit::NsPerProdFit;
 use crate::coordinator::cache::PatternKey;
 use crate::spgemm::sharded::MeasuredShard;
 use anyhow::{bail, Context, Result};
 
 /// First line of every state file; the version bumps on layout changes.
-pub const STATE_HEADER: &str = "opsparse-serve-state v1";
+/// v2 added per-engine `engine <hash|block> <runs> <ewma_hex>` lines
+/// under each pattern (the multi-engine dispatch history).
+pub const STATE_HEADER: &str = "opsparse-serve-state v2";
+
+/// The pre-engine-tag layout. Still loads: every pattern in a v1 file
+/// predates the block-engine recording path, so its whole run history is
+/// re-tagged as hash measurements (logged once on load) — an upgraded
+/// server restarts warm instead of refusing to serve.
+pub const STATE_HEADER_V1: &str = "opsparse-serve-state v1";
 
 /// Parsed contents of a state file: the fit snapshot plus the history's
 /// patterns in insertion (eviction) order.
@@ -85,6 +93,17 @@ fn render(state: &PersistedState) -> String {
         for m in &s.measured {
             out.push_str(&format!("shard {} {} {:016x}\n", m.lo, m.hi, m.ns.to_bits()));
         }
+        for engine in [Engine::Hash, Engine::Block] {
+            let es = s.engine(engine);
+            if es.runs > 0 || es.ewma_ns != 0.0 {
+                out.push_str(&format!(
+                    "engine {} {} {:016x}\n",
+                    engine.label(),
+                    es.runs,
+                    es.ewma_ns.to_bits()
+                ));
+            }
+        }
     }
     out
 }
@@ -100,13 +119,14 @@ fn parse_hex_bits(s: &str, what: &str) -> Result<u64> {
     u64::from_str_radix(s, 16).with_context(|| format!("bad hex {what}: {s:?}"))
 }
 
-fn parse_state(text: &str, path: &str) -> Result<PersistedState> {
+fn parse_state(text: &str, path: &str) -> Result<(PersistedState, bool)> {
     let mut lines = text.lines();
-    match lines.next() {
-        Some(h) if h == STATE_HEADER => {}
+    let legacy = match lines.next() {
+        Some(h) if h == STATE_HEADER => false,
+        Some(h) if h == STATE_HEADER_V1 => true,
         Some(h) => bail!("{path}: unsupported state header {h:?} (want {STATE_HEADER:?})"),
         None => bail!("{path}: empty state file"),
-    }
+    };
     let mut state = PersistedState::default();
     let mut saw_fit = false;
     for (lineno, line) in lines.enumerate() {
@@ -126,7 +146,6 @@ fn parse_state(text: &str, path: &str) -> Result<PersistedState> {
                     parse_hex_bits(b_fp, "pattern fingerprint")?,
                 );
                 let stats = PatternStats {
-                    measured: Vec::new(),
                     runs: runs
                         .parse()
                         .with_context(|| format!("{path}:{lineno}: bad run count"))?,
@@ -141,6 +160,7 @@ fn parse_state(text: &str, path: &str) -> Result<PersistedState> {
                                 .with_context(|| format!("{path}:{lineno}: bad chunk bytes"))?,
                         ),
                     },
+                    ..Default::default()
                 };
                 state.patterns.push((key, stats));
             }
@@ -154,13 +174,36 @@ fn parse_state(text: &str, path: &str) -> Result<PersistedState> {
                     ns: f64::from_bits(parse_hex_bits(ns, "shard ns")?),
                 });
             }
+            ["engine", name, runs, ewma] => {
+                if legacy {
+                    bail!("{path}:{lineno}: engine line in a v1 state file");
+                }
+                let Some((_, stats)) = state.patterns.last_mut() else {
+                    bail!("{path}:{lineno}: engine line before any pattern line");
+                };
+                let engine = Engine::parse(name)
+                    .with_context(|| format!("{path}:{lineno}: unknown engine {name:?}"))?;
+                *stats.engine_mut(engine) = EngineStats {
+                    runs: runs
+                        .parse()
+                        .with_context(|| format!("{path}:{lineno}: bad engine run count"))?,
+                    ewma_ns: f64::from_bits(parse_hex_bits(ewma, "engine ewma ns")?),
+                };
+            }
             _ => bail!("{path}:{lineno}: unrecognized state line {line:?}"),
         }
     }
     if !saw_fit {
         bail!("{path}: state file has no fit line");
     }
-    Ok(state)
+    if legacy {
+        // pre-engine-tag file: everything it recorded ran on the hash
+        // pipeline, so its run history re-tags as hash measurements
+        for (_, stats) in &mut state.patterns {
+            stats.hash = EngineStats { runs: stats.runs, ewma_ns: stats.ewma_wall_ns };
+        }
+    }
+    Ok((state, legacy))
 }
 
 /// Read a state file written by [`save_state`]. Malformed content is an
@@ -170,7 +213,15 @@ fn parse_state(text: &str, path: &str) -> Result<PersistedState> {
 pub fn load_state(path: &str) -> Result<PersistedState> {
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading serve state {path}"))?;
-    parse_state(&text, path)
+    let (state, legacy) = parse_state(&text, path)?;
+    if legacy {
+        eprintln!(
+            "serve: {path} is a {STATE_HEADER_V1:?} state file; loading its {} pattern(s) \
+             as hash-tagged history (it will be rewritten as {STATE_HEADER:?} on shutdown)",
+            state.patterns.len()
+        );
+    }
+    Ok(state)
 }
 
 #[cfg(test)]
@@ -193,13 +244,25 @@ mod tests {
                     ],
                     wall_ns: ns * 3.0,
                     nprod: 1234,
-                    chunk: None,
+                    engine_ns: ns * 2.0,
+                    ..Default::default()
                 },
             );
         };
         hist_obs((11, 22), 1000.0);
         hist_obs((33, 44), 2000.0);
         hist_obs((11, 22), 1500.0); // fold a second run: non-trivial EWMA bits
+        // a block-engine run on one pattern: engine lines must round-trip
+        h.record(
+            (33, 44),
+            super::super::history::RunObservation {
+                engine: Engine::Block,
+                engine_ns: 777.5,
+                wall_ns: 900.0,
+                nprod: 1234,
+                ..Default::default()
+            },
+        );
         PersistedState::capture(&h, &fit)
     }
 
@@ -229,6 +292,52 @@ mod tests {
             "EWMA restored bitwise"
         );
         assert_eq!(a[0].1.measured, b[0].1.measured, "shard timings restored exactly");
+        assert_eq!(
+            a[1].1.block.ewma_ns.to_bits(),
+            b[1].1.block.ewma_ns.to_bits(),
+            "per-engine EWMA restored bitwise"
+        );
+        assert_eq!(a[1].1.block.runs, 1);
+        assert_eq!(a[0].1.hash.runs, 2);
+    }
+
+    #[test]
+    fn v1_state_file_loads_as_hash_tagged() {
+        let path = tmp_path("v1compat");
+        let ewma = 1234.5f64;
+        std::fs::write(
+            &path,
+            format!(
+                "{STATE_HEADER_V1}\nfit {:016x} 3\npattern {:016x} {:016x} 5 {:016x} 42 -\n\
+                 shard 0 8 {:016x}\n",
+                1.25f64.to_bits(),
+                7u64,
+                9u64,
+                ewma.to_bits(),
+                600.0f64.to_bits()
+            ),
+        )
+        .unwrap();
+        let loaded = load_state(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.patterns.len(), 1);
+        let (key, s) = &loaded.patterns[0];
+        assert_eq!(*key, (7, 9));
+        assert_eq!(s.runs, 5);
+        assert_eq!(s.hash.runs, 5, "v1 history re-tags as hash");
+        assert_eq!(s.hash.ewma_ns.to_bits(), ewma.to_bits());
+        assert_eq!(s.block, EngineStats::default(), "block side starts cold");
+        assert_eq!(s.measured.len(), 1, "shard lines still restore");
+        // an engine line inside a v1 file is malformed, not silently read
+        std::fs::write(
+            &path,
+            format!(
+                "{STATE_HEADER_V1}\nfit 0 0\npattern 1 1 1 0 0 -\nengine hash 1 0\n"
+            ),
+        )
+        .unwrap();
+        assert!(load_state(&path).unwrap_err().to_string().contains("v1 state file"));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -17,6 +17,14 @@ pub struct Metrics {
     /// Jobs routed to the row-sharded multi-device path (working set over
     /// the single-device budget and worth the replication cost).
     pub sharded_routed: AtomicU64,
+    /// Jobs routed to the block-row-sharded multi-device block engine
+    /// (`Route::ShardedBlock`): T-aligned cuts, one native BSR engine
+    /// per shard sub-job.
+    pub sharded_block_routed: AtomicU64,
+    /// Auto/fill-routed block jobs that fell back to the hash pipeline
+    /// because no block engine was loaded. Previously a silent
+    /// downgrade; now counted (and logged once per coordinator).
+    pub block_fallbacks: AtomicU64,
     /// Shard sub-jobs executed by hash workers (cross-worker fan-out).
     pub shard_subjobs: AtomicU64,
     /// Ids of the workers that have executed at least one shard sub-job —
@@ -172,6 +180,8 @@ impl Metrics {
             hash_routed: self.hash_routed.load(Ordering::Relaxed),
             block_routed: self.block_routed.load(Ordering::Relaxed),
             sharded_routed: self.sharded_routed.load(Ordering::Relaxed),
+            sharded_block_routed: self.sharded_block_routed.load(Ordering::Relaxed),
+            block_fallbacks: self.block_fallbacks.load(Ordering::Relaxed),
             shard_subjobs: self.shard_subjobs.load(Ordering::Relaxed),
             shard_workers: self.distinct_shard_workers(),
             nprod_total: self.nprod_total.load(Ordering::Relaxed),
@@ -218,6 +228,10 @@ pub struct MetricsSnapshot {
     pub hash_routed: u64,
     pub block_routed: u64,
     pub sharded_routed: u64,
+    /// Jobs on the block-row-sharded block-engine route.
+    pub sharded_block_routed: u64,
+    /// Block-routed jobs downgraded to hash for lack of a block engine.
+    pub block_fallbacks: u64,
     /// Shard sub-jobs executed across the pool.
     pub shard_subjobs: u64,
     /// Distinct workers that executed shard sub-jobs.
@@ -289,12 +303,15 @@ impl std::fmt::Display for MetricsSnapshot {
         )?;
         writeln!(
             f,
-            "routes: hash={} block={} sharded={} (sub-jobs={} over {} workers)",
+            "routes: hash={} block={} sharded={} sharded_block={} \
+             (sub-jobs={} over {} workers; block_fallbacks={})",
             self.hash_routed,
             self.block_routed,
             self.sharded_routed,
+            self.sharded_block_routed,
             self.shard_subjobs,
-            self.shard_workers
+            self.shard_workers,
+            self.block_fallbacks
         )?;
         writeln!(f, "nprod total: {}", self.nprod_total)?;
         writeln!(

@@ -55,8 +55,10 @@ pub use barrier::{ShardBarrier, SpeculateConfig};
 pub use batch::{BatchConfig, Batcher};
 pub use chaos::ChaosConfig;
 pub use cache::{PatternCache, PatternKey};
-pub use feedback::{ExecHistory, NsPerProdFit, PersistedState, ReplanConfig, RunObservation};
+pub use feedback::{
+    Engine, ExecHistory, NsPerProdFit, PersistedState, ReplanConfig, RunObservation,
+};
 pub use metrics::Metrics;
-pub use router::{Route, Router, RouterConfig};
+pub use router::{choose_engine, EngineMode, Route, Router, RouterConfig, DISPATCH_SWITCH_GAIN};
 pub use serve::{Serve, ServeConfig, ServeResult, ServeTicket};
 pub use service::{Coordinator, Job, JobResult};

@@ -49,18 +49,19 @@
 //! }
 //! ```
 
-use super::feedback::NsPerProdFit;
-use crate::gpusim::{Interconnect, OverlapConfig};
+use super::feedback::{Engine, ExecHistory, NsPerProdFit, PatternStats};
+use crate::gpusim::{Interconnect, OverlapConfig, V100};
+use crate::runtime::block_engine::BLOCK_MXU_EFFICIENCY;
 use crate::sparse::stats::total_nprod;
 use crate::sparse::Csr;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Execution path for a job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Route {
     /// Two-phase hash pipeline (the paper's OpSparse).
     Hash,
-    /// PJRT BSR block engine.
+    /// BSR block engine (PJRT kernel or the native bit-exact backend).
     Block,
     /// Row-sharded multi-device hash pipeline
     /// ([`crate::spgemm::multiply_sharded`]): chosen when the estimated
@@ -69,6 +70,100 @@ pub enum Route {
         /// Devices the job is split across.
         n_devices: usize,
     },
+    /// Block-row-sharded multi-device block engine: the shard plan's
+    /// cuts are aligned to multiples of the engine block size `T`
+    /// ([`crate::spgemm::sharded::ShardPlan::balanced_aligned`]), each
+    /// sub-job runs the BSR engine on its own device, and the barrier
+    /// stitches the row blocks bit-identically to the unsharded block
+    /// result.
+    ShardedBlock {
+        /// Devices the job is split across.
+        n_devices: usize,
+    },
+}
+
+/// Which engine family the router commits jobs to.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Structure-only routing (the pre-dispatch behavior): the static
+    /// tile-fill threshold picks hash vs block. The default, so every
+    /// deployment that never touches the knob routes exactly as before.
+    #[default]
+    Fill,
+    /// Measured multi-engine dispatch: warm patterns pick the engine
+    /// with the lower per-engine EWMA ([`choose_engine`]); cold patterns
+    /// fall back to the sampled fill/compression estimate
+    /// ([`Router::sampled_engine_estimate`]), which also seeds the
+    /// history prior so the first real run lands on a comparable entry.
+    Auto,
+    /// Force the hash pipeline (modulo memory sharding) — the ablation
+    /// baseline with dispatch off.
+    Hash,
+    /// Force the block engine (modulo memory sharding).
+    Block,
+}
+
+impl EngineMode {
+    /// Stable lowercase label (CLI/env value, JSON).
+    pub fn label(self) -> &'static str {
+        match self {
+            EngineMode::Fill => "fill",
+            EngineMode::Auto => "auto",
+            EngineMode::Hash => "hash",
+            EngineMode::Block => "block",
+        }
+    }
+
+    /// Inverse of [`EngineMode::label`] (`--engine auto|hash|block`, plus
+    /// the explicit `fill` spelling of the default); `None` for junk.
+    pub fn parse(s: &str) -> Option<EngineMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "fill" => Some(EngineMode::Fill),
+            "auto" => Some(EngineMode::Auto),
+            "hash" => Some(EngineMode::Hash),
+            "block" => Some(EngineMode::Block),
+            _ => None,
+        }
+    }
+}
+
+/// Hysteresis band of the measured dispatcher, mirroring
+/// `REPLAN_SWITCH_GAIN` on the shard-replanning side: the challenger
+/// engine must beat the incumbent's EWMA by at least this factor before
+/// dispatch switches, so two engines trading sub-noise wins cannot make
+/// the route flap — dispatch converges on one engine per pattern.
+pub const DISPATCH_SWITCH_GAIN: f64 = 0.995;
+
+/// Pick an engine from a pattern's per-engine stats (measured EWMAs
+/// and/or seeded priors). The incumbent is the engine with more recorded
+/// runs (ties go to hash, the conservative default); the challenger must
+/// beat it by the [`DISPATCH_SWITCH_GAIN`] band to win. Consequence: the
+/// chosen engine's EWMA is never worse than the alternative's by more
+/// than the band — the property the dispatch tests pin.
+pub fn choose_engine(stats: &PatternStats) -> Engine {
+    let usable = |ns: f64| ns > 0.0 && ns.is_finite();
+    let (h, b) = (stats.hash.ewma_ns, stats.block.ewma_ns);
+    match (usable(h), usable(b)) {
+        (true, false) => Engine::Hash,
+        (false, true) => Engine::Block,
+        (false, false) => Engine::Hash,
+        (true, true) => {
+            let incumbent = if stats.block.runs > stats.hash.runs {
+                Engine::Block
+            } else {
+                Engine::Hash
+            };
+            let (inc_ns, ch_ns) = match incumbent {
+                Engine::Hash => (h, b),
+                Engine::Block => (b, h),
+            };
+            if ch_ns < inc_ns * DISPATCH_SWITCH_GAIN {
+                incumbent.other()
+            } else {
+                incumbent
+            }
+        }
+    }
 }
 
 /// Router configuration.
@@ -118,6 +213,16 @@ pub struct RouterConfig {
     /// subsequent shard-vs-stay decision — the online re-fit loop.
     /// `None` keeps the static constant.
     pub fit: Option<Arc<NsPerProdFit>>,
+    /// Which engine family jobs are committed to; see [`EngineMode`].
+    /// The default ([`EngineMode::Fill`]) routes exactly as before this
+    /// knob existed — measured dispatch is strictly opt-in.
+    pub engine_mode: EngineMode,
+    /// Engine-tagged execution history the [`EngineMode::Auto`]
+    /// dispatcher consults (and seeds with cold estimates). Normally the
+    /// same store the coordinator records measured runs into, so warm
+    /// patterns route on measurements. `None` makes `Auto` fall back to
+    /// the sampled estimate on every decision.
+    pub dispatch_history: Option<Arc<Mutex<ExecHistory>>>,
 }
 
 impl Default for RouterConfig {
@@ -132,6 +237,8 @@ impl Default for RouterConfig {
             ns_per_prod: 1.0,
             overlap: OverlapConfig::default(),
             fit: None,
+            engine_mode: EngineMode::Fill,
+            dispatch_history: None,
         }
     }
 }
@@ -365,6 +472,9 @@ impl Router {
         let Some(ic) = self.cfg.interconnect.as_ref() else {
             return Some(n_mem);
         };
+        // warm dispatched patterns broadcast (and are costed) with their
+        // tuned chunk size; outside Auto this is exactly `cfg.overlap`
+        let overlap = self.overlap_for(a, b);
 
         // read the compute proxy *now*: with a live fit attached, every
         // decision tracks the latest measured re-fit
@@ -380,13 +490,13 @@ impl Router {
             // serial three-phase sum. An unusable interconnect model
             // (zero bandwidth) cannot veto a memory-mandated shard: fall
             // back to the memory count.
-            let modeled = if self.cfg.overlap.enabled {
+            let modeled = if overlap.enabled {
                 ic.overlapped_estimate_ns(
                     b_rep,
                     unsharded_ns / k as f64,
                     ROUTER_SYM_FRACTION,
                     &blocks,
-                    &self.cfg.overlap,
+                    &overlap,
                 )
             } else {
                 match (ic.broadcast_ns(b_rep, k), ic.gather_ns(&blocks)) {
@@ -414,23 +524,142 @@ impl Router {
     /// Route a job: memory and replication cost first (an over-budget job
     /// shards — unless it only barely overshoots *and* the modeled
     /// transfers eat the win, in which case it stays on the hash path;
-    /// see [`Router::shard_count`]), then the joint tile fill of both
-    /// operands. A dimension-mismatched pair always routes to the hash
-    /// path, which rejects it with a proper error (the block engine
+    /// see [`Router::shard_count`]), then the engine choice under
+    /// [`RouterConfig::engine_mode`]: the static tile-fill threshold
+    /// (`Fill`, the default), the measured dispatcher (`Auto`), or a
+    /// forced engine. A dimension-mismatched pair always routes to the
+    /// hash path, which rejects it with a proper error (the block engine
     /// would panic instead of failing the job).
     pub fn route(&self, a: &Csr, b: &Csr) -> Route {
         if a.cols != b.rows {
             return Route::Hash;
         }
-        if let Some(n_devices) = self.shard_count(a, b) {
-            return Route::Sharded { n_devices };
+        let shard = self.shard_count(a, b);
+        let engine = match self.cfg.engine_mode {
+            EngineMode::Hash => Engine::Hash,
+            EngineMode::Block => Engine::Block,
+            EngineMode::Auto => self.dispatch_engine(a, b),
+            EngineMode::Fill => {
+                // the pre-dispatch behavior, bit for bit: sharding always
+                // took the hash path, and the fill threshold only decided
+                // hash vs block for jobs that fit on one device
+                if shard.is_some() {
+                    Engine::Hash
+                } else {
+                    let fill = self.estimate_fill(a).min(self.estimate_fill(b));
+                    if fill >= self.cfg.min_fill {
+                        Engine::Block
+                    } else {
+                        Engine::Hash
+                    }
+                }
+            }
+        };
+        match (engine, shard) {
+            (Engine::Hash, Some(n_devices)) => Route::Sharded { n_devices },
+            (Engine::Hash, None) => Route::Hash,
+            (Engine::Block, Some(n_devices)) => Route::ShardedBlock { n_devices },
+            (Engine::Block, None) => Route::Block,
         }
-        let fill = self.estimate_fill(a).min(self.estimate_fill(b));
-        if fill >= self.cfg.min_fill {
-            Route::Block
-        } else {
-            Route::Hash
+    }
+
+    /// The measured dispatcher ([`EngineMode::Auto`]): look the pattern
+    /// up in the engine-tagged history; when it is cold, run the sampled
+    /// estimate and seed the priors so the entry is comparable (and so
+    /// the first measured run folds onto the estimate instead of landing
+    /// blind); then choose under the hysteresis band ([`choose_engine`]).
+    pub fn dispatch_engine(&self, a: &Csr, b: &Csr) -> Engine {
+        let Some(history) = self.cfg.dispatch_history.as_ref() else {
+            let (hash_ns, block_ns) = self.sampled_engine_estimate(a, b);
+            return if block_ns < hash_ns { Engine::Block } else { Engine::Hash };
+        };
+        let key = (a.pattern_fingerprint(), b.pattern_fingerprint());
+        let mut h = history.lock().unwrap_or_else(|e| e.into_inner());
+        let warm = h
+            .lookup(key)
+            .is_some_and(|s| s.hash.ewma_ns > 0.0 || s.block.ewma_ns > 0.0);
+        if !warm {
+            let (hash_ns, block_ns) = self.sampled_engine_estimate(a, b);
+            h.seed_engine_priors(key, hash_ns, block_ns);
         }
+        h.lookup(key).map(choose_engine).unwrap_or_default()
+    }
+
+    /// Ocean-style cold-start estimate: on a bounded row sample of `A`,
+    /// estimate the intermediate-product count and `A`'s tile fill in one
+    /// pass (`B`'s fill via [`Router::estimate_fill`]), derive the block
+    /// pair count from the fill-compression ratio (each dense `T×T` pair
+    /// absorbs `fill_a·T × fill_b·T` scalar products), and convert both
+    /// engines' work models to ns — the hash side through the live
+    /// ns-per-product proxy, the block side through the same closed-form
+    /// model as [`crate::runtime::BlockEngine::simulated_ns`]. Returns
+    /// `(hash_ns, block_ns)`. Cheap (`O(sampled nnz)`), structure-only,
+    /// value-free; it seeds the history prior, it never outvotes a
+    /// measurement.
+    pub fn sampled_engine_estimate(&self, a: &Csr, b: &Csr) -> (f64, f64) {
+        let t = self.cfg.t.max(1);
+        let step = (a.rows / self.cfg.sample_rows.max(1)).max(1);
+        let mut rows_seen = 0usize;
+        let mut sampled_nprod = 0usize;
+        let mut a_elems = 0usize;
+        let mut a_tiles = 0usize;
+        for r in (0..a.rows).step_by(step) {
+            rows_seen += 1;
+            let mut last_tile = u32::MAX;
+            for &c in a.row_cols(r) {
+                sampled_nprod += b.row_cols(c as usize).len();
+                let tile = c / t as u32;
+                if tile != last_tile {
+                    a_tiles += 1;
+                    last_tile = tile;
+                }
+                a_elems += 1;
+            }
+        }
+        let scale = if rows_seen == 0 { 0.0 } else { a.rows as f64 / rows_seen as f64 };
+        let est_nprod = sampled_nprod as f64 * scale;
+        let hash_ns = est_nprod * self.cfg.ns_per_prod_now();
+
+        let fill_a =
+            if a_tiles == 0 { 0.0 } else { a_elems as f64 / (a_tiles * t) as f64 };
+        let fill_b = self.estimate_fill(b);
+        // scalar products per block pair: the column-direction fill of
+        // each operand bounds how densely a T×T product tile is used
+        let per_pair = (fill_a * t as f64).max(1.0) * (fill_b * t as f64).max(1.0);
+        let pairs = (est_nprod / per_pair).max(1.0);
+        let tt = (t * t) as f64;
+        let dev = &V100;
+        let launch_ns = 2.0 * (dev.launch_overhead_ns + dev.launch_latency_ns);
+        let sym_ns = pairs * dev.global_atomic_ns / dev.sms as f64;
+        let flops = 2.0 * pairs * tt * t as f64;
+        let num_ns = flops / (dev.sms as f64 * dev.fp64_flops_per_ns * BLOCK_MXU_EFFICIENCY);
+        let bytes = 3.0 * pairs * tt * 8.0;
+        let mem_ns = bytes / dev.hbm_bytes_per_ns;
+        (hash_ns, launch_ns + sym_ns + num_ns + mem_ns)
+    }
+
+    /// The overlap model a sharded decision for `(a, b)` should use:
+    /// the static config, with `chunk_bytes` replaced by the pattern's
+    /// tuned size ([`super::feedback::tune_chunk_bytes`] output, stored
+    /// per pattern by the context path or restored from a persisted
+    /// warm start) when the measured dispatcher holds a history. This
+    /// is the serve-path half of the chunk-tuning loop: a warm
+    /// dispatched pattern's broadcast is planned with its tuned panels,
+    /// not the fleet-wide default. Without a dispatch store (every
+    /// non-`Auto` mode) this returns `cfg.overlap` untouched, so the
+    /// pre-dispatch routing is reproduced exactly.
+    pub fn overlap_for(&self, a: &Csr, b: &Csr) -> OverlapConfig {
+        let mut overlap = self.cfg.overlap;
+        if overlap.enabled {
+            if let Some(history) = self.cfg.dispatch_history.as_ref() {
+                let key = (a.pattern_fingerprint(), b.pattern_fingerprint());
+                let h = history.lock().unwrap_or_else(|e| e.into_inner());
+                if let Some(cb) = h.lookup(key).and_then(|s| s.chunk_bytes) {
+                    overlap.chunk_bytes = cb;
+                }
+            }
+        }
+        overlap
     }
 }
 
@@ -790,6 +1019,200 @@ mod tests {
             "no compute scale where overlap shards a serial-declined job — \
              the overlapped model is not moving the break-even"
         );
+    }
+
+    #[test]
+    fn engine_mode_labels_round_trip_and_default_is_fill() {
+        assert_eq!(EngineMode::default(), EngineMode::Fill);
+        for m in [EngineMode::Fill, EngineMode::Auto, EngineMode::Hash, EngineMode::Block] {
+            assert_eq!(EngineMode::parse(m.label()), Some(m));
+        }
+        assert_eq!(EngineMode::parse("AUTO"), Some(EngineMode::Auto));
+        assert_eq!(EngineMode::parse("cuda"), None);
+        assert_eq!(EngineMode::parse(""), None);
+    }
+
+    #[test]
+    fn forced_engine_modes_override_the_fill_heuristic() {
+        let mut rng = Rng::new(60);
+        let blocky =
+            Banded { n: 1000, per_row: 48, band: 40, contiguous_frac: 1.0 }.generate(&mut rng);
+        let scattered = Uniform { n: 2000, per_row: 6, jitter: 3 }.generate(&mut rng);
+        let hash_only = Router::new(RouterConfig {
+            engine_mode: EngineMode::Hash,
+            ..Default::default()
+        });
+        assert_eq!(hash_only.route(&blocky, &blocky), Route::Hash, "forced hash");
+        let block_only = Router::new(RouterConfig {
+            engine_mode: EngineMode::Block,
+            ..Default::default()
+        });
+        assert_eq!(block_only.route(&scattered, &scattered), Route::Block, "forced block");
+        // forced block on an over-budget job takes the block-sharded route
+        let block_sharded = Router::new(RouterConfig {
+            engine_mode: EngineMode::Block,
+            device_memory_bytes: 1024,
+            interconnect: None,
+            ..Default::default()
+        });
+        match block_sharded.route(&blocky, &blocky) {
+            Route::ShardedBlock { n_devices } => assert!(n_devices >= 2),
+            other => panic!("expected ShardedBlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sampled_estimate_favors_block_on_blocky_and_hash_on_scattered() {
+        let mut rng = Rng::new(61);
+        let blocky =
+            Banded { n: 1000, per_row: 48, band: 40, contiguous_frac: 1.0 }.generate(&mut rng);
+        let scattered = Uniform { n: 2000, per_row: 6, jitter: 3 }.generate(&mut rng);
+        let r = Router::default();
+        let (h_b, b_b) = r.sampled_engine_estimate(&blocky, &blocky);
+        assert!(h_b > 0.0 && b_b > 0.0 && h_b.is_finite() && b_b.is_finite());
+        assert!(b_b < h_b, "blocky: block estimate must win ({b_b:.0} vs {h_b:.0} ns)");
+        let (h_s, b_s) = r.sampled_engine_estimate(&scattered, &scattered);
+        assert!(h_s < b_s, "scattered: hash estimate must win ({h_s:.0} vs {b_s:.0} ns)");
+    }
+
+    #[test]
+    fn cold_auto_dispatch_seeds_priors_and_routes_by_the_estimate() {
+        let mut rng = Rng::new(62);
+        let blocky =
+            Banded { n: 1000, per_row: 48, band: 40, contiguous_frac: 1.0 }.generate(&mut rng);
+        let scattered = Uniform { n: 2000, per_row: 6, jitter: 3 }.generate(&mut rng);
+        let history = Arc::new(Mutex::new(ExecHistory::new(16)));
+        let r = Router::new(RouterConfig {
+            engine_mode: EngineMode::Auto,
+            dispatch_history: Some(Arc::clone(&history)),
+            ..Default::default()
+        });
+        assert_eq!(r.route(&blocky, &blocky), Route::Block);
+        assert_eq!(r.route(&scattered, &scattered), Route::Hash);
+        let key = (blocky.pattern_fingerprint(), blocky.pattern_fingerprint());
+        let h = history.lock().unwrap();
+        let s = h.lookup(key).expect("cold dispatch must seed the pattern");
+        assert_eq!(s.runs, 0, "a seed is not a run");
+        assert!(s.hash.ewma_ns > 0.0 && s.block.ewma_ns > 0.0, "both priors seeded");
+        assert!(s.block.ewma_ns < s.hash.ewma_ns);
+    }
+
+    #[test]
+    fn warm_auto_dispatch_routes_on_measurements_not_structure() {
+        use crate::coordinator::feedback::{EngineStats, PatternStats};
+        // a blocky matrix whose *measured* history says hash is faster:
+        // measurements must outvote the structural estimate
+        let mut rng = Rng::new(63);
+        let blocky =
+            Banded { n: 1000, per_row: 48, band: 40, contiguous_frac: 1.0 }.generate(&mut rng);
+        let key = (blocky.pattern_fingerprint(), blocky.pattern_fingerprint());
+        let history = Arc::new(Mutex::new(ExecHistory::new(16)));
+        history.lock().unwrap().insert_stats(
+            key,
+            PatternStats {
+                hash: EngineStats { runs: 4, ewma_ns: 10_000.0 },
+                block: EngineStats { runs: 1, ewma_ns: 80_000.0 },
+                ..Default::default()
+            },
+        );
+        let r = Router::new(RouterConfig {
+            engine_mode: EngineMode::Auto,
+            dispatch_history: Some(Arc::clone(&history)),
+            ..Default::default()
+        });
+        assert_eq!(r.route(&blocky, &blocky), Route::Hash);
+        // flip the measurements: block wins the same structure
+        history.lock().unwrap().insert_stats(
+            key,
+            PatternStats {
+                hash: EngineStats { runs: 4, ewma_ns: 80_000.0 },
+                block: EngineStats { runs: 6, ewma_ns: 10_000.0 },
+                ..Default::default()
+            },
+        );
+        assert_eq!(r.route(&blocky, &blocky), Route::Block);
+    }
+
+    #[test]
+    fn dispatch_hysteresis_keeps_the_incumbent_inside_the_band() {
+        use crate::coordinator::feedback::{EngineStats, PatternStats};
+        // block is the incumbent (more runs); hash is faster but within
+        // the band: no switch
+        let inside = PatternStats {
+            hash: EngineStats { runs: 1, ewma_ns: 999.0 },
+            block: EngineStats { runs: 8, ewma_ns: 1000.0 },
+            ..Default::default()
+        };
+        assert_eq!(choose_engine(&inside), Engine::Block, "sub-band win must not flap");
+        // beyond the band the challenger takes over
+        let outside = PatternStats {
+            hash: EngineStats { runs: 1, ewma_ns: 900.0 },
+            block: EngineStats { runs: 8, ewma_ns: 1000.0 },
+            ..Default::default()
+        };
+        assert_eq!(choose_engine(&outside), Engine::Hash);
+        // run-count ties are conservative: hash is the incumbent
+        let tie = PatternStats {
+            hash: EngineStats { runs: 2, ewma_ns: 1000.0 },
+            block: EngineStats { runs: 2, ewma_ns: 998.0 },
+            ..Default::default()
+        };
+        assert_eq!(choose_engine(&tie), Engine::Hash);
+        // one-sided stats pick the only measured engine
+        let only_block = PatternStats {
+            block: EngineStats { runs: 1, ewma_ns: 500.0 },
+            ..Default::default()
+        };
+        assert_eq!(choose_engine(&only_block), Engine::Block);
+        assert_eq!(choose_engine(&PatternStats::default()), Engine::Hash);
+    }
+
+    #[test]
+    fn warm_dispatched_pattern_is_costed_with_its_tuned_chunk_size() {
+        use crate::coordinator::feedback::PatternStats;
+        // the serve-path half of the chunk-tuning loop: a pattern whose
+        // history holds a tuned broadcast chunk size must have its
+        // sharded-route cost model (which shard_count routes through
+        // overlap_for) consult that size, not the fleet default
+        let mut rng = Rng::new(64);
+        let a = Uniform { n: 1000, per_row: 8, jitter: 4 }.generate(&mut rng);
+        let key = (a.pattern_fingerprint(), a.pattern_fingerprint());
+        let history = Arc::new(Mutex::new(ExecHistory::new(16)));
+        let r = Router::new(RouterConfig {
+            engine_mode: EngineMode::Auto,
+            dispatch_history: Some(Arc::clone(&history)),
+            ..Default::default()
+        });
+        let default_chunk = OverlapConfig::default().chunk_bytes;
+        assert_eq!(
+            r.overlap_for(&a, &a).chunk_bytes,
+            default_chunk,
+            "cold pattern: the static chunk size"
+        );
+        history.lock().unwrap().insert_stats(
+            key,
+            PatternStats { chunk_bytes: Some(256 * 1024), ..Default::default() },
+        );
+        assert_eq!(
+            r.overlap_for(&a, &a).chunk_bytes,
+            256 * 1024,
+            "warm pattern: the tuned size is consulted"
+        );
+        // other patterns keep the default; overlap-off ignores tuning;
+        // and without a dispatch store (non-Auto modes) nothing changes
+        let mut rng2 = Rng::new(65);
+        let other = Uniform { n: 900, per_row: 8, jitter: 4 }.generate(&mut rng2);
+        assert_eq!(r.overlap_for(&other, &other).chunk_bytes, default_chunk);
+        let off = Router::new(RouterConfig {
+            engine_mode: EngineMode::Auto,
+            dispatch_history: Some(Arc::clone(&history)),
+            overlap: crate::gpusim::OverlapConfig::off(),
+            ..Default::default()
+        });
+        assert!(!off.overlap_for(&a, &a).enabled);
+        assert_eq!(off.overlap_for(&a, &a).chunk_bytes, OverlapConfig::off().chunk_bytes);
+        let plain = Router::default();
+        assert_eq!(plain.overlap_for(&a, &a), plain.cfg.overlap);
     }
 
     #[test]

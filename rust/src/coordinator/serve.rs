@@ -50,11 +50,14 @@
 use super::barrier::SpeculateConfig;
 use super::batch::{BatchConfig, Batcher};
 use super::chaos::ChaosConfig;
-use super::feedback::{parse_on_off, persist, NsPerProdFit, PersistedState, ReplanConfig};
+use super::feedback::{
+    parse_on_off, persist, ExecHistory, NsPerProdFit, PersistedState, ReplanConfig,
+};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::router::{Route, Router, RouterConfig};
+use super::router::{EngineMode, Route, Router, RouterConfig};
 use super::service::{Coordinator, EngineFactory, Job, JobResult};
 use crate::gpusim::{Interconnect, OverlapConfig};
+use crate::runtime::BlockEngine;
 use crate::sparse::Csr;
 use anyhow::{bail, Result};
 use std::collections::{HashMap, VecDeque};
@@ -144,6 +147,14 @@ pub struct ServeConfig {
     /// enable in production — this knob exists so CI and the chaos bench
     /// can prove the failure-domain machinery.
     pub chaos: ChaosConfig,
+    /// Engine commitment (`OPSPARSE_ENGINE`/`--engine
+    /// fill|auto|hash|block`). The default ([`EngineMode::Fill`]) is
+    /// the pre-dispatch structural routing, bit for bit; `auto` turns
+    /// on measured multi-engine dispatch (the front door then shares
+    /// one engine-tagged history between the router, the workers, and
+    /// persistence, and loads a native block engine so block routes
+    /// execute); `hash`/`block` force one engine fleet-wide.
+    pub engine: EngineMode,
 }
 
 impl Default for ServeConfig {
@@ -164,6 +175,7 @@ impl Default for ServeConfig {
             ns_per_prod: None,
             speculate: SpeculateConfig::default(),
             chaos: ChaosConfig::off(),
+            engine: EngineMode::default(),
         }
     }
 }
@@ -240,6 +252,9 @@ impl ServeConfig {
         }
         if let Some(seed) = get("OPSPARSE_CHAOS_SEED").and_then(|v| v.parse::<u64>().ok()) {
             cfg.chaos.seed = seed;
+        }
+        if let Some(mode) = get("OPSPARSE_ENGINE").and_then(|v| EngineMode::parse(&v)) {
+            cfg.engine = mode;
         }
         cfg
     }
@@ -355,6 +370,12 @@ impl ServeConfig {
                 Err(_) => bail!("--chaos-seed wants a number, got {v:?}"),
             }
         }
+        if let Some(v) = flags.get("engine") {
+            match EngineMode::parse(v) {
+                Some(mode) => cfg.engine = mode,
+                None => bail!("--engine wants fill|auto|hash|block, got {v:?}"),
+            }
+        }
         Ok(cfg)
     }
 
@@ -368,6 +389,7 @@ impl ServeConfig {
             overlap: self.overlap,
             ns_per_prod: fit.current(),
             fit: Some(fit),
+            engine_mode: self.engine,
             ..RouterConfig::default()
         }
     }
@@ -528,7 +550,28 @@ impl Serve {
             (None, Some(k)) => Arc::new(NsPerProdFit::new(k)),
             (None, None) => super::feedback::default_fit(),
         };
-        let router = Router::new(cfg.router_config(Arc::clone(&fit)));
+        let mut router_cfg = cfg.router_config(Arc::clone(&fit));
+        if router_cfg.engine_mode == EngineMode::Auto {
+            // create the engine-tagged history *before* the router and
+            // coordinator are built, so the dispatcher thread's router
+            // clone, the coordinator's workers, and persistence all
+            // share one store — otherwise the front door's batching
+            // check could route a pattern differently than the
+            // coordinator executes it
+            router_cfg.dispatch_history =
+                Some(Arc::new(Mutex::new(ExecHistory::new(cfg.replan.history_cap))));
+        }
+        let router = Router::new(router_cfg);
+        // dispatched and forced-block fleets need a block engine loaded
+        // or every block route would downgrade (counted in
+        // `block_fallbacks`) before it ever measured anything; the
+        // native backend is bit-exact, so loading it by default is safe
+        let engine = engine.or_else(|| {
+            matches!(cfg.engine, EngineMode::Auto | EngineMode::Block).then(|| {
+                let t = router.cfg.t.max(1);
+                Box::new(move || BlockEngine::native(16, t)) as EngineFactory
+            })
+        });
         let coord = Coordinator::start_full(
             cfg.workers,
             router.clone(),
@@ -819,6 +862,7 @@ mod tests {
         assert_eq!(d.overlap, OverlapConfig::default());
         assert!(!d.speculate.enabled, "speculation defaults off (PR 6 baseline)");
         assert!(d.chaos.is_off(), "chaos defaults off");
+        assert_eq!(d.engine, EngineMode::Fill, "dispatch is opt-in (PR 8 baseline)");
     }
 
     #[test]
@@ -841,6 +885,7 @@ mod tests {
             ("OPSPARSE_SPECULATE_LAG", "2.5"),
             ("OPSPARSE_CHAOS", "gentle"),
             ("OPSPARSE_CHAOS_SEED", "42"),
+            ("OPSPARSE_ENGINE", "auto"),
         ]
         .into_iter()
         .collect();
@@ -861,12 +906,14 @@ mod tests {
         assert!(cfg.speculate.enabled);
         assert_eq!(cfg.speculate.lag_factor, 2.5);
         assert_eq!(cfg.chaos, ChaosConfig::gentle().with_seed(42));
+        assert_eq!(cfg.engine, EngineMode::Auto);
         // `on` maps to the default path; junk values keep the defaults
         let env2: HashMap<&str, &str> = [
             ("OPSPARSE_PERSIST", "on"),
             ("OPSPARSE_WORKERS", "zero"),
             ("OPSPARSE_COALESCE", "maybe"),
             ("OPSPARSE_INTERCONNECT", "carrier-pigeon"),
+            ("OPSPARSE_ENGINE", "cuda"),
         ]
         .into_iter()
         .collect();
@@ -875,6 +922,7 @@ mod tests {
         assert_eq!(cfg2.workers, ServeConfig::default().workers, "junk keeps default");
         assert!(cfg2.coalesce, "junk keeps default");
         assert_eq!(cfg2.interconnect, ServeConfig::default().interconnect);
+        assert_eq!(cfg2.engine, EngineMode::Fill, "junk keeps default");
         // an empty env reproduces the defaults exactly
         assert_eq!(ServeConfig::from_env_map(|_| None), ServeConfig::default());
     }
@@ -882,16 +930,21 @@ mod tests {
     #[test]
     fn cli_layer_beats_env_and_rejects_junk() {
         // env says one thing...
-        let env: HashMap<&str, &str> =
-            [("OPSPARSE_COALESCE", "off"), ("OPSPARSE_QUEUE_CAP", "3"), ("OPSPARSE_BATCH", "on")]
-                .into_iter()
-                .collect();
+        let env: HashMap<&str, &str> = [
+            ("OPSPARSE_COALESCE", "off"),
+            ("OPSPARSE_QUEUE_CAP", "3"),
+            ("OPSPARSE_BATCH", "on"),
+            ("OPSPARSE_ENGINE", "hash"),
+        ]
+        .into_iter()
+        .collect();
         let base = ServeConfig::from_env_map(|k| env.get(k).map(|v| v.to_string()));
         // ...the CLI says another: CLI wins, untouched knobs keep env
         let flags: HashMap<String, String> = [
             ("coalesce".to_string(), "on".to_string()),
             ("queue-cap".to_string(), "77".to_string()),
             ("persist".to_string(), "cli.state".to_string()),
+            ("engine".to_string(), "auto".to_string()),
         ]
         .into_iter()
         .collect();
@@ -900,6 +953,7 @@ mod tests {
         assert_eq!(cfg.queue_cap, 77, "CLI overrides env");
         assert!(cfg.batch.enabled, "knobs the CLI left alone keep the env layer");
         assert_eq!(cfg.persist.as_deref(), Some("cli.state"));
+        assert_eq!(cfg.engine, EngineMode::Auto, "CLI overrides env");
         // unknown flag names are ignored (commands carry extra flags)
         let extra: HashMap<String, String> =
             [("jobs".to_string(), "32".to_string())].into_iter().collect();
@@ -913,6 +967,7 @@ mod tests {
             ("speculate-lag", "-3"),
             ("chaos", "cruel"),
             ("chaos-seed", "lucky"),
+            ("engine", "cuda"),
         ] {
             let bad: HashMap<String, String> =
                 [(k.to_string(), v.to_string())].into_iter().collect();
@@ -969,6 +1024,7 @@ mod tests {
         cfg.max_devices = 4;
         cfg.interconnect = None;
         cfg.overlap = OverlapConfig::off();
+        cfg.engine = EngineMode::Auto;
         let fit = Arc::new(NsPerProdFit::new(2.0));
         let rc = cfg.router_config(Arc::clone(&fit));
         assert_eq!(rc.device_memory_bytes, 4096);
@@ -978,5 +1034,6 @@ mod tests {
         assert_eq!(rc.ns_per_prod, 2.0);
         assert!(rc.fit.is_some());
         assert_eq!(rc.ns_per_prod_now(), 2.0);
+        assert_eq!(rc.engine_mode, EngineMode::Auto, "the engine knob reaches the router");
     }
 }

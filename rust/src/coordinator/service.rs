@@ -29,15 +29,15 @@
 use super::barrier::{ShardBarrier, ShardFeedback, SpeculateConfig, SpeculationState};
 use super::cache::PatternCache;
 use super::chaos::{ChaosConfig, WorkerChaos};
-use super::feedback::{ExecHistory, NsPerProdFit, ReplanConfig};
+use super::feedback::{Engine, ExecHistory, NsPerProdFit, ReplanConfig, RunObservation};
 use super::metrics::Metrics;
-use super::router::{Route, Router};
-use crate::gpusim::{simulate, DevicePool, V100};
+use super::router::{EngineMode, Route, Router};
+use crate::gpusim::{simulate, DevicePool, Trace, V100};
 use crate::runtime::BlockEngine;
 use crate::sparse::ops::row_slice;
-use crate::sparse::stats::nprod_per_row;
+use crate::sparse::stats::{nprod_per_row, total_nprod};
 use crate::sparse::Csr;
-use crate::spgemm::pipeline::{multiply_reuse, OpSparseConfig, SymbolicReuse};
+use crate::spgemm::pipeline::{multiply_reuse, OpSparseConfig, SpgemmOutput, SymbolicReuse};
 use crate::spgemm::sharded::{MeasuredShard, ShardPlan};
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -62,6 +62,12 @@ const MAX_REQUEUES: u32 = 5;
 /// worth speculating on (`SpeculateConfig::min_lag_ns`) and cheap: each
 /// tick takes one registry lock and per-barrier state lock.
 const SPECULATION_TICK: Duration = Duration::from_micros(200);
+
+/// Batch size of the per-shard native block engines on the
+/// [`Route::ShardedBlock`] path. The batch size only shapes the
+/// simulated launch batching ([`crate::runtime::BlockEngine`]), never
+/// the result, so the common native test size is fine fleet-wide.
+const SHARD_BLOCK_P: usize = 16;
 
 /// A multiply job. `force_route` overrides the router (tests/benches).
 pub struct Job {
@@ -110,6 +116,16 @@ struct ShardTask {
     /// through [`ShardBarrier::complete_from`] so a backup-first finish
     /// counts as a `speculative_win`.
     speculative: bool,
+    /// Engine this shard runs on: hash shards take the worker's warm
+    /// multiply path; [`Engine::Block`] shards run a per-task native
+    /// (bit-exact) BSR engine over the same row slice
+    /// ([`Route::ShardedBlock`] fan-out).
+    engine: Engine,
+    /// Block size `T` the shard plan's cuts are aligned to — the native
+    /// engine of a block shard must be built with the same `T` or the
+    /// slice's BSR conversion would pad different block contents than
+    /// the unsharded conversion.
+    block_t: usize,
 }
 
 enum WorkerMsg {
@@ -161,6 +177,7 @@ pub(crate) fn finish(
 /// per-job [`WorkerMsg::Run`] arm and the batched [`WorkerMsg::RunBatch`]
 /// arm — a batch is exactly this, looped, so batching changes *where*
 /// the work runs (one worker visit), never *what* it computes.
+#[allow(clippy::too_many_arguments)]
 fn run_hash_job(
     job: Job,
     t0: Instant,
@@ -168,6 +185,7 @@ fn run_hash_job(
     cache: &mut PatternCache,
     cfg: &OpSparseConfig,
     fit: Option<&Arc<NsPerProdFit>>,
+    engine_history: Option<&Arc<Mutex<ExecHistory>>>,
     metrics: &Metrics,
     tx_res: &mpsc::Sender<JobResult>,
 ) {
@@ -200,11 +218,31 @@ fn run_hash_job(
                 // clock would drift the fit with machine speed.
                 // Cache-warm replays skip the symbolic phase and would
                 // bias the full-pipeline constant low; skip them.
-                if let Some(f) = fit {
-                    if !out.symbolic_skipped
-                        && f.observe(simulate(&out.trace, &V100).total_ns, np as u64)
-                    {
-                        metrics.refit_updates.fetch_add(1, Ordering::Relaxed);
+                if !out.symbolic_skipped {
+                    let sim_ns = simulate(&out.trace, &V100).total_ns;
+                    if let Some(f) = fit {
+                        if f.observe(sim_ns, np as u64) {
+                            metrics.refit_updates.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    // engine-tagged dispatch measurement (Auto mode
+                    // only — `engine_history` is None otherwise): fold
+                    // this job's simulated time into the pattern's hash
+                    // EWMA so the dispatcher's next decision for this
+                    // pattern compares measurements, not estimates.
+                    if let Some(h) = engine_history {
+                        let mut h = h.lock().unwrap_or_else(|e| e.into_inner());
+                        h.record(
+                            key,
+                            RunObservation {
+                                engine: Engine::Hash,
+                                engine_ns: sim_ns,
+                                nprod: np as u64,
+                                ..Default::default()
+                            },
+                        );
+                        metrics.history_patterns.store(h.len() as u64, Ordering::Relaxed);
+                        metrics.history_evictions.store(h.evictions(), Ordering::Relaxed);
                     }
                 }
                 if reuse.is_none() {
@@ -249,6 +287,9 @@ fn run_shard_task(
     // panicking shard (poisoned rows reachable only from this shard's
     // slice) must cost the parent job, not this worker thread.
     metrics.observe_shard_subjob(worker_id);
+    if task.engine == Engine::Block {
+        return run_block_shard_task(task, injected_delay_ns);
+    }
     let pool_before = pool.stats();
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         let a_s = row_slice(&task.a, task.lo, task.hi)?;
@@ -294,6 +335,49 @@ fn run_shard_task(
     task.barrier.complete_from(task.shard, r, shard_ns, task.speculative);
 }
 
+/// Execute one [`Route::ShardedBlock`] shard: a fresh native (bit-exact)
+/// BSR engine over the row slice. The parent's cuts are aligned to
+/// multiples of the engine block size
+/// ([`ShardPlan::balanced_aligned`]), so each slice's BSR conversion
+/// pads exactly the block rows the unsharded conversion would give it
+/// and the stitched `C` is bit-identical to the unsharded block result.
+/// No symbolic cache here: the BSR conversion *is* the symbolic phase,
+/// and it is cheap next to the block-pair products. Measured time is the
+/// engine's closed-form simulated ns (the same clock domain the
+/// dispatcher's hash measurements use), plus any chaos-injected delay.
+fn run_block_shard_task(task: ShardTask, injected_delay_ns: u64) {
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let a_s = row_slice(&task.a, task.lo, task.hi)?;
+        let mut engine = BlockEngine::native(SHARD_BLOCK_P, task.block_t.max(1))?;
+        let c = engine.spgemm_csr(&a_s, &task.b)?;
+        let nprod = total_nprod(&a_s, &task.b);
+        Ok((c, nprod, engine.simulated_ns(&V100)))
+    }));
+    let r = match outcome {
+        Ok(r) => r,
+        Err(_) => Err(anyhow::anyhow!(
+            "block shard {} panicked (poisoned input or internal bug)",
+            task.shard
+        )),
+    };
+    let (out, shard_ns) = match r {
+        Ok((c, nprod, ns)) => (
+            Ok(SpgemmOutput {
+                c,
+                trace: Trace::new(),
+                nprod,
+                sym_stats: Default::default(),
+                num_stats: Default::default(),
+                sym_fallback_rows: 0,
+                symbolic_skipped: false,
+            }),
+            task.measure.then_some(ns + injected_delay_ns as f64),
+        ),
+        Err(e) => (Err(e), None),
+    };
+    task.barrier.complete_from(task.shard, out, shard_ns, task.speculative);
+}
+
 /// Everything a hash worker (or its respawned replacement) needs,
 /// bundled so the death path can hand it to the next generation.
 #[derive(Clone)]
@@ -305,6 +389,11 @@ struct WorkerShared {
     tx_res: mpsc::Sender<JobResult>,
     metrics: Arc<Metrics>,
     fit: Option<Arc<NsPerProdFit>>,
+    /// Engine-tagged execution history the workers record measured
+    /// per-engine timings into — `Some` only under [`EngineMode::Auto`]
+    /// (with replanning on), so every other mode's history contents and
+    /// gauges are bit-identical to the pre-dispatch coordinator.
+    engine_history: Option<Arc<Mutex<ExecHistory>>>,
     chaos: ChaosConfig,
     /// Replacement-worker handles, pushed by each dying worker *before*
     /// it exits so [`Coordinator::shutdown`]'s drain loop can't miss
@@ -452,6 +541,7 @@ fn hash_worker_loop(sh: WorkerShared, worker_id: usize, generation: u64) {
                     &mut cache,
                     &cfg,
                     sh.fit.as_ref(),
+                    sh.engine_history.as_ref(),
                     &sh.metrics,
                     &sh.tx_res,
                 );
@@ -470,6 +560,7 @@ fn hash_worker_loop(sh: WorkerShared, worker_id: usize, generation: u64) {
                         &mut cache,
                         &cfg,
                         sh.fit.as_ref(),
+                        sh.engine_history.as_ref(),
                         &sh.metrics,
                         &sh.tx_res,
                     );
@@ -505,6 +596,9 @@ pub struct Coordinator {
     /// Pattern-keyed execution history: written by shard barriers on
     /// parent completion, read at submit time to re-cut warm patterns.
     history: Arc<Mutex<ExecHistory>>,
+    /// Whether the no-block-engine downgrade has been logged (once per
+    /// coordinator — the `block_fallbacks` metric counts every event).
+    block_fallback_logged: AtomicBool,
     pub metrics: Arc<Metrics>,
 }
 
@@ -556,11 +650,33 @@ impl Coordinator {
         speculate: SpeculateConfig,
         chaos: ChaosConfig,
     ) -> Self {
+        let mut router = router;
         let (tx_hash, rx_hash) = mpsc::channel::<WorkerMsg>();
         let (tx_results, rx_results) = mpsc::channel::<JobResult>();
         let rx_hash = Arc::new(Mutex::new(rx_hash));
         let metrics = Arc::new(Metrics::new());
-        let history = Arc::new(Mutex::new(ExecHistory::new(replan.history_cap)));
+        // one history store serves all three loops: shard-replan feedback
+        // (barriers), engine-tagged dispatch measurements (workers), and
+        // the router's warm-pattern dispatch reads. A caller-supplied
+        // dispatch store (the serving front door's persisted history)
+        // becomes that store; otherwise the coordinator owns a fresh one
+        // and, under Auto dispatch, hands the router a handle to it.
+        let history = match router.cfg.dispatch_history.clone() {
+            Some(h) => h,
+            None => {
+                let h = Arc::new(Mutex::new(ExecHistory::new(replan.history_cap)));
+                if router.cfg.engine_mode == EngineMode::Auto {
+                    router.cfg.dispatch_history = Some(Arc::clone(&h));
+                }
+                h
+            }
+        };
+        // engine tagging is strictly part of the measured dispatcher:
+        // outside Auto mode the workers never touch the history, so
+        // `--engine hash` (and the Fill default) reproduce the
+        // pre-dispatch coordinator's history contents and gauges exactly
+        let engine_history = (replan.enabled && router.cfg.engine_mode == EngineMode::Auto)
+            .then(|| Arc::clone(&history));
         let fit: Option<Arc<NsPerProdFit>> = router.cfg.fit.clone();
         let replacements: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
 
@@ -570,6 +686,7 @@ impl Coordinator {
             tx_res: tx_results.clone(),
             metrics: Arc::clone(&metrics),
             fit,
+            engine_history: engine_history.clone(),
             chaos,
             replacements: Arc::clone(&replacements),
         };
@@ -609,6 +726,8 @@ impl Coordinator {
                                 measure: plan.measure,
                                 attempts: 0,
                                 speculative: true,
+                                engine: plan.engine,
+                                block_t: plan.block_t,
                             };
                             if tx.send(WorkerMsg::RunShard(task)).is_err() {
                                 return;
@@ -623,6 +742,7 @@ impl Coordinator {
             let (tx_block, rx_block) = mpsc::channel::<WorkerMsg>();
             let tx_res = tx_results.clone();
             let metrics = Arc::clone(&metrics);
+            let engine_history = engine_history.clone();
             workers.push(std::thread::spawn(move || {
                 // the engine (non-Send PJRT state) lives and dies here
                 let mut engine = match factory() {
@@ -639,7 +759,7 @@ impl Coordinator {
                             // with mismatched dims must fail via the
                             // engine's error, not panic this thread
                             let nprod = if job.a.cols == job.b.rows {
-                                crate::sparse::stats::total_nprod(&job.a, &job.b)
+                                total_nprod(&job.a, &job.b)
                             } else {
                                 0
                             };
@@ -647,6 +767,36 @@ impl Coordinator {
                                 Some(e) => e.spgemm_csr(&job.a, &job.b),
                                 None => Err(anyhow::anyhow!("block engine unavailable")),
                             };
+                            // the block half of the engine-tagged
+                            // measurement loop: fold the run's simulated
+                            // ns into the pattern's block EWMA (Auto
+                            // mode only, successful runs only)
+                            if c.is_ok() {
+                                if let (Some(h), Some(e)) =
+                                    (engine_history.as_ref(), engine.as_ref())
+                                {
+                                    let key = (
+                                        job.a.pattern_fingerprint(),
+                                        job.b.pattern_fingerprint(),
+                                    );
+                                    let mut h = h.lock().unwrap_or_else(|e| e.into_inner());
+                                    h.record(
+                                        key,
+                                        RunObservation {
+                                            engine: Engine::Block,
+                                            engine_ns: e.simulated_ns(&V100),
+                                            nprod: nprod as u64,
+                                            ..Default::default()
+                                        },
+                                    );
+                                    metrics
+                                        .history_patterns
+                                        .store(h.len() as u64, Ordering::Relaxed);
+                                    metrics
+                                        .history_evictions
+                                        .store(h.evictions(), Ordering::Relaxed);
+                                }
+                            }
                             finish(&metrics, &tx_res, job.id, Route::Block, c, nprod, t0);
                         }
                         // the submit path never sends shard or batch
@@ -675,6 +825,7 @@ impl Coordinator {
             router,
             replan,
             history,
+            block_fallback_logged: AtomicBool::new(false),
             metrics,
         }
     }
@@ -694,7 +845,23 @@ impl Coordinator {
         let route = match (route, &self.tx_block) {
             (Route::Block, Some(_)) => Route::Block,
             (Route::Block, None) if job.force_route.is_some() => Route::Block, // honored, will fail
-            (Route::Block, None) => Route::Hash,
+            (Route::Block, None) => {
+                // auto-routed block job with no block engine loaded:
+                // fall back to the hash pipeline, but never silently —
+                // count it and log it once so an operator who expected
+                // block-engine throughput can see the downgrade
+                self.metrics.block_fallbacks.fetch_add(1, Ordering::Relaxed);
+                if !self.block_fallback_logged.swap(true, Ordering::Relaxed) {
+                    eprintln!(
+                        "opsparse: block-routed job downgraded to the hash pipeline \
+                         (no block engine loaded); counting further downgrades in \
+                         the block_fallbacks metric"
+                    );
+                }
+                Route::Hash
+            }
+            // ShardedBlock needs no dedicated block worker: each shard
+            // sub-job builds its own native engine on the hash pool
             (r, _) => r,
         };
         match route {
@@ -702,11 +869,20 @@ impl Coordinator {
                 self.metrics.hash_routed.fetch_add(1, Ordering::Relaxed);
                 self.tx_hash.send(WorkerMsg::Run(job, route, t0, 0)).expect("hash workers alive");
             }
-            Route::Sharded { n_devices } => {
+            Route::Sharded { n_devices } | Route::ShardedBlock { n_devices } => {
                 // split into per-shard sub-jobs that fan out across the
                 // whole worker pool; a ShardBarrier stitches the row
-                // blocks and emits the one parent JobResult
-                self.metrics.sharded_routed.fetch_add(1, Ordering::Relaxed);
+                // blocks and emits the one parent JobResult. Block-engine
+                // parents ride the same machinery with T-aligned cuts
+                // and per-task native engines.
+                let block = matches!(route, Route::ShardedBlock { .. });
+                let engine = if block { Engine::Block } else { Engine::Hash };
+                let block_t = self.router.cfg.t.max(1);
+                if block {
+                    self.metrics.sharded_block_routed.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.metrics.sharded_routed.fetch_add(1, Ordering::Relaxed);
+                }
                 let n = n_devices.max(1);
                 // hash B's pattern once per parent job; every shard
                 // sub-job reuses it for its shard-aware cache key, and
@@ -716,20 +892,28 @@ impl Coordinator {
                 // bounds from the previous run's measured per-shard
                 // times instead of the nprod proxy. Forced routes are a
                 // test/bench override and bypass adaptation the same way
-                // they bypass the router.
+                // they bypass the router. Block parents keep the
+                // feedback hook (their measured makespan feeds the
+                // dispatcher) but always fresh-cut: a measured re-cut
+                // would move the bounds off the T-alignment (measured
+                // re-cuts for block plans are a ROADMAP follow-on).
                 let adaptive = self.replan.enabled && job.force_route.is_none();
                 let (key, measured) = if adaptive {
                     let key = (job.a.pattern_fingerprint(), b_fp);
-                    let measured: Option<Vec<MeasuredShard>> = {
+                    let measured: Option<Vec<MeasuredShard>> = if block {
+                        None
+                    } else {
                         let h = self.history.lock().unwrap_or_else(|e| e.into_inner());
                         h.lookup(key)
                             .map(|s| s.measured.clone())
                             .filter(|m| !m.is_empty())
                     };
-                    if measured.is_some() {
-                        self.metrics.replans.fetch_add(1, Ordering::Relaxed);
-                    } else {
-                        self.metrics.replan_cold_misses.fetch_add(1, Ordering::Relaxed);
+                    if !block {
+                        if measured.is_some() {
+                            self.metrics.replans.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            self.metrics.replan_cold_misses.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                     (Some(key), measured)
                 } else {
@@ -743,9 +927,13 @@ impl Coordinator {
                 // since most submits never reach this branch.)
                 let planned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let nprod = nprod_per_row(&job.a, &job.b);
-                    match &measured {
-                        Some(m) => ShardPlan::from_history(&nprod, n, m),
-                        None => ShardPlan::balanced(&nprod, n),
+                    if block {
+                        ShardPlan::balanced_aligned(&nprod, n, block_t)
+                    } else {
+                        match &measured {
+                            Some(m) => ShardPlan::from_history(&nprod, n, m),
+                            None => ShardPlan::balanced(&nprod, n),
+                        }
                     }
                 }));
                 let plan = match planned {
@@ -796,6 +984,8 @@ impl Coordinator {
                         b_fp,
                         measure,
                         ranges: (0..n).map(|s| plan.range(s)).collect(),
+                        engine,
+                        block_t,
                     });
                 }
                 let barrier = Arc::new(barrier);
@@ -819,6 +1009,8 @@ impl Coordinator {
                             measure,
                             attempts: 0,
                             speculative: false,
+                            engine,
+                            block_t,
                         }))
                         .expect("hash workers alive");
                 }
@@ -1262,6 +1454,115 @@ mod tests {
         let r = coord.recv().unwrap();
         assert!(r.c.is_err());
         assert_eq!(r.route, Route::Block);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sharded_block_jobs_stitch_bit_identical_to_unsharded_block() {
+        use crate::gen::banded::Banded;
+        // the ShardedBlock acceptance property: T-aligned cuts + per-shard
+        // native engines stitch to exactly the unsharded block result,
+        // which is itself bitwise the hash result (the native backend is
+        // bit-exact) — so all engine/shard combinations agree
+        let coord = Coordinator::start(2, Router::default(), None);
+        let mut rng = Rng::new(82);
+        let a = Banded { n: 500, per_row: 24, band: 20, contiguous_frac: 1.0 }.generate(&mut rng);
+        let gold_block = BlockEngine::native(SHARD_BLOCK_P, 16).unwrap().spgemm_csr(&a, &a).unwrap();
+        let gold = spgemm_reference(&a, &a);
+        for id in 0..2u64 {
+            coord.submit(Job {
+                id,
+                a: a.clone(),
+                b: a.clone(),
+                force_route: Some(Route::ShardedBlock { n_devices: 3 }),
+            });
+        }
+        for _ in 0..2 {
+            let r = coord.recv().unwrap();
+            assert_eq!(r.route, Route::ShardedBlock { n_devices: 3 });
+            let c = r.c.unwrap();
+            assert_eq!(c, gold_block, "stitched shards must match the unsharded block engine");
+            assert!(c.approx_eq(&gold, 1e-12));
+            assert!(r.nprod > 0);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.sharded_block_routed, 2);
+        assert_eq!(snap.sharded_routed, 0, "block parents get their own counter");
+        assert_eq!(snap.shard_subjobs, 6, "every block sub-job must be accounted");
+        assert_eq!(snap.block_fallbacks, 0, "no block worker needed: shards self-build engines");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn auto_block_route_without_engine_falls_back_and_counts() {
+        use crate::coordinator::router::RouterConfig;
+        use crate::gen::banded::Banded;
+        // an auto-routed block job with no block engine loaded must
+        // succeed via the hash pipeline — downgraded loudly (counted),
+        // never silently, and never failed (forced routes still fail;
+        // see block_route_without_engine_fails_gracefully above)
+        let router =
+            Router::new(RouterConfig { engine_mode: EngineMode::Block, ..Default::default() });
+        let coord = Coordinator::start(1, router, None);
+        let mut rng = Rng::new(83);
+        let a = Banded { n: 200, per_row: 12, band: 10, contiguous_frac: 1.0 }.generate(&mut rng);
+        let gold = spgemm_reference(&a, &a);
+        for id in 0..2u64 {
+            coord.submit(Job { id, a: a.clone(), b: a.clone(), force_route: None });
+        }
+        for _ in 0..2 {
+            let r = coord.recv().unwrap();
+            assert_eq!(r.route, Route::Hash, "downgraded, not failed");
+            assert!(r.c.unwrap().approx_eq(&gold, 1e-12));
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.block_fallbacks, 2, "every downgrade is counted");
+        assert_eq!(snap.hash_routed, 2);
+        assert_eq!(snap.block_routed, 0);
+        assert_eq!(snap.jobs_failed, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn measured_dispatch_records_engine_tagged_history() {
+        use crate::coordinator::router::RouterConfig;
+        use crate::gen::banded::Banded;
+        // the measured-dispatch loop end to end: under Auto, a blocky
+        // pattern routes to the block engine and its run lands in the
+        // pattern's block EWMA; a scattered pattern routes to hash and
+        // warms the hash EWMA — so the next decision for either pattern
+        // compares measurements, not estimates
+        let router =
+            Router::new(RouterConfig { engine_mode: EngineMode::Auto, ..Default::default() });
+        let coord =
+            Coordinator::start(1, router, Some(Box::new(|| BlockEngine::native(16, 16))));
+        let mut rng = Rng::new(84);
+        let blocky =
+            Banded { n: 1000, per_row: 48, band: 40, contiguous_frac: 1.0 }.generate(&mut rng);
+        let scattered = Uniform { n: 2000, per_row: 6, jitter: 3 }.generate(&mut rng);
+        coord.submit(Job { id: 0, a: blocky.clone(), b: blocky.clone(), force_route: None });
+        let r = coord.recv().unwrap();
+        assert_eq!(r.route, Route::Block, "cold estimate sends the blocky pattern to block");
+        assert!(r.c.unwrap().approx_eq(&spgemm_reference(&blocky, &blocky), 1e-12));
+        coord.submit(Job {
+            id: 1,
+            a: scattered.clone(),
+            b: scattered.clone(),
+            force_route: None,
+        });
+        let r = coord.recv().unwrap();
+        assert_eq!(r.route, Route::Hash, "cold estimate keeps the scattered pattern on hash");
+        assert!(r.c.is_ok());
+        let h = coord.history().lock().unwrap();
+        let bs = h
+            .lookup((blocky.pattern_fingerprint(), blocky.pattern_fingerprint()))
+            .expect("blocky pattern recorded");
+        assert!(bs.block.warm() && bs.block.runs >= 1, "block run measured: {:?}", bs.block);
+        let ss = h
+            .lookup((scattered.pattern_fingerprint(), scattered.pattern_fingerprint()))
+            .expect("scattered pattern recorded");
+        assert!(ss.hash.warm() && ss.hash.runs >= 1, "hash run measured: {:?}", ss.hash);
+        drop(h);
         coord.shutdown();
     }
 }

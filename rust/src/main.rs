@@ -4,7 +4,7 @@
 //! * `gen --name <matrix> [--scale s] [--out f.mtx]` — emit a suite matrix
 //! * `spgemm --a f.mtx [--b g.mtx] [--lib L] [--verify]` — one multiply
 //! * `suite [--scale s] [--verify]` — all 26 matrices, all libraries
-//! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|chaos|corpus|all>`
+//! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|chaos|corpus|engines|all>`
 //!   (`bench shards` takes `--interconnect pcie|nvlink|none`,
 //!   `--overlap on|off`, `--chunk-kb <KiB>`, `--json <path>`,
 //!   `--overlap-json <path>`, `--replan on|off`, and
@@ -12,8 +12,12 @@
 //!   `--json <path>`; `bench chaos` takes `--jobs n`, `--chaos-seed n`,
 //!   and `--json <path>`; `bench corpus` takes `--dir <corpus dir>` and
 //!   `--json <path>`, with `OPSPARSE_CORPUS_DIR` /
-//!   `OPSPARSE_BENCH_JSON_CORPUS` as env fallbacks)
-//! * `serve [--jobs n] [--workers w] [--coalesce on|off] [--batch on|off]
+//!   `OPSPARSE_BENCH_JSON_CORPUS` as env fallbacks; `bench engines`
+//!   takes `--reps n` and `--json <path>`, with
+//!   `OPSPARSE_ENGINE_BENCH_REPS` / `OPSPARSE_BENCH_JSON_ENGINES` as
+//!   env fallbacks)
+//! * `serve [--jobs n] [--workers w] [--engine fill|auto|hash|block]
+//!   [--coalesce on|off] [--batch on|off]
 //!   [--batch-max n] [--batch-age-ms n] [--queue-cap n] [--inflight n]
 //!   [--persist on|off|path] [--replan on|off] [--history-cap n]
 //!   [--overlap on|off] [--chunk-kb n] [--interconnect pcie|nvlink|none]
@@ -297,6 +301,42 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
                 opsparse::bench::write_corpus_json(path, &report)?;
             }
         }
+        "engines" => {
+            use opsparse::bench::engines;
+            let env_reps = std::env::var("OPSPARSE_ENGINE_BENCH_REPS").ok();
+            let reps: usize = flags
+                .get("reps")
+                .map(String::as_str)
+                .or(env_reps.as_deref())
+                .map(|v| v.parse())
+                .transpose()?
+                .unwrap_or(engines::DEFAULT_ENGINE_REPS);
+            let report = engines::engines_ablation(reps)?;
+            println!(
+                "{:<20} {:>6} {:>14} {:>14} {:>14} {:>6} {:>5}",
+                "class", "blocky", "hash_ns", "block_ns", "dispatched_ns", "bpick", "bit"
+            );
+            for r in &report.rows {
+                println!(
+                    "{:<20} {:>6} {:>14.0} {:>14.0} {:>14.0} {:>4}/{} {:>5}",
+                    r.class,
+                    r.blocky,
+                    r.hash_ns_mean,
+                    r.block_ns_mean,
+                    r.dispatched_ns_mean,
+                    r.dispatched_block_picks,
+                    r.reps,
+                    r.bit_identical
+                );
+            }
+            for g in &report.gates {
+                println!("gate {:<45} pass {} p {:.4}", g.name, g.pass, g.p);
+            }
+            let env_path = std::env::var("OPSPARSE_BENCH_JSON_ENGINES").ok();
+            if let Some(path) = flags.get("json").map(String::as_str).or(env_path.as_deref()) {
+                opsparse::bench::write_engines_json(path, &report)?;
+            }
+        }
         "all" => {
             tables::table1();
             tables::table2();
@@ -328,9 +368,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         && opsparse::runtime::pjrt_compiled()
         && opsparse::runtime::artifacts_available();
     println!(
-        "serve: {} hash workers, block engine: {use_engine}, coalesce: {}, batch: {}, \
-         queue cap {}, persist: {}",
+        "serve: {} hash workers, engine mode: {}, block engine: {use_engine}, coalesce: {}, \
+         batch: {}, queue cap {}, persist: {}",
         cfg.workers,
+        cfg.engine.label(),
         if cfg.coalesce { "on" } else { "off" },
         if cfg.batch.enabled { "on" } else { "off" },
         cfg.queue_cap,
@@ -480,14 +521,16 @@ fn usage() -> ! {
            gen      --name <matrix> [--scale tiny|small|medium] [--out f.mtx]\n\
            spgemm   --a f.mtx [--b g.mtx] [--lib opsparse|nsparse|speck|cusparse] [--verify]\n\
            suite    [--scale s] [--verify]\n\
-           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|chaos|corpus|all> [--scale s]\n\
+           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|chaos|corpus|engines|all> [--scale s]\n\
                     shards also takes [--interconnect pcie|nvlink|none] [--overlap on|off]\n\
                     [--chunk-kb n] [--json out.json] [--overlap-json out.json]\n\
                     [--replan on|off] [--adaptive-json out.json]\n\
                     serve also takes [--jobs n] [--json out.json]\n\
                     chaos also takes [--jobs n] [--chaos-seed n] [--json out.json]\n\
                     corpus also takes [--dir corpus/] [--json out.json]\n\
-           serve    [--jobs n] [--workers w] [--no-engine] [--coalesce on|off]\n\
+                    engines also takes [--reps n] [--json out.json]\n\
+           serve    [--jobs n] [--workers w] [--engine fill|auto|hash|block] [--no-engine]\n\
+                    [--coalesce on|off]\n\
                     [--batch on|off] [--batch-max n] [--batch-age-ms n] [--queue-cap n]\n\
                     [--inflight n] [--persist on|off|path] [--replan on|off] [--history-cap n]\n\
                     [--overlap on|off] [--chunk-kb n] [--interconnect pcie|nvlink|none]\n\

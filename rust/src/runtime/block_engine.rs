@@ -10,11 +10,18 @@
 //! analog of the paper's fixed hash-table-size binning.
 
 use super::client::PjrtRuntime;
+use crate::gpusim::DeviceParams;
 use crate::sparse::{Bsr, Csr};
 use crate::spgemm::hash_table::HashAccumulator;
 use crate::spgemm::HashVariant;
 use anyhow::{anyhow, ensure, Result};
 use std::path::PathBuf;
+
+/// Fraction of the device's peak FP64 throughput the dense block-matmul
+/// kernel sustains in the cost model. Dense T×T tiles stream through the
+/// FP64 pipes with no hash probing or bank conflicts, but padding and
+/// batch edges keep it off peak.
+pub const BLOCK_MXU_EFFICIENCY: f64 = 0.5;
 
 /// One block-pair product task: `C[c_idx] += A[a_idx] @ B[b_idx]`.
 #[derive(Clone, Copy, Debug)]
@@ -33,10 +40,29 @@ pub struct BlockEngineStats {
     pub c_blocks: usize,
 }
 
-/// PJRT-backed BSR SpGEMM engine for one compiled `(P, T)` variant.
+/// How the numeric phase of a [`BlockEngine`] executes.
+enum Backend {
+    /// AOT-compiled Pallas kernel through PJRT (requires `make artifacts`
+    /// and the `pjrt` feature). Batches P block pairs per execute call;
+    /// each pair's T-deep dot products reduce inside the kernel, so its
+    /// f64 association differs from the hash pipeline's per-product
+    /// accumulation — use it for throughput, not bit-comparison.
+    Pjrt { runtime: PjrtRuntime, artifact: PathBuf },
+    /// Pure-Rust numeric phase, always available (no artifacts, no
+    /// feature flags). Accumulates every scalar product into the output
+    /// block one at a time in global-k-ascending order — exactly the
+    /// hash numeric kernel's association — so its results are **bitwise
+    /// identical** to the hash pipeline on the same operands. This is
+    /// the backend the coordinator's block route and the engines bench
+    /// run on.
+    Native,
+}
+
+/// BSR SpGEMM engine for one `(P, T)` variant: Rust symbolic phase (the
+/// paper's hash accumulator over block columns), numeric phase on either
+/// the PJRT kernel or the native bit-exact backend.
 pub struct BlockEngine {
-    runtime: PjrtRuntime,
-    artifact: PathBuf,
+    backend: Backend,
     /// Compiled batch size.
     pub p: usize,
     /// Compiled block size.
@@ -55,7 +81,52 @@ impl BlockEngine {
         );
         let mut runtime = PjrtRuntime::cpu()?;
         runtime.load(&artifact)?;
-        Ok(BlockEngine { runtime, artifact, p, t, stats: BlockEngineStats::default() })
+        Ok(BlockEngine {
+            backend: Backend::Pjrt { runtime, artifact },
+            p,
+            t,
+            stats: BlockEngineStats::default(),
+        })
+    }
+
+    /// The native (pure-Rust, bit-exact) engine — constructible anywhere,
+    /// no artifacts or PJRT toolchain required.
+    pub fn native(p: usize, t: usize) -> Result<Self> {
+        ensure!(p > 0 && t > 0, "batch and block size must be positive");
+        Ok(BlockEngine { backend: Backend::Native, p, t, stats: BlockEngineStats::default() })
+    }
+
+    /// Whether this engine's numeric phase matches the hash pipeline's
+    /// f64 association bit-for-bit (the native backend).
+    pub fn bit_exact(&self) -> bool {
+        matches!(self.backend, Backend::Native)
+    }
+
+    /// Deterministic simulated execution time (ns) of the *last*
+    /// multiply under `dev` — the block-engine analog of
+    /// `simulate(&trace, &V100).total_ns`, in the same clock domain, so
+    /// engine-tagged history entries compare hash and block apples to
+    /// apples. The model: one symbolic pass probing once per *block*
+    /// pair (the T²-fold symbolic reduction over the scalar hash path),
+    /// one numeric kernel launch streaming `batches · P` padded dense
+    /// T×T×T products at [`BLOCK_MXU_EFFICIENCY`] of peak FP64, plus
+    /// HBM traffic for the operand and output blocks. Scattered
+    /// matrices degenerate to ~one block per scalar nonzero and are
+    /// charged T³ flops per scalar product — the model penalizes them
+    /// as hard as real hardware would.
+    pub fn simulated_ns(&self, dev: &DeviceParams) -> f64 {
+        let s = &self.stats;
+        let tt = (self.t * self.t) as f64;
+        let launches = 2.0; // block-symbolic + block-numeric
+        let launch_ns = launches * (dev.launch_overhead_ns + dev.launch_latency_ns);
+        let sym_ns = s.pairs as f64 * dev.global_atomic_ns / dev.sms as f64;
+        let padded_total = (s.batches * self.p).max(s.pairs) as f64;
+        let flops = 2.0 * padded_total * tt * self.t as f64;
+        let num_ns =
+            flops / (dev.sms as f64 * dev.fp64_flops_per_ns * BLOCK_MXU_EFFICIENCY);
+        let bytes = (2.0 * s.pairs as f64 + s.c_blocks as f64) * tt * 8.0;
+        let mem_ns = bytes / dev.hbm_bytes_per_ns;
+        launch_ns + sym_ns + num_ns + mem_ns
     }
 
     /// Symbolic phase on the block structure: output block rows + the
@@ -126,37 +197,64 @@ impl BlockEngine {
         let (c_rpt, c_bcol, tasks) = self.symbolic(a, b);
         let mut c_blocks = vec![0f64; c_bcol.len() * tt];
 
-        // numeric phase: batches of P pairs through the PJRT kernel
-        let mut a_batch = vec![0f64; self.p * tt];
-        let mut b_batch = vec![0f64; self.p * tt];
+        // batch accounting is backend-independent so the cost model sees
+        // the same figures either way
         self.stats = BlockEngineStats {
             pairs: tasks.len(),
-            batches: 0,
-            padded_pairs: 0,
+            batches: tasks.len().div_ceil(self.p),
+            padded_pairs: tasks.len().div_ceil(self.p) * self.p - tasks.len(),
             c_blocks: c_bcol.len(),
         };
-        for chunk in tasks.chunks(self.p) {
-            a_batch.fill(0.0);
-            b_batch.fill(0.0);
-            for (s, task) in chunk.iter().enumerate() {
-                a_batch[s * tt..(s + 1) * tt].copy_from_slice(a.block(task.a_idx));
-                b_batch[s * tt..(s + 1) * tt].copy_from_slice(b.block(task.b_idx));
-            }
-            let dims = [self.p, self.t, self.t];
-            let out = self
-                .runtime
-                .execute_f64(&self.artifact, &[(&a_batch, &dims), (&b_batch, &dims)])
-                .map_err(|e| anyhow!("block engine batch failed: {e:?}"))?;
-            ensure!(out.len() == self.p * tt, "unexpected output size {}", out.len());
-            for (s, task) in chunk.iter().enumerate() {
-                let dst = &mut c_blocks[task.c_idx * tt..(task.c_idx + 1) * tt];
-                let src = &out[s * tt..(s + 1) * tt];
-                for (d, &v) in dst.iter_mut().zip(src) {
-                    *d += v;
+        match &mut self.backend {
+            Backend::Pjrt { runtime, artifact } => {
+                // numeric phase: batches of P pairs through the PJRT kernel
+                let mut a_batch = vec![0f64; self.p * tt];
+                let mut b_batch = vec![0f64; self.p * tt];
+                for chunk in tasks.chunks(self.p) {
+                    a_batch.fill(0.0);
+                    b_batch.fill(0.0);
+                    for (s, task) in chunk.iter().enumerate() {
+                        a_batch[s * tt..(s + 1) * tt].copy_from_slice(a.block(task.a_idx));
+                        b_batch[s * tt..(s + 1) * tt].copy_from_slice(b.block(task.b_idx));
+                    }
+                    let dims = [self.p, self.t, self.t];
+                    let out = runtime
+                        .execute_f64(artifact, &[(&a_batch, &dims), (&b_batch, &dims)])
+                        .map_err(|e| anyhow!("block engine batch failed: {e:?}"))?;
+                    ensure!(out.len() == self.p * tt, "unexpected output size {}", out.len());
+                    for (s, task) in chunk.iter().enumerate() {
+                        let dst = &mut c_blocks[task.c_idx * tt..(task.c_idx + 1) * tt];
+                        let src = &out[s * tt..(s + 1) * tt];
+                        for (d, &v) in dst.iter_mut().zip(src) {
+                            *d += v;
+                        }
+                    }
                 }
             }
-            self.stats.batches += 1;
-            self.stats.padded_pairs += self.p - chunk.len();
+            Backend::Native => {
+                // bit-exact numeric phase: every scalar product folds into
+                // its output element one at a time, tasks in list order
+                // (block-k ascending) and the T-deep loop innermost, so
+                // each C element accumulates its products in exactly the
+                // global-k-ascending order the hash numeric kernel uses —
+                // same f64 association, bitwise-identical sums. Padding
+                // zeros inside partial blocks contribute ±0.0 products,
+                // which never perturb a running sum's bits.
+                let t_sz = self.t;
+                for task in &tasks {
+                    let ab = a.block(task.a_idx);
+                    let bb = b.block(task.b_idx);
+                    let dst = &mut c_blocks[task.c_idx * tt..(task.c_idx + 1) * tt];
+                    for lr in 0..t_sz {
+                        for lc in 0..t_sz {
+                            let d = &mut dst[lr * t_sz + lc];
+                            for k in 0..t_sz {
+                                *d += ab[lr * t_sz + k] * bb[k * t_sz + lc];
+                            }
+                        }
+                    }
+                }
+            }
         }
 
         Ok(Bsr {
@@ -180,4 +278,70 @@ impl BlockEngine {
 }
 
 // NOTE: PJRT integration tests live in rust/tests/integration_runtime.rs —
-// they require `make artifacts` to have run.
+// they require `make artifacts` to have run. The native backend tests
+// below run everywhere.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::banded::Banded;
+    use crate::gen::uniform::Uniform;
+    use crate::gpusim::V100;
+    use crate::spgemm::pipeline::{multiply, OpSparseConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_engine_is_bitwise_identical_to_hash_pipeline() {
+        let mut rng = Rng::new(7);
+        for (tag, a) in [
+            (
+                "banded",
+                Banded { n: 96, per_row: 12, band: 10, contiguous_frac: 1.0 }.generate(&mut rng),
+            ),
+            ("uniform", Uniform { n: 128, per_row: 6, jitter: 3 }.generate(&mut rng)),
+        ] {
+            let gold = multiply(&a, &a, &OpSparseConfig::default()).unwrap();
+            let mut eng = BlockEngine::native(16, 8).unwrap();
+            assert!(eng.bit_exact());
+            let c = eng.spgemm_csr(&a, &a).unwrap();
+            assert_eq!(c, gold.c, "{tag}: native block result must match hash bitwise");
+            assert!(eng.stats.pairs > 0 && eng.stats.batches > 0);
+        }
+    }
+
+    #[test]
+    fn native_engine_handles_non_multiple_dims_and_empty_rows() {
+        let mut rng = Rng::new(11);
+        // 50 is not a multiple of t=16: ragged edge blocks are padded
+        let a = Uniform { n: 50, per_row: 3, jitter: 2 }.generate(&mut rng);
+        let gold = multiply(&a, &a, &OpSparseConfig::default()).unwrap();
+        let mut eng = BlockEngine::native(16, 16).unwrap();
+        let c = eng.spgemm_csr(&a, &a).unwrap();
+        assert_eq!(c, gold.c);
+    }
+
+    #[test]
+    fn simulated_time_is_deterministic_and_favors_dense_blocks() {
+        let mut rng = Rng::new(3);
+        let blocky =
+            Banded { n: 128, per_row: 16, band: 12, contiguous_frac: 1.0 }.generate(&mut rng);
+        let scattered = Uniform { n: 512, per_row: 4, jitter: 300 }.generate(&mut rng);
+        let mut eng = BlockEngine::native(16, 16).unwrap();
+        eng.spgemm_csr(&blocky, &blocky).unwrap();
+        let t_blocky = eng.simulated_ns(&V100);
+        let again = {
+            let mut e2 = BlockEngine::native(16, 16).unwrap();
+            e2.spgemm_csr(&blocky, &blocky).unwrap();
+            e2.simulated_ns(&V100)
+        };
+        assert_eq!(t_blocky.to_bits(), again.to_bits(), "same input, same modeled time");
+        eng.spgemm_csr(&scattered, &scattered).unwrap();
+        let t_scattered = eng.simulated_ns(&V100);
+        assert!(t_blocky.is_finite() && t_blocky > 0.0);
+        assert!(
+            t_scattered > t_blocky,
+            "scattered structure must cost more per the block model \
+             ({t_scattered:.0} vs {t_blocky:.0} ns)"
+        );
+    }
+}

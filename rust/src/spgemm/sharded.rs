@@ -94,6 +94,39 @@ impl ShardPlan {
         ShardPlan { bounds, costs }
     }
 
+    /// [`ShardPlan::balanced`] with every interior cut snapped to a
+    /// multiple of the block size `t` — the plan the block-sharded route
+    /// ([`crate::coordinator::Route::ShardedBlock`]) runs on. A cut
+    /// inside a `T`-row block would split that block across devices: the
+    /// per-shard BSR conversions would then pad *different* block
+    /// contents than the unsharded conversion, and bit-identity with the
+    /// unsharded block result would be lost. Each interior bound rounds
+    /// to the nearest multiple of `t` (monotonicity preserved, bounds
+    /// clamped to `[0, rows]`); the outer bounds stay `0` and `rows`, so
+    /// a ragged final block remains intact on the last shard. `t <= 1`
+    /// degenerates to the unaligned proxy plan.
+    pub fn balanced_aligned(nprod: &[usize], n_shards: usize, t: usize) -> ShardPlan {
+        let plan = ShardPlan::balanced(nprod, n_shards);
+        if t <= 1 {
+            return plan;
+        }
+        let n = nprod.len();
+        let mut bounds = plan.bounds;
+        let last = bounds.len() - 1;
+        for i in 1..last {
+            let b = bounds[i];
+            let down = b / t * t;
+            let up = (down + t).min(n);
+            let snapped = if b - down <= up - b { down } else { up };
+            bounds[i] = snapped.max(bounds[i - 1]).min(n);
+        }
+        let costs: Vec<u64> = bounds
+            .windows(2)
+            .map(|w| (w[0]..w[1]).map(|i| nprod[i] as u64 + 1).sum())
+            .collect();
+        ShardPlan { bounds, costs }
+    }
+
     pub fn n_shards(&self) -> usize {
         self.costs.len()
     }
@@ -810,6 +843,38 @@ mod tests {
             multiply_sharded_with(&a, &a, &cfg, &plan, None, OverlapConfig::default(), None)
                 .unwrap();
         assert_eq!(warm.c, cold.c, "any valid partition stitches bit-identically");
+    }
+
+    #[test]
+    fn aligned_plan_cuts_on_block_row_multiples() {
+        let nprod: Vec<usize> = (0..100).map(|i| (i % 7) + 1).collect();
+        let t = 16;
+        let plan = ShardPlan::balanced_aligned(&nprod, 3, t);
+        assert_eq!(plan.rows(), 100);
+        assert_eq!(plan.n_shards(), 3);
+        let b = plan.bounds();
+        assert_eq!(b[0], 0);
+        for &cut in &b[1..b.len() - 1] {
+            assert!(cut % t == 0 || cut == 100, "interior cut {cut} not t-aligned");
+        }
+        for w in b.windows(2) {
+            assert!(w[0] <= w[1], "bounds must stay monotone");
+        }
+        // alignment never loses rows; costs re-sum exactly
+        assert_eq!(
+            plan.costs().iter().sum::<u64>(),
+            nprod.iter().map(|&p| p as u64 + 1).sum::<u64>()
+        );
+        // t <= 1 degenerates to the unaligned proxy plan
+        let p1 = ShardPlan::balanced_aligned(&nprod, 3, 1);
+        assert_eq!(p1.bounds(), ShardPlan::balanced(&nprod, 3).bounds());
+        // more shards than blocks: empty shards are legal, partition holds
+        let tiny = ShardPlan::balanced_aligned(&[1usize; 8], 4, 16);
+        assert_eq!(tiny.rows(), 8);
+        assert_eq!(tiny.bounds()[0], 0);
+        for w in tiny.bounds().windows(2) {
+            assert!(w[0] <= w[1]);
+        }
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Multi-engine dispatch integration tests, table-driven over the
+//! checked-in corpus: every `rust/corpus/*.mtx` fixture must produce
+//! **bitwise identical** results on the hash pipeline, the native block
+//! engine, the sharded hash path, the block-sharded coordinator path,
+//! and a measured-dispatch (`EngineMode::Auto`) coordinator — whatever
+//! engine dispatch picks. Plus the dispatch hysteresis property: the
+//! engine [`choose_engine`] returns is never worse than the alternative
+//! by more than the [`DISPATCH_SWITCH_GAIN`] band.
+
+use opsparse::bench::corpus::{load_corpus, resolve_corpus_dir};
+use opsparse::coordinator::feedback::{Engine, EngineStats, PatternStats};
+use opsparse::coordinator::{
+    choose_engine, Coordinator, EngineMode, Job, Route, Router, RouterConfig,
+    DISPATCH_SWITCH_GAIN,
+};
+use opsparse::runtime::BlockEngine;
+use opsparse::spgemm::multiply_sharded;
+use opsparse::spgemm::pipeline::{multiply, OpSparseConfig};
+use opsparse::util::rng::Rng;
+
+#[test]
+fn every_fixture_is_bit_identical_across_engines_unsharded() {
+    let dir = resolve_corpus_dir(None);
+    let entries = load_corpus(&dir).expect("load corpus");
+    let cfg = OpSparseConfig::default();
+    for e in &entries {
+        let gold = multiply(&e.a, &e.a, &cfg).expect("hash pipeline").c;
+        let mut eng = BlockEngine::native(16, 16).expect("native engine");
+        let block = eng.spgemm_csr(&e.a, &e.a).expect("block engine");
+        assert_eq!(block, gold, "{}: block engine must match hash bitwise", e.name);
+    }
+}
+
+#[test]
+fn every_fixture_is_bit_identical_across_engines_sharded() {
+    let dir = resolve_corpus_dir(None);
+    let entries = load_corpus(&dir).expect("load corpus");
+    let cfg = OpSparseConfig::default();
+
+    // one coordinator serves all fixtures: the block-sharded path runs
+    // per-shard native engines on the hash pool, no factory needed
+    let coord = Coordinator::start(2, Router::default(), None);
+    for (i, e) in entries.iter().enumerate() {
+        let gold = multiply(&e.a, &e.a, &cfg).expect("hash pipeline").c;
+
+        // sharded hash stitches to the unsharded hash result
+        let sharded = multiply_sharded(&e.a, &e.a, &cfg, 3)
+            .unwrap_or_else(|err| panic!("{}: sharded hash: {err}", e.name));
+        assert_eq!(sharded.c, gold, "{}: sharded hash must stitch bitwise", e.name);
+
+        // block-sharded coordinator path stitches to the same bits
+        coord.submit(Job {
+            id: i as u64,
+            a: e.a.clone(),
+            b: e.a.clone(),
+            force_route: Some(Route::ShardedBlock { n_devices: 3 }),
+        });
+        let r = coord.recv().expect("coordinator result");
+        assert_eq!(r.route, Route::ShardedBlock { n_devices: 3 });
+        let c = r.c.unwrap_or_else(|err| panic!("{}: sharded block: {err}", e.name));
+        assert_eq!(c, gold, "{}: sharded block must stitch bitwise", e.name);
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.sharded_block_routed as usize, entries.len());
+    assert_eq!(snap.block_fallbacks, 0, "shards self-build native engines");
+    coord.shutdown();
+}
+
+#[test]
+fn dispatched_results_match_hash_reference_on_every_fixture() {
+    let dir = resolve_corpus_dir(None);
+    let entries = load_corpus(&dir).expect("load corpus");
+    let cfg = OpSparseConfig::default();
+
+    // a measured-dispatch coordinator with a real block engine: whatever
+    // engine Auto converges on per fixture, the bits must not move
+    let router = Router::new(RouterConfig {
+        engine_mode: EngineMode::Auto,
+        ..Default::default()
+    });
+    let coord =
+        Coordinator::start(2, router, Some(Box::new(|| BlockEngine::native(16, 16))));
+    for round in 0..2u64 {
+        // two rounds: round 0 routes on the cold estimate, round 1 on
+        // the engine-tagged measurements round 0 recorded
+        for (i, e) in entries.iter().enumerate() {
+            coord.submit(Job {
+                id: round * 1000 + i as u64,
+                a: e.a.clone(),
+                b: e.a.clone(),
+                force_route: None,
+            });
+        }
+        for _ in 0..entries.len() {
+            let r = coord.recv().expect("coordinator result");
+            let name = &entries[(r.id % 1000) as usize].name;
+            let e = &entries[(r.id % 1000) as usize];
+            let gold = multiply(&e.a, &e.a, &cfg).expect("hash pipeline").c;
+            let c = r.c.unwrap_or_else(|err| panic!("{name}: dispatched: {err}"));
+            assert_eq!(c, gold, "{name}: dispatched result must match hash bitwise");
+        }
+    }
+    // the dispatcher actually measured: the history is warm for every
+    // distinct pattern it saw
+    let h = coord.history().lock().unwrap();
+    assert!(!h.is_empty(), "auto dispatch must have recorded engine-tagged runs");
+    assert!(
+        h.iter_in_order().any(|(_, s)| s.hash.warm() || s.block.warm()),
+        "at least one pattern must hold a warm engine measurement"
+    );
+    drop(h);
+    coord.shutdown();
+}
+
+#[test]
+fn choose_engine_never_picks_outside_the_hysteresis_band() {
+    // property sweep: over randomized per-engine stats, the chosen
+    // engine's EWMA is never worse than the alternative's by more than
+    // the DISPATCH_SWITCH_GAIN band (and one-sided stats always pick
+    // the only measured engine)
+    let mut rng = Rng::new(0x11f57);
+    for case in 0..2000 {
+        let gen_stats = |rng: &mut Rng| EngineStats {
+            runs: rng.range(0, 10) as u64,
+            ewma_ns: if rng.f64() < 0.2 {
+                0.0
+            } else {
+                1_000.0 + rng.f64() * 1_000_000.0
+            },
+        };
+        let stats = PatternStats {
+            hash: gen_stats(&mut rng),
+            block: gen_stats(&mut rng),
+            ..Default::default()
+        };
+        let pick = choose_engine(&stats);
+        let (own, alt) = match pick {
+            Engine::Hash => (stats.hash.ewma_ns, stats.block.ewma_ns),
+            Engine::Block => (stats.block.ewma_ns, stats.hash.ewma_ns),
+        };
+        let usable = |ns: f64| ns > 0.0 && ns.is_finite();
+        match (usable(own), usable(alt)) {
+            (true, true) => assert!(
+                own <= alt / DISPATCH_SWITCH_GAIN,
+                "case {case}: picked {pick:?} at {own} ns vs {alt} ns — outside the band \
+                 (stats {stats:?})"
+            ),
+            (false, true) => panic!(
+                "case {case}: picked unmeasured {pick:?} over a measured alternative \
+                 (stats {stats:?})"
+            ),
+            // nothing measured (or only the pick measured): any pick is
+            // within contract
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn choose_engine_is_deterministic_and_sticky_at_the_band_edge() {
+    // exactly on the band edge the incumbent keeps the route: dispatch
+    // cannot flap between two engines trading sub-band wins
+    let base = PatternStats {
+        hash: EngineStats { runs: 1, ewma_ns: 1_000.0 * DISPATCH_SWITCH_GAIN },
+        block: EngineStats { runs: 5, ewma_ns: 1_000.0 },
+        ..Default::default()
+    };
+    assert_eq!(choose_engine(&base), Engine::Block, "edge case stays with the incumbent");
+    let just_inside = PatternStats {
+        hash: EngineStats { runs: 1, ewma_ns: 1_000.0 * DISPATCH_SWITCH_GAIN - 0.01 },
+        block: EngineStats { runs: 5, ewma_ns: 1_000.0 },
+        ..Default::default()
+    };
+    assert_eq!(choose_engine(&just_inside), Engine::Hash, "beyond the band the challenger wins");
+}
