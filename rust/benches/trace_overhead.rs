@@ -1,0 +1,59 @@
+//! `cargo bench --bench trace_overhead` — the tracing contracts: the
+//! traced front door's throughput gated against a 5% overhead allowance
+//! (one-sided Welch over adaptively many repetitions), plus the schema
+//! contract run (sharded + speculative + chaos-gentle + batched traffic
+//! with tracing on) whose span set must pass `check_well_formed` and
+//! whose Chrome trace-event export feeds the CI python validator.
+//!
+//! Env:
+//! * `OPSPARSE_BENCH_TRACE_JOBS=<n>` — jobs per repetition (default 16)
+//! * `OPSPARSE_BENCH_JSON_TRACE=<path>` — record the report as JSON; CI
+//!   writes `BENCH_trace.json` this way and blocks on the embedded
+//!   overhead-gate verdict, `well_formed == true`, and
+//!   `completed == jobs`.
+//! * `OPSPARSE_BENCH_TRACE_EVENTS=<path>` — write the contract run's
+//!   Chrome trace itself (CI: `BENCH_trace_events.json`), which the
+//!   python gate loads with a real JSON parser and structurally checks.
+//! * `OPSPARSE_STAT_{MIN_REPS,MAX_REPS,REL_HW,ALPHA}` — statistical
+//!   runner knobs (see `util::stats::AdaptiveConfig::from_env`).
+//!
+//! The bench itself enforces the hard contracts too, so a plain
+//! `cargo bench --bench trace_overhead` fails loudly without CI.
+
+use opsparse::bench::{trace_bench, write_trace_events, write_trace_json};
+
+fn main() {
+    let jobs = std::env::var("OPSPARSE_BENCH_TRACE_JOBS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(16);
+    let report = trace_bench::trace_overhead(jobs).expect("trace_overhead bench");
+    assert!(
+        report.well_formed,
+        "traced contract run produced a malformed span tree: {:?}",
+        report.well_formed_err
+    );
+    assert_eq!(
+        report.completed, report.jobs,
+        "a contract-run request did not resolve Done under gentle chaos"
+    );
+    assert!(report.spans > 0 && report.shard_spans > 0, "contract run recorded no shard spans");
+    assert!(
+        report.chrome_json.contains("\"traceEvents\""),
+        "chrome export missing the traceEvents array"
+    );
+    for g in &report.gates {
+        assert!(
+            g.pass,
+            "{}: traced throughput significantly below the overhead allowance \
+             (p={:.4} < alpha={}, {:.1} vs {:.1} over {} reps)",
+            g.name, g.p, g.alpha, g.candidate_mean, g.reference_mean, g.reps_candidate
+        );
+    }
+    if let Ok(path) = std::env::var("OPSPARSE_BENCH_JSON_TRACE") {
+        write_trace_json(&path, &report).expect("write trace json");
+    }
+    if let Ok(path) = std::env::var("OPSPARSE_BENCH_TRACE_EVENTS") {
+        write_trace_events(&path, &report).expect("write trace events");
+    }
+}

@@ -8,6 +8,7 @@ pub mod engines;
 pub mod figures;
 pub mod serve_bench;
 pub mod tables;
+pub mod trace_bench;
 
 use crate::gpusim::{simulate, Timeline, V100};
 use crate::sparse::Csr;
@@ -378,6 +379,55 @@ pub fn write_engines_json(path: &str, report: &engines::EnginesReport) -> Result
     }
     out.push_str(&format!("  ],\n{}\n}}\n", gates_json_fragment(&report.gates)));
     std::fs::write(path, out)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Serialize the tracing bench as JSON: `BENCH_trace.json`, uploaded by
+/// CI next to the other `BENCH_*.json` baselines and consumed by the
+/// blocking trace checks there (the embedded Welch overhead gate, the
+/// well-formedness verdict, every contract request resolved). The
+/// contract run's Chrome trace itself is written separately (see
+/// `write_trace_events`) for the python schema validator — this report
+/// only carries the figures.
+pub fn write_trace_json(path: &str, report: &trace_bench::TraceBenchReport) -> Result<()> {
+    fn esc(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+    let err = match &report.well_formed_err {
+        Some(e) => format!("\"{}\"", esc(e)),
+        None => "null".to_string(),
+    };
+    let out = format!(
+        "{{\n  \"bench\": \"trace\",\n  \"jobs\": {},\n  \
+         \"off_throughput_jobs_per_s\": {:.4},\n  \
+         \"on_throughput_jobs_per_s\": {:.4},\n  \"spans\": {},\n  \"instants\": {},\n  \
+         \"chaos_instants\": {},\n  \"shard_spans\": {},\n  \"slow_exemplars\": {},\n  \
+         \"dropped_spans\": {},\n  \"well_formed\": {},\n  \"well_formed_err\": {},\n  \
+         \"completed\": {},\n{}\n}}\n",
+        report.jobs,
+        report.off_throughput_jobs_per_s,
+        report.on_throughput_jobs_per_s,
+        report.spans,
+        report.instants,
+        report.chaos_instants,
+        report.shard_spans,
+        report.slow_exemplars,
+        report.dropped_spans,
+        report.well_formed,
+        err,
+        report.completed,
+        gates_json_fragment(&report.gates)
+    );
+    std::fs::write(path, out)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Write the trace bench's contract-run Chrome trace-event JSON, the
+/// file the CI python validator loads and structurally checks.
+pub fn write_trace_events(path: &str, report: &trace_bench::TraceBenchReport) -> Result<()> {
+    std::fs::write(path, &report.chrome_json)?;
     println!("wrote {path}");
     Ok(())
 }

@@ -1,0 +1,220 @@
+//! `bench trace` — the two tracing contracts CI blocks on:
+//!
+//! 1. **Overhead** — serving throughput with `--trace on` must not be
+//!    *significantly* worse than 95% of the untraced throughput (a 5%
+//!    overhead allowance). The comparison is a one-sided Welch test
+//!    over adaptively many repetitions, never a point comparison of two
+//!    single runs: real wall clock is noisy and tracing overhead on
+//!    this workload is far below the noise floor.
+//! 2. **Schema** — a traced run that exercises every span source at
+//!    once (sharded fan-out, straggler speculation, gentle chaos, the
+//!    batcher) must produce a span set that passes
+//!    [`check_well_formed`] and exports as Chrome trace-event JSON.
+//!    The JSON itself is written for the CI python validator, which
+//!    re-checks event structure and parent/child ordering with a real
+//!    JSON parser.
+//!
+//! The traced contract run is chaos-seeded, so a CI schema failure
+//! replays locally with the same injection schedule.
+
+use crate::coordinator::barrier::SpeculateConfig;
+use crate::coordinator::chaos::ChaosConfig;
+use crate::coordinator::serve::{Serve, ServeConfig, ServeResult};
+use crate::gen::uniform::Uniform;
+use crate::obs::{check_well_formed, chrome_trace_json};
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+use crate::util::stats::{not_worse_gate, AdaptiveConfig, GateResult, Samples};
+use anyhow::{ensure, Result};
+use std::time::Instant;
+
+/// Chaos seed for the traced contract run (deterministic schedule).
+pub const TRACE_CHAOS_SEED: u64 = 0x0B5E;
+
+/// Tracing overhead allowed by the gate: `on` throughput is compared
+/// against `off × (1 − this)`.
+pub const OVERHEAD_ALLOWANCE: f64 = 0.05;
+
+/// The full `bench trace` report (`BENCH_trace.json` plus the emitted
+/// Chrome trace for the python schema validator).
+#[derive(Clone, Debug)]
+pub struct TraceBenchReport {
+    pub jobs: usize,
+    /// Repetition-0 display figures; the gate verdict pools all reps.
+    pub off_throughput_jobs_per_s: f64,
+    pub on_throughput_jobs_per_s: f64,
+    /// Contract-run figures: spans retained, instant events, chaos
+    /// instants among them, per-shard sub-job spans, slow exemplars
+    /// kept, ring evictions.
+    pub spans: usize,
+    pub instants: usize,
+    pub chaos_instants: usize,
+    pub shard_spans: usize,
+    pub slow_exemplars: usize,
+    pub dropped_spans: u64,
+    /// [`check_well_formed`] verdict over the contract run's spans.
+    pub well_formed: bool,
+    pub well_formed_err: Option<String>,
+    /// Requests of the contract run that resolved `Done`.
+    pub completed: usize,
+    /// The contract run's Chrome trace-event JSON (written next to the
+    /// report for the CI validator).
+    pub chrome_json: String,
+    pub gates: Vec<GateResult>,
+}
+
+/// One untraced-vs-traced throughput measurement: the same distinct-job
+/// stream through an otherwise default front door.
+fn throughput_once(trace_on: bool, mats: &[Csr]) -> Result<f64> {
+    let mut cfg = ServeConfig::default();
+    cfg.workers = 2;
+    cfg.ns_per_prod = Some(1.0);
+    cfg.trace.enabled = trace_on;
+    let serve = Serve::start(cfg)?;
+    let t0 = Instant::now();
+    let tickets: Vec<_> =
+        mats.iter().map(|m| serve.submit("bench", m.clone(), m.clone())).collect();
+    for t in tickets {
+        ensure!(
+            matches!(t.wait(), ServeResult::Done { .. }),
+            "trace bench throughput job failed"
+        );
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    serve.shutdown();
+    Ok(mats.len() as f64 / (wall_ns.max(1) as f64 / 1e9))
+}
+
+/// The schema contract run: sharded + speculative + chaos-gentle +
+/// batched traffic with tracing on, returning the span-set figures and
+/// the exported Chrome JSON.
+fn contract_run(jobs: usize, report: &mut TraceBenchReport) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    cfg.workers = 3;
+    cfg.ns_per_prod = Some(1.0);
+    // coalescing off so every submit executes: the contract wants many
+    // real shard fan-outs, not one leader and N attaches
+    cfg.coalesce = false;
+    cfg.batch.enabled = true;
+    cfg.batch.max_jobs = 4;
+    cfg.speculate = SpeculateConfig::on();
+    cfg.chaos = ChaosConfig::gentle().with_seed(TRACE_CHAOS_SEED);
+    // a 4 KiB device budget forces the big pattern onto the sharded
+    // route (same idiom as the serve bench's persistence phase)
+    cfg.device_memory_bytes = 4096;
+    cfg.max_devices = 4;
+    cfg.interconnect = None;
+    cfg.trace.enabled = true;
+    cfg.trace.slow_k = 4;
+    let serve = Serve::start(cfg)?;
+    let tracer = serve.tracer().cloned().expect("tracing on must construct a tracer");
+    let big = Uniform { n: 300, per_row: 6, jitter: 2 }.generate(&mut Rng::new(41));
+    let small = Uniform { n: 120, per_row: 5, jitter: 2 }.generate(&mut Rng::new(42));
+    let tickets: Vec<_> = (0..jobs)
+        .map(|i| {
+            let m = if i % 2 == 0 { &big } else { &small };
+            serve.submit(if i % 2 == 0 { "shard" } else { "hash" }, m.clone(), m.clone())
+        })
+        .collect();
+    let mut completed = 0usize;
+    for t in tickets {
+        if matches!(t.wait(), ServeResult::Done { .. }) {
+            completed += 1;
+        }
+    }
+    serve.shutdown();
+    let spans = tracer.snapshot_spans();
+    report.completed = completed;
+    report.spans = spans.len();
+    report.instants = spans.iter().filter(|s| s.instant).count();
+    report.chaos_instants =
+        spans.iter().filter(|s| s.instant && s.name.starts_with("chaos_")).count();
+    report.shard_spans = spans.iter().filter(|s| s.name == "shard").count();
+    report.slow_exemplars = tracer.slow_exemplars().len();
+    report.dropped_spans = tracer.dropped();
+    match check_well_formed(&spans) {
+        Ok(()) => report.well_formed = true,
+        Err(e) => {
+            report.well_formed = false;
+            report.well_formed_err = Some(e);
+        }
+    }
+    report.chrome_json = chrome_trace_json(&spans);
+    Ok(())
+}
+
+/// The `bench trace` entry: overhead gate + schema contract, printed as
+/// a table and returned for JSON recording. The hard contracts
+/// (well-formedness, every request resolved) are asserted by the bench
+/// binary and the CI check, not here — this function only measures.
+pub fn trace_overhead(jobs: usize) -> Result<TraceBenchReport> {
+    let jobs = jobs.max(4);
+    let mut rng = Rng::new(2028);
+    // distinct value fingerprints per job, so coalescing never collapses
+    // the stream and both modes execute every multiply
+    let mats: Vec<Csr> =
+        (0..jobs).map(|_| Uniform { n: 150, per_row: 6, jitter: 3 }.generate(&mut rng)).collect();
+    println!("trace bench: {jobs} distinct jobs, overhead allowance {OVERHEAD_ALLOWANCE}");
+    let mut report = TraceBenchReport {
+        jobs,
+        off_throughput_jobs_per_s: 0.0,
+        on_throughput_jobs_per_s: 0.0,
+        spans: 0,
+        instants: 0,
+        chaos_instants: 0,
+        shard_spans: 0,
+        slow_exemplars: 0,
+        dropped_spans: 0,
+        well_formed: false,
+        well_formed_err: None,
+        completed: 0,
+        chrome_json: String::new(),
+        gates: Vec::new(),
+    };
+    let stat = AdaptiveConfig::from_env();
+    let mut off = Samples::from_values(vec![throughput_once(false, &mats)?]);
+    let mut on = Samples::from_values(vec![throughput_once(true, &mats)?]);
+    report.off_throughput_jobs_per_s = off.values[0];
+    report.on_throughput_jobs_per_s = on.values[0];
+    while on.n() < stat.max_reps.max(stat.min_reps).max(2)
+        && !(stat.converged(&on) && stat.converged(&off))
+    {
+        off.push(throughput_once(false, &mats)?);
+        on.push(throughput_once(true, &mats)?);
+    }
+    // the reference is the untraced throughput scaled down by the
+    // allowance: "on is not significantly worse than 95% of off"
+    let off_scaled = Samples::from_values(
+        off.values.iter().map(|v| v * (1.0 - OVERHEAD_ALLOWANCE)).collect(),
+    );
+    let gate = not_worse_gate("trace_overhead_within_5pct", &on, &off_scaled, true, stat.alpha);
+    println!(
+        "  overhead gate: {} (p={:.4}, alpha={}, traced {:.1} vs 95%-of-untraced {:.1} jobs/s \
+         over {} reps)",
+        if gate.pass { "pass" } else { "FAIL" },
+        gate.p,
+        gate.alpha,
+        gate.candidate_mean,
+        gate.reference_mean,
+        gate.reps_candidate
+    );
+    report.gates.push(gate);
+    contract_run(jobs, &mut report)?;
+    println!(
+        "  contract run: {}/{} completed, {} spans ({} instants, {} chaos, {} shard), \
+         {} exemplars, {} dropped, well_formed {}",
+        report.completed,
+        jobs,
+        report.spans,
+        report.instants,
+        report.chaos_instants,
+        report.shard_spans,
+        report.slow_exemplars,
+        report.dropped_spans,
+        report.well_formed
+    );
+    if let Some(e) = &report.well_formed_err {
+        eprintln!("  well-formedness violation: {e}");
+    }
+    Ok(report)
+}

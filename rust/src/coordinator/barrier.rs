@@ -27,6 +27,7 @@ use super::feedback::{Engine, ExecHistory, RunObservation};
 use super::metrics::Metrics;
 use super::router::Route;
 use super::service::{finish, JobResult};
+use crate::obs::{Span, Tracer, LANE_FRONT};
 use crate::sparse::Csr;
 use crate::spgemm::pipeline::SpgemmOutput;
 use crate::spgemm::sharded::{stitch_row_blocks, MeasuredShard};
@@ -150,6 +151,9 @@ pub struct ShardBarrier {
     /// operand handles + ranges so the monitor can relaunch a lagging
     /// shard. `None` with speculation off.
     spec: Option<SpeculationState>,
+    /// Request tracer ([`ShardBarrier::set_obs`]) — the stitch records
+    /// its own span under the parent request. `None` with tracing off.
+    tracer: Option<Arc<Tracer>>,
     state: Mutex<State>,
 }
 
@@ -177,6 +181,7 @@ impl ShardBarrier {
             metrics,
             feedback,
             spec: None,
+            tracer: None,
             state: Mutex::new(State {
                 slots: (0..n).map(|_| None).collect(),
                 ns: vec![None; n],
@@ -195,6 +200,20 @@ impl ShardBarrier {
     /// never reports stragglers and behaves exactly as before.
     pub fn set_speculation(&mut self, spec: SpeculationState) {
         self.spec = Some(spec);
+    }
+
+    /// Attach the request tracer (called by `submit` before the barrier
+    /// is shared, when tracing is on). Without it the barrier performs
+    /// zero tracing work.
+    pub fn set_obs(&mut self, tracer: Arc<Tracer>) {
+        self.tracer = Some(tracer);
+    }
+
+    /// The parent job's id — also its trace id, so shard workers can
+    /// attribute their attempt spans without widening [`super::service`]'s
+    /// message types.
+    pub fn job_id(&self) -> u64 {
+        self.job_id
     }
 
     /// Record shard `shard`'s result (plus its measured execution ns,
@@ -243,9 +262,31 @@ impl ShardBarrier {
         };
         // stitch outside the lock: it is O(nnz(C)) of copying
         if let Some((slots, ns)) = ready {
+            let n_shards = slots.len();
+            let span_t0 = self.tracer.as_ref().map(|t| t.now_ns());
             let (c, nprod) = Self::reassemble(self.rows, self.cols, slots);
             if c.is_ok() {
                 self.observe(&ns, nprod);
+            }
+            // stitch span recorded before `finish` sends the result —
+            // the request root (closed by the fan-out that receives it)
+            // must still be open so the span nests inside it
+            if let (Some(tr), Some(s0)) = (self.tracer.as_ref(), span_t0) {
+                let s1 = tr.now_ns();
+                let parent = tr.parent_for(self.job_id);
+                tr.record(Span {
+                    trace: self.job_id,
+                    id: tr.next_span_id(),
+                    parent,
+                    name: "stitch".to_string(),
+                    lane: LANE_FRONT,
+                    t0_ns: s0,
+                    t1_ns: s1,
+                    args: vec![("shards".to_string(), n_shards.to_string())],
+                    error: c.is_err(),
+                    instant: false,
+                });
+                self.metrics.phases.stitch.observe(s1.saturating_sub(s0));
             }
             finish(&self.metrics, &self.tx, self.job_id, self.route, c, nprod, self.t0);
         }

@@ -1,10 +1,133 @@
 //! Service metrics: counters plus latency percentiles computed from a
 //! bounded reservoir of observed job latencies, extended with the
 //! allocation-reuse counters the pool/cache layer reports (device mallocs
-//! avoided, symbolic phases skipped).
+//! avoided, symbolic phases skipped), per-phase latency histograms, and
+//! Prometheus text-format exposition
+//! ([`Metrics::to_prometheus`]).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Histogram bucket upper bounds in ns (1–2–5 series, 1µs .. 5s). The
+/// implicit `+Inf` bucket comes after these.
+pub const LATENCY_BUCKETS_NS: [u64; 21] = [
+    1_000,
+    2_000,
+    5_000,
+    10_000,
+    20_000,
+    50_000,
+    100_000,
+    200_000,
+    500_000,
+    1_000_000,
+    2_000_000,
+    5_000_000,
+    10_000_000,
+    20_000_000,
+    50_000_000,
+    100_000_000,
+    200_000_000,
+    500_000_000,
+    1_000_000_000,
+    2_000_000_000,
+    5_000_000_000,
+];
+
+/// A lock-free fixed-bucket latency histogram (cumulative-on-export,
+/// per-bucket atomics internally). Observation is a couple of relaxed
+/// atomic adds — cheap enough for every job and serve fan-out.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS_NS.len() + 1],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, ns: u64) {
+        let idx = LATENCY_BUCKETS_NS.partition_point(|&b| b < ns);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Append this histogram as one labeled Prometheus series
+    /// (`_bucket{phase=..,le=..}` cumulative counts, `_sum`, `_count`).
+    fn render_prometheus(&self, out: &mut String, family: &str, phase: &str) {
+        let mut cum = 0u64;
+        for (i, bound) in LATENCY_BUCKETS_NS.iter().enumerate() {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            out.push_str(&format!(
+                "{family}_bucket{{phase=\"{phase}\",le=\"{bound}\"}} {cum}\n"
+            ));
+        }
+        cum += self.buckets[LATENCY_BUCKETS_NS.len()].load(Ordering::Relaxed);
+        out.push_str(&format!("{family}_bucket{{phase=\"{phase}\",le=\"+Inf\"}} {cum}\n"));
+        out.push_str(&format!("{family}_sum{{phase=\"{phase}\"}} {}\n", self.sum_ns()));
+        out.push_str(&format!("{family}_count{{phase=\"{phase}\"}} {}\n", self.count()));
+    }
+}
+
+/// Per-phase latency histograms, one per span kind of the request
+/// lifecycle. The coarse phases (`exec`, `serve_total`) are fed by the
+/// existing latency observation points and fill regardless of tracing;
+/// the fine phases are fed by the `obs` span hooks and stay at zero
+/// with `--trace off` (the hot path then performs no extra clock
+/// reads).
+#[derive(Debug, Default)]
+pub struct PhaseHistograms {
+    /// Front-door admission (lock + coalesce/queue bookkeeping).
+    pub admit: Histogram,
+    /// Pending-queue residency: admission → handed to the coordinator.
+    pub queue_wait: Histogram,
+    /// Time a hash-routed job sat in an open batch before flushing.
+    pub batch_residency: Histogram,
+    /// The router's route/engine decision.
+    pub route_decision: Histogram,
+    /// Whole-job execution on a worker (submit → result, any route).
+    pub exec: Histogram,
+    /// One shard sub-job attempt on its worker.
+    pub shard_exec: Histogram,
+    /// Barrier reassembly of a sharded result.
+    pub stitch: Histogram,
+    /// Admission → fan-out as one waiter saw it.
+    pub serve_total: Histogram,
+}
+
+impl PhaseHistograms {
+    /// Name → histogram, in exposition order.
+    pub fn iter(&self) -> [(&'static str, &Histogram); 8] {
+        [
+            ("admit", &self.admit),
+            ("queue_wait", &self.queue_wait),
+            ("batch_residency", &self.batch_residency),
+            ("route_decision", &self.route_decision),
+            ("exec", &self.exec),
+            ("shard_exec", &self.shard_exec),
+            ("stitch", &self.stitch),
+            ("serve_total", &self.serve_total),
+        ]
+    }
+}
 
 /// Thread-safe metrics registry for the coordinator.
 #[derive(Debug, Default)]
@@ -103,6 +226,9 @@ pub struct Metrics {
     pub chaos_delays: AtomicU64,
     /// Chaos-injected device-pool teardowns (simulated memory pressure).
     pub chaos_pool_shrinks: AtomicU64,
+    /// Per-phase latency histograms (Prometheus-exposed; not part of
+    /// [`MetricsSnapshot`], so snapshots stay `Copy` and bit-stable).
+    pub phases: PhaseHistograms,
 }
 
 impl Metrics {
@@ -111,6 +237,7 @@ impl Metrics {
     }
 
     pub fn observe_latency(&self, ns: u64) {
+        self.phases.exec.observe(ns);
         let mut l = self.latencies.lock().unwrap();
         if l.len() < 65_536 {
             l.push(ns);
@@ -119,6 +246,7 @@ impl Metrics {
 
     /// Record one front-door (admission → fan-out) latency sample.
     pub fn observe_serve_latency(&self, ns: u64) {
+        self.phases.serve_total.observe(ns);
         let mut l = self.serve_latencies.lock().unwrap();
         if l.len() < 65_536 {
             l.push(ns);
@@ -216,6 +344,81 @@ impl Metrics {
             serve_p50_ns: self.serve_latency_percentile(0.50),
             serve_p99_ns: self.serve_latency_percentile(0.99),
         }
+    }
+
+    /// The whole registry in Prometheus text exposition format: every
+    /// counter and gauge of the snapshot (prefixed `opsparse_`), the
+    /// latency percentiles when samples exist, and the per-phase
+    /// latency histograms (`opsparse_phase_latency_ns` with a `phase`
+    /// label). The metrics/snapshot/Display drift test also pins every
+    /// `Metrics` counter into this exposition.
+    pub fn to_prometheus(&self) -> String {
+        let s = self.snapshot();
+        let counters: [(&str, u64); 33] = [
+            ("jobs_submitted", s.jobs_submitted),
+            ("jobs_completed", s.jobs_completed),
+            ("jobs_failed", s.jobs_failed),
+            ("hash_routed", s.hash_routed),
+            ("block_routed", s.block_routed),
+            ("sharded_routed", s.sharded_routed),
+            ("sharded_block_routed", s.sharded_block_routed),
+            ("block_fallbacks", s.block_fallbacks),
+            ("shard_subjobs", s.shard_subjobs),
+            ("nprod_total", s.nprod_total),
+            ("sym_cache_hits", s.sym_cache_hits),
+            ("sym_cache_misses", s.sym_cache_misses),
+            ("shard_sym_cache_hits", s.shard_sym_cache_hits),
+            ("shard_sym_cache_misses", s.shard_sym_cache_misses),
+            ("replans", s.replans),
+            ("replan_cold_misses", s.replan_cold_misses),
+            ("refit_updates", s.refit_updates),
+            ("history_evictions", s.history_evictions),
+            ("pool_device_mallocs", s.pool_device_mallocs),
+            ("pool_device_bytes", s.pool_device_bytes),
+            ("pool_hits", s.pool_hits),
+            ("pool_reused_bytes", s.pool_reused_bytes),
+            ("coalesce_hits", s.coalesce_hits),
+            ("rejected_jobs", s.rejected_jobs),
+            ("batches", s.batches),
+            ("batched_jobs", s.batched_jobs),
+            ("speculative_launches", s.speculative_launches),
+            ("speculative_wins", s.speculative_wins),
+            ("requeued_shards", s.requeued_shards),
+            ("requeued_jobs", s.requeued_jobs),
+            ("worker_deaths", s.worker_deaths),
+            ("chaos_delays", s.chaos_delays),
+            ("chaos_pool_shrinks", s.chaos_pool_shrinks),
+        ];
+        let gauges: [(&str, u64); 4] = [
+            ("queue_depth", s.queue_depth),
+            ("queue_depth_max", s.queue_depth_max),
+            ("history_patterns", s.history_patterns),
+            ("shard_workers", s.shard_workers),
+        ];
+        let mut out = String::new();
+        for (name, v) in counters {
+            out.push_str(&format!(
+                "# TYPE opsparse_{name}_total counter\nopsparse_{name}_total {v}\n"
+            ));
+        }
+        for (name, v) in gauges {
+            out.push_str(&format!("# TYPE opsparse_{name} gauge\nopsparse_{name} {v}\n"));
+        }
+        for (name, q) in [
+            ("job_latency_p50_ns", s.p50_ns),
+            ("job_latency_p99_ns", s.p99_ns),
+            ("serve_latency_p50_ns", s.serve_p50_ns),
+            ("serve_latency_p99_ns", s.serve_p99_ns),
+        ] {
+            if let Some(v) = q {
+                out.push_str(&format!("# TYPE opsparse_{name} gauge\nopsparse_{name} {v}\n"));
+            }
+        }
+        out.push_str("# TYPE opsparse_phase_latency_ns histogram\n");
+        for (phase, h) in self.phases.iter() {
+            h.render_prometheus(&mut out, "opsparse_phase_latency_ns", phase);
+        }
+        out
     }
 }
 
@@ -465,5 +668,134 @@ mod tests {
         m.sym_cache_hits.fetch_add(3, Ordering::Relaxed);
         m.sym_cache_misses.fetch_add(1, Ordering::Relaxed);
         assert!((m.snapshot().sym_cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets_sum_and_count() {
+        let h = Histogram::default();
+        h.observe(500); // below the first bound
+        h.observe(1_000); // exactly on a bound lands in that bucket
+        h.observe(3_000_000);
+        h.observe(u64::MAX / 2); // beyond every bound: +Inf bucket
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum_ns(), 500 + 1_000 + 3_000_000 + u64::MAX / 2);
+        let mut out = String::new();
+        h.render_prometheus(&mut out, "x_ns", "t");
+        assert!(out.contains("x_ns_bucket{phase=\"t\",le=\"1000\"} 2\n"), "{out}");
+        assert!(out.contains("x_ns_bucket{phase=\"t\",le=\"+Inf\"} 4\n"));
+        assert!(out.contains("x_ns_count{phase=\"t\"} 4\n"));
+    }
+
+    /// Extract the text between `start` and the next line that is just
+    /// `}` — enough to isolate a struct body or impl block in this file.
+    fn section<'a>(src: &'a str, start: &str) -> &'a str {
+        let s = src.find(start).unwrap_or_else(|| panic!("{start:?} not found in metrics.rs"));
+        let rest = &src[s + start.len()..];
+        let e = rest.find("\n}\n").unwrap_or(rest.len());
+        &rest[..e]
+    }
+
+    /// The metrics/snapshot drift guard: every counter registered on
+    /// `Metrics` must appear in `MetricsSnapshot`, be rendered by its
+    /// `Display` impl, and be exposed by `to_prometheus` — a new
+    /// counter silently missing from any of the three fails here.
+    #[test]
+    fn every_metrics_counter_reaches_snapshot_display_and_prometheus() {
+        let src = include_str!("metrics.rs");
+        let metrics_body = section(src, "pub struct Metrics {");
+        let snapshot_body = section(src, "pub struct MetricsSnapshot {");
+        let display_body = section(src, "impl std::fmt::Display for MetricsSnapshot {");
+        let prom = Metrics::new().to_prometheus();
+        let counters: Vec<&str> = metrics_body
+            .lines()
+            .filter_map(|l| {
+                let l = l.trim();
+                l.strip_prefix("pub ")
+                    .and_then(|l| l.strip_suffix(": AtomicU64,"))
+                    .filter(|name| name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'))
+            })
+            .collect();
+        assert!(counters.len() >= 30, "counter extraction broke: {counters:?}");
+        for name in counters {
+            assert!(
+                snapshot_body.contains(&format!("pub {name}: u64")),
+                "counter {name} is registered in Metrics but missing from MetricsSnapshot"
+            );
+            assert!(
+                display_body.contains(&format!("self.{name}")),
+                "counter {name} is in the snapshot but not rendered by its Display impl"
+            );
+            assert!(
+                prom.contains(&format!("opsparse_{name}")),
+                "counter {name} is missing from the Prometheus exposition"
+            );
+        }
+    }
+
+    /// `to_prometheus` output is valid Prometheus text format: every
+    /// line is a `# TYPE`/`# HELP` comment or `name[{labels}] value`,
+    /// every sample's family has a TYPE line, and each histogram's
+    /// `+Inf` bucket equals its `_count`.
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let m = Metrics::new();
+        m.jobs_submitted.fetch_add(2, Ordering::Relaxed);
+        m.observe_latency(1_500);
+        m.observe_serve_latency(2_500_000);
+        m.phases.queue_wait.observe(42);
+        let text = m.to_prometheus();
+        let mut typed: std::collections::HashSet<&str> = std::collections::HashSet::new();
+        for line in text.lines().filter(|l| !l.is_empty()) {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let fam = it.next().expect("TYPE line names a family");
+                let kind = it.next().expect("TYPE line has a kind");
+                assert!(["counter", "gauge", "histogram"].contains(&kind), "{line}");
+                typed.insert(fam);
+                continue;
+            }
+            assert!(!line.starts_with('#'), "unexpected comment shape: {line}");
+            let (name_part, value) = line.rsplit_once(' ').expect("sample has a value");
+            let name = name_part.split('{').next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "bad metric name in {line}"
+            );
+            assert!(value.parse::<f64>().is_ok(), "non-numeric value in {line}");
+            let family_known = typed.contains(name)
+                || ["_bucket", "_sum", "_count"].iter().any(|suf| {
+                    name.strip_suffix(suf).is_some_and(|fam| typed.contains(fam))
+                });
+            assert!(family_known, "sample {name} has no TYPE line");
+        }
+        assert!(text.contains("opsparse_jobs_submitted_total 2"));
+        assert!(text.contains("# TYPE opsparse_phase_latency_ns histogram"));
+        for phase in ["admit", "queue_wait", "batch_residency", "route_decision", "exec",
+            "shard_exec", "stitch", "serve_total"]
+        {
+            assert!(
+                text.contains(&format!("phase=\"{phase}\"")),
+                "per-phase histogram {phase} missing from exposition"
+            );
+            let count_line = text
+                .lines()
+                .find(|l| l.starts_with(&format!(
+                    "opsparse_phase_latency_ns_count{{phase=\"{phase}\"}}"
+                )))
+                .unwrap();
+            let count: u64 = count_line.rsplit_once(' ').unwrap().1.parse().unwrap();
+            let inf_line = text
+                .lines()
+                .find(|l| l.starts_with(&format!(
+                    "opsparse_phase_latency_ns_bucket{{phase=\"{phase}\",le=\"+Inf\"}}"
+                )))
+                .unwrap();
+            let inf: u64 = inf_line.rsplit_once(' ').unwrap().1.parse().unwrap();
+            assert_eq!(inf, count, "+Inf bucket must equal _count for {phase}");
+        }
+        // the coarse phases fill from the existing observation points
+        assert!(text.contains("opsparse_phase_latency_ns_count{phase=\"exec\"} 1"));
+        assert!(text.contains("opsparse_phase_latency_ns_count{phase=\"serve_total\"} 1"));
+        assert!(text.contains("opsparse_phase_latency_ns_count{phase=\"queue_wait\"} 1"));
     }
 }

@@ -40,6 +40,14 @@
 //!   env reads with documented CLI > env > default layering.
 //! * [`batch`] — the front door's size/age-watermarked batcher: many
 //!   small hash-routed requests become one worker visit.
+//!
+//! Every layer above carries optional request-scoped tracing hooks
+//! ([`crate::obs`]): with `--trace on` each serve request grows a span
+//! tree (admit → queue-wait → batch-residency → route-decision →
+//! exec/shards → stitch) exportable as Chrome trace JSON, and
+//! [`Metrics::to_prometheus`] exposes every counter plus per-phase
+//! latency histograms in Prometheus text format. With tracing off (the
+//! default) none of the hooks allocate or read a clock.
 
 pub mod barrier;
 pub mod batch;

@@ -57,6 +57,7 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::{EngineMode, Route, Router, RouterConfig};
 use super::service::{Coordinator, EngineFactory, Job, JobResult};
 use crate::gpusim::{Interconnect, OverlapConfig};
+use crate::obs::{chrome_trace_json, Span, TraceConfig, Tracer, LANE_FRONT};
 use crate::runtime::BlockEngine;
 use crate::sparse::Csr;
 use anyhow::{bail, Result};
@@ -155,6 +156,14 @@ pub struct ServeConfig {
     /// persistence, and loads a native block engine so block routes
     /// execute); `hash`/`block` force one engine fleet-wide.
     pub engine: EngineMode,
+    /// Request-scoped tracing (`OPSPARSE_TRACE`/`--trace on|off`,
+    /// `OPSPARSE_TRACE_DIR`/`--trace-dir <dir>`,
+    /// `OPSPARSE_TRACE_SLOW`/`--trace-slow <K>`). Off by default: with
+    /// tracing off no span is allocated and no clock is read, so the
+    /// hot path is bit-identical to the untraced front door. Giving a
+    /// trace dir or a slow-exemplar count implies `--trace on`; an
+    /// explicit `--trace off` wins over both.
+    pub trace: TraceConfig,
 }
 
 impl Default for ServeConfig {
@@ -176,6 +185,7 @@ impl Default for ServeConfig {
             speculate: SpeculateConfig::default(),
             chaos: ChaosConfig::off(),
             engine: EngineMode::default(),
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -255,6 +265,19 @@ impl ServeConfig {
         }
         if let Some(mode) = get("OPSPARSE_ENGINE").and_then(|v| EngineMode::parse(&v)) {
             cfg.engine = mode;
+        }
+        // dir and slow-K imply tracing on; the explicit on/off switch is
+        // read last so `OPSPARSE_TRACE=off` wins over both
+        if let Some(dir) = get("OPSPARSE_TRACE_DIR").filter(|d| !d.is_empty()) {
+            cfg.trace.dir = Some(dir);
+            cfg.trace.enabled = true;
+        }
+        if let Some(k) = num("OPSPARSE_TRACE_SLOW").filter(|&k| k > 0) {
+            cfg.trace.slow_k = k;
+            cfg.trace.enabled = true;
+        }
+        if let Some(on) = on_off("OPSPARSE_TRACE") {
+            cfg.trace.enabled = on;
         }
         cfg
     }
@@ -376,6 +399,26 @@ impl ServeConfig {
                 None => bail!("--engine wants fill|auto|hash|block, got {v:?}"),
             }
         }
+        if let Some(v) = flags.get("trace-dir") {
+            if v.is_empty() {
+                bail!("--trace-dir wants a directory path, got an empty value");
+            }
+            cfg.trace.dir = Some(v.clone());
+            cfg.trace.enabled = true;
+        }
+        if let Some(v) = flags.get("trace-slow") {
+            match v.parse::<usize>() {
+                Ok(k) if k > 0 => {
+                    cfg.trace.slow_k = k;
+                    cfg.trace.enabled = true;
+                }
+                _ => bail!("--trace-slow wants a positive count, got {v:?}"),
+            }
+        }
+        // last, so `--trace off` beats the implied-on of the flags above
+        if let Some(on) = on_off_flag(flags, "trace")? {
+            cfg.trace.enabled = on;
+        }
         Ok(cfg)
     }
 
@@ -482,6 +525,9 @@ struct PendingJob {
     id: u64,
     a: Csr,
     b: Csr,
+    /// Tracer clock at enqueue (0 with tracing off) — the `queue_wait`
+    /// span's start when the dispatcher admits this leader.
+    t_ns: u64,
 }
 
 /// The mutex-guarded state clients and the dispatcher share. Everything
@@ -512,6 +558,7 @@ pub struct Serve {
     fit: Arc<NsPerProdFit>,
     stop: Arc<AtomicBool>,
     dispatcher: Option<JoinHandle<()>>,
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl Serve {
@@ -572,13 +619,19 @@ impl Serve {
                 Box::new(move || BlockEngine::native(16, t)) as EngineFactory
             })
         });
-        let coord = Coordinator::start_full(
+        // one tracer shared by the front door and the whole coordinator
+        // stack (workers, barrier, monitor); `None` when tracing is off
+        // so every hook below compiles down to a branch on a None
+        let tracer: Option<Arc<Tracer>> =
+            cfg.trace.enabled.then(|| Arc::new(Tracer::new(&cfg.trace)));
+        let coord = Coordinator::start_traced(
             cfg.workers,
             router.clone(),
             engine,
             cfg.replan,
             cfg.speculate,
             cfg.chaos,
+            tracer.clone(),
         );
         if let Some(s) = &loaded {
             let (held, evicted) = {
@@ -598,11 +651,12 @@ impl Serve {
             let metrics = Arc::clone(&metrics);
             let stop = Arc::clone(&stop);
             let fit = Arc::clone(&fit);
+            let tracer = tracer.clone();
             std::thread::spawn(move || {
-                dispatcher_loop(coord, router, cfg, state, metrics, stop, fit)
+                dispatcher_loop(coord, router, cfg, state, metrics, stop, fit, tracer)
             })
         };
-        Ok(Serve { cfg, state, metrics, fit, stop, dispatcher: Some(dispatcher) })
+        Ok(Serve { cfg, state, metrics, fit, stop, dispatcher: Some(dispatcher), tracer })
     }
 
     /// Submit one multiply on behalf of `tenant`. Never blocks on
@@ -628,6 +682,17 @@ impl Serve {
                 if let Some(req) = st.outstanding.get_mut(&leader) {
                     req.waiters.push(Waiter { tx, t0, coalesced: true });
                     self.metrics.coalesce_hits.fetch_add(1, Ordering::Relaxed);
+                    if let Some(tr) = self.tracer.as_ref() {
+                        // the attach rides the *leader's* trace: the
+                        // waiter has no execution of its own to record
+                        tr.instant(
+                            leader,
+                            tr.parent_for(leader),
+                            LANE_FRONT,
+                            "coalesce_attach",
+                            vec![("waiters".to_string(), req.waiters.len().to_string())],
+                        );
+                    }
                     return ServeTicket { rx };
                 }
             }
@@ -639,14 +704,36 @@ impl Serve {
         }
         let id = st.next_id;
         st.next_id += 1;
+        // the root opens as soon as the leader has an identity; every
+        // span of this request (front door, workers, barrier) nests
+        // under it, and fan_out closes it
+        let admit_t0 = self.tracer.as_ref().map(|tr| (tr.open_root(id), tr.now_ns()));
         st.outstanding
             .insert(id, OutstandingReq { waiters: vec![Waiter { tx, t0, coalesced: false }], key });
         if let Some(k) = key {
             st.coalesce.insert(k, id);
         }
         self.metrics.observe_queue_depth(st.outstanding.len() as u64);
+        let mut t_ns = 0;
+        if let (Some(tr), Some((root, s0))) = (self.tracer.as_ref(), admit_t0) {
+            let s1 = tr.now_ns();
+            tr.record(Span {
+                trace: id,
+                id: tr.next_span_id(),
+                parent: root,
+                name: "admit".to_string(),
+                lane: LANE_FRONT,
+                t0_ns: s0,
+                t1_ns: s1,
+                args: vec![("tenant".to_string(), tenant.to_string())],
+                error: false,
+                instant: false,
+            });
+            self.metrics.phases.admit.observe(s1.saturating_sub(s0));
+            t_ns = s1;
+        }
         let q = st.queues.entry(tenant.to_string()).or_default();
-        q.push_back(PendingJob { id, a, b });
+        q.push_back(PendingJob { id, a, b, t_ns });
         if q.len() == 1 && !st.rr.iter().any(|t| t == tenant) {
             st.rr.push_back(tenant.to_string());
         }
@@ -656,6 +743,14 @@ impl Serve {
     /// Live metrics handle (shared with the coordinator underneath).
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
+    }
+
+    /// The request tracer, when `trace.enabled`; `None` otherwise —
+    /// callers export or inspect spans through this handle while the
+    /// front door runs (the dispatcher also writes trace files on
+    /// shutdown when `trace.dir` is set).
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
     }
 
     /// Point-in-time copy of the counters.
@@ -698,7 +793,7 @@ impl Drop for Serve {
 /// Resolve one coordinator result: look up the leader, drop its
 /// coalesce-map entry, and send every waiter its shared view of the one
 /// result.
-fn fan_out(st: &mut FrontState, metrics: &Metrics, r: JobResult) {
+fn fan_out(st: &mut FrontState, metrics: &Metrics, tracer: Option<&Arc<Tracer>>, r: JobResult) {
     let Some(req) = st.outstanding.remove(&r.id) else {
         return; // unknown id: not ours to resolve
     };
@@ -711,8 +806,11 @@ fn fan_out(st: &mut FrontState, metrics: &Metrics, r: JobResult) {
         Ok(c) => Ok(Arc::new(c)),
         Err(e) => Err(Arc::new(format!("{e:#}"))),
     };
+    let n_waiters = req.waiters.len();
+    let mut max_wall = 0u64;
     for w in req.waiters {
         let wall_ns = w.t0.elapsed().as_nanos() as u64;
+        max_wall = max_wall.max(wall_ns);
         metrics.observe_serve_latency(wall_ns);
         let msg = match &shared {
             Ok(c) => ServeResult::Done {
@@ -729,10 +827,54 @@ fn fan_out(st: &mut FrontState, metrics: &Metrics, r: JobResult) {
         };
         let _ = w.tx.send(msg);
     }
+    if let Some(tr) = tracer {
+        // every child span of this request was recorded before its
+        // JobResult was sent, so closing the root here caps the tree
+        tr.close_root(
+            r.id,
+            shared.is_err(),
+            vec![
+                ("route".to_string(), format!("{:?}", r.route)),
+                ("wall_ns".to_string(), max_wall.to_string()),
+                ("waiters".to_string(), n_waiters.to_string()),
+            ],
+        );
+        tr.note_slow(r.id, max_wall);
+    }
+}
+
+/// Record `batch_residency` spans for a flushing batch: one per member,
+/// from the moment it entered the open batch to the flush, and forget
+/// the marks. No-op with tracing off (the marks map stays empty).
+fn record_batch_residency(
+    tracer: Option<&Arc<Tracer>>,
+    metrics: &Metrics,
+    marks: &mut HashMap<u64, u64>,
+    batch: &[Job],
+) {
+    let Some(tr) = tracer else { return };
+    let s1 = tr.now_ns();
+    for job in batch {
+        let Some(s0) = marks.remove(&job.id) else { continue };
+        tr.record(Span {
+            trace: job.id,
+            id: tr.next_span_id(),
+            parent: tr.parent_for(job.id),
+            name: "batch_residency".to_string(),
+            lane: LANE_FRONT,
+            t0_ns: s0,
+            t1_ns: s1.max(s0),
+            args: vec![("members".to_string(), batch.len().to_string())],
+            error: false,
+            instant: false,
+        });
+        metrics.phases.batch_residency.observe(s1.saturating_sub(s0));
+    }
 }
 
 /// Move pending leaders into the coordinator (or the open batch) until
 /// the inflight bound is hit, draining tenant queues round-robin.
+#[allow(clippy::too_many_arguments)]
 fn admit_ready(
     st: &mut FrontState,
     cfg: &ServeConfig,
@@ -740,11 +882,32 @@ fn admit_ready(
     router: &Router,
     metrics: &Metrics,
     batcher: &mut Batcher,
+    tracer: Option<&Arc<Tracer>>,
+    batch_marks: &mut HashMap<u64, u64>,
 ) {
     while st.admitted < cfg.inflight_cap {
         let Some(tenant) = st.rr.pop_front() else { break };
         let Some(q) = st.queues.get_mut(&tenant) else { continue };
         let Some(pj) = q.pop_front() else { continue };
+        if let Some(tr) = tracer {
+            // time spent in the per-tenant queue waiting for an inflight
+            // slot, admission instant back to the enqueue stamp
+            let s1 = tr.now_ns();
+            let s0 = if pj.t_ns > 0 { pj.t_ns.min(s1) } else { s1 };
+            tr.record(Span {
+                trace: pj.id,
+                id: tr.next_span_id(),
+                parent: tr.parent_for(pj.id),
+                name: "queue_wait".to_string(),
+                lane: LANE_FRONT,
+                t0_ns: s0,
+                t1_ns: s1,
+                args: vec![("tenant".to_string(), tenant.clone())],
+                error: false,
+                instant: false,
+            });
+            metrics.phases.queue_wait.observe(s1.saturating_sub(s0));
+        }
         if !q.is_empty() {
             st.rr.push_back(tenant);
         }
@@ -758,7 +921,11 @@ fn admit_ready(
         // the panic into one failed request instead
         let submitted = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             if cfg.batch.enabled && matches!(router.route(&job.a, &job.b), Route::Hash) {
+                if let Some(tr) = tracer {
+                    batch_marks.insert(id, tr.now_ns());
+                }
                 if let Some(batch) = batcher.push(job) {
+                    record_batch_residency(tracer, metrics, batch_marks, &batch);
                     coord.submit_batch(batch);
                 }
             } else {
@@ -766,9 +933,11 @@ fn admit_ready(
             }
         }));
         if submitted.is_err() {
+            batch_marks.remove(&id);
             fan_out(
                 st,
                 metrics,
+                tracer,
                 JobResult {
                     id,
                     route: Route::Hash,
@@ -786,6 +955,7 @@ fn admit_ready(
 /// The dispatcher: owns the coordinator, alternates admission with
 /// result polling, flushes aged batches, and on stop drains everything
 /// outstanding before persisting and shutting the coordinator down.
+#[allow(clippy::too_many_arguments)]
 fn dispatcher_loop(
     coord: Coordinator,
     router: Router,
@@ -794,26 +964,49 @@ fn dispatcher_loop(
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     fit: Arc<NsPerProdFit>,
+    tracer: Option<Arc<Tracer>>,
 ) {
     let mut batcher = Batcher::new(cfg.batch);
+    // enqueue stamps of jobs riding the open batch (`batch_residency`
+    // spans); always empty with tracing off
+    let mut batch_marks: HashMap<u64, u64> = HashMap::new();
     loop {
         let stopping = stop.load(Ordering::SeqCst);
         {
             let mut guard = state.lock().unwrap_or_else(|e| e.into_inner());
-            admit_ready(&mut guard, &cfg, &coord, &router, &metrics, &mut batcher);
+            admit_ready(
+                &mut guard,
+                &cfg,
+                &coord,
+                &router,
+                &metrics,
+                &mut batcher,
+                tracer.as_ref(),
+                &mut batch_marks,
+            );
         }
         // the age watermark (or a stop) flushes a partial batch so its
         // members never wait on traffic that may not come
         let flush = if stopping { batcher.take() } else { batcher.take_aged() };
         if let Some(batch) = flush {
+            record_batch_residency(tracer.as_ref(), &metrics, &mut batch_marks, &batch);
             coord.submit_batch(batch);
         }
         if let Some(r) = coord.recv_timeout(DISPATCHER_TICK) {
             let mut guard = state.lock().unwrap_or_else(|e| e.into_inner());
             // fan out before admitting: a freed inflight slot goes to
             // the next tenant in the rotation on the same tick
-            fan_out(&mut guard, &metrics, r);
-            admit_ready(&mut guard, &cfg, &coord, &router, &metrics, &mut batcher);
+            fan_out(&mut guard, &metrics, tracer.as_ref(), r);
+            admit_ready(
+                &mut guard,
+                &cfg,
+                &coord,
+                &router,
+                &metrics,
+                &mut batcher,
+                tracer.as_ref(),
+                &mut batch_marks,
+            );
         }
         if stopping {
             let drained = {
@@ -834,7 +1027,32 @@ fn dispatcher_loop(
             eprintln!("serve: failed to persist warm state: {e:#}");
         }
     }
+    if let (Some(tr), Some(dir)) = (tracer.as_ref(), cfg.trace.dir.as_ref()) {
+        write_trace_files(tr, dir);
+    }
     coord.shutdown();
+}
+
+/// Write the full Chrome trace and the slow-request exemplar trace into
+/// `dir` (created if missing). Both load in Perfetto / `chrome://tracing`.
+fn write_trace_files(tr: &Tracer, dir: &str) {
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        eprintln!("serve: failed to create trace dir {dir:?}: {e}");
+        return;
+    }
+    let full = std::path::Path::new(dir).join("serve-trace.json");
+    if let Err(e) = std::fs::write(&full, tr.export_chrome()) {
+        eprintln!("serve: failed to write {full:?}: {e}");
+    }
+    let exemplars = tr.slow_exemplars();
+    if !exemplars.is_empty() {
+        let mut spans: Vec<Span> = exemplars.into_iter().flat_map(|s| s.spans).collect();
+        spans.sort_by_key(|s| (s.t0_ns, s.id));
+        let slow = std::path::Path::new(dir).join("serve-trace-slow.json");
+        if let Err(e) = std::fs::write(&slow, chrome_trace_json(&spans)) {
+            eprintln!("serve: failed to write {slow:?}: {e}");
+        }
+    }
 }
 
 #[cfg(test)]
@@ -968,6 +1186,10 @@ mod tests {
             ("chaos", "cruel"),
             ("chaos-seed", "lucky"),
             ("engine", "cuda"),
+            ("trace", "maybe"),
+            ("trace-slow", "lots"),
+            ("trace-slow", "0"),
+            ("trace-dir", ""),
         ] {
             let bad: HashMap<String, String> =
                 [(k.to_string(), v.to_string())].into_iter().collect();
@@ -1002,6 +1224,43 @@ mod tests {
         let off: HashMap<String, String> =
             [("chaos".to_string(), "off".to_string())].into_iter().collect();
         assert!(ServeConfig::from_args_over(cfg, &off).unwrap().chaos.is_off());
+    }
+
+    #[test]
+    fn trace_knobs_layer_and_imply_enabled() {
+        // defaults: off, no dir, 8 exemplars
+        let d = ServeConfig::default();
+        assert_eq!(d.trace, TraceConfig::default());
+        assert!(!d.trace.enabled, "tracing defaults off (PR 9 baseline)");
+        // env: a dir or a slow-K implies on; explicit off wins over both
+        let env: HashMap<&str, &str> =
+            [("OPSPARSE_TRACE_DIR", "/tmp/tr"), ("OPSPARSE_TRACE_SLOW", "3")]
+                .into_iter()
+                .collect();
+        let cfg = ServeConfig::from_env_map(|k| env.get(k).map(|v| v.to_string()));
+        assert!(cfg.trace.enabled);
+        assert_eq!(cfg.trace.dir.as_deref(), Some("/tmp/tr"));
+        assert_eq!(cfg.trace.slow_k, 3);
+        let env_off: HashMap<&str, &str> =
+            [("OPSPARSE_TRACE_DIR", "/tmp/tr"), ("OPSPARSE_TRACE", "off")].into_iter().collect();
+        let cfg_off = ServeConfig::from_env_map(|k| env_off.get(k).map(|v| v.to_string()));
+        assert!(!cfg_off.trace.enabled, "explicit off beats the implied on");
+        assert_eq!(cfg_off.trace.dir.as_deref(), Some("/tmp/tr"), "the dir survives for later");
+        // CLI: same implication, layered over env
+        let flags: HashMap<String, String> =
+            [("trace-slow".to_string(), "5".to_string())].into_iter().collect();
+        let cfg2 = ServeConfig::from_args_over(cfg_off, &flags).unwrap();
+        assert!(cfg2.trace.enabled, "--trace-slow implies --trace on");
+        assert_eq!(cfg2.trace.slow_k, 5);
+        let off: HashMap<String, String> = [
+            ("trace".to_string(), "off".to_string()),
+            ("trace-dir".to_string(), "/tmp/t2".to_string()),
+        ]
+        .into_iter()
+        .collect();
+        let cfg3 = ServeConfig::from_args_over(cfg2, &off).unwrap();
+        assert!(!cfg3.trace.enabled, "--trace off beats --trace-dir on the same line");
+        assert_eq!(cfg3.trace.dir.as_deref(), Some("/tmp/t2"));
     }
 
     #[test]

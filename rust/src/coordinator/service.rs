@@ -33,6 +33,7 @@ use super::feedback::{Engine, ExecHistory, NsPerProdFit, ReplanConfig, RunObserv
 use super::metrics::Metrics;
 use super::router::{EngineMode, Route, Router};
 use crate::gpusim::{simulate, DevicePool, Trace, V100};
+use crate::obs::{lane_worker, Span, Tracer, LANE_BLOCK, LANE_FRONT};
 use crate::runtime::BlockEngine;
 use crate::sparse::ops::row_slice;
 use crate::sparse::stats::{nprod_per_row, total_nprod};
@@ -188,8 +189,11 @@ fn run_hash_job(
     engine_history: Option<&Arc<Mutex<ExecHistory>>>,
     metrics: &Metrics,
     tx_res: &mpsc::Sender<JobResult>,
+    tracer: Option<&Arc<Tracer>>,
+    lane: u64,
 ) {
     let id = job.id;
+    let span_t0 = tracer.map(|t| t.now_ns());
     let pool_before = pool.stats();
     // the ENTIRE per-job body is one fault domain: a panic anywhere in
     // it (the multiply itself, the post-multiply refit/simulate, the
@@ -248,19 +252,51 @@ fn run_hash_job(
                 if reuse.is_none() {
                     cache.insert(key, Arc::new(SymbolicReuse::from_output(&out)));
                 }
-                (Ok(out.c), np)
+                // device-phase attribution for the exec span: replay the
+                // op trace once more and keep the per-step durations.
+                // Tracing-off skips this entirely (and allocates nothing)
+                let phases = match tracer {
+                    Some(_) => simulate(&out.trace, &V100).phase_spans(),
+                    None => Vec::new(),
+                };
+                (Ok(out.c), np, phases)
             }
-            Err(e) => (Err(e), 0),
+            Err(e) => (Err(e), 0, Vec::new()),
         }
     }));
-    let (c, nprod) = match outcome {
+    let (c, nprod, phases) = match outcome {
         Ok(r) => r,
         Err(_) => (
             Err(anyhow::anyhow!("job panicked (internal bug or corrupt reuse entry)")),
             0,
+            Vec::new(),
         ),
     };
     metrics.observe_pool(&pool.stats().delta_since(&pool_before));
+    // record-at-close, and *before* the result is sent: the request
+    // root (closed by the fan-out this result triggers) must outlive
+    // every child span's interval
+    if let (Some(tr), Some(s0)) = (tracer, span_t0) {
+        let s1 = tr.now_ns();
+        let parent = tr.parent_for(id);
+        let span_id = tr.next_span_id();
+        tr.record(Span {
+            trace: id,
+            id: span_id,
+            parent,
+            name: "exec".to_string(),
+            lane,
+            t0_ns: s0,
+            t1_ns: s1,
+            args: vec![
+                ("route".to_string(), "hash".to_string()),
+                ("nprod".to_string(), nprod.to_string()),
+            ],
+            error: c.is_err(),
+            instant: false,
+        });
+        tr.record_phases(id, span_id, lane, s0, s1, &phases);
+    }
     finish(metrics, tx_res, id, Route::Hash, c, nprod, t0);
 }
 
@@ -278,6 +314,7 @@ fn run_shard_task(
     cfg: &OpSparseConfig,
     metrics: &Metrics,
     worker_id: usize,
+    tracer: Option<&Arc<Tracer>>,
 ) {
     // one shard of a sharded parent: slice the row range, run the full
     // pipeline, report to the reassembly barrier. The pattern cache IS
@@ -287,8 +324,9 @@ fn run_shard_task(
     // panicking shard (poisoned rows reachable only from this shard's
     // slice) must cost the parent job, not this worker thread.
     metrics.observe_shard_subjob(worker_id);
+    let span_t0 = tracer.map(|t| t.now_ns());
     if task.engine == Engine::Block {
-        return run_block_shard_task(task, injected_delay_ns);
+        return run_block_shard_task(task, injected_delay_ns, tracer, worker_id, span_t0);
     }
     let pool_before = pool.stats();
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -332,6 +370,43 @@ fn run_shard_task(
         }
         _ => None,
     };
+    // shard attempt span, recorded before the barrier can resolve the
+    // parent. A speculation loser lands after the request root closed:
+    // `parent_for` then returns 0 and the span stands alone, tagged
+    // `late` — never escaping a closed parent interval.
+    if let (Some(tr), Some(s0)) = (tracer, span_t0) {
+        let s1 = tr.now_ns();
+        let trace = task.barrier.job_id();
+        let parent = tr.parent_for(trace);
+        let span_id = tr.next_span_id();
+        let mut args = vec![
+            ("shard".to_string(), task.shard.to_string()),
+            ("rows".to_string(), format!("{}..{}", task.lo, task.hi)),
+            ("attempt".to_string(), task.attempts.to_string()),
+            ("speculative".to_string(), task.speculative.to_string()),
+            ("worker".to_string(), worker_id.to_string()),
+        ];
+        if parent == 0 {
+            args.push(("late".to_string(), "true".to_string()));
+        }
+        tr.record(Span {
+            trace,
+            id: span_id,
+            parent,
+            name: "shard".to_string(),
+            lane: lane_worker(worker_id),
+            t0_ns: s0,
+            t1_ns: s1,
+            args,
+            error: r.is_err(),
+            instant: false,
+        });
+        if let Ok(out) = &r {
+            let phases = simulate(&out.trace, &V100).phase_spans();
+            tr.record_phases(trace, span_id, lane_worker(worker_id), s0, s1, &phases);
+        }
+        metrics.phases.shard_exec.observe(s1.saturating_sub(s0));
+    }
     task.barrier.complete_from(task.shard, r, shard_ns, task.speculative);
 }
 
@@ -345,7 +420,13 @@ fn run_shard_task(
 /// and it is cheap next to the block-pair products. Measured time is the
 /// engine's closed-form simulated ns (the same clock domain the
 /// dispatcher's hash measurements use), plus any chaos-injected delay.
-fn run_block_shard_task(task: ShardTask, injected_delay_ns: u64) {
+fn run_block_shard_task(
+    task: ShardTask,
+    injected_delay_ns: u64,
+    tracer: Option<&Arc<Tracer>>,
+    worker_id: usize,
+    span_t0: Option<u64>,
+) {
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         let a_s = row_slice(&task.a, task.lo, task.hi)?;
         let mut engine = BlockEngine::native(SHARD_BLOCK_P, task.block_t.max(1))?;
@@ -375,6 +456,40 @@ fn run_block_shard_task(task: ShardTask, injected_delay_ns: u64) {
         ),
         Err(e) => (Err(e), None),
     };
+    // no op trace on the block path (the closed-form engine model is the
+    // measurement), so the attempt span carries the simulated ns as an
+    // arg instead of projected phase children
+    if let (Some(tr), Some(s0)) = (tracer, span_t0) {
+        let s1 = tr.now_ns();
+        let trace = task.barrier.job_id();
+        let parent = tr.parent_for(trace);
+        let mut args = vec![
+            ("shard".to_string(), task.shard.to_string()),
+            ("rows".to_string(), format!("{}..{}", task.lo, task.hi)),
+            ("attempt".to_string(), task.attempts.to_string()),
+            ("speculative".to_string(), task.speculative.to_string()),
+            ("engine".to_string(), "block".to_string()),
+            ("worker".to_string(), worker_id.to_string()),
+        ];
+        if let Some(ns) = shard_ns {
+            args.push(("sim_ns".to_string(), format!("{ns:.0}")));
+        }
+        if parent == 0 {
+            args.push(("late".to_string(), "true".to_string()));
+        }
+        tr.record(Span {
+            trace,
+            id: tr.next_span_id(),
+            parent,
+            name: "shard".to_string(),
+            lane: lane_worker(worker_id),
+            t0_ns: s0,
+            t1_ns: s1,
+            args,
+            error: out.is_err(),
+            instant: false,
+        });
+    }
     task.barrier.complete_from(task.shard, out, shard_ns, task.speculative);
 }
 
@@ -399,6 +514,20 @@ struct WorkerShared {
     /// it exits so [`Coordinator::shutdown`]'s drain loop can't miss
     /// one.
     replacements: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// Request tracer — `None` unless tracing is on, so the default
+    /// serve hot path performs zero tracing work.
+    tracer: Option<Arc<Tracer>>,
+}
+
+/// The trace a worker message belongs to: the job id (batches trace as
+/// their first member — the whole visit rides one lane anyway).
+fn msg_trace(msg: &WorkerMsg) -> u64 {
+    match msg {
+        WorkerMsg::RunShard(task) => task.barrier.job_id(),
+        WorkerMsg::Run(job, _, _, _) => job.id,
+        WorkerMsg::RunBatch(jobs, _, _) => jobs.first().map(|j| j.id).unwrap_or(0),
+        WorkerMsg::Stop => 0,
+    }
 }
 
 fn spawn_hash_worker(sh: WorkerShared, worker_id: usize, generation: u64) -> JoinHandle<()> {
@@ -413,10 +542,32 @@ fn spawn_hash_worker(sh: WorkerShared, worker_id: usize, generation: u64) -> Joi
 /// stop-marker count stays correct and capacity never decays.
 fn worker_died(sh: &WorkerShared, worker_id: usize, generation: u64, msg: WorkerMsg) {
     sh.metrics.worker_deaths.fetch_add(1, Ordering::Relaxed);
+    let lane = lane_worker(worker_id);
     match msg {
         WorkerMsg::RunShard(mut task) => {
+            let trace = task.barrier.job_id();
             if task.attempts >= MAX_REQUEUES {
                 let (shard, attempts) = (task.shard, task.attempts);
+                if let Some(tr) = sh.tracer.as_ref() {
+                    let t = tr.now_ns();
+                    let parent = tr.parent_for(trace);
+                    tr.record(Span {
+                        trace,
+                        id: tr.next_span_id(),
+                        parent,
+                        name: "shard_abandoned".to_string(),
+                        lane,
+                        t0_ns: t,
+                        t1_ns: t,
+                        args: vec![
+                            ("shard".to_string(), shard.to_string()),
+                            ("attempt".to_string(), attempts.to_string()),
+                            ("worker".to_string(), worker_id.to_string()),
+                        ],
+                        error: true,
+                        instant: false,
+                    });
+                }
                 task.barrier.abandon(
                     shard,
                     anyhow::anyhow!(
@@ -427,11 +578,44 @@ fn worker_died(sh: &WorkerShared, worker_id: usize, generation: u64, msg: Worker
             } else {
                 task.attempts += 1;
                 sh.metrics.requeued_shards.fetch_add(1, Ordering::Relaxed);
+                if let Some(tr) = sh.tracer.as_ref() {
+                    let parent = tr.parent_for(trace);
+                    tr.instant(
+                        trace,
+                        parent,
+                        lane,
+                        "shard_requeue",
+                        vec![
+                            ("shard".to_string(), task.shard.to_string()),
+                            ("attempt".to_string(), task.attempts.to_string()),
+                            ("worker".to_string(), worker_id.to_string()),
+                        ],
+                    );
+                }
                 let _ = sh.tx_requeue.send(WorkerMsg::RunShard(task));
             }
         }
         WorkerMsg::Run(job, route, t0, attempts) => {
             if attempts >= MAX_REQUEUES {
+                if let Some(tr) = sh.tracer.as_ref() {
+                    let t = tr.now_ns();
+                    let parent = tr.parent_for(job.id);
+                    tr.record(Span {
+                        trace: job.id,
+                        id: tr.next_span_id(),
+                        parent,
+                        name: "job_abandoned".to_string(),
+                        lane,
+                        t0_ns: t,
+                        t1_ns: t,
+                        args: vec![
+                            ("attempt".to_string(), attempts.to_string()),
+                            ("worker".to_string(), worker_id.to_string()),
+                        ],
+                        error: true,
+                        instant: false,
+                    });
+                }
                 finish(
                     &sh.metrics,
                     &sh.tx_res,
@@ -445,6 +629,19 @@ fn worker_died(sh: &WorkerShared, worker_id: usize, generation: u64, msg: Worker
                 );
             } else {
                 sh.metrics.requeued_jobs.fetch_add(1, Ordering::Relaxed);
+                if let Some(tr) = sh.tracer.as_ref() {
+                    let parent = tr.parent_for(job.id);
+                    tr.instant(
+                        job.id,
+                        parent,
+                        lane,
+                        "job_requeue",
+                        vec![
+                            ("attempt".to_string(), (attempts + 1).to_string()),
+                            ("worker".to_string(), worker_id.to_string()),
+                        ],
+                    );
+                }
                 let _ = sh.tx_requeue.send(WorkerMsg::Run(job, route, t0, attempts + 1));
             }
         }
@@ -453,6 +650,25 @@ fn worker_died(sh: &WorkerShared, worker_id: usize, generation: u64, msg: Worker
             // started, so no member ran twice
             if attempts >= MAX_REQUEUES {
                 for job in jobs {
+                    if let Some(tr) = sh.tracer.as_ref() {
+                        let t = tr.now_ns();
+                        let parent = tr.parent_for(job.id);
+                        tr.record(Span {
+                            trace: job.id,
+                            id: tr.next_span_id(),
+                            parent,
+                            name: "job_abandoned".to_string(),
+                            lane,
+                            t0_ns: t,
+                            t1_ns: t,
+                            args: vec![
+                                ("attempt".to_string(), attempts.to_string()),
+                                ("worker".to_string(), worker_id.to_string()),
+                            ],
+                            error: true,
+                            instant: false,
+                        });
+                    }
                     finish(
                         &sh.metrics,
                         &sh.tx_res,
@@ -468,6 +684,21 @@ fn worker_died(sh: &WorkerShared, worker_id: usize, generation: u64, msg: Worker
                 }
             } else {
                 sh.metrics.requeued_jobs.fetch_add(1, Ordering::Relaxed);
+                if let Some(tr) = sh.tracer.as_ref() {
+                    let trace = jobs.first().map(|j| j.id).unwrap_or(0);
+                    let parent = tr.parent_for(trace);
+                    tr.instant(
+                        trace,
+                        parent,
+                        lane,
+                        "batch_requeue",
+                        vec![
+                            ("members".to_string(), jobs.len().to_string()),
+                            ("attempt".to_string(), (attempts + 1).to_string()),
+                            ("worker".to_string(), worker_id.to_string()),
+                        ],
+                    );
+                }
                 let _ = sh.tx_requeue.send(WorkerMsg::RunBatch(jobs, t0, attempts + 1));
             }
         }
@@ -506,17 +737,53 @@ fn hash_worker_loop(sh: WorkerShared, worker_id: usize, generation: u64) {
         let mut injected_delay_ns = 0u64;
         if !sh.chaos.is_off() {
             let fault = chaos.at_boundary();
+            // chaos args carried on every injection instant so a trace
+            // alone is enough to replay the schedule (satellite: chaos
+            // observability)
+            let chaos_args = || {
+                vec![
+                    ("seed".to_string(), sh.chaos.seed.to_string()),
+                    ("worker".to_string(), worker_id.to_string()),
+                    ("generation".to_string(), generation.to_string()),
+                ]
+            };
             if fault.delay_ns > 0 {
                 sh.metrics.chaos_delays.fetch_add(1, Ordering::Relaxed);
+                if let Some(tr) = sh.tracer.as_ref() {
+                    let trace = msg_trace(&msg);
+                    let mut args = chaos_args();
+                    args.push(("delay_ns".to_string(), fault.delay_ns.to_string()));
+                    tr.instant(trace, tr.parent_for(trace), lane_worker(worker_id), "chaos_delay", args);
+                }
                 std::thread::sleep(Duration::from_nanos(fault.delay_ns));
                 injected_delay_ns = fault.delay_ns;
             }
             if fault.shrink_pool {
                 sh.metrics.chaos_pool_shrinks.fetch_add(1, Ordering::Relaxed);
+                if let Some(tr) = sh.tracer.as_ref() {
+                    let trace = msg_trace(&msg);
+                    tr.instant(
+                        trace,
+                        tr.parent_for(trace),
+                        lane_worker(worker_id),
+                        "chaos_pool_shrink",
+                        chaos_args(),
+                    );
+                }
                 pool = DevicePool::new();
                 cache = PatternCache::new(WORKER_CACHE_PATTERNS);
             }
             if fault.kill {
+                if let Some(tr) = sh.tracer.as_ref() {
+                    let trace = msg_trace(&msg);
+                    tr.instant(
+                        trace,
+                        tr.parent_for(trace),
+                        lane_worker(worker_id),
+                        "chaos_kill",
+                        chaos_args(),
+                    );
+                }
                 worker_died(&sh, worker_id, generation, msg);
                 return;
             }
@@ -531,6 +798,7 @@ fn hash_worker_loop(sh: WorkerShared, worker_id: usize, generation: u64) {
                     &cfg,
                     &sh.metrics,
                     worker_id,
+                    sh.tracer.as_ref(),
                 );
             }
             WorkerMsg::Run(job, _, t0, _) => {
@@ -544,6 +812,8 @@ fn hash_worker_loop(sh: WorkerShared, worker_id: usize, generation: u64) {
                     sh.engine_history.as_ref(),
                     &sh.metrics,
                     &sh.tx_res,
+                    sh.tracer.as_ref(),
+                    lane_worker(worker_id),
                 );
             }
             WorkerMsg::RunBatch(jobs, t0, _) => {
@@ -563,6 +833,8 @@ fn hash_worker_loop(sh: WorkerShared, worker_id: usize, generation: u64) {
                         sh.engine_history.as_ref(),
                         &sh.metrics,
                         &sh.tx_res,
+                        sh.tracer.as_ref(),
+                        lane_worker(worker_id),
                     );
                 }
             }
@@ -599,6 +871,9 @@ pub struct Coordinator {
     /// Whether the no-block-engine downgrade has been logged (once per
     /// coordinator — the `block_fallbacks` metric counts every event).
     block_fallback_logged: AtomicBool,
+    /// Request tracer — `None` unless the serving layer turned tracing
+    /// on ([`Coordinator::start_traced`]).
+    tracer: Option<Arc<Tracer>>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -650,6 +925,23 @@ impl Coordinator {
         speculate: SpeculateConfig,
         chaos: ChaosConfig,
     ) -> Self {
+        Coordinator::start_traced(n_workers, router, engine_factory, replan, speculate, chaos, None)
+    }
+
+    /// [`Coordinator::start_full`] plus an optional request [`Tracer`]
+    /// shared with the serving front door. `None` (every pre-existing
+    /// caller) is the zero-overhead path: workers never read a clock or
+    /// allocate a span.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_traced(
+        n_workers: usize,
+        router: Router,
+        engine_factory: Option<EngineFactory>,
+        replan: ReplanConfig,
+        speculate: SpeculateConfig,
+        chaos: ChaosConfig,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Self {
         let mut router = router;
         let (tx_hash, rx_hash) = mpsc::channel::<WorkerMsg>();
         let (tx_results, rx_results) = mpsc::channel::<JobResult>();
@@ -689,6 +981,7 @@ impl Coordinator {
             engine_history: engine_history.clone(),
             chaos,
             replacements: Arc::clone(&replacements),
+            tracer: tracer.clone(),
         };
         let mut workers = Vec::new();
         for worker_id in 0..n_workers.max(1) {
@@ -704,6 +997,7 @@ impl Coordinator {
             let tx = tx_hash.clone();
             let metrics = Arc::clone(&metrics);
             let stop = Arc::clone(&monitor_stop);
+            let tracer = tracer.clone();
             std::thread::spawn(move || {
                 while !stop.load(Ordering::Relaxed) {
                     std::thread::sleep(SPECULATION_TICK);
@@ -715,6 +1009,16 @@ impl Coordinator {
                     for barrier in live {
                         for plan in barrier.stragglers() {
                             metrics.speculative_launches.fetch_add(1, Ordering::Relaxed);
+                            if let Some(tr) = tracer.as_ref() {
+                                let trace = barrier.job_id();
+                                tr.instant(
+                                    trace,
+                                    tr.parent_for(trace),
+                                    LANE_FRONT,
+                                    "speculate_launch",
+                                    vec![("shard".to_string(), plan.shard.to_string())],
+                                );
+                            }
                             let task = ShardTask {
                                 barrier: Arc::clone(&barrier),
                                 shard: plan.shard,
@@ -743,6 +1047,7 @@ impl Coordinator {
             let tx_res = tx_results.clone();
             let metrics = Arc::clone(&metrics);
             let engine_history = engine_history.clone();
+            let tracer_block = tracer.clone();
             workers.push(std::thread::spawn(move || {
                 // the engine (non-Send PJRT state) lives and dies here
                 let mut engine = match factory() {
@@ -755,6 +1060,7 @@ impl Coordinator {
                 loop {
                     match rx_block.recv() {
                         Ok(WorkerMsg::Run(job, _, t0, _)) => {
+                            let span_t0 = tracer_block.as_ref().map(|t| t.now_ns());
                             // guard the stats assert: a force-routed job
                             // with mismatched dims must fail via the
                             // engine's error, not panic this thread
@@ -797,6 +1103,25 @@ impl Coordinator {
                                         .store(h.evictions(), Ordering::Relaxed);
                                 }
                             }
+                            if let (Some(tr), Some(s0)) = (tracer_block.as_ref(), span_t0) {
+                                let s1 = tr.now_ns();
+                                let parent = tr.parent_for(job.id);
+                                tr.record(Span {
+                                    trace: job.id,
+                                    id: tr.next_span_id(),
+                                    parent,
+                                    name: "exec".to_string(),
+                                    lane: LANE_BLOCK,
+                                    t0_ns: s0,
+                                    t1_ns: s1,
+                                    args: vec![
+                                        ("route".to_string(), "block".to_string()),
+                                        ("nprod".to_string(), nprod.to_string()),
+                                    ],
+                                    error: c.is_err(),
+                                    instant: false,
+                                });
+                            }
                             finish(&metrics, &tx_res, job.id, Route::Block, c, nprod, t0);
                         }
                         // the submit path never sends shard or batch
@@ -826,6 +1151,7 @@ impl Coordinator {
             replan,
             history,
             block_fallback_logged: AtomicBool::new(false),
+            tracer,
             metrics,
         }
     }
@@ -841,6 +1167,7 @@ impl Coordinator {
     pub fn submit(&self, job: Job) {
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
+        let span_t0 = self.tracer.as_ref().map(|t| t.now_ns());
         let route = job.force_route.unwrap_or_else(|| self.router.route(&job.a, &job.b));
         let route = match (route, &self.tx_block) {
             (Route::Block, Some(_)) => Route::Block,
@@ -864,6 +1191,36 @@ impl Coordinator {
             // sub-job builds its own native engine on the hash pool
             (r, _) => r,
         };
+        // route-decision span: the chosen route plus both engines'
+        // modeled ns, so a mis-route debugs against the very numbers
+        // the dispatcher compared (the estimate re-runs here — cheap,
+        // structure-only — and only when tracing is on)
+        if let (Some(tr), Some(s0)) = (self.tracer.as_ref(), span_t0) {
+            let s1 = tr.now_ns();
+            let parent = tr.parent_for(job.id);
+            let (hash_ns, block_ns) = self.router.sampled_engine_estimate(&job.a, &job.b);
+            let mut args = vec![
+                ("route".to_string(), format!("{route:?}")),
+                ("modeled_hash_ns".to_string(), format!("{hash_ns:.0}")),
+                ("modeled_block_ns".to_string(), format!("{block_ns:.0}")),
+            ];
+            if job.force_route.is_some() {
+                args.push(("forced".to_string(), "true".to_string()));
+            }
+            tr.record(Span {
+                trace: job.id,
+                id: tr.next_span_id(),
+                parent,
+                name: "route_decision".to_string(),
+                lane: LANE_FRONT,
+                t0_ns: s0,
+                t1_ns: s1,
+                args,
+                error: false,
+                instant: false,
+            });
+            self.metrics.phases.route_decision.observe(s1.saturating_sub(s0));
+        }
         match route {
             Route::Hash => {
                 self.metrics.hash_routed.fetch_add(1, Ordering::Relaxed);
@@ -972,6 +1329,9 @@ impl Coordinator {
                     t0,
                     feedback,
                 );
+                if let Some(tr) = self.tracer.as_ref() {
+                    barrier.set_obs(Arc::clone(tr));
+                }
                 if self.speculate.enabled {
                     // attach the operand handles the monitor needs to
                     // relaunch a lagging shard (stored on the barrier,

@@ -565,6 +565,33 @@ impl MultiDevice {
         self.timelines.len()
     }
 
+    /// Per-phase attribution for the tracing layer ([`crate::obs`]): the
+    /// `B` broadcast, each distinct compute step aggregated across
+    /// devices (max over devices — they run in parallel, so a step's
+    /// contribution to the makespan is its slowest device), then the `C`
+    /// gather, in execution order. Zero-cost phases are dropped, exactly
+    /// as in [`Timeline::phase_spans`].
+    pub fn phase_spans(&self) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        if self.broadcast_ns > 0.0 {
+            out.push(("broadcast".to_string(), self.broadcast_ns));
+        }
+        let mut steps: Vec<(String, f64)> = Vec::new();
+        for tl in &self.timelines {
+            for (name, ns) in tl.phase_spans() {
+                match steps.iter_mut().find(|(n, _)| *n == name) {
+                    Some((_, acc)) => *acc = acc.max(ns),
+                    None => steps.push((name, ns)),
+                }
+            }
+        }
+        out.extend(steps);
+        if self.gather_ns > 0.0 {
+            out.push(("gather".to_string(), self.gather_ns));
+        }
+        out
+    }
+
     /// Pipelined end-to-end critical path, when this run was simulated
     /// via [`MultiDevice::simulate_overlapped`] (≤ the serial
     /// [`MultiDevice::makespan_ns`] by construction).
@@ -695,6 +722,32 @@ mod tests {
         assert!(per[1] > per[0]);
         assert!(md.time_imbalance() > 1.0);
         assert_eq!(md.comm_ns(), 0.0, "no interconnect charged by default");
+    }
+
+    #[test]
+    fn phase_spans_bracket_compute_with_transfers() {
+        let fast = trace_with_blocks(10);
+        let slow = trace_with_blocks(4000);
+        let ic = Interconnect::parse("pcie4").unwrap();
+        let md = MultiDevice::simulate_with_interconnect(
+            [&fast, &slow],
+            &V100,
+            &ic,
+            1_000_000,
+            &[500_000, 500_000],
+        )
+        .unwrap();
+        let phases = md.phase_spans();
+        assert_eq!(phases.first().map(|(n, _)| n.as_str()), Some("broadcast"));
+        assert_eq!(phases.last().map(|(n, _)| n.as_str()), Some("gather"));
+        let numeric = phases.iter().find(|(n, _)| n == "numeric").expect("compute step present");
+        assert!(
+            (numeric.1 - md.timelines[1].step_ns("numeric")).abs() < 1e-6,
+            "compute step aggregates as max over devices"
+        );
+        // serial simulation (no interconnect): transfers drop out
+        let md0 = MultiDevice::simulate([&fast, &slow], &V100);
+        assert!(md0.phase_spans().iter().all(|(n, _)| n != "broadcast" && n != "gather"));
     }
 
     #[test]

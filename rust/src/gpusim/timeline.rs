@@ -83,6 +83,30 @@ impl Timeline {
         union_ns(spans)
     }
 
+    /// Per-phase attribution for the tracing layer ([`crate::obs`]):
+    /// the timeline's distinct pipeline steps in first-appearance order
+    /// (kernels before host spans), each with its [`Timeline::step_ns`]
+    /// union duration. Zero-duration steps are dropped — they would
+    /// render as empty child spans.
+    pub fn phase_spans(&self) -> Vec<(String, f64)> {
+        let mut steps: Vec<&'static str> = Vec::new();
+        for s in self
+            .kernels
+            .iter()
+            .map(|k| k.step)
+            .chain(self.host.iter().map(|h| h.step))
+        {
+            if !steps.contains(&s) {
+                steps.push(s);
+            }
+        }
+        steps
+            .into_iter()
+            .map(|s| (s.to_string(), self.step_ns(s)))
+            .filter(|(_, ns)| *ns > 0.0)
+            .collect()
+    }
+
     /// Sum of kernel device durations for a step (ignores overlap; used
     /// for per-kernel accounting).
     pub fn step_kernel_sum_ns(&self, step: &str) -> f64 {
@@ -322,6 +346,11 @@ mod tests {
         assert_eq!(tl.step_ns("symbolic"), 10.0);
         assert_eq!(tl.step_ns("numeric"), 20.0);
         assert_eq!(tl.step_ns("setup"), 0.0);
+        assert_eq!(
+            tl.phase_spans(),
+            vec![("symbolic".to_string(), 10.0), ("numeric".to_string(), 20.0)],
+            "ordered distinct steps with union durations"
+        );
     }
 
     #[test]

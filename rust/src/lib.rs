@@ -16,7 +16,10 @@
 //!   malloc-free and symbolic-free (see
 //!   [`spgemm::pipeline::multiply_reuse`]), plus a row-sharded
 //!   multi-device path ([`spgemm::sharded`], aggregated by
-//!   [`gpusim::multi`]) for multiplies that exceed one device's memory.
+//!   [`gpusim::multi`]) for multiplies that exceed one device's memory,
+//!   and a request-scoped tracing layer ([`obs`]) exporting Chrome
+//!   trace-event JSON and Prometheus metrics
+//!   ([`coordinator::Metrics::to_prometheus`]).
 //!   See `docs/ARCHITECTURE.md` for the layer map and the paper-section →
 //!   module table.
 //! * **L2 (python/compile/model.py)** — the numeric-phase dense block
@@ -31,6 +34,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod gen;
 pub mod gpusim;
+pub mod obs;
 pub mod runtime;
 pub mod sparse;
 pub mod spgemm;

@@ -4,7 +4,7 @@
 //! * `gen --name <matrix> [--scale s] [--out f.mtx]` — emit a suite matrix
 //! * `spgemm --a f.mtx [--b g.mtx] [--lib L] [--verify]` — one multiply
 //! * `suite [--scale s] [--verify]` — all 26 matrices, all libraries
-//! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|chaos|corpus|engines|all>`
+//! * `bench <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|chaos|corpus|engines|trace|all>`
 //!   (`bench shards` takes `--interconnect pcie|nvlink|none`,
 //!   `--overlap on|off`, `--chunk-kb <KiB>`, `--json <path>`,
 //!   `--overlap-json <path>`, `--replan on|off`, and
@@ -15,17 +15,24 @@
 //!   `OPSPARSE_BENCH_JSON_CORPUS` as env fallbacks; `bench engines`
 //!   takes `--reps n` and `--json <path>`, with
 //!   `OPSPARSE_ENGINE_BENCH_REPS` / `OPSPARSE_BENCH_JSON_ENGINES` as
-//!   env fallbacks)
+//!   env fallbacks; `bench trace` takes `--jobs n`, `--json <path>`,
+//!   and `--events-json <path>`, with `OPSPARSE_BENCH_JSON_TRACE` /
+//!   `OPSPARSE_BENCH_TRACE_EVENTS` as env fallbacks)
 //! * `serve [--jobs n] [--workers w] [--engine fill|auto|hash|block]
 //!   [--coalesce on|off] [--batch on|off]
 //!   [--batch-max n] [--batch-age-ms n] [--queue-cap n] [--inflight n]
 //!   [--persist on|off|path] [--replan on|off] [--history-cap n]
 //!   [--overlap on|off] [--chunk-kb n] [--interconnect pcie|nvlink|none]
 //!   [--speculate on|off] [--speculate-lag f]
-//!   [--chaos off|gentle|aggressive] [--chaos-seed n]`
+//!   [--chaos off|gentle|aggressive] [--chaos-seed n]
+//!   [--trace on|off] [--trace-dir d] [--trace-slow k] [--prometheus]`
 //!   — the serving front door (coalescing, batching, admission control,
-//!   warm-start persistence, straggler speculation, fault injection)
-//!   over the coordinator
+//!   warm-start persistence, straggler speculation, fault injection,
+//!   request tracing) over the coordinator
+//! * `trace [--jobs n] [--trace-dir d] [serve flags]` — a traced
+//!   demonstration run (sharded + speculative + gentle-chaos traffic,
+//!   tracing forced on): writes Perfetto-loadable trace files, prints
+//!   the metrics snapshot and its Prometheus text exposition
 //! * `sim-case webbase` — §6.3.4 / §6.3.5 case-study timeline
 //!
 //! Offline build: argument parsing is hand-rolled (no clap in the vendor
@@ -337,6 +344,21 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
                 opsparse::bench::write_engines_json(path, &report)?;
             }
         }
+        "trace" => {
+            let jobs = flags.get("jobs").map(|s| s.parse()).transpose()?.unwrap_or(16);
+            let report = opsparse::bench::trace_bench::trace_overhead(jobs)?;
+            // --json wins over the env path, matching the serve bench
+            let env_path = std::env::var("OPSPARSE_BENCH_JSON_TRACE").ok();
+            if let Some(path) = flags.get("json").map(String::as_str).or(env_path.as_deref()) {
+                opsparse::bench::write_trace_json(path, &report)?;
+            }
+            let env_ev = std::env::var("OPSPARSE_BENCH_TRACE_EVENTS").ok();
+            if let Some(path) =
+                flags.get("events-json").map(String::as_str).or(env_ev.as_deref())
+            {
+                opsparse::bench::write_trace_events(path, &report)?;
+            }
+        }
         "all" => {
             tables::table1();
             tables::table2();
@@ -401,6 +423,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             )
         }
     );
+    println!(
+        "trace: {} (dir {}, slow exemplars {})",
+        if cfg.trace.enabled { "on" } else { "off" },
+        cfg.trace.dir.as_deref().unwrap_or("off"),
+        cfg.trace.slow_k
+    );
     let factory: Option<opsparse::coordinator::service::EngineFactory> = if use_engine {
         Some(Box::new(|| {
             // P=16: optimal batch for the interpret-mode CPU path (§Perf)
@@ -462,7 +490,107 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         serve.fit().current(),
         serve.fit().updates()
     );
+    if flags.contains_key("prometheus") {
+        println!("\n{}", serve.metrics().to_prometheus());
+    }
+    let tracer = serve.tracer().cloned();
+    let trace_dir = serve.config().trace.dir.clone();
     serve.shutdown();
+    if let Some(tr) = tracer {
+        println!(
+            "trace: {} spans retained ({} dropped), {} slow exemplars{}",
+            tr.snapshot_spans().len(),
+            tr.dropped(),
+            tr.slow_exemplars().len(),
+            trace_dir
+                .map(|d| format!(", wrote {d}/serve-trace.json"))
+                .unwrap_or_default()
+        );
+    }
+    if failed > 0 {
+        bail!("{failed} jobs failed");
+    }
+    Ok(())
+}
+
+/// `opsparse trace` — a traced demonstration run: sharded + speculative
+/// + gentle-chaos traffic with tracing forced on, trace files written
+/// (Perfetto-loadable), the metrics snapshot and its Prometheus text
+/// exposition printed.
+fn cmd_trace(flags: &HashMap<String, String>) -> Result<()> {
+    let jobs: usize = flags.get("jobs").map(|s| s.parse()).transpose()?.unwrap_or(12);
+    let mut cfg = ServeConfig::from_args(flags)?;
+    cfg.trace.enabled = true;
+    if cfg.trace.dir.is_none() {
+        cfg.trace.dir = Some("opsparse-trace".to_string());
+    }
+    // the demonstration posture: every span source lights up unless the
+    // flags say otherwise — shard fan-out (tiny device budget), backup
+    // sub-jobs, seeded gentle chaos
+    if !flags.contains_key("workers") {
+        cfg.workers = 3;
+    }
+    if !flags.contains_key("speculate") {
+        cfg.speculate = opsparse::coordinator::SpeculateConfig::on();
+    }
+    if !flags.contains_key("chaos") {
+        cfg.chaos = opsparse::coordinator::ChaosConfig::gentle().with_seed(cfg.chaos.seed);
+    }
+    cfg.device_memory_bytes = 4096;
+    cfg.max_devices = 4;
+    cfg.interconnect = None;
+    cfg.ns_per_prod = Some(1.0);
+    let dir = cfg.trace.dir.clone().unwrap();
+    println!(
+        "trace run: {jobs} jobs over {} workers (speculate {}, chaos {}, seed {}), dir {dir}",
+        cfg.workers,
+        if cfg.speculate.enabled { "on" } else { "off" },
+        if cfg.chaos.is_off() { "off" } else { "gentle" },
+        cfg.chaos.seed
+    );
+    let serve = Serve::start(cfg)?;
+    let tracer = serve.tracer().cloned().expect("tracing is forced on");
+    // distinct matrices per job (no coalesce collapse): evens shard on
+    // the 4 KiB budget, odds ride the hash route
+    let mut rng = Rng::new(2029);
+    let tickets: Vec<_> = (0..jobs)
+        .map(|i| {
+            let (tenant, m) = if i % 2 == 0 {
+                let m = opsparse::gen::uniform::Uniform { n: 300, per_row: 6, jitter: 2 }
+                    .generate(&mut rng);
+                ("shard", m)
+            } else {
+                let m = opsparse::gen::uniform::Uniform { n: 140, per_row: 5, jitter: 2 }
+                    .generate(&mut rng);
+                ("hash", m)
+            };
+            serve.submit(tenant, m.clone(), m)
+        })
+        .collect();
+    let mut failed = 0usize;
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            ServeResult::Done { .. } => {}
+            other => {
+                eprintln!("trace run job {i} did not complete: {other:?}");
+                failed += 1;
+            }
+        }
+    }
+    let snap = serve.metrics_snapshot();
+    println!("{snap}");
+    println!("\n{}", serve.metrics().to_prometheus());
+    serve.shutdown(); // writes <dir>/serve-trace.json (+ slow exemplars)
+    let spans = tracer.snapshot_spans();
+    opsparse::obs::check_well_formed(&spans)
+        .map_err(|e| anyhow::anyhow!("trace not well-formed: {e}"))?;
+    println!(
+        "trace: {} spans retained ({} dropped), {} slow exemplars, wrote {dir}/serve-trace.json",
+        spans.len(),
+        tracer.dropped(),
+        tracer.slow_exemplars().len()
+    );
+    println!("open in https://ui.perfetto.dev or chrome://tracing");
     if failed > 0 {
         bail!("{failed} jobs failed");
     }
@@ -521,7 +649,7 @@ fn usage() -> ! {
            gen      --name <matrix> [--scale tiny|small|medium] [--out f.mtx]\n\
            spgemm   --a f.mtx [--b g.mtx] [--lib opsparse|nsparse|speck|cusparse] [--verify]\n\
            suite    [--scale s] [--verify]\n\
-           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|chaos|corpus|engines|all> [--scale s]\n\
+           bench    <fig5|fig6|fig7_8|fig9|fig10|fig11|tables|ablations|pool|shards|serve|chaos|corpus|engines|trace|all> [--scale s]\n\
                     shards also takes [--interconnect pcie|nvlink|none] [--overlap on|off]\n\
                     [--chunk-kb n] [--json out.json] [--overlap-json out.json]\n\
                     [--replan on|off] [--adaptive-json out.json]\n\
@@ -529,13 +657,16 @@ fn usage() -> ! {
                     chaos also takes [--jobs n] [--chaos-seed n] [--json out.json]\n\
                     corpus also takes [--dir corpus/] [--json out.json]\n\
                     engines also takes [--reps n] [--json out.json]\n\
+                    trace also takes [--jobs n] [--json out.json] [--events-json out.json]\n\
            serve    [--jobs n] [--workers w] [--engine fill|auto|hash|block] [--no-engine]\n\
                     [--coalesce on|off]\n\
                     [--batch on|off] [--batch-max n] [--batch-age-ms n] [--queue-cap n]\n\
                     [--inflight n] [--persist on|off|path] [--replan on|off] [--history-cap n]\n\
                     [--overlap on|off] [--chunk-kb n] [--interconnect pcie|nvlink|none]\n\
                     [--speculate on|off] [--speculate-lag f] [--chaos off|gentle|aggressive]\n\
-                    [--chaos-seed n]\n\
+                    [--chaos-seed n] [--trace on|off] [--trace-dir d] [--trace-slow k]\n\
+                    [--prometheus]\n\
+           trace    [--jobs n] [--trace-dir d] [serve flags] — traced demo run + Prometheus text\n\
            sim-case webbase [--scale s]\n\
            list     (suite matrix names)"
     );
@@ -555,6 +686,7 @@ fn main() -> Result<()> {
         "suite" => cmd_suite(&flags),
         "bench" => cmd_bench(&pos, &flags),
         "serve" => cmd_serve(&flags),
+        "trace" => cmd_trace(&flags),
         "sim-case" => cmd_sim_case(&pos, &flags),
         "apps" => {
             // the §1 motivating applications (see examples/applications.rs

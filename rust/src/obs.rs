@@ -1,0 +1,624 @@
+//! Request-scoped structured tracing: every request served by
+//! [`crate::coordinator::Serve`] gets a trace ID (its job id) and a span
+//! tree — admit, queue-wait, coalesce-attach, batch-residency, the
+//! route decision with the rejected alternatives' modeled ns, per-shard
+//! sub-job spans on the worker that ran them (with requeue /
+//! speculation attempt chains), the barrier stitch — and the simulated
+//! device phases (symbolic, numeric, setup…) attach as child spans of
+//! the executing span, projected into the same host clock domain.
+//!
+//! Design rules, in order of importance:
+//!
+//! * **Off is free.** The tracer is threaded as `Option<Arc<Tracer>>`;
+//!   with tracing off every hook is a `None` check — no clock reads, no
+//!   allocations, no atomics — so the serve hot path reproduces the
+//!   untraced baseline bit for bit.
+//! * **Record at close.** A span is handed to the tracer only once it
+//!   is finished (including abandoned attempts, which the failure paths
+//!   record with an error tag). There is no "open span" registry to
+//!   leak: a kill, requeue, or lost speculation can at worst *drop* a
+//!   span, never leave one dangling.
+//! * **Lock-cheap, bounded.** Spans land in per-lane sharded ring
+//!   buffers ([`RING_SHARDS`] mutexes, [`RING_CAP`] spans each); a full
+//!   ring evicts its oldest span and counts it in
+//!   [`Tracer::dropped`]. Workers on different lanes contend on
+//!   different shards.
+//! * **One clock domain.** Every timestamp is host wall nanoseconds
+//!   since the tracer's epoch. Simulated device time has no host clock,
+//!   so device phases are *projected*: laid out proportionally to their
+//!   simulated duration inside the executing span's host interval
+//!   (raw simulated ns ride along in span args). Projection preserves
+//!   nesting by construction, which is what the well-formedness
+//!   property ([`check_well_formed`]) verifies.
+//!
+//! Export is Chrome trace-event JSON ([`chrome_trace_json`]) loadable
+//! in Perfetto or `chrome://tracing`: one lane (tid) per worker plus a
+//! front-door lane, complete (`"X"`) events for spans, instant (`"i"`)
+//! events for chaos injections / requeues / speculation launches.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Lane (Perfetto tid) of the front door + dispatcher + barrier.
+pub const LANE_FRONT: u64 = 0;
+/// Lane of the dedicated block-engine worker.
+pub const LANE_BLOCK: u64 = 1;
+
+/// Lane of hash worker `id` (workers keep their lane across
+/// generations: a respawned worker is the same failure domain).
+pub fn lane_worker(id: usize) -> u64 {
+    2 + id as u64
+}
+
+/// Human name for a lane, used in the exported thread-name metadata.
+pub fn lane_name(lane: u64) -> String {
+    match lane {
+        LANE_FRONT => "front-door".to_string(),
+        LANE_BLOCK => "block-worker".to_string(),
+        w => format!("worker {}", w - 2),
+    }
+}
+
+/// Tracing knobs (`--trace`, `--trace-dir`, `--trace-slow`,
+/// `OPSPARSE_TRACE`, `OPSPARSE_TRACE_DIR`, `OPSPARSE_TRACE_SLOW`).
+/// Default is off: no tracer is constructed at all.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    /// Collect spans. `--trace-dir` and `--trace-slow` imply `on`
+    /// unless `--trace off` is given explicitly.
+    pub enabled: bool,
+    /// Directory the dispatcher writes `serve-trace.json` (and
+    /// `serve-trace-slow.json`, when exemplars exist) into on shutdown.
+    /// `None` keeps spans in memory only (tests read them through
+    /// [`Tracer::snapshot_spans`]).
+    pub dir: Option<String>,
+    /// How many worst-serve-latency span trees to keep as exemplars.
+    pub slow_k: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: false, dir: None, slow_k: 8 }
+    }
+}
+
+/// One finished span (or instant event, when `instant` is set).
+/// `parent == 0` means a root; ids are process-unique and start at 1.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Trace this span belongs to — the serve request / job id.
+    pub trace: u64,
+    pub id: u64,
+    /// Parent span id, `0` for a root.
+    pub parent: u64,
+    pub name: String,
+    /// Display lane: [`LANE_FRONT`], [`LANE_BLOCK`], or
+    /// [`lane_worker`].
+    pub lane: u64,
+    /// Host ns since the tracer epoch.
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    /// Key/value annotations (route, attempt, simulated ns, …).
+    pub args: Vec<(String, String)>,
+    /// Closed on a failure path (abandoned attempt, failed multiply).
+    pub error: bool,
+    /// A point event (chaos injection, requeue, speculation launch):
+    /// `t1_ns == t0_ns` and it renders as a Perfetto instant.
+    pub instant: bool,
+}
+
+/// Ring shards — lanes map onto these round-robin, so distinct workers
+/// almost never contend on one mutex.
+pub const RING_SHARDS: usize = 16;
+/// Spans retained per shard before the oldest is evicted.
+pub const RING_CAP: usize = 16_384;
+
+struct RootOpen {
+    span_id: u64,
+    t0_ns: u64,
+}
+
+/// One kept slow-request exemplar: the whole span tree of one of the K
+/// worst serve-latency requests seen so far.
+#[derive(Clone, Debug)]
+pub struct SlowTrace {
+    pub trace: u64,
+    pub wall_ns: u64,
+    pub spans: Vec<Span>,
+}
+
+/// The collector. One per [`crate::coordinator::Serve`] (shared by the
+/// front door, the dispatcher, the coordinator, and every worker).
+pub struct Tracer {
+    epoch: Instant,
+    next_id: AtomicU64,
+    shards: Vec<Mutex<VecDeque<Span>>>,
+    dropped: AtomicU64,
+    /// Open request roots: trace id → (root span id, start). An entry
+    /// exists exactly while the request is in flight; hooks that may
+    /// outlive the request (speculation losers) parent to the root only
+    /// if it is still open — see [`Tracer::parent_for`].
+    roots: Mutex<HashMap<u64, RootOpen>>,
+    slow: Mutex<Vec<SlowTrace>>,
+    slow_k: usize,
+}
+
+impl Tracer {
+    pub fn new(cfg: &TraceConfig) -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            shards: (0..RING_SHARDS).map(|_| Mutex::new(VecDeque::new())).collect(),
+            dropped: AtomicU64::new(0),
+            roots: Mutex::new(HashMap::new()),
+            slow: Mutex::new(Vec::new()),
+            slow_k: cfg.slow_k.max(1),
+        }
+    }
+
+    /// Host ns since the tracer epoch — the one clock domain.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// A fresh process-unique span id (never 0).
+    pub fn next_span_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// File a finished span into its lane's ring.
+    pub fn record(&self, span: Span) {
+        let shard = &self.shards[(span.lane as usize) % RING_SHARDS];
+        let mut ring = shard.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.len() >= RING_CAP {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(span);
+    }
+
+    /// Record an instant event (chaos injection, requeue, speculation
+    /// launch): a point on the timeline, not an interval.
+    pub fn instant(
+        &self,
+        trace: u64,
+        parent: u64,
+        lane: u64,
+        name: &str,
+        args: Vec<(String, String)>,
+    ) {
+        let t = self.now_ns();
+        self.record(Span {
+            trace,
+            id: self.next_span_id(),
+            parent,
+            name: name.to_string(),
+            lane,
+            t0_ns: t,
+            t1_ns: t,
+            args,
+            error: false,
+            instant: true,
+        });
+    }
+
+    /// Open the request root for `trace` and return its span id. The
+    /// root is *recorded* later, by [`Tracer::close_root`] — until then
+    /// it exists only as the map entry children look up.
+    pub fn open_root(&self, trace: u64) -> u64 {
+        let span_id = self.next_span_id();
+        let t0_ns = self.now_ns();
+        let mut roots = self.roots.lock().unwrap_or_else(|e| e.into_inner());
+        roots.insert(trace, RootOpen { span_id, t0_ns });
+        span_id
+    }
+
+    /// Root span id for an in-flight trace, or 0 if the request already
+    /// resolved (a speculation loser finishing late parents to nothing
+    /// and tags itself `late` — the tree stays well-formed because the
+    /// root's recorded interval has already ended). Take your span's
+    /// `t1` timestamp *before* calling this: the root closes at a time
+    /// ≥ the lookup, so "entry present at lookup" implies your interval
+    /// nests inside the root's.
+    pub fn parent_for(&self, trace: u64) -> u64 {
+        let roots = self.roots.lock().unwrap_or_else(|e| e.into_inner());
+        roots.get(&trace).map(|r| r.span_id).unwrap_or(0)
+    }
+
+    /// Close and record the request root: removes the open entry first,
+    /// then stamps `t1`, so every child that saw the root open has an
+    /// interval inside the recorded one.
+    pub fn close_root(&self, trace: u64, error: bool, args: Vec<(String, String)>) {
+        let open = {
+            let mut roots = self.roots.lock().unwrap_or_else(|e| e.into_inner());
+            roots.remove(&trace)
+        };
+        let Some(open) = open else { return };
+        let t1_ns = self.now_ns();
+        self.record(Span {
+            trace,
+            id: open.span_id,
+            parent: 0,
+            name: "request".to_string(),
+            lane: LANE_FRONT,
+            t0_ns: open.t0_ns,
+            t1_ns,
+            args,
+            error,
+            instant: false,
+        });
+    }
+
+    /// Project simulated device phases onto the executing span's host
+    /// interval: each phase gets a child span sized proportionally to
+    /// its simulated ns, laid out sequentially, with the raw simulated
+    /// ns in args. Nesting inside `[host_t0, host_t1]` holds by
+    /// construction — the clock-domain rule of this module.
+    pub fn record_phases(
+        &self,
+        trace: u64,
+        parent: u64,
+        lane: u64,
+        host_t0: u64,
+        host_t1: u64,
+        phases: &[(String, f64)],
+    ) {
+        let total: f64 = phases.iter().map(|(_, ns)| ns.max(0.0)).sum();
+        if total <= 0.0 || host_t1 <= host_t0 {
+            return;
+        }
+        let span_len = (host_t1 - host_t0) as f64;
+        let mut cum = 0.0;
+        for (name, sim_ns) in phases {
+            let w = sim_ns.max(0.0);
+            let t0 = host_t0 + (span_len * (cum / total)) as u64;
+            cum += w;
+            let t1 = host_t0 + (span_len * (cum / total)) as u64;
+            self.record(Span {
+                trace,
+                id: self.next_span_id(),
+                parent,
+                name: format!("phase:{name}"),
+                lane,
+                t0_ns: t0.min(host_t1),
+                t1_ns: t1.min(host_t1),
+                args: vec![("sim_ns".to_string(), format!("{sim_ns:.0}"))],
+                error: false,
+                instant: false,
+            });
+        }
+    }
+
+    /// Consider `trace` (whose root must already be closed) for the
+    /// slow-exemplar store: the K worst serve latencies keep their
+    /// whole span tree in memory.
+    pub fn note_slow(&self, trace: u64, wall_ns: u64) {
+        let mut slow = self.slow.lock().unwrap_or_else(|e| e.into_inner());
+        if slow.len() >= self.slow_k {
+            let min = slow.iter().map(|s| s.wall_ns).min().unwrap_or(0);
+            if wall_ns <= min {
+                return;
+            }
+        }
+        let spans = self.spans_of(trace);
+        slow.push(SlowTrace { trace, wall_ns, spans });
+        slow.sort_by(|x, y| y.wall_ns.cmp(&x.wall_ns).then(x.trace.cmp(&y.trace)));
+        slow.truncate(self.slow_k);
+    }
+
+    /// All retained spans of one trace (copied, rings untouched).
+    pub fn spans_of(&self, trace: u64) -> Vec<Span> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let ring = shard.lock().unwrap_or_else(|e| e.into_inner());
+            out.extend(ring.iter().filter(|s| s.trace == trace).cloned());
+        }
+        out.sort_by_key(|s| (s.t0_ns, s.id));
+        out
+    }
+
+    /// Every retained span, ordered by start time (copied — callers can
+    /// snapshot after shutdown, the rings stay intact).
+    pub fn snapshot_spans(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let ring = shard.lock().unwrap_or_else(|e| e.into_inner());
+            out.extend(ring.iter().cloned());
+        }
+        out.sort_by_key(|s| (s.t0_ns, s.id));
+        out
+    }
+
+    /// Spans evicted from full rings so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// The kept slow-request exemplars, worst first.
+    pub fn slow_exemplars(&self) -> Vec<SlowTrace> {
+        self.slow.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// The whole buffer as Chrome trace-event JSON.
+    pub fn export_chrome(&self) -> String {
+        chrome_trace_json(&self.snapshot_spans())
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn write_args(out: &mut String, s: &Span) {
+    out.push_str(&format!(
+        "\"args\":{{\"trace\":{},\"span\":{},\"parent\":{}",
+        s.trace, s.id, s.parent
+    ));
+    if s.error {
+        out.push_str(",\"error\":true");
+    }
+    for (k, v) in &s.args {
+        out.push_str(&format!(",\"{}\":\"{}\"", esc(k), esc(v)));
+    }
+    out.push('}');
+}
+
+/// Render spans as Chrome trace-event JSON (the object form, with a
+/// `traceEvents` array), loadable in Perfetto / `chrome://tracing`.
+/// Spans become complete (`"X"`) events, instants become `"i"` events,
+/// and each lane gets a `thread_name` metadata event. Timestamps are
+/// microseconds with ns resolution kept in the fraction.
+pub fn chrome_trace_json(spans: &[Span]) -> String {
+    let mut out = String::from("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[\n");
+    let mut first = true;
+    let mut push = |ev: String, first: &mut bool| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+        out.push_str(&ev);
+    };
+    push(
+        "{\"ph\":\"M\",\"pid\":1,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"opsparse-serve\"}}"
+            .to_string(),
+        &mut first,
+    );
+    let mut lanes: Vec<u64> = spans.iter().map(|s| s.lane).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    for lane in lanes {
+        push(
+            format!(
+                "{{\"ph\":\"M\",\"pid\":1,\"tid\":{lane},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                esc(&lane_name(lane))
+            ),
+            &mut first,
+        );
+    }
+    for s in spans {
+        let ts = s.t0_ns as f64 / 1000.0;
+        let mut ev = if s.instant {
+            format!(
+                "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{ts:.3},\
+                 \"pid\":1,\"tid\":{},",
+                esc(&s.name),
+                s.lane
+            )
+        } else {
+            let dur = s.t1_ns.saturating_sub(s.t0_ns) as f64 / 1000.0;
+            format!(
+                "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{ts:.3},\"dur\":{dur:.3},\
+                 \"pid\":1,\"tid\":{},",
+                esc(&s.name),
+                s.lane
+            )
+        };
+        write_args(&mut ev, s);
+        ev.push('}');
+        push(ev, &mut first);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// The span-tree well-formedness property the trace suite gates on:
+/// unique span ids; monotone non-negative durations; every non-root
+/// parent id resolves to a recorded span of the same trace; children
+/// (and instants) sit inside their parent's interval. Stable under
+/// chaos kill / requeue / speculation because spans are recorded only
+/// at close — an abandoned attempt closes with an error tag rather
+/// than leaking an open span.
+pub fn check_well_formed(spans: &[Span]) -> Result<(), String> {
+    let mut by_id: HashMap<u64, &Span> = HashMap::with_capacity(spans.len());
+    for s in spans {
+        if s.id == 0 {
+            return Err(format!("span id 0 is reserved (name {:?})", s.name));
+        }
+        if by_id.insert(s.id, s).is_some() {
+            return Err(format!("duplicate span id {} (name {:?})", s.id, s.name));
+        }
+        if s.t1_ns < s.t0_ns {
+            return Err(format!(
+                "span {} ({:?}) has negative duration: t0={} t1={}",
+                s.id, s.name, s.t0_ns, s.t1_ns
+            ));
+        }
+        if s.instant && s.t1_ns != s.t0_ns {
+            return Err(format!("instant {} ({:?}) has an interval", s.id, s.name));
+        }
+    }
+    for s in spans {
+        if s.parent == 0 {
+            continue;
+        }
+        let Some(p) = by_id.get(&s.parent) else {
+            return Err(format!(
+                "span {} ({:?}) is an orphan: parent {} not recorded",
+                s.id, s.name, s.parent
+            ));
+        };
+        if p.trace != s.trace {
+            return Err(format!(
+                "span {} ({:?}) crosses traces: {} under parent trace {}",
+                s.id, s.name, s.trace, p.trace
+            ));
+        }
+        if p.instant {
+            return Err(format!("span {} parents to instant {}", s.id, p.id));
+        }
+        if s.t0_ns < p.t0_ns || s.t1_ns > p.t1_ns {
+            return Err(format!(
+                "span {} ({:?}) [{}, {}] escapes parent {} ({:?}) [{}, {}]",
+                s.id, s.name, s.t0_ns, s.t1_ns, p.id, p.name, p.t0_ns, p.t1_ns
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace: u64, id: u64, parent: u64, t0: u64, t1: u64) -> Span {
+        Span {
+            trace,
+            id,
+            parent,
+            name: format!("s{id}"),
+            lane: LANE_FRONT,
+            t0_ns: t0,
+            t1_ns: t1,
+            args: vec![],
+            error: false,
+            instant: false,
+        }
+    }
+
+    #[test]
+    fn well_formedness_accepts_nested_and_rejects_escapes() {
+        let good = vec![span(1, 1, 0, 0, 100), span(1, 2, 1, 10, 40), span(1, 3, 2, 12, 39)];
+        assert!(check_well_formed(&good).is_ok());
+        let escape = vec![span(1, 1, 0, 0, 100), span(1, 2, 1, 10, 140)];
+        assert!(check_well_formed(&escape).unwrap_err().contains("escapes"));
+        let orphan = vec![span(1, 2, 9, 10, 20)];
+        assert!(check_well_formed(&orphan).unwrap_err().contains("orphan"));
+        let negative = vec![span(1, 1, 0, 50, 10)];
+        assert!(check_well_formed(&negative).unwrap_err().contains("negative"));
+        let dup = vec![span(1, 1, 0, 0, 10), span(1, 1, 0, 0, 10)];
+        assert!(check_well_formed(&dup).unwrap_err().contains("duplicate"));
+        let cross = vec![span(1, 1, 0, 0, 100), span(2, 2, 1, 10, 20)];
+        assert!(check_well_formed(&cross).unwrap_err().contains("crosses"));
+    }
+
+    #[test]
+    fn root_lifecycle_nests_children_and_survives_late_closers() {
+        let tr = Tracer::new(&TraceConfig::default());
+        let root = tr.open_root(7);
+        assert_eq!(tr.parent_for(7), root);
+        let t0 = tr.now_ns();
+        let t1 = tr.now_ns();
+        let parent = tr.parent_for(7);
+        tr.record(span(7, tr.next_span_id(), parent, t0, t1));
+        tr.close_root(7, false, vec![("route".into(), "hash".into())]);
+        // a speculation loser looking up the root after close parents
+        // to nothing instead of escaping the closed interval
+        assert_eq!(tr.parent_for(7), 0);
+        let spans = tr.snapshot_spans();
+        assert_eq!(spans.len(), 2);
+        check_well_formed(&spans).unwrap();
+        let root_span = spans.iter().find(|s| s.id == root).unwrap();
+        assert_eq!(root_span.name, "request");
+        assert!(root_span.args.iter().any(|(k, v)| k == "route" && v == "hash"));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let tr = Tracer::new(&TraceConfig::default());
+        let n = RING_CAP + 100;
+        for i in 0..n {
+            tr.record(span(1, i as u64 + 1, 0, i as u64, i as u64 + 1));
+        }
+        assert_eq!(tr.snapshot_spans().len(), RING_CAP);
+        assert_eq!(tr.dropped(), 100);
+        // the oldest spans were the ones evicted
+        assert!(tr.snapshot_spans().first().unwrap().id > 100);
+    }
+
+    #[test]
+    fn phase_projection_stays_inside_the_host_interval() {
+        let tr = Tracer::new(&TraceConfig::default());
+        let parent_id = tr.next_span_id();
+        tr.record(Span { args: vec![], ..span(3, parent_id, 0, 1_000, 2_000) });
+        let phases = vec![
+            ("setup".to_string(), 10.0),
+            ("symbolic".to_string(), 30.0),
+            ("numeric".to_string(), 60.0),
+        ];
+        tr.record_phases(3, parent_id, LANE_FRONT, 1_000, 2_000, &phases);
+        let spans = tr.snapshot_spans();
+        check_well_formed(&spans).unwrap();
+        let kids: Vec<&Span> = spans.iter().filter(|s| s.parent == parent_id).collect();
+        assert_eq!(kids.len(), 3);
+        // proportional layout: numeric gets 60% of the host interval
+        let numeric = kids.iter().find(|s| s.name == "phase:numeric").unwrap();
+        assert_eq!(numeric.t1_ns - numeric.t0_ns, 600);
+        assert!(kids.iter().all(|s| s.t0_ns >= 1_000 && s.t1_ns <= 2_000));
+        // zero-total phases record nothing
+        tr.record_phases(3, parent_id, LANE_FRONT, 1_000, 2_000, &[("x".to_string(), 0.0)]);
+        assert_eq!(tr.snapshot_spans().len(), spans.len());
+    }
+
+    #[test]
+    fn slow_store_keeps_the_k_worst() {
+        let mut cfg = TraceConfig::default();
+        cfg.slow_k = 3;
+        let tr = Tracer::new(&cfg);
+        for trace in 1..=10u64 {
+            tr.open_root(trace);
+            tr.close_root(trace, false, vec![]);
+            tr.note_slow(trace, trace * 100);
+        }
+        let slow = tr.slow_exemplars();
+        assert_eq!(slow.len(), 3);
+        let walls: Vec<u64> = slow.iter().map(|s| s.wall_ns).collect();
+        assert_eq!(walls, vec![1000, 900, 800], "worst first, bounded at K");
+        assert!(slow.iter().all(|s| !s.spans.is_empty()), "exemplars carry their span tree");
+    }
+
+    #[test]
+    fn chrome_export_has_lanes_events_and_escaping() {
+        let tr = Tracer::new(&TraceConfig::default());
+        let root = tr.open_root(1);
+        tr.instant(1, root, lane_worker(0), "chaos_delay\"quote", vec![]);
+        tr.close_root(1, false, vec![]);
+        let json = tr.export_chrome();
+        assert!(json.starts_with("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[\n"));
+        assert!(json.contains("\"ph\":\"X\""), "complete event for the root span");
+        assert!(json.contains("\"ph\":\"i\""), "instant event");
+        assert!(json.contains("chaos_delay\\\"quote"), "names are JSON-escaped");
+        assert!(json.contains("\"thread_name\""));
+        assert!(json.contains("worker 0"));
+        assert!(json.contains("front-door"));
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), 1);
+        // braces balance — cheap structural sanity without a parser
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+}

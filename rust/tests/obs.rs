@@ -1,0 +1,452 @@
+//! The observability contract suite:
+//!
+//! * a traced contract run (sharded + speculative + chaos-gentle +
+//!   batched) produces a **well-formed** span tree that survives kill /
+//!   requeue / speculation, and its Chrome export carries the span data;
+//! * tracing **off** is free: no tracer exists and the served results,
+//!   routes, and deterministic counters are bit-identical to a traced
+//!   run of the same stream;
+//! * [`check_well_formed`] is a real property — random well-formed
+//!   forests pass, and every corruption class is caught
+//!   (`util::prop::check`, shrinking);
+//! * chaos-injected faults are **replayable from the trace alone**: the
+//!   `chaos_*` instants (tagged seed / worker / generation) match the
+//!   schedule an independent [`WorkerChaos`] replica predicts, across
+//!   kills and worker generation bumps;
+//! * slow-request exemplars are bounded by `slow_k` and kept worst-first.
+
+use opsparse::coordinator::barrier::SpeculateConfig;
+use opsparse::coordinator::chaos::{ChaosConfig, WorkerChaos};
+use opsparse::coordinator::router::EngineMode;
+use opsparse::coordinator::serve::{Serve, ServeConfig, ServeResult};
+use opsparse::gen::uniform::Uniform;
+use opsparse::obs::{check_well_formed, Span, LANE_FRONT};
+use opsparse::sparse::Csr;
+use opsparse::util::prop::check;
+use opsparse::util::rng::Rng;
+
+/// Mirrors `service::MAX_REQUEUES` (private there): a kill chain longer
+/// than this abandons the attempt instead of requeueing again.
+const MAX_REQUEUES: u32 = 5;
+
+fn uniform(n: usize, per_row: usize, seed: u64) -> Csr {
+    Uniform { n, per_row, jitter: 2 }.generate(&mut Rng::new(seed))
+}
+
+fn arg<'a>(s: &'a Span, key: &str) -> Option<&'a str> {
+    s.args.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+/// The traced contract run of `bench trace`, in miniature: every span
+/// source at once, and the tree must still be well-formed.
+#[test]
+fn traced_contract_run_is_well_formed() {
+    let mut cfg = ServeConfig::default();
+    cfg.workers = 3;
+    cfg.ns_per_prod = Some(1.0);
+    cfg.coalesce = false;
+    cfg.batch.enabled = true;
+    cfg.batch.max_jobs = 4;
+    cfg.speculate = SpeculateConfig::on();
+    cfg.chaos = ChaosConfig::gentle().with_seed(0x0B5E);
+    // 4 KiB device budget: the big pattern must take the sharded route
+    cfg.device_memory_bytes = 4096;
+    cfg.max_devices = 4;
+    cfg.interconnect = None;
+    cfg.trace.enabled = true;
+    cfg.trace.slow_k = 3;
+    let serve = Serve::start(cfg).expect("serve start");
+    let tracer = serve.tracer().cloned().expect("tracing on constructs a tracer");
+    let big = uniform(300, 6, 41);
+    let small = uniform(120, 5, 42);
+    let tickets: Vec<_> = (0..12)
+        .map(|i| {
+            let m = if i % 2 == 0 { &big } else { &small };
+            serve.submit(if i % 2 == 0 { "shard" } else { "hash" }, m.clone(), m.clone())
+        })
+        .collect();
+    for t in tickets {
+        assert!(
+            matches!(t.wait(), ServeResult::Done { .. }),
+            "gentle chaos must not fail a request"
+        );
+    }
+    serve.shutdown();
+
+    let spans = tracer.snapshot_spans();
+    check_well_formed(&spans).expect("contract-run span tree is well-formed");
+    assert_eq!(tracer.dropped(), 0, "a 12-job run must not evict spans");
+    for name in ["request", "admit", "queue_wait", "route_decision", "shard", "stitch"] {
+        assert!(
+            spans.iter().any(|s| s.name == name),
+            "span {name:?} missing from the contract run"
+        );
+    }
+    assert!(
+        spans.iter().any(|s| s.name.starts_with("phase:")),
+        "no simulated device phase was projected as a child span"
+    );
+    // every request root is on the front lane and closed error-free
+    let roots: Vec<_> = spans.iter().filter(|s| s.name == "request").collect();
+    assert_eq!(roots.len(), 12, "one root per admitted request");
+    for r in &roots {
+        assert_eq!(r.lane, LANE_FRONT);
+        assert!(!r.error, "trace {} closed with an error", r.trace);
+        assert!(arg(r, "route").is_some(), "request roots carry the chosen route");
+    }
+    // exemplar store: bounded by slow_k, ordered worst-first, and each
+    // exemplar keeps its request root
+    let slow = tracer.slow_exemplars();
+    assert!(!slow.is_empty() && slow.len() <= 3, "slow_k=3 bounds the exemplars");
+    assert!(
+        slow.windows(2).all(|w| w[0].wall_ns >= w[1].wall_ns),
+        "exemplars are kept worst-first"
+    );
+    for ex in &slow {
+        assert!(
+            ex.spans.iter().any(|s| s.name == "request" && s.trace == ex.trace),
+            "exemplar {} lost its request root",
+            ex.trace
+        );
+    }
+    // the Chrome export carries the span set: metadata naming, one
+    // complete event per non-instant span, instants as phase "i"
+    let json = tracer.export_chrome();
+    assert!(json.contains("\"traceEvents\""));
+    assert!(json.contains("opsparse-serve"));
+    assert!(json.contains("\"queue_wait\""));
+    let completes = json.matches("\"ph\":\"X\"").count();
+    assert_eq!(completes, spans.iter().filter(|s| !s.instant).count());
+    let instants = json.matches("\"ph\":\"i\"").count();
+    assert_eq!(instants, spans.iter().filter(|s| s.instant).count());
+}
+
+/// Tracing off is the PR 9 baseline: no tracer is even constructed, and
+/// the same stream produces bit-identical results, routes, and
+/// deterministic counters either way.
+#[test]
+fn trace_off_is_free_and_bit_identical() {
+    let run = |trace_on: bool| {
+        let mut cfg = ServeConfig::default();
+        cfg.workers = 1;
+        cfg.ns_per_prod = Some(1.0);
+        cfg.coalesce = false;
+        cfg.trace.enabled = trace_on;
+        let serve = Serve::start(cfg).expect("serve start");
+        if trace_on {
+            assert!(serve.tracer().is_some(), "--trace on must construct a tracer");
+        } else {
+            assert!(serve.tracer().is_none(), "--trace off must not construct a tracer");
+        }
+        let mut out = Vec::new();
+        for i in 0..6u64 {
+            let m = uniform(100 + 10 * (i as usize % 3), 5, 100 + i);
+            let t = serve.submit("parity", m.clone(), m.clone());
+            match t.wait() {
+                ServeResult::Done { c, route, .. } => out.push(((*c).clone(), route)),
+                other => panic!("parity job failed: {other:?}"),
+            }
+        }
+        let snap = serve.metrics_snapshot();
+        serve.shutdown();
+        (out, snap)
+    };
+    let (on_out, on_snap) = run(true);
+    let (off_out, off_snap) = run(false);
+    assert_eq!(on_out.len(), off_out.len());
+    for (i, ((c_on, r_on), (c_off, r_off))) in on_out.iter().zip(&off_out).enumerate() {
+        assert_eq!(r_on, r_off, "job {i} routed differently under tracing");
+        assert_eq!(c_on, c_off, "job {i} result differs under tracing");
+    }
+    // the deterministic counters (wall-clock percentiles excluded) agree
+    for (name, a, b) in [
+        ("jobs_submitted", on_snap.jobs_submitted, off_snap.jobs_submitted),
+        ("jobs_completed", on_snap.jobs_completed, off_snap.jobs_completed),
+        ("jobs_failed", on_snap.jobs_failed, off_snap.jobs_failed),
+        ("hash_routed", on_snap.hash_routed, off_snap.hash_routed),
+        ("block_routed", on_snap.block_routed, off_snap.block_routed),
+        ("sharded_routed", on_snap.sharded_routed, off_snap.sharded_routed),
+        ("nprod_total", on_snap.nprod_total, off_snap.nprod_total),
+        ("sym_cache_hits", on_snap.sym_cache_hits, off_snap.sym_cache_hits),
+        ("sym_cache_misses", on_snap.sym_cache_misses, off_snap.sym_cache_misses),
+        ("coalesce_hits", on_snap.coalesce_hits, off_snap.coalesce_hits),
+        ("rejected_jobs", on_snap.rejected_jobs, off_snap.rejected_jobs),
+    ] {
+        assert_eq!(a, b, "counter {name} drifts when tracing is toggled");
+    }
+}
+
+/// Every coalesce attach leaves exactly one `coalesce_attach` instant
+/// in the leader's trace — the counter and the trace never disagree.
+#[test]
+fn coalesce_attaches_are_traced_one_to_one() {
+    let mut cfg = ServeConfig::default();
+    cfg.workers = 1;
+    cfg.ns_per_prod = Some(1.0);
+    cfg.trace.enabled = true;
+    let serve = Serve::start(cfg).expect("serve start");
+    let tracer = serve.tracer().cloned().expect("tracer");
+    let m = uniform(400, 6, 7);
+    let tickets: Vec<_> = (0..8).map(|_| serve.submit("co", m.clone(), m.clone())).collect();
+    for t in tickets {
+        assert!(matches!(t.wait(), ServeResult::Done { .. }));
+    }
+    let hits = serve.metrics_snapshot().coalesce_hits;
+    serve.shutdown();
+    let spans = tracer.snapshot_spans();
+    check_well_formed(&spans).expect("coalesced run is well-formed");
+    let attaches = spans.iter().filter(|s| s.name == "coalesce_attach").count() as u64;
+    assert_eq!(attaches, hits, "coalesce_hits and coalesce_attach instants disagree");
+}
+
+/// Batched members get `batch_residency` spans (held-in-batcher time)
+/// and still run their per-member `exec` span in the worker visit.
+#[test]
+fn batched_jobs_carry_residency_and_exec_spans() {
+    let mut cfg = ServeConfig::default();
+    cfg.workers = 1;
+    cfg.ns_per_prod = Some(1.0);
+    cfg.coalesce = false;
+    cfg.batch.enabled = true;
+    cfg.batch.max_jobs = 2;
+    cfg.engine = EngineMode::Hash;
+    cfg.trace.enabled = true;
+    let serve = Serve::start(cfg).expect("serve start");
+    let tracer = serve.tracer().cloned().expect("tracer");
+    let tickets: Vec<_> =
+        (0..4u64).map(|i| {
+            let m = uniform(60, 4, 500 + i);
+            serve.submit("batch", m.clone(), m.clone())
+        }).collect();
+    for t in tickets {
+        assert!(matches!(t.wait(), ServeResult::Done { .. }));
+    }
+    let batched = serve.metrics_snapshot().batched_jobs;
+    serve.shutdown();
+    let spans = tracer.snapshot_spans();
+    check_well_formed(&spans).expect("batched run is well-formed");
+    let residency = spans.iter().filter(|s| s.name == "batch_residency").count() as u64;
+    assert_eq!(residency, batched, "every batched member gets a residency span");
+    assert!(batched > 0, "max_jobs=2 over 4 small hash jobs must batch someone");
+    let execs = spans.iter().filter(|s| s.name == "exec").count();
+    assert_eq!(execs, 4, "each member still runs its own exec span");
+}
+
+/// Build a random well-formed span forest: a few roots, children drawn
+/// inside a live ancestor's interval, some as instants.
+fn gen_forest(rng: &mut Rng, size: usize) -> Vec<Span> {
+    let mk = |trace: u64, id: u64, parent: u64, t0: u64, t1: u64, instant: bool| Span {
+        trace,
+        id,
+        parent,
+        name: format!("s{id}"),
+        lane: rng_lane(id),
+        t0_ns: t0,
+        t1_ns: t1,
+        args: vec![],
+        error: false,
+        instant,
+    };
+    fn rng_lane(id: u64) -> u64 {
+        id % 3
+    }
+    let mut spans = Vec::new();
+    let mut next_id = 1u64;
+    let roots = 1 + size / 6;
+    for trace in 1..=roots as u64 {
+        let t0 = rng.below(1_000);
+        let t1 = t0 + 100 + rng.below(10_000);
+        let root = next_id;
+        next_id += 1;
+        spans.push(mk(trace, root, 0, t0, t1, false));
+        let mut open = vec![(root, t0, t1)];
+        for _ in 0..rng.below(size.max(1) as u64) {
+            let (pid, p0, p1) = open[rng.below(open.len() as u64) as usize];
+            if p1 <= p0 {
+                continue;
+            }
+            let c0 = p0 + rng.below(p1 - p0);
+            let c1 = c0 + rng.below(p1 - c0 + 1);
+            let id = next_id;
+            next_id += 1;
+            if rng.below(4) == 0 {
+                spans.push(mk(trace, id, pid, c0, c0, true));
+            } else {
+                spans.push(mk(trace, id, pid, c0, c1, false));
+                open.push((id, c0, c1));
+            }
+        }
+    }
+    spans
+}
+
+/// `check_well_formed` accepts every random well-formed forest and
+/// rejects each corruption class applied to it.
+#[test]
+fn well_formedness_property_holds_and_corruptions_are_caught() {
+    check(
+        "obs::well_formed_forest",
+        60,
+        24,
+        |rng, size| (gen_forest(rng, size), rng.below(5)),
+        |(forest, corruption)| {
+            if let Err(e) = check_well_formed(forest) {
+                return Err(format!("clean forest rejected: {e}"));
+            }
+            let mut bad = forest.clone();
+            let applied = match corruption {
+                // duplicate span id
+                0 if bad.len() >= 2 => {
+                    bad[1].id = bad[0].id;
+                    true
+                }
+                // the reserved id 0
+                1 => {
+                    bad[0].id = 0;
+                    true
+                }
+                // negative duration
+                2 => {
+                    let s = &mut bad[0];
+                    s.instant = false;
+                    s.t0_ns = s.t1_ns + 1;
+                    true
+                }
+                // orphaned parent pointer
+                3 => match bad.iter_mut().find(|s| s.parent != 0) {
+                    Some(s) => {
+                        s.parent = u64::MAX;
+                        true
+                    }
+                    None => false,
+                },
+                // child escapes its parent's interval
+                _ => {
+                    let bounds: Option<(usize, u64)> = bad
+                        .iter()
+                        .enumerate()
+                        .find(|(_, s)| s.parent != 0 && !s.instant)
+                        .map(|(i, s)| (i, s.parent));
+                    match bounds {
+                        Some((i, pid)) => {
+                            let p_t1 =
+                                bad.iter().find(|s| s.id == pid).map(|p| p.t1_ns).unwrap_or(0);
+                            bad[i].t1_ns = p_t1 + 1;
+                            true
+                        }
+                        None => false,
+                    }
+                }
+            };
+            if applied && check_well_formed(&bad).is_ok() {
+                return Err(format!("corruption class {corruption} not caught"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Predict the exact ordered `chaos_*` instant schedule for a serial
+/// single-worker stream: one boundary per delivered message, a kill
+/// requeues the message onto the generation-bumped replacement (until
+/// the retry budget abandons it), and each generation's stream is an
+/// independent [`WorkerChaos`].
+fn predicted_chaos_instants(cfg: &ChaosConfig, deliveries: usize) -> Vec<(String, u64, u64)> {
+    let mut out = Vec::new();
+    let mut generation = 0u64;
+    let mut stream = WorkerChaos::new(cfg, 0, generation);
+    for _ in 0..deliveries {
+        let mut attempts = 0u32;
+        loop {
+            let f = stream.at_boundary();
+            if f.delay_ns > 0 {
+                out.push(("chaos_delay".to_string(), generation, f.delay_ns));
+            }
+            if f.shrink_pool {
+                out.push(("chaos_pool_shrink".to_string(), generation, 0));
+            }
+            if !f.kill {
+                break;
+            }
+            out.push(("chaos_kill".to_string(), generation, 0));
+            // the replacement always spawns with generation + 1; the
+            // message is redelivered unless its retry budget is spent
+            generation += 1;
+            stream = WorkerChaos::new(cfg, 0, generation);
+            if attempts >= MAX_REQUEUES {
+                break;
+            }
+            attempts += 1;
+        }
+    }
+    out
+}
+
+fn chaos_replay_run(chaos: ChaosConfig, jobs: usize) -> Vec<(String, u64, u64)> {
+    let mut cfg = ServeConfig::default();
+    cfg.workers = 1;
+    cfg.inflight_cap = 1;
+    cfg.coalesce = false;
+    cfg.batch.enabled = false;
+    cfg.engine = EngineMode::Hash;
+    cfg.ns_per_prod = Some(1.0);
+    cfg.chaos = chaos;
+    cfg.trace.enabled = true;
+    let serve = Serve::start(cfg).expect("serve start");
+    let tracer = serve.tracer().cloned().expect("tracer");
+    let m = uniform(60, 4, 9);
+    for _ in 0..jobs {
+        // serial submit-and-wait: exactly one message in flight, so the
+        // delivery order (and thus the boundary order) is deterministic
+        let _ = serve.submit("replay", m.clone(), m.clone()).wait();
+    }
+    serve.shutdown();
+    let spans = tracer.snapshot_spans();
+    check_well_formed(&spans).expect("chaos run is well-formed");
+    spans
+        .iter()
+        .filter(|s| s.name.starts_with("chaos_"))
+        .map(|s| {
+            assert!(s.instant, "chaos injections are instants");
+            assert_eq!(arg(s, "seed"), Some(chaos.seed.to_string().as_str()));
+            assert_eq!(arg(s, "worker"), Some("0"), "single-worker run");
+            let generation: u64 =
+                arg(s, "generation").expect("generation tag").parse().expect("numeric generation");
+            let delay: u64 = arg(s, "delay_ns").map(|v| v.parse().expect("numeric delay")).unwrap_or(0);
+            (s.name.clone(), generation, delay)
+        })
+        .collect()
+}
+
+/// The chaos-observability satellite: a trace alone is enough to replay
+/// the injection schedule. The emitted `chaos_*` instants — names,
+/// order, generation tags, delay magnitudes — must equal what an
+/// independent replica of the seeded fault stream predicts.
+#[test]
+fn chaos_instants_replay_the_seeded_schedule() {
+    // the gentle preset (the CI chaos tier), fixed seed
+    let gentle = ChaosConfig::gentle().with_seed(0xC0DE);
+    let actual = chaos_replay_run(gentle, 16);
+    assert!(!actual.is_empty(), "gentle chaos over 16 boundaries injects something");
+    assert_eq!(actual, predicted_chaos_instants(&gentle, 16), "gentle schedule replays");
+
+    // a hotter mix so the kill → generation-bump → redelivery chain is
+    // exercised with near-certainty (P[no kill] ≈ 0.7^24)
+    let hot = ChaosConfig {
+        kill_prob: 0.3,
+        delay_ns_range: (0, 50_000),
+        mem_pressure: 0.3,
+        seed: 0xFEED,
+    };
+    let actual = chaos_replay_run(hot, 24);
+    let expected = predicted_chaos_instants(&hot, 24);
+    assert_eq!(actual, expected, "hot schedule replays across kills");
+    assert!(
+        expected.iter().any(|(n, _, _)| n == "chaos_kill"),
+        "hot run drew no kill — raise kill_prob or jobs"
+    );
+    assert!(
+        expected.iter().any(|(_, g, _)| *g > 0),
+        "no generation bump observed after a kill"
+    );
+}
